@@ -1,0 +1,24 @@
+//! Regenerate paper Fig. 2 (E[T] vs B for several Delta*mu) and, when
+//! AOT artifacts are present, validate the curve on the LIVE System1
+//! (real worker threads executing PJRT-compiled jax/Pallas kernels with
+//! injected stragglers).
+//!
+//!     make artifacts && cargo run --release --example diversity_sweep
+
+use batchrep::experiments::{fig2, live, ExpContext};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext {
+        out_dir: "results".into(),
+        trials: 200_000,
+        seed: 42,
+    };
+    std::fs::create_dir_all(&ctx.out_dir)?;
+
+    println!("== Fig. 2: analytic + simulated curves ==\n");
+    fig2::run(&ctx)?;
+
+    println!("\n== Live System1 validation (threads + PJRT) ==\n");
+    live::run(&ctx)?;
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Theorem 1 live: compare batch->worker assignment policies on the
+//! simulator, including the overlapping layout, under distributions
+//! that satisfy (and violate) the theorem's hypothesis.
+//!
+//!     cargo run --release --example policy_comparison
+
+use batchrep::experiments::{policies, ExpContext};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext {
+        out_dir: "results".into(),
+        trials: 100_000,
+        seed: 42,
+    };
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    policies::run(&ctx)?;
+    println!("\n(also written to results/thm1_policies.{{csv,md}})");
+    Ok(())
+}

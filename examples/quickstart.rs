@@ -1,0 +1,40 @@
+//! Quickstart: the paper's question in 40 lines.
+//!
+//! "I have N workers and a parallelizable job whose per-sample service
+//! time is Shifted-Exponential. Into how many batches B should I split
+//! the data, replicating each batch on N/B workers?"
+//!
+//!     cargo run --release --example quickstart
+
+use batchrep::analysis;
+use batchrep::des::{montecarlo, Scenario};
+use batchrep::dist::{BatchService, ServiceSpec};
+
+fn main() -> anyhow::Result<()> {
+    let n = 24u64;
+    let spec = ServiceSpec::shifted_exp(1.0, 0.2); // mu=1, Delta=0.2
+
+    println!("N = {n} workers, per-sample service {}\n", spec.name());
+    println!("{:>4} {:>6} {:>12} {:>12} {:>14}", "B", "g=N/B", "E[T] theory", "E[T] sim", "Var[T] theory");
+    for p in analysis::spectrum(n, &spec)? {
+        let scn = Scenario::paper_balanced(
+            n as usize,
+            p.b as usize,
+            BatchService::paper(spec.clone()),
+        )?;
+        let mc = montecarlo::run_trials(&scn, 50_000, 42);
+        println!(
+            "{:>4} {:>6} {:>12.4} {:>12.4} {:>14.4}",
+            p.b, p.g, p.stats.mean, mc.mean(), p.stats.var
+        );
+    }
+
+    let b_star = analysis::optimum_b(n, &spec);
+    let b_var = analysis::optimum_b_variance(n, &spec);
+    println!("\nmean-optimal  B* = {b_star}  (Theorem 3)");
+    println!("variance-optimal B = {b_var}  (Theorem 4)");
+    if b_star != b_var {
+        println!("=> the paper's mean-variance trade-off: you cannot have both.");
+    }
+    Ok(())
+}

@@ -1,0 +1,125 @@
+"""AOT lowering: jax/Pallas jobs → HLO text artifacts + manifest.
+
+Run once by ``make artifacts``::
+
+    python python/compile/aot.py --out artifacts
+
+For every (kernel, rows, dim) variant the Rust coordinator may dispatch,
+this lowers the jitted L2 function to **HLO text** and records it in
+``manifest.json``. Text — not ``.serialize()`` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the HLO text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Manifest schema (consumed by rust/src/runtime):
+
+    {"version": 1,
+     "artifacts": [{"kernel": "grad", "rows": 512, "dim": 64,
+                    "file": "grad_r512_d64.hlo.txt",
+                    "inputs": [["512,64","f32"], ...],
+                    "outputs": 2}, ...]}
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+# The live coordinator shards n_samples rows over B batches; with the
+# default e2e config (n_samples=4096, N=8, B ∈ {1,2,4,8}) plus the small
+# validation variants used by tests and the quickstart.
+DEFAULT_ROWS = [8, 64, 512, 1024, 2048, 4096]
+DEFAULT_DIMS = [4, 64]
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax function → HLO text (the 0.5.1-safe interchange).
+
+    ``compiler_ir(dialect="hlo")`` converts inside jax's own bundled XLA
+    (which understands current StableHLO, including the dynamic-slice
+    forms Pallas grids emit) and prints classic HLO text, which the
+    old xla_extension's text parser accepts and re-ids. The stablehlo →
+    ``mlir_module_to_xla_computation`` route in the reference recipe
+    fails here: the 0.5.1-era converter cannot parse jax 0.8's
+    StableHLO (`custom op 'stablehlo.dynamic_slice' expected 'sizes'`).
+
+    The L2 jobs return tuples, so the entry root is already a tuple —
+    no ``return_tuple`` knob is needed.
+    """
+    return lowered.compiler_ir(dialect="hlo").as_hlo_text()
+
+
+def lower_grad(rows: int, dim: int) -> str:
+    x = jax.ShapeDtypeStruct((rows, dim), jnp.float32)
+    y = jax.ShapeDtypeStruct((rows,), jnp.float32)
+    w = jax.ShapeDtypeStruct((dim,), jnp.float32)
+    return to_hlo_text(jax.jit(model.batch_grad).lower(x, y, w))
+
+
+def lower_mapsum(rows: int, dim: int) -> str:
+    x = jax.ShapeDtypeStruct((rows, dim), jnp.float32)
+    a = jax.ShapeDtypeStruct((dim,), jnp.float32)
+    b = jax.ShapeDtypeStruct((dim,), jnp.float32)
+    return to_hlo_text(jax.jit(model.batch_mapsum).lower(x, a, b))
+
+
+def build(out_dir: str, rows_list, dims_list) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+    for dim in dims_list:
+        for rows in rows_list:
+            for kernel, lower, inputs, outputs in (
+                (
+                    "grad",
+                    lower_grad,
+                    [[f"{rows},{dim}", "f32"], [f"{rows}", "f32"], [f"{dim}", "f32"]],
+                    2,
+                ),
+                (
+                    "mapsum",
+                    lower_mapsum,
+                    [[f"{rows},{dim}", "f32"], [f"{dim}", "f32"], [f"{dim}", "f32"]],
+                    1,
+                ),
+            ):
+                fname = f"{kernel}_r{rows}_d{dim}.hlo.txt"
+                text = lower(rows, dim)
+                with open(os.path.join(out_dir, fname), "w") as f:
+                    f.write(text)
+                artifacts.append(
+                    {
+                        "kernel": kernel,
+                        "rows": rows,
+                        "dim": dim,
+                        "file": fname,
+                        "inputs": inputs,
+                        "outputs": outputs,
+                    }
+                )
+                print(f"  lowered {fname} ({len(text)} chars)")
+    manifest = {"version": 1, "artifacts": artifacts}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(artifacts)} artifacts to {out_dir}/")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="artifacts")
+    ap.add_argument("--rows", type=int, nargs="*", default=DEFAULT_ROWS)
+    ap.add_argument("--dims", type=int, nargs="*", default=DEFAULT_DIMS)
+    args = ap.parse_args()
+    build(args.out, args.rows, args.dims)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""L2: the JAX compute jobs System1 distributes (build-time only).
+
+The paper's System1 runs an arbitrary "executable" over data batches;
+its motivating workloads are gradient-based optimizers and map-sum
+evaluations (§II). This module defines those jobs as jax functions that
+call the L1 Pallas kernels, in the exact calling convention the Rust
+runtime uses after AOT lowering:
+
+* ``batch_grad(x, y, w) -> (g, loss)`` — per-batch least-squares
+  gradient + loss *sums*, aggregated exactly by the master across
+  batches (g_total = Σ g_b over the earliest replica of every batch).
+* ``batch_mapsum(x, a, b) -> (total,)`` — per-batch map-sum.
+
+Python never runs at request time: ``aot.py`` lowers these functions to
+HLO text once per (rows, dim) variant; the Rust coordinator loads and
+executes the artifacts through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.grad import grad_pallas
+from compile.kernels.mapsum import mapsum_pallas
+
+
+def batch_grad(x, y, w):
+    """Per-batch gradient job. Returns a tuple (lowered with
+    return_tuple=True; the Rust side unwraps a 2-tuple)."""
+    g, loss = grad_pallas(x, y, w)
+    return (g, loss)
+
+
+def batch_mapsum(x, a, b):
+    """Per-batch map-sum job. Returns a 1-tuple."""
+    return (mapsum_pallas(x, a, b),)
+
+
+def full_loss(x, y, w):
+    """Whole-dataset mean-squared-error loss (0.5·mean r²) — used by the
+    tests to check that aggregated per-batch gradients equal the true
+    gradient of the global objective."""
+    r = x @ w - y
+    return 0.5 * jnp.sum(r * r)
+
+
+def full_grad(x, y, w):
+    """jax.grad oracle for the aggregated gradient."""
+    return jax.grad(full_loss, argnums=2)(x, y, w)
+
+
+def sgd_step(w, g_total, n_samples, lr):
+    """The master's result-generation step: one SGD update from the
+    aggregated gradient *sum* (normalized to a mean). Pure jnp; the Rust
+    coordinator re-implements this trivially in f32 — kept here as the
+    semantic reference."""
+    return w - lr * g_total / n_samples
+
+
+def synth_regression(key, n_samples, dim, noise=0.1):
+    """Synthetic linear-regression dataset: X ~ N(0,1), y = X·w* + ε.
+    The e2e example trains against this and must recover w*."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    w_star = jax.random.normal(k1, (dim,))
+    x = jax.random.normal(k2, (n_samples, dim))
+    y = x @ w_star + noise * jax.random.normal(k3, (n_samples,))
+    return x, y, w_star

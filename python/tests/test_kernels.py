@@ -1,0 +1,148 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is
+the core correctness signal for everything the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.grad import grad_pallas
+from compile.kernels.mapsum import mapsum_pallas
+from compile.kernels.ref import grad_ref, mapsum_ref
+
+SHAPES = st.tuples(
+    st.integers(min_value=1, max_value=300),  # rows (crosses TILE_S=128)
+    st.integers(min_value=1, max_value=40),   # dim
+)
+
+
+def make_data(rows, dim, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, dim)).astype(dtype)
+    y = rng.standard_normal((rows,)).astype(dtype)
+    w = rng.standard_normal((dim,)).astype(dtype)
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(w)
+
+
+class TestGradKernel:
+    @settings(max_examples=40, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_f32(self, shape, seed):
+        rows, dim = shape
+        x, y, w = make_data(rows, dim, np.float32, seed)
+        g_k, loss_k = grad_pallas(x, y, w)
+        g_r, loss_r = grad_ref(x, y, w)
+        assert_allclose(np.asarray(g_k), np.asarray(g_r), rtol=2e-4, atol=2e-4)
+        assert_allclose(float(loss_k), float(loss_r), rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("rows", [1, 127, 128, 129, 256, 257])
+    def test_tile_boundaries(self, rows):
+        """Shapes straddling the TILE_S boundary exercise padding."""
+        x, y, w = make_data(rows, 8, np.float32, rows)
+        g_k, loss_k = grad_pallas(x, y, w)
+        g_r, loss_r = grad_ref(x, y, w)
+        assert_allclose(np.asarray(g_k), np.asarray(g_r), rtol=2e-4, atol=2e-4)
+        assert_allclose(float(loss_k), float(loss_r), rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_bf16(self, shape, seed):
+        """bfloat16 inputs: kernel and oracle agree at bf16 tolerance
+        (the dtype the TPU MXU natively consumes)."""
+        rows, dim = shape
+        x, y, w = make_data(rows, dim, np.float32, seed)
+        xb, yb, wb = (v.astype(jnp.bfloat16) for v in (x, y, w))
+        g_k, loss_k = grad_pallas(xb, yb, wb)
+        g_r, loss_r = grad_ref(xb, yb, wb)
+        assert g_k.dtype == jnp.bfloat16
+        assert_allclose(
+            np.asarray(g_k, np.float32),
+            np.asarray(g_r, np.float32),
+            rtol=0.05,
+            atol=0.1 * max(1, rows) ** 0.5,
+        )
+        assert_allclose(
+            float(loss_k), float(loss_r), rtol=0.05, atol=0.1 * max(1, rows)
+        )
+
+    def test_gradient_is_true_gradient(self):
+        """Kernel output equals jax.grad of the batch loss."""
+        x, y, w = make_data(96, 12, np.float32, 7)
+
+        def loss_fn(w):
+            r = x @ w - y
+            return 0.5 * jnp.sum(r * r)
+
+        g_auto = jax.grad(loss_fn)(w)
+        g_k, _ = grad_pallas(x, y, w)
+        assert_allclose(np.asarray(g_k), np.asarray(g_auto), rtol=2e-4, atol=2e-4)
+
+    def test_zero_residual_zero_grad(self):
+        x, _, w = make_data(64, 6, np.float32, 3)
+        y = x @ w  # perfect fit
+        g_k, loss_k = grad_pallas(x, y, w)
+        assert_allclose(np.asarray(g_k), np.zeros(6), atol=1e-4)
+        assert float(loss_k) == pytest.approx(0.0, abs=1e-6)
+
+    def test_additivity_across_batches(self):
+        """The master's aggregation invariant: grad sums over disjoint
+        batches add up to the whole-dataset gradient."""
+        x, y, w = make_data(200, 10, np.float32, 11)
+        g_all, loss_all = grad_pallas(x, y, w)
+        g_sum = jnp.zeros(10)
+        loss_sum = 0.0
+        for lo, hi in [(0, 50), (50, 125), (125, 200)]:
+            g_b, loss_b = grad_pallas(x[lo:hi], y[lo:hi], w)
+            g_sum = g_sum + g_b
+            loss_sum += float(loss_b)
+        assert_allclose(np.asarray(g_sum), np.asarray(g_all), rtol=1e-3, atol=1e-3)
+        assert loss_sum == pytest.approx(float(loss_all), rel=1e-3)
+
+
+class TestMapsumKernel:
+    @settings(max_examples=40, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_f32(self, shape, seed):
+        rows, dim = shape
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((rows, dim)).astype(np.float32))
+        a = jnp.asarray(rng.standard_normal(dim).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal(dim).astype(np.float32))
+        out_k = mapsum_pallas(x, a, b)
+        out_r = mapsum_ref(x, a, b)
+        # tanh output in (-1,1); sums scale with rows.
+        assert_allclose(float(out_k), float(out_r), rtol=2e-4, atol=2e-4 * rows)
+
+    def test_padding_exactness(self):
+        """Zero rows score tanh(0)=0: padded and unpadded agree."""
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.standard_normal((130, 4)).astype(np.float32))
+        a = jnp.ones(4, jnp.float32)
+        b = jnp.zeros(4, jnp.float32)
+        assert_allclose(
+            float(mapsum_pallas(x, a, b)), float(mapsum_ref(x, a, b)), rtol=1e-4
+        )
+
+    def test_additivity_across_batches(self):
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.standard_normal((300, 6)).astype(np.float32))
+        a = jnp.asarray(rng.standard_normal(6).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal(6).astype(np.float32))
+        whole = float(mapsum_pallas(x, a, b))
+        parts = sum(
+            float(mapsum_pallas(x[lo:hi], a, b)) for lo, hi in [(0, 100), (100, 300)]
+        )
+        assert parts == pytest.approx(whole, rel=1e-3, abs=1e-3)
+
+    def test_bounded_scores(self):
+        """|f(x_i)| < 1 ⇒ |sum| < rows."""
+        rng = np.random.default_rng(13)
+        x = jnp.asarray(100.0 * rng.standard_normal((50, 3)).astype(np.float32))
+        a = jnp.ones(3, jnp.float32)
+        b = jnp.ones(3, jnp.float32)
+        assert abs(float(mapsum_pallas(x, a, b))) <= 50.0

@@ -1,0 +1,19 @@
+//! E8 bench — regenerate the ablation tables (batch model, cancellation
+//! cost, speculative vs upfront, heterogeneous cluster).
+use batchrep::benchkit::Suite;
+use batchrep::experiments::{ablations, ExpContext};
+
+fn main() {
+    let fast = std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let ctx = ExpContext {
+        out_dir: "results/bench_ablations".into(),
+        trials: if fast { 2_000 } else { 50_000 },
+        seed: 42,
+    };
+    std::fs::create_dir_all(&ctx.out_dir).unwrap();
+    let mut suite = Suite::new("bench_ablations — E8 tables");
+    suite.bench("ablation tables (4)", ctx.trials, || {
+        ablations::run(&ctx).unwrap();
+    });
+    suite.finish();
+}

@@ -1,0 +1,36 @@
+//! Live coordinator overhead: wall-clock of a full System1 round with
+//! zero injected straggle (mock backend) — isolates dispatch, channel,
+//! cancellation, and aggregation costs. §Perf target: ≤ 50 µs/task.
+use batchrep::assignment::Policy;
+use batchrep::benchkit::Suite;
+use batchrep::config::SystemConfig;
+use batchrep::coordinator::{Backend, Coordinator};
+use batchrep::dist::ServiceSpec;
+use batchrep::worker::JobSpec;
+use std::sync::Arc;
+
+fn main() {
+    let mut suite = Suite::new("bench_coordinator — dispatch overhead (mock, zero delay)");
+    for (n, b) in [(4usize, 2usize), (8, 4), (16, 4), (32, 8)] {
+        let cfg = SystemConfig {
+            n_workers: n,
+            n_batches: b,
+            policy: Policy::BalancedDisjoint,
+            service: ServiceSpec::Deterministic { value: 0.0 },
+            time_scale: 1.0,
+            n_samples: n * 8,
+            dim: 4,
+            seed: 1,
+            ..SystemConfig::default()
+        };
+        let mut coord = Coordinator::new(cfg, Backend::Mock).unwrap();
+        let w = Arc::new(vec![0.0f32; 4]);
+        suite.bench(&format!("round N={n} B={b}"), n as u64, || {
+            coord
+                .run_round(JobSpec::Grad { w: w.clone() })
+                .unwrap();
+        });
+        coord.shutdown();
+    }
+    suite.finish();
+}

@@ -1,0 +1,64 @@
+//! DES substrate performance: Monte-Carlo sampler and event engine
+//! throughput — the §Perf L3 targets (DESIGN.md §6).
+use batchrep::benchkit::{black_box, Suite};
+use batchrep::des::engine::{simulate_one_with, EngineConfig, Redundancy, Workspace};
+use batchrep::des::{montecarlo, Scenario};
+use batchrep::dist::{BatchService, ServiceSpec};
+use batchrep::util::rng::Rng;
+
+fn main() {
+    let mut suite = Suite::new("bench_des — simulator hot paths");
+    let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+
+    for (n, b) in [(24usize, 6usize), (240, 24), (1024, 128)] {
+        let scn =
+            Scenario::paper_balanced(n, b, BatchService::paper(spec.clone())).unwrap();
+        let mut rng = Rng::new(1);
+        suite.bench(&format!("mc trial N={n} B={b} (disjoint)"), n as u64, || {
+            black_box(montecarlo::sample_completion(&scn, &mut rng));
+        });
+    }
+
+    let overlap = {
+        let layout = batchrep::batching::overlapping(64, 64, 8).unwrap();
+        let assignment = batchrep::assignment::balanced(64, 64).unwrap();
+        Scenario::new(layout, assignment, BatchService::paper(spec.clone())).unwrap()
+    };
+    let mut rng = Rng::new(2);
+    suite.bench("mc trial N=64 overlapping windows", 64, || {
+        black_box(montecarlo::sample_completion(&overlap, &mut rng));
+    });
+
+    let scn = Scenario::paper_balanced(24, 6, BatchService::paper(spec.clone())).unwrap();
+    let cfg = EngineConfig::default();
+    let mut rng3 = Rng::new(3);
+    let mut ws = Workspace::default();
+    suite.bench("engine trial N=24 B=6 upfront+cancel", 24, || {
+        black_box(simulate_one_with(&scn, &cfg, &mut rng3, &mut ws));
+    });
+    let spec_cfg = EngineConfig {
+        redundancy: Redundancy::Speculative { deadline_factor: 1.5 },
+        ..EngineConfig::default()
+    };
+    let mut rng4 = Rng::new(4);
+    let mut ws4 = Workspace::default();
+    suite.bench("engine trial N=24 B=6 speculative", 24, || {
+        black_box(simulate_one_with(&scn, &spec_cfg, &mut rng4, &mut ws4));
+    });
+
+    // Parallel Monte-Carlo scaling (4 threads vs 1).
+    let big = Scenario::paper_balanced(24, 6, BatchService::paper(spec.clone())).unwrap();
+    suite.bench("run_trials 100k sequential", 100_000, || {
+        black_box(montecarlo::run_trials(&big, 100_000, 7));
+    });
+    suite.bench("run_trials 100k parallel x4", 100_000, || {
+        black_box(montecarlo::run_trials_parallel(&big, 100_000, 7, 4));
+    });
+
+    // Raw substrate: distribution sampling.
+    let mut rng5 = Rng::new(5);
+    suite.bench("sexp sample", 1, || {
+        black_box(spec.sample(&mut rng5));
+    });
+    suite.finish();
+}

@@ -1,0 +1,18 @@
+//! E3 bench — Theorem 2 spectrum (Exp service) regeneration.
+use batchrep::benchkit::Suite;
+use batchrep::experiments::{spectrum, ExpContext};
+
+fn main() {
+    let fast = std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let ctx = ExpContext {
+        out_dir: "results/bench_spectrum".into(),
+        trials: if fast { 5_000 } else { 100_000 },
+        seed: 42,
+    };
+    std::fs::create_dir_all(&ctx.out_dir).unwrap();
+    let mut suite = Suite::new("bench_diversity_exp — Theorems 2/3/4 tables");
+    suite.bench("spectrum tables (E3+E4+E5)", ctx.trials * 8, || {
+        spectrum::run(&ctx).unwrap();
+    });
+    suite.finish();
+}

@@ -1,0 +1,19 @@
+//! E1 bench — regenerates paper Fig. 2 (E[T] vs B, SExp, per-Δµ curves)
+//! and times the sweep. `BATCHREP_BENCH_FAST=1` shrinks it for CI.
+use batchrep::benchkit::Suite;
+use batchrep::experiments::{fig2, ExpContext};
+
+fn main() {
+    let fast = std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let ctx = ExpContext {
+        out_dir: "results/bench_fig2".into(),
+        trials: if fast { 5_000 } else { 100_000 },
+        seed: 42,
+    };
+    std::fs::create_dir_all(&ctx.out_dir).unwrap();
+    let mut suite = Suite::new("bench_fig2 — Fig. 2 regeneration");
+    suite.bench("fig2 full sweep", ctx.trials * 5 * 8, || {
+        fig2::run(&ctx).unwrap();
+    });
+    suite.finish();
+}

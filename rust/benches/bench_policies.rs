@@ -1,0 +1,40 @@
+//! E2 bench — Theorem 1 policy table regeneration + per-policy sampling
+//! throughput.
+use batchrep::benchkit::{black_box, Suite};
+use batchrep::des::{montecarlo, Scenario};
+use batchrep::dist::{BatchService, ServiceSpec};
+use batchrep::experiments::{policies, ExpContext};
+use batchrep::util::rng::Rng;
+
+fn main() {
+    let fast = std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let ctx = ExpContext {
+        out_dir: "results/bench_policies".into(),
+        trials: if fast { 5_000 } else { 50_000 },
+        seed: 42,
+    };
+    std::fs::create_dir_all(&ctx.out_dir).unwrap();
+    let mut suite = Suite::new("bench_policies — Theorem 1 table");
+    suite.bench("policy table (all dists x policies)", ctx.trials * 24, || {
+        policies::run(&ctx).unwrap();
+    });
+
+    // Micro: single-trial sampling cost per policy class.
+    let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+    for (name, b, overlap) in
+        [("disjoint B=4", 4usize, false), ("overlapping B=12", 12, true)]
+    {
+        let scn = if overlap {
+            let layout = batchrep::batching::overlapping(12, 12, 3).unwrap();
+            let assignment = batchrep::assignment::balanced(12, 12).unwrap();
+            Scenario::new(layout, assignment, BatchService::paper(spec.clone())).unwrap()
+        } else {
+            Scenario::paper_balanced(12, b, BatchService::paper(spec.clone())).unwrap()
+        };
+        let mut rng = Rng::new(7);
+        suite.bench(&format!("sample_completion {name}"), 1, || {
+            black_box(montecarlo::sample_completion(&scn, &mut rng));
+        });
+    }
+    suite.finish();
+}

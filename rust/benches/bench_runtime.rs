@@ -1,0 +1,42 @@
+//! PJRT runtime latency/throughput: artifact compile once, then
+//! per-execution cost of the grad/mapsum jobs at every batch size —
+//! the compute-side numbers behind the live-system overhead column.
+//! Skips (cleanly) when artifacts are missing.
+use batchrep::benchkit::{black_box, Suite};
+use batchrep::runtime::{default_artifact_dir, Engine};
+use batchrep::util::rng::Rng;
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP bench_runtime: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let mut engine = Engine::new(&dir).unwrap();
+    let mut suite = Suite::new("bench_runtime — PJRT execution");
+    let mut rng = Rng::new(1);
+    let dim = 64usize;
+    let w: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    for rows in [512usize, 1024, 2048, 4096] {
+        if engine.manifest().find("grad", rows, dim).is_err() {
+            continue;
+        }
+        let x: Vec<f32> = (0..rows * dim).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..rows).map(|_| rng.normal() as f32).collect();
+        engine.prepare("grad", rows, dim).unwrap();
+        suite.bench(&format!("grad rows={rows} d={dim}"), rows as u64, || {
+            black_box(engine.grad(rows, dim, &x, &y, &w).unwrap());
+        });
+    }
+    let rows = 1024usize;
+    if engine.manifest().find("mapsum", rows, dim).is_ok() {
+        let x: Vec<f32> = (0..rows * dim).map(|_| rng.normal() as f32).collect();
+        let a = vec![0.1f32; dim];
+        let b = vec![0.2f32; dim];
+        engine.prepare("mapsum", rows, dim).unwrap();
+        suite.bench(&format!("mapsum rows={rows} d={dim}"), rows as u64, || {
+            black_box(engine.mapsum(rows, dim, &x, &a, &b).unwrap());
+        });
+    }
+    suite.finish();
+}

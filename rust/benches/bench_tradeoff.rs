@@ -1,0 +1,33 @@
+//! E4/E5 bench — closed-form optimizer performance: B*(Δµ) sweeps and
+//! the inclusion–exclusion unbalanced analysis.
+use batchrep::analysis;
+use batchrep::assignment::skewed;
+use batchrep::benchkit::{black_box, Suite};
+use batchrep::dist::ServiceSpec;
+
+fn main() {
+    let mut suite = Suite::new("bench_tradeoff — analysis closed forms");
+    let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+    suite.bench("spectrum N=24 (8 divisors)", 8, || {
+        black_box(analysis::spectrum(24, &spec).unwrap());
+    });
+    suite.bench("optimum_b N=240", 1, || {
+        black_box(analysis::optimum_b(240, &spec));
+    });
+    suite.bench("bstar_sweep 10 points", 10, || {
+        black_box(analysis::bstar_sweep(
+            24,
+            1.0,
+            &[0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0],
+        ));
+    });
+    let a12 = skewed(12, 6).unwrap();
+    suite.bench("assignment_stats inclusion-exclusion B=6", 1, || {
+        black_box(analysis::assignment_stats(&a12, &spec, 12).unwrap());
+    });
+    let a20 = skewed(20, 10).unwrap();
+    suite.bench("assignment_stats inclusion-exclusion B=10", 1, || {
+        black_box(analysis::assignment_stats(&a20, &spec, 20).unwrap());
+    });
+    suite.finish();
+}

@@ -1,0 +1,532 @@
+//! Closed-form analysis of the job completion time (paper §III).
+//!
+//! Under the size-dependent service model, a batch of `s = N/B` units on
+//! one worker serves in `s·τ`. For `τ ~ SExp(µ, ∆)` that is
+//! `SExp(µ/s, s∆)`; the earliest of the `g = N/B` replicas of a batch
+//! finishes in `s∆ + Exp(g·µ/s) = s∆ + Exp(µ)` (the replication degree
+//! exactly cancels the size scaling when the assignment is balanced —
+//! the elegance at the heart of the paper). The job completion time is
+//! then `T = s∆ + max{E₁, …, E_B}` with `E_i` i.i.d. `Exp(µ)`:
+//!
+//! * `E[T]  = N∆/B + H_B/µ`          (paper Eq. 4; Exp case has ∆ = 0)
+//! * `Var[T] = H⁽²⁾_B/µ²`
+//!
+//! This module also computes the exact mean/variance of **unbalanced**
+//! balanced-size assignments by inclusion–exclusion over the maximum of
+//! independent non-identical exponentials, which lets E2 verify
+//! Theorem 1 analytically rather than only by simulation.
+
+use crate::assignment::{feasible_batch_counts, Assignment};
+use crate::dist::ServiceSpec;
+use crate::util::harmonic::{harmonic, harmonic2};
+
+/// Mean/variance of a completion time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CtStats {
+    /// Expected completion time.
+    pub mean: f64,
+    /// Variance of the completion time.
+    pub var: f64,
+}
+
+impl CtStats {
+    /// Standard deviation.
+    pub fn stddev(&self) -> f64 {
+        self.var.sqrt()
+    }
+}
+
+/// Extract `(mu, delta)` for the closed forms; only Exp and SExp have
+/// them (∆ = 0 for Exp).
+fn exp_family(spec: &ServiceSpec) -> Option<(f64, f64)> {
+    match spec {
+        ServiceSpec::Exp { mu } => Some((*mu, 0.0)),
+        ServiceSpec::ShiftedExp { mu, delta } => Some((*mu, *delta)),
+        _ => None,
+    }
+}
+
+/// Closed-form completion-time statistics of System1 with `n` workers,
+/// `b` batches, balanced disjoint assignment, and per-unit service
+/// `spec` (must be Exp or SExp; `b` must divide `n`).
+pub fn completion_time_stats(n: u64, b: u64, spec: &ServiceSpec) -> anyhow::Result<CtStats> {
+    anyhow::ensure!(n >= 1 && b >= 1 && b <= n, "need 1 <= B <= N");
+    anyhow::ensure!(n % b == 0, "closed form needs B | N (N={n}, B={b})");
+    let (mu, delta) = exp_family(spec)
+        .ok_or_else(|| anyhow::anyhow!("closed form only for exp/sexp, got {}", spec.name()))?;
+    let s = (n / b) as f64; // batch size in units == replication degree
+    Ok(CtStats {
+        mean: s * delta + harmonic(b) / mu,
+        var: harmonic2(b) / (mu * mu),
+    })
+}
+
+/// One point of the diversity–parallelism spectrum.
+#[derive(Debug, Clone, Copy)]
+pub struct SpectrumPoint {
+    /// Number of batches `B`.
+    pub b: u64,
+    /// Replication degree `g = N/B`.
+    pub g: u64,
+    /// Closed-form statistics at this `B`.
+    pub stats: CtStats,
+}
+
+/// Evaluate the closed form at every feasible `B` (divisors of `N`).
+pub fn spectrum(n: u64, spec: &ServiceSpec) -> anyhow::Result<Vec<SpectrumPoint>> {
+    feasible_batch_counts(n as usize)
+        .into_iter()
+        .map(|b| {
+            let b = b as u64;
+            Ok(SpectrumPoint { b, g: n / b, stats: completion_time_stats(n, b, spec)? })
+        })
+        .collect()
+}
+
+/// Theorem 3 optimizer: the `B ∈ F_B` minimizing expected completion
+/// time. For Exp this is always 1 (Theorem 2).
+pub fn optimum_b(n: u64, spec: &ServiceSpec) -> u64 {
+    spectrum(n, spec)
+        .expect("optimum_b needs exp/sexp")
+        .into_iter()
+        .min_by(|a, b| a.stats.mean.partial_cmp(&b.stats.mean).unwrap())
+        .map(|p| p.b)
+        .unwrap_or(1)
+}
+
+/// The `B` minimizing the *variance* (Theorems 2 & 4 prove this is 1 for
+/// both distributions; computed rather than assumed so tests can check).
+pub fn optimum_b_variance(n: u64, spec: &ServiceSpec) -> u64 {
+    spectrum(n, spec)
+        .expect("optimum_b_variance needs exp/sexp")
+        .into_iter()
+        .min_by(|a, b| a.stats.var.partial_cmp(&b.stats.var).unwrap())
+        .map(|p| p.b)
+        .unwrap_or(1)
+}
+
+/// Partial-aggregation completion (extension, motivated by the paper's
+/// gradient-coding citation [7]): the master generates an *approximate*
+/// result from the earliest `k ≤ B` batches instead of all `B` (e.g.,
+/// SGD with a fraction of the gradient terms). The completion time is
+/// then the k-th order statistic of `B` i.i.d. `s∆ + Exp(µ)` batch-min
+/// times:
+/// `E[T_(k)] = s∆ + (H_B − H_{B−k})/µ`,
+/// `Var[T_(k)] = (H⁽²⁾_B − H⁽²⁾_{B−k})/µ²`.
+/// `k = B` recovers [`completion_time_stats`].
+pub fn partial_completion_stats(
+    n: u64,
+    b: u64,
+    k: u64,
+    spec: &ServiceSpec,
+) -> anyhow::Result<CtStats> {
+    anyhow::ensure!(n >= 1 && b >= 1 && b <= n && n % b == 0, "need B | N");
+    anyhow::ensure!(k >= 1 && k <= b, "need 1 <= k <= B");
+    let (mu, delta) = exp_family(spec)
+        .ok_or_else(|| anyhow::anyhow!("closed form only for exp/sexp"))?;
+    let s = (n / b) as f64;
+    Ok(CtStats {
+        mean: s * delta + (harmonic(b) - harmonic(b - k)) / mu,
+        var: (harmonic2(b) - harmonic2(b - k)) / (mu * mu),
+    })
+}
+
+/// Monte-Carlo sampler for the k-of-B completion (validates
+/// [`partial_completion_stats`] and covers distributions with no closed
+/// form). Balanced disjoint assignment.
+pub fn sample_partial_completion(
+    n: u64,
+    b: u64,
+    k: u64,
+    service: &crate::dist::BatchService,
+    rng: &mut crate::util::rng::Rng,
+) -> f64 {
+    let g = (n / b) as usize;
+    let s = n / b;
+    let mut mins: Vec<f64> = (0..b)
+        .map(|_| {
+            (0..g)
+                .map(|_| service.sample_batch(s, rng))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    mins.sort_by(|a, x| a.partial_cmp(x).unwrap());
+    mins[(k - 1) as usize]
+}
+
+/// Mean and variance of `max{X₁, …, X_k}` for independent `X_i ~
+/// Exp(rates[i])`, by inclusion–exclusion:
+/// `E[max] = Σ_{∅≠S} (−1)^{|S|+1} / λ_S`,
+/// `E[max²] = Σ_{∅≠S} (−1)^{|S|+1} · 2/λ_S²`, with `λ_S = Σ_{i∈S} λ_i`.
+/// Exponential in `k`; fine for `k ≤ 20` (experiment sizes).
+pub fn max_of_exponentials_stats(rates: &[f64]) -> CtStats {
+    let k = rates.len();
+    assert!(k >= 1 && k <= 25, "inclusion-exclusion limited to k <= 25");
+    let mut mean = 0.0;
+    let mut m2 = 0.0;
+    for mask in 1u32..(1u32 << k) {
+        let mut lam = 0.0;
+        for (i, &r) in rates.iter().enumerate() {
+            if mask & (1 << i) != 0 {
+                lam += r;
+            }
+        }
+        let sign = if mask.count_ones() % 2 == 1 { 1.0 } else { -1.0 };
+        mean += sign / lam;
+        m2 += sign * 2.0 / (lam * lam);
+    }
+    CtStats { mean, var: m2 - mean * mean }
+}
+
+/// Exact completion-time statistics for an arbitrary (possibly
+/// unbalanced) assignment of equal-size disjoint batches under Exp/SExp
+/// per-unit service. Batch `i` with replication degree `gᵢ` has its
+/// earliest replica finish at `s∆ + Exp(gᵢ·µ/s)`; the completion time is
+/// the max over batches.
+pub fn assignment_stats(
+    assignment: &Assignment,
+    spec: &ServiceSpec,
+    n_units: u64,
+) -> anyhow::Result<CtStats> {
+    let (mu, delta) = exp_family(spec)
+        .ok_or_else(|| anyhow::anyhow!("closed form only for exp/sexp"))?;
+    let b = assignment.n_batches as u64;
+    anyhow::ensure!(n_units % b == 0, "need B | U for equal-size batches");
+    let s = (n_units / b) as f64;
+    let rates: Vec<f64> = (0..assignment.n_batches)
+        .map(|i| assignment.replication(i) as f64 * mu / s)
+        .collect();
+    let base = max_of_exponentials_stats(&rates);
+    Ok(CtStats { mean: s * delta + base.mean, var: base.var })
+}
+
+/// Closed-form CDF of the completion time for balanced disjoint
+/// replication under Exp/SExp service:
+/// `P(T ≤ t) = (1 − e^{−µ(t − s∆)})^B` for `t ≥ s∆` (0 below).
+pub fn completion_time_cdf(n: u64, b: u64, spec: &ServiceSpec, t: f64) -> anyhow::Result<f64> {
+    anyhow::ensure!(n >= 1 && b >= 1 && b <= n && n % b == 0, "need B | N");
+    let (mu, delta) = exp_family(spec)
+        .ok_or_else(|| anyhow::anyhow!("closed form only for exp/sexp"))?;
+    let shift = (n / b) as f64 * delta;
+    if t <= shift {
+        return Ok(0.0);
+    }
+    Ok((1.0 - (-mu * (t - shift)).exp()).powi(b as i32))
+}
+
+/// Closed-form quantile (inverse CDF): the paper's performance-guarantee
+/// number ("the job finishes within t with probability q"):
+/// `t_q = s∆ − ln(1 − q^{1/B})/µ`.
+pub fn completion_time_quantile(
+    n: u64,
+    b: u64,
+    spec: &ServiceSpec,
+    q: f64,
+) -> anyhow::Result<f64> {
+    anyhow::ensure!((0.0..1.0).contains(&q), "q must be in [0, 1)");
+    anyhow::ensure!(n >= 1 && b >= 1 && b <= n && n % b == 0, "need B | N");
+    let (mu, delta) = exp_family(spec)
+        .ok_or_else(|| anyhow::anyhow!("closed form only for exp/sexp"))?;
+    let shift = (n / b) as f64 * delta;
+    Ok(shift - (1.0 - q.powf(1.0 / b as f64)).ln() / mu)
+}
+
+/// Expected *cost* (busy worker-seconds) of one job under upfront
+/// replication with cancellation: every replica of a batch runs until
+/// the batch's earliest replica finishes, so
+/// `E[cost] = B · g · E[min] = N·(N∆/B + 1/µ)`.
+/// The redundancy bill the diversity end of the spectrum pays.
+pub fn expected_cost(n: u64, b: u64, spec: &ServiceSpec) -> anyhow::Result<f64> {
+    anyhow::ensure!(n >= 1 && b >= 1 && b <= n && n % b == 0, "need B | N");
+    let (mu, delta) = exp_family(spec)
+        .ok_or_else(|| anyhow::anyhow!("closed form only for exp/sexp"))?;
+    let s = (n / b) as f64;
+    Ok(n as f64 * (s * delta + 1.0 / mu))
+}
+
+/// The crossover table behind Fig. 2 / Theorem 3: for each `∆µ` product,
+/// the optimal `B*` and whether it is interior (neither 1 nor N).
+#[derive(Debug, Clone, Copy)]
+pub struct CrossoverPoint {
+    /// ∆·µ (the paper's "randomness" knob; large = less random).
+    pub delta_mu: f64,
+    /// Optimal batch count.
+    pub b_star: u64,
+    /// Expected completion time at `B*`.
+    pub mean_at_star: f64,
+}
+
+/// Sweep `∆µ` and record `B*(∆µ)` for fixed `n` and `µ`.
+pub fn bstar_sweep(n: u64, mu: f64, delta_mus: &[f64]) -> Vec<CrossoverPoint> {
+    delta_mus
+        .iter()
+        .map(|&dm| {
+            let spec = ServiceSpec::shifted_exp(mu, dm / mu);
+            let b_star = optimum_b(n, &spec);
+            let mean = completion_time_stats(n, b_star, &spec).unwrap().mean;
+            CrossoverPoint { delta_mu: dm, b_star, mean_at_star: mean }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::{balanced, skewed};
+    use crate::testkit;
+
+    #[test]
+    fn eq4_shape() {
+        // E[T] = N∆/B + H_B/µ.
+        let spec = ServiceSpec::shifted_exp(2.0, 0.3);
+        let st = completion_time_stats(24, 4, &spec).unwrap();
+        let expect = 6.0 * 0.3 + harmonic(4) / 2.0;
+        assert!((st.mean - expect).abs() < 1e-12);
+        assert!((st.var - harmonic2(4) / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exp_case_is_delta_zero() {
+        let e = completion_time_stats(24, 6, &ServiceSpec::exp(1.5)).unwrap();
+        assert!((e.mean - harmonic(6) / 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(completion_time_stats(10, 3, &ServiceSpec::exp(1.0)).is_err());
+        assert!(completion_time_stats(10, 2, &ServiceSpec::pareto(1.0, 2.0)).is_err());
+        assert!(completion_time_stats(4, 8, &ServiceSpec::exp(1.0)).is_err());
+    }
+
+    #[test]
+    fn theorem2_exp_full_diversity_optimal() {
+        // Both mean and variance minimized at B = 1 for Exponential.
+        for n in [4u64, 12, 24, 60] {
+            let spec = ServiceSpec::exp(1.0);
+            assert_eq!(optimum_b(n, &spec), 1, "n={n}");
+            assert_eq!(optimum_b_variance(n, &spec), 1, "n={n}");
+        }
+    }
+
+    #[test]
+    fn theorem4_sexp_variance_full_diversity() {
+        for delta in [0.01, 0.1, 1.0, 10.0] {
+            let spec = ServiceSpec::shifted_exp(1.0, delta);
+            assert_eq!(optimum_b_variance(24, &spec), 1, "delta={delta}");
+        }
+    }
+
+    #[test]
+    fn theorem3_interior_optimum_moves_with_delta_mu() {
+        let n = 24;
+        // Very random (tiny ∆µ): diversity wins.
+        assert_eq!(optimum_b(n, &ServiceSpec::shifted_exp(1.0, 0.001)), 1);
+        // Very deterministic (huge ∆µ): parallelism wins.
+        assert_eq!(optimum_b(n, &ServiceSpec::shifted_exp(1.0, 50.0)), 24);
+        // Moderate ∆µ: interior optimum.
+        let b_mid = optimum_b(n, &ServiceSpec::shifted_exp(1.0, 0.2));
+        assert!(b_mid > 1 && b_mid < 24, "b_mid={b_mid}");
+        // Monotone: B* nondecreasing in ∆µ.
+        let sweep = bstar_sweep(n, 1.0, &[0.001, 0.01, 0.1, 0.3, 1.0, 3.0, 10.0, 50.0]);
+        for w in sweep.windows(2) {
+            assert!(w[1].b_star >= w[0].b_star, "{:?}", sweep);
+        }
+    }
+
+    #[test]
+    fn max_of_iid_exponentials_matches_harmonics() {
+        // max of k iid Exp(µ): mean H_k/µ, var H2_k/µ².
+        for k in [1usize, 2, 5, 10] {
+            let rates = vec![2.0; k];
+            let st = max_of_exponentials_stats(&rates);
+            assert!((st.mean - harmonic(k as u64) / 2.0).abs() < 1e-9, "k={k}");
+            assert!((st.var - harmonic2(k as u64) / 4.0).abs() < 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn theorem1_balanced_beats_skewed_analytically() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        for (n, b) in [(12usize, 4usize), (24, 6), (8, 2)] {
+            let bal = assignment_stats(&balanced(n, b).unwrap(), &spec, n as u64).unwrap();
+            let skw = assignment_stats(&skewed(n, b).unwrap(), &spec, n as u64).unwrap();
+            assert!(
+                bal.mean < skw.mean,
+                "n={n} B={b}: balanced {} !< skewed {}",
+                bal.mean,
+                skw.mean
+            );
+        }
+    }
+
+    #[test]
+    fn assignment_stats_matches_closed_form_when_balanced() {
+        let spec = ServiceSpec::shifted_exp(1.5, 0.4);
+        let a = balanced(24, 6).unwrap();
+        let via_ie = assignment_stats(&a, &spec, 24).unwrap();
+        let direct = completion_time_stats(24, 6, &spec).unwrap();
+        assert!((via_ie.mean - direct.mean).abs() < 1e-9);
+        assert!((via_ie.var - direct.var).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_completion_reduces_to_full_at_k_equals_b() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        for (n, b) in [(24u64, 6u64), (12, 4)] {
+            let full = completion_time_stats(n, b, &spec).unwrap();
+            let part = partial_completion_stats(n, b, b, &spec).unwrap();
+            assert!((full.mean - part.mean).abs() < 1e-12);
+            assert!((full.var - part.var).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn partial_completion_monotone_in_k() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let mut prev = 0.0;
+        for k in 1..=6 {
+            let st = partial_completion_stats(24, 6, k, &spec).unwrap();
+            assert!(st.mean > prev);
+            prev = st.mean;
+        }
+        assert!(partial_completion_stats(24, 6, 0, &spec).is_err());
+        assert!(partial_completion_stats(24, 6, 7, &spec).is_err());
+    }
+
+    #[test]
+    fn partial_completion_matches_montecarlo() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.3);
+        let service = crate::dist::BatchService::paper(spec.clone());
+        let mut rng = crate::util::rng::Rng::new(23);
+        for k in [1u64, 3, 4] {
+            let theory = partial_completion_stats(24, 4, k.min(4), &spec).unwrap();
+            let n_trials = 100_000;
+            let mean: f64 = (0..n_trials)
+                .map(|_| sample_partial_completion(24, 4, k.min(4), &service, &mut rng))
+                .sum::<f64>()
+                / n_trials as f64;
+            assert!(
+                (mean - theory.mean).abs() < 0.02 * theory.mean.max(1.0),
+                "k={k}: mc {mean} vs theory {}",
+                theory.mean
+            );
+        }
+    }
+
+    #[test]
+    fn cdf_properties() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.3);
+        let (n, b) = (12u64, 3u64);
+        let shift = 4.0 * 0.3;
+        // Zero below the shift, monotone, → 1.
+        assert_eq!(completion_time_cdf(n, b, &spec, shift - 0.01).unwrap(), 0.0);
+        let mut prev = 0.0;
+        for i in 1..100 {
+            let t = shift + i as f64 * 0.2;
+            let c = completion_time_cdf(n, b, &spec, t).unwrap();
+            assert!((0.0..=1.0).contains(&c) && c >= prev);
+            prev = c;
+        }
+        assert!(prev > 0.999);
+        // Median from quantile inverts the CDF.
+        let med = completion_time_quantile(n, b, &spec, 0.5).unwrap();
+        let c = completion_time_cdf(n, b, &spec, med).unwrap();
+        assert!((c - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_matches_montecarlo() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let scn = crate::des::Scenario::paper_balanced(
+            12,
+            4,
+            crate::dist::BatchService::paper(spec.clone()),
+        )
+        .unwrap();
+        let mut mc = crate::des::montecarlo::run_trials(&scn, 200_000, 31);
+        for q in [0.5, 0.9, 0.99] {
+            let theory = completion_time_quantile(12, 4, &spec, q).unwrap();
+            let emp = mc.samples.quantile(q);
+            let rel = (theory - emp).abs() / theory;
+            assert!(rel < 0.03, "q={q}: theory {theory} vs mc {emp}");
+        }
+    }
+
+    #[test]
+    fn expected_cost_matches_engine() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let scn = crate::des::Scenario::paper_balanced(
+            12,
+            3,
+            crate::dist::BatchService::paper(spec.clone()),
+        )
+        .unwrap();
+        let sum = crate::des::engine::simulate_many(
+            &scn,
+            &crate::des::engine::EngineConfig::default(),
+            100_000,
+            17,
+        );
+        let theory = expected_cost(12, 3, &spec).unwrap();
+        let rel = (sum.busy.mean() - theory).abs() / theory;
+        assert!(rel < 0.02, "engine busy {} vs theory {theory}", sum.busy.mean());
+    }
+
+    #[test]
+    fn cost_increases_with_diversity() {
+        // Full diversity costs the most; full parallelism the least.
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let costs: Vec<f64> = crate::assignment::feasible_batch_counts(24)
+            .into_iter()
+            .map(|b| expected_cost(24, b as u64, &spec).unwrap())
+            .collect();
+        for w in costs.windows(2) {
+            assert!(w[1] < w[0], "{costs:?}");
+        }
+    }
+
+    #[test]
+    fn prop_balanced_optimality_over_random_degree_splits() {
+        // Theorem 1, property form: any valid degree vector (same batch
+        // size, degrees summing to N) has E[T] ≥ balanced E[T].
+        testkit::check("thm1-degrees", 150, |g| {
+            let choices = [(4usize, 2usize), (8, 4), (12, 3), (12, 4), (16, 4)];
+            let (n, b) = *g.pick(&choices);
+            let spec = ServiceSpec::shifted_exp(1.0, g.f64_in(0.0, 2.0));
+            // Random degree vector: start balanced, move replicas around.
+            let gdeg = n / b;
+            let mut degrees = vec![gdeg; b];
+            for _ in 0..g.usize_in(0, 2 * b) {
+                let from = g.usize_in(0, b - 1);
+                let to = g.usize_in(0, b - 1);
+                if degrees[from] > 1 {
+                    degrees[from] -= 1;
+                    degrees[to] += 1;
+                }
+            }
+            let mut bow = Vec::new();
+            for (i, &d) in degrees.iter().enumerate() {
+                bow.extend(std::iter::repeat(i).take(d));
+            }
+            let mut workers_of_batch = vec![Vec::new(); b];
+            for (w, &bb) in bow.iter().enumerate() {
+                workers_of_batch[bb].push(w);
+            }
+            let a = Assignment {
+                n_workers: n,
+                n_batches: b,
+                workers_of_batch,
+                batch_of_worker: bow,
+            };
+            a.validate().unwrap();
+            let st = assignment_stats(&a, &spec, n as u64).unwrap();
+            let bal = completion_time_stats(n as u64, b as u64, &spec).unwrap();
+            assert!(
+                st.mean >= bal.mean - 1e-9,
+                "degrees {degrees:?}: {} < balanced {}",
+                st.mean,
+                bal.mean
+            );
+        });
+    }
+}

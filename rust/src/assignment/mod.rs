@@ -1,0 +1,306 @@
+//! Batch→worker assignment policies (the paper's §II second stage).
+//!
+//! An [`Assignment`] maps each of `B` batches to the set of workers that
+//! will redundantly execute it. The paper's Theorem 1 claims the
+//! **balanced assignment of non-overlapping batches** minimizes expected
+//! completion time among all policies when service times are
+//! stochastically decreasing and convex; the other policies here are the
+//! comparison points for that claim (experiment E2) and for the
+//! robustness ablations (E8).
+
+use crate::util::rng::Rng;
+
+/// A concrete batch→worker assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Assignment {
+    /// Number of workers `N`.
+    pub n_workers: usize,
+    /// Number of batches `B`.
+    pub n_batches: usize,
+    /// `workers_of_batch[b]` = workers redundantly executing batch `b`.
+    pub workers_of_batch: Vec<Vec<usize>>,
+    /// `batch_of_worker[w]` = the batch worker `w` executes (every policy
+    /// in the paper gives each worker exactly one batch).
+    pub batch_of_worker: Vec<usize>,
+}
+
+impl Assignment {
+    /// Build the inverse map from `batch_of_worker`.
+    fn from_batch_of_worker(n_workers: usize, n_batches: usize, bow: Vec<usize>) -> Self {
+        let mut workers_of_batch = vec![Vec::new(); n_batches];
+        for (w, &b) in bow.iter().enumerate() {
+            workers_of_batch[b].push(w);
+        }
+        Self { n_workers, n_batches, workers_of_batch, batch_of_worker: bow }
+    }
+
+    /// Replication degree of batch `b`.
+    pub fn replication(&self, b: usize) -> usize {
+        self.workers_of_batch[b].len()
+    }
+
+    /// Validate structural invariants:
+    /// * every worker is assigned exactly one batch;
+    /// * every batch has at least one worker;
+    /// * the two maps are mutually consistent.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.batch_of_worker.len() == self.n_workers,
+            "batch_of_worker length {} != n_workers {}",
+            self.batch_of_worker.len(),
+            self.n_workers
+        );
+        anyhow::ensure!(
+            self.workers_of_batch.len() == self.n_batches,
+            "workers_of_batch length mismatch"
+        );
+        let mut seen = vec![false; self.n_workers];
+        for (b, ws) in self.workers_of_batch.iter().enumerate() {
+            anyhow::ensure!(!ws.is_empty(), "batch {b} has no workers");
+            for &w in ws {
+                anyhow::ensure!(w < self.n_workers, "worker index {w} out of range");
+                anyhow::ensure!(!seen[w], "worker {w} assigned twice");
+                seen[w] = true;
+                anyhow::ensure!(
+                    self.batch_of_worker[w] == b,
+                    "inconsistent maps at worker {w}"
+                );
+            }
+        }
+        anyhow::ensure!(seen.iter().all(|&s| s), "some worker unassigned");
+        Ok(())
+    }
+
+    /// True when all replication degrees are equal (balanced).
+    pub fn is_balanced(&self) -> bool {
+        let g = self.replication(0);
+        (0..self.n_batches).all(|b| self.replication(b) == g)
+    }
+}
+
+/// Assignment policy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's optimum: batch `b` → workers `{b·g, …, b·g+g−1}` with
+    /// `g = N/B`. Requires `B | N`.
+    BalancedDisjoint,
+    /// Balanced group sizes but the batch→worker map is a uniformly
+    /// random balanced grouping. Completion-time–equivalent to
+    /// `BalancedDisjoint` under i.i.d. service (sanity check in E2).
+    RandomBalanced,
+    /// Unbalanced baseline: replication degrees form a maximally skewed
+    /// partition — the first batches get extra replicas, the last get
+    /// fewer (but ≥ 1). Theorem 1 says this is strictly worse.
+    SkewedUnbalanced,
+    /// One batch (`B = 1`) replicated everywhere: full diversity.
+    FullDiversity,
+    /// `B = N`, one worker per batch: full parallelism (no redundancy).
+    FullParallelism,
+}
+
+impl Policy {
+    /// All comparison policies (used by experiment drivers).
+    pub fn all() -> &'static [Policy] {
+        &[
+            Policy::BalancedDisjoint,
+            Policy::RandomBalanced,
+            Policy::SkewedUnbalanced,
+            Policy::FullDiversity,
+            Policy::FullParallelism,
+        ]
+    }
+
+    /// Table/config identifier.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::BalancedDisjoint => "balanced_disjoint",
+            Policy::RandomBalanced => "random_balanced",
+            Policy::SkewedUnbalanced => "skewed_unbalanced",
+            Policy::FullDiversity => "full_diversity",
+            Policy::FullParallelism => "full_parallelism",
+        }
+    }
+
+    /// Parse from config string.
+    pub fn parse(s: &str) -> anyhow::Result<Policy> {
+        Ok(match s {
+            "balanced_disjoint" => Policy::BalancedDisjoint,
+            "random_balanced" => Policy::RandomBalanced,
+            "skewed_unbalanced" => Policy::SkewedUnbalanced,
+            "full_diversity" => Policy::FullDiversity,
+            "full_parallelism" => Policy::FullParallelism,
+            _ => anyhow::bail!("unknown policy '{s}'"),
+        })
+    }
+
+    /// Build an assignment of `n_batches` batches onto `n_workers`
+    /// workers. For `FullDiversity`/`FullParallelism` the `n_batches`
+    /// argument is ignored (they fix `B = 1` / `B = N`).
+    pub fn assign(
+        &self,
+        n_workers: usize,
+        n_batches: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Assignment> {
+        anyhow::ensure!(n_workers > 0, "need at least one worker");
+        match self {
+            Policy::FullDiversity => balanced(n_workers, 1),
+            Policy::FullParallelism => balanced(n_workers, n_workers),
+            Policy::BalancedDisjoint => balanced(n_workers, n_batches),
+            Policy::RandomBalanced => {
+                let a = balanced(n_workers, n_batches)?;
+                let mut bow = a.batch_of_worker;
+                rng.shuffle(&mut bow);
+                Ok(Assignment::from_batch_of_worker(n_workers, n_batches, bow))
+            }
+            Policy::SkewedUnbalanced => skewed(n_workers, n_batches),
+        }
+    }
+}
+
+/// Balanced assignment: requires `n_batches | n_workers`; batch `b` gets
+/// workers `[b·g, (b+1)·g)`.
+pub fn balanced(n_workers: usize, n_batches: usize) -> anyhow::Result<Assignment> {
+    anyhow::ensure!(n_batches >= 1 && n_batches <= n_workers, "need 1 <= B <= N");
+    anyhow::ensure!(
+        n_workers % n_batches == 0,
+        "balanced assignment needs B | N (got N={n_workers}, B={n_batches})"
+    );
+    let g = n_workers / n_batches;
+    let bow: Vec<usize> = (0..n_workers).map(|w| w / g).collect();
+    Ok(Assignment::from_batch_of_worker(n_workers, n_batches, bow))
+}
+
+/// Maximally skewed (but valid) assignment: batch `i` receives a
+/// replication degree that decreases from `2g−1` (capped by remaining
+/// workers) down to 1, preserving `Σ degrees = N`.
+pub fn skewed(n_workers: usize, n_batches: usize) -> anyhow::Result<Assignment> {
+    anyhow::ensure!(n_batches >= 1 && n_batches <= n_workers, "need 1 <= B <= N");
+    // Give each batch 1 worker first, then pour the surplus into the
+    // earliest batches (2g−1 cap keeps degrees finite but very uneven).
+    let g = n_workers / n_batches;
+    let cap = (2 * g).max(2) - 1;
+    let mut degrees = vec![1usize; n_batches];
+    let mut surplus = n_workers - n_batches;
+    let mut i = 0;
+    while surplus > 0 {
+        let room = cap.saturating_sub(degrees[i]);
+        let add = room.min(surplus);
+        degrees[i] += add;
+        surplus -= add;
+        i += 1;
+        if i == n_batches {
+            // Cap too small to absorb the surplus; relax it.
+            i = 0;
+            for d in &mut degrees {
+                if surplus == 0 {
+                    break;
+                }
+                *d += 1;
+                surplus -= 1;
+            }
+        }
+    }
+    let mut bow = Vec::with_capacity(n_workers);
+    for (b, &d) in degrees.iter().enumerate() {
+        bow.extend(std::iter::repeat(b).take(d));
+    }
+    Ok(Assignment::from_batch_of_worker(n_workers, n_batches, bow))
+}
+
+/// Divisors of `n` in increasing order — the feasible set `F_B` of batch
+/// counts for balanced assignment.
+pub fn feasible_batch_counts(n: usize) -> Vec<usize> {
+    let mut out: Vec<usize> = (1..=n).filter(|b| n % b == 0).collect();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn balanced_structure() {
+        let a = balanced(12, 4).unwrap();
+        a.validate().unwrap();
+        assert!(a.is_balanced());
+        assert_eq!(a.replication(0), 3);
+        assert_eq!(a.workers_of_batch[1], vec![3, 4, 5]);
+        assert_eq!(a.batch_of_worker[7], 2);
+    }
+
+    #[test]
+    fn balanced_rejects_non_divisor() {
+        assert!(balanced(10, 3).is_err());
+        assert!(balanced(10, 0).is_err());
+        assert!(balanced(4, 5).is_err());
+    }
+
+    #[test]
+    fn full_diversity_and_parallelism() {
+        let mut rng = Rng::new(1);
+        let d = Policy::FullDiversity.assign(8, 99, &mut rng).unwrap();
+        assert_eq!(d.n_batches, 1);
+        assert_eq!(d.replication(0), 8);
+        let p = Policy::FullParallelism.assign(8, 99, &mut rng).unwrap();
+        assert_eq!(p.n_batches, 8);
+        assert!(p.is_balanced());
+        assert_eq!(p.replication(3), 1);
+    }
+
+    #[test]
+    fn random_balanced_is_balanced_and_valid() {
+        let mut rng = Rng::new(2);
+        let a = Policy::RandomBalanced.assign(12, 3, &mut rng).unwrap();
+        a.validate().unwrap();
+        assert!(a.is_balanced());
+        assert_eq!(a.replication(0), 4);
+    }
+
+    #[test]
+    fn skewed_is_valid_and_unbalanced() {
+        let a = skewed(12, 4).unwrap();
+        a.validate().unwrap();
+        assert!(!a.is_balanced());
+        // degrees: 5,5,1,1 (cap 2g−1 = 5)
+        assert_eq!(a.replication(0), 5);
+        assert_eq!(a.replication(3), 1);
+        let total: usize = (0..4).map(|b| a.replication(b)).sum();
+        assert_eq!(total, 12);
+    }
+
+    #[test]
+    fn feasible_counts() {
+        assert_eq!(feasible_batch_counts(24), vec![1, 2, 3, 4, 6, 8, 12, 24]);
+        assert_eq!(feasible_batch_counts(1), vec![1]);
+        assert_eq!(feasible_batch_counts(7), vec![1, 7]);
+    }
+
+    #[test]
+    fn prop_all_policies_valid() {
+        testkit::check("policies-valid", 200, |g| {
+            let n = g.usize_in(1, 48);
+            let divisors = feasible_batch_counts(n);
+            let b = *g.pick(&divisors);
+            let policy = *g.pick(Policy::all());
+            let mut rng = g.rng();
+            let a = policy.assign(n, b, &mut rng).unwrap();
+            a.validate().unwrap();
+            // Total replication always equals N (every worker works).
+            let total: usize = (0..a.n_batches).map(|i| a.replication(i)).sum();
+            assert_eq!(total, n);
+        });
+    }
+
+    #[test]
+    fn prop_skewed_total_is_n_even_for_non_divisors() {
+        testkit::check("skewed-nondivisor", 200, |g| {
+            let n = g.usize_in(2, 64);
+            let b = g.usize_in(1, n);
+            let a = skewed(n, b).unwrap();
+            a.validate().unwrap();
+        });
+    }
+}

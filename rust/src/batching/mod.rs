@@ -1,0 +1,210 @@
+//! Stage one of the paper's two-stage data distribution: samples →
+//! batches.
+//!
+//! Data is normalized into `U` equal *units* (the paper takes `U = N`, so
+//! a batch of the dataset's `1/B` fraction holds `s = N/B` units). A
+//! [`DataLayout`] describes which units each batch holds; batches are
+//! either **disjoint** (a partition — the paper's optimum) or
+//! **overlapping** (cyclic shifted windows — the paper's comparison
+//! class, where every worker's subset partially overlaps its
+//! neighbours'). The layout also maps units to concrete sample-index
+//! ranges of a real dataset for the live coordinator.
+
+/// Which units (of `n_units` total) each batch holds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DataLayout {
+    /// Total number of normalized data units `U`.
+    pub n_units: usize,
+    /// `units_of_batch[b]` = sorted unit ids in batch `b`.
+    pub units_of_batch: Vec<Vec<usize>>,
+    /// True when built by [`overlapping`].
+    pub is_overlapping: bool,
+}
+
+impl DataLayout {
+    /// Number of batches.
+    pub fn n_batches(&self) -> usize {
+        self.units_of_batch.len()
+    }
+
+    /// Batch size in units (all batches are equal-sized by construction).
+    pub fn batch_units(&self) -> usize {
+        self.units_of_batch[0].len()
+    }
+
+    /// Validate: equal batch sizes, unit ids in range, full coverage,
+    /// and (for disjoint layouts) exact partition.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.units_of_batch.is_empty(), "no batches");
+        let s = self.batch_units();
+        anyhow::ensure!(s > 0, "empty batches");
+        let mut count = vec![0usize; self.n_units];
+        for (b, us) in self.units_of_batch.iter().enumerate() {
+            anyhow::ensure!(us.len() == s, "batch {b} size {} != {s}", us.len());
+            for &u in us {
+                anyhow::ensure!(u < self.n_units, "unit {u} out of range");
+                count[u] += 1;
+            }
+        }
+        anyhow::ensure!(count.iter().all(|&c| c > 0), "coverage hole");
+        if !self.is_overlapping {
+            anyhow::ensure!(
+                count.iter().all(|&c| c == 1),
+                "disjoint layout has a duplicated unit"
+            );
+        }
+        Ok(())
+    }
+
+    /// Map a batch to a concrete half-open sample range set for a dataset
+    /// of `n_samples` rows: unit `u` covers
+    /// `[u·n_samples/U, (u+1)·n_samples/U)`. Returns coalesced
+    /// `(start, end)` ranges.
+    pub fn sample_ranges(&self, b: usize, n_samples: usize) -> Vec<(usize, usize)> {
+        let u_total = self.n_units;
+        let mut ranges: Vec<(usize, usize)> = self.units_of_batch[b]
+            .iter()
+            .map(|&u| (u * n_samples / u_total, (u + 1) * n_samples / u_total))
+            .collect();
+        ranges.sort_unstable();
+        // Coalesce adjacent ranges.
+        let mut out: Vec<(usize, usize)> = Vec::with_capacity(ranges.len());
+        for (s, e) in ranges {
+            match out.last_mut() {
+                Some(last) if last.1 == s => last.1 = e,
+                _ => out.push((s, e)),
+            }
+        }
+        out
+    }
+}
+
+/// Disjoint partition into `n_batches` equal batches (`n_batches`
+/// must divide `n_units`). Batch `b` = units `[b·s, (b+1)·s)`.
+pub fn disjoint(n_units: usize, n_batches: usize) -> anyhow::Result<DataLayout> {
+    anyhow::ensure!(n_batches >= 1 && n_batches <= n_units, "need 1 <= B <= U");
+    anyhow::ensure!(
+        n_units % n_batches == 0,
+        "disjoint layout needs B | U (got U={n_units}, B={n_batches})"
+    );
+    let s = n_units / n_batches;
+    let units_of_batch =
+        (0..n_batches).map(|b| (b * s..(b + 1) * s).collect()).collect();
+    Ok(DataLayout { n_units, units_of_batch, is_overlapping: false })
+}
+
+/// Overlapping cyclic layout: `n_batches` windows of `batch_units` units,
+/// window `b` starting at `b·(U/n_batches)` and wrapping modulo `U`.
+/// With `n_batches = U` and `batch_units = s` this is the classic
+/// shift-by-one overlapped placement; total storage equals the disjoint
+/// layout with the same per-worker batch size.
+pub fn overlapping(
+    n_units: usize,
+    n_batches: usize,
+    batch_units: usize,
+) -> anyhow::Result<DataLayout> {
+    anyhow::ensure!(n_batches >= 1, "need B >= 1");
+    anyhow::ensure!(
+        batch_units >= 1 && batch_units <= n_units,
+        "batch size must be in [1, U]"
+    );
+    anyhow::ensure!(
+        n_units % n_batches == 0,
+        "cyclic layout needs B | U (got U={n_units}, B={n_batches})"
+    );
+    let stride = n_units / n_batches;
+    // Coverage requires each stride gap be covered by the window length.
+    anyhow::ensure!(
+        batch_units >= stride,
+        "windows of {batch_units} units with stride {stride} leave holes"
+    );
+    let units_of_batch = (0..n_batches)
+        .map(|b| {
+            let mut us: Vec<usize> =
+                (0..batch_units).map(|k| (b * stride + k) % n_units).collect();
+            us.sort_unstable();
+            us
+        })
+        .collect();
+    Ok(DataLayout { n_units, units_of_batch, is_overlapping: true })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn disjoint_partition() {
+        let l = disjoint(24, 4).unwrap();
+        l.validate().unwrap();
+        assert_eq!(l.batch_units(), 6);
+        assert_eq!(l.units_of_batch[1], (6..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn disjoint_rejects_bad_b() {
+        assert!(disjoint(10, 3).is_err());
+        assert!(disjoint(4, 8).is_err());
+    }
+
+    #[test]
+    fn overlapping_wraps_and_covers() {
+        // 8 units, 8 windows of 3: batch 7 wraps to {7, 0, 1}.
+        let l = overlapping(8, 8, 3).unwrap();
+        l.validate().unwrap();
+        assert_eq!(l.units_of_batch[7], vec![0, 1, 7]);
+    }
+
+    #[test]
+    fn overlapping_detects_holes() {
+        // stride 4, window 3 → units 3 mod 4 uncovered.
+        assert!(overlapping(8, 2, 3).is_err());
+    }
+
+    #[test]
+    fn sample_ranges_coalesce() {
+        let l = disjoint(4, 2).unwrap();
+        // batch 0 = units {0,1} → one coalesced range covering half.
+        assert_eq!(l.sample_ranges(0, 100), vec![(0, 50)]);
+        assert_eq!(l.sample_ranges(1, 100), vec![(50, 100)]);
+        let o = overlapping(4, 4, 2).unwrap();
+        // batch 3 = units {0, 3} → two ranges.
+        assert_eq!(o.sample_ranges(3, 100), vec![(0, 25), (75, 100)]);
+    }
+
+    #[test]
+    fn prop_disjoint_layout_valid() {
+        testkit::check("disjoint-valid", 200, |g| {
+            let u = g.usize_in(1, 64);
+            let divisors: Vec<usize> = (1..=u).filter(|b| u % b == 0).collect();
+            let b = *g.pick(&divisors);
+            let l = disjoint(u, b).unwrap();
+            l.validate().unwrap();
+            // Ranges tile [0, n_samples).
+            let n_samples = g.usize_in(u, 10_000);
+            let mut all: Vec<(usize, usize)> =
+                (0..b).flat_map(|i| l.sample_ranges(i, n_samples)).collect();
+            all.sort_unstable();
+            let mut pos = 0;
+            for (s, e) in all {
+                assert_eq!(s, pos);
+                pos = e;
+            }
+            assert_eq!(pos, n_samples);
+        });
+    }
+
+    #[test]
+    fn prop_overlapping_coverage() {
+        testkit::check("overlap-coverage", 200, |g| {
+            let u = g.usize_in(2, 48);
+            let divisors: Vec<usize> = (1..=u).filter(|b| u % b == 0).collect();
+            let b = *g.pick(&divisors);
+            let stride = u / b;
+            let size = g.usize_in(stride.min(u), u);
+            let l = overlapping(u, b, size).unwrap();
+            l.validate().unwrap();
+        });
+    }
+}

@@ -1,0 +1,223 @@
+//! Micro-benchmark harness (a `criterion` stand-in for the offline
+//! environment), used by every file in `rust/benches/` with
+//! `harness = false`.
+//!
+//! Methodology: warm up until the clock stabilizes, then run timed
+//! batches until a minimum measurement time is reached; report median,
+//! mean, and MAD over per-iteration times, plus optional throughput.
+//! Output is a Markdown table (stdout) and an optional CSV file so the
+//! experiment harness can diff runs across optimization iterations.
+
+use crate::util::stats::Samples;
+use crate::util::table::Table;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Benchmark id.
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Median absolute deviation, seconds.
+    pub mad_s: f64,
+    /// Iterations measured.
+    pub iters: u64,
+    /// Optional items/s given a per-iteration item count.
+    pub throughput: Option<f64>,
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Warmup time before measurement.
+    pub warmup: Duration,
+    /// Minimum total measured time.
+    pub measure: Duration,
+    /// Maximum recorded sample count (batches).
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1200),
+            max_samples: 200,
+        }
+    }
+}
+
+/// A suite of benchmarks producing one results table.
+pub struct Suite {
+    title: String,
+    cfg: BenchConfig,
+    results: Vec<Measurement>,
+}
+
+impl Suite {
+    /// New suite (title is the table heading).
+    pub fn new(title: &str) -> Self {
+        // Fast mode for CI smoke runs: BATCHREP_BENCH_FAST=1.
+        let cfg = if std::env::var("BATCHREP_BENCH_FAST").is_ok() {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(80),
+                max_samples: 30,
+            }
+        } else {
+            BenchConfig::default()
+        };
+        Self { title: title.to_string(), cfg, results: Vec::new() }
+    }
+
+    /// Benchmark a closure; `items_per_iter` (if nonzero) adds a
+    /// throughput column.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, items_per_iter: u64, mut f: F) {
+        let m = run_bench(name, self.cfg, items_per_iter, &mut f);
+        eprintln!(
+            "  {:<42} median {:>12}  mean {:>12}  ±{:>10}{}",
+            m.name,
+            fmt_time(m.median_s),
+            fmt_time(m.mean_s),
+            fmt_time(m.mad_s),
+            m.throughput
+                .map(|t| format!("  {:.3e} items/s", t))
+                .unwrap_or_default()
+        );
+        self.results.push(m);
+    }
+
+    /// Render the results table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &self.title,
+            &["benchmark", "median", "mean", "mad", "iters", "throughput/s"],
+        );
+        for m in &self.results {
+            t.row(vec![
+                m.name.clone(),
+                fmt_time(m.median_s),
+                fmt_time(m.mean_s),
+                fmt_time(m.mad_s),
+                m.iters.to_string(),
+                m.throughput.map(|x| format!("{x:.3e}")).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+
+    /// Print the table and persist CSV under `results/bench/`.
+    pub fn finish(self) {
+        let t = self.table();
+        t.print();
+        let stem: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let dir = std::path::Path::new("results/bench");
+        if let Err(e) = t.write_to(dir, &stem) {
+            eprintln!("warn: could not write bench csv: {e}");
+        }
+    }
+}
+
+fn run_bench<F: FnMut()>(
+    name: &str,
+    cfg: BenchConfig,
+    items_per_iter: u64,
+    f: &mut F,
+) -> Measurement {
+    // Warmup, and discover a batch size that runs ≥ ~50 µs so that timer
+    // overhead is negligible.
+    let mut batch = 1u64;
+    let warm_end = Instant::now() + cfg.warmup;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed();
+        if Instant::now() >= warm_end && dt >= Duration::from_micros(20) {
+            break;
+        }
+        if dt < Duration::from_micros(50) && batch < (1 << 30) {
+            batch *= 2;
+        }
+    }
+
+    let mut per_iter = Samples::new();
+    let measure_end = Instant::now() + cfg.measure;
+    let mut total_iters = 0u64;
+    while Instant::now() < measure_end && per_iter.len() < cfg.max_samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        per_iter.push(dt / batch as f64);
+        total_iters += batch;
+    }
+
+    let median = per_iter.median();
+    let mean = per_iter.mean();
+    let mut devs = Samples::new();
+    for &x in per_iter.raw() {
+        devs.push((x - median).abs());
+    }
+    let mad = devs.median();
+    Measurement {
+        name: name.to_string(),
+        median_s: median,
+        mean_s: mean,
+        mad_s: mad,
+        iters: total_iters,
+        throughput: (items_per_iter > 0).then(|| items_per_iter as f64 / median),
+    }
+}
+
+/// Human time formatting (ns/µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("BATCHREP_BENCH_FAST", "1");
+        let mut suite = Suite::new("selftest");
+        let mut acc = 0u64;
+        suite.bench("wrapping-mul", 1, || {
+            acc = black_box(acc.wrapping_mul(6364136223846793005).wrapping_add(1));
+        });
+        let t = suite.table();
+        assert_eq!(t.rows.len(), 1);
+        let m = &suite.results[0];
+        assert!(m.median_s > 0.0 && m.median_s < 1e-3);
+        assert!(m.iters > 0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).contains("ns"));
+        assert!(fmt_time(5e-6).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).contains(" s"));
+    }
+}

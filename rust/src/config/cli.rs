@@ -1,0 +1,148 @@
+//! Command-line argument parser (a `clap` stand-in).
+//!
+//! Grammar: `batchrep <subcommand> [positional...] [--key value]...
+//! [--flag]`. `--key=value` is also accepted. The parser collects
+//! positionals and a key→value map; subcommand code pulls typed values
+//! with [`Args::get`] / [`Args::flag`] and finishes with
+//! [`Args::finish`] to reject unknown options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order (subcommand first).
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                anyhow::ensure!(!name.is_empty(), "bare '--' not supported");
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positionals.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's own command line.
+    pub fn from_env() -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// The subcommand (first positional), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positionals.first().map(String::as_str)
+    }
+
+    /// Typed option lookup; `None` when absent.
+    pub fn get<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.borrow_mut().push(key.to_string());
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {raw}: {e}")),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get(key)?.unwrap_or(default))
+    }
+
+    /// Boolean flag presence (`--foo`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on any option/flag that no subcommand consumed.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.options.keys() {
+            anyhow::ensure!(consumed.contains(k), "unknown option --{k}");
+        }
+        for f in &self.flags {
+            anyhow::ensure!(consumed.contains(f), "unknown flag --{f}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("experiment fig2 --trials 5000 --out results");
+        assert_eq!(a.subcommand(), Some("experiment"));
+        assert_eq!(a.positionals[1], "fig2");
+        assert_eq!(a.get::<u64>("trials").unwrap(), Some(5000));
+        assert_eq!(a.get::<String>("out").unwrap().unwrap(), "results");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse("run --seed=9 --verbose");
+        assert_eq!(a.get::<u64>("seed").unwrap(), Some(9));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b value");
+        assert!(a.flag("a"));
+        assert_eq!(a.get::<String>("b").unwrap().unwrap(), "value");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse("x --mystery 3");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_type_reported() {
+        let a = parse("x --n notanumber");
+        assert!(a.get::<u64>("n").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or::<u64>("trials", 77).unwrap(), 77);
+    }
+}

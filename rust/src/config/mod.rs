@@ -1,0 +1,222 @@
+//! Configuration system: typed [`SystemConfig`], a TOML-subset file
+//! format ([`toml`]), and a CLI argument parser ([`cli`]).
+//!
+//! Precedence: built-in defaults < config file (`--config path`) <
+//! command-line overrides (`--key value`).
+
+pub mod cli;
+pub mod toml;
+
+use crate::assignment::Policy;
+use crate::dist::{BatchModel, ServiceSpec};
+use toml::{TomlDoc, TomlValue};
+
+/// Full configuration of a System1 run (simulated or live).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Number of workers `N`.
+    pub n_workers: usize,
+    /// Number of batches `B` (must divide `N` for balanced policies).
+    pub n_batches: usize,
+    /// Batch→worker assignment policy.
+    pub policy: Policy,
+    /// Use an overlapping (cyclic) sample→batch layout instead of the
+    /// disjoint partition.
+    pub overlapping: bool,
+    /// Per-unit service-time distribution (compact spec string, e.g.
+    /// `sexp:1.0,0.2`).
+    pub service: ServiceSpec,
+    /// Batch service composition model.
+    pub batch_model: BatchModel,
+    /// Cancel sibling replicas on batch completion (live + engine).
+    pub cancellation: bool,
+    /// Root RNG seed.
+    pub seed: u64,
+    /// Monte-Carlo / engine trial count.
+    pub trials: u64,
+    /// Live runtime: artifacts directory (AOT HLO text + manifest).
+    pub artifacts_dir: String,
+    /// Live runtime: seconds of injected sleep per unit of sampled
+    /// service time (scales the abstract service times to wall clock).
+    pub time_scale: f64,
+    /// Live runtime: compute kernel to run per batch (`grad` | `mapsum`).
+    pub kernel: String,
+    /// Live runtime: model feature dimension.
+    pub dim: usize,
+    /// Live runtime: total dataset rows.
+    pub n_samples: usize,
+    /// Live runtime: training steps (rounds of the job).
+    pub steps: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            n_workers: 8,
+            n_batches: 4,
+            policy: Policy::BalancedDisjoint,
+            overlapping: false,
+            service: ServiceSpec::shifted_exp(1.0, 0.2),
+            batch_model: BatchModel::SizeScaled,
+            cancellation: true,
+            seed: 42,
+            trials: 100_000,
+            artifacts_dir: "artifacts".to_string(),
+            time_scale: 0.02,
+            kernel: "grad".to_string(),
+            dim: 64,
+            n_samples: 4096,
+            steps: 20,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Load from a TOML-subset file (missing keys keep defaults).
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read config {}: {e}", path.display()))?;
+        let doc = toml::parse(&text)?;
+        let mut cfg = SystemConfig::default();
+        cfg.apply_doc(&doc)?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed document (`[system]` section and root keys).
+    pub fn apply_doc(&mut self, doc: &TomlDoc) -> anyhow::Result<()> {
+        for section in ["", "system"] {
+            if let Some(map) = doc.get(section) {
+                for (k, v) in map {
+                    self.apply_kv(k, v)
+                        .map_err(|e| anyhow::anyhow!("key '{k}': {e}"))?;
+                }
+            }
+        }
+        self.validate()
+    }
+
+    /// Apply a single `key = value` pair.
+    pub fn apply_kv(&mut self, key: &str, v: &TomlValue) -> anyhow::Result<()> {
+        let want_i = || v.as_i64().ok_or_else(|| anyhow::anyhow!("expected integer"));
+        let want_f = || v.as_f64().ok_or_else(|| anyhow::anyhow!("expected number"));
+        let want_b = || v.as_bool().ok_or_else(|| anyhow::anyhow!("expected bool"));
+        let want_s = || {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("expected string"))
+        };
+        match key {
+            "n_workers" => self.n_workers = want_i()? as usize,
+            "n_batches" => self.n_batches = want_i()? as usize,
+            "policy" => self.policy = Policy::parse(&want_s()?)?,
+            "overlapping" => self.overlapping = want_b()?,
+            "service" => self.service = ServiceSpec::parse(&want_s()?)?,
+            "batch_model" => self.batch_model = BatchModel::parse(&want_s()?)?,
+            "cancellation" => self.cancellation = want_b()?,
+            "seed" => self.seed = want_i()? as u64,
+            "trials" => self.trials = want_i()? as u64,
+            "artifacts_dir" => self.artifacts_dir = want_s()?,
+            "time_scale" => self.time_scale = want_f()?,
+            "kernel" => self.kernel = want_s()?,
+            "dim" => self.dim = want_i()? as usize,
+            "n_samples" => self.n_samples = want_i()? as usize,
+            "steps" => self.steps = want_i()? as u64,
+            other => anyhow::bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_workers >= 1, "n_workers must be >= 1");
+        anyhow::ensure!(
+            self.n_batches >= 1 && self.n_batches <= self.n_workers,
+            "need 1 <= n_batches <= n_workers"
+        );
+        anyhow::ensure!(self.time_scale > 0.0, "time_scale must be positive");
+        anyhow::ensure!(
+            matches!(self.kernel.as_str(), "grad" | "mapsum"),
+            "kernel must be 'grad' or 'mapsum'"
+        );
+        anyhow::ensure!(self.dim >= 1 && self.n_samples >= self.n_workers, "bad dims");
+        Ok(())
+    }
+
+    /// Build the simulation [`crate::des::Scenario`] this config
+    /// describes.
+    pub fn scenario(&self) -> anyhow::Result<crate::des::Scenario> {
+        let mut rng = crate::util::rng::Rng::new(self.seed ^ 0x5EED);
+        let assignment = self.policy.assign(self.n_workers, self.n_batches, &mut rng)?;
+        let eff_b = assignment.n_batches;
+        let layout = if self.overlapping {
+            let stride = self.n_workers / eff_b;
+            crate::batching::overlapping(self.n_workers, eff_b, stride)?
+        } else {
+            crate::batching::disjoint(self.n_workers, eff_b)?
+        };
+        crate::des::Scenario::new(
+            layout,
+            assignment,
+            crate::dist::BatchService { spec: self.service.clone(), model: self.batch_model },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        SystemConfig::default().validate().unwrap();
+        SystemConfig::default().scenario().unwrap();
+    }
+
+    #[test]
+    fn apply_doc_overrides() {
+        let doc = toml::parse(
+            r#"
+            seed = 7
+            [system]
+            n_workers = 24
+            n_batches = 6
+            policy = "full_diversity"
+            service = "exp:2.0"
+            overlapping = false
+            "#,
+        )
+        .unwrap();
+        let mut cfg = SystemConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.n_workers, 24);
+        assert_eq!(cfg.seed, 7);
+        assert!(matches!(cfg.policy, Policy::FullDiversity));
+        assert!(matches!(cfg.service, ServiceSpec::Exp { .. }));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = toml::parse("nonsense = 1").unwrap();
+        let mut cfg = SystemConfig::default();
+        assert!(cfg.apply_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn invalid_combination_rejected() {
+        let doc = toml::parse("n_workers = 2\nn_batches = 5").unwrap();
+        let mut cfg = SystemConfig::default();
+        assert!(cfg.apply_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("batchrep_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.toml");
+        std::fs::write(&p, "n_workers = 12\nn_batches = 3\nservice = \"sexp:1.0,0.5\"\n")
+            .unwrap();
+        let cfg = SystemConfig::from_file(&p).unwrap();
+        assert_eq!(cfg.n_workers, 12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

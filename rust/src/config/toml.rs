@@ -1,0 +1,232 @@
+//! TOML-subset parser (stand-in for `toml`/`serde` in the offline
+//! environment).
+//!
+//! Supported grammar — everything the config files need, nothing more:
+//! `[section]` headers, `key = value` pairs, `#` comments, values of
+//! type integer, float, boolean, quoted string, and flat arrays of
+//! those. Keys outside a section land in the `""` section.
+
+use std::collections::BTreeMap;
+
+/// A TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// As integer (accepts integral floats).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            TomlValue::Float(x) if x.fract() == 0.0 => Some(*x as i64),
+            _ => None,
+        }
+    }
+
+    /// As float (accepts integers).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(x) => Some(*x as f64),
+            TomlValue::Float(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// As boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As array.
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section → key → value.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> anyhow::Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            anyhow::ensure!(!name.is_empty(), "line {}: empty section name", lineno + 1);
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+        let value = parse_value(value.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<TomlValue> {
+    anyhow::ensure!(!s.is_empty(), "empty value");
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        anyhow::ensure!(!inner.contains('"'), "embedded quote in string");
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = split_top_level(inner)?
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    anyhow::bail!("cannot parse value '{s}'")
+}
+
+/// Split a flat array body on commas, respecting quoted strings.
+fn split_top_level(s: &str) -> anyhow::Result<Vec<&str>> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            '[' | ']' if !in_str => anyhow::bail!("nested arrays unsupported"),
+            _ => {}
+        }
+    }
+    anyhow::ensure!(!in_str, "unterminated string in array");
+    out.push(&s[start..]);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            r#"
+            # top comment
+            seed = 42
+            [system]
+            n_workers = 24        # inline comment
+            time_scale = 0.001
+            policy = "balanced_disjoint"
+            cancel = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["seed"].as_i64(), Some(42));
+        assert_eq!(doc["system"]["n_workers"].as_i64(), Some(24));
+        assert_eq!(doc["system"]["time_scale"].as_f64(), Some(0.001));
+        assert_eq!(doc["system"]["policy"].as_str(), Some("balanced_disjoint"));
+        assert_eq!(doc["system"]["cancel"].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse(r#"xs = [1, 2, 3]
+                           ys = ["a", "b"]
+                           empty = []"#)
+            .unwrap();
+        let xs = doc[""]["xs"].as_array().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_i64(), Some(3));
+        assert_eq!(doc[""]["ys"].as_array().unwrap()[1].as_str(), Some("b"));
+        assert!(doc[""]["empty"].as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn hash_in_string_is_not_comment() {
+        let doc = parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc[""]["k"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"open").is_err());
+        assert!(parse("k = [1, [2]]").is_err());
+    }
+
+    #[test]
+    fn float_int_coercions() {
+        let doc = parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(doc[""]["a"].as_f64(), Some(3.0));
+        assert_eq!(doc[""]["b"].as_i64(), None);
+        assert_eq!(doc[""]["b"].as_f64(), Some(3.5));
+    }
+}

@@ -1,0 +1,91 @@
+//! Synthetic datasets for the live System1 (the Rust twin of
+//! `python/compile/model.synth_regression`).
+
+use crate::util::rng::Rng;
+
+/// An in-memory regression dataset (row-major features).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Number of rows.
+    pub n_samples: usize,
+    /// Feature dimension.
+    pub dim: usize,
+    /// Row-major `n_samples×dim` features.
+    pub x: Vec<f32>,
+    /// Targets.
+    pub y: Vec<f32>,
+    /// The generating weights (ground truth for convergence checks).
+    pub w_star: Vec<f32>,
+}
+
+impl Dataset {
+    /// `X ~ N(0,1)`, `y = X·w* + noise·ε`, `w* ~ N(0,1)`.
+    pub fn synth_regression(n_samples: usize, dim: usize, noise: f64, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let w_star: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let mut x = Vec::with_capacity(n_samples * dim);
+        let mut y = Vec::with_capacity(n_samples);
+        for _ in 0..n_samples {
+            let row_start = x.len();
+            let mut dot = 0f32;
+            for j in 0..dim {
+                let v = rng.normal() as f32;
+                x.push(v);
+                dot += v * w_star[j];
+            }
+            debug_assert_eq!(x.len() - row_start, dim);
+            y.push(dot + noise as f32 * rng.normal() as f32);
+        }
+        Dataset { n_samples, dim, x, y, w_star }
+    }
+
+    /// Extract the rows covered by `ranges` (half-open, coalesced) into
+    /// a contiguous shard.
+    pub fn shard(&self, ranges: &[(usize, usize)]) -> crate::worker::Shard {
+        let rows: usize = ranges.iter().map(|(s, e)| e - s).sum();
+        let mut x = Vec::with_capacity(rows * self.dim);
+        let mut y = Vec::with_capacity(rows);
+        for &(s, e) in ranges {
+            x.extend_from_slice(&self.x[s * self.dim..e * self.dim]);
+            y.extend_from_slice(&self.y[s..e]);
+        }
+        crate::worker::Shard { rows, dim: self.dim, x, y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = Dataset::synth_regression(100, 8, 0.1, 7);
+        let b = Dataset::synth_regression(100, 8, 0.1, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.x.len(), 800);
+        assert_eq!(a.y.len(), 100);
+        let c = Dataset::synth_regression(100, 8, 0.1, 8);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn targets_follow_w_star() {
+        // With zero noise, y row-wise equals X·w*.
+        let d = Dataset::synth_regression(50, 4, 0.0, 3);
+        for r in 0..50 {
+            let dot: f32 =
+                (0..4).map(|j| d.x[r * 4 + j] * d.w_star[j]).sum();
+            assert!((dot - d.y[r]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn shard_extraction() {
+        let d = Dataset::synth_regression(10, 2, 0.0, 1);
+        let s = d.shard(&[(0, 2), (8, 10)]);
+        assert_eq!(s.rows, 4);
+        assert_eq!(&s.x[0..4], &d.x[0..4]);
+        assert_eq!(&s.x[4..8], &d.x[16..20]);
+        assert_eq!(s.y, vec![d.y[0], d.y[1], d.y[8], d.y[9]]);
+    }
+}

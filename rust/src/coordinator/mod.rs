@@ -1,0 +1,452 @@
+//! The live System1 master (paper Fig. 1): batching unit, batch
+//! assignment unit, dispatcher, aggregation unit, and result generation.
+//!
+//! The master owns the event loop (std threads + mpsc channels; the
+//! offline environment has no tokio — see DESIGN.md §4). A *job* is one
+//! round of the distributed computation (one SGD step, or one map-sum
+//! evaluation). Per job the master:
+//!
+//! 1. samples each worker's straggle from the configured service-time
+//!    distribution (size-dependent batch model, scaled by `time_scale`),
+//! 2. dispatches one replica task per worker (stage-2 assignment),
+//! 3. collects results; the **first** replica of each batch wins, its
+//!    siblings are cancelled (when `cancellation` is on), later arrivals
+//!    count as redundant,
+//! 4. aggregates the winners (gradient/loss sums or map-sum scalars) and
+//!    generates the round's result (SGD weight update),
+//! 5. records completion-time metrics.
+//!
+//! Completion is declared at coverage: for disjoint layouts every batch
+//! must report; overlapping layouts complete as soon as finished
+//! workers' units cover the dataset.
+
+pub mod data;
+
+use crate::assignment::Assignment;
+use crate::batching::DataLayout;
+use crate::config::SystemConfig;
+use crate::dist::BatchService;
+use crate::metrics::{JobRecord, RunMetrics};
+use crate::runtime::GradOut;
+use crate::util::rng::Rng;
+use crate::util::Timer;
+use crate::worker::{
+    spawn_worker, Compute, JobOut, JobSpec, ResultMsg, TaskMsg, WorkerHandle,
+};
+use data::Dataset;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// Which compute backend worker threads construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT PJRT artifacts (requires `make artifacts`).
+    Pjrt,
+    /// Pure-Rust mock (tests; no artifacts needed).
+    Mock,
+}
+
+/// Aggregated output of one job round.
+#[derive(Debug, Clone)]
+pub enum RoundResult {
+    /// Gradient round: summed gradient + loss over the dataset.
+    Grad(GradOut),
+    /// Map-sum round: the scalar total.
+    MapSum(f32),
+}
+
+/// Report of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainingReport {
+    /// Mean loss per step (normalized by sample count).
+    pub loss_curve: Vec<f64>,
+    /// Final weights.
+    pub final_w: Vec<f32>,
+    /// Distance to the generating weights (synthetic data).
+    pub dist_to_w_star: f64,
+    /// Per-job metrics.
+    pub metrics: RunMetrics,
+}
+
+/// The live coordinator.
+pub struct Coordinator {
+    cfg: SystemConfig,
+    assignment: Assignment,
+    layout: DataLayout,
+    service: BatchService,
+    dataset: Arc<Dataset>,
+    workers: Vec<WorkerHandle>,
+    results: Receiver<ResultMsg>,
+    rng: Rng,
+    next_job: u64,
+    /// Metrics across all jobs run by this coordinator.
+    pub metrics: RunMetrics,
+}
+
+impl Coordinator {
+    /// Build the full System1: batching (stage 1), assignment (stage 2),
+    /// data placement, and worker spawn.
+    pub fn new(cfg: SystemConfig, backend: Backend) -> anyhow::Result<Coordinator> {
+        cfg.validate()?;
+        let mut rng = Rng::new(cfg.seed);
+        let assignment = cfg.policy.assign(cfg.n_workers, cfg.n_batches, &mut rng)?;
+        let eff_b = assignment.n_batches;
+        let layout = if cfg.overlapping {
+            crate::batching::overlapping(cfg.n_workers, eff_b, cfg.n_workers / eff_b)?
+        } else {
+            crate::batching::disjoint(cfg.n_workers, eff_b)?
+        };
+        layout.validate()?;
+        let dataset = Arc::new(Dataset::synth_regression(
+            cfg.n_samples,
+            cfg.dim,
+            0.05,
+            cfg.seed ^ 0xDA7A,
+        ));
+
+        let (res_tx, res_rx): (Sender<ResultMsg>, Receiver<ResultMsg>) =
+            std::sync::mpsc::channel();
+        let mut workers = Vec::with_capacity(cfg.n_workers);
+        for w in 0..cfg.n_workers {
+            let batch = assignment.batch_of_worker[w];
+            let ranges = layout.sample_ranges(batch, cfg.n_samples);
+            let shard = dataset.shard(&ranges);
+            let artifact_dir = std::path::PathBuf::from(&cfg.artifacts_dir);
+            let handle = match backend {
+                Backend::Mock => spawn_worker(
+                    w,
+                    shard,
+                    || Ok(Box::new(crate::worker::MockCompute) as Box<dyn Compute>),
+                    res_tx.clone(),
+                ),
+                Backend::Pjrt => spawn_worker(
+                    w,
+                    shard,
+                    move || {
+                        Ok(Box::new(crate::worker::PjrtCompute::new(&artifact_dir)?)
+                            as Box<dyn Compute>)
+                    },
+                    res_tx.clone(),
+                ),
+            };
+            workers.push(handle);
+        }
+
+        let service = BatchService { spec: cfg.service.clone(), model: cfg.batch_model };
+        Ok(Coordinator {
+            rng,
+            assignment,
+            layout,
+            service,
+            dataset,
+            workers,
+            results: res_rx,
+            next_job: 0,
+            metrics: RunMetrics::new(),
+            cfg,
+        })
+    }
+
+    /// The dataset in use.
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    /// The effective assignment.
+    pub fn assignment(&self) -> &Assignment {
+        &self.assignment
+    }
+
+    /// Run one job round: dispatch to every worker, first replica per
+    /// batch wins, aggregate the winners.
+    pub fn run_round(&mut self, spec: JobSpec) -> anyhow::Result<RoundResult> {
+        let job_id = self.next_job;
+        self.next_job += 1;
+        let n = self.cfg.n_workers;
+        let b = self.assignment.n_batches;
+        let s_units = self.layout.batch_units() as u64;
+
+        // Per-batch cancellation tokens.
+        let cancels: Vec<Arc<AtomicBool>> =
+            (0..b).map(|_| Arc::new(AtomicBool::new(false))).collect();
+
+        // Dispatch: one replica per worker with a sampled straggle.
+        let timer = Timer::start();
+        let mut max_injected_winner = 0f64;
+        for w in 0..n {
+            let batch = self.assignment.batch_of_worker[w];
+            let delay =
+                self.cfg.time_scale * self.service.sample_batch(s_units, &mut self.rng);
+            self.workers[w]
+                .tx
+                .send(TaskMsg {
+                    job_id,
+                    batch_id: batch,
+                    spec: spec.clone(),
+                    delay_s: delay,
+                    cancel: cancels[batch].clone(),
+                })
+                .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))?;
+        }
+
+        // Collect. Coverage-complete when all data units are covered by
+        // winning batches; the round ends for bookkeeping when every
+        // worker has reported (cancelled workers report quickly).
+        let n_units = self.layout.n_units;
+        let mut unit_covered = vec![false; n_units];
+        let mut units_left = n_units;
+        let mut batch_won = vec![false; b];
+        let mut reported = 0usize;
+        let mut redundant = 0u64;
+        let mut cancelled = 0u64;
+        let mut completion_wall = None;
+        let mut agg: Option<RoundResult> = None;
+
+        while reported < n {
+            let msg = self
+                .results
+                .recv_timeout(std::time::Duration::from_secs(300))
+                .map_err(|e| anyhow::anyhow!("worker result wait failed: {e}"))?;
+            if msg.job_id != job_id {
+                // Stale result from a previous (already-completed) round.
+                continue;
+            }
+            reported += 1;
+            match msg.out {
+                None => cancelled += 1,
+                Some(out) => {
+                    if batch_won[msg.batch_id] {
+                        redundant += 1;
+                        continue;
+                    }
+                    batch_won[msg.batch_id] = true;
+                    if self.cfg.cancellation {
+                        cancels[msg.batch_id].store(true, Ordering::Relaxed);
+                    }
+                    // Aggregation unit: fold the winner in.
+                    agg = Some(match (agg.take(), out) {
+                        (None, JobOut::Grad(g)) => RoundResult::Grad(g),
+                        (None, JobOut::MapSum(v)) => RoundResult::MapSum(v),
+                        (Some(RoundResult::Grad(mut acc)), JobOut::Grad(g)) => {
+                            for (a, x) in acc.grad.iter_mut().zip(&g.grad) {
+                                *a += x;
+                            }
+                            acc.loss += g.loss;
+                            RoundResult::Grad(acc)
+                        }
+                        (Some(RoundResult::MapSum(acc)), JobOut::MapSum(v)) => {
+                            RoundResult::MapSum(acc + v)
+                        }
+                        _ => anyhow::bail!("mixed job outputs in one round"),
+                    });
+                    max_injected_winner = max_injected_winner.max(msg.injected_s);
+                    for &u in &self.layout.units_of_batch[msg.batch_id] {
+                        if !unit_covered[u] {
+                            unit_covered[u] = true;
+                            units_left -= 1;
+                        }
+                    }
+                    if units_left == 0 && completion_wall.is_none() {
+                        completion_wall = Some(timer.secs());
+                        if self.cfg.cancellation {
+                            // Overlapping layouts: remaining batches are
+                            // moot once coverage is reached.
+                            for c in &cancels {
+                                c.store(true, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let completion = completion_wall
+            .ok_or_else(|| anyhow::anyhow!("round ended without coverage (all replicas cancelled?)"))?;
+        self.metrics.push(JobRecord {
+            job_id,
+            completion_s: completion,
+            injected_s: max_injected_winner,
+            dispatched: n as u64,
+            redundant,
+            cancelled,
+        });
+        agg.ok_or_else(|| anyhow::anyhow!("no results aggregated"))
+    }
+
+    /// Run distributed SGD for `steps` rounds with learning rate `lr`.
+    pub fn run_training(&mut self, steps: u64, lr: f64) -> anyhow::Result<TrainingReport> {
+        // Note on semantics: replication here provides *straggler
+        // tolerance for exact computation* — each batch's winning
+        // replica computes the same gradient sum over a disjoint
+        // partition, so every step is exactly full-batch GD, independent
+        // of which replicas win. (With overlapping layouts the covered
+        // multiset can overcount units; the paper's System1 aggregates
+        // batch results, so overlapping batches are only used with
+        // coverage-aware jobs — for gradients we restrict to disjoint.)
+        anyhow::ensure!(
+            !self.layout.is_overlapping,
+            "gradient training requires a disjoint layout (exact aggregation)"
+        );
+        let dim = self.cfg.dim;
+        let n_samples = self.cfg.n_samples as f64;
+        let mut w = vec![0f32; dim];
+        let mut loss_curve = Vec::with_capacity(steps as usize);
+        for _ in 0..steps {
+            let spec = JobSpec::Grad { w: Arc::new(w.clone()) };
+            match self.run_round(spec)? {
+                RoundResult::Grad(out) => {
+                    for (wi, gi) in w.iter_mut().zip(&out.grad) {
+                        *wi -= (lr * (*gi as f64) / n_samples) as f32;
+                    }
+                    loss_curve.push(out.loss as f64 / n_samples);
+                }
+                _ => anyhow::bail!("unexpected round result"),
+            }
+        }
+        let dist: f64 = w
+            .iter()
+            .zip(&self.dataset.w_star)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        Ok(TrainingReport {
+            loss_curve,
+            final_w: w,
+            dist_to_w_star: dist,
+            metrics: self.metrics.clone(),
+        })
+    }
+
+    /// Run one distributed map-sum evaluation.
+    pub fn run_mapsum(&mut self, a: Vec<f32>, b: Vec<f32>) -> anyhow::Result<f32> {
+        anyhow::ensure!(
+            !self.layout.is_overlapping,
+            "map-sum aggregation requires a disjoint layout"
+        );
+        let spec = JobSpec::MapSum { a: Arc::new(a), b: Arc::new(b) };
+        match self.run_round(spec)? {
+            RoundResult::MapSum(v) => Ok(v),
+            _ => anyhow::bail!("unexpected round result"),
+        }
+    }
+
+    /// Shut down all workers.
+    pub fn shutdown(self) {
+        for h in self.workers {
+            h.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::Policy;
+    use crate::dist::ServiceSpec;
+
+    fn test_cfg(n: usize, b: usize) -> SystemConfig {
+        SystemConfig {
+            n_workers: n,
+            n_batches: b,
+            policy: Policy::BalancedDisjoint,
+            service: ServiceSpec::shifted_exp(20.0, 0.05),
+            time_scale: 0.02,
+            n_samples: 64,
+            dim: 4,
+            seed: 11,
+            ..SystemConfig::default()
+        }
+    }
+
+    #[test]
+    fn mock_training_converges() {
+        let mut c = Coordinator::new(test_cfg(4, 2), Backend::Mock).unwrap();
+        let report = c.run_training(60, 0.5).unwrap();
+        c.shutdown();
+        assert_eq!(report.loss_curve.len(), 60);
+        assert!(
+            report.loss_curve[59] < report.loss_curve[0] / 10.0,
+            "loss did not drop: {:?}",
+            &report.loss_curve[..3]
+        );
+        assert!(report.dist_to_w_star < 0.2, "dist {}", report.dist_to_w_star);
+    }
+
+    #[test]
+    fn aggregation_is_exact_regardless_of_winners() {
+        // Replication changes *who* computes, not *what* is computed:
+        // the aggregated gradient must equal the mock oracle on the
+        // whole dataset, for any B.
+        for b in [1usize, 2, 4] {
+            let mut c = Coordinator::new(test_cfg(4, b), Backend::Mock).unwrap();
+            let w = vec![0.25f32, -0.5, 1.0, 0.0];
+            let spec = JobSpec::Grad { w: Arc::new(w.clone()) };
+            let out = match c.run_round(spec).unwrap() {
+                RoundResult::Grad(g) => g,
+                _ => panic!(),
+            };
+            // Oracle: single shard over everything.
+            let full = c.dataset().shard(&[(0, 64)]);
+            let mut oracle = crate::worker::MockCompute;
+            let expect = match oracle
+                .run(&full, &JobSpec::Grad { w: Arc::new(w) })
+                .unwrap()
+            {
+                JobOut::Grad(g) => g,
+                _ => panic!(),
+            };
+            c.shutdown();
+            for (a, e) in out.grad.iter().zip(&expect.grad) {
+                assert!((a - e).abs() < 1e-2 * e.abs().max(1.0), "B={b}: {a} vs {e}");
+            }
+            assert!((out.loss - expect.loss).abs() < 1e-2 * expect.loss.max(1.0));
+        }
+    }
+
+    #[test]
+    fn mapsum_round_matches_oracle() {
+        let mut c = Coordinator::new(test_cfg(4, 4), Backend::Mock).unwrap();
+        let a = vec![0.1f32; 4];
+        let b = vec![0.2f32; 4];
+        let got = c.run_mapsum(a.clone(), b.clone()).unwrap();
+        let full = c.dataset().shard(&[(0, 64)]);
+        let mut oracle = crate::worker::MockCompute;
+        let expect = match oracle
+            .run(&full, &JobSpec::MapSum { a: Arc::new(a), b: Arc::new(b) })
+            .unwrap()
+        {
+            JobOut::MapSum(v) => v,
+            _ => panic!(),
+        };
+        c.shutdown();
+        assert!((got - expect).abs() < 1e-3, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn metrics_account_replicas() {
+        // B=1, N=4: one batch, 4 replicas — exactly one winner; the
+        // other three are cancelled or redundant.
+        let mut c = Coordinator::new(test_cfg(4, 1), Backend::Mock).unwrap();
+        let spec = JobSpec::Grad { w: Arc::new(vec![0.0; 4]) };
+        c.run_round(spec).unwrap();
+        let recs = c.metrics.records().to_vec();
+        c.shutdown();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].dispatched, 4);
+        assert_eq!(recs[0].redundant + recs[0].cancelled, 3);
+    }
+
+    #[test]
+    fn full_parallelism_has_no_redundancy() {
+        let mut cfg = test_cfg(4, 4);
+        cfg.policy = Policy::FullParallelism;
+        let mut c = Coordinator::new(cfg, Backend::Mock).unwrap();
+        let spec = JobSpec::Grad { w: Arc::new(vec![0.0; 4]) };
+        c.run_round(spec).unwrap();
+        let recs = c.metrics.records().to_vec();
+        c.shutdown();
+        assert_eq!(recs[0].redundant, 0);
+        assert_eq!(recs[0].cancelled, 0);
+    }
+}

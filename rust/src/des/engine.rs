@@ -1,0 +1,590 @@
+//! Event-driven simulator of System1.
+//!
+//! Beyond the Monte-Carlo sampler, the engine models the *mechanics* the
+//! closed forms abstract away:
+//!
+//! * **replica cancellation** — when the first replica of a batch
+//!   finishes, its siblings are cancelled; this never changes the
+//!   completion time but determines the *cost* (busy worker-seconds),
+//!   the redundancy bill the paper alludes to;
+//! * **speculative relaunch** — the reactive MapReduce-style baseline:
+//!   run one primary per batch, and only if it has not finished by a
+//!   deadline launch the backups. Comparing it against upfront
+//!   replication quantifies what the paper's proactive redundancy buys;
+//! * **heterogeneous workers** and **straggler traces** via the
+//!   scenario's speed factors and service spec.
+
+use super::Scenario;
+use crate::util::rng::Rng;
+use crate::util::stats::Welford;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Redundancy activation strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Redundancy {
+    /// All replicas start at t = 0 (the paper's model).
+    Upfront,
+    /// One primary per batch at t = 0; backups launch at
+    /// `deadline_factor × E[batch service]` if the batch is unfinished.
+    Speculative {
+        /// Multiple of the mean batch service time to wait before
+        /// launching backups.
+        deadline_factor: f64,
+    },
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Cancel sibling replicas when a batch completes.
+    pub cancellation: bool,
+    /// Redundancy activation strategy.
+    pub redundancy: Redundancy,
+    /// Failure injection: each launched replica crash-stops (silently,
+    /// producing nothing) with this probability. If *every* replica of
+    /// a batch crashes, the master detects the stall after
+    /// `relaunch_timeout_factor × E[batch service]` and relaunches the
+    /// batch's replicas — replication is the first line of defence,
+    /// timeout-relaunch the second.
+    pub fail_prob: f64,
+    /// Stall-detection timeout as a multiple of the mean batch service.
+    pub relaunch_timeout_factor: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            cancellation: true,
+            redundancy: Redundancy::Upfront,
+            fail_prob: 0.0,
+            relaunch_timeout_factor: 3.0,
+        }
+    }
+}
+
+/// Per-trial result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrialResult {
+    /// Job completion time.
+    pub completion: f64,
+    /// Σ busy worker-seconds actually spent.
+    pub busy: f64,
+    /// Busy seconds spent on replicas that were cancelled or finished
+    /// after their batch was already complete (pure redundancy cost).
+    pub wasted: f64,
+    /// Events processed.
+    pub events: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    /// A worker finishes its (possibly backup) task on a batch.
+    Finish { worker: usize, batch: usize },
+    /// Speculative deadline for a batch: launch backups if unfinished.
+    Deadline { batch: usize },
+    /// Stall-detection timeout: relaunch the batch if unfinished (all
+    /// its replicas crashed).
+    Relaunch { batch: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct QueuedEvent {
+    time: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for QueuedEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for QueuedEvent {}
+impl PartialOrd for QueuedEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueuedEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Total order: by time, ties broken by sequence number (FIFO).
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Reusable per-trial state: lets [`simulate_many`] run the engine
+/// allocation-free after the first trial (§Perf iteration 2).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    heap: BinaryHeap<Reverse<QueuedEvent>>,
+    start_time: Vec<f64>,
+    unit_covered: Vec<bool>,
+    batch_done: Vec<bool>,
+    cancelled: Vec<bool>,
+}
+
+/// Run a single trial through the event engine (allocating wrapper).
+pub fn simulate_one(scn: &Scenario, cfg: &EngineConfig, rng: &mut Rng) -> TrialResult {
+    simulate_one_with(scn, cfg, rng, &mut Workspace::default())
+}
+
+#[inline]
+fn push_ev(heap: &mut BinaryHeap<Reverse<QueuedEvent>>, seq: &mut u64, time: f64, ev: Ev) {
+    let q = QueuedEvent { time, seq: *seq, ev };
+    *seq += 1;
+    heap.push(Reverse(q));
+}
+
+/// Launch one wave of replicas for a batch at `now`; each replica
+/// independently crash-stops with `cfg.fail_prob` (producing nothing and
+/// costing nothing). Returns the number of survivors; the caller
+/// schedules a Relaunch when zero.
+#[allow(clippy::too_many_arguments)]
+fn launch_wave(
+    scn: &Scenario,
+    cfg: &EngineConfig,
+    s: u64,
+    heap: &mut BinaryHeap<Reverse<QueuedEvent>>,
+    seq: &mut u64,
+    start_time: &mut [f64],
+    batch: usize,
+    replicas: &[usize],
+    now: f64,
+    rng: &mut Rng,
+) -> usize {
+    let mut survivors = 0;
+    for &w in replicas {
+        if cfg.fail_prob > 0.0 && rng.coin(cfg.fail_prob) {
+            continue;
+        }
+        let mut t = scn.service.sample_batch(s, rng);
+        if let Some(speeds) = &scn.worker_speeds {
+            t *= speeds[w];
+        }
+        start_time[w] = now;
+        push_ev(heap, seq, now + t, Ev::Finish { worker: w, batch });
+        survivors += 1;
+    }
+    survivors
+}
+
+/// Run a single trial reusing `ws` across calls.
+pub fn simulate_one_with(
+    scn: &Scenario,
+    cfg: &EngineConfig,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+) -> TrialResult {
+    let n = scn.n_workers();
+    let b = scn.assignment.n_batches;
+    let s = scn.batch_units();
+
+    let heap = &mut ws.heap;
+    heap.clear();
+    let mut seq = 0u64;
+
+    // Stall-detection timeout for crash relaunch (only needed when
+    // failures are injected).
+    let relaunch_after = if cfg.fail_prob > 0.0 {
+        cfg.relaunch_timeout_factor
+            * scn
+                .service
+                .batch_mean(s)
+                .expect("failure injection needs a finite mean batch service")
+    } else {
+        f64::INFINITY
+    };
+
+    // Launch per the redundancy strategy.
+    let start_time = &mut ws.start_time; // NaN = not launched
+    start_time.clear();
+    start_time.resize(n, f64::NAN);
+    match cfg.redundancy {
+        Redundancy::Upfront => {
+            for (batch, replicas) in scn.assignment.workers_of_batch.iter().enumerate() {
+                let survivors =
+                    launch_wave(scn, cfg, s, heap, &mut seq, start_time, batch, replicas, 0.0, rng);
+                if survivors == 0 {
+                    push_ev(heap, &mut seq, relaunch_after, Ev::Relaunch { batch });
+                }
+            }
+        }
+        Redundancy::Speculative { deadline_factor } => {
+            let mean_batch = scn
+                .service
+                .batch_mean(s)
+                .expect("speculative redundancy needs a finite mean batch service");
+            let deadline = deadline_factor * mean_batch;
+            for (batch, replicas) in scn.assignment.workers_of_batch.iter().enumerate() {
+                let survivors = launch_wave(
+                    scn, cfg, s, heap, &mut seq, start_time, batch, &replicas[..1], 0.0, rng,
+                );
+                if replicas.len() > 1 {
+                    push_ev(heap, &mut seq, deadline, Ev::Deadline { batch });
+                } else if survivors == 0 {
+                    push_ev(heap, &mut seq, relaunch_after, Ev::Relaunch { batch });
+                }
+            }
+        }
+    }
+
+    // Coverage state.
+    let n_units = scn.layout.n_units;
+    let unit_covered = &mut ws.unit_covered;
+    unit_covered.clear();
+    unit_covered.resize(n_units, false);
+    let mut units_left = n_units;
+    let batch_done = &mut ws.batch_done;
+    batch_done.clear();
+    batch_done.resize(b, false);
+    let cancelled = &mut ws.cancelled;
+    cancelled.clear();
+    cancelled.resize(n, false);
+
+    let mut busy = 0.0f64;
+    let mut wasted = 0.0f64;
+    let mut events = 0u64;
+    let mut completion = f64::NAN;
+
+    while let Some(Reverse(QueuedEvent { time, ev, .. })) = heap.pop() {
+        events += 1;
+        match ev {
+            Ev::Finish { worker, batch } => {
+                if cancelled[worker] {
+                    continue;
+                }
+                let work = time - start_time[worker];
+                busy += work;
+                if batch_done[batch] {
+                    // A sibling already finished this batch (cancellation
+                    // disabled, or completion raced the cancel).
+                    wasted += work;
+                    continue;
+                }
+                batch_done[batch] = true;
+                for &u in &scn.layout.units_of_batch[batch] {
+                    if !unit_covered[u] {
+                        unit_covered[u] = true;
+                        units_left -= 1;
+                    }
+                }
+                if cfg.cancellation {
+                    for &sib in &scn.assignment.workers_of_batch[batch] {
+                        if sib != worker && !cancelled[sib] && !start_time[sib].is_nan() {
+                            cancelled[sib] = true;
+                            let partial = time - start_time[sib];
+                            busy += partial;
+                            wasted += partial;
+                        }
+                    }
+                }
+                if units_left == 0 && completion.is_nan() {
+                    completion = time;
+                    if cfg.cancellation {
+                        // All remaining work (other batches' stragglers
+                        // in overlapping layouts) is moot once the job
+                        // is complete.
+                        for w in 0..n {
+                            if !cancelled[w] && !start_time[w].is_nan() {
+                                // Only cancel workers whose batch is done
+                                // or irrelevant; with disjoint layouts
+                                // every batch was needed, so this only
+                                // fires for overlapping layouts.
+                                if batch_done[scn.assignment.batch_of_worker[w]] {
+                                    continue;
+                                }
+                                cancelled[w] = true;
+                                let partial = time - start_time[w];
+                                busy += partial;
+                                wasted += partial;
+                            }
+                        }
+                    }
+                }
+            }
+            Ev::Deadline { batch } => {
+                if batch_done[batch] {
+                    continue;
+                }
+                // Launch every backup replica of this batch now.
+                let replicas = &scn.assignment.workers_of_batch[batch];
+                let survivors = launch_wave(
+                    scn, cfg, s, heap, &mut seq, start_time, batch, &replicas[1..], time, rng,
+                );
+                if survivors == 0 && cfg.fail_prob > 0.0 {
+                    // Backups all crashed; if the primary also crashed
+                    // the stall timer is the only way forward (if the
+                    // primary is alive this Relaunch will be moot).
+                    push_ev(heap, &mut seq, time + relaunch_after, Ev::Relaunch { batch });
+                }
+            }
+            Ev::Relaunch { batch } => {
+                if batch_done[batch] {
+                    continue;
+                }
+                let replicas = scn.assignment.workers_of_batch[batch].clone();
+                let survivors = launch_wave(
+                    scn, cfg, s, heap, &mut seq, start_time, batch, &replicas, time, rng,
+                );
+                if survivors == 0 {
+                    push_ev(heap, &mut seq, time + relaunch_after, Ev::Relaunch { batch });
+                }
+            }
+        }
+        // Early exit: once complete and cancellation is on, the heap may
+        // still hold events for cancelled workers; drain them cheaply.
+        if !completion.is_nan() && cfg.cancellation {
+            while let Some(Reverse(q)) = heap.pop() {
+                events += 1;
+                if let Ev::Finish { worker, .. } = q.ev {
+                    if !cancelled[worker] {
+                        // Shouldn't happen for disjoint layouts; be safe
+                        // and account the full run.
+                        let work = q.time - start_time[worker];
+                        busy += work;
+                        wasted += work;
+                    }
+                }
+            }
+            break;
+        }
+    }
+
+    debug_assert!(!completion.is_nan(), "job never completed");
+    TrialResult { completion, busy, wasted, events }
+}
+
+/// Aggregate over many trials.
+#[derive(Debug, Clone)]
+pub struct EngineSummary {
+    /// Completion-time statistics.
+    pub completion: Welford,
+    /// Busy worker-seconds statistics.
+    pub busy: Welford,
+    /// Wasted worker-seconds statistics.
+    pub wasted: Welford,
+    /// Total events processed.
+    pub total_events: u64,
+}
+
+/// Run `trials` trials.
+pub fn simulate_many(
+    scn: &Scenario,
+    cfg: &EngineConfig,
+    trials: u64,
+    seed: u64,
+) -> EngineSummary {
+    let mut rng = Rng::new(seed);
+    let mut completion = Welford::new();
+    let mut busy = Welford::new();
+    let mut wasted = Welford::new();
+    let mut total_events = 0;
+    let mut workspace = Workspace::default();
+    for _ in 0..trials {
+        let r = simulate_one_with(scn, cfg, &mut rng, &mut workspace);
+        completion.push(r.completion);
+        busy.push(r.busy);
+        wasted.push(r.wasted);
+        total_events += r.events;
+    }
+    EngineSummary { completion, busy, wasted, total_events }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::completion_time_stats;
+    use crate::dist::{BatchService, ServiceSpec};
+    use crate::testkit;
+
+    fn scn(n: usize, b: usize, spec: ServiceSpec) -> Scenario {
+        Scenario::paper_balanced(n, b, BatchService::paper(spec)).unwrap()
+    }
+
+    #[test]
+    fn engine_matches_closed_form() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.25);
+        let s = scn(12, 4, spec.clone());
+        let sum = simulate_many(&s, &EngineConfig::default(), 100_000, 3);
+        let cf = completion_time_stats(12, 4, &spec).unwrap();
+        let err = (sum.completion.mean() - cf.mean).abs();
+        assert!(err < 0.02, "engine {} vs cf {}", sum.completion.mean(), cf.mean);
+    }
+
+    #[test]
+    fn engine_matches_montecarlo() {
+        // Two independent implementations must agree.
+        let spec = ServiceSpec::exp(1.0);
+        let s = scn(8, 2, spec);
+        let e = simulate_many(&s, &EngineConfig::default(), 100_000, 9);
+        let m = super::super::montecarlo::run_trials(&s, 100_000, 10);
+        assert!(
+            (e.completion.mean() - m.mean()).abs() < 0.02,
+            "engine {} vs mc {}",
+            e.completion.mean(),
+            m.mean()
+        );
+    }
+
+    #[test]
+    fn cancellation_reduces_cost_not_completion() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let s = scn(12, 3, spec);
+        let with = simulate_many(
+            &s,
+            &EngineConfig { cancellation: true, ..EngineConfig::default() },
+            50_000,
+            4,
+        );
+        let without = simulate_many(
+            &s,
+            &EngineConfig { cancellation: false, ..EngineConfig::default() },
+            50_000,
+            4,
+        );
+        // Same completion distribution (same seed ⇒ same draws in same
+        // order for upfront mode).
+        assert!(
+            (with.completion.mean() - without.completion.mean()).abs() < 1e-9,
+            "completion should not depend on cancellation"
+        );
+        assert!(
+            with.busy.mean() < without.busy.mean(),
+            "cancellation must reduce busy time: {} !< {}",
+            with.busy.mean(),
+            without.busy.mean()
+        );
+    }
+
+    #[test]
+    fn speculative_trades_latency_for_cost() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let s = scn(12, 3, spec);
+        let upfront = simulate_many(&s, &EngineConfig::default(), 50_000, 5);
+        let spec_cfg = EngineConfig {
+            redundancy: Redundancy::Speculative { deadline_factor: 1.5 },
+            ..EngineConfig::default()
+        };
+        let reactive = simulate_many(&s, &spec_cfg, 50_000, 5);
+        // Reactive waits before helping: strictly slower on average...
+        assert!(
+            reactive.completion.mean() > upfront.completion.mean(),
+            "reactive {} !> upfront {}",
+            reactive.completion.mean(),
+            upfront.completion.mean()
+        );
+        // ...but cheaper (backups usually never launch).
+        assert!(
+            reactive.busy.mean() < upfront.busy.mean(),
+            "reactive busy {} !< upfront busy {}",
+            reactive.busy.mean(),
+            upfront.busy.mean()
+        );
+    }
+
+    #[test]
+    fn no_redundancy_means_no_waste() {
+        // B = N: one worker per batch, nothing to cancel.
+        let s = scn(8, 8, ServiceSpec::exp(1.0));
+        let sum = simulate_many(&s, &EngineConfig::default(), 10_000, 6);
+        assert_eq!(sum.wasted.mean(), 0.0);
+    }
+
+    #[test]
+    fn failure_injection_zero_is_baseline() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let s = scn(12, 3, spec);
+        let base = simulate_many(&s, &EngineConfig::default(), 20_000, 8);
+        let zero = simulate_many(
+            &s,
+            &EngineConfig { fail_prob: 0.0, ..EngineConfig::default() },
+            20_000,
+            8,
+        );
+        assert_eq!(base.completion.mean(), zero.completion.mean());
+    }
+
+    #[test]
+    fn failure_injection_slows_but_always_completes() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let s = scn(12, 3, spec);
+        let base = simulate_many(&s, &EngineConfig::default(), 20_000, 9);
+        let faulty = simulate_many(
+            &s,
+            &EngineConfig { fail_prob: 0.3, ..EngineConfig::default() },
+            20_000,
+            9,
+        );
+        // Every trial completed (simulate_one would have paniced in
+        // debug, and completion is finite in the Welford min/max).
+        assert!(faulty.completion.max().is_finite());
+        assert!(
+            faulty.completion.mean() > base.completion.mean(),
+            "crashes must slow completion: {} !> {}",
+            faulty.completion.mean(),
+            base.completion.mean()
+        );
+    }
+
+    #[test]
+    fn extreme_failure_rate_relies_on_relaunch() {
+        // p=0.9 with g=4 replicas: P(all crash) = 0.66 per batch per
+        // wave — most trials need at least one relaunch and still finish.
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let s = scn(8, 2, spec);
+        let cfg = EngineConfig { fail_prob: 0.9, ..EngineConfig::default() };
+        let sum = simulate_many(&s, &cfg, 5_000, 10);
+        assert_eq!(sum.completion.count(), 5_000);
+        assert!(sum.completion.max().is_finite());
+        // Geometric relaunch chains make the tail long but finite.
+        assert!(sum.completion.mean() > 2.0 * 1.567, "relaunches should dominate");
+    }
+
+    #[test]
+    fn failed_replicas_cost_nothing_when_unreplicated() {
+        // B = N with failures: crashed replicas do no work; busy time
+        // only accrues for survivors and relaunches.
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let s = scn(4, 4, spec);
+        let cfg = EngineConfig { fail_prob: 0.5, ..EngineConfig::default() };
+        let sum = simulate_many(&s, &cfg, 10_000, 11);
+        assert!(sum.wasted.mean() < 1e-12, "no redundancy => no waste");
+    }
+
+    #[test]
+    fn prop_engine_invariants() {
+        testkit::check("engine-invariants", 100, |g| {
+            let n = *g.pick(&[2usize, 4, 6, 12]);
+            let divisors: Vec<usize> = (1..=n).filter(|b| n % b == 0).collect();
+            let b = *g.pick(&divisors);
+            let spec = ServiceSpec::shifted_exp(1.0, g.f64_in(0.0, 1.0));
+            let s = scn(n, b, spec);
+            let cfg = EngineConfig {
+                cancellation: g.coin(0.5),
+                redundancy: if g.coin(0.5) {
+                    Redundancy::Upfront
+                } else {
+                    Redundancy::Speculative { deadline_factor: g.f64_in(0.5, 3.0) }
+                },
+                fail_prob: if g.coin(0.5) { 0.0 } else { g.f64_in(0.0, 0.8) },
+                ..EngineConfig::default()
+            };
+            let mut rng = g.rng();
+            let r = simulate_one(&s, &cfg, &mut rng);
+            assert!(r.completion.is_finite() && r.completion > 0.0);
+            if cfg.fail_prob == 0.0 {
+                // Without crashes someone is always working until the
+                // job completes; with crashes the cluster can sit idle
+                // waiting out a stall timeout, so busy may be smaller.
+                assert!(r.busy >= r.completion - 1e-9, "busy {} < completion {}", r.busy, r.completion);
+            }
+            assert!(r.busy >= 0.0);
+            assert!(r.wasted >= -1e-12 && r.wasted <= r.busy + 1e-9);
+            assert!(r.events >= b as u64);
+        });
+    }
+}

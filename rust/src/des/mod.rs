@@ -1,0 +1,110 @@
+//! Simulation of System1: a fast Monte-Carlo completion-time sampler and
+//! a full discrete-event engine.
+//!
+//! * [`montecarlo`] draws worker service times and computes the job
+//!   completion time directly (the earliest instant at which the
+//!   finished workers' data covers the whole dataset). This is the hot
+//!   path for the paper's sweeps (E1–E5): millions of trials across the
+//!   diversity–parallelism spectrum.
+//! * [`engine`] is an event-driven simulator with replica cancellation,
+//!   speculative-relaunch (the MapReduce-style reactive baseline the
+//!   paper's upfront replication competes against), heterogeneous worker
+//!   speeds, and cost accounting (busy/wasted worker-seconds) — the
+//!   quantities the closed forms do not cover.
+
+pub mod engine;
+pub mod montecarlo;
+
+use crate::assignment::Assignment;
+use crate::batching::DataLayout;
+use crate::dist::BatchService;
+
+/// A fully specified simulation scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Sample→batch layout (stage 1).
+    pub layout: DataLayout,
+    /// Batch→worker assignment (stage 2).
+    pub assignment: Assignment,
+    /// Batch service-time model.
+    pub service: BatchService,
+    /// Optional per-worker speed multipliers (heterogeneous cluster
+    /// ablation); service time is multiplied by this factor. `None` =
+    /// homogeneous.
+    pub worker_speeds: Option<Vec<f64>>,
+}
+
+impl Scenario {
+    /// Construct and validate a scenario.
+    pub fn new(
+        layout: DataLayout,
+        assignment: Assignment,
+        service: BatchService,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            layout.n_batches() == assignment.n_batches,
+            "layout has {} batches, assignment {}",
+            layout.n_batches(),
+            assignment.n_batches
+        );
+        layout.validate()?;
+        assignment.validate()?;
+        Ok(Self { layout, assignment, service, worker_speeds: None })
+    }
+
+    /// Attach heterogeneous worker speed factors.
+    pub fn with_speeds(mut self, speeds: Vec<f64>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            speeds.len() == self.assignment.n_workers,
+            "need one speed per worker"
+        );
+        anyhow::ensure!(speeds.iter().all(|&s| s > 0.0), "speeds must be positive");
+        self.worker_speeds = Some(speeds);
+        Ok(self)
+    }
+
+    /// Number of workers.
+    pub fn n_workers(&self) -> usize {
+        self.assignment.n_workers
+    }
+
+    /// Batch size in data units.
+    pub fn batch_units(&self) -> u64 {
+        self.layout.batch_units() as u64
+    }
+
+    /// Convenience: the paper's canonical scenario — `n` workers,
+    /// `b` balanced disjoint batches (`b | n`, `U = n` units).
+    pub fn paper_balanced(
+        n: usize,
+        b: usize,
+        service: BatchService,
+    ) -> anyhow::Result<Self> {
+        let layout = crate::batching::disjoint(n, b)?;
+        let assignment = crate::assignment::balanced(n, b)?;
+        Self::new(layout, assignment, service)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::ServiceSpec;
+
+    #[test]
+    fn scenario_validates_consistency() {
+        let layout = crate::batching::disjoint(8, 2).unwrap();
+        let assignment = crate::assignment::balanced(8, 4).unwrap();
+        let svc = BatchService::paper(ServiceSpec::exp(1.0));
+        assert!(Scenario::new(layout, assignment, svc).is_err());
+    }
+
+    #[test]
+    fn speeds_checked() {
+        let svc = BatchService::paper(ServiceSpec::exp(1.0));
+        let s = Scenario::paper_balanced(4, 2, svc).unwrap();
+        assert!(s.clone().with_speeds(vec![1.0; 3]).is_err());
+        assert!(s.clone().with_speeds(vec![1.0, 1.0, 0.0, 1.0]).is_err());
+        assert!(s.with_speeds(vec![1.0; 4]).is_ok());
+    }
+}

@@ -1,0 +1,387 @@
+//! Fast Monte-Carlo sampler of the job completion time.
+//!
+//! One trial: draw every worker's batch service time, then find the
+//! earliest time at which the union of finished workers' data units
+//! covers the dataset. For disjoint layouts this reduces to
+//! `max_b min_{w ∈ batch b} t_w` and runs in O(N); overlapping layouts
+//! use an O(N log N) sort + incremental coverage count.
+
+use super::Scenario;
+use crate::util::rng::Rng;
+use crate::util::stats::{Samples, Welford};
+
+/// Draw one completion time (allocates a scratch buffer; the bulk-trial
+/// path [`run_trials`] uses [`sample_completion_into`] to amortize it).
+#[inline]
+pub fn sample_completion(scn: &Scenario, rng: &mut Rng) -> f64 {
+    let mut scratch = Vec::with_capacity(scn.n_workers());
+    sample_completion_into(scn, rng, &mut scratch)
+}
+
+/// Draw one completion time reusing `scratch` for the per-worker times.
+#[inline]
+pub fn sample_completion_into(scn: &Scenario, rng: &mut Rng, scratch: &mut Vec<f64>) -> f64 {
+    let n = scn.n_workers();
+    let s = scn.batch_units();
+    scratch.clear();
+    match &scn.worker_speeds {
+        None => {
+            // Homogeneous fast path: skip the per-worker speed lookup.
+            if !scn.layout.is_overlapping {
+                // Disjoint layouts only need per-batch min / global max:
+                // fold directly without materializing times at all.
+                let mut worst = f64::NEG_INFINITY;
+                for ws in &scn.assignment.workers_of_batch {
+                    let mut best = f64::INFINITY;
+                    for _ in 0..ws.len() {
+                        let t = scn.service.sample_batch(s, rng);
+                        if t < best {
+                            best = t;
+                        }
+                    }
+                    if best > worst {
+                        worst = best;
+                    }
+                }
+                return worst;
+            }
+            for _ in 0..n {
+                scratch.push(scn.service.sample_batch(s, rng));
+            }
+        }
+        Some(speeds) => {
+            for w in 0..n {
+                scratch.push(scn.service.sample_batch(s, rng) * speeds[w]);
+            }
+        }
+    }
+    completion_from_times(scn, scratch)
+}
+
+/// Completion time for a given vector of per-worker finish times —
+/// shared with the event engine and with the live coordinator's
+/// post-hoc validation.
+pub fn completion_from_times(scn: &Scenario, times: &[f64]) -> f64 {
+    if !scn.layout.is_overlapping {
+        // Disjoint: per-batch earliest replica, then the slowest batch.
+        let mut worst = f64::NEG_INFINITY;
+        for ws in &scn.assignment.workers_of_batch {
+            let mut best = f64::INFINITY;
+            for &w in ws {
+                if times[w] < best {
+                    best = times[w];
+                }
+            }
+            if best > worst {
+                worst = best;
+            }
+        }
+        worst
+    } else {
+        // Overlapping: incremental coverage in time order.
+        let n_units = scn.layout.n_units;
+        let mut order: Vec<usize> = (0..times.len()).collect();
+        order.sort_unstable_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap());
+        let mut covered = vec![false; n_units];
+        let mut n_covered = 0usize;
+        for &w in &order {
+            let b = scn.assignment.batch_of_worker[w];
+            for &u in &scn.layout.units_of_batch[b] {
+                if !covered[u] {
+                    covered[u] = true;
+                    n_covered += 1;
+                }
+            }
+            if n_covered == n_units {
+                return times[w];
+            }
+        }
+        // Layout validation guarantees coverage; unreachable in practice.
+        f64::INFINITY
+    }
+}
+
+/// Summary of a Monte-Carlo run.
+#[derive(Debug, Clone)]
+pub struct McSummary {
+    /// Streaming statistics over all trials.
+    pub welford: Welford,
+    /// Retained raw samples (capped) for quantile estimates.
+    pub samples: Samples,
+}
+
+impl McSummary {
+    /// Mean completion time.
+    pub fn mean(&self) -> f64 {
+        self.welford.mean()
+    }
+
+    /// Completion-time variance.
+    pub fn variance(&self) -> f64 {
+        self.welford.variance()
+    }
+
+    /// 95% confidence half-width of the mean.
+    pub fn ci95(&self) -> f64 {
+        1.96 * self.welford.sem()
+    }
+}
+
+/// Run `trials` independent trials.
+pub fn run_trials(scn: &Scenario, trials: u64, seed: u64) -> McSummary {
+    const SAMPLE_CAP: u64 = 200_000;
+    let mut rng = Rng::new(seed);
+    let mut welford = Welford::new();
+    let keep_every = trials.div_ceil(SAMPLE_CAP).max(1);
+    let mut samples = Samples::with_capacity((trials / keep_every) as usize + 1);
+    let mut scratch = Vec::with_capacity(scn.n_workers());
+    for i in 0..trials {
+        let t = sample_completion_into(scn, &mut rng, &mut scratch);
+        welford.push(t);
+        if i % keep_every == 0 {
+            samples.push(t);
+        }
+    }
+    McSummary { welford, samples }
+}
+
+/// Multi-threaded trial runner: shards `trials` across `threads` OS
+/// threads with independent RNG substreams and merges the Welford
+/// accumulators (quantile samples are kept per-shard and concatenated).
+/// Deterministic for a fixed `(seed, threads)` pair.
+pub fn run_trials_parallel(
+    scn: &Scenario,
+    trials: u64,
+    seed: u64,
+    threads: usize,
+) -> McSummary {
+    let threads = threads.max(1).min(trials.max(1) as usize);
+    if threads == 1 {
+        return run_trials(scn, trials, seed);
+    }
+    let per = trials / threads as u64;
+    let extra = trials % threads as u64;
+    let shards: Vec<McSummary> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let scn_ref = &*scn;
+            let shard_trials = per + if (t as u64) < extra { 1 } else { 0 };
+            // Substream seeds derived like Rng::substream: independent
+            // per shard, stable across runs.
+            let shard_seed = crate::util::rng::Rng::new(seed).substream(t as u64 + 1);
+            handles.push(scope.spawn(move || {
+                let mut rng = shard_seed;
+                let mut welford = Welford::new();
+                let keep_every = shard_trials.div_ceil(200_000 / threads as u64 + 1).max(1);
+                let mut samples =
+                    Samples::with_capacity((shard_trials / keep_every) as usize + 1);
+                let mut scratch = Vec::with_capacity(scn_ref.n_workers());
+                for i in 0..shard_trials {
+                    let v = sample_completion_into(scn_ref, &mut rng, &mut scratch);
+                    welford.push(v);
+                    if i % keep_every == 0 {
+                        samples.push(v);
+                    }
+                }
+                McSummary { welford, samples }
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("mc shard panicked")).collect()
+    });
+    let mut welford = Welford::new();
+    let mut samples = Samples::new();
+    for s in shards {
+        welford.merge(&s.welford);
+        for &x in s.samples.raw() {
+            samples.push(x);
+        }
+    }
+    McSummary { welford, samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::completion_time_stats;
+    use crate::assignment::Policy;
+    use crate::dist::{BatchService, ServiceSpec};
+    use crate::testkit;
+
+    fn paper_scn(n: usize, b: usize, spec: ServiceSpec) -> Scenario {
+        Scenario::paper_balanced(n, b, BatchService::paper(spec)).unwrap()
+    }
+
+    #[test]
+    fn matches_closed_form_sexp() {
+        // The crucial cross-validation: MC ≈ Eq. (4).
+        let spec = ServiceSpec::shifted_exp(1.0, 0.3);
+        for (n, b) in [(8usize, 2usize), (12, 4), (24, 6)] {
+            let scn = paper_scn(n, b, spec.clone());
+            let mc = run_trials(&scn, 200_000, 42);
+            let cf = completion_time_stats(n as u64, b as u64, &spec).unwrap();
+            assert!(
+                (mc.mean() - cf.mean).abs() < 4.0 * mc.ci95().max(1e-3),
+                "n={n} B={b}: mc={} cf={}",
+                mc.mean(),
+                cf.mean
+            );
+            let rel_var = (mc.variance() - cf.var).abs() / cf.var;
+            assert!(rel_var < 0.05, "var: mc={} cf={}", mc.variance(), cf.var);
+        }
+    }
+
+    #[test]
+    fn matches_closed_form_exp() {
+        let spec = ServiceSpec::exp(2.0);
+        let scn = paper_scn(12, 3, spec.clone());
+        let mc = run_trials(&scn, 200_000, 7);
+        let cf = completion_time_stats(12, 3, &spec).unwrap();
+        assert!((mc.mean() - cf.mean).abs() < 0.01, "mc={} cf={}", mc.mean(), cf.mean);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let scn = paper_scn(8, 4, ServiceSpec::exp(1.0));
+        let a = run_trials(&scn, 1000, 5).mean();
+        let b = run_trials(&scn, 1000, 5).mean();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn overlapping_coverage_semantics() {
+        // 4 units, 4 windows of 2 (stride 1). Hand-crafted times:
+        // worker i holds units {i, i+1 mod 4}.
+        let layout = crate::batching::overlapping(4, 4, 2).unwrap();
+        let assignment = crate::assignment::balanced(4, 4).unwrap();
+        let scn = Scenario::new(
+            layout,
+            assignment,
+            BatchService::paper(ServiceSpec::exp(1.0)),
+        )
+        .unwrap();
+        // Workers 0 and 2 cover {0,1} ∪ {2,3} = everything at t=2.
+        let t = completion_from_times(&scn, &[1.0, 10.0, 2.0, 10.0]);
+        assert_eq!(t, 2.0);
+        // Without worker 2, needs workers 1 and 3 as well.
+        let t = completion_from_times(&scn, &[1.0, 3.0, 10.0, 4.0]);
+        assert_eq!(t, 4.0);
+    }
+
+    #[test]
+    fn full_diversity_is_min_of_all_workers() {
+        let scn = paper_scn(6, 1, ServiceSpec::exp(1.0));
+        let t = completion_from_times(&scn, &[5.0, 3.0, 9.0, 4.0, 8.0, 7.0]);
+        assert_eq!(t, 3.0);
+    }
+
+    #[test]
+    fn full_parallelism_is_max_of_all_workers() {
+        let scn = paper_scn(6, 6, ServiceSpec::exp(1.0));
+        let t = completion_from_times(&scn, &[5.0, 3.0, 9.0, 4.0, 8.0, 7.0]);
+        assert_eq!(t, 9.0);
+    }
+
+    #[test]
+    fn heterogeneous_speeds_slow_down_completion() {
+        let svc = BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.5));
+        let base = Scenario::paper_balanced(8, 4, svc.clone()).unwrap();
+        let slow = Scenario::paper_balanced(8, 4, svc)
+            .unwrap()
+            .with_speeds(vec![3.0; 8])
+            .unwrap();
+        let m_base = run_trials(&base, 50_000, 1).mean();
+        let m_slow = run_trials(&slow, 50_000, 1).mean();
+        assert!((m_slow / m_base - 3.0).abs() < 0.1, "{m_base} vs {m_slow}");
+    }
+
+    #[test]
+    fn parallel_matches_sequential_statistics() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.3);
+        let scn = paper_scn(12, 4, spec.clone());
+        let seq = run_trials(&scn, 100_000, 9);
+        let par = run_trials_parallel(&scn, 100_000, 9, 4);
+        assert_eq!(par.welford.count(), 100_000);
+        assert!(
+            (par.mean() - seq.mean()).abs() < 3.0 * (par.ci95() + seq.ci95()),
+            "par {} vs seq {}",
+            par.mean(),
+            seq.mean()
+        );
+        let cf = completion_time_stats(12, 4, &spec).unwrap();
+        assert!((par.mean() - cf.mean).abs() < 4.0 * par.ci95().max(1e-3));
+        // Deterministic given (seed, threads).
+        let par2 = run_trials_parallel(&scn, 100_000, 9, 4);
+        assert_eq!(par.mean(), par2.mean());
+    }
+
+    #[test]
+    fn parallel_degenerate_cases() {
+        let scn = paper_scn(4, 2, ServiceSpec::exp(1.0));
+        // threads > trials, threads = 1
+        let a = run_trials_parallel(&scn, 5, 3, 16);
+        assert_eq!(a.welford.count(), 5);
+        let b = run_trials_parallel(&scn, 1000, 3, 1);
+        let c = run_trials(&scn, 1000, 3);
+        assert_eq!(b.mean(), c.mean());
+    }
+
+    #[test]
+    fn prop_completion_bounded_by_extremes() {
+        // For any scenario and any finish times, completion lies between
+        // the fastest and slowest worker.
+        testkit::check("mc-bounds", 150, |g| {
+            let n = *g.pick(&[2usize, 4, 6, 8, 12]);
+            let divisors: Vec<usize> = (1..=n).filter(|b| n % b == 0).collect();
+            let b = *g.pick(&divisors);
+            let policy = *g.pick(Policy::all());
+            let mut rng = g.rng();
+            let assignment = policy.assign(n, b, &mut rng).unwrap();
+            let eff_b = assignment.n_batches;
+            let layout = if g.coin(0.5) && n % eff_b == 0 {
+                crate::batching::disjoint(n, eff_b).unwrap()
+            } else {
+                let stride = n / eff_b;
+                crate::batching::overlapping(n, eff_b, stride.max(1)).unwrap()
+            };
+            let scn = Scenario::new(
+                layout,
+                assignment,
+                crate::dist::BatchService::paper(ServiceSpec::exp(1.0)),
+            )
+            .unwrap();
+            let times: Vec<f64> = (0..n).map(|_| rng.f64_in(0.1, 10.0)).collect();
+            let t = completion_from_times(&scn, &times);
+            let lo = times.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = times.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert!(t >= lo - 1e-12 && t <= hi + 1e-12, "t={t} not in [{lo},{hi}]");
+        });
+    }
+
+    #[test]
+    fn prop_more_replication_never_hurts_mean() {
+        // Monotonicity along the spectrum for Exp: smaller B (more
+        // diversity) has smaller MC mean (Theorem 2, sampled form).
+        testkit::check("mc-exp-monotone", 20, |g| {
+            let n = *g.pick(&[8usize, 12]);
+            let divisors: Vec<usize> = (1..=n).filter(|b| n % b == 0).collect();
+            let spec = ServiceSpec::exp(1.0);
+            let seed = g.u64_in(0, u64::MAX / 2);
+            let means: Vec<f64> = divisors
+                .iter()
+                .map(|&b| {
+                    let scn = Scenario::paper_balanced(
+                        n,
+                        b,
+                        crate::dist::BatchService::paper(spec.clone()),
+                    )
+                    .unwrap();
+                    run_trials(&scn, 40_000, seed).mean()
+                })
+                .collect();
+            for w in means.windows(2) {
+                // Allow MC noise: 3% slack.
+                assert!(w[1] >= w[0] * 0.97, "means not increasing: {means:?}");
+            }
+        });
+    }
+}

@@ -1,0 +1,117 @@
+//! E6 — live-system validation: the real coordinator (worker threads,
+//! PJRT compute, injected stragglers, cancellation) must reproduce the
+//! analytic completion-time curve that Fig. 2 predicts.
+//!
+//! For each `B` we run `rounds` gradient rounds on the live System1 and
+//! compare the measured mean completion (in injected-time units) against
+//! the closed form. Wall-clock includes real PJRT compute and dispatch
+//! overhead, so we report both and the overhead ratio — the number the
+//! §Perf pass drives down.
+
+use super::ExpContext;
+use crate::analysis;
+use crate::assignment::{feasible_batch_counts, Policy};
+use crate::config::SystemConfig;
+use crate::coordinator::{Backend, Coordinator};
+use crate::dist::ServiceSpec;
+use crate::util::table::{fmt_f, Table};
+
+/// Live workers (threads).
+pub const N: usize = 8;
+
+/// Build the live config for a given `B`.
+fn live_cfg(b: usize, ctx: &ExpContext, artifacts: bool) -> SystemConfig {
+    SystemConfig {
+        n_workers: N,
+        n_batches: b,
+        policy: Policy::BalancedDisjoint,
+        service: ServiceSpec::shifted_exp(1.0, 0.2),
+        time_scale: 0.01, // 10 ms per unit of abstract service time
+        n_samples: 4096,
+        dim: if artifacts { 64 } else { 8 },
+        seed: ctx.seed,
+        ..SystemConfig::default()
+    }
+}
+
+/// Run E6. Uses the PJRT backend when artifacts exist, otherwise falls
+/// back to the mock backend (and says so) so the experiment is always
+/// runnable.
+pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
+    let artifact_dir = crate::runtime::default_artifact_dir();
+    let have_artifacts = artifact_dir.join("manifest.json").exists();
+    let backend = if have_artifacts { Backend::Pjrt } else { Backend::Mock };
+    let rounds = 30u64;
+
+    let mut t = Table::new(
+        &format!(
+            "Live System1 vs closed form (N={N}, SExp(1,0.2), {} backend, {} rounds/B)",
+            if have_artifacts { "PJRT" } else { "mock" },
+            rounds
+        ),
+        &[
+            "B",
+            "E[T] analytic (units)",
+            "live injected mean (units)",
+            "live wall mean (s)",
+            "overhead (wall - scaled injected, ms)",
+            "redundant+cancelled/round",
+        ],
+    );
+
+    for &b in &feasible_batch_counts(N) {
+        let mut cfg = live_cfg(b, ctx, have_artifacts);
+        if have_artifacts {
+            cfg.artifacts_dir = artifact_dir.to_string_lossy().to_string();
+        }
+        let time_scale = cfg.time_scale;
+        let spec = cfg.service.clone();
+        let mut coord = Coordinator::new(cfg, backend)?;
+        coord.run_training(rounds, 0.3)?;
+        let m = &coord.metrics;
+        let cf = analysis::completion_time_stats(N as u64, b as u64, &spec)?;
+        let injected_units = m.mean_injected() / time_scale;
+        let overhead_ms = (m.mean_wall() - m.mean_injected()) * 1e3;
+        let (d, r, c) = m.totals();
+        let _ = d;
+        t.row(vec![
+            b.to_string(),
+            fmt_f(cf.mean, 3),
+            fmt_f(injected_units, 3),
+            fmt_f(m.mean_wall(), 4),
+            fmt_f(overhead_ms, 2),
+            fmt_f((r + c) as f64 / m.len() as f64, 2),
+        ]);
+        coord.shutdown();
+    }
+
+    ctx.emit("live_validation", &t)?;
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_mock_tracks_analysis() {
+        // Mock backend keeps this test artifact-free and fast; the
+        // injected completion (in units) must track the closed form.
+        let dir = std::env::temp_dir().join("batchrep_live_test");
+        std::env::set_var("BATCHREP_ARTIFACTS", "/nonexistent-no-artifacts");
+        let ctx = ExpContext { out_dir: dir.clone(), trials: 0, seed: 4 };
+        let tables = run(&ctx);
+        std::env::remove_var("BATCHREP_ARTIFACTS");
+        let tables = tables.unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        let t = &tables[0];
+        for row in &t.rows {
+            let analytic: f64 = row[1].parse().unwrap();
+            let injected: f64 = row[2].parse().unwrap();
+            // 30 rounds of a max of exponentials is noisy: 35% tolerance
+            // (this is a wiring check; statistical agreement is E1's job).
+            let rel = (injected - analytic).abs() / analytic;
+            assert!(rel < 0.35, "B={} analytic={analytic} injected={injected}", row[0]);
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Experiment drivers: one function per paper figure/table (DESIGN.md
+//! experiment index E1–E8), each emitting CSV + Markdown into an output
+//! directory and returning its [`Table`]s for inspection.
+
+pub mod ablations;
+pub mod extensions;
+pub mod fig2;
+pub mod live;
+pub mod policies;
+pub mod spectrum;
+
+use crate::util::table::Table;
+use std::path::PathBuf;
+
+/// Shared experiment context.
+#[derive(Debug, Clone)]
+pub struct ExpContext {
+    /// Output directory for CSV/Markdown.
+    pub out_dir: PathBuf,
+    /// Monte-Carlo trials per configuration.
+    pub trials: u64,
+    /// Root seed.
+    pub seed: u64,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        Self { out_dir: PathBuf::from("results"), trials: 100_000, seed: 42 }
+    }
+}
+
+impl ExpContext {
+    /// Write a table under this context's output directory and echo it.
+    pub fn emit(&self, stem: &str, table: &Table) -> anyhow::Result<()> {
+        table.write_to(&self.out_dir, stem)?;
+        table.print();
+        Ok(())
+    }
+}
+
+/// Run every experiment (the `batchrep experiment all` entry).
+pub fn run_all(ctx: &ExpContext, include_live: bool) -> anyhow::Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    tables.extend(fig2::run(ctx)?);
+    tables.extend(policies::run(ctx)?);
+    tables.extend(spectrum::run(ctx)?);
+    tables.extend(ablations::run(ctx)?);
+    tables.extend(extensions::run(ctx)?);
+    if include_live {
+        tables.extend(live::run(ctx)?);
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_all_smoke() {
+        // Tiny trial count: checks wiring, file emission, and that every
+        // driver returns at least one table.
+        let dir = std::env::temp_dir().join("batchrep_exp_smoke");
+        let ctx = ExpContext { out_dir: dir.clone(), trials: 2_000, seed: 1 };
+        let tables = run_all(&ctx, false).unwrap();
+        assert!(tables.len() >= 8, "expected >= 6 tables, got {}", tables.len());
+        assert!(dir.join("fig2_expected_completion.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

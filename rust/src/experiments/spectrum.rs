@@ -1,0 +1,152 @@
+//! E3/E4/E5 — Theorems 2, 3, 4: the diversity–parallelism spectrum.
+//!
+//! * E3 (Thm 2): under Exp service both `E[T]` and `Var[T]` are
+//!   minimized at `B = 1` — the whole spectrum is monotone.
+//! * E4 (Thm 3): `B*(∆µ)` crossover table.
+//! * E5 (Thm 4 + trade-off): under SExp the variance is still minimized
+//!   at `B = 1`, so whenever `B* > 1` the mean-optimal operating point
+//!   is variance-suboptimal — the paper's mean–variance trade-off.
+
+use super::ExpContext;
+use crate::analysis::{self, bstar_sweep};
+use crate::assignment::feasible_batch_counts;
+use crate::des::{montecarlo, Scenario};
+use crate::dist::{BatchService, ServiceSpec};
+use crate::util::table::{fmt_f, Table};
+
+/// Workers.
+pub const N: u64 = 24;
+
+/// Run E3+E4+E5.
+pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
+    // --- E3: Exponential spectrum (Theorem 2) ---
+    let exp_spec = ServiceSpec::exp(1.0);
+    let mut e3 = Table::new(
+        "Theorem 2 — Exp(1) service: E[T] and Var[T] vs B (B=1 optimal for both)",
+        &["B", "E[T] analytic", "E[T] sim", "Var analytic", "Var sim"],
+    );
+    for &b in &feasible_batch_counts(N as usize) {
+        let b = b as u64;
+        let cf = analysis::completion_time_stats(N, b, &exp_spec)?;
+        let scn = Scenario::paper_balanced(
+            N as usize,
+            b as usize,
+            BatchService::paper(exp_spec.clone()),
+        )?;
+        let mc = montecarlo::run_trials(&scn, ctx.trials, ctx.seed + b);
+        e3.row(vec![
+            b.to_string(),
+            fmt_f(cf.mean, 4),
+            fmt_f(mc.mean(), 4),
+            fmt_f(cf.var, 4),
+            fmt_f(mc.variance(), 4),
+        ]);
+    }
+    ctx.emit("thm2_exp_spectrum", &e3)?;
+
+    // --- E4: B*(∆µ) crossovers (Theorem 3) ---
+    let delta_mus = [0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0];
+    let sweep = bstar_sweep(N, 1.0, &delta_mus);
+    let mut e4 = Table::new(
+        "Theorem 3 — optimal B* vs delta*mu (N=24): diversity→parallelism crossover",
+        &["delta_mu", "B*", "g*=N/B*", "E[T] at B*", "E[T] at B=1", "E[T] at B=N"],
+    );
+    for p in &sweep {
+        let spec = ServiceSpec::shifted_exp(1.0, p.delta_mu);
+        let at1 = analysis::completion_time_stats(N, 1, &spec)?.mean;
+        let atn = analysis::completion_time_stats(N, N, &spec)?.mean;
+        e4.row(vec![
+            fmt_f(p.delta_mu, 2),
+            p.b_star.to_string(),
+            (N / p.b_star).to_string(),
+            fmt_f(p.mean_at_star, 4),
+            fmt_f(at1, 4),
+            fmt_f(atn, 4),
+        ]);
+    }
+    ctx.emit("thm3_bstar_crossover", &e4)?;
+
+    // --- E5: mean–variance trade-off under SExp (Theorem 4) ---
+    let sexp = ServiceSpec::shifted_exp(1.0, 0.2);
+    let mut e5 = Table::new(
+        "Theorem 4 — SExp(1,0.2): Var[T] minimized at B=1 while E[T] is not \
+         (the mean–variance trade-off)",
+        &["B", "E[T]", "Var[T]", "Std[T]", "mean-optimal", "var-optimal"],
+    );
+    let b_star_mean = analysis::optimum_b(N, &sexp);
+    let b_star_var = analysis::optimum_b_variance(N, &sexp);
+    for &b in &feasible_batch_counts(N as usize) {
+        let b = b as u64;
+        let cf = analysis::completion_time_stats(N, b, &sexp)?;
+        e5.row(vec![
+            b.to_string(),
+            fmt_f(cf.mean, 4),
+            fmt_f(cf.var, 4),
+            fmt_f(cf.stddev(), 4),
+            (b == b_star_mean).to_string(),
+            (b == b_star_var).to_string(),
+        ]);
+    }
+    ctx.emit("thm4_tradeoff", &e5)?;
+
+    // --- extension: tails and cost across the spectrum ---
+    // The paper motivates variance via performance guarantees (The Tail
+    // at Scale); the closed-form quantiles make the guarantee explicit,
+    // and expected_cost shows what diversity charges for it.
+    let mut e5x = Table::new(
+        "Extension — tail latency and redundancy cost vs B (SExp(1,0.2), N=24)",
+        &["B", "E[T]", "p50", "p99", "p99.9", "E[cost] (worker-s)", "cost/E[T]"],
+    );
+    for &b in &feasible_batch_counts(N as usize) {
+        let b = b as u64;
+        let cf = analysis::completion_time_stats(N, b, &sexp)?;
+        let p50 = analysis::completion_time_quantile(N, b, &sexp, 0.5)?;
+        let p99 = analysis::completion_time_quantile(N, b, &sexp, 0.99)?;
+        let p999 = analysis::completion_time_quantile(N, b, &sexp, 0.999)?;
+        let cost = analysis::expected_cost(N, b, &sexp)?;
+        e5x.row(vec![
+            b.to_string(),
+            fmt_f(cf.mean, 4),
+            fmt_f(p50, 4),
+            fmt_f(p99, 4),
+            fmt_f(p999, 4),
+            fmt_f(cost, 3),
+            fmt_f(cost / cf.mean, 3),
+        ]);
+    }
+    ctx.emit("ext_tail_and_cost", &e5x)?;
+
+    Ok(vec![e3, e4, e5, e5x])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spectrum_tables_consistent() {
+        let dir = std::env::temp_dir().join("batchrep_spectrum_test");
+        let ctx = ExpContext { out_dir: dir.clone(), trials: 10_000, seed: 9 };
+        let tables = run(&ctx).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+
+        // E3: analytic mean strictly increasing in B (Theorem 2).
+        let means: Vec<f64> =
+            tables[0].rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        for w in means.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+
+        // E5: variance-optimal row is B=1; mean-optimal is interior.
+        let t = &tables[2];
+        assert_eq!(t.rows[0][5], "true", "var-optimal must be B=1");
+        let mean_opt_b: u64 = t
+            .rows
+            .iter()
+            .find(|r| r[4] == "true")
+            .unwrap()[0]
+            .parse()
+            .unwrap();
+        assert!(mean_opt_b > 1 && mean_opt_b < N, "trade-off requires interior B*");
+    }
+}

@@ -1,0 +1,66 @@
+//! # batchrep
+//!
+//! A reproduction of *"Data Replication for Reducing Computing Time in
+//! Distributed Systems with Stragglers"* (Behrouzi-Far & Soljanin, 2019)
+//! as a deployable master–worker framework.
+//!
+//! The paper studies **System1**: `N` workers, a dataset cut into `B`
+//! equal batches (`B | N`), each batch replicated on `g = N/B` workers.
+//! A job completes when *every* batch has been finished by at least one
+//! of its replicas; the master aggregates the earliest replica results.
+//! The library provides, as first-class components:
+//!
+//! * [`assignment`] — the paper's batch→worker assignment policies
+//!   (balanced disjoint, overlapping, random, skewed) with invariant
+//!   validation;
+//! * [`batching`] — the two-stage sample→batch→worker data distribution;
+//! * [`analysis`] — closed-form expectation/variance of the completion
+//!   time for Exponential and Shifted-Exponential service (paper
+//!   Theorems 2–4, Eq. 4) and the Theorem-3 optimizer for `B*`;
+//! * [`des`] — a discrete-event simulator of System1 with replica
+//!   cancellation, for policies/distributions with no closed form;
+//! * [`coordinator`] + [`worker`] + [`runtime`] — a *live* System1:
+//!   real worker threads executing AOT-compiled JAX/Pallas compute jobs
+//!   through PJRT (the `xla` crate), with injected straggler service
+//!   times and first-completion-wins cancellation;
+//! * [`dist`] — service-time distributions and the size-dependent batch
+//!   service model (Gardner et al.) the paper builds on;
+//! * [`experiments`] — drivers that regenerate every figure/table.
+//!
+//! Substrates built in-crate (offline environment): PRNG, statistics,
+//! JSON, TOML-subset config, property-testing ([`testkit`]) and
+//! micro-benchmarking ([`benchkit`]).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use batchrep::analysis::{completion_time_stats, optimum_b};
+//! use batchrep::dist::ServiceSpec;
+//!
+//! // N = 24 workers, Shifted-Exponential per-sample service.
+//! let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+//! let stats_b4 = completion_time_stats(24, 4, &spec).unwrap();
+//! assert!(stats_b4.mean > 0.0);
+//! // Theorem 3: the optimum number of batches for this (mu, delta).
+//! let b_star = optimum_b(24, &spec);
+//! assert!(24 % b_star == 0);
+//! ```
+
+pub mod analysis;
+pub mod assignment;
+pub mod batching;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod des;
+pub mod dist;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod testkit;
+pub mod trace;
+pub mod util;
+pub mod worker;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,283 @@
+//! `batchrep` — CLI launcher for the System1 reproduction.
+//!
+//! Subcommands:
+//!   analyze     closed-form diversity–parallelism spectrum (Theorems 2–4)
+//!   simulate    Monte-Carlo + event-engine simulation of one scenario
+//!   experiment  regenerate paper figures/tables (fig2|policies|spectrum|
+//!               ablations|live|all)
+//!   train       run the live distributed-SGD System1 (PJRT backend)
+//!   mapsum      run one live distributed map-sum evaluation
+//!
+//! Global options: `--config <file.toml>` plus per-key overrides
+//! (`--n-workers 24`, `--service sexp:1.0,0.2`, ...). See README.
+
+use batchrep::analysis;
+use batchrep::config::cli::Args;
+use batchrep::config::toml::TomlValue;
+use batchrep::config::SystemConfig;
+use batchrep::coordinator::{Backend, Coordinator};
+use batchrep::des::engine::{simulate_many, EngineConfig, Redundancy};
+use batchrep::des::montecarlo;
+use batchrep::experiments::{self, ExpContext};
+use batchrep::util::table::{fmt_f, Table};
+
+const USAGE: &str = "\
+batchrep — data replication for straggler mitigation (Behrouzi-Far & Soljanin, 2019)
+
+USAGE:
+  batchrep analyze    [--n 24] [--service sexp:1.0,0.2]
+  batchrep simulate   [--config f] [--n-workers 12] [--n-batches 4] [--policy p]
+                      [--service spec] [--trials 100000] [--seed 42]
+                      [--overlapping] [--no-cancel] [--speculative 1.5]
+  batchrep experiment <fig2|policies|spectrum|ablations|extensions|live|all>
+                      [--out results] [--trials 100000] [--seed 42] [--live]
+  batchrep train      [--config f] [--steps 200] [--lr 0.3] [--mock] [...]
+  batchrep mapsum     [--config f] [--mock] [...]
+  batchrep trace      [--n 100000] [--seed 42] [--out trace.csv]
+                      [--p-enter 0.0026] [--p-exit 0.05] [--slowdown 8]
+
+Config keys (file or --key value): n_workers, n_batches, policy, service,
+batch_model, overlapping, cancellation, seed, trials, artifacts_dir,
+time_scale, kernel, dim, n_samples, steps.
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Load config file + apply CLI overrides.
+fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
+    let mut cfg = match args.get::<String>("config")? {
+        Some(path) => SystemConfig::from_file(std::path::Path::new(&path))?,
+        None => SystemConfig::default(),
+    };
+    // CLI overrides use dashed names: --n-workers → n_workers.
+    let keys = [
+        "n_workers", "n_batches", "policy", "service", "batch_model", "seed",
+        "trials", "artifacts_dir", "time_scale", "kernel", "dim", "n_samples",
+        "steps",
+    ];
+    for key in keys {
+        let dashed = key.replace('_', "-");
+        if let Some(v) = args.get::<String>(&dashed)? {
+            let tv = if let Ok(i) = v.parse::<i64>() {
+                TomlValue::Int(i)
+            } else if let Ok(f) = v.parse::<f64>() {
+                TomlValue::Float(f)
+            } else {
+                TomlValue::Str(v)
+            };
+            cfg.apply_kv(key, &tv)?;
+        }
+    }
+    if args.flag("overlapping") {
+        cfg.overlapping = true;
+    }
+    if args.flag("no-cancel") {
+        cfg.cancellation = false;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand() {
+        Some("analyze") => cmd_analyze(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("train") => cmd_train(&args),
+        Some("mapsum") => cmd_mapsum(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_or::<u64>("n", 24)?;
+    let spec_s = args.get_or::<String>("service", "sexp:1.0,0.2".into())?;
+    let spec = batchrep::dist::ServiceSpec::parse(&spec_s)?;
+    args.finish()?;
+    let mut t = Table::new(
+        &format!("Diversity–parallelism spectrum, N={n}, service {}", spec.name()),
+        &["B", "g=N/B", "E[T]", "Var[T]", "Std[T]"],
+    );
+    for p in analysis::spectrum(n, &spec)? {
+        t.row(vec![
+            p.b.to_string(),
+            p.g.to_string(),
+            fmt_f(p.stats.mean, 4),
+            fmt_f(p.stats.var, 4),
+            fmt_f(p.stats.stddev(), 4),
+        ]);
+    }
+    t.print();
+    println!(
+        "mean-optimal B* = {}   variance-optimal B = {}",
+        analysis::optimum_b(n, &spec),
+        analysis::optimum_b_variance(n, &spec)
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let speculative = args.get::<f64>("speculative")?;
+    let cfg = load_config(args)?;
+    args.finish()?;
+    let scn = cfg.scenario()?;
+
+    println!(
+        "scenario: N={} B={} policy={} layout={} service={} model={}",
+        cfg.n_workers,
+        scn.assignment.n_batches,
+        cfg.policy.name(),
+        if cfg.overlapping { "overlapping" } else { "disjoint" },
+        cfg.service.name(),
+        cfg.batch_model.name()
+    );
+
+    let mc = montecarlo::run_trials(&scn, cfg.trials, cfg.seed);
+    let mut t = Table::new("Monte-Carlo completion time", &["metric", "value"]);
+    t.row(vec!["trials".into(), cfg.trials.to_string()]);
+    t.row(vec!["mean".into(), fmt_f(mc.mean(), 5)]);
+    t.row(vec!["ci95".into(), fmt_f(mc.ci95(), 5)]);
+    t.row(vec!["variance".into(), fmt_f(mc.variance(), 5)]);
+    let mut samples = mc.samples.clone();
+    t.row(vec!["p50".into(), fmt_f(samples.quantile(0.5), 5)]);
+    t.row(vec!["p99".into(), fmt_f(samples.quantile(0.99), 5)]);
+    if let Ok(cf) = analysis::completion_time_stats(
+        cfg.n_workers as u64,
+        scn.assignment.n_batches as u64,
+        &cfg.service,
+    ) {
+        t.row(vec!["closed-form mean".into(), fmt_f(cf.mean, 5)]);
+        t.row(vec!["closed-form variance".into(), fmt_f(cf.var, 5)]);
+    }
+    t.print();
+
+    let redundancy = match speculative {
+        Some(df) => Redundancy::Speculative { deadline_factor: df },
+        None => Redundancy::Upfront,
+    };
+    let ecfg = EngineConfig { cancellation: cfg.cancellation, redundancy, ..EngineConfig::default() };
+    let etrials = (cfg.trials / 10).max(1);
+    let sum = simulate_many(&scn, &ecfg, etrials, cfg.seed ^ 1);
+    let mut t2 = Table::new("Event-engine (cost accounting)", &["metric", "value"]);
+    t2.row(vec!["completion mean".into(), fmt_f(sum.completion.mean(), 5)]);
+    t2.row(vec!["busy worker-seconds".into(), fmt_f(sum.busy.mean(), 5)]);
+    t2.row(vec!["wasted worker-seconds".into(), fmt_f(sum.wasted.mean(), 5)]);
+    t2.row(vec![
+        "events/trial".into(),
+        fmt_f(sum.total_events as f64 / etrials as f64, 2),
+    ]);
+    t2.print();
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positionals
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all")
+        .to_string();
+    let ctx = ExpContext {
+        out_dir: args.get_or::<String>("out", "results".into())?.into(),
+        trials: args.get_or::<u64>("trials", 100_000)?,
+        seed: args.get_or::<u64>("seed", 42)?,
+    };
+    let include_live = args.flag("live");
+    args.finish()?;
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    match which.as_str() {
+        "fig2" => experiments::fig2::run(&ctx)?,
+        "policies" => experiments::policies::run(&ctx)?,
+        "spectrum" => experiments::spectrum::run(&ctx)?,
+        "ablations" => experiments::ablations::run(&ctx)?,
+        "extensions" => experiments::extensions::run(&ctx)?,
+        "live" => experiments::live::run(&ctx)?,
+        "all" => experiments::run_all(&ctx, include_live)?,
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    };
+    println!("results written to {}", ctx.out_dir.display());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let lr = args.get_or::<f64>("lr", 0.3)?;
+    let steps_override = args.get::<u64>("steps")?;
+    let mock = args.flag("mock");
+    let cfg = load_config(args)?;
+    args.finish()?;
+    let steps = steps_override.unwrap_or(cfg.steps);
+    let backend = if mock { Backend::Mock } else { Backend::Pjrt };
+    println!(
+        "training: N={} B={} policy={} service={} steps={} lr={} backend={:?}",
+        cfg.n_workers,
+        cfg.n_batches,
+        cfg.policy.name(),
+        cfg.service.name(),
+        steps,
+        lr,
+        backend
+    );
+    let mut coord = Coordinator::new(cfg, backend)?;
+    let report = coord.run_training(steps, lr)?;
+    for (i, loss) in report.loss_curve.iter().enumerate() {
+        if i < 5 || i % (steps as usize / 10).max(1) == 0 || i + 1 == steps as usize {
+            println!("step {i:>5}  loss {loss:.6}");
+        }
+    }
+    println!("‖w − w*‖ = {:.5}", report.dist_to_w_star);
+    report.metrics.summary_table("training run").print();
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use batchrep::trace::{generate_markov_trace, save_trace, MarkovTraceParams};
+    let n = args.get_or::<usize>("n", 100_000)?;
+    let seed = args.get_or::<u64>("seed", 42)?;
+    let out = args.get_or::<String>("out", "trace.csv".into())?;
+    let defaults = MarkovTraceParams::default();
+    let params = MarkovTraceParams {
+        p_enter: args.get_or::<f64>("p-enter", defaults.p_enter)?,
+        p_exit: args.get_or::<f64>("p-exit", defaults.p_exit)?,
+        slowdown: args.get_or::<f64>("slowdown", defaults.slowdown)?,
+        base_mu: args.get_or::<f64>("mu", defaults.base_mu)?,
+        base_delta: args.get_or::<f64>("delta", defaults.base_delta)?,
+    };
+    args.finish()?;
+    let t = generate_markov_trace(&params, n, seed);
+    let mean = t.iter().sum::<f64>() / t.len() as f64;
+    let max = t.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    save_trace(std::path::Path::new(&out), &t)?;
+    println!(
+        "wrote {n} per-unit service times to {out} (mean {mean:.4}, max {max:.4}); \
+         replay with service trace files via batchrep::trace::load_trace"
+    );
+    Ok(())
+}
+
+fn cmd_mapsum(args: &Args) -> anyhow::Result<()> {
+    let mock = args.flag("mock");
+    let cfg = load_config(args)?;
+    args.finish()?;
+    let dim = cfg.dim;
+    let backend = if mock { Backend::Mock } else { Backend::Pjrt };
+    let mut coord = Coordinator::new(cfg, backend)?;
+    let a = vec![0.1f32; dim];
+    let b = vec![0.05f32; dim];
+    let total = coord.run_mapsum(a, b)?;
+    println!("f(D) = {total:.6}");
+    coord.metrics.summary_table("mapsum run").print();
+    coord.shutdown();
+    Ok(())
+}

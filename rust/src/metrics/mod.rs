@@ -1,0 +1,204 @@
+//! Runtime metrics for the live coordinator: per-job completion records,
+//! latency histograms, and report generation.
+
+use crate::util::stats::{LogHistogram, Samples, Welford};
+use crate::util::table::{fmt_f, Table};
+
+/// Record of one completed job (one round of the distributed compute).
+#[derive(Debug, Clone, Copy)]
+pub struct JobRecord {
+    /// Job (round) index.
+    pub job_id: u64,
+    /// Wall-clock completion time, seconds.
+    pub completion_s: f64,
+    /// Injected (simulated-service) completion time, seconds.
+    pub injected_s: f64,
+    /// Number of replica tasks dispatched.
+    pub dispatched: u64,
+    /// Replica results that arrived after their batch was already
+    /// complete (redundant deliveries).
+    pub redundant: u64,
+    /// Replica tasks cancelled before finishing.
+    pub cancelled: u64,
+}
+
+/// Aggregated metrics over a run.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    records: Vec<JobRecord>,
+    wall: Welford,
+    injected: Welford,
+    hist: LogHistogram,
+}
+
+impl Default for RunMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunMetrics {
+    /// Empty metrics.
+    pub fn new() -> Self {
+        Self {
+            records: Vec::new(),
+            wall: Welford::new(),
+            injected: Welford::new(),
+            hist: LogHistogram::for_latency(),
+        }
+    }
+
+    /// Record a completed job.
+    pub fn push(&mut self, rec: JobRecord) {
+        self.wall.push(rec.completion_s);
+        self.injected.push(rec.injected_s);
+        self.hist.record(rec.completion_s);
+        self.records.push(rec);
+    }
+
+    /// Number of recorded jobs.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when nothing is recorded.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Mean wall-clock completion.
+    pub fn mean_wall(&self) -> f64 {
+        self.wall.mean()
+    }
+
+    /// Mean injected completion.
+    pub fn mean_injected(&self) -> f64 {
+        self.injected.mean()
+    }
+
+    /// Wall-clock completion variance.
+    pub fn var_wall(&self) -> f64 {
+        self.wall.variance()
+    }
+
+    /// Wall-clock quantile.
+    pub fn quantile_wall(&self, q: f64) -> f64 {
+        let mut s = Samples::with_capacity(self.records.len());
+        for r in &self.records {
+            s.push(r.completion_s);
+        }
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.quantile(q)
+    }
+
+    /// Approximate quantile from the streaming histogram (O(1) memory
+    /// path used when records are dropped).
+    pub fn quantile_hist(&self, q: f64) -> f64 {
+        self.hist.quantile(q)
+    }
+
+    /// Access all records.
+    pub fn records(&self) -> &[JobRecord] {
+        &self.records
+    }
+
+    /// Dispatch/cancel/redundancy totals.
+    pub fn totals(&self) -> (u64, u64, u64) {
+        let mut d = 0;
+        let mut r = 0;
+        let mut c = 0;
+        for rec in &self.records {
+            d += rec.dispatched;
+            r += rec.redundant;
+            c += rec.cancelled;
+        }
+        (d, r, c)
+    }
+
+    /// Summary table for reports.
+    pub fn summary_table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["metric", "value"]);
+        let (d, r, c) = self.totals();
+        t.row(vec!["jobs".into(), self.len().to_string()]);
+        t.row(vec!["mean wall completion (s)".into(), fmt_f(self.mean_wall(), 6)]);
+        t.row(vec!["std wall completion (s)".into(), fmt_f(self.wall.stddev(), 6)]);
+        t.row(vec!["p50 wall (s)".into(), fmt_f(self.quantile_wall(0.5), 6)]);
+        t.row(vec!["p99 wall (s)".into(), fmt_f(self.quantile_wall(0.99), 6)]);
+        t.row(vec!["mean injected completion (s)".into(), fmt_f(self.mean_injected(), 6)]);
+        t.row(vec!["tasks dispatched".into(), d.to_string()]);
+        t.row(vec!["redundant arrivals".into(), r.to_string()]);
+        t.row(vec!["tasks cancelled".into(), c.to_string()]);
+        t
+    }
+
+    /// Per-job CSV table (for plotting loss/latency curves).
+    pub fn records_table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &["job", "wall_s", "injected_s", "dispatched", "redundant", "cancelled"],
+        );
+        for r in &self.records {
+            t.row(vec![
+                r.job_id.to_string(),
+                fmt_f(r.completion_s, 6),
+                fmt_f(r.injected_s, 6),
+                r.dispatched.to_string(),
+                r.redundant.to_string(),
+                r.cancelled.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, wall: f64) -> JobRecord {
+        JobRecord {
+            job_id: id,
+            completion_s: wall,
+            injected_s: wall * 0.9,
+            dispatched: 8,
+            redundant: 1,
+            cancelled: 3,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut m = RunMetrics::new();
+        for i in 0..10 {
+            m.push(rec(i, 1.0 + i as f64 * 0.1));
+        }
+        assert_eq!(m.len(), 10);
+        assert!((m.mean_wall() - 1.45).abs() < 1e-12);
+        let (d, r, c) = m.totals();
+        assert_eq!((d, r, c), (80, 10, 30));
+        assert!(m.quantile_wall(1.0) >= m.quantile_wall(0.5));
+    }
+
+    #[test]
+    fn tables_render() {
+        let mut m = RunMetrics::new();
+        m.push(rec(0, 0.5));
+        let t = m.summary_table("run");
+        assert!(t.to_markdown().contains("mean wall completion"));
+        let rt = m.records_table("jobs");
+        assert_eq!(rt.rows.len(), 1);
+    }
+
+    #[test]
+    fn hist_quantile_close_to_exact() {
+        let mut m = RunMetrics::new();
+        for i in 1..=1000 {
+            m.push(rec(i, i as f64 / 100.0));
+        }
+        let exact = m.quantile_wall(0.9);
+        let approx = m.quantile_hist(0.9);
+        assert!((approx - exact).abs() / exact < 0.1, "{approx} vs {exact}");
+    }
+}

@@ -1,0 +1,291 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the Rust hot path.
+//!
+//! `make artifacts` (python, build-time) lowers the L2 jax jobs to
+//! `artifacts/*.hlo.txt` plus `manifest.json`; this module parses the
+//! manifest ([`Manifest`]), compiles artifacts on a CPU PJRT client
+//! ([`Engine`]), and exposes typed entry points for the two compute
+//! jobs ([`Engine::grad`], [`Engine::mapsum`]). HLO **text** is the
+//! interchange format — the crate's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos (64-bit instruction ids) but its text
+//! parser reassigns ids cleanly.
+//!
+//! Thread-model: `xla::PjRtLoadedExecutable` is not `Send`, so each
+//! worker thread owns its own [`Engine`] (client + compiled
+//! executables). Compilation happens once per thread at startup, never
+//! on the request path.
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact entry from `manifest.json`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// Job kind: `grad` or `mapsum`.
+    pub kernel: String,
+    /// Batch rows this variant was lowered for.
+    pub rows: usize,
+    /// Feature dimension.
+    pub dim: usize,
+    /// HLO text filename (relative to the artifact dir).
+    pub file: String,
+    /// Number of tuple outputs.
+    pub n_outputs: usize,
+}
+
+impl ArtifactSpec {
+    /// Cache key.
+    pub fn key(&self) -> String {
+        format!("{}_r{}_d{}", self.kernel, self.rows, self.dim)
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Artifact directory.
+    pub dir: PathBuf,
+    /// All artifacts.
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            )
+        })?;
+        let json = Json::parse(&text)?;
+        let version = json
+            .get("version")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing version"))?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let arr = json
+            .get("artifacts")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            let get_s = |k: &str| {
+                a.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing '{k}'"))
+            };
+            let get_i = |k: &str| {
+                a.get(k)
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing '{k}'"))
+            };
+            artifacts.push(ArtifactSpec {
+                kernel: get_s("kernel")?,
+                rows: get_i("rows")? as usize,
+                dim: get_i("dim")? as usize,
+                file: get_s("file")?,
+                n_outputs: get_i("outputs")? as usize,
+            });
+        }
+        anyhow::ensure!(!artifacts.is_empty(), "manifest lists no artifacts");
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find the artifact for `(kernel, rows, dim)`.
+    pub fn find(&self, kernel: &str, rows: usize, dim: usize) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kernel == kernel && a.rows == rows && a.dim == dim)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for kernel={kernel} rows={rows} dim={dim}; \
+                     available: {:?}",
+                    self.artifacts.iter().map(ArtifactSpec::key).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Row variants available for a kernel/dim (used by the coordinator
+    /// to choose shard sizes).
+    pub fn rows_for(&self, kernel: &str, dim: usize) -> Vec<usize> {
+        let mut rows: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kernel == kernel && a.dim == dim)
+            .map(|a| a.rows)
+            .collect();
+        rows.sort_unstable();
+        rows
+    }
+}
+
+/// Result of one gradient-job execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GradOut {
+    /// Gradient sum `Xᵀ(Xw − y)`, length `dim`.
+    pub grad: Vec<f32>,
+    /// Loss sum `½‖Xw − y‖²`.
+    pub loss: f32,
+}
+
+/// A per-thread PJRT engine: one CPU client plus compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create an engine over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: HashMap::new() })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for
+    /// `(kernel, rows, dim)`.
+    pub fn prepare(&mut self, kernel: &str, rows: usize, dim: usize) -> anyhow::Result<()> {
+        let spec = self.manifest.find(kernel, rows, dim)?.clone();
+        if self.cache.contains_key(&spec.key()) {
+            return Ok(());
+        }
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(spec.key(), exe);
+        Ok(())
+    }
+
+    fn executable(
+        &mut self,
+        kernel: &str,
+        rows: usize,
+        dim: usize,
+    ) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        let key = format!("{kernel}_r{rows}_d{dim}");
+        if !self.cache.contains_key(&key) {
+            self.prepare(kernel, rows, dim)?;
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    /// Execute the gradient job: `x` is `rows×dim` row-major, `y` has
+    /// `rows` entries, `w` has `dim` entries.
+    pub fn grad(
+        &mut self,
+        rows: usize,
+        dim: usize,
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+    ) -> anyhow::Result<GradOut> {
+        anyhow::ensure!(x.len() == rows * dim, "x has {} elems, want {}", x.len(), rows * dim);
+        anyhow::ensure!(y.len() == rows && w.len() == dim, "y/w shape mismatch");
+        let exe = self.executable("grad", rows, dim)?;
+        let lx = xla::Literal::vec1(x).reshape(&[rows as i64, dim as i64])?;
+        let ly = xla::Literal::vec1(y);
+        let lw = xla::Literal::vec1(w);
+        let result = exe.execute::<xla::Literal>(&[lx, ly, lw])?[0][0].to_literal_sync()?;
+        let (g, loss) = result.to_tuple2()?;
+        Ok(GradOut { grad: g.to_vec::<f32>()?, loss: loss.get_first_element::<f32>()? })
+    }
+
+    /// Execute the map-sum job.
+    pub fn mapsum(
+        &mut self,
+        rows: usize,
+        dim: usize,
+        x: &[f32],
+        a: &[f32],
+        b: &[f32],
+    ) -> anyhow::Result<f32> {
+        anyhow::ensure!(x.len() == rows * dim, "x shape mismatch");
+        anyhow::ensure!(a.len() == dim && b.len() == dim, "a/b shape mismatch");
+        let exe = self.executable("mapsum", rows, dim)?;
+        let lx = xla::Literal::vec1(x).reshape(&[rows as i64, dim as i64])?;
+        let la = xla::Literal::vec1(a);
+        let lb = xla::Literal::vec1(b);
+        let result = exe.execute::<xla::Literal>(&[lx, la, lb])?[0][0].to_literal_sync()?;
+        // Single-output jobs lower with a bare (untupled) entry root;
+        // accept both forms.
+        let scalar = match result.shape()? {
+            xla::Shape::Tuple(_) => result.to_tuple1()?,
+            _ => result,
+        };
+        Ok(scalar.get_first_element::<f32>()?)
+    }
+}
+
+/// Locate the artifact directory: `$BATCHREP_ARTIFACTS`, else
+/// `artifacts/` (with a manifest) walking up from the current directory.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("BATCHREP_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("batchrep_rt_manifest");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"artifacts":[
+                {"kernel":"grad","rows":8,"dim":4,"file":"grad_r8_d4.hlo.txt",
+                 "inputs":[["8,4","f32"],["8","f32"],["4","f32"]],"outputs":2}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("grad", 8, 4).unwrap();
+        assert_eq!(a.n_outputs, 2);
+        assert_eq!(m.rows_for("grad", 4), vec![8]);
+        assert!(m.find("grad", 16, 4).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_errors() {
+        let dir = std::env::temp_dir().join("batchrep_rt_manifest_bad");
+        write_manifest(&dir, r#"{"version":9,"artifacts":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, r#"{"version":1,"artifacts":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+
+    // PJRT execution tests live in rust/tests/runtime_integration.rs;
+    // they need `make artifacts` and skip with a notice when absent.
+}

@@ -1,0 +1,130 @@
+//! Synthetic straggler traces.
+//!
+//! The paper's stragglers come from "resource contention, network
+//! congestion, I/O" in production clusters; we have no such traces in
+//! this environment, so this module *synthesizes* them (documented
+//! substitution, DESIGN.md §4): a worker's slowdown follows a two-state
+//! Markov-modulated process (NORMAL ↔ CONGESTED) — the standard bursty
+//! contention model — and the per-unit service time is the base service
+//! time multiplied by the state's slowdown factor. Traces are
+//! deterministic given a seed and can be saved/loaded as CSV for replay.
+
+use crate::dist::ServiceSpec;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Parameters of the two-state Markov-modulated slowdown process.
+#[derive(Debug, Clone, Copy)]
+pub struct MarkovTraceParams {
+    /// Probability of entering congestion from the normal state, per draw.
+    pub p_enter: f64,
+    /// Probability of leaving congestion, per draw (mean burst length is
+    /// `1/p_exit` draws).
+    pub p_exit: f64,
+    /// Multiplicative slowdown while congested.
+    pub slowdown: f64,
+    /// Base per-unit service time distribution (sampled per draw).
+    pub base_mu: f64,
+    /// Base shift (SExp shift of the underlying service).
+    pub base_delta: f64,
+}
+
+impl Default for MarkovTraceParams {
+    fn default() -> Self {
+        // ~5% of time congested in bursts of mean length 20, 8× slower —
+        // the "contention + I/O burst" regime described in the paper's
+        // straggler citations (Dean & Barroso, The Tail at Scale).
+        Self { p_enter: 1.0 / 380.0, p_exit: 1.0 / 20.0, slowdown: 8.0, base_mu: 1.0, base_delta: 0.2 }
+    }
+}
+
+/// Generate a service-time trace of `n` per-unit draws.
+pub fn generate_markov_trace(params: &MarkovTraceParams, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let base = ServiceSpec::shifted_exp(params.base_mu, params.base_delta);
+    let mut congested = false;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        if congested {
+            if rng.coin(params.p_exit) {
+                congested = false;
+            }
+        } else if rng.coin(params.p_enter) {
+            congested = true;
+        }
+        let factor = if congested { params.slowdown } else { 1.0 };
+        out.push(base.sample(&mut rng) * factor);
+    }
+    out
+}
+
+/// Wrap a trace as a replayable [`ServiceSpec`].
+pub fn trace_spec(samples: Vec<f64>) -> ServiceSpec {
+    ServiceSpec::Trace { samples: Arc::new(samples) }
+}
+
+/// Save a trace as one-value-per-line CSV.
+pub fn save_trace(path: &std::path::Path, samples: &[f64]) -> std::io::Result<()> {
+    let body: String = samples.iter().map(|x| format!("{x}\n")).collect();
+    std::fs::write(path, body)
+}
+
+/// Load a trace saved by [`save_trace`].
+pub fn load_trace(path: &std::path::Path) -> anyhow::Result<Vec<f64>> {
+    let text = std::fs::read_to_string(path)?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("bad trace line '{l}': {e}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = MarkovTraceParams::default();
+        let a = generate_markov_trace(&p, 1000, 42);
+        let b = generate_markov_trace(&p, 1000, 42);
+        assert_eq!(a, b);
+        let c = generate_markov_trace(&p, 1000, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn congestion_fraction_plausible() {
+        let p = MarkovTraceParams::default();
+        let t = generate_markov_trace(&p, 200_000, 1);
+        // Stationary congested fraction ≈ p_enter/(p_enter+p_exit) ≈ 5%.
+        // Values above 5.0 are overwhelmingly congested draws
+        // (P[normal draw > 5] = e^{-4.8} ≈ 0.8%, while a congested draw
+        // exceeds 5 with probability e^{-(5/8-0.2)} ≈ 65%).
+        let slow = t.iter().filter(|&&x| x > 5.0).count() as f64 / t.len() as f64;
+        assert!(slow > 0.01 && slow < 0.12, "slow fraction {slow}");
+    }
+
+    #[test]
+    fn trace_mean_exceeds_base_mean() {
+        let p = MarkovTraceParams::default();
+        let t = generate_markov_trace(&p, 100_000, 2);
+        let mean = t.iter().sum::<f64>() / t.len() as f64;
+        // Base mean = delta + 1/mu = 1.2; bursts push it up.
+        assert!(mean > 1.2, "mean={mean}");
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join("batchrep_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let t = generate_markov_trace(&MarkovTraceParams::default(), 100, 3);
+        save_trace(&path, &t).unwrap();
+        let loaded = load_trace(&path).unwrap();
+        assert_eq!(t.len(), loaded.len());
+        for (a, b) in t.iter().zip(&loaded) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

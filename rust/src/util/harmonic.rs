@@ -1,0 +1,112 @@
+//! Harmonic numbers and generalized harmonic numbers.
+//!
+//! The paper's closed forms are built from `H_B = Σ_{i=1..B} 1/i`
+//! (expected maximum of B i.i.d. Exp(1)) and
+//! `H⁽²⁾_B = Σ_{i=1..B} 1/i²` (its variance).
+
+/// `H_n = Σ_{i=1..n} 1/i`. `H_0 = 0`.
+pub fn harmonic(n: u64) -> f64 {
+    if n <= HARMONIC_TABLE_MAX {
+        return harmonic_exact(n);
+    }
+    // Asymptotic expansion: ln n + γ + 1/2n − 1/12n² + 1/120n⁴.
+    let nf = n as f64;
+    nf.ln() + EULER_GAMMA + 0.5 / nf - 1.0 / (12.0 * nf * nf)
+        + 1.0 / (120.0 * nf.powi(4))
+}
+
+/// `H⁽²⁾_n = Σ_{i=1..n} 1/i²`. `H⁽²⁾_0 = 0`.
+pub fn harmonic2(n: u64) -> f64 {
+    if n <= HARMONIC_TABLE_MAX {
+        let mut s = 0.0;
+        for i in 1..=n {
+            let x = i as f64;
+            s += 1.0 / (x * x);
+        }
+        return s;
+    }
+    // ζ(2) − 1/n + 1/2n² − 1/6n³.
+    let nf = n as f64;
+    std::f64::consts::PI * std::f64::consts::PI / 6.0 - 1.0 / nf + 0.5 / (nf * nf)
+        - 1.0 / (6.0 * nf * nf * nf)
+}
+
+/// Generalized `H⁽ᵐ⁾_n = Σ_{i=1..n} 1/iᵐ` computed directly.
+pub fn harmonic_gen(n: u64, m: f64) -> f64 {
+    (1..=n).map(|i| (i as f64).powf(-m)).sum()
+}
+
+/// Partial harmonic sum `Σ_{i=a..b} 1/i = H_b − H_{a−1}` (inclusive).
+/// Appears in the expected max of order statistics of subsets.
+pub fn harmonic_range(a: u64, b: u64) -> f64 {
+    assert!(a >= 1 && a <= b);
+    harmonic(b) - harmonic(a - 1)
+}
+
+const EULER_GAMMA: f64 = 0.577_215_664_901_532_9;
+const HARMONIC_TABLE_MAX: u64 = 1 << 16;
+
+fn harmonic_exact(n: u64) -> f64 {
+    // Sum small-to-large is fine at this magnitude; sum backwards for
+    // slightly better rounding.
+    let mut s = 0.0;
+    for i in (1..=n).rev() {
+        s += 1.0 / i as f64;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_exact() {
+        assert_eq!(harmonic(0), 0.0);
+        assert!((harmonic(1) - 1.0).abs() < 1e-15);
+        assert!((harmonic(2) - 1.5).abs() < 1e-15);
+        assert!((harmonic(4) - (1.0 + 0.5 + 1.0 / 3.0 + 0.25)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn asymptotic_matches_exact_at_boundary() {
+        // Compare direct summation with the expansion just above the
+        // table cutoff.
+        let n = HARMONIC_TABLE_MAX + 1;
+        let direct: f64 = (1..=n).rev().map(|i| 1.0 / i as f64).sum();
+        assert!((harmonic(n) - direct).abs() < 1e-10);
+    }
+
+    #[test]
+    fn harmonic2_limits() {
+        assert!((harmonic2(1) - 1.0).abs() < 1e-15);
+        // ζ(2) limit
+        let z2 = std::f64::consts::PI * std::f64::consts::PI / 6.0;
+        assert!((harmonic2(1_000_000) - z2).abs() < 2e-6);
+    }
+
+    #[test]
+    fn harmonic2_asymptotic_matches_exact() {
+        let n = HARMONIC_TABLE_MAX + 1;
+        let direct: f64 = (1..=n).map(|i| 1.0 / (i as f64 * i as f64)).sum();
+        assert!((harmonic2(n) - direct).abs() < 1e-10);
+    }
+
+    #[test]
+    fn range_identity() {
+        for (a, b) in [(1, 10), (3, 17), (5, 5)] {
+            let direct: f64 = (a..=b).map(|i| 1.0 / i as f64).sum();
+            assert!((harmonic_range(a, b) - direct).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn monotone_increasing() {
+        let mut prev = 0.0;
+        for n in 1..200 {
+            let h = harmonic(n);
+            assert!(h > prev);
+            prev = h;
+        }
+    }
+}

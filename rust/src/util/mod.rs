@@ -1,0 +1,45 @@
+//! Small self-contained substrates: PRNG, statistics, harmonic numbers,
+//! JSON, and table writers. These replace `rand`, `serde_json` and
+//! friends, which are unavailable in the offline build environment.
+
+pub mod harmonic;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Monotonic wall-clock timer with ergonomic elapsed readings.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: std::time::Instant,
+}
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        Self { start: std::time::Instant::now() }
+    }
+
+    /// Seconds elapsed since `start`.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Nanoseconds elapsed since `start`.
+    pub fn nanos(&self) -> u128 {
+        self.start.elapsed().as_nanos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.nanos();
+        let b = t.nanos();
+        assert!(b >= a);
+    }
+}

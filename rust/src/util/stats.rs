@@ -1,0 +1,329 @@
+//! Streaming and batch statistics used by the simulator, the live
+//! coordinator metrics, and the benchmark harness.
+
+/// Numerically stable streaming mean/variance (Welford), mergeable so
+/// per-thread accumulators can be combined.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Add one observation.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Merge another accumulator (Chan et al. parallel formula).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+
+    /// Unbiased sample variance.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.stddev() / (self.n as f64).sqrt() }
+    }
+
+    /// Minimum observation.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Maximum observation.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact quantile from a set of samples (kept in memory, sorted lazily).
+/// Used where sample counts are modest (≤ a few million f64s).
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    /// Empty sample set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// With pre-allocated capacity.
+    pub fn with_capacity(n: usize) -> Self {
+        Self { xs: Vec::with_capacity(n), sorted: false }
+    }
+
+    /// Add one sample.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// True when no samples recorded.
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// q-quantile (linear interpolation between order statistics),
+    /// `q ∈ [0, 1]`. Panics on an empty set.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!(!self.xs.is_empty(), "quantile of empty sample set");
+        assert!((0.0..=1.0).contains(&q));
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let n = self.xs.len();
+        if n == 1 {
+            return self.xs[0];
+        }
+        let pos = q * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    /// Median (p50).
+    pub fn median(&mut self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    /// Mean of the samples.
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    /// Unbiased variance of the samples.
+    pub fn variance(&self) -> f64 {
+        let n = self.xs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64
+    }
+
+    /// Borrow the raw samples.
+    pub fn raw(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Fixed-layout log-spaced histogram for latency-like positive values.
+/// Bucket `i` covers `[base·r^i, base·r^(i+1))`; O(1) insert, percentile
+/// estimation from bucket boundaries (worst-case relative error = `r−1`).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    base: f64,
+    log_r: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    total: u64,
+}
+
+impl LogHistogram {
+    /// `base`: lowest representable value; `r`: bucket growth ratio
+    /// (e.g. 1.1 ⇒ ≤10% relative error); `buckets`: number of buckets.
+    pub fn new(base: f64, r: f64, buckets: usize) -> Self {
+        assert!(base > 0.0 && r > 1.0 && buckets > 0);
+        Self { base, log_r: r.ln(), counts: vec![0; buckets], underflow: 0, total: 0 }
+    }
+
+    /// Sensible default for seconds-scale latencies: 1 µs … ~52 min at 5%.
+    pub fn for_latency() -> Self {
+        Self::new(1e-6, 1.05, 450)
+    }
+
+    /// Record a value.
+    #[inline]
+    pub fn record(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.base {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x / self.base).ln() / self.log_r) as usize;
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    /// Total recorded values.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate q-quantile from bucket upper bounds.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = self.underflow;
+        if acc >= target {
+            return self.base;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.base * ((i as f64 + 1.0) * self.log_r).exp();
+            }
+        }
+        self.base * (self.counts.len() as f64 * self.log_r).exp()
+    }
+
+    /// Merge another histogram with identical layout.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        assert!((self.base - other.base).abs() < 1e-18);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.total += other.total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // naive unbiased variance = 4.571428...
+        let m = 5.0;
+        let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.min(), 2.0);
+        assert_eq!(w.max(), 9.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f64> = (0..1000).map(|_| r.f64() * 10.0).collect();
+        let mut all = Welford::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for &x in &xs[..400] {
+            a.push(x);
+        }
+        for &x in &xs[400..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-12);
+        assert!((a.variance() - all.variance()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn samples_quantiles() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.quantile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.quantile(1.0) - 100.0).abs() < 1e-12);
+        assert!((s.median() - 50.5).abs() < 1e-12);
+        assert!((s.quantile(0.25) - 25.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantile_accuracy() {
+        let mut h = LogHistogram::new(1e-3, 1.05, 400);
+        let mut r = Rng::new(2);
+        let mut s = Samples::new();
+        for _ in 0..100_000 {
+            // exponential with mean 1
+            let x = -r.f64_open0().ln();
+            h.record(x);
+            s.push(x);
+        }
+        for q in [0.5, 0.9, 0.99] {
+            let exact = s.quantile(q);
+            let approx = h.quantile(q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.08, "q={q} exact={exact} approx={approx}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LogHistogram::new(1e-3, 1.1, 100);
+        let mut b = LogHistogram::new(1e-3, 1.1, 100);
+        a.record(0.5);
+        b.record(2.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+}

@@ -1,0 +1,121 @@
+//! CSV and Markdown table emitters for experiment outputs.
+//!
+//! Every experiment driver produces one [`Table`] per paper figure/table,
+//! written both as CSV (machine-readable, plotted elsewhere) and as a
+//! Markdown table (embedded in EXPERIMENTS.md).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-ordered table of string cells.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    /// Table title (used as a Markdown heading).
+    pub title: String,
+    /// Column headers.
+    pub headers: Vec<String>,
+    /// Row-major cells.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and headers.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "{}", self.headers.join(",")).unwrap();
+        for r in &self.rows {
+            let escaped: Vec<String> = r.iter().map(|c| csv_escape(c)).collect();
+            writeln!(out, "{}", escaped.join(",")).unwrap();
+        }
+        out
+    }
+
+    /// Render as a GitHub-flavored Markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "### {}\n", self.title).unwrap();
+        writeln!(out, "| {} |", self.headers.join(" | ")).unwrap();
+        writeln!(out, "|{}|", self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"))
+            .unwrap();
+        for r in &self.rows {
+            writeln!(out, "| {} |", r.join(" | ")).unwrap();
+        }
+        out
+    }
+
+    /// Write `<dir>/<stem>.csv` and `<dir>/<stem>.md`.
+    pub fn write_to(&self, dir: &Path, stem: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        std::fs::write(dir.join(format!("{stem}.md")), self.to_markdown())?;
+        Ok(())
+    }
+
+    /// Print the Markdown rendering to stdout.
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+}
+
+fn csv_escape(c: &str) -> String {
+    if c.contains(',') || c.contains('"') || c.contains('\n') {
+        format!("\"{}\"", c.replace('"', "\"\""))
+    } else {
+        c.to_string()
+    }
+}
+
+/// Format an f64 with a fixed number of significant decimals for tables.
+pub fn fmt_f(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_markdown() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("a,b"));
+        assert!(csv.contains("\"x,y\""));
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| 1 | x,y |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn write_files() {
+        let dir = std::env::temp_dir().join("batchrep_table_test");
+        let mut t = Table::new("T", &["x"]);
+        t.row(vec!["1".into()]);
+        t.write_to(&dir, "t").unwrap();
+        assert!(dir.join("t.csv").exists());
+        assert!(dir.join("t.md").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,387 @@
+//! Worker nodes: threads that execute compute tasks over their local
+//! data shard, with injected straggler delays and cancellation.
+//!
+//! Each worker owns its data shard (placed once at setup — the paper's
+//! stage-two distribution) and a compute backend. The default backend
+//! executes the AOT-compiled PJRT artifacts ([`PjrtCompute`], created
+//! *inside* the worker thread because PJRT executables are not `Send`);
+//! [`MockCompute`] is a pure-Rust implementation of the same math used
+//! by tests and as an independent numerical oracle.
+//!
+//! Straggling is *injected*: before computing, the worker sleeps for the
+//! service time the master sampled from the paper's distributions
+//! (scaled by `time_scale`), polling its cancellation token so a
+//! cancelled replica stops early — the live analogue of the DES
+//! engine's cancel events.
+
+use crate::runtime::GradOut;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// A worker's local data shard (row-major `rows×dim` plus targets).
+#[derive(Debug, Clone, Default)]
+pub struct Shard {
+    /// Row count.
+    pub rows: usize,
+    /// Feature dimension.
+    pub dim: usize,
+    /// Row-major features.
+    pub x: Vec<f32>,
+    /// Targets (`grad` job only).
+    pub y: Vec<f32>,
+}
+
+/// Job payload: which computation to run against the shard.
+#[derive(Debug, Clone)]
+pub enum JobSpec {
+    /// Least-squares partial gradient at weights `w`.
+    Grad { w: Arc<Vec<f32>> },
+    /// Map-sum with per-feature coefficients.
+    MapSum { a: Arc<Vec<f32>>, b: Arc<Vec<f32>> },
+}
+
+/// Job output from one replica.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobOut {
+    /// Gradient + loss sums.
+    Grad(GradOut),
+    /// Map-sum scalar.
+    MapSum(f32),
+}
+
+/// A task dispatched to a worker.
+pub struct TaskMsg {
+    /// Job (round) id.
+    pub job_id: u64,
+    /// Batch this replica covers.
+    pub batch_id: usize,
+    /// What to compute.
+    pub spec: JobSpec,
+    /// Injected straggler delay, wall-clock seconds.
+    pub delay_s: f64,
+    /// Cooperative cancellation token for this (job, batch).
+    pub cancel: Arc<AtomicBool>,
+}
+
+/// Worker → master result.
+#[derive(Debug)]
+pub struct ResultMsg {
+    /// Job id echoed from the task.
+    pub job_id: u64,
+    /// Batch id echoed from the task.
+    pub batch_id: usize,
+    /// Reporting worker.
+    pub worker_id: usize,
+    /// `Some(out)` when the task ran to completion; `None` when it was
+    /// cancelled mid-delay (or the backend failed).
+    pub out: Option<JobOut>,
+    /// The injected delay that was configured for this replica.
+    pub injected_s: f64,
+}
+
+/// Compute backend interface. Implementations live on the worker thread
+/// and need not be `Send`.
+pub trait Compute {
+    /// Run a job over the local shard.
+    fn run(&mut self, shard: &Shard, spec: &JobSpec) -> anyhow::Result<JobOut>;
+}
+
+/// Pure-Rust reference backend (tests, oracle, and artifact-free runs).
+#[derive(Debug, Default, Clone)]
+pub struct MockCompute;
+
+impl Compute for MockCompute {
+    fn run(&mut self, shard: &Shard, spec: &JobSpec) -> anyhow::Result<JobOut> {
+        let (rows, dim) = (shard.rows, shard.dim);
+        match spec {
+            JobSpec::Grad { w } => {
+                let mut grad = vec![0f32; dim];
+                let mut loss = 0f32;
+                for r in 0..rows {
+                    let xr = &shard.x[r * dim..(r + 1) * dim];
+                    let mut pred = 0f32;
+                    for j in 0..dim {
+                        pred += xr[j] * w[j];
+                    }
+                    let resid = pred - shard.y[r];
+                    loss += 0.5 * resid * resid;
+                    for j in 0..dim {
+                        grad[j] += resid * xr[j];
+                    }
+                }
+                Ok(JobOut::Grad(GradOut { grad, loss }))
+            }
+            JobSpec::MapSum { a, b } => {
+                let mut total = 0f32;
+                for r in 0..rows {
+                    let xr = &shard.x[r * dim..(r + 1) * dim];
+                    let mut s = 0f32;
+                    for j in 0..dim {
+                        s += a[j] * xr[j] * xr[j] + b[j] * xr[j];
+                    }
+                    total += s.tanh();
+                }
+                Ok(JobOut::MapSum(total))
+            }
+        }
+    }
+}
+
+/// PJRT backend: executes the AOT artifacts. The shard row count is
+/// padded with zero rows up to the nearest available artifact variant
+/// (exact for both jobs: zero rows contribute 0 to every output sum).
+pub struct PjrtCompute {
+    engine: crate::runtime::Engine,
+    /// Padded-variant cache: (kernel, shard rows) → artifact rows.
+    pad_to: std::collections::HashMap<(String, usize), usize>,
+}
+
+impl PjrtCompute {
+    /// Create over an artifact directory.
+    pub fn new(artifact_dir: &std::path::Path) -> anyhow::Result<Self> {
+        Ok(Self {
+            engine: crate::runtime::Engine::new(artifact_dir)?,
+            pad_to: Default::default(),
+        })
+    }
+
+    fn variant_rows(&mut self, kernel: &str, rows: usize, dim: usize) -> anyhow::Result<usize> {
+        if let Some(&v) = self.pad_to.get(&(kernel.to_string(), rows)) {
+            return Ok(v);
+        }
+        let avail = self.engine.manifest().rows_for(kernel, dim);
+        let v = *avail.iter().find(|&&r| r >= rows).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no {kernel} artifact with rows >= {rows} (dim {dim}); \
+                 available rows: {avail:?} — re-run `make artifacts` with --rows"
+            )
+        })?;
+        self.pad_to.insert((kernel.to_string(), rows), v);
+        Ok(v)
+    }
+}
+
+impl Compute for PjrtCompute {
+    fn run(&mut self, shard: &Shard, spec: &JobSpec) -> anyhow::Result<JobOut> {
+        let (rows, dim) = (shard.rows, shard.dim);
+        match spec {
+            JobSpec::Grad { w } => {
+                let v = self.variant_rows("grad", rows, dim)?;
+                let out = if v == rows {
+                    self.engine.grad(v, dim, &shard.x, &shard.y, w)?
+                } else {
+                    let mut x = shard.x.clone();
+                    x.resize(v * dim, 0.0);
+                    let mut y = shard.y.clone();
+                    y.resize(v, 0.0);
+                    self.engine.grad(v, dim, &x, &y, w)?
+                };
+                Ok(JobOut::Grad(out))
+            }
+            JobSpec::MapSum { a, b } => {
+                let v = self.variant_rows("mapsum", rows, dim)?;
+                let out = if v == rows {
+                    self.engine.mapsum(v, dim, &shard.x, a, b)?
+                } else {
+                    let mut x = shard.x.clone();
+                    x.resize(v * dim, 0.0);
+                    self.engine.mapsum(v, dim, &x, a, b)?
+                };
+                Ok(JobOut::MapSum(out))
+            }
+        }
+    }
+}
+
+/// Handle to a spawned worker thread.
+pub struct WorkerHandle {
+    /// Task channel into the worker.
+    pub tx: Sender<TaskMsg>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl WorkerHandle {
+    /// Close the task channel and join the thread.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        let _ = self.join.join();
+    }
+}
+
+/// Granularity of the cancellation poll while sleeping out the injected
+/// delay.
+const CANCEL_POLL: std::time::Duration = std::time::Duration::from_millis(1);
+
+/// Spawn a worker thread.
+///
+/// `compute_factory` runs *on the worker thread* (PJRT engines are not
+/// `Send`); a factory error is reported once and the worker then answers
+/// every task with a cancelled result rather than wedging the master.
+pub fn spawn_worker<F>(
+    worker_id: usize,
+    shard: Shard,
+    compute_factory: F,
+    results: Sender<ResultMsg>,
+) -> WorkerHandle
+where
+    F: FnOnce() -> anyhow::Result<Box<dyn Compute>> + Send + 'static,
+{
+    let (tx, rx): (Sender<TaskMsg>, Receiver<TaskMsg>) = std::sync::mpsc::channel();
+    let join = std::thread::Builder::new()
+        .name(format!("batchrep-worker-{worker_id}"))
+        .spawn(move || {
+            let mut compute = match compute_factory() {
+                Ok(c) => Some(c),
+                Err(e) => {
+                    eprintln!("worker {worker_id}: compute init failed: {e}");
+                    None
+                }
+            };
+            while let Ok(task) = rx.recv() {
+                let out = run_task(worker_id, &shard, compute.as_mut(), &task);
+                let msg = ResultMsg {
+                    job_id: task.job_id,
+                    batch_id: task.batch_id,
+                    worker_id,
+                    out,
+                    injected_s: task.delay_s,
+                };
+                if results.send(msg).is_err() {
+                    break; // master gone
+                }
+            }
+        })
+        .expect("spawn worker thread");
+    WorkerHandle { tx, join }
+}
+
+fn run_task(
+    worker_id: usize,
+    shard: &Shard,
+    compute: Option<&mut Box<dyn Compute>>,
+    task: &TaskMsg,
+) -> Option<JobOut> {
+    // Injected straggle: sleep in small slices, checking cancellation.
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs_f64(task.delay_s);
+    loop {
+        if task.cancel.load(Ordering::Relaxed) {
+            return None;
+        }
+        let now = std::time::Instant::now();
+        if now >= deadline {
+            break;
+        }
+        std::thread::sleep((deadline - now).min(CANCEL_POLL));
+    }
+    if task.cancel.load(Ordering::Relaxed) {
+        return None;
+    }
+    let compute = compute?;
+    match compute.run(shard, &task.spec) {
+        Ok(out) => Some(out),
+        Err(e) => {
+            eprintln!("worker {worker_id}: compute error: {e}");
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard_2x2() -> Shard {
+        // X = [[1,2],[3,4]], y = [1, 1]
+        Shard { rows: 2, dim: 2, x: vec![1.0, 2.0, 3.0, 4.0], y: vec![1.0, 1.0] }
+    }
+
+    #[test]
+    fn mock_grad_math() {
+        let mut c = MockCompute;
+        let w = Arc::new(vec![1.0f32, 0.0]);
+        let out = c.run(&shard_2x2(), &JobSpec::Grad { w }).unwrap();
+        // pred = [1, 3], resid = [0, 2], loss = 2, grad = 2*[3,4] = [6,8]
+        match out {
+            JobOut::Grad(g) => {
+                assert_eq!(g.grad, vec![6.0, 8.0]);
+                assert_eq!(g.loss, 2.0);
+            }
+            _ => panic!("wrong output kind"),
+        }
+    }
+
+    #[test]
+    fn mock_mapsum_math() {
+        let mut c = MockCompute;
+        let a = Arc::new(vec![0.0f32, 0.0]);
+        let b = Arc::new(vec![1.0f32, 0.0]);
+        let out = c.run(&shard_2x2(), &JobSpec::MapSum { a, b }).unwrap();
+        // scores = tanh(1) + tanh(3)
+        match out {
+            JobOut::MapSum(s) => {
+                let expect = 1f32.tanh() + 3f32.tanh();
+                assert!((s - expect).abs() < 1e-6);
+            }
+            _ => panic!("wrong output kind"),
+        }
+    }
+
+    #[test]
+    fn worker_executes_and_reports() {
+        let (res_tx, res_rx) = std::sync::mpsc::channel();
+        let h = spawn_worker(3, shard_2x2(), || Ok(Box::new(MockCompute) as Box<dyn Compute>), res_tx);
+        let cancel = Arc::new(AtomicBool::new(false));
+        h.tx.send(TaskMsg {
+            job_id: 9,
+            batch_id: 1,
+            spec: JobSpec::Grad { w: Arc::new(vec![0.0, 0.0]) },
+            delay_s: 0.0,
+            cancel,
+        })
+        .unwrap();
+        let r = res_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!((r.job_id, r.batch_id, r.worker_id), (9, 1, 3));
+        assert!(r.out.is_some());
+        h.shutdown();
+    }
+
+    #[test]
+    fn cancellation_stops_delayed_task() {
+        let (res_tx, res_rx) = std::sync::mpsc::channel();
+        let h = spawn_worker(0, shard_2x2(), || Ok(Box::new(MockCompute) as Box<dyn Compute>), res_tx);
+        let cancel = Arc::new(AtomicBool::new(false));
+        h.tx.send(TaskMsg {
+            job_id: 1,
+            batch_id: 0,
+            spec: JobSpec::Grad { w: Arc::new(vec![0.0, 0.0]) },
+            delay_s: 10.0, // would block the test if not cancelled
+            cancel: cancel.clone(),
+        })
+        .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        cancel.store(true, Ordering::Relaxed);
+        let r = res_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert!(r.out.is_none(), "cancelled task must not produce output");
+        h.shutdown();
+    }
+
+    #[test]
+    fn failed_factory_reports_cancelled_results() {
+        let (res_tx, res_rx) = std::sync::mpsc::channel();
+        let h = spawn_worker(0, shard_2x2(), || anyhow::bail!("boom"), res_tx);
+        let cancel = Arc::new(AtomicBool::new(false));
+        h.tx.send(TaskMsg {
+            job_id: 1,
+            batch_id: 0,
+            spec: JobSpec::Grad { w: Arc::new(vec![0.0, 0.0]) },
+            delay_s: 0.0,
+            cancel,
+        })
+        .unwrap();
+        let r = res_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert!(r.out.is_none());
+        h.shutdown();
+    }
+}

@@ -1,0 +1,127 @@
+//! End-to-end integration: the full live System1 (coordinator + worker
+//! threads + PJRT artifacts + injected stragglers + cancellation).
+//!
+//! Artifact-dependent tests skip with a notice if `make artifacts` has
+//! not run. The mock-backend tests always run.
+
+use batchrep::assignment::Policy;
+use batchrep::config::SystemConfig;
+use batchrep::coordinator::{Backend, Coordinator};
+use batchrep::dist::ServiceSpec;
+
+fn have_artifacts() -> bool {
+    let ok = batchrep::runtime::default_artifact_dir()
+        .join("manifest.json")
+        .exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn pjrt_cfg(n: usize, b: usize) -> SystemConfig {
+    SystemConfig {
+        n_workers: n,
+        n_batches: b,
+        policy: Policy::BalancedDisjoint,
+        service: ServiceSpec::shifted_exp(50.0, 0.02), // fast: ~ms delays
+        time_scale: 0.01,
+        n_samples: 512,
+        dim: 4,
+        seed: 77,
+        artifacts_dir: batchrep::runtime::default_artifact_dir()
+            .to_string_lossy()
+            .to_string(),
+        ..SystemConfig::default()
+    }
+}
+
+#[test]
+fn pjrt_training_converges_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut coord = Coordinator::new(pjrt_cfg(4, 2), Backend::Pjrt).unwrap();
+    let report = coord.run_training(80, 0.5).unwrap();
+    coord.shutdown();
+    assert_eq!(report.loss_curve.len(), 80);
+    assert!(
+        report.loss_curve[79] < report.loss_curve[0] / 20.0,
+        "loss curve did not drop 20x: first={}, last={}",
+        report.loss_curve[0],
+        report.loss_curve[79]
+    );
+    assert!(report.dist_to_w_star < 0.15, "‖w−w*‖ = {}", report.dist_to_w_star);
+}
+
+#[test]
+fn pjrt_and_mock_backends_agree() {
+    if !have_artifacts() {
+        return;
+    }
+    // Same config/seed: the aggregated gradients must match numerically,
+    // so both training runs land on (nearly) the same weights.
+    let mut a = Coordinator::new(pjrt_cfg(4, 4), Backend::Pjrt).unwrap();
+    let ra = a.run_training(20, 0.5).unwrap();
+    a.shutdown();
+    let mut b = Coordinator::new(pjrt_cfg(4, 4), Backend::Mock).unwrap();
+    let rb = b.run_training(20, 0.5).unwrap();
+    b.shutdown();
+    for (x, y) in ra.final_w.iter().zip(&rb.final_w) {
+        assert!((x - y).abs() < 1e-3, "backends diverged: {x} vs {y}");
+    }
+}
+
+#[test]
+fn pjrt_mapsum_round() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut coord = Coordinator::new(pjrt_cfg(4, 4), Backend::Pjrt).unwrap();
+    let total = coord.run_mapsum(vec![0.1; 4], vec![0.2; 4]).unwrap();
+    coord.shutdown();
+    assert!(total.is_finite());
+    assert!(total.abs() < 512.0, "tanh scores bound the sum by n_samples");
+}
+
+#[test]
+fn replication_reduces_completion_vs_parallelism_mock() {
+    // Behavioral check of the paper's core claim on the *live* system
+    // (mock backend: no artifacts needed, pure scheduling semantics):
+    // with heavy straggling, B=1 (full diversity) completes rounds
+    // faster on average than B=N (full parallelism).
+    let rounds = 25;
+    let mean_wall = |b: usize| -> f64 {
+        let mut cfg = pjrt_cfg(8, b);
+        // Heavy-tailed-ish: big randomness relative to shift.
+        cfg.service = ServiceSpec::shifted_exp(10.0, 0.01);
+        cfg.n_samples = 64;
+        let mut c = Coordinator::new(cfg, Backend::Mock).unwrap();
+        c.run_training(rounds, 0.1).unwrap();
+        let m = c.metrics.mean_injected();
+        c.shutdown();
+        m
+    };
+    let diversity = mean_wall(1);
+    let parallelism = mean_wall(8);
+    assert!(
+        diversity < parallelism,
+        "full diversity {diversity} should beat full parallelism {parallelism} \
+         under exponential-dominated service"
+    );
+}
+
+#[test]
+fn cancellation_flag_controls_cancelled_counts() {
+    let mut cfg = pjrt_cfg(6, 2);
+    cfg.cancellation = false;
+    cfg.n_samples = 60;
+    let mut c = Coordinator::new(cfg, Backend::Mock).unwrap();
+    c.run_training(10, 0.1).unwrap();
+    let (_, redundant, cancelled) = c.metrics.totals();
+    c.shutdown();
+    // Without cancellation every non-winning replica still finishes and
+    // arrives late: all redundancy shows up as redundant, none cancelled.
+    assert_eq!(cancelled, 0);
+    assert_eq!(redundant, 10 * (6 - 2));
+}

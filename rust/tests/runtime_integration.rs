@@ -1,0 +1,129 @@
+//! Integration tests over the PJRT runtime: load the AOT artifacts,
+//! execute them, and check numerics against the pure-Rust oracle.
+//!
+//! These tests need `make artifacts`; when the manifest is missing they
+//! skip (with a notice) rather than fail, so `cargo test` stays green on
+//! a fresh checkout.
+
+use batchrep::runtime::{default_artifact_dir, Engine};
+use batchrep::worker::{Compute, JobOut, JobSpec, MockCompute, PjrtCompute, Shard};
+use std::sync::Arc;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} — run `make artifacts`", dir.display());
+        None
+    }
+}
+
+fn rand_shard(rows: usize, dim: usize, seed: u64) -> Shard {
+    let mut rng = batchrep::util::rng::Rng::new(seed);
+    Shard {
+        rows,
+        dim,
+        x: (0..rows * dim).map(|_| rng.normal() as f32).collect(),
+        y: (0..rows).map(|_| rng.normal() as f32).collect(),
+    }
+}
+
+#[test]
+fn grad_artifact_matches_rust_oracle() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let shard = rand_shard(8, 4, 1);
+    let w: Vec<f32> = vec![0.3, -0.7, 1.1, 0.05];
+    let out = engine.grad(8, 4, &shard.x, &shard.y, &w).unwrap();
+
+    let mut mock = MockCompute;
+    let expect = match mock.run(&shard, &JobSpec::Grad { w: Arc::new(w) }).unwrap() {
+        JobOut::Grad(g) => g,
+        _ => unreachable!(),
+    };
+    for (a, e) in out.grad.iter().zip(&expect.grad) {
+        assert!((a - e).abs() < 1e-3 * e.abs().max(1.0), "{a} vs {e}");
+    }
+    assert!((out.loss - expect.loss).abs() < 1e-3 * expect.loss.max(1.0));
+}
+
+#[test]
+fn mapsum_artifact_matches_rust_oracle() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let shard = rand_shard(8, 4, 2);
+    let a = vec![0.2f32, -0.1, 0.3, 0.0];
+    let b = vec![1.0f32, 0.5, -0.5, 0.25];
+    let got = engine.mapsum(8, 4, &shard.x, &a, &b).unwrap();
+
+    let mut mock = MockCompute;
+    let expect = match mock
+        .run(&shard, &JobSpec::MapSum { a: Arc::new(a), b: Arc::new(b) })
+        .unwrap()
+    {
+        JobOut::MapSum(v) => v,
+        _ => unreachable!(),
+    };
+    assert!((got - expect).abs() < 1e-4 * expect.abs().max(1.0), "{got} vs {expect}");
+}
+
+#[test]
+fn pjrt_compute_pads_to_variant() {
+    let Some(dir) = artifacts() else { return };
+    // 5 rows: no artifact variant — must pad to rows=8 exactly.
+    let shard = rand_shard(5, 4, 3);
+    let w: Vec<f32> = vec![1.0, 0.0, -1.0, 0.5];
+    let mut pjrt = PjrtCompute::new(&dir).unwrap();
+    let got = match pjrt.run(&shard, &JobSpec::Grad { w: Arc::new(w.clone()) }).unwrap() {
+        JobOut::Grad(g) => g,
+        _ => unreachable!(),
+    };
+    let mut mock = MockCompute;
+    let expect = match mock.run(&shard, &JobSpec::Grad { w: Arc::new(w) }).unwrap() {
+        JobOut::Grad(g) => g,
+        _ => unreachable!(),
+    };
+    for (a, e) in got.grad.iter().zip(&expect.grad) {
+        assert!((a - e).abs() < 1e-3 * e.abs().max(1.0), "padding broke grad: {a} vs {e}");
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    engine.prepare("grad", 8, 4).unwrap();
+    let shard = rand_shard(8, 4, 4);
+    let w = vec![0.1f32; 4];
+    // Repeated executions on the cached executable must agree exactly.
+    let o1 = engine.grad(8, 4, &shard.x, &shard.y, &w).unwrap();
+    let o2 = engine.grad(8, 4, &shard.x, &shard.y, &w).unwrap();
+    assert_eq!(o1, o2);
+}
+
+#[test]
+fn larger_variant_executes() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let rows = 512;
+    let dim = 64;
+    if engine.manifest().find("grad", rows, dim).is_err() {
+        eprintln!("SKIP: no grad r{rows} d{dim} artifact");
+        return;
+    }
+    let shard = rand_shard(rows, dim, 5);
+    let w = vec![0.01f32; dim];
+    let out = engine.grad(rows, dim, &shard.x, &shard.y, &w).unwrap();
+    assert_eq!(out.grad.len(), dim);
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+}
+
+#[test]
+fn input_shape_validation() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    assert!(engine.grad(8, 4, &[0.0; 31], &[0.0; 8], &[0.0; 4]).is_err());
+    assert!(engine.grad(8, 4, &[0.0; 32], &[0.0; 7], &[0.0; 4]).is_err());
+    assert!(engine.mapsum(8, 4, &[0.0; 32], &[0.0; 3], &[0.0; 4]).is_err());
+}

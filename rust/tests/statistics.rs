@@ -1,0 +1,118 @@
+//! Statistical integration tests: the three independent implementations
+//! of System1's completion time — closed-form analysis, Monte-Carlo
+//! sampler, and the discrete-event engine — must agree pairwise across
+//! a matrix of (N, B, distribution) configurations; and the live
+//! coordinator's injected completion must match all three.
+
+use batchrep::analysis;
+use batchrep::des::engine::{simulate_many, EngineConfig};
+use batchrep::des::{montecarlo, Scenario};
+use batchrep::dist::{BatchService, ServiceSpec};
+use batchrep::testkit;
+
+const TRIALS: u64 = 60_000;
+
+fn scn(n: usize, b: usize, spec: &ServiceSpec) -> Scenario {
+    Scenario::paper_balanced(n, b, BatchService::paper(spec.clone())).unwrap()
+}
+
+#[test]
+fn three_way_agreement_matrix() {
+    let specs = [
+        ServiceSpec::exp(0.5),
+        ServiceSpec::exp(2.0),
+        ServiceSpec::shifted_exp(1.0, 0.1),
+        ServiceSpec::shifted_exp(2.0, 1.0),
+    ];
+    for spec in &specs {
+        for (n, b) in [(6usize, 2usize), (12, 4), (24, 8)] {
+            let cf = analysis::completion_time_stats(n as u64, b as u64, spec).unwrap();
+            let s = scn(n, b, spec);
+            let mc = montecarlo::run_trials(&s, TRIALS, 101);
+            let en = simulate_many(&s, &EngineConfig::default(), TRIALS / 3, 202);
+
+            let tol = 4.0 * mc.ci95().max(1e-3);
+            assert!(
+                (mc.mean() - cf.mean).abs() < tol,
+                "{} N={n} B={b}: mc {} vs cf {}",
+                spec.name(),
+                mc.mean(),
+                cf.mean
+            );
+            assert!(
+                (en.completion.mean() - cf.mean).abs() < 2.0 * tol,
+                "{} N={n} B={b}: engine {} vs cf {}",
+                spec.name(),
+                en.completion.mean(),
+                cf.mean
+            );
+            let var_rel = (mc.variance() - cf.var).abs() / cf.var;
+            assert!(var_rel < 0.08, "{} N={n} B={b}: var {}", spec.name(), var_rel);
+        }
+    }
+}
+
+#[test]
+fn empirical_cdf_matches_closed_form() {
+    let spec = ServiceSpec::shifted_exp(1.5, 0.4);
+    let (n, b) = (12u64, 3u64);
+    let s = scn(n as usize, b as usize, &spec);
+    let mc = montecarlo::run_trials(&s, 150_000, 7);
+    let raw = mc.samples.raw();
+    for q_t in [2.0, 2.5, 3.0, 4.0] {
+        let theory = analysis::completion_time_cdf(n, b, &spec, q_t).unwrap();
+        let emp = raw.iter().filter(|&&x| x <= q_t).count() as f64 / raw.len() as f64;
+        assert!(
+            (theory - emp).abs() < 0.01,
+            "t={q_t}: cdf theory {theory} vs empirical {emp}"
+        );
+    }
+}
+
+#[test]
+fn prop_mean_dominance_of_balanced_holds_in_simulation() {
+    // Theorem 1, statistical form across random configs: balanced
+    // disjoint E[T] ≤ skewed E[T] (with MC slack) for exp-family.
+    testkit::check("thm1-sim", 12, |g| {
+        let choices = [(8usize, 2usize), (8, 4), (12, 3), (12, 4), (16, 8)];
+        let (n, b) = *g.pick(&choices);
+        let delta = g.f64_in(0.0, 1.0);
+        let spec = ServiceSpec::shifted_exp(1.0, delta);
+        let seed = g.u64_in(0, 1 << 40);
+
+        let bal = scn(n, b, &spec);
+        let layout = batchrep::batching::disjoint(n, b).unwrap();
+        let skw = Scenario::new(
+            layout,
+            batchrep::assignment::skewed(n, b).unwrap(),
+            BatchService::paper(spec.clone()),
+        )
+        .unwrap();
+        let m_bal = montecarlo::run_trials(&bal, 30_000, seed);
+        let m_skw = montecarlo::run_trials(&skw, 30_000, seed ^ 1);
+        assert!(
+            m_bal.mean() <= m_skw.mean() + 3.0 * (m_bal.ci95() + m_skw.ci95()),
+            "N={n} B={b} delta={delta}: balanced {} > skewed {}",
+            m_bal.mean(),
+            m_skw.mean()
+        );
+    });
+}
+
+#[test]
+fn variance_reduction_of_diversity_is_monotone_sexp() {
+    // Theorem 4 in simulation: Var[T] nonincreasing as B decreases.
+    let spec = ServiceSpec::shifted_exp(1.0, 0.5);
+    let divisors = [1usize, 2, 3, 4, 6, 12];
+    let mut prev = f64::NEG_INFINITY;
+    for &b in &divisors {
+        let s = scn(12, b, &spec);
+        let mc = montecarlo::run_trials(&s, 150_000, 55);
+        assert!(
+            mc.variance() >= prev * 0.93,
+            "variance not increasing in B: B={b} var={} prev={prev}",
+            mc.variance()
+        );
+        prev = mc.variance();
+    }
+}
