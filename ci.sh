@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 gate for the batchrep crate (documented in ROADMAP.md).
+#
+#   ./ci.sh            # fmt check, release build, tests, bench smoke
+#
+# The bench smoke run uses BATCHREP_BENCH_FAST=1 so it finishes in
+# seconds; it exists to catch bench-target bit-rot, not to measure.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== bench smoke (bench_fig2, fast mode) =="
+BATCHREP_BENCH_FAST=1 cargo bench --bench bench_fig2
+
+echo "ci.sh: all gates passed"

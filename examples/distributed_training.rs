@@ -22,10 +22,13 @@ use batchrep::util::table::{fmt_f, Table};
 
 fn main() -> anyhow::Result<()> {
     let artifact_dir = batchrep::runtime::default_artifact_dir();
-    let backend = if artifact_dir.join("manifest.json").exists() {
+    let backend = if artifact_dir.join("manifest.json").exists() && cfg!(feature = "pjrt") {
         Backend::Pjrt
     } else {
-        eprintln!("note: artifacts missing, using mock backend (run `make artifacts`)");
+        eprintln!(
+            "note: artifacts or the `pjrt` feature missing, using mock backend \
+             (run `make artifacts` and build with --features pjrt)"
+        );
         Backend::Mock
     };
 

@@ -1,40 +1,82 @@
-//! Quickstart: the paper's question in 40 lines.
+//! Quickstart: the paper's question through the unified Evaluator API.
 //!
 //! "I have N workers and a parallelizable job whose per-sample service
 //! time is Shifted-Exponential. Into how many batches B should I split
 //! the data, replicating each batch on N/B workers?"
 //!
+//! One self-describing `Scenario` per point on the spectrum; the exact
+//! closed form and the Monte-Carlo simulator are just two backends
+//! consuming it — swapping them is a one-line change, and
+//! `cross_check` validates them against each other (the paper's own
+//! Fig. 2 theory-vs-simulation check).
+//!
 //!     cargo run --release --example quickstart
 
 use batchrep::analysis;
-use batchrep::des::{montecarlo, Scenario};
+use batchrep::des::Scenario;
 use batchrep::dist::{BatchService, ServiceSpec};
+use batchrep::evaluator::{
+    cross_check, AnalyticEvaluator, Evaluator, MonteCarloEvaluator, ReplicationPolicy,
+};
 
 fn main() -> anyhow::Result<()> {
-    let n = 24u64;
+    let n = 24usize;
     let spec = ServiceSpec::shifted_exp(1.0, 0.2); // mu=1, Delta=0.2
+    let mc = MonteCarloEvaluator { trials: 50_000, threads: 1 };
 
     println!("N = {n} workers, per-sample service {}\n", spec.name());
-    println!("{:>4} {:>6} {:>12} {:>12} {:>14}", "B", "g=N/B", "E[T] theory", "E[T] sim", "Var[T] theory");
-    for p in analysis::spectrum(n, &spec)? {
-        let scn = Scenario::paper_balanced(
-            n as usize,
-            p.b as usize,
+    println!(
+        "{:>4} {:>6} {:>12} {:>12} {:>12} {:>14}",
+        "B", "g=N/B", "E[T] theory", "E[T] sim", "p99 theory", "E[cost] theory"
+    );
+    for b in batchrep::assignment::feasible_batch_counts(n) {
+        let scn = Scenario::from_policy(
+            ReplicationPolicy::BalancedDisjoint,
+            n,
+            b,
             BatchService::paper(spec.clone()),
+            42 + b as u64,
         )?;
-        let mc = montecarlo::run_trials(&scn, 50_000, 42);
+        // Same scenario, two backends — validated against each other.
+        let ck = cross_check(&AnalyticEvaluator, &mc, &scn)?;
+        let exact = &ck.a;
+        let sim = &ck.b;
         println!(
-            "{:>4} {:>6} {:>12.4} {:>12.4} {:>14.4}",
-            p.b, p.g, p.stats.mean, mc.mean(), p.stats.var
+            "{:>4} {:>6} {:>12.4} {:>12.4} {:>12.4} {:>14.3}",
+            b,
+            n / b,
+            exact.mean,
+            sim.mean,
+            exact.quantile(0.99).unwrap(),
+            exact.cost.unwrap().busy,
         );
     }
 
-    let b_star = analysis::optimum_b(n, &spec);
-    let b_var = analysis::optimum_b_variance(n, &spec);
+    let b_star = analysis::optimum_b(n as u64, &spec);
+    let b_var = analysis::optimum_b_variance(n as u64, &spec);
     println!("\nmean-optimal  B* = {b_star}  (Theorem 3)");
     println!("variance-optimal B = {b_var}  (Theorem 4)");
     if b_star != b_var {
         println!("=> the paper's mean-variance trade-off: you cannot have both.");
     }
+
+    // The same scenario also runs on the event engine or the live
+    // system: e.g. `DesEvaluator::default().evaluate(&scn)` — see
+    // `batchrep evaluate --backend all`.
+    let scn = Scenario::from_policy(
+        ReplicationPolicy::BalancedDisjoint,
+        n,
+        b_star as usize,
+        BatchService::paper(spec),
+        42,
+    )?;
+    let des = batchrep::evaluator::DesEvaluator { trials: 20_000, ..Default::default() };
+    let engine = des.evaluate(&scn)?;
+    println!(
+        "\nevent engine at B*: E[T] = {:.4}, busy = {:.2} worker-s, wasted = {:.2} worker-s",
+        engine.mean,
+        engine.cost.unwrap().busy,
+        engine.cost.unwrap().wasted
+    );
     Ok(())
 }

@@ -12,7 +12,14 @@ fn main() {
         eprintln!("SKIP bench_runtime: no artifacts (run `make artifacts`)");
         return;
     }
-    let mut engine = Engine::new(&dir).unwrap();
+    let mut engine = match Engine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            // Built without the `pjrt` feature (or artifacts unusable).
+            eprintln!("SKIP bench_runtime: {e}");
+            return;
+        }
+    };
     let mut suite = Suite::new("bench_runtime — PJRT execution");
     let mut rng = Rng::new(1);
     let dim = 64usize;

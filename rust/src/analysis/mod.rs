@@ -37,13 +37,9 @@ impl CtStats {
 }
 
 /// Extract `(mu, delta)` for the closed forms; only Exp and SExp have
-/// them (∆ = 0 for Exp).
+/// them (∆ = 0 for Exp). Thin alias over [`ServiceSpec::exp_family`].
 fn exp_family(spec: &ServiceSpec) -> Option<(f64, f64)> {
-    match spec {
-        ServiceSpec::Exp { mu } => Some((*mu, 0.0)),
-        ServiceSpec::ShiftedExp { mu, delta } => Some((*mu, *delta)),
-        _ => None,
-    }
+    spec.exp_family()
 }
 
 /// Closed-form completion-time statistics of System1 with `n` workers,

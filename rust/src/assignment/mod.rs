@@ -71,8 +71,13 @@ impl Assignment {
         Ok(())
     }
 
-    /// True when all replication degrees are equal (balanced).
+    /// True when all replication degrees are equal (balanced). The
+    /// degenerate empty assignment (`n_batches == 0`) is vacuously
+    /// balanced.
     pub fn is_balanced(&self) -> bool {
+        if self.n_batches == 0 {
+            return true;
+        }
         let g = self.replication(0);
         (0..self.n_batches).all(|b| self.replication(b) == g)
     }
@@ -269,6 +274,19 @@ mod tests {
         assert_eq!(a.replication(3), 1);
         let total: usize = (0..4).map(|b| a.replication(b)).sum();
         assert_eq!(total, 12);
+    }
+
+    #[test]
+    fn empty_assignment_is_balanced_without_panicking() {
+        // Regression: `is_balanced` used to index `workers_of_batch[0]`
+        // unconditionally and panicked on the empty assignment.
+        let a = Assignment {
+            n_workers: 0,
+            n_batches: 0,
+            workers_of_batch: Vec::new(),
+            batch_of_worker: Vec::new(),
+        };
+        assert!(a.is_balanced());
     }
 
     #[test]

@@ -74,6 +74,14 @@ impl Args {
         Ok(self.get(key)?.unwrap_or(default))
     }
 
+    /// Deterministic root seed (`--seed N`), defaulting to `default`.
+    /// Subcommands pass this single value into every evaluator (via the
+    /// scenario or the experiment context), so tables are
+    /// bit-reproducible across runs.
+    pub fn seed(&self, default: u64) -> anyhow::Result<u64> {
+        self.get_or("seed", default)
+    }
+
     /// Boolean flag presence (`--foo`).
     pub fn flag(&self, key: &str) -> bool {
         self.consumed.borrow_mut().push(key.to_string());
@@ -144,5 +152,14 @@ mod tests {
     fn defaults() {
         let a = parse("x");
         assert_eq!(a.get_or::<u64>("trials", 77).unwrap(), 77);
+    }
+
+    #[test]
+    fn seed_helper() {
+        let a = parse("x --seed 9");
+        assert_eq!(a.seed(42).unwrap(), 9);
+        a.finish().unwrap();
+        let b = parse("x");
+        assert_eq!(b.seed(42).unwrap(), 42);
     }
 }

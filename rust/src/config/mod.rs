@@ -30,7 +30,11 @@ pub struct SystemConfig {
     pub batch_model: BatchModel,
     /// Cancel sibling replicas on batch completion (live + engine).
     pub cancellation: bool,
-    /// Root RNG seed.
+    /// Speculative-relaunch deadline factor; 0 = upfront replication
+    /// (the paper's model). Nonzero values make the scenario's
+    /// redundancy mode `Speculative { deadline_factor }`.
+    pub speculative: f64,
+    /// Root RNG seed (plumbed into every evaluator via the scenario).
     pub seed: u64,
     /// Monte-Carlo / engine trial count.
     pub trials: u64,
@@ -59,6 +63,7 @@ impl Default for SystemConfig {
             service: ServiceSpec::shifted_exp(1.0, 0.2),
             batch_model: BatchModel::SizeScaled,
             cancellation: true,
+            speculative: 0.0,
             seed: 42,
             trials: 100_000,
             artifacts_dir: "artifacts".to_string(),
@@ -113,6 +118,7 @@ impl SystemConfig {
             "service" => self.service = ServiceSpec::parse(&want_s()?)?,
             "batch_model" => self.batch_model = BatchModel::parse(&want_s()?)?,
             "cancellation" => self.cancellation = want_b()?,
+            "speculative" => self.speculative = want_f()?,
             "seed" => self.seed = want_i()? as u64,
             "trials" => self.trials = want_i()? as u64,
             "artifacts_dir" => self.artifacts_dir = want_s()?,
@@ -134,6 +140,7 @@ impl SystemConfig {
             "need 1 <= n_batches <= n_workers"
         );
         anyhow::ensure!(self.time_scale > 0.0, "time_scale must be positive");
+        anyhow::ensure!(self.speculative >= 0.0, "speculative factor must be >= 0");
         anyhow::ensure!(
             matches!(self.kernel.as_str(), "grad" | "mapsum"),
             "kernel must be 'grad' or 'mapsum'"
@@ -142,23 +149,48 @@ impl SystemConfig {
         Ok(())
     }
 
-    /// Build the simulation [`crate::des::Scenario`] this config
-    /// describes.
+    /// The [`ReplicationPolicy`] this config describes (assignment
+    /// policy plus the overlapping-layout flag).
+    pub fn replication_policy(&self) -> crate::evaluator::ReplicationPolicy {
+        use crate::evaluator::ReplicationPolicy as Rp;
+        if self.overlapping {
+            return Rp::OverlappingCyclic;
+        }
+        match self.policy {
+            Policy::BalancedDisjoint => Rp::BalancedDisjoint,
+            Policy::RandomBalanced => Rp::RandomBalanced,
+            Policy::SkewedUnbalanced => Rp::SkewedUnbalanced,
+            Policy::FullDiversity => Rp::FullDiversity,
+            Policy::FullParallelism => Rp::FullParallelism,
+        }
+    }
+
+    /// Build the fully self-describing [`crate::des::Scenario`] this
+    /// config describes — the value every evaluator backend consumes.
     pub fn scenario(&self) -> anyhow::Result<crate::des::Scenario> {
-        let mut rng = crate::util::rng::Rng::new(self.seed ^ 0x5EED);
-        let assignment = self.policy.assign(self.n_workers, self.n_batches, &mut rng)?;
-        let eff_b = assignment.n_batches;
-        let layout = if self.overlapping {
-            let stride = self.n_workers / eff_b;
-            crate::batching::overlapping(self.n_workers, eff_b, stride)?
+        // The overlapping layout fixes the assignment to one cyclic
+        // window per worker; refuse to silently discard an explicitly
+        // requested assignment policy.
+        anyhow::ensure!(
+            !self.overlapping || self.policy == Policy::BalancedDisjoint,
+            "overlapping layout is incompatible with policy '{}'; \
+             it implies one cyclic window per worker (leave policy at \
+             balanced_disjoint)",
+            self.policy.name()
+        );
+        let redundancy = if self.speculative > 0.0 {
+            crate::des::engine::Redundancy::Speculative { deadline_factor: self.speculative }
         } else {
-            crate::batching::disjoint(self.n_workers, eff_b)?
+            crate::des::engine::Redundancy::Upfront
         };
-        crate::des::Scenario::new(
-            layout,
-            assignment,
+        Ok(crate::des::Scenario::from_policy(
+            self.replication_policy(),
+            self.n_workers,
+            self.n_batches,
             crate::dist::BatchService { spec: self.service.clone(), model: self.batch_model },
-        )
+            self.seed,
+        )?
+        .with_redundancy(redundancy))
     }
 }
 
@@ -206,6 +238,34 @@ mod tests {
         let doc = toml::parse("n_workers = 2\nn_batches = 5").unwrap();
         let mut cfg = SystemConfig::default();
         assert!(cfg.apply_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn scenario_is_self_describing() {
+        let cfg = SystemConfig { seed: 123, speculative: 1.5, ..SystemConfig::default() };
+        let scn = cfg.scenario().unwrap();
+        assert_eq!(scn.seed, 123);
+        match scn.redundancy {
+            crate::des::engine::Redundancy::Speculative { deadline_factor } => {
+                assert_eq!(deadline_factor, 1.5)
+            }
+            other => panic!("expected speculative redundancy, got {other:?}"),
+        }
+        assert_eq!(scn.policy, crate::evaluator::ReplicationPolicy::BalancedDisjoint);
+        let overlap = SystemConfig { overlapping: true, ..SystemConfig::default() };
+        assert_eq!(
+            overlap.replication_policy(),
+            crate::evaluator::ReplicationPolicy::OverlappingCyclic
+        );
+        assert!(overlap.scenario().unwrap().layout.is_overlapping);
+        // Overlapping + an explicit non-balanced policy is refused
+        // rather than silently discarding the policy.
+        let clash = SystemConfig {
+            overlapping: true,
+            policy: Policy::SkewedUnbalanced,
+            ..SystemConfig::default()
+        };
+        assert!(clash.scenario().is_err());
     }
 
     #[test]

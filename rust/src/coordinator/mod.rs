@@ -80,6 +80,9 @@ pub struct Coordinator {
     results: Receiver<ResultMsg>,
     rng: Rng,
     next_job: u64,
+    /// Per-worker speed multipliers for the injected delays (`None` =
+    /// homogeneous) — the live analogue of `Scenario::worker_speeds`.
+    speeds: Option<Vec<f64>>,
     /// Metrics across all jobs run by this coordinator.
     pub metrics: RunMetrics,
 }
@@ -97,7 +100,48 @@ impl Coordinator {
         } else {
             crate::batching::disjoint(cfg.n_workers, eff_b)?
         };
+        Self::from_parts(cfg, layout, assignment, None, backend)
+    }
+
+    /// Build a live System1 directly from a validated [`Scenario`] —
+    /// the [`crate::evaluator::LiveEvaluator`] entry point. The
+    /// scenario supplies structure (layout, assignment, service law,
+    /// speeds, seed); `cfg` supplies the live-only knobs (time scale,
+    /// dataset size, dimension, cancellation, artifacts dir).
+    pub fn from_scenario(
+        scn: &crate::des::Scenario,
+        mut cfg: SystemConfig,
+        backend: Backend,
+    ) -> anyhow::Result<Coordinator> {
+        cfg.n_workers = scn.n_workers();
+        cfg.n_batches = scn.assignment.n_batches;
+        cfg.overlapping = scn.layout.is_overlapping;
+        cfg.service = scn.service.spec.clone();
+        cfg.batch_model = scn.service.model;
+        cfg.seed = scn.seed;
+        Self::from_parts(
+            cfg,
+            scn.layout.clone(),
+            scn.assignment.clone(),
+            scn.worker_speeds.clone(),
+            backend,
+        )
+    }
+
+    fn from_parts(
+        cfg: SystemConfig,
+        layout: DataLayout,
+        assignment: Assignment,
+        speeds: Option<Vec<f64>>,
+        backend: Backend,
+    ) -> anyhow::Result<Coordinator> {
+        cfg.validate()?;
         layout.validate()?;
+        assignment.validate()?;
+        if let Some(sp) = &speeds {
+            anyhow::ensure!(sp.len() == cfg.n_workers, "need one speed per worker");
+        }
+        let rng = Rng::new(cfg.seed);
         let dataset = Arc::new(Dataset::synth_regression(
             cfg.n_samples,
             cfg.dim,
@@ -143,6 +187,7 @@ impl Coordinator {
             workers,
             results: res_rx,
             next_job: 0,
+            speeds,
             metrics: RunMetrics::new(),
             cfg,
         })
@@ -176,8 +221,11 @@ impl Coordinator {
         let mut max_injected_winner = 0f64;
         for w in 0..n {
             let batch = self.assignment.batch_of_worker[w];
-            let delay =
+            let mut delay =
                 self.cfg.time_scale * self.service.sample_batch(s_units, &mut self.rng);
+            if let Some(speeds) = &self.speeds {
+                delay *= speeds[w];
+            }
             self.workers[w]
                 .tx
                 .send(TaskMsg {
@@ -261,8 +309,9 @@ impl Coordinator {
             }
         }
 
-        let completion = completion_wall
-            .ok_or_else(|| anyhow::anyhow!("round ended without coverage (all replicas cancelled?)"))?;
+        let completion = completion_wall.ok_or_else(|| {
+            anyhow::anyhow!("round ended without coverage (all replicas cancelled?)")
+        })?;
         self.metrics.push(JobRecord {
             job_id,
             completion_s: completion,

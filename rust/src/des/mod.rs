@@ -11,6 +11,12 @@
 //!   paper's upfront replication competes against), heterogeneous worker
 //!   speeds, and cost accounting (busy/wasted worker-seconds) — the
 //!   quantities the closed forms do not cover.
+//!
+//! The [`Scenario`] defined here is the common input of *every*
+//! evaluation backend (see [`crate::evaluator`]): it carries the data
+//! layout, the assignment, the batch service law, and — so that it is
+//! fully self-describing — the [`ReplicationPolicy`] that built it, the
+//! redundancy activation mode, and the root RNG seed.
 
 pub mod engine;
 pub mod montecarlo;
@@ -18,8 +24,13 @@ pub mod montecarlo;
 use crate::assignment::Assignment;
 use crate::batching::DataLayout;
 use crate::dist::BatchService;
+use crate::evaluator::ReplicationPolicy;
 
-/// A fully specified simulation scenario.
+/// Default root seed for scenarios built without an explicit one.
+pub const DEFAULT_SEED: u64 = 42;
+
+/// A fully specified evaluation scenario — the single input type every
+/// backend (analytic, Monte-Carlo, DES, live) consumes.
 #[derive(Debug, Clone)]
 pub struct Scenario {
     /// Sample→batch layout (stage 1).
@@ -32,10 +43,19 @@ pub struct Scenario {
     /// ablation); service time is multiplied by this factor. `None` =
     /// homogeneous.
     pub worker_speeds: Option<Vec<f64>>,
+    /// How the layout/assignment pair was built (`Custom` when supplied
+    /// directly to [`Scenario::new`]).
+    pub policy: ReplicationPolicy,
+    /// Redundancy activation mode backends should model.
+    pub redundancy: engine::Redundancy,
+    /// Root RNG seed: all stochastic backends derive their randomness
+    /// from it, so results are bit-reproducible given one scenario.
+    pub seed: u64,
 }
 
 impl Scenario {
-    /// Construct and validate a scenario.
+    /// Construct and validate a scenario from explicit parts (policy is
+    /// recorded as [`ReplicationPolicy::Custom`]).
     pub fn new(
         layout: DataLayout,
         assignment: Assignment,
@@ -49,7 +69,34 @@ impl Scenario {
         );
         layout.validate()?;
         assignment.validate()?;
-        Ok(Self { layout, assignment, service, worker_speeds: None })
+        Ok(Self {
+            layout,
+            assignment,
+            service,
+            worker_speeds: None,
+            policy: ReplicationPolicy::Custom,
+            redundancy: engine::Redundancy::Upfront,
+            seed: DEFAULT_SEED,
+        })
+    }
+
+    /// Build a scenario from a [`ReplicationPolicy`]: `n` workers, `b`
+    /// batches, `U = n` data units. Any assignment randomness (e.g.
+    /// `RandomBalanced`) is derived from `seed`, so the scenario is
+    /// reproducible from its own fields.
+    pub fn from_policy(
+        policy: ReplicationPolicy,
+        n_workers: usize,
+        n_batches: usize,
+        service: BatchService,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0xA551_6E5E);
+        let (layout, assignment) = policy.build(n_workers, n_batches, &mut rng)?;
+        let mut scn = Self::new(layout, assignment, service)?;
+        scn.policy = policy;
+        scn.seed = seed;
+        Ok(scn)
     }
 
     /// Attach heterogeneous worker speed factors.
@@ -61,6 +108,18 @@ impl Scenario {
         anyhow::ensure!(speeds.iter().all(|&s| s > 0.0), "speeds must be positive");
         self.worker_speeds = Some(speeds);
         Ok(self)
+    }
+
+    /// Set the redundancy activation mode.
+    pub fn with_redundancy(mut self, redundancy: engine::Redundancy) -> Self {
+        self.redundancy = redundancy;
+        self
+    }
+
+    /// Set the root RNG seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
     }
 
     /// Number of workers.
@@ -82,7 +141,9 @@ impl Scenario {
     ) -> anyhow::Result<Self> {
         let layout = crate::batching::disjoint(n, b)?;
         let assignment = crate::assignment::balanced(n, b)?;
-        Self::new(layout, assignment, service)
+        let mut scn = Self::new(layout, assignment, service)?;
+        scn.policy = ReplicationPolicy::BalancedDisjoint;
+        Ok(scn)
     }
 }
 
@@ -106,5 +167,21 @@ mod tests {
         assert!(s.clone().with_speeds(vec![1.0; 3]).is_err());
         assert!(s.clone().with_speeds(vec![1.0, 1.0, 0.0, 1.0]).is_err());
         assert!(s.with_speeds(vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn scenarios_are_self_describing() {
+        let svc = BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.2));
+        let scn = Scenario::from_policy(ReplicationPolicy::RandomBalanced, 12, 3, svc, 7)
+            .unwrap()
+            .with_redundancy(engine::Redundancy::Speculative { deadline_factor: 2.0 });
+        assert_eq!(scn.policy, ReplicationPolicy::RandomBalanced);
+        assert_eq!(scn.seed, 7);
+        assert!(matches!(scn.redundancy, engine::Redundancy::Speculative { .. }));
+        // Same seed ⇒ same (possibly random) assignment.
+        let svc2 = BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.2));
+        let again =
+            Scenario::from_policy(ReplicationPolicy::RandomBalanced, 12, 3, svc2, 7).unwrap();
+        assert_eq!(scn.assignment, again.assignment);
     }
 }

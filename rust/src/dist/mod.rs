@@ -1,0 +1,428 @@
+//! Service-time distributions and the size-dependent batch service
+//! model (Gardner et al.) the paper builds on.
+//!
+//! A [`ServiceSpec`] is the per-unit service-time law τ; a
+//! [`BatchService`] composes it into the service time of a batch of `s`
+//! units under one of three [`BatchModel`]s. The paper's analysis uses
+//! the **size-scaled** composition (`s·τ`), under which balanced
+//! replication exactly cancels the size penalty — the identity at the
+//! heart of Theorems 2–4. The other two models are ablation points.
+//!
+//! Specs have a compact string form (`exp:1.0`, `sexp:1.0,0.2`,
+//! `pareto:0.5,2.2`, `weibull:0.6,1.0`, `det:0.5`, `trace:path.csv`)
+//! used by the config system and the CLI.
+
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Per-unit service-time distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServiceSpec {
+    /// Exponential with rate `mu` (mean `1/mu`).
+    Exp {
+        /// Service rate µ.
+        mu: f64,
+    },
+    /// Shifted-Exponential: `delta + Exp(mu)`.
+    ShiftedExp {
+        /// Rate of the exponential part.
+        mu: f64,
+        /// Deterministic shift ∆ ≥ 0.
+        delta: f64,
+    },
+    /// Pareto with scale `xm` and tail index `alpha` (heavy-tailed
+    /// robustness case; violates the paper's dec-convex hypothesis).
+    Pareto {
+        /// Scale (minimum value) x_m > 0.
+        xm: f64,
+        /// Tail index α > 0.
+        alpha: f64,
+    },
+    /// Weibull with shape `k` and scale `lambda` (k < 1 is heavy-tailed).
+    Weibull {
+        /// Shape k > 0.
+        shape: f64,
+        /// Scale λ > 0.
+        scale: f64,
+    },
+    /// Degenerate point mass (zero-randomness baseline and benchmarks).
+    Deterministic {
+        /// The constant service time.
+        value: f64,
+    },
+    /// Empirical distribution replayed by i.i.d. resampling from a
+    /// recorded trace (see [`crate::trace`]).
+    Trace {
+        /// Recorded per-unit service times.
+        samples: Arc<Vec<f64>>,
+    },
+}
+
+impl ServiceSpec {
+    /// Exponential with rate `mu`.
+    pub fn exp(mu: f64) -> ServiceSpec {
+        assert!(mu > 0.0, "exp rate must be positive");
+        ServiceSpec::Exp { mu }
+    }
+
+    /// Shifted-Exponential `delta + Exp(mu)`.
+    pub fn shifted_exp(mu: f64, delta: f64) -> ServiceSpec {
+        assert!(mu > 0.0, "sexp rate must be positive");
+        assert!(delta >= 0.0, "sexp shift must be nonnegative");
+        ServiceSpec::ShiftedExp { mu, delta }
+    }
+
+    /// Pareto with scale `xm` and tail index `alpha`.
+    pub fn pareto(xm: f64, alpha: f64) -> ServiceSpec {
+        assert!(xm > 0.0 && alpha > 0.0, "pareto parameters must be positive");
+        ServiceSpec::Pareto { xm, alpha }
+    }
+
+    /// Weibull with shape `shape` and scale `scale`.
+    pub fn weibull(shape: f64, scale: f64) -> ServiceSpec {
+        assert!(shape > 0.0 && scale > 0.0, "weibull parameters must be positive");
+        ServiceSpec::Weibull { shape, scale }
+    }
+
+    /// Compact spec string (round-trips through [`ServiceSpec::parse`]
+    /// for the parametric families).
+    pub fn name(&self) -> String {
+        match self {
+            ServiceSpec::Exp { mu } => format!("exp:{mu}"),
+            ServiceSpec::ShiftedExp { mu, delta } => format!("sexp:{mu},{delta}"),
+            ServiceSpec::Pareto { xm, alpha } => format!("pareto:{xm},{alpha}"),
+            ServiceSpec::Weibull { shape, scale } => format!("weibull:{shape},{scale}"),
+            ServiceSpec::Deterministic { value } => format!("det:{value}"),
+            ServiceSpec::Trace { samples } => format!("trace[{} samples]", samples.len()),
+        }
+    }
+
+    /// Parse a compact spec string: `exp:MU`, `sexp:MU,DELTA`,
+    /// `pareto:XM,ALPHA`, `weibull:SHAPE,SCALE`, `det:VALUE`, or
+    /// `trace:PATH` (one value per line).
+    pub fn parse(s: &str) -> anyhow::Result<ServiceSpec> {
+        let (kind, rest) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("service spec '{s}' missing ':' (e.g. sexp:1.0,0.2)"))?;
+        let one = || -> anyhow::Result<f64> {
+            rest.trim()
+                .parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("bad number in '{s}': {e}"))
+        };
+        let two = || -> anyhow::Result<(f64, f64)> {
+            let (a, b) = rest
+                .split_once(',')
+                .ok_or_else(|| anyhow::anyhow!("spec '{s}' needs two comma-separated numbers"))?;
+            Ok((
+                a.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("bad number in '{s}': {e}"))?,
+                b.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("bad number in '{s}': {e}"))?,
+            ))
+        };
+        let spec = match kind {
+            "exp" => {
+                let mu = one()?;
+                anyhow::ensure!(mu > 0.0, "exp rate must be positive");
+                ServiceSpec::Exp { mu }
+            }
+            "sexp" => {
+                let (mu, delta) = two()?;
+                anyhow::ensure!(mu > 0.0 && delta >= 0.0, "need mu > 0, delta >= 0");
+                ServiceSpec::ShiftedExp { mu, delta }
+            }
+            "pareto" => {
+                let (xm, alpha) = two()?;
+                anyhow::ensure!(xm > 0.0 && alpha > 0.0, "need xm > 0, alpha > 0");
+                ServiceSpec::Pareto { xm, alpha }
+            }
+            "weibull" => {
+                let (shape, scale) = two()?;
+                anyhow::ensure!(shape > 0.0 && scale > 0.0, "need shape > 0, scale > 0");
+                ServiceSpec::Weibull { shape, scale }
+            }
+            "det" => {
+                let value = one()?;
+                anyhow::ensure!(value >= 0.0, "deterministic value must be nonnegative");
+                ServiceSpec::Deterministic { value }
+            }
+            "trace" => {
+                let samples = crate::trace::load_trace(std::path::Path::new(rest.trim()))?;
+                anyhow::ensure!(!samples.is_empty(), "trace file '{rest}' is empty");
+                ServiceSpec::Trace { samples: Arc::new(samples) }
+            }
+            other => anyhow::bail!("unknown service spec kind '{other}'"),
+        };
+        Ok(spec)
+    }
+
+    /// Draw one per-unit service time.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            ServiceSpec::Exp { mu } => -rng.f64_open0().ln() / mu,
+            ServiceSpec::ShiftedExp { mu, delta } => delta - rng.f64_open0().ln() / mu,
+            ServiceSpec::Pareto { xm, alpha } => xm * rng.f64_open0().powf(-1.0 / alpha),
+            ServiceSpec::Weibull { shape, scale } => {
+                scale * (-rng.f64_open0().ln()).powf(1.0 / shape)
+            }
+            ServiceSpec::Deterministic { value } => *value,
+            ServiceSpec::Trace { samples } => samples[rng.below(samples.len() as u64) as usize],
+        }
+    }
+
+    /// Mean per-unit service time; `None` when infinite/undefined
+    /// (Pareto with α ≤ 1).
+    pub fn mean(&self) -> Option<f64> {
+        match self {
+            ServiceSpec::Exp { mu } => Some(1.0 / mu),
+            ServiceSpec::ShiftedExp { mu, delta } => Some(delta + 1.0 / mu),
+            ServiceSpec::Pareto { xm, alpha } => {
+                (*alpha > 1.0).then(|| xm * alpha / (alpha - 1.0))
+            }
+            ServiceSpec::Weibull { shape, scale } => Some(scale * gamma(1.0 + 1.0 / shape)),
+            ServiceSpec::Deterministic { value } => Some(*value),
+            ServiceSpec::Trace { samples } => {
+                Some(samples.iter().sum::<f64>() / samples.len() as f64)
+            }
+        }
+    }
+
+    /// `(mu, delta)` when this spec is in the exponential family the
+    /// paper's closed forms cover (∆ = 0 for plain Exponential).
+    pub fn exp_family(&self) -> Option<(f64, f64)> {
+        match self {
+            ServiceSpec::Exp { mu } => Some((*mu, 0.0)),
+            ServiceSpec::ShiftedExp { mu, delta } => Some((*mu, *delta)),
+            _ => None,
+        }
+    }
+
+    /// Infimum of the support (the deterministic part of the service).
+    pub fn shift(&self) -> f64 {
+        match self {
+            ServiceSpec::ShiftedExp { delta, .. } => *delta,
+            ServiceSpec::Pareto { xm, .. } => *xm,
+            ServiceSpec::Deterministic { value } => *value,
+            _ => 0.0,
+        }
+    }
+}
+
+/// How per-unit service composes into the service time of an `s`-unit
+/// batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchModel {
+    /// `T_batch = s·τ` — one slowdown draw scales the whole batch (the
+    /// paper/Gardner model; the worker is slow or fast for the entire
+    /// job).
+    SizeScaled,
+    /// `T_batch = (s−1)·shift + τ` — the data-proportional work is
+    /// deterministic and the random contention tail is independent of
+    /// batch size.
+    DecoupledSlowdown,
+    /// `T_batch = Σ_{i=1..s} τ_i` — independent per-sample draws
+    /// (averaging weakens the diversity gain).
+    PerSampleSum,
+}
+
+impl BatchModel {
+    /// Table/config identifier.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchModel::SizeScaled => "size_scaled",
+            BatchModel::DecoupledSlowdown => "decoupled_slowdown",
+            BatchModel::PerSampleSum => "per_sample_sum",
+        }
+    }
+
+    /// Parse from config string.
+    pub fn parse(s: &str) -> anyhow::Result<BatchModel> {
+        Ok(match s {
+            "size_scaled" => BatchModel::SizeScaled,
+            "decoupled_slowdown" => BatchModel::DecoupledSlowdown,
+            "per_sample_sum" => BatchModel::PerSampleSum,
+            _ => anyhow::bail!("unknown batch model '{s}'"),
+        })
+    }
+}
+
+/// A per-unit service law plus a composition model: the complete batch
+/// service-time description a scenario carries.
+#[derive(Debug, Clone)]
+pub struct BatchService {
+    /// Per-unit service-time distribution.
+    pub spec: ServiceSpec,
+    /// Composition model.
+    pub model: BatchModel,
+}
+
+impl BatchService {
+    /// The paper's model: size-scaled composition.
+    pub fn paper(spec: ServiceSpec) -> BatchService {
+        BatchService { spec, model: BatchModel::SizeScaled }
+    }
+
+    /// Draw the service time of one `s`-unit batch on one worker.
+    #[inline]
+    pub fn sample_batch(&self, s: u64, rng: &mut Rng) -> f64 {
+        let sf = s as f64;
+        match self.model {
+            BatchModel::SizeScaled => sf * self.spec.sample(rng),
+            BatchModel::DecoupledSlowdown => {
+                (sf - 1.0).max(0.0) * self.spec.shift() + self.spec.sample(rng)
+            }
+            BatchModel::PerSampleSum => (0..s).map(|_| self.spec.sample(rng)).sum(),
+        }
+    }
+
+    /// Mean batch service time; `None` when the per-unit mean is
+    /// infinite.
+    pub fn batch_mean(&self, s: u64) -> Option<f64> {
+        let m = self.spec.mean()?;
+        let sf = s as f64;
+        Some(match self.model {
+            BatchModel::SizeScaled | BatchModel::PerSampleSum => sf * m,
+            BatchModel::DecoupledSlowdown => (sf - 1.0).max(0.0) * self.spec.shift() + m,
+        })
+    }
+}
+
+/// Gamma function via the Lanczos approximation (g = 7, n = 9); used for
+/// the Weibull mean. Accurate to ~1e-13 over the range we need (x > 0).
+fn gamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        return std::f64::consts::PI / ((std::f64::consts::PI * x).sin() * gamma(1.0 - x));
+    }
+    let x = x - 1.0;
+    let mut a = C[0];
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    let t = x + G + 0.5;
+    (2.0 * std::f64::consts::PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_known_values() {
+        assert!((gamma(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+        assert!((gamma(1.0) - 1.0).abs() < 1e-12);
+        assert!((gamma(5.0) - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for s in ["exp:1.5", "sexp:1,0.2", "pareto:0.5,2.2", "weibull:0.6,1", "det:0.25"] {
+            let spec = ServiceSpec::parse(s).unwrap();
+            let again = ServiceSpec::parse(&spec.name()).unwrap();
+            assert_eq!(spec, again, "{s}");
+        }
+        assert!(ServiceSpec::parse("exp").is_err());
+        assert!(ServiceSpec::parse("exp:-1").is_err());
+        assert!(ServiceSpec::parse("sexp:1").is_err());
+        assert!(ServiceSpec::parse("mystery:1").is_err());
+    }
+
+    #[test]
+    fn sample_means_match_theory() {
+        let mut rng = Rng::new(7);
+        let specs = [
+            ServiceSpec::exp(2.0),
+            ServiceSpec::shifted_exp(1.0, 0.5),
+            ServiceSpec::pareto(0.5, 2.5),
+            ServiceSpec::weibull(1.5, 1.0),
+            ServiceSpec::Deterministic { value: 0.75 },
+        ];
+        for spec in &specs {
+            let n = 200_000;
+            let mean: f64 = (0..n).map(|_| spec.sample(&mut rng)).sum::<f64>() / n as f64;
+            let theory = spec.mean().unwrap();
+            assert!(
+                (mean - theory).abs() < 0.02 * theory.max(0.1),
+                "{}: empirical {mean} vs theory {theory}",
+                spec.name()
+            );
+        }
+    }
+
+    #[test]
+    fn samples_are_positive_and_shifted() {
+        let mut rng = Rng::new(3);
+        let sexp = ServiceSpec::shifted_exp(1.0, 0.4);
+        let par = ServiceSpec::pareto(0.7, 2.0);
+        for _ in 0..10_000 {
+            assert!(sexp.sample(&mut rng) >= 0.4);
+            assert!(par.sample(&mut rng) >= 0.7);
+        }
+    }
+
+    #[test]
+    fn pareto_heavy_tail_has_no_mean() {
+        assert!(ServiceSpec::pareto(1.0, 0.9).mean().is_none());
+        assert!(ServiceSpec::pareto(1.0, 1.1).mean().is_some());
+    }
+
+    #[test]
+    fn exp_family_extraction() {
+        assert_eq!(ServiceSpec::exp(2.0).exp_family(), Some((2.0, 0.0)));
+        assert_eq!(ServiceSpec::shifted_exp(1.0, 0.3).exp_family(), Some((1.0, 0.3)));
+        assert_eq!(ServiceSpec::pareto(1.0, 2.0).exp_family(), None);
+    }
+
+    #[test]
+    fn trace_resamples_recorded_values() {
+        let spec = ServiceSpec::Trace { samples: Arc::new(vec![1.0, 2.0, 3.0]) };
+        let mut rng = Rng::new(11);
+        for _ in 0..100 {
+            let x = spec.sample(&mut rng);
+            assert!(x == 1.0 || x == 2.0 || x == 3.0);
+        }
+        assert!((spec.mean().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_models_compose() {
+        let mut rng = Rng::new(5);
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let n = 100_000;
+        for model in
+            [BatchModel::SizeScaled, BatchModel::DecoupledSlowdown, BatchModel::PerSampleSum]
+        {
+            let svc = BatchService { spec: spec.clone(), model };
+            let mean: f64 =
+                (0..n).map(|_| svc.sample_batch(4, &mut rng)).sum::<f64>() / n as f64;
+            let theory = svc.batch_mean(4).unwrap();
+            assert!(
+                (mean - theory).abs() < 0.03 * theory,
+                "{}: {mean} vs {theory}",
+                model.name()
+            );
+        }
+        // Size-scaled and per-sample-sum share the mean but not the law.
+        let paper = BatchService::paper(spec.clone());
+        assert_eq!(paper.batch_mean(4), Some(4.0 * 1.2));
+        let dec = BatchService { spec, model: BatchModel::DecoupledSlowdown };
+        assert!((dec.batch_mean(4).unwrap() - (3.0 * 0.2 + 1.2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_mean_none_for_heavy_tails() {
+        let svc = BatchService::paper(ServiceSpec::pareto(1.0, 0.8));
+        assert!(svc.batch_mean(4).is_none());
+    }
+}

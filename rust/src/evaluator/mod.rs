@@ -1,0 +1,850 @@
+//! The unified `Scenario → Evaluator` layer: one abstraction over
+//! closed-form analysis, Monte-Carlo sampling, discrete-event
+//! simulation, and the live master–worker runtime.
+//!
+//! The paper's claims live in four places with historically incompatible
+//! entry points; this module makes them interchangeable **backends**
+//! behind a single trait. Every backend consumes the same validated
+//! [`Scenario`] (which carries its [`ReplicationPolicy`], redundancy
+//! mode, and RNG seed, so it is fully self-describing) and returns the
+//! same [`CompletionStats`]:
+//!
+//! * [`AnalyticEvaluator`] — Theorems 2–4 closed forms (exact;
+//!   Exponential/Shifted-Exponential, size-scaled, upfront only).
+//!   Balanced assignments use the harmonic-number forms; unbalanced
+//!   equal-size assignments use inclusion–exclusion over the maximum of
+//!   non-identical exponentials.
+//! * [`MonteCarloEvaluator`] — vectorized trial batches over the direct
+//!   completion-time sampler (reusable scratch, optional threading).
+//! * [`DesEvaluator`] — the full event engine: replica cancellation,
+//!   speculative relaunch, failure injection, and busy/wasted
+//!   worker-second cost accounting.
+//! * [`LiveEvaluator`] — the real coordinator + worker threads with
+//!   injected stragglers (mock or PJRT compute backend).
+//!
+//! [`cross_check`] runs two backends on one scenario and asserts their
+//! moments agree within tolerance — the paper's own Fig. 2 validation
+//! (theory vs simulation) as a reusable API call. [`sweep`] is the
+//! generic driver the experiments layer is built on: evaluate a
+//! scenario family over a list of batch counts with any backend.
+
+use crate::assignment::{Assignment, Policy};
+use crate::batching::DataLayout;
+use crate::config::SystemConfig;
+use crate::coordinator::{Backend, Coordinator};
+use crate::des::engine::{simulate_one_with, EngineConfig, Redundancy, Workspace};
+use crate::des::{montecarlo, Scenario};
+use crate::dist::{BatchModel, BatchService};
+use crate::util::harmonic::{harmonic, harmonic2};
+use crate::util::rng::Rng;
+use crate::util::stats::{Samples, Welford};
+use crate::worker::JobSpec;
+use std::sync::Arc;
+
+/// Quantiles every evaluator reports (when it can produce them).
+pub const QUANTILES: [f64; 4] = [0.5, 0.9, 0.99, 0.999];
+
+/// Expected redundancy bill of one job, in worker-seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostStats {
+    /// Mean busy worker-seconds (all work actually performed).
+    pub busy: f64,
+    /// Mean worker-seconds spent on replicas that did not win their
+    /// batch (cancelled or redundant) — the price of diversity.
+    pub wasted: f64,
+}
+
+/// Completion-time statistics in the common currency all evaluators
+/// speak.
+#[derive(Debug, Clone)]
+pub struct CompletionStats {
+    /// Expected job completion time.
+    pub mean: f64,
+    /// Variance of the completion time.
+    pub variance: f64,
+    /// `(q, t_q)` pairs at [`QUANTILES`], ascending in `q`; empty when
+    /// the backend cannot produce quantiles.
+    pub quantiles: Vec<(f64, f64)>,
+    /// Redundancy cost; `None` when the backend does not account cost.
+    pub cost: Option<CostStats>,
+    /// Standard error of `mean` (0 for exact backends).
+    pub sem: f64,
+    /// Trials/rounds behind the estimate (0 = closed form).
+    pub samples: u64,
+}
+
+impl CompletionStats {
+    /// Standard deviation of the completion time.
+    pub fn stddev(&self) -> f64 {
+        self.variance.sqrt()
+    }
+
+    /// 95% confidence half-width of the mean (0 for exact backends).
+    pub fn ci95(&self) -> f64 {
+        1.96 * self.sem
+    }
+
+    /// Look up a reported quantile.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        self.quantiles.iter().find(|(qq, _)| (qq - q).abs() < 1e-9).map(|&(_, t)| t)
+    }
+}
+
+/// A completion-time evaluation backend.
+pub trait Evaluator {
+    /// Stable backend identifier (tables, error messages).
+    fn name(&self) -> &'static str;
+
+    /// Evaluate a scenario, consuming its policy/redundancy/seed.
+    fn evaluate(&self, scn: &Scenario) -> anyhow::Result<CompletionStats>;
+}
+
+// ---------------------------------------------------------------------
+// Replication policy
+// ---------------------------------------------------------------------
+
+/// How the data layout and the batch→worker assignment are built — the
+/// paper's policy space plus the overlapping comparison class, unified
+/// so a scenario can describe itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicationPolicy {
+    /// The paper's optimum: disjoint batches, equal replication degrees.
+    BalancedDisjoint,
+    /// Balanced degrees, uniformly random batch→worker grouping
+    /// (completion-time–equivalent to balanced disjoint under i.i.d.
+    /// service).
+    RandomBalanced,
+    /// Maximally skewed replication degrees (Theorem 1's strawman).
+    SkewedUnbalanced,
+    /// Storage-equal overlapping comparison: `N` cyclic windows of
+    /// `N/B` units each, one per worker.
+    OverlappingCyclic,
+    /// One batch replicated everywhere (`B = 1`).
+    FullDiversity,
+    /// One worker per batch (`B = N`, no redundancy).
+    FullParallelism,
+    /// Layout/assignment supplied directly via [`Scenario::new`].
+    Custom,
+}
+
+impl ReplicationPolicy {
+    /// Every policy with a generic construction (excludes `Custom`).
+    pub fn all() -> &'static [ReplicationPolicy] {
+        &[
+            ReplicationPolicy::BalancedDisjoint,
+            ReplicationPolicy::RandomBalanced,
+            ReplicationPolicy::SkewedUnbalanced,
+            ReplicationPolicy::OverlappingCyclic,
+            ReplicationPolicy::FullDiversity,
+            ReplicationPolicy::FullParallelism,
+        ]
+    }
+
+    /// Table/config identifier.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicationPolicy::BalancedDisjoint => "balanced_disjoint",
+            ReplicationPolicy::RandomBalanced => "random_balanced",
+            ReplicationPolicy::SkewedUnbalanced => "skewed_unbalanced",
+            ReplicationPolicy::OverlappingCyclic => "overlapping_cyclic",
+            ReplicationPolicy::FullDiversity => "full_diversity",
+            ReplicationPolicy::FullParallelism => "full_parallelism",
+            ReplicationPolicy::Custom => "custom",
+        }
+    }
+
+    /// Parse from config string.
+    pub fn parse(s: &str) -> anyhow::Result<ReplicationPolicy> {
+        Ok(match s {
+            "balanced_disjoint" => ReplicationPolicy::BalancedDisjoint,
+            "random_balanced" => ReplicationPolicy::RandomBalanced,
+            "skewed_unbalanced" => ReplicationPolicy::SkewedUnbalanced,
+            "overlapping_cyclic" => ReplicationPolicy::OverlappingCyclic,
+            "full_diversity" => ReplicationPolicy::FullDiversity,
+            "full_parallelism" => ReplicationPolicy::FullParallelism,
+            _ => anyhow::bail!("unknown replication policy '{s}'"),
+        })
+    }
+
+    /// Build the `(layout, assignment)` pair for `n_batches` batches on
+    /// `n_workers` workers (`U = N` units, the paper's normalization).
+    pub fn build(
+        &self,
+        n_workers: usize,
+        n_batches: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<(DataLayout, Assignment)> {
+        let policy = match self {
+            ReplicationPolicy::BalancedDisjoint => Policy::BalancedDisjoint,
+            ReplicationPolicy::RandomBalanced => Policy::RandomBalanced,
+            ReplicationPolicy::SkewedUnbalanced => Policy::SkewedUnbalanced,
+            ReplicationPolicy::FullDiversity => Policy::FullDiversity,
+            ReplicationPolicy::FullParallelism => Policy::FullParallelism,
+            ReplicationPolicy::OverlappingCyclic => {
+                anyhow::ensure!(
+                    n_batches >= 1 && n_workers % n_batches == 0,
+                    "overlapping layout needs B | N (got N={n_workers}, B={n_batches})"
+                );
+                let assignment = crate::assignment::balanced(n_workers, n_workers)?;
+                let layout =
+                    crate::batching::overlapping(n_workers, n_workers, n_workers / n_batches)?;
+                return Ok((layout, assignment));
+            }
+            ReplicationPolicy::Custom => {
+                anyhow::bail!("Custom policy has no generic construction; use Scenario::new")
+            }
+        };
+        let assignment = policy.assign(n_workers, n_batches, rng)?;
+        let layout = crate::batching::disjoint(n_workers, assignment.n_batches)?;
+        Ok((layout, assignment))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Analytic backend
+// ---------------------------------------------------------------------
+
+/// Exact closed forms (paper Theorems 2–4 / Eq. 4) — requires
+/// Exponential or Shifted-Exponential per-unit service, the size-scaled
+/// batch model, disjoint layouts, homogeneous workers, and upfront
+/// replication. Errors otherwise: the caller should fall back to a
+/// simulation backend.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticEvaluator;
+
+impl Evaluator for AnalyticEvaluator {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn evaluate(&self, scn: &Scenario) -> anyhow::Result<CompletionStats> {
+        anyhow::ensure!(
+            !scn.layout.is_overlapping,
+            "analytic evaluator requires a disjoint layout"
+        );
+        anyhow::ensure!(
+            scn.worker_speeds.is_none(),
+            "analytic evaluator requires homogeneous workers"
+        );
+        anyhow::ensure!(
+            scn.redundancy == Redundancy::Upfront,
+            "analytic evaluator models upfront replication only"
+        );
+        anyhow::ensure!(
+            scn.service.model == BatchModel::SizeScaled,
+            "closed forms hold for the size-scaled batch model only"
+        );
+        let (mu, delta) = scn.service.spec.exp_family().ok_or_else(|| {
+            anyhow::anyhow!(
+                "closed forms cover exp/sexp service only, got {}",
+                scn.service.spec.name()
+            )
+        })?;
+        let b = scn.assignment.n_batches;
+        let s = scn.layout.batch_units() as f64;
+        let shift = s * delta;
+
+        // Cost under cancellation: every replica of batch i runs until
+        // the batch's earliest replica finishes at E[min_i] = s∆ + s/(gᵢµ).
+        let mut busy = 0.0;
+        let mut wasted = 0.0;
+        for i in 0..b {
+            let g = scn.assignment.replication(i) as f64;
+            let e_min = shift + s / (g * mu);
+            busy += g * e_min;
+            wasted += (g - 1.0) * e_min;
+        }
+
+        let (mean, variance, quantiles) = if scn.assignment.is_balanced() {
+            // Earliest replica of each batch ~ s∆ + Exp(gµ/s); the max of
+            // B i.i.d. such gives the harmonic forms (g = s recovers Eq. 4).
+            let g = scn.assignment.replication(0) as f64;
+            let rate = g * mu / s;
+            let bu = b as u64;
+            let mean = shift + harmonic(bu) / rate;
+            let variance = harmonic2(bu) / (rate * rate);
+            let quantiles = QUANTILES
+                .iter()
+                .map(|&q| (q, shift - (1.0 - q.powf(1.0 / b as f64)).ln() / rate))
+                .collect();
+            (mean, variance, quantiles)
+        } else {
+            // Unbalanced equal-size batches: inclusion–exclusion over the
+            // max of independent non-identical exponentials.
+            anyhow::ensure!(
+                b <= 20,
+                "inclusion–exclusion closed form limited to B <= 20 (got {b})"
+            );
+            let rates: Vec<f64> = (0..b)
+                .map(|i| scn.assignment.replication(i) as f64 * mu / s)
+                .collect();
+            let base = crate::analysis::max_of_exponentials_stats(&rates);
+            let quantiles = QUANTILES
+                .iter()
+                .map(|&q| (q, quantile_bisect(&rates, shift, q)))
+                .collect();
+            (shift + base.mean, base.var, quantiles)
+        };
+
+        Ok(CompletionStats {
+            mean,
+            variance,
+            quantiles,
+            cost: Some(CostStats { busy, wasted }),
+            sem: 0.0,
+            samples: 0,
+        })
+    }
+}
+
+/// Invert `P(T ≤ t) = Π_i (1 − e^{−λᵢ(t−shift)})` by bisection.
+fn quantile_bisect(rates: &[f64], shift: f64, q: f64) -> f64 {
+    let cdf = |t: f64| -> f64 {
+        rates.iter().map(|&l| 1.0 - (-l * (t - shift)).exp()).product()
+    };
+    let mut hi = 1.0;
+    while cdf(shift + hi) < q {
+        hi *= 2.0;
+        if hi > 1e12 {
+            break;
+        }
+    }
+    let (mut lo, mut hi) = (0.0, hi);
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if cdf(shift + mid) < q {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    shift + 0.5 * (lo + hi)
+}
+
+// ---------------------------------------------------------------------
+// Monte-Carlo backend
+// ---------------------------------------------------------------------
+
+/// Direct completion-time sampler: draws every worker's batch service
+/// time and reduces (per-batch min, global max / coverage). Trial
+/// batches reuse one scratch buffer; `threads > 1` shards trials over
+/// OS threads with independent RNG substreams (deterministic for a
+/// fixed `(seed, threads)` pair).
+#[derive(Debug, Clone, Copy)]
+pub struct MonteCarloEvaluator {
+    /// Number of independent trials.
+    pub trials: u64,
+    /// Worker threads (1 = sequential).
+    pub threads: usize,
+}
+
+impl Default for MonteCarloEvaluator {
+    fn default() -> Self {
+        Self { trials: 100_000, threads: 1 }
+    }
+}
+
+impl Evaluator for MonteCarloEvaluator {
+    fn name(&self) -> &'static str {
+        "montecarlo"
+    }
+
+    fn evaluate(&self, scn: &Scenario) -> anyhow::Result<CompletionStats> {
+        anyhow::ensure!(self.trials >= 1, "need at least one trial");
+        anyhow::ensure!(
+            scn.redundancy == Redundancy::Upfront,
+            "monte-carlo evaluator models upfront replication only; use DesEvaluator \
+             for speculative redundancy"
+        );
+        let mc = if self.threads > 1 {
+            montecarlo::run_trials_parallel(scn, self.trials, scn.seed, self.threads)
+        } else {
+            montecarlo::run_trials(scn, self.trials, scn.seed)
+        };
+        let mut samples = mc.samples.clone();
+        Ok(CompletionStats {
+            mean: mc.mean(),
+            variance: mc.variance(),
+            quantiles: quantiles_from(&mut samples),
+            cost: None,
+            sem: mc.welford.sem(),
+            samples: mc.welford.count(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Discrete-event backend
+// ---------------------------------------------------------------------
+
+/// Full event engine: models the mechanics the closed forms abstract
+/// away — replica cancellation, the scenario's redundancy mode
+/// (upfront or speculative), optional failure injection — and accounts
+/// busy/wasted worker-seconds, reported as [`CostStats`].
+#[derive(Debug, Clone, Copy)]
+pub struct DesEvaluator {
+    /// Number of simulated jobs.
+    pub trials: u64,
+    /// Cancel sibling replicas when a batch completes.
+    pub cancellation: bool,
+    /// Per-replica crash probability (0 = reliable cluster).
+    pub fail_prob: f64,
+    /// Stall-detection timeout as a multiple of the mean batch service.
+    pub relaunch_timeout_factor: f64,
+}
+
+impl Default for DesEvaluator {
+    fn default() -> Self {
+        Self { trials: 20_000, cancellation: true, fail_prob: 0.0, relaunch_timeout_factor: 3.0 }
+    }
+}
+
+impl Evaluator for DesEvaluator {
+    fn name(&self) -> &'static str {
+        "des"
+    }
+
+    fn evaluate(&self, scn: &Scenario) -> anyhow::Result<CompletionStats> {
+        anyhow::ensure!(self.trials >= 1, "need at least one trial");
+        let cfg = EngineConfig {
+            cancellation: self.cancellation,
+            redundancy: scn.redundancy,
+            fail_prob: self.fail_prob,
+            relaunch_timeout_factor: self.relaunch_timeout_factor,
+        };
+        let mut rng = Rng::new(scn.seed);
+        let mut ws = Workspace::default();
+        let mut completion = Welford::new();
+        let mut busy = Welford::new();
+        let mut wasted = Welford::new();
+        const SAMPLE_CAP: u64 = 200_000;
+        let keep_every = self.trials.div_ceil(SAMPLE_CAP).max(1);
+        let mut samples = Samples::with_capacity((self.trials / keep_every) as usize + 1);
+        for i in 0..self.trials {
+            let r = simulate_one_with(scn, &cfg, &mut rng, &mut ws);
+            completion.push(r.completion);
+            busy.push(r.busy);
+            wasted.push(r.wasted);
+            if i % keep_every == 0 {
+                samples.push(r.completion);
+            }
+        }
+        Ok(CompletionStats {
+            mean: completion.mean(),
+            variance: completion.variance(),
+            quantiles: quantiles_from(&mut samples),
+            cost: Some(CostStats { busy: busy.mean(), wasted: wasted.mean() }),
+            sem: completion.sem(),
+            samples: completion.count(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Live backend
+// ---------------------------------------------------------------------
+
+/// The real System1: coordinator + worker threads executing compute
+/// jobs with injected straggler delays and first-replica-wins
+/// cancellation. Completion is measured in injected service units
+/// (wall time divided by `time_scale`), so the numbers are directly
+/// comparable to the other backends.
+#[derive(Debug, Clone)]
+pub struct LiveEvaluator {
+    /// Job rounds to run (each round is one sample).
+    pub rounds: u64,
+    /// Compute backend worker threads construct.
+    pub backend: Backend,
+    /// Wall-clock seconds per unit of injected service time.
+    pub time_scale: f64,
+    /// Dataset rows (clamped up to the worker count).
+    pub n_samples: usize,
+    /// Model feature dimension.
+    pub dim: usize,
+    /// Cancel sibling replicas when a batch completes.
+    pub cancellation: bool,
+    /// Artifact directory for the PJRT backend; `None` = the crate's
+    /// default lookup (`$BATCHREP_ARTIFACTS`, then walking up).
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for LiveEvaluator {
+    fn default() -> Self {
+        Self {
+            rounds: 30,
+            backend: Backend::Mock,
+            time_scale: 0.002,
+            n_samples: 64,
+            dim: 4,
+            cancellation: true,
+            artifacts_dir: None,
+        }
+    }
+}
+
+impl Evaluator for LiveEvaluator {
+    fn name(&self) -> &'static str {
+        "live"
+    }
+
+    fn evaluate(&self, scn: &Scenario) -> anyhow::Result<CompletionStats> {
+        anyhow::ensure!(self.rounds >= 1, "need at least one round");
+        anyhow::ensure!(
+            scn.redundancy == Redundancy::Upfront,
+            "live evaluator models upfront replication only"
+        );
+        let mut cfg = SystemConfig {
+            time_scale: self.time_scale,
+            n_samples: self.n_samples.max(scn.n_workers()),
+            dim: self.dim,
+            cancellation: self.cancellation,
+            ..SystemConfig::default()
+        };
+        cfg.artifacts_dir = self.artifacts_dir.clone().unwrap_or_else(|| {
+            crate::runtime::default_artifact_dir().to_string_lossy().to_string()
+        });
+        let mut coord = Coordinator::from_scenario(scn, cfg, self.backend)?;
+        let w = Arc::new(vec![0.0f32; self.dim]);
+        let mut run = || -> anyhow::Result<()> {
+            for _ in 0..self.rounds {
+                coord.run_round(JobSpec::Grad { w: w.clone() })?;
+            }
+            Ok(())
+        };
+        let outcome = run();
+        let mut welford = Welford::new();
+        let mut samples = Samples::with_capacity(coord.metrics.len());
+        for rec in coord.metrics.records() {
+            let units = rec.injected_s / self.time_scale;
+            welford.push(units);
+            samples.push(units);
+        }
+        coord.shutdown();
+        outcome?;
+        anyhow::ensure!(welford.count() > 0, "live run produced no completed rounds");
+        Ok(CompletionStats {
+            mean: welford.mean(),
+            variance: welford.variance(),
+            quantiles: quantiles_from(&mut samples),
+            cost: None,
+            sem: welford.sem(),
+            samples: welford.count(),
+        })
+    }
+}
+
+fn quantiles_from(samples: &mut Samples) -> Vec<(f64, f64)> {
+    if samples.is_empty() {
+        return Vec::new();
+    }
+    QUANTILES.iter().map(|&q| (q, samples.quantile(q))).collect()
+}
+
+// ---------------------------------------------------------------------
+// Cross-backend validation and generic sweeps
+// ---------------------------------------------------------------------
+
+/// Result of a successful [`cross_check`].
+#[derive(Debug, Clone)]
+pub struct CrossCheck {
+    /// First backend's statistics.
+    pub a: CompletionStats,
+    /// Second backend's statistics.
+    pub b: CompletionStats,
+    /// `|a.mean − b.mean|`.
+    pub mean_diff: f64,
+    /// The tolerance the difference was held to.
+    pub tolerance: f64,
+}
+
+/// Evaluate `scn` under two backends and require their moments to
+/// agree: means within `max(4·SE_combined, 0.5% relative)` and, when
+/// both estimates are well-resolved, variances within 20% relative —
+/// the paper's Fig. 2 theory-vs-simulation validation as an API call.
+pub fn cross_check(
+    a: &dyn Evaluator,
+    b: &dyn Evaluator,
+    scn: &Scenario,
+) -> anyhow::Result<CrossCheck> {
+    let sa = a.evaluate(scn)?;
+    let sb = b.evaluate(scn)?;
+    let sem = (sa.sem * sa.sem + sb.sem * sb.sem).sqrt();
+    let tolerance = (4.0 * sem).max(0.005 * sa.mean.abs().max(sb.mean.abs()));
+    let mean_diff = (sa.mean - sb.mean).abs();
+    anyhow::ensure!(
+        mean_diff <= tolerance,
+        "{} and {} disagree on E[T]: {:.6} vs {:.6} (diff {:.6} > tol {:.6})",
+        a.name(),
+        b.name(),
+        sa.mean,
+        sb.mean,
+        mean_diff,
+        tolerance
+    );
+    let resolved = |s: &CompletionStats| s.samples == 0 || s.samples >= 10_000;
+    if sa.variance > 0.0 && sb.variance > 0.0 && resolved(&sa) && resolved(&sb) {
+        let rel = (sa.variance - sb.variance).abs() / sa.variance.max(sb.variance);
+        anyhow::ensure!(
+            rel < 0.2,
+            "{} and {} disagree on Var[T]: {:.6} vs {:.6}",
+            a.name(),
+            b.name(),
+            sa.variance,
+            sb.variance
+        );
+    }
+    Ok(CrossCheck { a: sa, b: sb, mean_diff, tolerance })
+}
+
+/// One point of an evaluator sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Batch count of this point.
+    pub b: usize,
+    /// The backend's statistics at this point.
+    pub stats: CompletionStats,
+}
+
+/// Generic sweep driver: evaluate the scenario `make(b)` at every `b`
+/// with one backend. The experiment drivers are thin wrappers over
+/// this.
+pub fn sweep<F>(
+    b_values: &[usize],
+    ev: &dyn Evaluator,
+    mut make: F,
+) -> anyhow::Result<Vec<SweepPoint>>
+where
+    F: FnMut(usize) -> anyhow::Result<Scenario>,
+{
+    b_values
+        .iter()
+        .map(|&b| Ok(SweepPoint { b, stats: ev.evaluate(&make(b)?)? }))
+        .collect()
+}
+
+/// Sweep the paper's canonical balanced-disjoint scenario family over
+/// every feasible batch count of `n`.
+pub fn paper_sweep(
+    n: usize,
+    ev: &dyn Evaluator,
+    service: &BatchService,
+    seed: u64,
+) -> anyhow::Result<Vec<SweepPoint>> {
+    let bs = crate::assignment::feasible_batch_counts(n);
+    sweep(&bs, ev, |b| {
+        Scenario::from_policy(
+            ReplicationPolicy::BalancedDisjoint,
+            n,
+            b,
+            service.clone(),
+            seed.wrapping_add(b as u64),
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis;
+    use crate::dist::ServiceSpec;
+    use crate::testkit;
+
+    fn paper_scn(n: usize, b: usize, spec: ServiceSpec, seed: u64) -> Scenario {
+        Scenario::from_policy(
+            ReplicationPolicy::BalancedDisjoint,
+            n,
+            b,
+            BatchService::paper(spec),
+            seed,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn analytic_matches_closed_forms() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let scn = paper_scn(24, 6, spec.clone(), 1);
+        let st = AnalyticEvaluator.evaluate(&scn).unwrap();
+        let cf = analysis::completion_time_stats(24, 6, &spec).unwrap();
+        assert!((st.mean - cf.mean).abs() < 1e-12);
+        assert!((st.variance - cf.var).abs() < 1e-12);
+        for &q in &[0.5, 0.99] {
+            let tq = analysis::completion_time_quantile(24, 6, &spec, q).unwrap();
+            assert!((st.quantile(q).unwrap() - tq).abs() < 1e-12, "q={q}");
+        }
+        let cost = st.cost.unwrap();
+        let expect = analysis::expected_cost(24, 6, &spec).unwrap();
+        assert!((cost.busy - expect).abs() < 1e-9);
+        assert!(cost.wasted < cost.busy);
+        assert_eq!(st.samples, 0);
+        assert_eq!(st.sem, 0.0);
+    }
+
+    #[test]
+    fn analytic_handles_unbalanced_assignments() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.3);
+        let layout = crate::batching::disjoint(12, 4).unwrap();
+        let assignment = crate::assignment::skewed(12, 4).unwrap();
+        let scn =
+            Scenario::new(layout, assignment.clone(), BatchService::paper(spec.clone())).unwrap();
+        let st = AnalyticEvaluator.evaluate(&scn).unwrap();
+        let via_ie = analysis::assignment_stats(&assignment, &spec, 12).unwrap();
+        assert!((st.mean - via_ie.mean).abs() < 1e-9);
+        assert!((st.variance - via_ie.var).abs() < 1e-9);
+        // Quantiles invert the product-form CDF: median above shift,
+        // p999 above p50.
+        let p50 = st.quantile(0.5).unwrap();
+        let p999 = st.quantile(0.999).unwrap();
+        assert!(p50 > 0.9 && p999 > p50, "p50={p50} p999={p999}");
+    }
+
+    #[test]
+    fn analytic_rejects_out_of_scope_scenarios() {
+        let spec = ServiceSpec::pareto(0.5, 2.2);
+        let scn = paper_scn(8, 2, spec, 1);
+        assert!(AnalyticEvaluator.evaluate(&scn).is_err());
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let spec_scn = paper_scn(8, 2, spec.clone(), 1)
+            .with_redundancy(Redundancy::Speculative { deadline_factor: 1.5 });
+        assert!(AnalyticEvaluator.evaluate(&spec_scn).is_err());
+        let overlap = Scenario::from_policy(
+            ReplicationPolicy::OverlappingCyclic,
+            8,
+            2,
+            BatchService::paper(spec),
+            1,
+        )
+        .unwrap();
+        assert!(AnalyticEvaluator.evaluate(&overlap).is_err());
+    }
+
+    // NOTE: the four-backends-one-scenario and Fig. 2 cross-check
+    // acceptance tests live in tests/evaluator_api.rs (public-API
+    // surface); they are intentionally not duplicated here.
+
+    #[test]
+    fn cross_check_rejects_disagreement() {
+        struct Wrong;
+        impl Evaluator for Wrong {
+            fn name(&self) -> &'static str {
+                "wrong"
+            }
+            fn evaluate(&self, _scn: &Scenario) -> anyhow::Result<CompletionStats> {
+                Ok(CompletionStats {
+                    mean: 1e6,
+                    variance: 1.0,
+                    quantiles: Vec::new(),
+                    cost: None,
+                    sem: 0.0,
+                    samples: 0,
+                })
+            }
+        }
+        let scn = paper_scn(8, 2, ServiceSpec::shifted_exp(1.0, 0.2), 3);
+        assert!(cross_check(&AnalyticEvaluator, &Wrong, &scn).is_err());
+    }
+
+    #[test]
+    fn des_cost_matches_analytic_cost() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let scn = paper_scn(12, 3, spec, 17);
+        let exact = AnalyticEvaluator.evaluate(&scn).unwrap().cost.unwrap();
+        let sim = DesEvaluator { trials: 40_000, ..DesEvaluator::default() }
+            .evaluate(&scn)
+            .unwrap()
+            .cost
+            .unwrap();
+        assert!(
+            (sim.busy - exact.busy).abs() / exact.busy < 0.03,
+            "busy: sim {} vs exact {}",
+            sim.busy,
+            exact.busy
+        );
+        assert!(
+            (sim.wasted - exact.wasted).abs() / exact.wasted.max(1e-9) < 0.05,
+            "wasted: sim {} vs exact {}",
+            sim.wasted,
+            exact.wasted
+        );
+    }
+
+    #[test]
+    fn des_models_speculative_redundancy_from_the_scenario() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let upfront = paper_scn(12, 3, spec.clone(), 5);
+        let reactive = paper_scn(12, 3, spec, 5)
+            .with_redundancy(Redundancy::Speculative { deadline_factor: 1.5 });
+        let ev = DesEvaluator { trials: 20_000, ..DesEvaluator::default() };
+        let up = ev.evaluate(&upfront).unwrap();
+        let re = ev.evaluate(&reactive).unwrap();
+        assert!(re.mean > up.mean, "reactive {} !> upfront {}", re.mean, up.mean);
+        assert!(
+            re.cost.unwrap().busy < up.cost.unwrap().busy,
+            "reactive must be cheaper"
+        );
+    }
+
+    #[test]
+    fn sweep_reproduces_theorem2_monotonicity() {
+        let service = BatchService::paper(ServiceSpec::exp(1.0));
+        let points = paper_sweep(12, &AnalyticEvaluator, &service, 1).unwrap();
+        assert_eq!(points.len(), crate::assignment::feasible_batch_counts(12).len());
+        for w in points.windows(2) {
+            assert!(w[1].stats.mean > w[0].stats.mean, "Theorem 2: E[T] increasing in B");
+        }
+    }
+
+    #[test]
+    fn prop_analytic_and_montecarlo_agree() {
+        // For random (N, B | N, exp-family spec) the two backends'
+        // means agree within 3 standard errors (with a 1% relative
+        // floor so near-deterministic cases are not over-tight).
+        testkit::check("evaluator-analytic-vs-mc", 20, |g| {
+            let n = *g.pick(&[4usize, 8, 12, 24]);
+            let divisors: Vec<usize> = (1..=n).filter(|b| n % b == 0).collect();
+            let b = *g.pick(&divisors);
+            let spec = if g.coin(0.5) {
+                ServiceSpec::exp(g.f64_in(0.5, 2.0))
+            } else {
+                ServiceSpec::shifted_exp(g.f64_in(0.5, 2.0), g.f64_in(0.0, 1.0))
+            };
+            let seed = g.u64_in(0, 1 << 40);
+            let scn = paper_scn(n, b, spec, seed);
+            let exact = AnalyticEvaluator.evaluate(&scn).unwrap();
+            let mc = MonteCarloEvaluator { trials: 60_000, threads: 1 }
+                .evaluate(&scn)
+                .unwrap();
+            let tol = (3.0 * mc.sem).max(0.01 * exact.mean);
+            assert!(
+                (exact.mean - mc.mean).abs() <= tol,
+                "N={n} B={b}: analytic {} vs mc {} (tol {tol})",
+                exact.mean,
+                mc.mean
+            );
+        });
+    }
+
+    #[test]
+    fn prop_policies_build_valid_scenarios() {
+        testkit::check("replication-policy-build", 100, |g| {
+            let n = *g.pick(&[4usize, 8, 12, 24]);
+            let divisors: Vec<usize> = (1..=n).filter(|b| n % b == 0).collect();
+            let b = *g.pick(&divisors);
+            let policy = *g.pick(ReplicationPolicy::all());
+            let mut rng = g.rng();
+            let (layout, assignment) = policy.build(n, b, &mut rng).unwrap();
+            layout.validate().unwrap();
+            assignment.validate().unwrap();
+            assert_eq!(layout.n_batches(), assignment.n_batches);
+        });
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in ReplicationPolicy::all() {
+            assert_eq!(ReplicationPolicy::parse(p.name()).unwrap(), *p);
+        }
+        assert!(ReplicationPolicy::parse("custom").is_err());
+        assert!(ReplicationPolicy::parse("nope").is_err());
+    }
+}

@@ -6,24 +6,32 @@
 //! 2. **Cancellation**: completion time is unchanged; the *cost* (busy
 //!    and wasted worker-seconds) is what redundancy spends.
 //! 3. **Upfront replication vs speculative relaunch** (reactive
-//!    MapReduce-style baseline): latency vs cost frontier.
+//!    MapReduce-style baseline): latency vs cost frontier — expressed
+//!    purely through the scenario's redundancy mode, same backend.
 //! 4. **Heterogeneous workers**: a mixed-speed cluster under the same
 //!    policies.
 
 use super::ExpContext;
 use crate::assignment::feasible_batch_counts;
-use crate::des::engine::{simulate_many, EngineConfig, Redundancy};
-use crate::des::{montecarlo, Scenario};
+use crate::des::engine::Redundancy;
+use crate::des::Scenario;
 use crate::dist::{BatchModel, BatchService, ServiceSpec};
+use crate::evaluator::{DesEvaluator, Evaluator, ReplicationPolicy};
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_f, Table};
 
 /// Workers for the ablations.
 pub const N: usize = 12;
 
+fn balanced_scn(b: usize, service: BatchService, seed: u64) -> anyhow::Result<Scenario> {
+    Scenario::from_policy(ReplicationPolicy::BalancedDisjoint, N, b, service, seed)
+}
+
 /// Run E8.
 pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     let sexp = ServiceSpec::shifted_exp(1.0, 0.2);
+    let mc = ctx.mc();
+    let des = ctx.des();
 
     // --- 1. batch service model ablation ---
     let mut t1 = Table::new(
@@ -33,17 +41,17 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     for model in [BatchModel::SizeScaled, BatchModel::DecoupledSlowdown, BatchModel::PerSampleSum]
     {
         for &b in &feasible_batch_counts(N) {
-            let scn = Scenario::paper_balanced(
-                N,
+            let scn = balanced_scn(
                 b,
                 BatchService { spec: sexp.clone(), model },
+                ctx.seed + b as u64,
             )?;
-            let mc = montecarlo::run_trials(&scn, ctx.trials, ctx.seed + b as u64);
+            let st = mc.evaluate(&scn)?;
             t1.row(vec![
                 model.name().to_string(),
                 b.to_string(),
-                fmt_f(mc.mean(), 4),
-                fmt_f(mc.variance(), 4),
+                fmt_f(st.mean, 4),
+                fmt_f(st.variance, 4),
             ]);
         }
     }
@@ -56,52 +64,51 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     );
     for &b in &feasible_batch_counts(N) {
         for cancel in [true, false] {
-            let scn =
-                Scenario::paper_balanced(N, b, BatchService::paper(sexp.clone()))?;
-            let cfg = EngineConfig { cancellation: cancel, ..EngineConfig::default() };
-            let sum = simulate_many(&scn, &cfg, ctx.trials / 5, ctx.seed + b as u64);
+            let scn = balanced_scn(b, BatchService::paper(sexp.clone()), ctx.seed + b as u64)?;
+            let ev = DesEvaluator { cancellation: cancel, ..des };
+            let st = ev.evaluate(&scn)?;
+            let cost = st.cost.expect("des backend reports cost");
             t2.row(vec![
                 b.to_string(),
                 cancel.to_string(),
-                fmt_f(sum.completion.mean(), 4),
-                fmt_f(sum.busy.mean(), 4),
-                fmt_f(sum.wasted.mean(), 4),
+                fmt_f(st.mean, 4),
+                fmt_f(cost.busy, 4),
+                fmt_f(cost.wasted, 4),
             ]);
         }
     }
     ctx.emit("ablation_cancellation", &t2)?;
 
     // --- 3. upfront vs speculative ---
+    // One scenario family; only the redundancy mode changes. The same
+    // DesEvaluator consumes both — the trade-off is in the scenario,
+    // not in backend-specific wiring.
     let mut t3 = Table::new(
         "Ablation — upfront replication vs speculative relaunch (B=3, N=12)",
-        &["strategy", "E[T]", "p99-ish (mean+3std)", "busy", "wasted"],
+        &["strategy", "E[T]", "p99", "busy", "wasted"],
     );
-    let scn = Scenario::paper_balanced(N, 3, BatchService::paper(sexp.clone()))?;
-    let upfront = simulate_many(
-        &scn,
-        &EngineConfig::default(),
-        ctx.trials / 5,
-        ctx.seed,
-    );
+    let base = balanced_scn(3, BatchService::paper(sexp.clone()), ctx.seed)?;
+    let upfront = des.evaluate(&base)?;
+    let up_cost = upfront.cost.expect("des backend reports cost");
     t3.row(vec![
         "upfront".into(),
-        fmt_f(upfront.completion.mean(), 4),
-        fmt_f(upfront.completion.mean() + 3.0 * upfront.completion.stddev(), 4),
-        fmt_f(upfront.busy.mean(), 4),
-        fmt_f(upfront.wasted.mean(), 4),
+        fmt_f(upfront.mean, 4),
+        fmt_f(upfront.quantile(0.99).unwrap(), 4),
+        fmt_f(up_cost.busy, 4),
+        fmt_f(up_cost.wasted, 4),
     ]);
     for df in [1.0, 1.5, 2.0, 3.0] {
-        let cfg = EngineConfig {
-            redundancy: Redundancy::Speculative { deadline_factor: df },
-            ..EngineConfig::default()
-        };
-        let s = simulate_many(&scn, &cfg, ctx.trials / 5, ctx.seed);
+        let scn = base
+            .clone()
+            .with_redundancy(Redundancy::Speculative { deadline_factor: df });
+        let st = des.evaluate(&scn)?;
+        let cost = st.cost.expect("des backend reports cost");
         t3.row(vec![
             format!("speculative x{df}"),
-            fmt_f(s.completion.mean(), 4),
-            fmt_f(s.completion.mean() + 3.0 * s.completion.stddev(), 4),
-            fmt_f(s.busy.mean(), 4),
-            fmt_f(s.wasted.mean(), 4),
+            fmt_f(st.mean, 4),
+            fmt_f(st.quantile(0.99).unwrap(), 4),
+            fmt_f(cost.busy, 4),
+            fmt_f(cost.wasted, 4),
         ]);
     }
     ctx.emit("ablation_speculative", &t3)?;
@@ -118,16 +125,17 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     }
     rng.shuffle(&mut speeds);
     for &b in &feasible_batch_counts(N) {
-        let homo = Scenario::paper_balanced(N, b, BatchService::paper(sexp.clone()))?;
-        let hetero = Scenario::paper_balanced(N, b, BatchService::paper(sexp.clone()))?
+        let seed = ctx.seed + 7 + b as u64;
+        let homo = balanced_scn(b, BatchService::paper(sexp.clone()), seed)?;
+        let hetero = balanced_scn(b, BatchService::paper(sexp.clone()), seed)?
             .with_speeds(speeds.clone())?;
-        let mh = montecarlo::run_trials(&homo, ctx.trials, ctx.seed + 7 + b as u64);
-        let mx = montecarlo::run_trials(&hetero, ctx.trials, ctx.seed + 7 + b as u64);
+        let mh = mc.evaluate(&homo)?;
+        let mx = mc.evaluate(&hetero)?;
         t4.row(vec![
             b.to_string(),
-            fmt_f(mh.mean(), 4),
-            fmt_f(mx.mean(), 4),
-            fmt_f(mx.mean() / mh.mean(), 3),
+            fmt_f(mh.mean, 4),
+            fmt_f(mx.mean, 4),
+            fmt_f(mx.mean / mh.mean, 3),
         ]);
     }
     ctx.emit("ablation_heterogeneous", &t4)?;
@@ -167,6 +175,18 @@ mod tests {
             let with: f64 = pair[0][3].parse().unwrap();
             let without: f64 = pair[1][3].parse().unwrap();
             assert!(with <= without * 1.01, "{pair:?}");
+        }
+
+        // Speculative waits before helping: slower but cheaper than
+        // upfront for every deadline factor.
+        let t3 = &tables[2];
+        let up_mean: f64 = t3.rows[0][1].parse().unwrap();
+        let up_busy: f64 = t3.rows[0][3].parse().unwrap();
+        for r in &t3.rows[1..] {
+            let mean: f64 = r[1].parse().unwrap();
+            let busy: f64 = r[3].parse().unwrap();
+            assert!(mean > up_mean, "{r:?}");
+            assert!(busy < up_busy, "{r:?}");
         }
 
         // Heterogeneous slower than homogeneous everywhere.

@@ -4,7 +4,9 @@
 //!   distributions with replayed Markov-modulated straggler traces
 //!   (`trace` module; the documented substitution for production
 //!   traces) and re-ask the paper's question: where is B* when
-//!   stragglers are bursty rather than memoryless?
+//!   stragglers are bursty rather than memoryless? Both spectra run
+//!   through the same Monte-Carlo backend — the trace is just another
+//!   `ServiceSpec` inside the scenario.
 //! * **E10 partial aggregation (k-of-B)** — the gradient-coding regime
 //!   the paper cites: the master proceeds with the earliest `k` of `B`
 //!   batch results. Closed form vs simulation, and the
@@ -13,8 +15,9 @@
 use super::ExpContext;
 use crate::analysis;
 use crate::assignment::feasible_batch_counts;
-use crate::des::{montecarlo, Scenario};
+use crate::des::Scenario;
 use crate::dist::{BatchService, ServiceSpec};
+use crate::evaluator::{Evaluator, ReplicationPolicy};
 use crate::trace::{generate_markov_trace, trace_spec, MarkovTraceParams};
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_f, Table};
@@ -32,26 +35,38 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
         1.0 / (spec.mean().unwrap() - params.base_delta),
         params.base_delta,
     );
+    let mc = ctx.mc();
     let mut t9 = Table::new(
         "E9 — bursty straggler trace vs fitted SExp: E[T] across the spectrum (N=24)",
         &["B", "E[T] trace replay", "E[T] fitted SExp", "trace/SExp"],
     );
     let mut best_trace = (f64::INFINITY, 0usize);
     for &b in &feasible_batch_counts(N) {
-        let scn_t =
-            Scenario::paper_balanced(N, b, BatchService::paper(spec.clone()))?;
-        let scn_s =
-            Scenario::paper_balanced(N, b, BatchService::paper(sexp_match.clone()))?;
-        let mt = montecarlo::run_trials(&scn_t, ctx.trials, ctx.seed + b as u64);
-        let ms = montecarlo::run_trials(&scn_s, ctx.trials, ctx.seed + b as u64);
-        if mt.mean() < best_trace.0 {
-            best_trace = (mt.mean(), b);
+        let seed = ctx.seed + b as u64;
+        let scn_t = Scenario::from_policy(
+            ReplicationPolicy::BalancedDisjoint,
+            N,
+            b,
+            BatchService::paper(spec.clone()),
+            seed,
+        )?;
+        let scn_s = Scenario::from_policy(
+            ReplicationPolicy::BalancedDisjoint,
+            N,
+            b,
+            BatchService::paper(sexp_match.clone()),
+            seed,
+        )?;
+        let mt = mc.evaluate(&scn_t)?;
+        let ms = mc.evaluate(&scn_s)?;
+        if mt.mean < best_trace.0 {
+            best_trace = (mt.mean, b);
         }
         t9.row(vec![
             b.to_string(),
-            fmt_f(mt.mean(), 4),
-            fmt_f(ms.mean(), 4),
-            fmt_f(mt.mean() / ms.mean(), 3),
+            fmt_f(mt.mean, 4),
+            fmt_f(ms.mean, 4),
+            fmt_f(mt.mean / ms.mean, 3),
         ]);
     }
     ctx.emit("ext_trace_robustness", &t9)?;

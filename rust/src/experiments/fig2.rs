@@ -2,26 +2,29 @@
 //! `B`, Shifted-Exponential per-sample service, one curve per `∆µ`.
 //!
 //! The paper plots `E[T] = N∆/B + H_B/µ` over `B ∈ F_B` and observes
-//! that larger `∆µ` pushes the optimum toward parallelism. We reproduce
-//! each curve twice — closed form and Monte-Carlo simulation — and they
-//! must agree to sampling error, which is the repo's strongest check
-//! that simulator and theory describe the same system.
+//! that larger `∆µ` pushes the optimum toward parallelism. Each point
+//! is produced twice through the [`Evaluator`] API — once by the
+//! [`AnalyticEvaluator`] and once by the [`MonteCarloEvaluator`] — and
+//! validated with [`cross_check`], the repo's strongest check that
+//! simulator and theory describe the same system.
 
 use super::ExpContext;
 use crate::analysis;
 use crate::assignment::feasible_batch_counts;
-use crate::des::{montecarlo, Scenario};
+use crate::des::Scenario;
 use crate::dist::{BatchService, ServiceSpec};
+use crate::evaluator::{cross_check, AnalyticEvaluator, ReplicationPolicy};
 use crate::util::table::{fmt_f, Table};
 
 /// Workers, matching the paper's figure scale (divisor-rich).
-pub const N: u64 = 24;
+pub const N: usize = 24;
 /// Service rate µ.
 pub const MU: f64 = 1.0;
 /// The ∆µ products plotted (the paper's λ legend).
 pub const DELTA_MUS: [f64; 5] = [0.05, 0.2, 0.5, 1.0, 2.0];
 
-/// Run E1: one table of curves + one table of optima.
+/// Run E1: one table of curves + one table of optima. Every row is a
+/// cross-checked (analytic, Monte-Carlo) pair.
 pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     let mut curve = Table::new(
         "Fig. 2 — E[T] vs B (Shifted-Exponential service), analytic vs simulated",
@@ -32,34 +35,38 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
         &["delta_mu", "B* analytic", "B* sim", "E[T] at B*"],
     );
 
+    let mc = ctx.mc();
     for (di, &dm) in DELTA_MUS.iter().enumerate() {
         let spec = ServiceSpec::shifted_exp(MU, dm / MU);
-        let mut best_sim = (f64::INFINITY, 1u64);
-        for &b in &feasible_batch_counts(N as usize) {
-            let b = b as u64;
-            let cf = analysis::completion_time_stats(N, b, &spec)?;
-            let scn = Scenario::paper_balanced(
-                N as usize,
-                b as usize,
+        let mut best_sim = (f64::INFINITY, 1usize);
+        for &b in &feasible_batch_counts(N) {
+            let scn = Scenario::from_policy(
+                ReplicationPolicy::BalancedDisjoint,
+                N,
+                b,
                 BatchService::paper(spec.clone()),
+                ctx.seed + di as u64 * 131 + b as u64,
             )?;
-            let mc = montecarlo::run_trials(&scn, ctx.trials, ctx.seed + di as u64 * 131 + b);
-            if mc.mean() < best_sim.0 {
-                best_sim = (mc.mean(), b);
+            // The paper's own validation, as one API call: theory and
+            // simulation must agree on this point or the run fails.
+            let ck = cross_check(&AnalyticEvaluator, &mc, &scn)?;
+            let (cf, sim) = (&ck.a, &ck.b);
+            if sim.mean < best_sim.0 {
+                best_sim = (sim.mean, b);
             }
             curve.row(vec![
                 fmt_f(dm, 2),
                 b.to_string(),
                 (N / b).to_string(),
                 fmt_f(cf.mean, 4),
-                fmt_f(mc.mean(), 4),
-                fmt_f(mc.ci95(), 4),
-                fmt_f(cf.var, 4),
-                fmt_f(mc.variance(), 4),
+                fmt_f(sim.mean, 4),
+                fmt_f(sim.ci95(), 4),
+                fmt_f(cf.variance, 4),
+                fmt_f(sim.variance, 4),
             ]);
         }
-        let b_star = analysis::optimum_b(N, &spec);
-        let at_star = analysis::completion_time_stats(N, b_star, &spec)?.mean;
+        let b_star = analysis::optimum_b(N as u64, &spec);
+        let at_star = analysis::completion_time_stats(N as u64, b_star, &spec)?.mean;
         optima.row(vec![
             fmt_f(dm, 2),
             b_star.to_string(),
@@ -96,8 +103,8 @@ mod tests {
             assert!(b_ana >= prev, "B* not monotone: {:?}", optima.rows);
             prev = b_ana;
             let spec = ServiceSpec::shifted_exp(MU, dm / MU);
-            let at_ana = analysis::completion_time_stats(N, b_ana, &spec).unwrap().mean;
-            let at_sim = analysis::completion_time_stats(N, b_sim, &spec).unwrap().mean;
+            let at_ana = analysis::completion_time_stats(N as u64, b_ana, &spec).unwrap().mean;
+            let at_sim = analysis::completion_time_stats(N as u64, b_sim, &spec).unwrap().mean;
             assert!(
                 (at_sim - at_ana) / at_ana < 0.02,
                 "sim optimum B={b_sim} is not near-optimal: {at_sim} vs {at_ana}"
@@ -109,5 +116,20 @@ mod tests {
         assert!(first <= 2, "{:?}", optima.rows[0]);
         let last: u64 = optima.rows.last().unwrap()[1].parse().unwrap();
         assert!(last >= 12);
+    }
+
+    #[test]
+    fn every_curve_point_is_cross_checked() {
+        // The run itself enforces theory≈simulation per point; this
+        // spot-checks that the emitted numbers reflect that.
+        let dir = std::env::temp_dir().join("batchrep_fig2_ck_test");
+        let ctx = ExpContext { out_dir: dir.clone(), trials: 15_000, seed: 8 };
+        let tables = run(&ctx).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        for row in &tables[0].rows {
+            let ana: f64 = row[3].parse().unwrap();
+            let sim: f64 = row[4].parse().unwrap();
+            assert!((ana - sim).abs() / ana < 0.05, "{row:?}");
+        }
     }
 }

@@ -39,7 +39,8 @@ fn live_cfg(b: usize, ctx: &ExpContext, artifacts: bool) -> SystemConfig {
 /// runnable.
 pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     let artifact_dir = crate::runtime::default_artifact_dir();
-    let have_artifacts = artifact_dir.join("manifest.json").exists();
+    let have_artifacts =
+        artifact_dir.join("manifest.json").exists() && cfg!(feature = "pjrt");
     let backend = if have_artifacts { Backend::Pjrt } else { Backend::Mock };
     let rounds = 30u64;
 

@@ -1,6 +1,11 @@
 //! Experiment drivers: one function per paper figure/table (DESIGN.md
 //! experiment index E1–E8), each emitting CSV + Markdown into an output
 //! directory and returning its [`Table`]s for inspection.
+//!
+//! Every driver is a thin sweep over the [`crate::evaluator`] API: build
+//! self-describing scenarios, evaluate them with the appropriate
+//! backend(s), tabulate. The context's `seed` is the only source of
+//! randomness, so regenerated tables are bit-identical across runs.
 
 pub mod ablations;
 pub mod extensions;
@@ -9,6 +14,7 @@ pub mod live;
 pub mod policies;
 pub mod spectrum;
 
+use crate::evaluator::{DesEvaluator, MonteCarloEvaluator};
 use crate::util::table::Table;
 use std::path::PathBuf;
 
@@ -19,7 +25,7 @@ pub struct ExpContext {
     pub out_dir: PathBuf,
     /// Monte-Carlo trials per configuration.
     pub trials: u64,
-    /// Root seed.
+    /// Root seed (propagated into every scenario, hence every backend).
     pub seed: u64,
 }
 
@@ -35,6 +41,16 @@ impl ExpContext {
         table.write_to(&self.out_dir, stem)?;
         table.print();
         Ok(())
+    }
+
+    /// The Monte-Carlo backend at this context's trial budget.
+    pub fn mc(&self) -> MonteCarloEvaluator {
+        MonteCarloEvaluator { trials: self.trials.max(1), threads: 1 }
+    }
+
+    /// The event-engine backend (costlier per trial: 1/5 the budget).
+    pub fn des(&self) -> DesEvaluator {
+        DesEvaluator { trials: (self.trials / 5).max(1), ..DesEvaluator::default() }
     }
 }
 
@@ -63,7 +79,7 @@ mod tests {
         let dir = std::env::temp_dir().join("batchrep_exp_smoke");
         let ctx = ExpContext { out_dir: dir.clone(), trials: 2_000, seed: 1 };
         let tables = run_all(&ctx, false).unwrap();
-        assert!(tables.len() >= 8, "expected >= 6 tables, got {}", tables.len());
+        assert!(tables.len() >= 8, "expected >= 8 tables, got {}", tables.len());
         assert!(dir.join("fig2_expected_completion.csv").exists());
         std::fs::remove_dir_all(&dir).ok();
     }

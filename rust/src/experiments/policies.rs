@@ -2,70 +2,22 @@
 //!
 //! Balanced disjoint batches must minimize expected completion time
 //! among all policies for stochastically decreasing-and-convex service
-//! (Exp, SExp). We compare: balanced disjoint, random balanced, skewed
-//! unbalanced, and *overlapping* batches (same per-worker storage), plus
-//! the two spectrum endpoints — under the paper's distributions and two
-//! heavy-tailed robustness cases where the theorem's hypothesis fails.
+//! (Exp, SExp). We compare every [`ReplicationPolicy`] — including the
+//! storage-equal *overlapping* layout — under the paper's distributions
+//! and two heavy-tailed robustness cases where the theorem's hypothesis
+//! fails. One scenario family, two backends: Monte-Carlo for every
+//! policy, the analytic evaluator wherever the closed forms apply.
 
 use super::ExpContext;
-use crate::analysis;
-use crate::assignment::{balanced, skewed, Policy};
-use crate::batching;
-use crate::des::{montecarlo, Scenario};
+use crate::des::Scenario;
 use crate::dist::{BatchService, ServiceSpec};
-use crate::util::rng::Rng;
+use crate::evaluator::{AnalyticEvaluator, Evaluator, ReplicationPolicy};
 use crate::util::table::{fmt_f, Table};
 
 /// Workers.
 pub const N: usize = 12;
 /// Batches for the policy comparison.
 pub const B: usize = 4;
-
-/// Policy variants compared (the `Policy` enum plus overlapping layout).
-fn variants() -> Vec<&'static str> {
-    vec![
-        "balanced_disjoint",
-        "random_balanced",
-        "skewed_unbalanced",
-        "overlapping_cyclic",
-        "full_diversity",
-        "full_parallelism",
-    ]
-}
-
-fn scenario_for(
-    variant: &str,
-    spec: &ServiceSpec,
-    rng: &mut Rng,
-) -> anyhow::Result<Scenario> {
-    let service = BatchService::paper(spec.clone());
-    match variant {
-        "overlapping_cyclic" => {
-            // B overlapping windows, each the size of a disjoint batch's
-            // share of data *times its replication degree* is NOT the
-            // comparison the paper makes; storage-equal comparison: N
-            // windows of N/B units each (every worker stores the same
-            // amount as in the disjoint case, windows shifted cyclically).
-            let layout = batching::overlapping(N, N, N / B)?;
-            let assignment = balanced(N, N)?;
-            Scenario::new(layout, assignment, service)
-        }
-        "balanced_disjoint" => Scenario::paper_balanced(N, B, service),
-        "random_balanced" => {
-            let layout = batching::disjoint(N, B)?;
-            let assignment = Policy::RandomBalanced.assign(N, B, rng)?;
-            Scenario::new(layout, assignment, service)
-        }
-        "skewed_unbalanced" => {
-            let layout = batching::disjoint(N, B)?;
-            let assignment = skewed(N, B)?;
-            Scenario::new(layout, assignment, service)
-        }
-        "full_diversity" => Scenario::paper_balanced(N, 1, service),
-        "full_parallelism" => Scenario::paper_balanced(N, N, service),
-        _ => anyhow::bail!("unknown variant {variant}"),
-    }
-}
 
 /// Run E2.
 pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
@@ -84,26 +36,29 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
         &["distribution", "dec-convex", "policy", "E[T] sim", "ci95", "E[T] analytic"],
     );
 
-    let mut rng = Rng::new(ctx.seed ^ 0x90CC);
-    for (dname, spec, decconv) in &dists {
-        for variant in variants() {
-            let scn = scenario_for(variant, spec, &mut rng)?;
-            let mc = montecarlo::run_trials(&scn, ctx.trials, ctx.seed + 17);
-            // Analytic value where the closed form applies (equal-size
-            // disjoint batches + exp family).
-            let analytic = if !scn.layout.is_overlapping {
-                analysis::assignment_stats(&scn.assignment, spec, N as u64)
-                    .map(|s| fmt_f(s.mean, 4))
-                    .unwrap_or_else(|_| "-".into())
-            } else {
-                "-".into()
-            };
+    let mc = ctx.mc();
+    for (di, (dname, spec, decconv)) in dists.iter().enumerate() {
+        for (pi, policy) in ReplicationPolicy::all().iter().enumerate() {
+            let scn = Scenario::from_policy(
+                *policy,
+                N,
+                B,
+                BatchService::paper(spec.clone()),
+                ctx.seed + 17 + di as u64 * 101 + pi as u64,
+            )?;
+            let sim = mc.evaluate(&scn)?;
+            // Exact value wherever the closed forms apply (equal-size
+            // disjoint batches + exp family); "-" otherwise.
+            let analytic = AnalyticEvaluator
+                .evaluate(&scn)
+                .map(|s| fmt_f(s.mean, 4))
+                .unwrap_or_else(|_| "-".into());
             t.row(vec![
                 dname.to_string(),
                 decconv.to_string(),
-                variant.to_string(),
-                fmt_f(mc.mean(), 4),
-                fmt_f(mc.ci95(), 4),
+                policy.name().to_string(),
+                fmt_f(sim.mean, 4),
+                fmt_f(sim.ci95(), 4),
                 analytic,
             ]);
         }

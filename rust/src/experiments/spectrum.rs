@@ -6,12 +6,15 @@
 //! * E5 (Thm 4 + trade-off): under SExp the variance is still minimized
 //!   at `B = 1`, so whenever `B* > 1` the mean-optimal operating point
 //!   is variance-suboptimal — the paper's mean–variance trade-off.
+//!
+//! All spectra are produced by [`paper_sweep`]: the same generic driver
+//! with the backend swapped (analytic for exact curves, Monte-Carlo for
+//! the validation column).
 
 use super::ExpContext;
 use crate::analysis::{self, bstar_sweep};
-use crate::assignment::feasible_batch_counts;
-use crate::des::{montecarlo, Scenario};
 use crate::dist::{BatchService, ServiceSpec};
+use crate::evaluator::{paper_sweep, AnalyticEvaluator};
 use crate::util::table::{fmt_f, Table};
 
 /// Workers.
@@ -20,26 +23,20 @@ pub const N: u64 = 24;
 /// Run E3+E4+E5.
 pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     // --- E3: Exponential spectrum (Theorem 2) ---
-    let exp_spec = ServiceSpec::exp(1.0);
+    let exp_service = BatchService::paper(ServiceSpec::exp(1.0));
     let mut e3 = Table::new(
         "Theorem 2 — Exp(1) service: E[T] and Var[T] vs B (B=1 optimal for both)",
         &["B", "E[T] analytic", "E[T] sim", "Var analytic", "Var sim"],
     );
-    for &b in &feasible_batch_counts(N as usize) {
-        let b = b as u64;
-        let cf = analysis::completion_time_stats(N, b, &exp_spec)?;
-        let scn = Scenario::paper_balanced(
-            N as usize,
-            b as usize,
-            BatchService::paper(exp_spec.clone()),
-        )?;
-        let mc = montecarlo::run_trials(&scn, ctx.trials, ctx.seed + b);
+    let exact = paper_sweep(N as usize, &AnalyticEvaluator, &exp_service, ctx.seed)?;
+    let sim = paper_sweep(N as usize, &ctx.mc(), &exp_service, ctx.seed)?;
+    for (cf, mc) in exact.iter().zip(&sim) {
         e3.row(vec![
-            b.to_string(),
-            fmt_f(cf.mean, 4),
-            fmt_f(mc.mean(), 4),
-            fmt_f(cf.var, 4),
-            fmt_f(mc.variance(), 4),
+            cf.b.to_string(),
+            fmt_f(cf.stats.mean, 4),
+            fmt_f(mc.stats.mean, 4),
+            fmt_f(cf.stats.variance, 4),
+            fmt_f(mc.stats.variance, 4),
         ]);
     }
     ctx.emit("thm2_exp_spectrum", &e3)?;
@@ -68,6 +65,7 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
 
     // --- E5: mean–variance trade-off under SExp (Theorem 4) ---
     let sexp = ServiceSpec::shifted_exp(1.0, 0.2);
+    let sexp_service = BatchService::paper(sexp.clone());
     let mut e5 = Table::new(
         "Theorem 4 — SExp(1,0.2): Var[T] minimized at B=1 while E[T] is not \
          (the mean–variance trade-off)",
@@ -75,14 +73,14 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     );
     let b_star_mean = analysis::optimum_b(N, &sexp);
     let b_star_var = analysis::optimum_b_variance(N, &sexp);
-    for &b in &feasible_batch_counts(N as usize) {
-        let b = b as u64;
-        let cf = analysis::completion_time_stats(N, b, &sexp)?;
+    let points = paper_sweep(N as usize, &AnalyticEvaluator, &sexp_service, ctx.seed)?;
+    for p in &points {
+        let b = p.b as u64;
         e5.row(vec![
             b.to_string(),
-            fmt_f(cf.mean, 4),
-            fmt_f(cf.var, 4),
-            fmt_f(cf.stddev(), 4),
+            fmt_f(p.stats.mean, 4),
+            fmt_f(p.stats.variance, 4),
+            fmt_f(p.stats.stddev(), 4),
             (b == b_star_mean).to_string(),
             (b == b_star_var).to_string(),
         ]);
@@ -91,27 +89,22 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
 
     // --- extension: tails and cost across the spectrum ---
     // The paper motivates variance via performance guarantees (The Tail
-    // at Scale); the closed-form quantiles make the guarantee explicit,
-    // and expected_cost shows what diversity charges for it.
+    // at Scale); the analytic backend's quantiles make the guarantee
+    // explicit, and its cost accounting shows what diversity charges.
     let mut e5x = Table::new(
         "Extension — tail latency and redundancy cost vs B (SExp(1,0.2), N=24)",
         &["B", "E[T]", "p50", "p99", "p99.9", "E[cost] (worker-s)", "cost/E[T]"],
     );
-    for &b in &feasible_batch_counts(N as usize) {
-        let b = b as u64;
-        let cf = analysis::completion_time_stats(N, b, &sexp)?;
-        let p50 = analysis::completion_time_quantile(N, b, &sexp, 0.5)?;
-        let p99 = analysis::completion_time_quantile(N, b, &sexp, 0.99)?;
-        let p999 = analysis::completion_time_quantile(N, b, &sexp, 0.999)?;
-        let cost = analysis::expected_cost(N, b, &sexp)?;
+    for p in &points {
+        let cost = p.stats.cost.expect("analytic backend reports cost").busy;
         e5x.row(vec![
-            b.to_string(),
-            fmt_f(cf.mean, 4),
-            fmt_f(p50, 4),
-            fmt_f(p99, 4),
-            fmt_f(p999, 4),
+            p.b.to_string(),
+            fmt_f(p.stats.mean, 4),
+            fmt_f(p.stats.quantile(0.5).unwrap(), 4),
+            fmt_f(p.stats.quantile(0.99).unwrap(), 4),
+            fmt_f(p.stats.quantile(0.999).unwrap(), 4),
             fmt_f(cost, 3),
-            fmt_f(cost / cf.mean, 3),
+            fmt_f(cost / p.stats.mean, 3),
         ]);
     }
     ctx.emit("ext_tail_and_cost", &e5x)?;
@@ -148,5 +141,18 @@ mod tests {
             .parse()
             .unwrap();
         assert!(mean_opt_b > 1 && mean_opt_b < N, "trade-off requires interior B*");
+
+        // Extension table: tail quantiles ordered, cost decreasing in B.
+        let x = tables[3].clone();
+        let mut prev_cost = f64::INFINITY;
+        for r in &x.rows {
+            let p50: f64 = r[2].parse().unwrap();
+            let p99: f64 = r[3].parse().unwrap();
+            let p999: f64 = r[4].parse().unwrap();
+            assert!(p50 < p99 && p99 < p999, "{r:?}");
+            let cost: f64 = r[5].parse().unwrap();
+            assert!(cost < prev_cost, "cost must fall with B: {r:?}");
+            prev_cost = cost;
+        }
     }
 }

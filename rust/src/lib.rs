@@ -8,21 +8,43 @@
 //! equal batches (`B | N`), each batch replicated on `g = N/B` workers.
 //! A job completes when *every* batch has been finished by at least one
 //! of its replicas; the master aggregates the earliest replica results.
-//! The library provides, as first-class components:
 //!
-//! * [`assignment`] — the paper's batch→worker assignment policies
-//!   (balanced disjoint, overlapping, random, skewed) with invariant
-//!   validation;
-//! * [`batching`] — the two-stage sample→batch→worker data distribution;
-//! * [`analysis`] — closed-form expectation/variance of the completion
-//!   time for Exponential and Shifted-Exponential service (paper
-//!   Theorems 2–4, Eq. 4) and the Theorem-3 optimizer for `B*`;
-//! * [`des`] — a discrete-event simulator of System1 with replica
-//!   cancellation, for policies/distributions with no closed form;
-//! * [`coordinator`] + [`worker`] + [`runtime`] — a *live* System1:
+//! ## The `Scenario → Evaluator` API
+//!
+//! The crate's central abstraction lives in [`evaluator`]: a validated,
+//! fully self-describing [`des::Scenario`] (layout + assignment +
+//! service law + replication policy + redundancy mode + RNG seed) is
+//! consumed by any [`evaluator::Evaluator`] backend, and every backend
+//! returns the same [`evaluator::CompletionStats`]:
+//!
+//! * [`evaluator::AnalyticEvaluator`] — exact closed forms (paper
+//!   Theorems 2–4, Eq. 4; Exponential/Shifted-Exponential only);
+//! * [`evaluator::MonteCarloEvaluator`] — the direct completion-time
+//!   sampler (millions of trials/s, optional threading);
+//! * [`evaluator::DesEvaluator`] — the event engine with cancellation,
+//!   speculative relaunch, failure injection, and cost accounting;
+//! * [`evaluator::LiveEvaluator`] — the real coordinator + worker
+//!   threads with injected stragglers.
+//!
+//! Swapping backends is a one-line change; [`evaluator::cross_check`]
+//! asserts two backends agree on one scenario (the paper's Fig. 2
+//! theory-vs-simulation validation as an API call), and
+//! [`evaluator::sweep`] is the generic driver the [`experiments`] layer
+//! is built on.
+//!
+//! Supporting layers:
+//!
+//! * [`assignment`] — batch→worker assignment policies with invariant
+//!   validation; [`batching`] — the sample→batch data layouts;
+//! * [`analysis`] — the raw closed forms (Eq. 4, the Theorem-3
+//!   optimizer for `B*`, quantiles, costs, inclusion–exclusion for
+//!   unbalanced degrees);
+//! * [`des`] — the Monte-Carlo sampler and the discrete-event engine;
+//! * [`coordinator`] + [`worker`] + [`runtime`] — the *live* System1:
 //!   real worker threads executing AOT-compiled JAX/Pallas compute jobs
-//!   through PJRT (the `xla` crate), with injected straggler service
-//!   times and first-completion-wins cancellation;
+//!   through PJRT (behind the `pjrt` cargo feature; the pure-Rust mock
+//!   backend always works), with injected straggler service times and
+//!   first-completion-wins cancellation;
 //! * [`dist`] — service-time distributions and the size-dependent batch
 //!   service model (Gardner et al.) the paper builds on;
 //! * [`experiments`] — drivers that regenerate every figure/table.
@@ -34,16 +56,26 @@
 //! ## Quickstart
 //!
 //! ```
-//! use batchrep::analysis::{completion_time_stats, optimum_b};
-//! use batchrep::dist::ServiceSpec;
+//! use batchrep::des::Scenario;
+//! use batchrep::dist::{BatchService, ServiceSpec};
+//! use batchrep::evaluator::{
+//!     cross_check, AnalyticEvaluator, Evaluator, MonteCarloEvaluator, ReplicationPolicy,
+//! };
 //!
-//! // N = 24 workers, Shifted-Exponential per-sample service.
-//! let spec = ServiceSpec::shifted_exp(1.0, 0.2);
-//! let stats_b4 = completion_time_stats(24, 4, &spec).unwrap();
-//! assert!(stats_b4.mean > 0.0);
-//! // Theorem 3: the optimum number of batches for this (mu, delta).
-//! let b_star = optimum_b(24, &spec);
-//! assert!(24 % b_star == 0);
+//! // N = 24 workers, B = 4 balanced disjoint batches, SExp service.
+//! let service = BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.2));
+//! let scn = Scenario::from_policy(ReplicationPolicy::BalancedDisjoint, 24, 4, service, 42)
+//!     .unwrap();
+//!
+//! // Exact closed form (Theorem 3 territory) ...
+//! let exact = AnalyticEvaluator.evaluate(&scn).unwrap();
+//! assert!(exact.mean > 0.0);
+//! // ... and simulation — same scenario, one-line backend swap.
+//! let mc = MonteCarloEvaluator { trials: 20_000, threads: 1 };
+//! let sim = mc.evaluate(&scn).unwrap();
+//! assert!((sim.mean - exact.mean).abs() < 0.1 * exact.mean);
+//! // Or as a single validated call:
+//! cross_check(&AnalyticEvaluator, &mc, &scn).unwrap();
 //! ```
 
 pub mod analysis;
@@ -54,6 +86,7 @@ pub mod config;
 pub mod coordinator;
 pub mod des;
 pub mod dist;
+pub mod evaluator;
 pub mod experiments;
 pub mod metrics;
 pub mod runtime;

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   analyze     closed-form diversity–parallelism spectrum (Theorems 2–4)
+//!   evaluate    run one scenario through any Evaluator backend(s) and
+//!               cross-check them (analytic | montecarlo | des | live | all)
 //!   simulate    Monte-Carlo + event-engine simulation of one scenario
 //!   experiment  regenerate paper figures/tables (fig2|policies|spectrum|
 //!               ablations|live|all)
@@ -9,15 +11,19 @@
 //!   mapsum      run one live distributed map-sum evaluation
 //!
 //! Global options: `--config <file.toml>` plus per-key overrides
-//! (`--n-workers 24`, `--service sexp:1.0,0.2`, ...). See README.
+//! (`--n-workers 24`, `--service sexp:1.0,0.2`, `--seed 7`, ...). The
+//! single `--seed` value flows into every evaluator through the
+//! scenario, so all tables are bit-reproducible. See README.
 
 use batchrep::analysis;
 use batchrep::config::cli::Args;
 use batchrep::config::toml::TomlValue;
 use batchrep::config::SystemConfig;
 use batchrep::coordinator::{Backend, Coordinator};
-use batchrep::des::engine::{simulate_many, EngineConfig, Redundancy};
-use batchrep::des::montecarlo;
+use batchrep::des::engine::Redundancy;
+use batchrep::evaluator::{
+    cross_check, AnalyticEvaluator, DesEvaluator, Evaluator, LiveEvaluator, MonteCarloEvaluator,
+};
 use batchrep::experiments::{self, ExpContext};
 use batchrep::util::table::{fmt_f, Table};
 
@@ -26,6 +32,10 @@ batchrep — data replication for straggler mitigation (Behrouzi-Far & Soljanin,
 
 USAGE:
   batchrep analyze    [--n 24] [--service sexp:1.0,0.2]
+  batchrep evaluate   [--backend analytic|montecarlo|des|live|all] [--cross-check]
+                      [--config f] [--n-workers 24] [--n-batches 4] [--policy p]
+                      [--service spec] [--trials 100000] [--seed 42]
+                      [--speculative 1.5] [--rounds 30] [--live]
   batchrep simulate   [--config f] [--n-workers 12] [--n-batches 4] [--policy p]
                       [--service spec] [--trials 100000] [--seed 42]
                       [--overlapping] [--no-cancel] [--speculative 1.5]
@@ -37,8 +47,8 @@ USAGE:
                       [--p-enter 0.0026] [--p-exit 0.05] [--slowdown 8]
 
 Config keys (file or --key value): n_workers, n_batches, policy, service,
-batch_model, overlapping, cancellation, seed, trials, artifacts_dir,
-time_scale, kernel, dim, n_samples, steps.
+batch_model, overlapping, cancellation, speculative, seed, trials,
+artifacts_dir, time_scale, kernel, dim, n_samples, steps.
 ";
 
 fn main() {
@@ -56,8 +66,8 @@ fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
     };
     // CLI overrides use dashed names: --n-workers → n_workers.
     let keys = [
-        "n_workers", "n_batches", "policy", "service", "batch_model", "seed",
-        "trials", "artifacts_dir", "time_scale", "kernel", "dim", "n_samples",
+        "n_workers", "n_batches", "policy", "service", "batch_model", "speculative",
+        "seed", "trials", "artifacts_dir", "time_scale", "kernel", "dim", "n_samples",
         "steps",
     ];
     for key in keys {
@@ -87,6 +97,7 @@ fn run() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     match args.subcommand() {
         Some("analyze") => cmd_analyze(&args),
+        Some("evaluate") => cmd_evaluate(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("train") => cmd_train(&args),
@@ -127,56 +138,166 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let speculative = args.get::<f64>("speculative")?;
+/// The unified entry point: one scenario, any backend(s).
+fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
+    let which = args.get_or::<String>("backend", "all".into())?;
+    let rounds = args.get_or::<u64>("rounds", 30)?;
+    let check = args.flag("cross-check");
+    let include_live = args.flag("live") || which == "live";
     let cfg = load_config(args)?;
     args.finish()?;
     let scn = cfg.scenario()?;
 
     println!(
+        "scenario: N={} B={} policy={} service={} model={} redundancy={:?} seed={}",
+        scn.n_workers(),
+        scn.assignment.n_batches,
+        scn.policy.name(),
+        cfg.service.name(),
+        cfg.batch_model.name(),
+        scn.redundancy,
+        scn.seed
+    );
+
+    let live_backend = if batchrep::runtime::default_artifact_dir()
+        .join("manifest.json")
+        .exists()
+        && cfg!(feature = "pjrt")
+    {
+        Backend::Pjrt
+    } else {
+        Backend::Mock
+    };
+    let analytic = AnalyticEvaluator;
+    let mc = MonteCarloEvaluator { trials: cfg.trials, threads: 1 };
+    let des = DesEvaluator {
+        trials: (cfg.trials / 5).max(1),
+        cancellation: cfg.cancellation,
+        ..DesEvaluator::default()
+    };
+    let live = LiveEvaluator {
+        rounds,
+        backend: live_backend,
+        time_scale: cfg.time_scale,
+        n_samples: cfg.n_samples,
+        dim: cfg.dim,
+        cancellation: cfg.cancellation,
+        artifacts_dir: Some(cfg.artifacts_dir.clone()),
+    };
+    let mut backends: Vec<&dyn Evaluator> = Vec::new();
+    match which.as_str() {
+        "analytic" => backends.push(&analytic),
+        "montecarlo" => backends.push(&mc),
+        "des" => backends.push(&des),
+        "live" => backends.push(&live),
+        "all" => {
+            backends.push(&analytic);
+            backends.push(&mc);
+            backends.push(&des);
+            if include_live {
+                backends.push(&live);
+            }
+        }
+        other => anyhow::bail!("unknown backend '{other}' (analytic|montecarlo|des|live|all)"),
+    }
+
+    let mut t = Table::new(
+        "Completion time, one scenario across evaluator backends",
+        &["backend", "E[T]", "ci95", "Var[T]", "p50", "p99", "busy cost", "samples"],
+    );
+    for ev in &backends {
+        match ev.evaluate(&scn) {
+            Ok(st) => {
+                let q = |q: f64| {
+                    st.quantile(q).map(|v| fmt_f(v, 4)).unwrap_or_else(|| "-".into())
+                };
+                t.row(vec![
+                    ev.name().to_string(),
+                    fmt_f(st.mean, 4),
+                    fmt_f(st.ci95(), 4),
+                    fmt_f(st.variance, 4),
+                    q(0.5),
+                    q(0.99),
+                    st.cost.map(|c| fmt_f(c.busy, 3)).unwrap_or_else(|| "-".into()),
+                    st.samples.to_string(),
+                ]);
+            }
+            Err(e) => {
+                t.row(vec![
+                    ev.name().to_string(),
+                    format!("n/a ({e})"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    if check {
+        let ck = cross_check(&analytic, &mc, &scn)?;
+        println!(
+            "cross-check analytic vs montecarlo: |diff| {:.6} <= tol {:.6}  OK",
+            ck.mean_diff, ck.tolerance
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    // Back-compat: --speculative also works as the config key.
+    let speculative = args.get::<f64>("speculative")?;
+    let cfg = load_config(args)?;
+    args.finish()?;
+    let mut scn = cfg.scenario()?;
+    if let Some(df) = speculative {
+        scn = scn.with_redundancy(Redundancy::Speculative { deadline_factor: df });
+    }
+
+    println!(
         "scenario: N={} B={} policy={} layout={} service={} model={}",
         cfg.n_workers,
         scn.assignment.n_batches,
-        cfg.policy.name(),
+        scn.policy.name(),
         if cfg.overlapping { "overlapping" } else { "disjoint" },
         cfg.service.name(),
         cfg.batch_model.name()
     );
 
-    let mc = montecarlo::run_trials(&scn, cfg.trials, cfg.seed);
+    // Monte-Carlo backend (models upfront replication).
+    let upfront = scn.clone().with_redundancy(Redundancy::Upfront);
+    let mc = MonteCarloEvaluator { trials: cfg.trials, threads: 1 };
+    let st = mc.evaluate(&upfront)?;
     let mut t = Table::new("Monte-Carlo completion time", &["metric", "value"]);
-    t.row(vec!["trials".into(), cfg.trials.to_string()]);
-    t.row(vec!["mean".into(), fmt_f(mc.mean(), 5)]);
-    t.row(vec!["ci95".into(), fmt_f(mc.ci95(), 5)]);
-    t.row(vec!["variance".into(), fmt_f(mc.variance(), 5)]);
-    let mut samples = mc.samples.clone();
-    t.row(vec!["p50".into(), fmt_f(samples.quantile(0.5), 5)]);
-    t.row(vec!["p99".into(), fmt_f(samples.quantile(0.99), 5)]);
-    if let Ok(cf) = analysis::completion_time_stats(
-        cfg.n_workers as u64,
-        scn.assignment.n_batches as u64,
-        &cfg.service,
-    ) {
+    t.row(vec!["trials".into(), st.samples.to_string()]);
+    t.row(vec!["mean".into(), fmt_f(st.mean, 5)]);
+    t.row(vec!["ci95".into(), fmt_f(st.ci95(), 5)]);
+    t.row(vec!["variance".into(), fmt_f(st.variance, 5)]);
+    t.row(vec!["p50".into(), fmt_f(st.quantile(0.5).unwrap_or(f64::NAN), 5)]);
+    t.row(vec!["p99".into(), fmt_f(st.quantile(0.99).unwrap_or(f64::NAN), 5)]);
+    if let Ok(cf) = AnalyticEvaluator.evaluate(&upfront) {
         t.row(vec!["closed-form mean".into(), fmt_f(cf.mean, 5)]);
-        t.row(vec!["closed-form variance".into(), fmt_f(cf.var, 5)]);
+        t.row(vec!["closed-form variance".into(), fmt_f(cf.variance, 5)]);
     }
     t.print();
 
-    let redundancy = match speculative {
-        Some(df) => Redundancy::Speculative { deadline_factor: df },
-        None => Redundancy::Upfront,
+    // Event-engine backend (models the scenario's redundancy mode and
+    // accounts cost).
+    let des = DesEvaluator {
+        trials: (cfg.trials / 10).max(1),
+        cancellation: cfg.cancellation,
+        ..DesEvaluator::default()
     };
-    let ecfg = EngineConfig { cancellation: cfg.cancellation, redundancy, ..EngineConfig::default() };
-    let etrials = (cfg.trials / 10).max(1);
-    let sum = simulate_many(&scn, &ecfg, etrials, cfg.seed ^ 1);
+    let st2 = des.evaluate(&scn)?;
+    let cost = st2.cost.expect("des backend reports cost");
     let mut t2 = Table::new("Event-engine (cost accounting)", &["metric", "value"]);
-    t2.row(vec!["completion mean".into(), fmt_f(sum.completion.mean(), 5)]);
-    t2.row(vec!["busy worker-seconds".into(), fmt_f(sum.busy.mean(), 5)]);
-    t2.row(vec!["wasted worker-seconds".into(), fmt_f(sum.wasted.mean(), 5)]);
-    t2.row(vec![
-        "events/trial".into(),
-        fmt_f(sum.total_events as f64 / etrials as f64, 2),
-    ]);
+    t2.row(vec!["completion mean".into(), fmt_f(st2.mean, 5)]);
+    t2.row(vec!["busy worker-seconds".into(), fmt_f(cost.busy, 5)]);
+    t2.row(vec!["wasted worker-seconds".into(), fmt_f(cost.wasted, 5)]);
     t2.print();
     Ok(())
 }
@@ -191,7 +312,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     let ctx = ExpContext {
         out_dir: args.get_or::<String>("out", "results".into())?.into(),
         trials: args.get_or::<u64>("trials", 100_000)?,
-        seed: args.get_or::<u64>("seed", 42)?,
+        seed: args.seed(42)?,
     };
     let include_live = args.flag("live");
     args.finish()?;
@@ -244,7 +365,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     use batchrep::trace::{generate_markov_trace, save_trace, MarkovTraceParams};
     let n = args.get_or::<usize>("n", 100_000)?;
-    let seed = args.get_or::<u64>("seed", 42)?;
+    let seed = args.seed(42)?;
     let out = args.get_or::<String>("out", "trace.csv".into())?;
     let defaults = MarkovTraceParams::default();
     let params = MarkovTraceParams {

@@ -16,6 +16,7 @@
 //! on the request path.
 
 use crate::util::json::Json;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -133,12 +134,14 @@ pub struct GradOut {
 }
 
 /// A per-thread PJRT engine: one CPU client plus compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create an engine over an artifact directory.
     pub fn new(artifact_dir: &Path) -> anyhow::Result<Engine> {
@@ -227,6 +230,63 @@ impl Engine {
             _ => result,
         };
         Ok(scalar.get_first_element::<f32>()?)
+    }
+}
+
+/// Stub engine used when the crate is built without the `pjrt` feature
+/// (the offline default — the `xla` crate is unavailable there).
+/// Construction always fails with instructions; the mock compute
+/// backend and every analytic/simulation path remain fully functional.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always errors: rebuild with `--features pjrt` (requires the
+    /// vendored `xla` crate) to execute AOT artifacts.
+    pub fn new(artifact_dir: &Path) -> anyhow::Result<Engine> {
+        // Surface the clearer "no artifacts" diagnosis first.
+        let _ = Manifest::load(artifact_dir)?;
+        anyhow::bail!(
+            "batchrep was built without the `pjrt` feature; rebuild with \
+             `--features pjrt` (requires the xla crate) or use the mock backend"
+        )
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Unavailable without the `pjrt` feature.
+    pub fn prepare(&mut self, _kernel: &str, _rows: usize, _dim: usize) -> anyhow::Result<()> {
+        anyhow::bail!("PJRT execution requires the `pjrt` feature")
+    }
+
+    /// Unavailable without the `pjrt` feature.
+    pub fn grad(
+        &mut self,
+        _rows: usize,
+        _dim: usize,
+        _x: &[f32],
+        _y: &[f32],
+        _w: &[f32],
+    ) -> anyhow::Result<GradOut> {
+        anyhow::bail!("PJRT execution requires the `pjrt` feature")
+    }
+
+    /// Unavailable without the `pjrt` feature.
+    pub fn mapsum(
+        &mut self,
+        _rows: usize,
+        _dim: usize,
+        _x: &[f32],
+        _a: &[f32],
+        _b: &[f32],
+    ) -> anyhow::Result<f32> {
+        anyhow::bail!("PJRT execution requires the `pjrt` feature")
     }
 }
 

@@ -1,0 +1,134 @@
+//! Integration tests of the unified `Scenario → Evaluator` API: the
+//! same scenario value must be accepted by all four backends, and the
+//! analytic and Monte-Carlo backends must cross-check on the paper's
+//! Fig. 2 validation matrix.
+
+use batchrep::des::engine::Redundancy;
+use batchrep::des::Scenario;
+use batchrep::dist::{BatchService, ServiceSpec};
+use batchrep::evaluator::{
+    cross_check, sweep, AnalyticEvaluator, DesEvaluator, Evaluator, LiveEvaluator,
+    MonteCarloEvaluator, ReplicationPolicy,
+};
+
+fn paper_scn(n: usize, b: usize, spec: ServiceSpec, seed: u64) -> Scenario {
+    Scenario::from_policy(
+        ReplicationPolicy::BalancedDisjoint,
+        n,
+        b,
+        BatchService::paper(spec),
+        seed,
+    )
+    .unwrap()
+}
+
+#[test]
+fn acceptance_cross_check_matrix() {
+    // Acceptance criterion: cross_check(analytic, montecarlo, scenario)
+    // passes within tolerance for N=24, B ∈ {1, 2, 4, 8, 24} under
+    // Shifted-Exponential service.
+    let mc = MonteCarloEvaluator { trials: 100_000, threads: 1 };
+    for b in [1usize, 2, 4, 8, 24] {
+        let scn = paper_scn(24, b, ServiceSpec::shifted_exp(1.0, 0.2), 42 + b as u64);
+        let ck = cross_check(&AnalyticEvaluator, &mc, &scn)
+            .unwrap_or_else(|e| panic!("B={b}: {e}"));
+        assert!(ck.mean_diff <= ck.tolerance, "B={b}");
+        // Quantiles must agree too (p50 within 2%).
+        let (pa, pm) = (ck.a.quantile(0.5).unwrap(), ck.b.quantile(0.5).unwrap());
+        assert!((pa - pm).abs() / pa < 0.02, "B={b}: p50 analytic {pa} vs mc {pm}");
+    }
+}
+
+#[test]
+fn one_scenario_value_fits_every_backend() {
+    // Fast service so the live backend's injected sleeps stay small.
+    let scn = paper_scn(6, 3, ServiceSpec::shifted_exp(20.0, 0.05), 7);
+
+    let analytic = AnalyticEvaluator.evaluate(&scn).unwrap();
+    let mc = MonteCarloEvaluator { trials: 40_000, threads: 2 }.evaluate(&scn).unwrap();
+    let des = DesEvaluator { trials: 10_000, ..DesEvaluator::default() }
+        .evaluate(&scn)
+        .unwrap();
+    let live = LiveEvaluator { rounds: 10, time_scale: 0.001, ..LiveEvaluator::default() }
+        .evaluate(&scn)
+        .unwrap();
+
+    // All four speak the same currency.
+    for (name, st) in
+        [("analytic", &analytic), ("mc", &mc), ("des", &des), ("live", &live)]
+    {
+        assert!(st.mean.is_finite() && st.mean > 0.0, "{name}");
+        assert!(st.variance >= 0.0, "{name}");
+        assert!(st.quantile(0.5).is_some(), "{name}");
+    }
+    // Simulation backends agree tightly with the exact value.
+    assert!((mc.mean - analytic.mean).abs() < 6.0 * mc.sem.max(1e-3));
+    assert!((des.mean - analytic.mean).abs() < 6.0 * des.sem.max(1e-3));
+    // The live system is noisy at 10 rounds but lands in the ballpark.
+    assert!(
+        (live.mean - analytic.mean).abs() < 0.6 * analytic.mean,
+        "live {} vs analytic {}",
+        live.mean,
+        analytic.mean
+    );
+}
+
+#[test]
+fn seed_makes_evaluations_bit_reproducible() {
+    let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+    let mc = MonteCarloEvaluator { trials: 20_000, threads: 1 };
+    let a = mc.evaluate(&paper_scn(12, 4, spec.clone(), 99)).unwrap();
+    let b = mc.evaluate(&paper_scn(12, 4, spec.clone(), 99)).unwrap();
+    assert_eq!(a.mean, b.mean);
+    assert_eq!(a.variance, b.variance);
+    let c = mc.evaluate(&paper_scn(12, 4, spec, 100)).unwrap();
+    assert_ne!(a.mean, c.mean);
+}
+
+#[test]
+fn backends_swap_with_one_line() {
+    // The generic sweep driver with two different backends — the shape
+    // the experiments layer is built on.
+    let service = BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.2));
+    let bs = [1usize, 2, 4, 8];
+    let make = |seed: u64| {
+        let service = service.clone();
+        move |b: usize| {
+            Scenario::from_policy(
+                ReplicationPolicy::BalancedDisjoint,
+                24,
+                b,
+                service.clone(),
+                seed + b as u64,
+            )
+        }
+    };
+    let exact = sweep(&bs, &AnalyticEvaluator, make(1)).unwrap();
+    let sim =
+        sweep(&bs, &MonteCarloEvaluator { trials: 30_000, threads: 1 }, make(1)).unwrap();
+    for (e, s) in exact.iter().zip(&sim) {
+        assert_eq!(e.b, s.b);
+        assert!(
+            (e.stats.mean - s.stats.mean).abs() < 0.02 * e.stats.mean,
+            "B={}: {} vs {}",
+            e.b,
+            e.stats.mean,
+            s.stats.mean
+        );
+    }
+}
+
+#[test]
+fn speculative_scenarios_route_to_capable_backends() {
+    let scn = paper_scn(12, 3, ServiceSpec::shifted_exp(1.0, 0.2), 5)
+        .with_redundancy(Redundancy::Speculative { deadline_factor: 1.5 });
+    // The closed forms and the direct sampler do not model reactive
+    // redundancy — they must refuse rather than silently mis-evaluate.
+    assert!(AnalyticEvaluator.evaluate(&scn).is_err());
+    assert!(MonteCarloEvaluator::default().evaluate(&scn).is_err());
+    // The event engine models it.
+    let st = DesEvaluator { trials: 5_000, ..DesEvaluator::default() }
+        .evaluate(&scn)
+        .unwrap();
+    assert!(st.mean.is_finite() && st.cost.is_some());
+}
