@@ -1,15 +1,25 @@
 #!/usr/bin/env bash
 # Tier-1 gate for the batchrep crate (documented in ROADMAP.md).
 #
-#   ./ci.sh            # fmt check, release build, tests, bench smoke
+#   ./ci.sh            # fmt check, clippy, release build, tests, bench smokes
 #
-# The bench smoke run uses BATCHREP_BENCH_FAST=1 so it finishes in
-# seconds; it exists to catch bench-target bit-rot, not to measure.
+# The bench smoke runs use BATCHREP_BENCH_FAST=1 so they finish in
+# seconds; they exist to catch bench-target bit-rot, not to measure.
+# The bench-mc smoke additionally validates the BENCH_mc.json artifact
+# it writes at the repo root (the subcommand re-reads the file and
+# fails on a malformed schema).
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
 echo "== cargo fmt --check =="
 cargo fmt --check
+
+echo "== cargo clippy (all targets, deny warnings) =="
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "clippy component unavailable in this toolchain; skipping lint gate"
+fi
 
 echo "== cargo build --release =="
 cargo build --release
@@ -19,5 +29,14 @@ cargo test -q
 
 echo "== bench smoke (bench_fig2, fast mode) =="
 BATCHREP_BENCH_FAST=1 cargo bench --bench bench_fig2
+
+echo "== bench-mc smoke (trials/sec harness) =="
+if [ -f ../BENCH_mc.json ]; then
+  # A measured baseline exists — don't clobber it with fast-mode
+  # (smoke-quality) numbers; validate the harness against a scratch file.
+  BATCHREP_BENCH_FAST=1 cargo run --release -- bench-mc --out target/BENCH_mc_smoke.json
+else
+  BATCHREP_BENCH_FAST=1 cargo run --release -- bench-mc --out ../BENCH_mc.json
+fi
 
 echo "ci.sh: all gates passed"

@@ -1,0 +1,24 @@
+//! Monte-Carlo sampler throughput: the retained scalar reference vs the
+//! block kernel vs auto-threaded sharding, on the fixed fig2-scale
+//! reference scenario. `BATCHREP_BENCH_FAST=1` shrinks it for CI.
+use batchrep::benchkit::{black_box, mc, Suite};
+use batchrep::des::montecarlo;
+use batchrep::evaluator::MonteCarloEvaluator;
+
+fn main() {
+    let fast = std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let trials: u64 = if fast { 5_000 } else { 50_000 };
+    let scn = mc::reference_scenario();
+    let threads = MonteCarloEvaluator::auto_threads();
+    let mut suite = Suite::new("bench_mc — completion-time sampler throughput");
+    suite.bench("scalar reference", trials, || {
+        black_box(montecarlo::run_trials_reference(&scn, trials, 1));
+    });
+    suite.bench("block kernel (1 thread)", trials, || {
+        black_box(montecarlo::run_trials(&scn, trials, 1));
+    });
+    suite.bench(&format!("block kernel ({threads} threads)"), trials, || {
+        black_box(montecarlo::run_trials_parallel(&scn, trials, 1, threads));
+    });
+    suite.finish();
+}

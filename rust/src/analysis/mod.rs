@@ -15,10 +15,17 @@
 //! balanced-size assignments by inclusion–exclusion over the maximum of
 //! independent non-identical exponentials, which lets E2 verify
 //! Theorem 1 analytically rather than only by simulation.
+//!
+//! The balanced closed form is **memoized** per `(N, B, spec)` in a
+//! thread-local cache (see [`ct_cache_counters`]), and the harmonic
+//! sums it is built from are table lookups, so dense `∆µ` sweeps
+//! ([`bstar_sweep`], `evaluator::paper_sweep`) never recompute a point.
 
 use crate::assignment::{feasible_batch_counts, Assignment};
 use crate::dist::ServiceSpec;
 use crate::util::harmonic::{harmonic, harmonic2};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 
 /// Mean/variance of a completion time.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -42,19 +49,68 @@ fn exp_family(spec: &ServiceSpec) -> Option<(f64, f64)> {
     spec.exp_family()
 }
 
+/// Memo key of one balanced closed-form evaluation: `(N, B, spec)` with
+/// the exp-family parameters keyed by their exact bit patterns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct CtKey {
+    n: u64,
+    b: u64,
+    mu_bits: u64,
+    delta_bits: u64,
+}
+
+thread_local! {
+    /// Per-thread memo of [`completion_time_stats`] results. Thread-local
+    /// rather than global so sweeps never contend on a lock and tests
+    /// observe exact hit/miss counts.
+    static CT_CACHE: RefCell<HashMap<CtKey, CtStats>> = RefCell::new(HashMap::new());
+    static CT_HITS: Cell<u64> = Cell::new(0);
+    static CT_MISSES: Cell<u64> = Cell::new(0);
+}
+
+/// Entry cap of the per-thread memo; reaching it clears the map (sweeps
+/// touch a few thousand keys at most, so this is a leak guard, not a
+/// working-set limit).
+const CT_CACHE_CAP: usize = 1 << 16;
+
+/// `(hits, misses)` of the calling thread's closed-form memo since
+/// thread start — the observability hook the sweep-caching tests (and
+/// perf investigations) read.
+pub fn ct_cache_counters() -> (u64, u64) {
+    (CT_HITS.with(|h| h.get()), CT_MISSES.with(|m| m.get()))
+}
+
 /// Closed-form completion-time statistics of System1 with `n` workers,
 /// `b` batches, balanced disjoint assignment, and per-unit service
 /// `spec` (must be Exp or SExp; `b` must divide `n`).
+///
+/// Results are memoized per `(n, b, spec)` in a thread-local cache, so
+/// dense sweeps (`bstar_sweep`, `paper_sweep`, repeated `optimum_b`
+/// scans) evaluate each distinct point once per thread.
 pub fn completion_time_stats(n: u64, b: u64, spec: &ServiceSpec) -> anyhow::Result<CtStats> {
     anyhow::ensure!(n >= 1 && b >= 1 && b <= n, "need 1 <= B <= N");
     anyhow::ensure!(n % b == 0, "closed form needs B | N (N={n}, B={b})");
     let (mu, delta) = exp_family(spec)
         .ok_or_else(|| anyhow::anyhow!("closed form only for exp/sexp, got {}", spec.name()))?;
+    let key = CtKey { n, b, mu_bits: mu.to_bits(), delta_bits: delta.to_bits() };
+    if let Some(st) = CT_CACHE.with(|c| c.borrow().get(&key).copied()) {
+        CT_HITS.with(|h| h.set(h.get() + 1));
+        return Ok(st);
+    }
+    CT_MISSES.with(|m| m.set(m.get() + 1));
     let s = (n / b) as f64; // batch size in units == replication degree
-    Ok(CtStats {
+    let st = CtStats {
         mean: s * delta + harmonic(b) / mu,
         var: harmonic2(b) / (mu * mu),
-    })
+    };
+    CT_CACHE.with(|c| {
+        let mut map = c.borrow_mut();
+        if map.len() >= CT_CACHE_CAP {
+            map.clear();
+        }
+        map.insert(key, st);
+    });
+    Ok(st)
 }
 
 /// One point of the diversity–parallelism spectrum.
@@ -146,7 +202,7 @@ pub fn sample_partial_completion(
                 .fold(f64::INFINITY, f64::min)
         })
         .collect();
-    mins.sort_by(|a, x| a.partial_cmp(x).unwrap());
+    mins.sort_unstable_by(f64::total_cmp);
     mins[(k - 1) as usize]
 }
 
@@ -326,6 +382,45 @@ mod tests {
         let sweep = bstar_sweep(n, 1.0, &[0.001, 0.01, 0.1, 0.3, 1.0, 3.0, 10.0, 50.0]);
         for w in sweep.windows(2) {
             assert!(w[1].b_star >= w[0].b_star, "{:?}", sweep);
+        }
+    }
+
+    #[test]
+    fn bstar_sweep_hits_memo_cache_on_dense_grids() {
+        // Acceptance gate: a ≥ 50-point ∆µ sweep must evaluate each
+        // distinct closed form once — repeats come from the memo.
+        // Counters are thread-local and libtest runs each test on its
+        // own thread, so the arithmetic here is exact.
+        let n = 48u64;
+        let grid: Vec<f64> = (0..60).map(|i| 0.013 + i as f64 * 0.0471).collect();
+        let (h0, m0) = ct_cache_counters();
+        let first = bstar_sweep(n, 1.0, &grid);
+        let (h1, m1) = ct_cache_counters();
+        let points = grid.len() as u64 * feasible_batch_counts(n as usize).len() as u64;
+        assert_eq!(m1 - m0, points, "each (B, ∆µ) closed form computed exactly once");
+        // Within one pass, re-reading the optimum point must hit.
+        assert!(h1 - h0 >= grid.len() as u64, "B* re-lookups should hit the memo");
+        let second = bstar_sweep(n, 1.0, &grid);
+        let (h2, m2) = ct_cache_counters();
+        assert_eq!(m2, m1, "second sweep must not recompute any closed form");
+        assert_eq!(h2 - h1, points + grid.len() as u64);
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.b_star, b.b_star);
+            assert_eq!(a.mean_at_star.to_bits(), b.mean_at_star.to_bits());
+        }
+    }
+
+    #[test]
+    fn memoized_stats_match_fresh_computation() {
+        // The cached value must be the value: compare a repeated call
+        // against the formula recomputed by hand.
+        let spec = ServiceSpec::shifted_exp(1.7, 0.23);
+        for _ in 0..3 {
+            let st = completion_time_stats(36, 6, &spec).unwrap();
+            let expect_mean = 6.0 * 0.23 + harmonic(6) / 1.7;
+            let expect_var = harmonic2(6) / (1.7 * 1.7);
+            assert_eq!(st.mean.to_bits(), expect_mean.to_bits());
+            assert_eq!(st.var.to_bits(), expect_var.to_bits());
         }
     }
 

@@ -1,0 +1,242 @@
+//! Monte-Carlo throughput trajectory harness (the `batchrep bench-mc`
+//! subcommand).
+//!
+//! Measures trials/sec of the three sampler paths — the retained scalar
+//! reference ([`crate::des::montecarlo::run_trials_reference`]), the
+//! block kernel, and auto-threaded sharding — on a **fixed fig2-scale
+//! reference scenario**, and writes the result as `BENCH_mc.json` at
+//! the repo root. The file gives this and every future perf PR a
+//! measured baseline to diff against; PERF.md documents the schema and
+//! how to rerun.
+
+use crate::des::{montecarlo, Scenario};
+use crate::dist::{BatchService, ServiceSpec};
+use crate::evaluator::ReplicationPolicy;
+use crate::util::json::Json;
+use crate::util::Timer;
+use std::path::Path;
+
+/// Schema version of `BENCH_mc.json`.
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// The fixed measurement scenario: the Fig. 2 scale (`N = 24`, `B = 4`,
+/// SExp(1, 0.2), balanced disjoint, seed 42). Fixed so that numbers are
+/// comparable across PRs.
+pub fn reference_scenario() -> Scenario {
+    Scenario::from_policy(
+        ReplicationPolicy::BalancedDisjoint,
+        24,
+        4,
+        BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.2)),
+        42,
+    )
+    .expect("reference scenario is valid by construction")
+}
+
+/// One measured sampler path.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    /// Trials executed in the timed run.
+    pub trials: u64,
+    /// Wall-clock seconds of the timed run.
+    pub elapsed_s: f64,
+    /// `trials / elapsed_s`.
+    pub trials_per_sec: f64,
+}
+
+/// Full harness result (serialized to `BENCH_mc.json`).
+#[derive(Debug, Clone)]
+pub struct McBenchReport {
+    /// Trials per timed run.
+    pub trials: u64,
+    /// Threads used by the multi-threaded run.
+    pub threads: usize,
+    /// Pre-PR scalar per-draw sampler (the speedup baseline).
+    pub reference_scalar: Throughput,
+    /// Block kernel, single thread.
+    pub single_thread: Throughput,
+    /// Block kernel, `threads`-way sharding.
+    pub multi_thread: Throughput,
+    /// `single_thread / reference_scalar` throughput ratio.
+    pub speedup_block_vs_reference: f64,
+    /// `multi_thread / single_thread` throughput ratio.
+    pub speedup_threads_vs_single: f64,
+}
+
+fn measure(trials: u64, mut f: impl FnMut() -> montecarlo::McSummary) -> (Throughput, f64) {
+    let t = Timer::start();
+    let sum = f();
+    let elapsed_s = t.secs().max(1e-9);
+    (
+        Throughput { trials, elapsed_s, trials_per_sec: trials as f64 / elapsed_s },
+        sum.mean(),
+    )
+}
+
+/// Run the harness: one warmed, timed run per sampler path, plus an
+/// agreement guard so a broken kernel can never report a "speedup".
+pub fn run(trials: u64, threads: usize) -> McBenchReport {
+    let trials = trials.max(1);
+    let threads = threads.max(1);
+    let scn = reference_scenario();
+    // Warm caches and lazily-built tables before timing.
+    let _ = montecarlo::run_trials(&scn, (trials / 10).max(1), 7);
+    let (reference_scalar, m_ref) =
+        measure(trials, || montecarlo::run_trials_reference(&scn, trials, scn.seed));
+    let (single_thread, m_single) =
+        measure(trials, || montecarlo::run_trials(&scn, trials, scn.seed));
+    let (multi_thread, m_multi) = measure(trials, || {
+        montecarlo::run_trials_parallel(&scn, trials, scn.seed, threads)
+    });
+    // The three paths must describe the same system: scalar and block
+    // consume the same RNG stream (fast_ln rounding only); the threaded
+    // run uses substreams, so it agrees statistically.
+    assert!(
+        (m_ref - m_single).abs() <= 1e-9 * m_ref.abs().max(1.0),
+        "block kernel diverged from scalar reference: {m_single} vs {m_ref}"
+    );
+    assert!(
+        (m_multi - m_ref).abs() <= 0.05 * m_ref.abs().max(1.0),
+        "threaded sampler diverged from reference: {m_multi} vs {m_ref}"
+    );
+    McBenchReport {
+        trials,
+        threads,
+        reference_scalar,
+        single_thread,
+        multi_thread,
+        speedup_block_vs_reference: single_thread.trials_per_sec
+            / reference_scalar.trials_per_sec,
+        speedup_threads_vs_single: multi_thread.trials_per_sec
+            / single_thread.trials_per_sec,
+    }
+}
+
+fn throughput_json(t: &Throughput) -> Json {
+    Json::obj(vec![
+        ("trials", (t.trials as i64).into()),
+        ("elapsed_s", t.elapsed_s.into()),
+        ("trials_per_sec", t.trials_per_sec.into()),
+    ])
+}
+
+impl McBenchReport {
+    /// Serialize to the `BENCH_mc.json` schema (see PERF.md).
+    pub fn to_json(&self) -> Json {
+        let scn = reference_scenario();
+        Json::obj(vec![
+            ("version", SCHEMA_VERSION.into()),
+            (
+                "scenario",
+                Json::obj(vec![
+                    ("n_workers", scn.n_workers().into()),
+                    ("n_batches", scn.assignment.n_batches.into()),
+                    ("service", scn.service.spec.name().into()),
+                    ("policy", scn.policy.name().into()),
+                    ("seed", (scn.seed as i64).into()),
+                ]),
+            ),
+            ("trials", (self.trials as i64).into()),
+            ("threads", (self.threads as i64).into()),
+            ("reference_scalar", throughput_json(&self.reference_scalar)),
+            ("single_thread", throughput_json(&self.single_thread)),
+            ("multi_thread", throughput_json(&self.multi_thread)),
+            ("speedup_block_vs_reference", self.speedup_block_vs_reference.into()),
+            ("speedup_threads_vs_single", self.speedup_threads_vs_single.into()),
+        ])
+    }
+
+    /// Write the report to `path` (pretty-printing is not needed — the
+    /// file is machine-diffed).
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+/// Schema check of a `BENCH_mc.json` document: every required key
+/// present, every throughput positive and finite. The `bench-mc`
+/// subcommand re-reads and validates the file it wrote, so a malformed
+/// artifact fails the CI gate.
+pub fn validate_json(j: &Json) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        j.get("version").and_then(Json::as_i64) == Some(SCHEMA_VERSION),
+        "missing or unexpected schema version"
+    );
+    for key in ["scenario", "trials", "threads"] {
+        anyhow::ensure!(j.get(key).is_some(), "missing key '{key}'");
+    }
+    for key in ["reference_scalar", "single_thread", "multi_thread"] {
+        let sec = j.get(key).ok_or_else(|| anyhow::anyhow!("missing section '{key}'"))?;
+        let tps = sec
+            .get("trials_per_sec")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("section '{key}' missing trials_per_sec"))?;
+        anyhow::ensure!(
+            tps.is_finite() && tps > 0.0,
+            "section '{key}' has nonsensical trials_per_sec {tps}"
+        );
+    }
+    for key in ["speedup_block_vs_reference", "speedup_threads_vs_single"] {
+        let v = j
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing key '{key}'"))?;
+        anyhow::ensure!(v.is_finite() && v > 0.0, "nonsensical '{key}' = {v}");
+    }
+    Ok(())
+}
+
+/// Read `path` and [`validate_json`] it.
+pub fn validate_file(path: &Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    validate_json(&j)?;
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_round_trips_and_validates() {
+        let report = run(2_000, 2);
+        assert!(report.reference_scalar.trials_per_sec > 0.0);
+        assert!(report.single_thread.trials_per_sec > 0.0);
+        assert!(report.multi_thread.trials_per_sec > 0.0);
+        let j = report.to_json();
+        validate_json(&j).unwrap();
+        // File round trip.
+        let path = std::env::temp_dir().join("batchrep_bench_mc_test.json");
+        report.write(&path).unwrap();
+        let parsed = validate_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(parsed.get("version").and_then(Json::as_i64), Some(SCHEMA_VERSION));
+        assert_eq!(parsed.get("trials").and_then(Json::as_i64), Some(2_000));
+    }
+
+    #[test]
+    fn validation_rejects_malformed_documents() {
+        assert!(validate_json(&Json::parse("{}").unwrap()).is_err());
+        let mut j = run(500, 1).to_json();
+        validate_json(&j).unwrap();
+        if let Json::Object(m) = &mut j {
+            m.remove("single_thread");
+        }
+        assert!(validate_json(&j).is_err());
+        // Wrong version is malformed too.
+        let bad = Json::parse("{\"version\": 999}").unwrap();
+        assert!(validate_json(&bad).is_err());
+    }
+
+    #[test]
+    fn reference_scenario_is_fig2_scale() {
+        let scn = reference_scenario();
+        assert_eq!(scn.n_workers(), 24);
+        assert_eq!(scn.assignment.n_batches, 4);
+        assert_eq!(scn.service.spec.name(), "sexp:1,0.2");
+        assert_eq!(scn.seed, 42);
+    }
+}

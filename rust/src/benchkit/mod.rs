@@ -8,6 +8,8 @@
 //! Output is a Markdown table (stdout) and an optional CSV file so the
 //! experiment harness can diff runs across optimization iterations.
 
+pub mod mc;
+
 use crate::util::stats::Samples;
 use crate::util::table::Table;
 use std::time::{Duration, Instant};

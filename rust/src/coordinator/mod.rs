@@ -69,6 +69,50 @@ pub struct TrainingReport {
     pub metrics: RunMetrics,
 }
 
+/// Reusable per-round working memory: cancellation tokens plus
+/// generation-stamped coverage and winner maps. Allocated once at
+/// construction so the live round loop (dispatch → collect → post-hoc
+/// coverage validation) performs no heap allocation per round.
+struct RoundScratch {
+    /// One cancellation token per batch, reset (not reallocated) each
+    /// round.
+    cancels: Vec<Arc<AtomicBool>>,
+    /// `unit_covered[u] == generation` ⇔ unit `u` covered this round.
+    unit_covered: Vec<u32>,
+    /// `batch_won[b] == generation` ⇔ batch `b` already has a winner.
+    batch_won: Vec<u32>,
+    /// Stamp of the current round; bumping it resets both maps in O(1).
+    generation: u32,
+}
+
+impl RoundScratch {
+    fn new(n_units: usize, n_batches: usize) -> Self {
+        Self {
+            cancels: (0..n_batches).map(|_| Arc::new(AtomicBool::new(false))).collect(),
+            unit_covered: vec![0; n_units],
+            batch_won: vec![0; n_batches],
+            generation: 0,
+        }
+    }
+
+    /// Start a new round: bump the stamp and clear the cancel tokens.
+    /// Safe to call once the previous round has fully reported — every
+    /// in-flight task clone of the tokens has been dropped by then.
+    fn begin_round(&mut self) -> u32 {
+        self.generation = self.generation.wrapping_add(1);
+        if self.generation == 0 {
+            // Stamp wraparound: clear once every 2^32 rounds.
+            self.unit_covered.fill(0);
+            self.batch_won.fill(0);
+            self.generation = 1;
+        }
+        for c in &self.cancels {
+            c.store(false, Ordering::Relaxed);
+        }
+        self.generation
+    }
+}
+
 /// The live coordinator.
 pub struct Coordinator {
     cfg: SystemConfig,
@@ -83,6 +127,7 @@ pub struct Coordinator {
     /// Per-worker speed multipliers for the injected delays (`None` =
     /// homogeneous) — the live analogue of `Scenario::worker_speeds`.
     speeds: Option<Vec<f64>>,
+    scratch: RoundScratch,
     /// Metrics across all jobs run by this coordinator.
     pub metrics: RunMetrics,
 }
@@ -178,6 +223,7 @@ impl Coordinator {
         }
 
         let service = BatchService { spec: cfg.service.clone(), model: cfg.batch_model };
+        let scratch = RoundScratch::new(layout.n_units, assignment.n_batches);
         Ok(Coordinator {
             rng,
             assignment,
@@ -188,6 +234,7 @@ impl Coordinator {
             results: res_rx,
             next_job: 0,
             speeds,
+            scratch,
             metrics: RunMetrics::new(),
             cfg,
         })
@@ -209,12 +256,12 @@ impl Coordinator {
         let job_id = self.next_job;
         self.next_job += 1;
         let n = self.cfg.n_workers;
-        let b = self.assignment.n_batches;
         let s_units = self.layout.batch_units() as u64;
 
-        // Per-batch cancellation tokens.
-        let cancels: Vec<Arc<AtomicBool>> =
-            (0..b).map(|_| Arc::new(AtomicBool::new(false))).collect();
+        // Reusable round scratch: cancellation tokens reset in place,
+        // coverage/winner maps cleared by generation stamp — no per-round
+        // allocation.
+        let gen = self.scratch.begin_round();
 
         // Dispatch: one replica per worker with a sampled straggle.
         let timer = Timer::start();
@@ -226,6 +273,7 @@ impl Coordinator {
             if let Some(speeds) = &self.speeds {
                 delay *= speeds[w];
             }
+            let cancel = self.scratch.cancels[batch].clone();
             self.workers[w]
                 .tx
                 .send(TaskMsg {
@@ -233,7 +281,7 @@ impl Coordinator {
                     batch_id: batch,
                     spec: spec.clone(),
                     delay_s: delay,
-                    cancel: cancels[batch].clone(),
+                    cancel,
                 })
                 .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))?;
         }
@@ -242,9 +290,7 @@ impl Coordinator {
         // winning batches; the round ends for bookkeeping when every
         // worker has reported (cancelled workers report quickly).
         let n_units = self.layout.n_units;
-        let mut unit_covered = vec![false; n_units];
         let mut units_left = n_units;
-        let mut batch_won = vec![false; b];
         let mut reported = 0usize;
         let mut redundant = 0u64;
         let mut cancelled = 0u64;
@@ -264,13 +310,13 @@ impl Coordinator {
             match msg.out {
                 None => cancelled += 1,
                 Some(out) => {
-                    if batch_won[msg.batch_id] {
+                    if self.scratch.batch_won[msg.batch_id] == gen {
                         redundant += 1;
                         continue;
                     }
-                    batch_won[msg.batch_id] = true;
+                    self.scratch.batch_won[msg.batch_id] = gen;
                     if self.cfg.cancellation {
-                        cancels[msg.batch_id].store(true, Ordering::Relaxed);
+                        self.scratch.cancels[msg.batch_id].store(true, Ordering::Relaxed);
                     }
                     // Aggregation unit: fold the winner in.
                     agg = Some(match (agg.take(), out) {
@@ -290,8 +336,8 @@ impl Coordinator {
                     });
                     max_injected_winner = max_injected_winner.max(msg.injected_s);
                     for &u in &self.layout.units_of_batch[msg.batch_id] {
-                        if !unit_covered[u] {
-                            unit_covered[u] = true;
+                        if self.scratch.unit_covered[u] != gen {
+                            self.scratch.unit_covered[u] = gen;
                             units_left -= 1;
                         }
                     }
@@ -300,7 +346,7 @@ impl Coordinator {
                         if self.cfg.cancellation {
                             // Overlapping layouts: remaining batches are
                             // moot once coverage is reached.
-                            for c in &cancels {
+                            for c in &self.scratch.cancels {
                                 c.store(true, Ordering::Relaxed);
                             }
                         }

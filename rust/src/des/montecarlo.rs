@@ -5,83 +5,183 @@
 //! covers the dataset. For disjoint layouts this reduces to
 //! `max_b min_{w ∈ batch b} t_w` and runs in O(N); overlapping layouts
 //! use an O(N log N) sort + incremental coverage count.
+//!
+//! # Throughput architecture
+//!
+//! The trial loop is built for millions of trials per second:
+//!
+//! * **Block sampling** — service times for many trials are drawn in one
+//!   [`crate::dist::BatchService::fill_batch_times`] call, so the
+//!   uniform→service transform runs as a tight vectorizable loop
+//!   (`fast_ln`, no libm calls) instead of one enum dispatch per draw.
+//! * **Zero-allocation trials** — a reusable [`TrialScratch`] holds the
+//!   block time buffer, the sort-order index buffer, and a
+//!   generation-stamped coverage array, so steady-state trials perform
+//!   no heap allocation at all (overlapping layouts included).
+//! * **Deterministic sharding** — [`run_trials_parallel`] splits trials
+//!   over OS threads with per-shard RNG substreams and merges shard
+//!   summaries in shard-index order, so a fixed `(seed, threads)` pair
+//!   is bit-reproducible regardless of thread scheduling.
+//!
+//! [`run_trials_reference`] retains the pre-block scalar sampler as the
+//! measured baseline for the `bench-mc` perf harness.
 
 use super::Scenario;
 use crate::util::rng::Rng;
 use crate::util::stats::{Samples, Welford};
+use std::cell::RefCell;
 
-/// Draw one completion time (allocates a scratch buffer; the bulk-trial
-/// path [`run_trials`] uses [`sample_completion_into`] to amortize it).
+/// Upper bound on raw samples retained per run for quantile estimates.
+const SAMPLE_CAP: u64 = 200_000;
+
+/// Size cap (in f64 elements) of the block time buffer: `n_workers ×
+/// trials-per-fill` stays under this so the working set lives in L1/L2.
+const BLOCK_ELEMS: usize = 8192;
+
+/// Trials drawn per `fill_batch_times` call for an `n`-worker scenario.
 #[inline]
-pub fn sample_completion(scn: &Scenario, rng: &mut Rng) -> f64 {
-    let mut scratch = Vec::with_capacity(scn.n_workers());
-    sample_completion_into(scn, rng, &mut scratch)
+fn trials_per_block(n: usize) -> usize {
+    (BLOCK_ELEMS / n.max(1)).clamp(1, 512)
 }
 
-/// Draw one completion time reusing `scratch` for the per-worker times.
-#[inline]
-pub fn sample_completion_into(scn: &Scenario, rng: &mut Rng, scratch: &mut Vec<f64>) -> f64 {
-    let n = scn.n_workers();
-    let s = scn.batch_units();
-    scratch.clear();
-    match &scn.worker_speeds {
-        None => {
-            // Homogeneous fast path: skip the per-worker speed lookup.
-            if !scn.layout.is_overlapping {
-                // Disjoint layouts only need per-batch min / global max:
-                // fold directly without materializing times at all.
-                let mut worst = f64::NEG_INFINITY;
-                for ws in &scn.assignment.workers_of_batch {
-                    let mut best = f64::INFINITY;
-                    for _ in 0..ws.len() {
-                        let t = scn.service.sample_batch(s, rng);
-                        if t < best {
-                            best = t;
-                        }
-                    }
-                    if best > worst {
-                        worst = best;
-                    }
+/// Reusable per-trial working memory. One instance amortizes every
+/// allocation of the trial loop: the block of per-worker finish times,
+/// the sort-order indices for overlapping layouts, and a coverage array
+/// stamped with a generation counter so it never needs clearing.
+#[derive(Debug, Default)]
+pub struct TrialScratch {
+    /// Per-worker finish times for a block of trials (trial-major).
+    times: Vec<f64>,
+    /// Worker indices sorted by finish time (overlapping layouts).
+    order: Vec<u32>,
+    /// `covered[u] == generation` ⇔ unit `u` covered in this trial.
+    covered: Vec<u32>,
+    /// Coverage generation stamp of the current trial.
+    generation: u32,
+}
+
+impl TrialScratch {
+    /// Fresh (empty) scratch; buffers grow on first use and are reused
+    /// afterwards.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow the time buffer to at least `len` elements.
+    fn ensure_times(&mut self, len: usize) {
+        if self.times.len() < len {
+            self.times.resize(len, 0.0);
+        }
+    }
+
+    /// Completion time of the trial stored at `times[lo .. lo+n]`.
+    #[inline]
+    fn completion_at(&mut self, scn: &Scenario, lo: usize) -> f64 {
+        let n = scn.n_workers();
+        let times = &self.times[lo..lo + n];
+        if !scn.layout.is_overlapping {
+            return disjoint_completion(scn, times);
+        }
+        // Overlapping: incremental coverage in time order, with the
+        // order/coverage buffers reused across trials.
+        self.order.clear();
+        self.order.extend(0..n as u32);
+        self.order
+            .sort_unstable_by(|&a, &b| times[a as usize].total_cmp(&times[b as usize]));
+        let n_units = scn.layout.n_units;
+        if self.covered.len() < n_units {
+            self.covered.resize(n_units, 0);
+        }
+        self.generation = self.generation.wrapping_add(1);
+        if self.generation == 0 {
+            // Stamp wraparound: clear once every 2^32 trials.
+            self.covered.fill(0);
+            self.generation = 1;
+        }
+        let gen = self.generation;
+        let mut n_covered = 0usize;
+        for &w in &self.order {
+            let w = w as usize;
+            let b = scn.assignment.batch_of_worker[w];
+            for &u in &scn.layout.units_of_batch[b] {
+                if self.covered[u] != gen {
+                    self.covered[u] = gen;
+                    n_covered += 1;
                 }
-                return worst;
             }
-            for _ in 0..n {
-                scratch.push(scn.service.sample_batch(s, rng));
+            if n_covered == n_units {
+                return times[w];
             }
         }
-        Some(speeds) => {
-            for w in 0..n {
-                scratch.push(scn.service.sample_batch(s, rng) * speeds[w]);
+        // Layout validation guarantees coverage; unreachable in practice.
+        f64::INFINITY
+    }
+}
+
+/// Disjoint-layout reduction: per-batch earliest replica, then the
+/// slowest batch.
+#[inline]
+fn disjoint_completion(scn: &Scenario, times: &[f64]) -> f64 {
+    let mut worst = f64::NEG_INFINITY;
+    for ws in &scn.assignment.workers_of_batch {
+        let mut best = f64::INFINITY;
+        for &w in ws {
+            best = best.min(times[w]);
+        }
+        worst = worst.max(best);
+    }
+    worst
+}
+
+/// Draw the per-worker finish times of `cnt` trials into
+/// `times[.. cnt*n]` (trial-major) and apply heterogeneous speeds.
+#[inline]
+fn fill_trials(scn: &Scenario, rng: &mut Rng, times: &mut [f64], n: usize) {
+    scn.service.fill_batch_times(scn.batch_units(), times, rng);
+    if let Some(speeds) = &scn.worker_speeds {
+        for trial in times.chunks_exact_mut(n) {
+            for (x, sp) in trial.iter_mut().zip(speeds) {
+                *x *= sp;
             }
         }
     }
-    completion_from_times(scn, scratch)
 }
 
-/// Completion time for a given vector of per-worker finish times —
-/// shared with the event engine and with the live coordinator's
-/// post-hoc validation.
+thread_local! {
+    /// Per-thread scratch behind [`sample_completion`], so one-off draws
+    /// are allocation-free in steady state too.
+    static LOCAL_SCRATCH: RefCell<TrialScratch> = RefCell::new(TrialScratch::new());
+}
+
+/// Draw one completion time (reuses a thread-local [`TrialScratch`];
+/// bulk callers should hold their own scratch and use
+/// [`sample_completion_into`]).
+#[inline]
+pub fn sample_completion(scn: &Scenario, rng: &mut Rng) -> f64 {
+    LOCAL_SCRATCH.with(|s| sample_completion_into(scn, rng, &mut s.borrow_mut()))
+}
+
+/// Draw one completion time reusing `scratch` for all working memory.
+#[inline]
+pub fn sample_completion_into(scn: &Scenario, rng: &mut Rng, scratch: &mut TrialScratch) -> f64 {
+    let n = scn.n_workers();
+    scratch.ensure_times(n);
+    fill_trials(scn, rng, &mut scratch.times[..n], n);
+    scratch.completion_at(scn, 0)
+}
+
+/// Completion time for a given vector of per-worker finish times — the
+/// generic reference reduction, shared with the event engine, the live
+/// coordinator's post-hoc validation, and the property tests that pin
+/// the scratch-based fast paths to it.
 pub fn completion_from_times(scn: &Scenario, times: &[f64]) -> f64 {
     if !scn.layout.is_overlapping {
-        // Disjoint: per-batch earliest replica, then the slowest batch.
-        let mut worst = f64::NEG_INFINITY;
-        for ws in &scn.assignment.workers_of_batch {
-            let mut best = f64::INFINITY;
-            for &w in ws {
-                if times[w] < best {
-                    best = times[w];
-                }
-            }
-            if best > worst {
-                worst = best;
-            }
-        }
-        worst
+        disjoint_completion(scn, times)
     } else {
         // Overlapping: incremental coverage in time order.
         let n_units = scn.layout.n_units;
         let mut order: Vec<usize> = (0..times.len()).collect();
-        order.sort_unstable_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap());
+        order.sort_unstable_by(|&a, &b| times[a].total_cmp(&times[b]));
         let mut covered = vec![false; n_units];
         let mut n_covered = 0usize;
         for &w in &order {
@@ -127,16 +227,107 @@ impl McSummary {
     }
 }
 
-/// Run `trials` independent trials.
+/// One shard of the trial loop: `trials` block-sampled trials from an
+/// already-positioned RNG, keeping every `keep_every`-th sample.
+fn run_shard(
+    scn: &Scenario,
+    trials: u64,
+    mut rng: Rng,
+    keep_every: u64,
+    scratch: &mut TrialScratch,
+) -> McSummary {
+    let n = scn.n_workers();
+    let block = trials_per_block(n);
+    let mut welford = Welford::new();
+    let mut samples = Samples::with_capacity((trials / keep_every) as usize + 1);
+    scratch.ensure_times(n * block);
+    let mut i = 0u64;
+    while i < trials {
+        let cnt = ((trials - i) as usize).min(block);
+        fill_trials(scn, &mut rng, &mut scratch.times[..n * cnt], n);
+        for t in 0..cnt {
+            let v = scratch.completion_at(scn, t * n);
+            welford.push(v);
+            if i % keep_every == 0 {
+                samples.push(v);
+            }
+            i += 1;
+        }
+    }
+    McSummary { welford, samples }
+}
+
+/// Run `trials` independent trials (single-threaded, block-sampled).
 pub fn run_trials(scn: &Scenario, trials: u64, seed: u64) -> McSummary {
-    const SAMPLE_CAP: u64 = 200_000;
+    run_trials_with(scn, trials, seed, &mut TrialScratch::new())
+}
+
+/// [`run_trials`] with caller-owned scratch, for sweep drivers that run
+/// many configurations back to back without reallocating.
+pub fn run_trials_with(
+    scn: &Scenario,
+    trials: u64,
+    seed: u64,
+    scratch: &mut TrialScratch,
+) -> McSummary {
+    let keep_every = trials.div_ceil(SAMPLE_CAP).max(1);
+    run_shard(scn, trials, Rng::new(seed), keep_every, scratch)
+}
+
+/// One pre-block trial: scalar `sample_batch` calls per draw, including
+/// the old homogeneous-disjoint fold (per-batch min / global max with
+/// no times materialization) and the old allocating overlapping path.
+fn reference_sample_completion(scn: &Scenario, rng: &mut Rng, scratch: &mut Vec<f64>) -> f64 {
+    let n = scn.n_workers();
+    let s = scn.batch_units();
+    scratch.clear();
+    match &scn.worker_speeds {
+        None => {
+            if !scn.layout.is_overlapping {
+                // Homogeneous disjoint fast path of the pre-block code:
+                // fold directly without materializing times at all.
+                let mut worst = f64::NEG_INFINITY;
+                for ws in &scn.assignment.workers_of_batch {
+                    let mut best = f64::INFINITY;
+                    for _ in 0..ws.len() {
+                        let t = scn.service.sample_batch(s, rng);
+                        if t < best {
+                            best = t;
+                        }
+                    }
+                    if best > worst {
+                        worst = best;
+                    }
+                }
+                return worst;
+            }
+            for _ in 0..n {
+                scratch.push(scn.service.sample_batch(s, rng));
+            }
+        }
+        Some(speeds) => {
+            for w in 0..n {
+                scratch.push(scn.service.sample_batch(s, rng) * speeds[w]);
+            }
+        }
+    }
+    completion_from_times(scn, scratch)
+}
+
+/// The pre-block scalar sampler — one `sample_batch` enum dispatch per
+/// draw, the old disjoint fold, per-trial order/coverage allocations on
+/// overlapping layouts — faithfully reproducing the trial loop as it
+/// worked before the block kernel. Kept (not dead code) as the measured
+/// baseline of the `bench-mc` throughput harness; evaluators never call
+/// it.
+pub fn run_trials_reference(scn: &Scenario, trials: u64, seed: u64) -> McSummary {
     let mut rng = Rng::new(seed);
     let mut welford = Welford::new();
     let keep_every = trials.div_ceil(SAMPLE_CAP).max(1);
     let mut samples = Samples::with_capacity((trials / keep_every) as usize + 1);
-    let mut scratch = Vec::with_capacity(scn.n_workers());
+    let mut times = Vec::with_capacity(scn.n_workers());
     for i in 0..trials {
-        let t = sample_completion_into(scn, &mut rng, &mut scratch);
+        let t = reference_sample_completion(scn, &mut rng, &mut times);
         welford.push(t);
         if i % keep_every == 0 {
             samples.push(t);
@@ -146,9 +337,10 @@ pub fn run_trials(scn: &Scenario, trials: u64, seed: u64) -> McSummary {
 }
 
 /// Multi-threaded trial runner: shards `trials` across `threads` OS
-/// threads with independent RNG substreams and merges the Welford
-/// accumulators (quantile samples are kept per-shard and concatenated).
-/// Deterministic for a fixed `(seed, threads)` pair.
+/// threads with independent RNG substreams. Shard summaries are merged
+/// in shard-index order after all threads join, so the result is
+/// independent of thread completion order: a fixed `(seed, threads)`
+/// pair produces a bit-identical [`McSummary`] on every run.
 pub fn run_trials_parallel(
     scn: &Scenario,
     trials: u64,
@@ -161,38 +353,30 @@ pub fn run_trials_parallel(
     }
     let per = trials / threads as u64;
     let extra = trials % threads as u64;
+    // One shared thinning rate, so the union of shard sample sets obeys
+    // the global cap and depends only on (trials, threads).
+    let keep_every = trials.div_ceil(SAMPLE_CAP).max(1);
     let shards: Vec<McSummary> = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(threads);
-        for t in 0..threads {
-            let scn_ref = &*scn;
-            let shard_trials = per + if (t as u64) < extra { 1 } else { 0 };
-            // Substream seeds derived like Rng::substream: independent
-            // per shard, stable across runs.
-            let shard_seed = crate::util::rng::Rng::new(seed).substream(t as u64 + 1);
-            handles.push(scope.spawn(move || {
-                let mut rng = shard_seed;
-                let mut welford = Welford::new();
-                let keep_every = shard_trials.div_ceil(200_000 / threads as u64 + 1).max(1);
-                let mut samples =
-                    Samples::with_capacity((shard_trials / keep_every) as usize + 1);
-                let mut scratch = Vec::with_capacity(scn_ref.n_workers());
-                for i in 0..shard_trials {
-                    let v = sample_completion_into(scn_ref, &mut rng, &mut scratch);
-                    welford.push(v);
-                    if i % keep_every == 0 {
-                        samples.push(v);
-                    }
-                }
-                McSummary { welford, samples }
-            }));
-        }
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let scn_ref = &*scn;
+                let shard_trials = per + u64::from((t as u64) < extra);
+                // Substream seeds: independent per shard, stable across
+                // runs for a fixed (seed, threads).
+                let shard_rng = Rng::new(seed).substream(t as u64 + 1);
+                scope.spawn(move || {
+                    let mut scratch = TrialScratch::new();
+                    run_shard(scn_ref, shard_trials, shard_rng, keep_every, &mut scratch)
+                })
+            })
+            .collect();
         handles.into_iter().map(|h| h.join().expect("mc shard panicked")).collect()
     });
     let mut welford = Welford::new();
     let mut samples = Samples::new();
-    for s in shards {
-        welford.merge(&s.welford);
-        for &x in s.samples.raw() {
+    for sh in &shards {
+        welford.merge(&sh.welford);
+        for &x in sh.samples.raw() {
             samples.push(x);
         }
     }
@@ -245,6 +429,60 @@ mod tests {
         let a = run_trials(&scn, 1000, 5).mean();
         let b = run_trials(&scn, 1000, 5).mean();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn block_sampler_agrees_with_scalar_reference() {
+        // The block kernel must describe the same system as the retained
+        // scalar baseline: identical RNG stream, values within fast_ln
+        // rounding of each other.
+        for overlap in [false, true] {
+            let svc = BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.3));
+            let scn = if overlap {
+                let layout = crate::batching::overlapping(12, 12, 3).unwrap();
+                let assignment = crate::assignment::balanced(12, 12).unwrap();
+                Scenario::new(layout, assignment, svc).unwrap()
+            } else {
+                Scenario::paper_balanced(12, 4, svc).unwrap()
+            };
+            let blk = run_trials(&scn, 20_000, 9);
+            let refr = run_trials_reference(&scn, 20_000, 9);
+            assert!(
+                (blk.mean() - refr.mean()).abs() <= 1e-9 * refr.mean(),
+                "overlap={overlap}: block {} vs reference {}",
+                blk.mean(),
+                refr.mean()
+            );
+            assert!(
+                (blk.variance() - refr.variance()).abs() <= 1e-6 * refr.variance().max(1e-9),
+                "overlap={overlap}: var block {} vs reference {}",
+                blk.variance(),
+                refr.variance()
+            );
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_scenarios_is_clean() {
+        // One scratch driven through scenarios of different shapes and
+        // layouts must give the same answers as fresh scratch each time.
+        let mut scratch = TrialScratch::new();
+        let configs: Vec<Scenario> = vec![
+            paper_scn(24, 6, ServiceSpec::exp(1.0)),
+            {
+                let svc = BatchService::paper(ServiceSpec::exp(1.0));
+                let layout = crate::batching::overlapping(8, 8, 2).unwrap();
+                let assignment = crate::assignment::balanced(8, 8).unwrap();
+                Scenario::new(layout, assignment, svc).unwrap()
+            },
+            paper_scn(4, 2, ServiceSpec::shifted_exp(1.0, 0.5)),
+        ];
+        for scn in &configs {
+            let reused = run_trials_with(scn, 5_000, 3, &mut scratch);
+            let fresh = run_trials(scn, 5_000, 3);
+            assert_eq!(reused.mean().to_bits(), fresh.mean().to_bits());
+            assert_eq!(reused.variance().to_bits(), fresh.variance().to_bits());
+        }
     }
 
     #[test]
@@ -315,6 +553,21 @@ mod tests {
     }
 
     #[test]
+    fn parallel_bit_identical_across_runs() {
+        // The acceptance bar: run_trials_parallel(seed, k) is fully
+        // bit-reproducible — mean, variance, and the retained sample set.
+        let scn = paper_scn(12, 4, ServiceSpec::shifted_exp(1.0, 0.3));
+        for k in [2usize, 4] {
+            let a = run_trials_parallel(&scn, 30_000, 11, k);
+            let b = run_trials_parallel(&scn, 30_000, 11, k);
+            assert_eq!(a.welford.count(), 30_000);
+            assert_eq!(a.mean().to_bits(), b.mean().to_bits(), "k={k}");
+            assert_eq!(a.variance().to_bits(), b.variance().to_bits(), "k={k}");
+            assert_eq!(a.samples.raw(), b.samples.raw(), "k={k}");
+        }
+    }
+
+    #[test]
     fn parallel_degenerate_cases() {
         let scn = paper_scn(4, 2, ServiceSpec::exp(1.0));
         // threads > trials, threads = 1
@@ -323,6 +576,53 @@ mod tests {
         let b = run_trials_parallel(&scn, 1000, 3, 1);
         let c = run_trials(&scn, 1000, 3);
         assert_eq!(b.mean(), c.mean());
+    }
+
+    #[test]
+    fn prop_fast_path_matches_generic_reduction() {
+        // The scratch-based sampler (disjoint fold and generation-stamped
+        // coverage) must agree exactly with the generic
+        // completion_from_times on the same drawn times — homogeneous
+        // and heterogeneous speeds, disjoint and overlapping layouts.
+        testkit::check("mc-fastpath-vs-generic", 80, |g| {
+            let n = *g.pick(&[2usize, 4, 6, 8, 12]);
+            let divisors: Vec<usize> = (1..=n).filter(|b| n % b == 0).collect();
+            let b = *g.pick(&divisors);
+            let overlap = g.coin(0.5);
+            let svc = BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.2));
+            let mut scn = if overlap {
+                let stride = (n / b).max(1);
+                let layout = crate::batching::overlapping(n, n, stride).unwrap();
+                let assignment = crate::assignment::balanced(n, n).unwrap();
+                Scenario::new(layout, assignment, svc).unwrap()
+            } else {
+                Scenario::paper_balanced(n, b, svc).unwrap()
+            };
+            if g.coin(0.5) {
+                let speeds: Vec<f64> = (0..n).map(|_| g.f64_in(0.5, 3.0)).collect();
+                scn = scn.with_speeds(speeds).unwrap();
+            }
+            let seed = g.u64_in(0, 1 << 40);
+            let mut scratch = TrialScratch::new();
+            let mut rng_fast = crate::util::rng::Rng::new(seed);
+            // Several trials in sequence, so the generation stamps and
+            // buffer reuse are exercised, not just the first trial.
+            for trial in 0..4 {
+                let fast = sample_completion_into(&scn, &mut rng_fast, &mut scratch);
+                // Reproduce the exact same drawn times from a lockstep RNG.
+                let mut rng_ref = crate::util::rng::Rng::new(seed);
+                let mut times = vec![0.0f64; n * (trial + 1)];
+                for t in 0..=trial {
+                    fill_trials(&scn, &mut rng_ref, &mut times[t * n..(t + 1) * n], n);
+                }
+                let generic = completion_from_times(&scn, &times[trial * n..]);
+                assert_eq!(
+                    fast.to_bits(),
+                    generic.to_bits(),
+                    "n={n} b={b} overlap={overlap} trial={trial}: {fast} vs {generic}"
+                );
+            }
+        });
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! `pareto:0.5,2.2`, `weibull:0.6,1.0`, `det:0.5`, `trace:path.csv`)
 //! used by the config system and the CLI.
 
+use crate::util::math::fast_ln;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -186,6 +187,57 @@ impl ServiceSpec {
         }
     }
 
+    /// Fill `out` with i.i.d. per-unit service draws — the block form of
+    /// [`ServiceSpec::sample`].
+    ///
+    /// **Stream semantics:** consumes exactly the same RNG stream as
+    /// `out.len()` successive [`ServiceSpec::sample`] calls (same number
+    /// and order of raw draws), so scalar and block paths are seed-
+    /// compatible. Values agree with the scalar path to ≤ 1e-14 relative
+    /// (the log-based families apply the vectorizable
+    /// [`crate::util::math::fast_ln`] instead of libm `ln`);
+    /// `Deterministic` and `Trace` are bit-identical.
+    ///
+    /// The uniform draw and the transform run as separate passes over
+    /// the slice so the transform loop is free of RNG state dependencies
+    /// and can vectorize.
+    pub fn fill_times(&self, out: &mut [f64], rng: &mut Rng) {
+        match self {
+            ServiceSpec::Exp { mu } => {
+                rng.fill_f64_open0(out);
+                for x in out.iter_mut() {
+                    *x = -fast_ln(*x) / mu;
+                }
+            }
+            ServiceSpec::ShiftedExp { mu, delta } => {
+                rng.fill_f64_open0(out);
+                for x in out.iter_mut() {
+                    *x = delta - fast_ln(*x) / mu;
+                }
+            }
+            ServiceSpec::Pareto { xm, alpha } => {
+                rng.fill_f64_open0(out);
+                let inv_alpha = -1.0 / alpha;
+                for x in out.iter_mut() {
+                    *x = xm * x.powf(inv_alpha);
+                }
+            }
+            ServiceSpec::Weibull { shape, scale } => {
+                rng.fill_f64_open0(out);
+                let inv_shape = 1.0 / shape;
+                for x in out.iter_mut() {
+                    *x = scale * (-fast_ln(*x)).powf(inv_shape);
+                }
+            }
+            ServiceSpec::Deterministic { value } => out.fill(*value),
+            ServiceSpec::Trace { samples } => {
+                for x in out.iter_mut() {
+                    *x = samples[rng.below(samples.len() as u64) as usize];
+                }
+            }
+        }
+    }
+
     /// `(mu, delta)` when this spec is in the exponential family the
     /// paper's closed forms cover (∆ = 0 for plain Exponential).
     pub fn exp_family(&self) -> Option<(f64, f64)> {
@@ -274,6 +326,40 @@ impl BatchService {
         }
     }
 
+    /// Fill `out` with i.i.d. `s`-unit batch service draws — the block
+    /// form of [`BatchService::sample_batch`], and the kernel under the
+    /// Monte-Carlo hot path.
+    ///
+    /// **Stream semantics:** consumes exactly the same RNG stream as
+    /// `out.len()` successive `sample_batch` calls; values agree with
+    /// the scalar path to ≤ 1e-14 relative (see
+    /// [`ServiceSpec::fill_times`] for the `fast_ln` caveat).
+    pub fn fill_batch_times(&self, s: u64, out: &mut [f64], rng: &mut Rng) {
+        let sf = s as f64;
+        match self.model {
+            BatchModel::SizeScaled => {
+                self.spec.fill_times(out, rng);
+                for x in out.iter_mut() {
+                    *x *= sf;
+                }
+            }
+            BatchModel::DecoupledSlowdown => {
+                self.spec.fill_times(out, rng);
+                let base = (sf - 1.0).max(0.0) * self.spec.shift();
+                for x in out.iter_mut() {
+                    *x += base;
+                }
+            }
+            BatchModel::PerSampleSum => {
+                // Each output consumes `s` sequential per-unit draws, as
+                // the scalar path does; no block transform applies.
+                for x in out.iter_mut() {
+                    *x = (0..s).map(|_| self.spec.sample(rng)).sum();
+                }
+            }
+        }
+    }
+
     /// Mean batch service time; `None` when the per-unit mean is
     /// infinite.
     pub fn batch_mean(&self, s: u64) -> Option<f64> {
@@ -356,6 +442,116 @@ mod tests {
                 (mean - theory).abs() < 0.02 * theory.max(0.1),
                 "{}: empirical {mean} vs theory {theory}",
                 spec.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fill_times_means_and_variances_match_theory() {
+        // Block-sampler statistical gate, in the style of
+        // sample_means_match_theory: empirical mean within 2% and (for
+        // the families with a simple second moment) variance within 5%.
+        let mut rng = Rng::new(19);
+        let n = 200_000usize;
+        let mut buf = vec![0.0f64; n];
+        // (spec, theoretical variance)
+        let cases = [
+            (ServiceSpec::exp(2.0), Some(0.25)),
+            (ServiceSpec::shifted_exp(1.0, 0.5), Some(1.0)),
+            (ServiceSpec::pareto(0.5, 2.5), None),
+            (ServiceSpec::weibull(1.5, 1.0), None),
+            (ServiceSpec::Deterministic { value: 0.75 }, Some(0.0)),
+        ];
+        for (spec, var_theory) in &cases {
+            spec.fill_times(&mut buf, &mut rng);
+            let mean = buf.iter().sum::<f64>() / n as f64;
+            let theory = spec.mean().unwrap();
+            assert!(
+                (mean - theory).abs() < 0.02 * theory.max(0.1),
+                "{}: empirical mean {mean} vs theory {theory}",
+                spec.name()
+            );
+            if let Some(v) = var_theory {
+                let var =
+                    buf.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+                assert!(
+                    (var - v).abs() < 0.05 * v.max(0.05),
+                    "{}: empirical var {var} vs theory {v}",
+                    spec.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fill_times_matches_scalar_stream() {
+        // The rustdoc contract: same RNG consumption as repeated scalar
+        // sample() calls, values equal to ≤ 1e-14 relative.
+        let specs = [
+            ServiceSpec::exp(1.5),
+            ServiceSpec::shifted_exp(2.0, 0.3),
+            ServiceSpec::pareto(0.5, 2.2),
+            ServiceSpec::weibull(0.6, 1.0),
+            ServiceSpec::Deterministic { value: 0.25 },
+            ServiceSpec::Trace { samples: Arc::new(vec![1.0, 2.0, 3.0]) },
+        ];
+        for spec in &specs {
+            let mut block_rng = Rng::new(77);
+            let mut scalar_rng = Rng::new(77);
+            let mut block = vec![0.0f64; 503];
+            spec.fill_times(&mut block, &mut block_rng);
+            for (i, b) in block.iter().enumerate() {
+                let s = spec.sample(&mut scalar_rng);
+                assert!(
+                    (b - s).abs() <= 1e-14 * s.abs().max(1e-14),
+                    "{} draw {i}: block {b} vs scalar {s}",
+                    spec.name()
+                );
+            }
+            // Both generators consumed the same stream.
+            assert_eq!(block_rng.next_u64(), scalar_rng.next_u64(), "{}", spec.name());
+        }
+    }
+
+    #[test]
+    fn fill_batch_times_matches_scalar_stream_across_models() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        for model in
+            [BatchModel::SizeScaled, BatchModel::DecoupledSlowdown, BatchModel::PerSampleSum]
+        {
+            let svc = BatchService { spec: spec.clone(), model };
+            let mut block_rng = Rng::new(31);
+            let mut scalar_rng = Rng::new(31);
+            let mut block = vec![0.0f64; 200];
+            svc.fill_batch_times(4, &mut block, &mut block_rng);
+            for (i, b) in block.iter().enumerate() {
+                let s = svc.sample_batch(4, &mut scalar_rng);
+                assert!(
+                    (b - s).abs() <= 1e-13 * s.abs().max(1e-13),
+                    "{} draw {i}: block {b} vs scalar {s}",
+                    model.name()
+                );
+            }
+            assert_eq!(block_rng.next_u64(), scalar_rng.next_u64(), "{}", model.name());
+        }
+    }
+
+    #[test]
+    fn fill_batch_times_mean_matches_batch_mean() {
+        let mut rng = Rng::new(8);
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let mut buf = vec![0.0f64; 100_000];
+        for model in
+            [BatchModel::SizeScaled, BatchModel::DecoupledSlowdown, BatchModel::PerSampleSum]
+        {
+            let svc = BatchService { spec: spec.clone(), model };
+            svc.fill_batch_times(4, &mut buf, &mut rng);
+            let mean = buf.iter().sum::<f64>() / buf.len() as f64;
+            let theory = svc.batch_mean(4).unwrap();
+            assert!(
+                (mean - theory).abs() < 0.03 * theory,
+                "{}: {mean} vs {theory}",
+                model.name()
             );
         }
     }

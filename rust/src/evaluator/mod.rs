@@ -14,8 +14,9 @@
 //!   Balanced assignments use the harmonic-number forms; unbalanced
 //!   equal-size assignments use inclusion–exclusion over the maximum of
 //!   non-identical exponentials.
-//! * [`MonteCarloEvaluator`] — vectorized trial batches over the direct
-//!   completion-time sampler (reusable scratch, optional threading).
+//! * [`MonteCarloEvaluator`] — block-sampled trial batches over the
+//!   direct completion-time sampler (zero-allocation scratch,
+//!   multi-threaded by default, deterministic per `(seed, threads)`).
 //! * [`DesEvaluator`] — the full event engine: replica cancellation,
 //!   speculative relaunch, failure injection, and busy/wasted
 //!   worker-second cost accounting.
@@ -261,8 +262,20 @@ impl Evaluator for AnalyticEvaluator {
             let g = scn.assignment.replication(0) as f64;
             let rate = g * mu / s;
             let bu = b as u64;
-            let mean = shift + harmonic(bu) / rate;
-            let variance = harmonic2(bu) / (rate * rate);
+            let (mean, variance) = if scn.layout.n_units == scn.assignment.n_workers {
+                // Paper normalization (U = N ⇒ g = s ⇒ rate = µ):
+                // delegate to the memoized closed form shared with the
+                // analysis sweeps, so `paper_sweep` over dense grids is
+                // served from the cache.
+                let st = crate::analysis::completion_time_stats(
+                    scn.assignment.n_workers as u64,
+                    bu,
+                    &scn.service.spec,
+                )?;
+                (st.mean, st.var)
+            } else {
+                (shift + harmonic(bu) / rate, harmonic2(bu) / (rate * rate))
+            };
             let quantiles = QUANTILES
                 .iter()
                 .map(|&q| (q, shift - (1.0 - q.powf(1.0 / b as f64)).ln() / rate))
@@ -325,22 +338,31 @@ fn quantile_bisect(rates: &[f64], shift: f64, q: f64) -> f64 {
 // Monte-Carlo backend
 // ---------------------------------------------------------------------
 
-/// Direct completion-time sampler: draws every worker's batch service
-/// time and reduces (per-batch min, global max / coverage). Trial
-/// batches reuse one scratch buffer; `threads > 1` shards trials over
-/// OS threads with independent RNG substreams (deterministic for a
-/// fixed `(seed, threads)` pair).
+/// Direct completion-time sampler: block-samples every worker's batch
+/// service time (vectorizable `fill_batch_times` kernel, zero-allocation
+/// [`montecarlo::TrialScratch`]) and reduces (per-batch min, global max /
+/// coverage). `Default` shards trials over **all available cores**;
+/// results are bit-deterministic for a fixed `(scenario, seed, threads)`
+/// triple regardless of thread scheduling.
 #[derive(Debug, Clone, Copy)]
 pub struct MonteCarloEvaluator {
     /// Number of independent trials.
     pub trials: u64,
-    /// Worker threads (1 = sequential).
+    /// Worker threads (1 = sequential; `Default` = all cores).
     pub threads: usize,
+}
+
+impl MonteCarloEvaluator {
+    /// The thread count `Default` picks: the machine's available
+    /// parallelism (1 when it cannot be determined).
+    pub fn auto_threads() -> usize {
+        std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1)
+    }
 }
 
 impl Default for MonteCarloEvaluator {
     fn default() -> Self {
-        Self { trials: 100_000, threads: 1 }
+        Self { trials: 100_000, threads: Self::auto_threads() }
     }
 }
 
@@ -356,16 +378,18 @@ impl Evaluator for MonteCarloEvaluator {
             "monte-carlo evaluator models upfront replication only; use DesEvaluator \
              for speculative redundancy"
         );
-        let mc = if self.threads > 1 {
+        let mut mc = if self.threads > 1 {
             montecarlo::run_trials_parallel(scn, self.trials, scn.seed, self.threads)
         } else {
             montecarlo::run_trials(scn, self.trials, scn.seed)
         };
-        let mut samples = mc.samples.clone();
+        // Quantiles sort the summary's own retained samples in place —
+        // no per-call clone of the sample buffer.
+        let quantiles = quantiles_from(&mut mc.samples);
         Ok(CompletionStats {
-            mean: mc.mean(),
-            variance: mc.variance(),
-            quantiles: quantiles_from(&mut samples),
+            mean: mc.welford.mean(),
+            variance: mc.welford.variance(),
+            quantiles,
             cost: None,
             sem: mc.welford.sem(),
             samples: mc.welford.count(),
@@ -721,6 +745,50 @@ mod tests {
     // NOTE: the four-backends-one-scenario and Fig. 2 cross-check
     // acceptance tests live in tests/evaluator_api.rs (public-API
     // surface); they are intentionally not duplicated here.
+
+    #[test]
+    fn default_mc_is_multithreaded_and_deterministic() {
+        // The default backend shards across all cores, yet two runs of
+        // the same (scenario, seed, threads) triple are bit-identical,
+        // and both Exp and SExp still cross-check against the closed
+        // forms.
+        assert!(MonteCarloEvaluator::default().threads >= 1);
+        assert_eq!(MonteCarloEvaluator::default().threads, MonteCarloEvaluator::auto_threads());
+        let ev = MonteCarloEvaluator { trials: 200_000, ..MonteCarloEvaluator::default() };
+        let sexp_scn = paper_scn(24, 4, ServiceSpec::shifted_exp(1.0, 0.2), 5);
+        let a = ev.evaluate(&sexp_scn).unwrap();
+        let b = ev.evaluate(&sexp_scn).unwrap();
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.variance.to_bits(), b.variance.to_bits());
+        assert_eq!(a.sem.to_bits(), b.sem.to_bits());
+        assert_eq!(a.quantiles, b.quantiles);
+        assert_eq!(a.samples, 200_000);
+        cross_check(&AnalyticEvaluator, &ev, &sexp_scn).unwrap();
+        let exp_scn = paper_scn(24, 4, ServiceSpec::exp(1.3), 6);
+        cross_check(&AnalyticEvaluator, &ev, &exp_scn).unwrap();
+    }
+
+    #[test]
+    fn paper_sweep_is_served_from_the_analytic_memo() {
+        // Acceptance gate: sweeping a ≥ 50-point ∆µ grid twice must not
+        // recompute any closed form on the second pass (counters are
+        // thread-local, so this arithmetic is exact).
+        let grid: Vec<f64> = (0..55).map(|i| 0.017 + 0.037 * i as f64).collect();
+        let run_grid = |grid: &[f64]| {
+            for &dm in grid {
+                let service = BatchService::paper(ServiceSpec::shifted_exp(1.0, dm));
+                let pts = paper_sweep(36, &AnalyticEvaluator, &service, 1).unwrap();
+                assert_eq!(pts.len(), crate::assignment::feasible_batch_counts(36).len());
+            }
+        };
+        let (_, m0) = analysis::ct_cache_counters();
+        run_grid(&grid);
+        let (_, m1) = analysis::ct_cache_counters();
+        assert!(m1 > m0, "first pass must populate the memo");
+        run_grid(&grid);
+        let (_, m2) = analysis::ct_cache_counters();
+        assert_eq!(m2, m1, "second pass must be all cache hits");
+    }
 
     #[test]
     fn cross_check_rejects_disagreement() {

@@ -43,9 +43,10 @@ impl ExpContext {
         Ok(())
     }
 
-    /// The Monte-Carlo backend at this context's trial budget.
+    /// The Monte-Carlo backend at this context's trial budget
+    /// (auto-threaded; deterministic per machine for a fixed seed).
     pub fn mc(&self) -> MonteCarloEvaluator {
-        MonteCarloEvaluator { trials: self.trials.max(1), threads: 1 }
+        MonteCarloEvaluator { trials: self.trials.max(1), ..MonteCarloEvaluator::default() }
     }
 
     /// The event-engine backend (costlier per trial: 1/5 the budget).

@@ -20,7 +20,9 @@
 //! * [`evaluator::AnalyticEvaluator`] — exact closed forms (paper
 //!   Theorems 2–4, Eq. 4; Exponential/Shifted-Exponential only);
 //! * [`evaluator::MonteCarloEvaluator`] — the direct completion-time
-//!   sampler (millions of trials/s, optional threading);
+//!   sampler (block-sampled RNG kernel, zero-allocation trials,
+//!   auto-threaded by default, bit-deterministic per `(seed, threads)`;
+//!   see `PERF.md` and the `bench-mc` harness for measured trials/s);
 //! * [`evaluator::DesEvaluator`] — the event engine with cancellation,
 //!   speculative relaunch, failure injection, and cost accounting;
 //! * [`evaluator::LiveEvaluator`] — the real coordinator + worker

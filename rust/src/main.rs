@@ -9,6 +9,7 @@
 //!               ablations|live|all)
 //!   train       run the live distributed-SGD System1 (PJRT backend)
 //!   mapsum      run one live distributed map-sum evaluation
+//!   bench-mc    Monte-Carlo throughput harness → BENCH_mc.json
 //!
 //! Global options: `--config <file.toml>` plus per-key overrides
 //! (`--n-workers 24`, `--service sexp:1.0,0.2`, `--seed 7`, ...). The
@@ -34,7 +35,7 @@ USAGE:
   batchrep analyze    [--n 24] [--service sexp:1.0,0.2]
   batchrep evaluate   [--backend analytic|montecarlo|des|live|all] [--cross-check]
                       [--config f] [--n-workers 24] [--n-batches 4] [--policy p]
-                      [--service spec] [--trials 100000] [--seed 42]
+                      [--service spec] [--trials 100000] [--seed 42] [--threads K]
                       [--speculative 1.5] [--rounds 30] [--live]
   batchrep simulate   [--config f] [--n-workers 12] [--n-batches 4] [--policy p]
                       [--service spec] [--trials 100000] [--seed 42]
@@ -45,6 +46,7 @@ USAGE:
   batchrep mapsum     [--config f] [--mock] [...]
   batchrep trace      [--n 100000] [--seed 42] [--out trace.csv]
                       [--p-enter 0.0026] [--p-exit 0.05] [--slowdown 8]
+  batchrep bench-mc   [--trials N] [--threads K] [--out BENCH_mc.json] [--fast]
 
 Config keys (file or --key value): n_workers, n_batches, policy, service,
 batch_model, overlapping, cancellation, speculative, seed, trials,
@@ -103,6 +105,7 @@ fn run() -> anyhow::Result<()> {
         Some("train") => cmd_train(&args),
         Some("mapsum") => cmd_mapsum(&args),
         Some("trace") => cmd_trace(&args),
+        Some("bench-mc") => cmd_bench_mc(&args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -142,6 +145,7 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
 fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     let which = args.get_or::<String>("backend", "all".into())?;
     let rounds = args.get_or::<u64>("rounds", 30)?;
+    let threads = args.get_or::<usize>("threads", MonteCarloEvaluator::auto_threads())?;
     let check = args.flag("cross-check");
     let include_live = args.flag("live") || which == "live";
     let cfg = load_config(args)?;
@@ -169,7 +173,7 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
         Backend::Mock
     };
     let analytic = AnalyticEvaluator;
-    let mc = MonteCarloEvaluator { trials: cfg.trials, threads: 1 };
+    let mc = MonteCarloEvaluator { trials: cfg.trials, threads };
     let des = DesEvaluator {
         trials: (cfg.trials / 5).max(1),
         cancellation: cfg.cancellation,
@@ -268,9 +272,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         cfg.batch_model.name()
     );
 
-    // Monte-Carlo backend (models upfront replication).
+    // Monte-Carlo backend (models upfront replication; auto-threaded).
     let upfront = scn.clone().with_redundancy(Redundancy::Upfront);
-    let mc = MonteCarloEvaluator { trials: cfg.trials, threads: 1 };
+    let mc = MonteCarloEvaluator { trials: cfg.trials, ..MonteCarloEvaluator::default() };
     let st = mc.evaluate(&upfront)?;
     let mut t = Table::new("Monte-Carlo completion time", &["metric", "value"]);
     t.row(vec!["trials".into(), st.samples.to_string()]);
@@ -383,6 +387,51 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     println!(
         "wrote {n} per-unit service times to {out} (mean {mean:.4}, max {max:.4}); \
          replay with service trace files via batchrep::trace::load_trace"
+    );
+    Ok(())
+}
+
+/// Monte-Carlo throughput trajectory: measure trials/sec on the fixed
+/// fig2-scale reference scenario, write BENCH_mc.json, and fail if the
+/// written artifact does not validate against the schema.
+fn cmd_bench_mc(args: &Args) -> anyhow::Result<()> {
+    let fast = args.flag("fast") || std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let trials = args.get_or::<u64>("trials", if fast { 40_000 } else { 2_000_000 })?;
+    let threads = args.get_or::<usize>(
+        "threads",
+        batchrep::evaluator::MonteCarloEvaluator::auto_threads(),
+    )?;
+    let out = args.get_or::<String>("out", "BENCH_mc.json".into())?;
+    args.finish()?;
+    let report = batchrep::benchkit::mc::run(trials, threads);
+    let path = std::path::Path::new(&out);
+    report.write(path)?;
+    // The CI gate: a malformed artifact is an error, not a warning.
+    batchrep::benchkit::mc::validate_file(path)?;
+    let fmt_tps = |t: &batchrep::benchkit::mc::Throughput| format!("{:.3e}", t.trials_per_sec);
+    let mut t = Table::new(
+        &format!("bench-mc — {} trials on the fig2-scale reference scenario", trials),
+        &["sampler", "trials/s", "elapsed"],
+    );
+    t.row(vec![
+        "reference scalar".into(),
+        fmt_tps(&report.reference_scalar),
+        format!("{:.3}s", report.reference_scalar.elapsed_s),
+    ]);
+    t.row(vec![
+        "block single-thread".into(),
+        fmt_tps(&report.single_thread),
+        format!("{:.3}s", report.single_thread.elapsed_s),
+    ]);
+    t.row(vec![
+        format!("block {} threads", report.threads),
+        fmt_tps(&report.multi_thread),
+        format!("{:.3}s", report.multi_thread.elapsed_s),
+    ]);
+    t.print();
+    println!(
+        "speedup: block vs scalar {:.2}x, threads vs single {:.2}x — wrote {out}",
+        report.speedup_block_vs_reference, report.speedup_threads_vs_single
     );
     Ok(())
 }

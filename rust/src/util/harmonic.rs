@@ -5,7 +5,15 @@
 //! `H⁽²⁾_B = Σ_{i=1..B} 1/i²` (its variance).
 
 /// `H_n = Σ_{i=1..n} 1/i`. `H_0 = 0`.
+///
+/// Values up to [`HARMONIC_MEMO_MAX`] come from a lazily built prefix
+/// table (O(1) after first use — sweep drivers call this in loops);
+/// larger values fall back to direct summation, then the asymptotic
+/// expansion above [`HARMONIC_TABLE_MAX`].
 pub fn harmonic(n: u64) -> f64 {
+    if n <= HARMONIC_MEMO_MAX {
+        return harmonic_memo()[n as usize];
+    }
     if n <= HARMONIC_TABLE_MAX {
         return harmonic_exact(n);
     }
@@ -15,8 +23,11 @@ pub fn harmonic(n: u64) -> f64 {
         + 1.0 / (120.0 * nf.powi(4))
 }
 
-/// `H⁽²⁾_n = Σ_{i=1..n} 1/i²`. `H⁽²⁾_0 = 0`.
+/// `H⁽²⁾_n = Σ_{i=1..n} 1/i²`. `H⁽²⁾_0 = 0`. Memoized like [`harmonic`].
 pub fn harmonic2(n: u64) -> f64 {
+    if n <= HARMONIC_MEMO_MAX {
+        return harmonic2_memo()[n as usize];
+    }
     if n <= HARMONIC_TABLE_MAX {
         let mut s = 0.0;
         for i in 1..=n {
@@ -29,6 +40,37 @@ pub fn harmonic2(n: u64) -> f64 {
     let nf = n as f64;
     std::f64::consts::PI * std::f64::consts::PI / 6.0 - 1.0 / nf + 0.5 / (nf * nf)
         - 1.0 / (6.0 * nf * nf * nf)
+}
+
+/// Largest index served by the O(1) prefix tables. Covers every worker
+/// count the experiments sweep with a 64 KiB-per-table footprint.
+pub const HARMONIC_MEMO_MAX: u64 = 8192;
+
+fn harmonic_memo() -> &'static [f64] {
+    static TABLE: std::sync::OnceLock<Vec<f64>> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| prefix_table(|i| 1.0 / i as f64))
+}
+
+fn harmonic2_memo() -> &'static [f64] {
+    static TABLE: std::sync::OnceLock<Vec<f64>> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| prefix_table(|i| 1.0 / (i as f64 * i as f64)))
+}
+
+/// Kahan-compensated prefix sums of `term(1..=HARMONIC_MEMO_MAX)`, so
+/// table entries are at least as accurate as the reverse-order direct
+/// sums they replace.
+fn prefix_table(term: impl Fn(u64) -> f64) -> Vec<f64> {
+    let mut table = Vec::with_capacity(HARMONIC_MEMO_MAX as usize + 1);
+    table.push(0.0);
+    let (mut sum, mut comp) = (0.0f64, 0.0f64);
+    for i in 1..=HARMONIC_MEMO_MAX {
+        let y = term(i) - comp;
+        let t = sum + y;
+        comp = (t - sum) - y;
+        sum = t;
+        table.push(sum);
+    }
+    table
 }
 
 /// Generalized `H⁽ᵐ⁾_n = Σ_{i=1..n} 1/iᵐ` computed directly.
@@ -90,6 +132,21 @@ mod tests {
         let n = HARMONIC_TABLE_MAX + 1;
         let direct: f64 = (1..=n).map(|i| 1.0 / (i as f64 * i as f64)).sum();
         assert!((harmonic2(n) - direct).abs() < 1e-10);
+    }
+
+    #[test]
+    fn memo_table_matches_direct_summation() {
+        // Table values and the direct-sum path must agree at, around,
+        // and above the memo boundary.
+        for n in [1u64, 7, 100, HARMONIC_MEMO_MAX - 1, HARMONIC_MEMO_MAX] {
+            let direct: f64 = (1..=n).rev().map(|i| 1.0 / i as f64).sum();
+            assert!((harmonic(n) - direct).abs() < 1e-11, "H_{n}");
+            let direct2: f64 = (1..=n).rev().map(|i| 1.0 / (i as f64 * i as f64)).sum();
+            assert!((harmonic2(n) - direct2).abs() < 1e-12, "H2_{n}");
+        }
+        let n = HARMONIC_MEMO_MAX + 1;
+        let direct: f64 = (1..=n).rev().map(|i| 1.0 / i as f64).sum();
+        assert!((harmonic(n) - direct).abs() < 1e-11, "just above the memo boundary");
     }
 
     #[test]

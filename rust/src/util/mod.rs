@@ -4,6 +4,7 @@
 
 pub mod harmonic;
 pub mod json;
+pub mod math;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -125,7 +125,7 @@ impl Samples {
         assert!(!self.xs.is_empty(), "quantile of empty sample set");
         assert!((0.0..=1.0).contains(&q));
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.xs.sort_unstable_by(f64::total_cmp);
             self.sorted = true;
         }
         let n = self.xs.len();
