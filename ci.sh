@@ -39,4 +39,13 @@ else
   BATCHREP_BENCH_FAST=1 cargo run --release -- bench-mc --out ../BENCH_mc.json
 fi
 
+echo "== bench-des smoke (event-engine trials/sec harness) =="
+if [ -f ../BENCH_des.json ]; then
+  # Same no-clobber rule as bench-mc: keep the measured baseline,
+  # schema-validate the harness against a scratch file.
+  BATCHREP_BENCH_FAST=1 cargo run --release -- bench-des --out target/BENCH_des_smoke.json
+else
+  BATCHREP_BENCH_FAST=1 cargo run --release -- bench-des --out ../BENCH_des.json
+fi
+
 echo "ci.sh: all gates passed"

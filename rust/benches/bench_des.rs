@@ -1,7 +1,15 @@
 //! DES substrate performance: Monte-Carlo sampler and event engine
 //! throughput — the §Perf L3 targets (DESIGN.md §6).
+//!
+//! The engine rows compare the retained heap + scalar-draw reference
+//! against the flat-queue + block-kernel engine and its parallel
+//! sharding; the measured trajectory artifact is `BENCH_des.json`
+//! (`batchrep bench-des`).
 use batchrep::benchkit::{black_box, Suite};
-use batchrep::des::engine::{simulate_one_with, EngineConfig, Redundancy, Workspace};
+use batchrep::des::engine::{
+    simulate_many, simulate_many_parallel, simulate_many_reference, simulate_one_with,
+    EngineConfig, Redundancy, Workspace,
+};
 use batchrep::des::{montecarlo, Scenario};
 use batchrep::dist::{BatchService, ServiceSpec};
 use batchrep::util::rng::Rng;
@@ -44,6 +52,21 @@ fn main() {
     let mut ws4 = Workspace::default();
     suite.bench("engine trial N=24 B=6 speculative", 24, || {
         black_box(simulate_one_with(&scn, &spec_cfg, &mut rng4, &mut ws4));
+    });
+
+    // Engine trajectory: retained reference vs flat-queue + block kernel
+    // vs 4-way deterministic sharding (the bench-des harness paths).
+    suite.bench("engine 10k trials reference (heap+scalar)", 10_000, || {
+        black_box(simulate_many_reference(&scn, &cfg, 10_000, 7));
+    });
+    suite.bench("engine 10k trials flat+block single", 10_000, || {
+        black_box(simulate_many(&scn, &cfg, 10_000, 7));
+    });
+    suite.bench("engine 10k trials flat+block x4", 10_000, || {
+        black_box(simulate_many_parallel(&scn, &cfg, 10_000, 7, 4));
+    });
+    suite.bench("engine 10k trials speculative flat+block", 10_000, || {
+        black_box(simulate_many(&scn, &spec_cfg, 10_000, 7));
     });
 
     // Parallel Monte-Carlo scaling (4 threads vs 1).

@@ -141,7 +141,7 @@ pub fn optimum_b(n: u64, spec: &ServiceSpec) -> u64 {
     spectrum(n, spec)
         .expect("optimum_b needs exp/sexp")
         .into_iter()
-        .min_by(|a, b| a.stats.mean.partial_cmp(&b.stats.mean).unwrap())
+        .min_by(|a, b| a.stats.mean.total_cmp(&b.stats.mean))
         .map(|p| p.b)
         .unwrap_or(1)
 }
@@ -152,7 +152,7 @@ pub fn optimum_b_variance(n: u64, spec: &ServiceSpec) -> u64 {
     spectrum(n, spec)
         .expect("optimum_b_variance needs exp/sexp")
         .into_iter()
-        .min_by(|a, b| a.stats.var.partial_cmp(&b.stats.var).unwrap())
+        .min_by(|a, b| a.stats.var.total_cmp(&b.stats.var))
         .map(|p| p.b)
         .unwrap_or(1)
 }

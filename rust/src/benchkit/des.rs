@@ -1,0 +1,270 @@
+//! DES throughput trajectory harness (the `batchrep bench-des`
+//! subcommand).
+//!
+//! Measures trials/sec of the three event-engine paths — the retained
+//! heap + scalar-draw reference
+//! ([`crate::des::engine::simulate_many_reference`]), the flat-queue +
+//! block-kernel engine, and its multi-threaded sharding — on the same
+//! **fixed fig2-scale reference scenario** the `bench-mc` harness uses,
+//! under both redundancy activation modes (upfront and speculative
+//! relaunch), and writes the result as `BENCH_des.json` at the repo
+//! root. The file gives this and every future perf PR a measured
+//! baseline to diff against; PERF.md documents the schema and how to
+//! rerun.
+
+use super::mc::{reference_scenario, throughput_json, Throughput};
+use crate::des::engine::{
+    simulate_many, simulate_many_parallel, simulate_many_reference, EngineConfig,
+    EngineSummary, Redundancy,
+};
+use crate::des::Scenario;
+use crate::util::json::Json;
+use crate::util::Timer;
+use std::path::Path;
+
+/// Schema version of `BENCH_des.json`.
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// Deadline factor of the speculative measurement config (fixed so the
+/// numbers are comparable across PRs).
+pub const SPECULATIVE_DEADLINE_FACTOR: f64 = 1.5;
+
+/// The speculative variant of the fixed measurement scenario.
+pub fn speculative_scenario() -> Scenario {
+    reference_scenario().with_redundancy(Redundancy::Speculative {
+        deadline_factor: SPECULATIVE_DEADLINE_FACTOR,
+    })
+}
+
+/// One redundancy mode's measured engine paths.
+#[derive(Debug, Clone, Copy)]
+pub struct ModeThroughput {
+    /// Retained heap + per-draw scalar engine (the speedup baseline).
+    pub reference_scalar: Throughput,
+    /// Flat queue + block kernel, single thread.
+    pub single_thread: Throughput,
+    /// Flat queue + block kernel, `threads`-way sharding.
+    pub multi_thread: Throughput,
+    /// `single_thread / reference_scalar` throughput ratio.
+    pub speedup_flat_vs_reference: f64,
+    /// `multi_thread / single_thread` throughput ratio.
+    pub speedup_threads_vs_single: f64,
+}
+
+/// Full harness result (serialized to `BENCH_des.json`).
+#[derive(Debug, Clone)]
+pub struct DesBenchReport {
+    /// Trials per timed run.
+    pub trials: u64,
+    /// Threads used by the multi-threaded runs.
+    pub threads: usize,
+    /// Upfront replication (the paper's model).
+    pub upfront: ModeThroughput,
+    /// Speculative relaunch (the reactive baseline).
+    pub speculative: ModeThroughput,
+}
+
+fn measure(trials: u64, f: impl FnOnce() -> EngineSummary) -> (Throughput, f64) {
+    let t = Timer::start();
+    let sum = f();
+    let elapsed_s = t.secs().max(1e-9);
+    (
+        Throughput { trials, elapsed_s, trials_per_sec: trials as f64 / elapsed_s },
+        sum.completion.mean(),
+    )
+}
+
+/// Measure one redundancy mode: one warmed, timed run per engine path,
+/// plus an agreement guard so a broken engine can never report a
+/// "speedup". The flat-queue engine is stream-equivalent to the
+/// reference (same RNG draws, `fast_ln` rounding only), so their means
+/// must agree to 1e-9 relative; the threaded run uses substreams, so it
+/// agrees statistically.
+fn run_mode(scn: &Scenario, cfg: &EngineConfig, trials: u64, threads: usize) -> ModeThroughput {
+    // Warm caches, lazily-grown buffers, and the thread pool costs.
+    let _ = simulate_many(scn, cfg, (trials / 10).max(1), 7);
+    let (reference_scalar, m_ref) =
+        measure(trials, || simulate_many_reference(scn, cfg, trials, scn.seed));
+    let (single_thread, m_single) =
+        measure(trials, || simulate_many(scn, cfg, trials, scn.seed));
+    let (multi_thread, m_multi) =
+        measure(trials, || simulate_many_parallel(scn, cfg, trials, scn.seed, threads));
+    assert!(
+        (m_single - m_ref).abs() <= 1e-9 * m_ref.abs().max(1.0),
+        "flat-queue engine diverged from the reference: {m_single} vs {m_ref}"
+    );
+    assert!(
+        (m_multi - m_ref).abs() <= 0.05 * m_ref.abs().max(1.0),
+        "threaded engine diverged from the reference: {m_multi} vs {m_ref}"
+    );
+    ModeThroughput {
+        reference_scalar,
+        single_thread,
+        multi_thread,
+        speedup_flat_vs_reference: single_thread.trials_per_sec
+            / reference_scalar.trials_per_sec,
+        speedup_threads_vs_single: multi_thread.trials_per_sec
+            / single_thread.trials_per_sec,
+    }
+}
+
+/// Run the harness on both redundancy modes of the fixed fig2-scale
+/// scenario.
+pub fn run(trials: u64, threads: usize) -> DesBenchReport {
+    let trials = trials.max(1);
+    let threads = threads.max(1);
+    let upfront_scn = reference_scenario();
+    let upfront = run_mode(&upfront_scn, &EngineConfig::default(), trials, threads);
+    let spec_scn = speculative_scenario();
+    let spec_cfg = EngineConfig {
+        redundancy: Redundancy::Speculative {
+            deadline_factor: SPECULATIVE_DEADLINE_FACTOR,
+        },
+        ..EngineConfig::default()
+    };
+    let speculative = run_mode(&spec_scn, &spec_cfg, trials, threads);
+    DesBenchReport { trials, threads, upfront, speculative }
+}
+
+fn mode_json(m: &ModeThroughput) -> Json {
+    Json::obj(vec![
+        ("reference_scalar", throughput_json(&m.reference_scalar)),
+        ("single_thread", throughput_json(&m.single_thread)),
+        ("multi_thread", throughput_json(&m.multi_thread)),
+        ("speedup_flat_vs_reference", m.speedup_flat_vs_reference.into()),
+        ("speedup_threads_vs_single", m.speedup_threads_vs_single.into()),
+    ])
+}
+
+impl DesBenchReport {
+    /// Serialize to the `BENCH_des.json` schema (see PERF.md).
+    pub fn to_json(&self) -> Json {
+        let scn = reference_scenario();
+        Json::obj(vec![
+            ("version", SCHEMA_VERSION.into()),
+            (
+                "scenario",
+                Json::obj(vec![
+                    ("n_workers", scn.n_workers().into()),
+                    ("n_batches", scn.assignment.n_batches.into()),
+                    ("service", scn.service.spec.name().into()),
+                    ("policy", scn.policy.name().into()),
+                    ("seed", (scn.seed as i64).into()),
+                    (
+                        "speculative_deadline_factor",
+                        SPECULATIVE_DEADLINE_FACTOR.into(),
+                    ),
+                ]),
+            ),
+            ("trials", (self.trials as i64).into()),
+            ("threads", (self.threads as i64).into()),
+            ("upfront", mode_json(&self.upfront)),
+            ("speculative", mode_json(&self.speculative)),
+        ])
+    }
+
+    /// Write the report to `path` (machine-diffed, not pretty-printed).
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+/// Schema check of a `BENCH_des.json` document: every required key
+/// present, every throughput and speedup positive and finite, for both
+/// redundancy modes. The `bench-des` subcommand re-reads and validates
+/// the file it wrote, so a malformed artifact fails the CI gate.
+pub fn validate_json(j: &Json) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        j.get("version").and_then(Json::as_i64) == Some(SCHEMA_VERSION),
+        "missing or unexpected schema version"
+    );
+    for key in ["scenario", "trials", "threads"] {
+        anyhow::ensure!(j.get(key).is_some(), "missing key '{key}'");
+    }
+    for mode in ["upfront", "speculative"] {
+        let m = j.get(mode).ok_or_else(|| anyhow::anyhow!("missing mode '{mode}'"))?;
+        for key in ["reference_scalar", "single_thread", "multi_thread"] {
+            let sec = m
+                .get(key)
+                .ok_or_else(|| anyhow::anyhow!("mode '{mode}' missing section '{key}'"))?;
+            let tps = sec.get("trials_per_sec").and_then(Json::as_f64).ok_or_else(|| {
+                anyhow::anyhow!("{mode}.{key} missing trials_per_sec")
+            })?;
+            anyhow::ensure!(
+                tps.is_finite() && tps > 0.0,
+                "{mode}.{key} has nonsensical trials_per_sec {tps}"
+            );
+        }
+        for key in ["speedup_flat_vs_reference", "speedup_threads_vs_single"] {
+            let v = m
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("mode '{mode}' missing key '{key}'"))?;
+            anyhow::ensure!(v.is_finite() && v > 0.0, "nonsensical '{mode}.{key}' = {v}");
+        }
+    }
+    Ok(())
+}
+
+/// Read `path` and [`validate_json`] it.
+pub fn validate_file(path: &Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    validate_json(&j)?;
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_round_trips_and_validates() {
+        let report = run(1_000, 2);
+        for m in [&report.upfront, &report.speculative] {
+            assert!(m.reference_scalar.trials_per_sec > 0.0);
+            assert!(m.single_thread.trials_per_sec > 0.0);
+            assert!(m.multi_thread.trials_per_sec > 0.0);
+        }
+        let j = report.to_json();
+        validate_json(&j).unwrap();
+        // File round trip.
+        let path = std::env::temp_dir().join("batchrep_bench_des_test.json");
+        report.write(&path).unwrap();
+        let parsed = validate_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(parsed.get("version").and_then(Json::as_i64), Some(SCHEMA_VERSION));
+        assert_eq!(parsed.get("trials").and_then(Json::as_i64), Some(1_000));
+    }
+
+    #[test]
+    fn validation_rejects_malformed_documents() {
+        assert!(validate_json(&Json::parse("{}").unwrap()).is_err());
+        let mut j = run(300, 1).to_json();
+        validate_json(&j).unwrap();
+        if let Json::Object(m) = &mut j {
+            m.remove("speculative");
+        }
+        assert!(validate_json(&j).is_err());
+        // A mode missing one engine path is malformed too.
+        let mut j = run(300, 1).to_json();
+        if let Json::Object(m) = &mut j {
+            if let Some(Json::Object(up)) = m.get_mut("upfront") {
+                up.remove("single_thread");
+            }
+        }
+        assert!(validate_json(&j).is_err());
+        let bad = Json::parse("{\"version\": 999}").unwrap();
+        assert!(validate_json(&bad).is_err());
+    }
+
+    #[test]
+    fn speculative_scenario_is_the_reference_with_relaunch() {
+        let scn = speculative_scenario();
+        assert_eq!(scn.n_workers(), 24);
+        assert_eq!(scn.assignment.n_batches, 4);
+        assert!(matches!(scn.redundancy, Redundancy::Speculative { .. }));
+    }
+}

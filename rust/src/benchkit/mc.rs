@@ -112,7 +112,8 @@ pub fn run(trials: u64, threads: usize) -> McBenchReport {
     }
 }
 
-fn throughput_json(t: &Throughput) -> Json {
+/// `Throughput` → JSON object (shared with the `bench-des` harness).
+pub(super) fn throughput_json(t: &Throughput) -> Json {
     Json::obj(vec![
         ("trials", (t.trials as i64).into()),
         ("elapsed_s", t.elapsed_s.into()),

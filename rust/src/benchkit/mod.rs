@@ -8,6 +8,7 @@
 //! Output is a Markdown table (stdout) and an optional CSV file so the
 //! experiment harness can diff runs across optimization iterations.
 
+pub mod des;
 pub mod mc;
 
 use crate::util::stats::Samples;

@@ -34,6 +34,9 @@ pub struct SystemConfig {
     /// (the paper's model). Nonzero values make the scenario's
     /// redundancy mode `Speculative { deadline_factor }`.
     pub speculative: f64,
+    /// k-of-B partial-aggregation target; 0 = full completion. Nonzero
+    /// values set the scenario's `k_of_b` field (must be ≤ n_batches).
+    pub k_of_b: usize,
     /// Root RNG seed (plumbed into every evaluator via the scenario).
     pub seed: u64,
     /// Monte-Carlo / engine trial count.
@@ -64,6 +67,7 @@ impl Default for SystemConfig {
             batch_model: BatchModel::SizeScaled,
             cancellation: true,
             speculative: 0.0,
+            k_of_b: 0,
             seed: 42,
             trials: 100_000,
             artifacts_dir: "artifacts".to_string(),
@@ -119,6 +123,7 @@ impl SystemConfig {
             "batch_model" => self.batch_model = BatchModel::parse(&want_s()?)?,
             "cancellation" => self.cancellation = want_b()?,
             "speculative" => self.speculative = want_f()?,
+            "k_of_b" => self.k_of_b = want_i()? as usize,
             "seed" => self.seed = want_i()? as u64,
             "trials" => self.trials = want_i()? as u64,
             "artifacts_dir" => self.artifacts_dir = want_s()?,
@@ -141,6 +146,10 @@ impl SystemConfig {
         );
         anyhow::ensure!(self.time_scale > 0.0, "time_scale must be positive");
         anyhow::ensure!(self.speculative >= 0.0, "speculative factor must be >= 0");
+        anyhow::ensure!(
+            self.k_of_b <= self.n_batches,
+            "k_of_b must be <= n_batches (0 = full completion)"
+        );
         anyhow::ensure!(
             matches!(self.kernel.as_str(), "grad" | "mapsum"),
             "kernel must be 'grad' or 'mapsum'"
@@ -183,14 +192,18 @@ impl SystemConfig {
         } else {
             crate::des::engine::Redundancy::Upfront
         };
-        Ok(crate::des::Scenario::from_policy(
+        let mut scn = crate::des::Scenario::from_policy(
             self.replication_policy(),
             self.n_workers,
             self.n_batches,
             crate::dist::BatchService { spec: self.service.clone(), model: self.batch_model },
             self.seed,
         )?
-        .with_redundancy(redundancy))
+        .with_redundancy(redundancy);
+        if self.k_of_b > 0 {
+            scn = scn.with_k_of_b(self.k_of_b)?;
+        }
+        Ok(scn)
     }
 }
 
@@ -238,6 +251,20 @@ mod tests {
         let doc = toml::parse("n_workers = 2\nn_batches = 5").unwrap();
         let mut cfg = SystemConfig::default();
         assert!(cfg.apply_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn k_of_b_key_flows_into_the_scenario() {
+        let cfg = SystemConfig { k_of_b: 3, ..SystemConfig::default() };
+        assert_eq!(cfg.scenario().unwrap().k_of_b, Some(3));
+        let off = SystemConfig { k_of_b: 0, ..SystemConfig::default() };
+        assert_eq!(off.scenario().unwrap().k_of_b, None);
+        let bad = SystemConfig { k_of_b: 9, ..SystemConfig::default() };
+        assert!(bad.validate().is_err());
+        let doc = toml::parse("k_of_b = 2").unwrap();
+        let mut cfg = SystemConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.k_of_b, 2);
     }
 
     #[test]

@@ -12,11 +12,51 @@
 //!   deadline launch the backups. Comparing it against upfront
 //!   replication quantifies what the paper's proactive redundancy buys;
 //! * **heterogeneous workers** and **straggler traces** via the
-//!   scenario's speed factors and service spec.
+//!   scenario's speed factors and service spec;
+//! * **k-of-B partial aggregation** via [`Scenario::k_of_b`]: the job
+//!   completes once the earliest `k` batches have finished.
+//!
+//! # Throughput architecture (§Perf iteration 3)
+//!
+//! The default trial loop applies the same discipline the Monte-Carlo
+//! sampler got in the previous perf pass:
+//!
+//! * **Flat event queue** — instead of a `BinaryHeap` that rebalances on
+//!   every push/pop, pending events live in a per-trial **event arena**
+//!   and a flat vector of `u32` order indices kept sorted (descending)
+//!   by `(time, arena index)` under NaN-safe [`f64::total_cmp`]. The
+//!   initial launch burst is appended unsorted and sorted **once** on
+//!   the first pop; the rare mid-run insertions (speculative deadlines,
+//!   relaunch waves) binary-search into place. Pops are `O(1)` vector
+//!   pops from the tail.
+//! * **Block-sampled launch waves** — each wave's service times are
+//!   drawn with one [`crate::dist::BatchService::fill_batch_times`] call
+//!   into a reusable [`Workspace`] buffer (the PR-2 block kernel:
+//!   vectorizable transform over `fast_ln`, no per-replica enum dispatch
+//!   or libm call). The block form consumes exactly the same RNG stream
+//!   as the per-replica scalar draws, so the fast engine is
+//!   stream-equivalent to the retained reference (values within
+//!   `fast_ln` rounding, ≤ 1e-14 per draw). With failure injection the
+//!   crash coins interleave with the service draws, so those waves fall
+//!   back to the scalar draw loop and stay **bit-identical** to the
+//!   reference.
+//! * **Compensated cost accounting** — busy/wasted worker-seconds
+//!   accumulate through [`crate::util::stats::Kahan`] sums rather than a
+//!   naive `+=` over thousands of events.
+//! * **Deterministic parallel sharding** — [`simulate_many_parallel`]
+//!   splits trials over OS threads with per-shard RNG substreams and
+//!   merges shard summaries in shard-index order (Welford merges), so a
+//!   fixed `(seed, threads)` pair is bit-reproducible regardless of
+//!   thread scheduling.
+//!
+//! [`simulate_many_reference`] retains the pre-flat-queue engine — a
+//! `BinaryHeap<Reverse<QueuedEvent>>` and one scalar `sample_batch` call
+//! per replica — as the measured baseline of the `bench-des` harness.
 
+use super::montecarlo::{keep_every, shard_plan};
 use super::Scenario;
 use crate::util::rng::Rng;
-use crate::util::stats::Welford;
+use crate::util::stats::{Kahan, Samples, Welford};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -88,6 +128,490 @@ enum Ev {
     Relaunch { batch: usize },
 }
 
+// ---------------------------------------------------------------------
+// Flat event queue
+// ---------------------------------------------------------------------
+
+/// Index-sorted flat event queue: events are appended to a reusable
+/// arena (their arena index doubles as the FIFO sequence number) and a
+/// vector of `u32` order indices is kept sorted **descending** by
+/// `(time, index)` under [`f64::total_cmp`], so the next event is an
+/// `O(1)` pop from the tail.
+///
+/// The initial launch burst (all of upfront mode's events) is appended
+/// unsorted and sorted once, lazily, on the first pop; later insertions
+/// (speculative deadlines firing, relaunch waves) binary-search their
+/// slot. This removes the per-event sift-up/sift-down rebalancing of a
+/// binary heap from the hot loop — and the NaN-unsafe `partial_cmp`
+/// ordering the heap's `Ord` impl needed.
+#[derive(Debug, Default)]
+struct FlatQueue {
+    /// Every event scheduled this trial; index = schedule order (FIFO
+    /// tie-break).
+    arena: Vec<(f64, Ev)>,
+    /// Pending arena indices, sorted descending by `(time, index)` once
+    /// `dirty` is cleared; tail = earliest event.
+    order: Vec<u32>,
+    /// Pushes since [`FlatQueue::clear`] are unsorted; the first pop
+    /// sorts once.
+    dirty: bool,
+}
+
+impl FlatQueue {
+    /// Reset for a new trial, keeping both buffers' capacity.
+    fn clear(&mut self) {
+        self.arena.clear();
+        self.order.clear();
+        self.dirty = true;
+    }
+
+    /// Schedule an event. During the initial (pre-pop) burst this is an
+    /// O(1) append; afterwards a binary-search insertion that preserves
+    /// the descending order (pending counts are small — at most one
+    /// event per worker plus one per batch).
+    #[inline]
+    fn push(&mut self, time: f64, ev: Ev) {
+        let idx = self.arena.len() as u32;
+        self.arena.push((time, ev));
+        if self.dirty {
+            self.order.push(idx);
+        } else {
+            // Keep strictly-later events ahead of the new one; at equal
+            // times the new event has the largest arena index and sits
+            // ahead of its elders, which therefore pop first (FIFO).
+            let arena = &self.arena;
+            let pos = self
+                .order
+                .partition_point(|&i| arena[i as usize].0.total_cmp(&time).is_gt());
+            self.order.insert(pos, idx);
+        }
+    }
+
+    /// Pop the earliest pending event (ties FIFO by schedule order).
+    #[inline]
+    fn pop(&mut self) -> Option<(f64, Ev)> {
+        if self.dirty {
+            let arena = &self.arena;
+            self.order.sort_unstable_by(|&a, &b| {
+                arena[b as usize]
+                    .0
+                    .total_cmp(&arena[a as usize].0)
+                    .then(b.cmp(&a))
+            });
+            self.dirty = false;
+        }
+        self.order.pop().map(|i| self.arena[i as usize])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fast engine (flat queue + block-sampled waves)
+// ---------------------------------------------------------------------
+
+/// Reusable per-trial state: lets [`simulate_many`] run the engine
+/// allocation-free after the first trial. Holds the flat event queue
+/// (arena + order indices) and the block-sample buffer every launch
+/// wave — upfront, speculative backups, relaunches — draws into.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    queue: FlatQueue,
+    /// Block-sampled service times of the wave being launched.
+    wave: Vec<f64>,
+    start_time: Vec<f64>,
+    unit_covered: Vec<bool>,
+    batch_done: Vec<bool>,
+    cancelled: Vec<bool>,
+}
+
+/// Run a single trial through the event engine (allocating wrapper).
+pub fn simulate_one(scn: &Scenario, cfg: &EngineConfig, rng: &mut Rng) -> TrialResult {
+    simulate_one_with(scn, cfg, rng, &mut Workspace::default())
+}
+
+/// Launch one wave of replicas for a batch at `now`. Without failure
+/// injection the wave's service times are drawn with one block
+/// [`crate::dist::BatchService::fill_batch_times`] call (same RNG stream
+/// as per-replica scalar draws); with `fail_prob > 0` the crash coins
+/// interleave with the draws, so the wave falls back to the scalar loop
+/// and stays bit-identical to the reference engine. Returns the number
+/// of survivors; the caller schedules a Relaunch when zero.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn launch_wave_fast(
+    scn: &Scenario,
+    cfg: &EngineConfig,
+    s: u64,
+    queue: &mut FlatQueue,
+    wave: &mut Vec<f64>,
+    start_time: &mut [f64],
+    batch: usize,
+    replicas: &[usize],
+    now: f64,
+    rng: &mut Rng,
+) -> usize {
+    let m = replicas.len();
+    if m == 0 {
+        return 0;
+    }
+    if cfg.fail_prob == 0.0 {
+        if wave.len() < m {
+            wave.resize(m, 0.0);
+        }
+        scn.service.fill_batch_times(s, &mut wave[..m], rng);
+        for (i, &w) in replicas.iter().enumerate() {
+            let mut t = wave[i];
+            if let Some(speeds) = &scn.worker_speeds {
+                t *= speeds[w];
+            }
+            start_time[w] = now;
+            queue.push(now + t, Ev::Finish { worker: w, batch });
+        }
+        return m;
+    }
+    let mut survivors = 0;
+    for &w in replicas {
+        if rng.coin(cfg.fail_prob) {
+            continue;
+        }
+        let mut t = scn.service.sample_batch(s, rng);
+        if let Some(speeds) = &scn.worker_speeds {
+            t *= speeds[w];
+        }
+        start_time[w] = now;
+        queue.push(now + t, Ev::Finish { worker: w, batch });
+        survivors += 1;
+    }
+    survivors
+}
+
+/// Run a single trial reusing `ws` across calls.
+pub fn simulate_one_with(
+    scn: &Scenario,
+    cfg: &EngineConfig,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+) -> TrialResult {
+    let n = scn.n_workers();
+    let b = scn.assignment.n_batches;
+    let s = scn.batch_units();
+
+    let Workspace { queue, wave, start_time, unit_covered, batch_done, cancelled } = ws;
+    queue.clear();
+
+    // Stall-detection timeout for crash relaunch (only needed when
+    // failures are injected).
+    let relaunch_after = if cfg.fail_prob > 0.0 {
+        cfg.relaunch_timeout_factor
+            * scn
+                .service
+                .batch_mean(s)
+                .expect("failure injection needs a finite mean batch service")
+    } else {
+        f64::INFINITY
+    };
+
+    // Launch per the redundancy strategy.
+    start_time.clear(); // NaN = not launched
+    start_time.resize(n, f64::NAN);
+    match cfg.redundancy {
+        Redundancy::Upfront => {
+            for (batch, replicas) in scn.assignment.workers_of_batch.iter().enumerate() {
+                let survivors = launch_wave_fast(
+                    scn, cfg, s, queue, wave, start_time, batch, replicas, 0.0, rng,
+                );
+                if survivors == 0 {
+                    queue.push(relaunch_after, Ev::Relaunch { batch });
+                }
+            }
+        }
+        Redundancy::Speculative { deadline_factor } => {
+            let mean_batch = scn
+                .service
+                .batch_mean(s)
+                .expect("speculative redundancy needs a finite mean batch service");
+            let deadline = deadline_factor * mean_batch;
+            for (batch, replicas) in scn.assignment.workers_of_batch.iter().enumerate() {
+                let survivors = launch_wave_fast(
+                    scn,
+                    cfg,
+                    s,
+                    queue,
+                    wave,
+                    start_time,
+                    batch,
+                    &replicas[..1],
+                    0.0,
+                    rng,
+                );
+                if replicas.len() > 1 {
+                    queue.push(deadline, Ev::Deadline { batch });
+                } else if survivors == 0 {
+                    queue.push(relaunch_after, Ev::Relaunch { batch });
+                }
+            }
+        }
+    }
+
+    // Coverage state.
+    let n_units = scn.layout.n_units;
+    unit_covered.clear();
+    unit_covered.resize(n_units, false);
+    let mut units_left = n_units;
+    batch_done.clear();
+    batch_done.resize(b, false);
+    let mut batches_done = 0usize;
+    cancelled.clear();
+    cancelled.resize(n, false);
+
+    let mut busy = Kahan::new();
+    let mut wasted = Kahan::new();
+    let mut events = 0u64;
+    let mut completion = f64::NAN;
+
+    while let Some((time, ev)) = queue.pop() {
+        events += 1;
+        match ev {
+            Ev::Finish { worker, batch } => {
+                if cancelled[worker] {
+                    continue;
+                }
+                let work = time - start_time[worker];
+                busy.add(work);
+                if batch_done[batch] {
+                    // A sibling already finished this batch (cancellation
+                    // disabled, or completion raced the cancel).
+                    wasted.add(work);
+                    continue;
+                }
+                batch_done[batch] = true;
+                batches_done += 1;
+                for &u in &scn.layout.units_of_batch[batch] {
+                    if !unit_covered[u] {
+                        unit_covered[u] = true;
+                        units_left -= 1;
+                    }
+                }
+                if cfg.cancellation {
+                    for &sib in &scn.assignment.workers_of_batch[batch] {
+                        if sib != worker && !cancelled[sib] && !start_time[sib].is_nan() {
+                            cancelled[sib] = true;
+                            let partial = time - start_time[sib];
+                            busy.add(partial);
+                            wasted.add(partial);
+                        }
+                    }
+                }
+                let done = match scn.k_of_b {
+                    Some(k) => batches_done >= k,
+                    None => units_left == 0,
+                };
+                if done && completion.is_nan() {
+                    completion = time;
+                    if cfg.cancellation {
+                        // All remaining work (other batches' stragglers
+                        // in overlapping layouts, or batches beyond the
+                        // k-of-B target) is moot once the job is
+                        // complete.
+                        for w in 0..n {
+                            if !cancelled[w] && !start_time[w].is_nan() {
+                                // Workers of already-done batches were
+                                // handled by sibling cancellation above.
+                                if batch_done[scn.assignment.batch_of_worker[w]] {
+                                    continue;
+                                }
+                                cancelled[w] = true;
+                                let partial = time - start_time[w];
+                                busy.add(partial);
+                                wasted.add(partial);
+                            }
+                        }
+                    }
+                }
+            }
+            Ev::Deadline { batch } => {
+                if batch_done[batch] {
+                    continue;
+                }
+                // Launch every backup replica of this batch now.
+                let replicas = &scn.assignment.workers_of_batch[batch];
+                let survivors = launch_wave_fast(
+                    scn,
+                    cfg,
+                    s,
+                    queue,
+                    wave,
+                    start_time,
+                    batch,
+                    &replicas[1..],
+                    time,
+                    rng,
+                );
+                if survivors == 0 && cfg.fail_prob > 0.0 {
+                    // Backups all crashed; if the primary also crashed
+                    // the stall timer is the only way forward (if the
+                    // primary is alive this Relaunch will be moot).
+                    queue.push(time + relaunch_after, Ev::Relaunch { batch });
+                }
+            }
+            Ev::Relaunch { batch } => {
+                if batch_done[batch] {
+                    continue;
+                }
+                let replicas = &scn.assignment.workers_of_batch[batch];
+                let survivors = launch_wave_fast(
+                    scn, cfg, s, queue, wave, start_time, batch, replicas, time, rng,
+                );
+                if survivors == 0 {
+                    queue.push(time + relaunch_after, Ev::Relaunch { batch });
+                }
+            }
+        }
+        // Early exit: once complete and cancellation is on, the queue
+        // may still hold events for cancelled workers; drain them
+        // cheaply.
+        if !completion.is_nan() && cfg.cancellation {
+            while let Some((qt, qe)) = queue.pop() {
+                events += 1;
+                if let Ev::Finish { worker, .. } = qe {
+                    if !cancelled[worker] {
+                        // Shouldn't happen for disjoint full-completion
+                        // layouts; be safe and account the full run.
+                        let work = qt - start_time[worker];
+                        busy.add(work);
+                        wasted.add(work);
+                    }
+                }
+            }
+            break;
+        }
+    }
+
+    debug_assert!(!completion.is_nan(), "job never completed");
+    TrialResult { completion, busy: busy.sum(), wasted: wasted.sum(), events }
+}
+
+// ---------------------------------------------------------------------
+// Aggregation: sequential, reference, and parallel trial loops
+// ---------------------------------------------------------------------
+
+/// Aggregate over many trials.
+#[derive(Debug, Clone)]
+pub struct EngineSummary {
+    /// Completion-time statistics.
+    pub completion: Welford,
+    /// Busy worker-seconds statistics.
+    pub busy: Welford,
+    /// Wasted worker-seconds statistics.
+    pub wasted: Welford,
+    /// Total events processed.
+    pub total_events: u64,
+    /// Retained completion-time samples (thinned to the shared cap) for
+    /// quantile estimates.
+    pub samples: Samples,
+}
+
+impl EngineSummary {
+    fn empty() -> Self {
+        Self {
+            completion: Welford::new(),
+            busy: Welford::new(),
+            wasted: Welford::new(),
+            total_events: 0,
+            samples: Samples::new(),
+        }
+    }
+}
+
+/// Shared trial-summary loop of every engine runner.
+fn summarize_trials(
+    trials: u64,
+    keep_every: u64,
+    mut trial: impl FnMut() -> TrialResult,
+) -> EngineSummary {
+    let mut sum = EngineSummary::empty();
+    for i in 0..trials {
+        let r = trial();
+        sum.completion.push(r.completion);
+        sum.busy.push(r.busy);
+        sum.wasted.push(r.wasted);
+        sum.total_events += r.events;
+        if i % keep_every == 0 {
+            sum.samples.push(r.completion);
+        }
+    }
+    sum
+}
+
+/// Run `trials` trials (single-threaded, flat queue + block sampling).
+pub fn simulate_many(
+    scn: &Scenario,
+    cfg: &EngineConfig,
+    trials: u64,
+    seed: u64,
+) -> EngineSummary {
+    let mut rng = Rng::new(seed);
+    let mut ws = Workspace::default();
+    summarize_trials(trials, keep_every(trials), || {
+        simulate_one_with(scn, cfg, &mut rng, &mut ws)
+    })
+}
+
+/// Multi-threaded trial runner: shards `trials` across `threads` OS
+/// threads with independent RNG substreams (the same
+/// `shard_plan` the Monte-Carlo sampler uses). Shard summaries are
+/// merged in shard-index order after all threads join — Welford merges
+/// for the moments, concatenation for the retained samples — so the
+/// result is independent of thread completion order: a fixed
+/// `(seed, threads)` pair produces a bit-identical [`EngineSummary`] on
+/// every run.
+pub fn simulate_many_parallel(
+    scn: &Scenario,
+    cfg: &EngineConfig,
+    trials: u64,
+    seed: u64,
+    threads: usize,
+) -> EngineSummary {
+    let threads = threads.max(1).min(trials.max(1) as usize);
+    if threads == 1 {
+        return simulate_many(scn, cfg, trials, seed);
+    }
+    // One shared thinning rate, so the union of shard sample sets obeys
+    // the global cap and depends only on (trials, threads).
+    let keep = keep_every(trials);
+    let plan = shard_plan(trials, threads, seed);
+    let shards: Vec<EngineSummary> = std::thread::scope(|scope| {
+        let handles: Vec<_> = plan
+            .into_iter()
+            .map(|(shard_trials, mut rng)| {
+                let scn_ref = &*scn;
+                let cfg_copy = *cfg;
+                scope.spawn(move || {
+                    let mut ws = Workspace::default();
+                    summarize_trials(shard_trials, keep, || {
+                        simulate_one_with(scn_ref, &cfg_copy, &mut rng, &mut ws)
+                    })
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("des shard panicked")).collect()
+    });
+    let mut out = EngineSummary::empty();
+    for sh in &shards {
+        out.completion.merge(&sh.completion);
+        out.busy.merge(&sh.busy);
+        out.wasted.merge(&sh.wasted);
+        out.total_events += sh.total_events;
+        for &x in sh.samples.raw() {
+            out.samples.push(x);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Reference engine (retained pre-flat-queue baseline)
+// ---------------------------------------------------------------------
+
 #[derive(Debug, Clone, Copy)]
 struct QueuedEvent {
     time: f64,
@@ -108,28 +632,21 @@ impl PartialOrd for QueuedEvent {
 }
 impl Ord for QueuedEvent {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Total order: by time, ties broken by sequence number (FIFO).
-        self.time
-            .partial_cmp(&other.time)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(self.seq.cmp(&other.seq))
+        // Total order: by time (NaN-safe total_cmp — times are never
+        // NaN, but the ordering must not silently degrade if they were),
+        // ties broken by sequence number (FIFO).
+        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
     }
 }
 
-/// Reusable per-trial state: lets [`simulate_many`] run the engine
-/// allocation-free after the first trial (§Perf iteration 2).
+/// Per-trial state of the retained reference engine.
 #[derive(Debug, Default)]
-pub struct Workspace {
+struct ReferenceWorkspace {
     heap: BinaryHeap<Reverse<QueuedEvent>>,
     start_time: Vec<f64>,
     unit_covered: Vec<bool>,
     batch_done: Vec<bool>,
     cancelled: Vec<bool>,
-}
-
-/// Run a single trial through the event engine (allocating wrapper).
-pub fn simulate_one(scn: &Scenario, cfg: &EngineConfig, rng: &mut Rng) -> TrialResult {
-    simulate_one_with(scn, cfg, rng, &mut Workspace::default())
 }
 
 #[inline]
@@ -139,12 +656,10 @@ fn push_ev(heap: &mut BinaryHeap<Reverse<QueuedEvent>>, seq: &mut u64, time: f64
     heap.push(Reverse(q));
 }
 
-/// Launch one wave of replicas for a batch at `now`; each replica
-/// independently crash-stops with `cfg.fail_prob` (producing nothing and
-/// costing nothing). Returns the number of survivors; the caller
-/// schedules a Relaunch when zero.
+/// Reference launch wave: one scalar `sample_batch` enum dispatch (and
+/// libm `ln`) per replica.
 #[allow(clippy::too_many_arguments)]
-fn launch_wave(
+fn launch_wave_reference(
     scn: &Scenario,
     cfg: &EngineConfig,
     s: u64,
@@ -172,12 +687,13 @@ fn launch_wave(
     survivors
 }
 
-/// Run a single trial reusing `ws` across calls.
-pub fn simulate_one_with(
+/// One trial of the retained reference engine: `BinaryHeap` event queue,
+/// scalar per-replica service draws, naive cost accumulation.
+fn simulate_one_reference_with(
     scn: &Scenario,
     cfg: &EngineConfig,
     rng: &mut Rng,
-    ws: &mut Workspace,
+    ws: &mut ReferenceWorkspace,
 ) -> TrialResult {
     let n = scn.n_workers();
     let b = scn.assignment.n_batches;
@@ -187,8 +703,6 @@ pub fn simulate_one_with(
     heap.clear();
     let mut seq = 0u64;
 
-    // Stall-detection timeout for crash relaunch (only needed when
-    // failures are injected).
     let relaunch_after = if cfg.fail_prob > 0.0 {
         cfg.relaunch_timeout_factor
             * scn
@@ -199,15 +713,15 @@ pub fn simulate_one_with(
         f64::INFINITY
     };
 
-    // Launch per the redundancy strategy.
     let start_time = &mut ws.start_time; // NaN = not launched
     start_time.clear();
     start_time.resize(n, f64::NAN);
     match cfg.redundancy {
         Redundancy::Upfront => {
             for (batch, replicas) in scn.assignment.workers_of_batch.iter().enumerate() {
-                let survivors =
-                    launch_wave(scn, cfg, s, heap, &mut seq, start_time, batch, replicas, 0.0, rng);
+                let survivors = launch_wave_reference(
+                    scn, cfg, s, heap, &mut seq, start_time, batch, replicas, 0.0, rng,
+                );
                 if survivors == 0 {
                     push_ev(heap, &mut seq, relaunch_after, Ev::Relaunch { batch });
                 }
@@ -220,8 +734,17 @@ pub fn simulate_one_with(
                 .expect("speculative redundancy needs a finite mean batch service");
             let deadline = deadline_factor * mean_batch;
             for (batch, replicas) in scn.assignment.workers_of_batch.iter().enumerate() {
-                let survivors = launch_wave(
-                    scn, cfg, s, heap, &mut seq, start_time, batch, &replicas[..1], 0.0, rng,
+                let survivors = launch_wave_reference(
+                    scn,
+                    cfg,
+                    s,
+                    heap,
+                    &mut seq,
+                    start_time,
+                    batch,
+                    &replicas[..1],
+                    0.0,
+                    rng,
                 );
                 if replicas.len() > 1 {
                     push_ev(heap, &mut seq, deadline, Ev::Deadline { batch });
@@ -232,7 +755,6 @@ pub fn simulate_one_with(
         }
     }
 
-    // Coverage state.
     let n_units = scn.layout.n_units;
     let unit_covered = &mut ws.unit_covered;
     unit_covered.clear();
@@ -241,6 +763,7 @@ pub fn simulate_one_with(
     let batch_done = &mut ws.batch_done;
     batch_done.clear();
     batch_done.resize(b, false);
+    let mut batches_done = 0usize;
     let cancelled = &mut ws.cancelled;
     cancelled.clear();
     cancelled.resize(n, false);
@@ -260,12 +783,11 @@ pub fn simulate_one_with(
                 let work = time - start_time[worker];
                 busy += work;
                 if batch_done[batch] {
-                    // A sibling already finished this batch (cancellation
-                    // disabled, or completion raced the cancel).
                     wasted += work;
                     continue;
                 }
                 batch_done[batch] = true;
+                batches_done += 1;
                 for &u in &scn.layout.units_of_batch[batch] {
                     if !unit_covered[u] {
                         unit_covered[u] = true;
@@ -282,18 +804,15 @@ pub fn simulate_one_with(
                         }
                     }
                 }
-                if units_left == 0 && completion.is_nan() {
+                let done = match scn.k_of_b {
+                    Some(k) => batches_done >= k,
+                    None => units_left == 0,
+                };
+                if done && completion.is_nan() {
                     completion = time;
                     if cfg.cancellation {
-                        // All remaining work (other batches' stragglers
-                        // in overlapping layouts) is moot once the job
-                        // is complete.
                         for w in 0..n {
                             if !cancelled[w] && !start_time[w].is_nan() {
-                                // Only cancel workers whose batch is done
-                                // or irrelevant; with disjoint layouts
-                                // every batch was needed, so this only
-                                // fires for overlapping layouts.
                                 if batch_done[scn.assignment.batch_of_worker[w]] {
                                     continue;
                                 }
@@ -310,15 +829,20 @@ pub fn simulate_one_with(
                 if batch_done[batch] {
                     continue;
                 }
-                // Launch every backup replica of this batch now.
                 let replicas = &scn.assignment.workers_of_batch[batch];
-                let survivors = launch_wave(
-                    scn, cfg, s, heap, &mut seq, start_time, batch, &replicas[1..], time, rng,
+                let survivors = launch_wave_reference(
+                    scn,
+                    cfg,
+                    s,
+                    heap,
+                    &mut seq,
+                    start_time,
+                    batch,
+                    &replicas[1..],
+                    time,
+                    rng,
                 );
                 if survivors == 0 && cfg.fail_prob > 0.0 {
-                    // Backups all crashed; if the primary also crashed
-                    // the stall timer is the only way forward (if the
-                    // primary is alive this Relaunch will be moot).
                     push_ev(heap, &mut seq, time + relaunch_after, Ev::Relaunch { batch });
                 }
             }
@@ -326,24 +850,20 @@ pub fn simulate_one_with(
                 if batch_done[batch] {
                     continue;
                 }
-                let replicas = scn.assignment.workers_of_batch[batch].clone();
-                let survivors = launch_wave(
-                    scn, cfg, s, heap, &mut seq, start_time, batch, &replicas, time, rng,
+                let replicas = &scn.assignment.workers_of_batch[batch];
+                let survivors = launch_wave_reference(
+                    scn, cfg, s, heap, &mut seq, start_time, batch, replicas, time, rng,
                 );
                 if survivors == 0 {
                     push_ev(heap, &mut seq, time + relaunch_after, Ev::Relaunch { batch });
                 }
             }
         }
-        // Early exit: once complete and cancellation is on, the heap may
-        // still hold events for cancelled workers; drain them cheaply.
         if !completion.is_nan() && cfg.cancellation {
             while let Some(Reverse(q)) = heap.pop() {
                 events += 1;
                 if let Ev::Finish { worker, .. } = q.ev {
                     if !cancelled[worker] {
-                        // Shouldn't happen for disjoint layouts; be safe
-                        // and account the full run.
                         let work = q.time - start_time[worker];
                         busy += work;
                         wasted += work;
@@ -358,46 +878,30 @@ pub fn simulate_one_with(
     TrialResult { completion, busy, wasted, events }
 }
 
-/// Aggregate over many trials.
-#[derive(Debug, Clone)]
-pub struct EngineSummary {
-    /// Completion-time statistics.
-    pub completion: Welford,
-    /// Busy worker-seconds statistics.
-    pub busy: Welford,
-    /// Wasted worker-seconds statistics.
-    pub wasted: Welford,
-    /// Total events processed.
-    pub total_events: u64,
-}
-
-/// Run `trials` trials.
-pub fn simulate_many(
+/// The retained pre-flat-queue engine — `BinaryHeap` event queue with
+/// per-event rebalancing, one scalar `sample_batch` enum dispatch (and
+/// libm `ln` call) per replica, naive `+=` cost accumulation — faithfully
+/// reproducing the trial loop as it worked before this perf pass. Kept
+/// (not dead code) as the measured baseline of the `bench-des`
+/// throughput harness and the stream-equivalence oracle of the fast
+/// engine's tests; evaluators never call it.
+pub fn simulate_many_reference(
     scn: &Scenario,
     cfg: &EngineConfig,
     trials: u64,
     seed: u64,
 ) -> EngineSummary {
     let mut rng = Rng::new(seed);
-    let mut completion = Welford::new();
-    let mut busy = Welford::new();
-    let mut wasted = Welford::new();
-    let mut total_events = 0;
-    let mut workspace = Workspace::default();
-    for _ in 0..trials {
-        let r = simulate_one_with(scn, cfg, &mut rng, &mut workspace);
-        completion.push(r.completion);
-        busy.push(r.busy);
-        wasted.push(r.wasted);
-        total_events += r.events;
-    }
-    EngineSummary { completion, busy, wasted, total_events }
+    let mut ws = ReferenceWorkspace::default();
+    summarize_trials(trials, keep_every(trials), || {
+        simulate_one_reference_with(scn, cfg, &mut rng, &mut ws)
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::analysis::completion_time_stats;
+    use crate::analysis::{completion_time_stats, partial_completion_stats};
     use crate::dist::{BatchService, ServiceSpec};
     use crate::testkit;
 
@@ -428,6 +932,194 @@ mod tests {
             e.completion.mean(),
             m.mean()
         );
+    }
+
+    #[test]
+    fn prop_flat_queue_orders_like_a_heap() {
+        // The flat queue must behave exactly like a (time, seq) min-heap:
+        // pops ascend in time with FIFO tie-breaking, across interleaved
+        // pushes (arena index = push order = seq).
+        testkit::check("flat-queue-vs-model", 100, |g| {
+            let mut q = FlatQueue::default();
+            q.clear();
+            let mut model: Vec<(f64, usize)> = Vec::new();
+            let mut seq = 0usize;
+            let mut push = |q: &mut FlatQueue, model: &mut Vec<(f64, usize)>, t: f64| {
+                q.push(t, Ev::Deadline { batch: seq });
+                model.push((t, seq));
+                seq += 1;
+            };
+            // Initial burst (ties forced so FIFO ordering is exercised).
+            for _ in 0..g.usize_in(1, 40) {
+                let t = *g.pick(&[0.5, 1.0, 1.0, 2.0, 2.0, 3.5]);
+                push(&mut q, &mut model, t);
+            }
+            while !model.is_empty() {
+                model.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                let expect = model.remove(0);
+                let (t, ev) = q.pop().expect("queue drained early");
+                let got = match ev {
+                    Ev::Deadline { batch } => batch,
+                    _ => unreachable!(),
+                };
+                assert_eq!(t.to_bits(), expect.0.to_bits());
+                assert_eq!(got, expect.1, "FIFO tie-break violated");
+                // Occasionally interleave mid-run insertions (the
+                // deadline/relaunch pattern).
+                if g.coin(0.3) {
+                    let t2 = g.f64_in(0.0, 4.0);
+                    push(&mut q, &mut model, t2);
+                }
+            }
+            assert!(q.pop().is_none());
+        });
+    }
+
+    #[test]
+    fn fast_engine_matches_reference_stream() {
+        // The flat-queue + block-kernel engine consumes the same RNG
+        // stream as the retained reference (fill_batch_times contract),
+        // so with no failure injection the two describe identical
+        // trajectories up to fast_ln rounding: same event counts, means
+        // within 1e-9 relative.
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        for redundancy in
+            [Redundancy::Upfront, Redundancy::Speculative { deadline_factor: 1.5 }]
+        {
+            let s = scn(12, 3, spec.clone());
+            let cfg = EngineConfig { redundancy, ..EngineConfig::default() };
+            let fast = simulate_many(&s, &cfg, 20_000, 9);
+            let refr = simulate_many_reference(&s, &cfg, 20_000, 9);
+            assert_eq!(fast.total_events, refr.total_events, "{redundancy:?}");
+            assert_eq!(fast.completion.count(), refr.completion.count());
+            let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1.0);
+            assert!(
+                rel(fast.completion.mean(), refr.completion.mean()) <= 1e-9,
+                "{redundancy:?}: completion {} vs {}",
+                fast.completion.mean(),
+                refr.completion.mean()
+            );
+            assert!(
+                rel(fast.busy.mean(), refr.busy.mean()) <= 1e-9,
+                "{redundancy:?}: busy {} vs {}",
+                fast.busy.mean(),
+                refr.busy.mean()
+            );
+            assert!(
+                rel(fast.wasted.mean(), refr.wasted.mean()) <= 1e-9,
+                "{redundancy:?}: wasted {} vs {}",
+                fast.wasted.mean(),
+                refr.wasted.mean()
+            );
+        }
+    }
+
+    #[test]
+    fn fast_engine_failure_path_is_bit_identical_to_reference() {
+        // With failure injection the crash coins interleave with the
+        // service draws, so the fast engine uses the scalar draw loop:
+        // trajectories (and hence completion statistics) must be
+        // bit-identical to the reference; only the Kahan vs naive cost
+        // accumulation may differ, at rounding level.
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        for redundancy in
+            [Redundancy::Upfront, Redundancy::Speculative { deadline_factor: 1.5 }]
+        {
+            let s = scn(12, 3, spec.clone());
+            let cfg =
+                EngineConfig { redundancy, fail_prob: 0.3, ..EngineConfig::default() };
+            let fast = simulate_many(&s, &cfg, 10_000, 21);
+            let refr = simulate_many_reference(&s, &cfg, 10_000, 21);
+            assert_eq!(fast.total_events, refr.total_events, "{redundancy:?}");
+            assert_eq!(
+                fast.completion.mean().to_bits(),
+                refr.completion.mean().to_bits(),
+                "{redundancy:?}"
+            );
+            assert_eq!(
+                fast.completion.variance().to_bits(),
+                refr.completion.variance().to_bits(),
+                "{redundancy:?}"
+            );
+            let rel = (fast.busy.mean() - refr.busy.mean()).abs()
+                / refr.busy.mean().abs().max(1.0);
+            assert!(rel <= 1e-12, "{redundancy:?}: busy {rel}");
+        }
+    }
+
+    #[test]
+    fn parallel_engine_bit_identical_across_runs() {
+        // The acceptance bar: simulate_many_parallel(seed, k) is fully
+        // bit-reproducible — moments, event totals, and the retained
+        // sample set.
+        let s = scn(12, 4, ServiceSpec::shifted_exp(1.0, 0.3));
+        let cfg = EngineConfig::default();
+        for k in [2usize, 4] {
+            let a = simulate_many_parallel(&s, &cfg, 30_000, 11, k);
+            let b = simulate_many_parallel(&s, &cfg, 30_000, 11, k);
+            assert_eq!(a.completion.count(), 30_000, "k={k}");
+            assert_eq!(a.completion.mean().to_bits(), b.completion.mean().to_bits());
+            assert_eq!(
+                a.completion.variance().to_bits(),
+                b.completion.variance().to_bits()
+            );
+            assert_eq!(a.busy.mean().to_bits(), b.busy.mean().to_bits(), "k={k}");
+            assert_eq!(a.total_events, b.total_events, "k={k}");
+            assert_eq!(a.samples.raw(), b.samples.raw(), "k={k}");
+        }
+        // threads = 1 is exactly the sequential path.
+        let p1 = simulate_many_parallel(&s, &cfg, 5_000, 3, 1);
+        let sq = simulate_many(&s, &cfg, 5_000, 3);
+        assert_eq!(p1.completion.mean().to_bits(), sq.completion.mean().to_bits());
+        assert_eq!(p1.total_events, sq.total_events);
+    }
+
+    #[test]
+    fn parallel_engine_matches_closed_form() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.25);
+        let s = scn(12, 4, spec.clone());
+        let sum = simulate_many_parallel(&s, &EngineConfig::default(), 100_000, 3, 4);
+        assert_eq!(sum.completion.count(), 100_000);
+        let cf = completion_time_stats(12, 4, &spec).unwrap();
+        let err = (sum.completion.mean() - cf.mean).abs();
+        assert!(err < 0.02, "parallel engine {} vs cf {}", sum.completion.mean(), cf.mean);
+        // Shard-merged busy/wasted must match a sequential run of the
+        // same trial count statistically (different substreams).
+        let seq = simulate_many(&s, &EngineConfig::default(), 100_000, 3);
+        let rel = (sum.busy.mean() - seq.busy.mean()).abs() / seq.busy.mean();
+        assert!(rel < 0.02, "busy parallel {} vs seq {}", sum.busy.mean(), seq.busy.mean());
+    }
+
+    #[test]
+    fn k_of_b_completion_matches_partial_closed_form() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.3);
+        for (n, b, k) in [(24usize, 6usize, 3usize), (12, 4, 2)] {
+            let s = scn(n, b, spec.clone()).with_k_of_b(k).unwrap();
+            let sum = simulate_many(&s, &EngineConfig::default(), 100_000, 13);
+            let cf =
+                partial_completion_stats(n as u64, b as u64, k as u64, &spec).unwrap();
+            let err = (sum.completion.mean() - cf.mean).abs();
+            assert!(
+                err < 0.02,
+                "n={n} B={b} k={k}: engine {} vs cf {}",
+                sum.completion.mean(),
+                cf.mean
+            );
+        }
+    }
+
+    #[test]
+    fn k_of_b_equal_to_b_matches_full_completion() {
+        // k = B on a disjoint layout is the ordinary completion rule:
+        // identical RNG stream, identical trajectories, bit-equal stats.
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let full = scn(12, 4, spec.clone());
+        let kfull = scn(12, 4, spec).with_k_of_b(4).unwrap();
+        let a = simulate_many(&full, &EngineConfig::default(), 20_000, 5);
+        let b = simulate_many(&kfull, &EngineConfig::default(), 20_000, 5);
+        assert_eq!(a.completion.mean().to_bits(), b.completion.mean().to_bits());
+        assert_eq!(a.busy.mean().to_bits(), b.busy.mean().to_bits());
+        assert_eq!(a.total_events, b.total_events);
     }
 
     #[test]
@@ -562,7 +1254,10 @@ mod tests {
             let divisors: Vec<usize> = (1..=n).filter(|b| n % b == 0).collect();
             let b = *g.pick(&divisors);
             let spec = ServiceSpec::shifted_exp(1.0, g.f64_in(0.0, 1.0));
-            let s = scn(n, b, spec);
+            let mut s = scn(n, b, spec);
+            if g.coin(0.3) {
+                s = s.with_k_of_b(g.usize_in(1, b)).unwrap();
+            }
             let cfg = EngineConfig {
                 cancellation: g.coin(0.5),
                 redundancy: if g.coin(0.5) {
@@ -580,11 +1275,51 @@ mod tests {
                 // Without crashes someone is always working until the
                 // job completes; with crashes the cluster can sit idle
                 // waiting out a stall timeout, so busy may be smaller.
-                assert!(r.busy >= r.completion - 1e-9, "busy {} < completion {}", r.busy, r.completion);
+                assert!(
+                    r.busy >= r.completion - 1e-9,
+                    "busy {} < completion {}",
+                    r.busy,
+                    r.completion
+                );
             }
             assert!(r.busy >= 0.0);
             assert!(r.wasted >= -1e-12 && r.wasted <= r.busy + 1e-9);
-            assert!(r.events >= b as u64);
+            assert!(r.events >= s.k_of_b.unwrap_or(b) as u64);
+        });
+    }
+
+    #[test]
+    fn prop_fast_and_reference_engines_agree() {
+        // Random scenario/config pairs: both engines must describe the
+        // same system. fail_prob = 0 pairs are stream-equivalent (tight
+        // tolerance); failure-injected pairs are bit-identical (scalar
+        // fallback consumes the identical stream).
+        testkit::check("engine-fast-vs-reference", 30, |g| {
+            let n = *g.pick(&[4usize, 6, 12]);
+            let divisors: Vec<usize> = (1..=n).filter(|b| n % b == 0).collect();
+            let b = *g.pick(&divisors);
+            let spec = ServiceSpec::shifted_exp(1.0, g.f64_in(0.0, 0.6));
+            let mut s = scn(n, b, spec);
+            if g.coin(0.3) {
+                s = s.with_k_of_b(g.usize_in(1, b)).unwrap();
+            }
+            let cfg = EngineConfig {
+                cancellation: g.coin(0.5),
+                redundancy: if g.coin(0.5) {
+                    Redundancy::Upfront
+                } else {
+                    Redundancy::Speculative { deadline_factor: g.f64_in(0.5, 2.5) }
+                },
+                fail_prob: if g.coin(0.7) { 0.0 } else { g.f64_in(0.1, 0.6) },
+                ..EngineConfig::default()
+            };
+            let seed = g.u64_in(0, 1 << 40);
+            let fast = simulate_many(&s, &cfg, 500, seed);
+            let refr = simulate_many_reference(&s, &cfg, 500, seed);
+            assert_eq!(fast.total_events, refr.total_events);
+            let rel = (fast.completion.mean() - refr.completion.mean()).abs()
+                / refr.completion.mean().abs().max(1.0);
+            assert!(rel <= 1e-9, "completion rel diff {rel}");
         });
     }
 }

@@ -48,6 +48,13 @@ pub struct Scenario {
     pub policy: ReplicationPolicy,
     /// Redundancy activation mode backends should model.
     pub redundancy: engine::Redundancy,
+    /// Partial-aggregation target (the gradient-coding regime the paper
+    /// cites): the job completes once the earliest `k` of the `B`
+    /// batches have finished, a batch completing when its earliest
+    /// replica does. `None` = full completion (every data unit
+    /// covered). Consumed by the analytic, Monte-Carlo, and DES
+    /// backends.
+    pub k_of_b: Option<usize>,
     /// Root RNG seed: all stochastic backends derive their randomness
     /// from it, so results are bit-reproducible given one scenario.
     pub seed: u64,
@@ -76,6 +83,7 @@ impl Scenario {
             worker_speeds: None,
             policy: ReplicationPolicy::Custom,
             redundancy: engine::Redundancy::Upfront,
+            k_of_b: None,
             seed: DEFAULT_SEED,
         })
     }
@@ -114,6 +122,18 @@ impl Scenario {
     pub fn with_redundancy(mut self, redundancy: engine::Redundancy) -> Self {
         self.redundancy = redundancy;
         self
+    }
+
+    /// Set the k-of-B partial-aggregation target (`1 ≤ k ≤ B`; `k = B`
+    /// waits for every batch).
+    pub fn with_k_of_b(mut self, k: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            k >= 1 && k <= self.assignment.n_batches,
+            "k-of-B needs 1 <= k <= B (got k={k}, B={})",
+            self.assignment.n_batches
+        );
+        self.k_of_b = Some(k);
+        Ok(self)
     }
 
     /// Set the root RNG seed.
@@ -167,6 +187,16 @@ mod tests {
         assert!(s.clone().with_speeds(vec![1.0; 3]).is_err());
         assert!(s.clone().with_speeds(vec![1.0, 1.0, 0.0, 1.0]).is_err());
         assert!(s.with_speeds(vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn k_of_b_validated() {
+        let svc = BatchService::paper(ServiceSpec::exp(1.0));
+        let s = Scenario::paper_balanced(8, 4, svc).unwrap();
+        assert_eq!(s.k_of_b, None);
+        assert!(s.clone().with_k_of_b(0).is_err());
+        assert!(s.clone().with_k_of_b(5).is_err());
+        assert_eq!(s.with_k_of_b(3).unwrap().k_of_b, Some(3));
     }
 
     #[test]

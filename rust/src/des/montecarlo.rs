@@ -4,7 +4,9 @@
 //! earliest time at which the union of finished workers' data units
 //! covers the dataset. For disjoint layouts this reduces to
 //! `max_b min_{w ∈ batch b} t_w` and runs in O(N); overlapping layouts
-//! use an O(N log N) sort + incremental coverage count.
+//! use an O(N log N) sort + incremental coverage count. Scenarios with
+//! a [`Scenario::k_of_b`] partial-aggregation target reduce instead to
+//! the k-th order statistic of the per-batch earliest-replica times.
 //!
 //! # Throughput architecture
 //!
@@ -31,8 +33,16 @@ use crate::util::rng::Rng;
 use crate::util::stats::{Samples, Welford};
 use std::cell::RefCell;
 
-/// Upper bound on raw samples retained per run for quantile estimates.
-const SAMPLE_CAP: u64 = 200_000;
+/// Upper bound on raw samples retained per run for quantile estimates
+/// (shared with the DES engine's trial runners).
+pub(crate) const SAMPLE_CAP: u64 = 200_000;
+
+/// Sample-thinning rate for `trials` trials under [`SAMPLE_CAP`] — the
+/// one formula every trial runner (MC and DES engine) uses, so their
+/// retained sample sets obey the same cap.
+pub(crate) fn keep_every(trials: u64) -> u64 {
+    trials.div_ceil(SAMPLE_CAP).max(1)
+}
 
 /// Size cap (in f64 elements) of the block time buffer: `n_workers ×
 /// trials-per-fill` stays under this so the working set lives in L1/L2.
@@ -58,6 +68,8 @@ pub struct TrialScratch {
     covered: Vec<u32>,
     /// Coverage generation stamp of the current trial.
     generation: u32,
+    /// Per-batch earliest-replica times (k-of-B partial aggregation).
+    batch_min: Vec<f64>,
 }
 
 impl TrialScratch {
@@ -77,6 +89,9 @@ impl TrialScratch {
     /// Completion time of the trial stored at `times[lo .. lo+n]`.
     #[inline]
     fn completion_at(&mut self, scn: &Scenario, lo: usize) -> f64 {
+        if let Some(k) = scn.k_of_b {
+            return self.partial_completion_at(scn, lo, k);
+        }
         let n = scn.n_workers();
         let times = &self.times[lo..lo + n];
         if !scn.layout.is_overlapping {
@@ -115,6 +130,27 @@ impl TrialScratch {
         }
         // Layout validation guarantees coverage; unreachable in practice.
         f64::INFINITY
+    }
+
+    /// k-of-B completion of the trial at `times[lo .. lo+n]`: the k-th
+    /// earliest batch completion, where a batch completes when its
+    /// earliest replica finishes (layout-independent — overlapping
+    /// layouts count batches, not units, under partial aggregation).
+    #[inline]
+    fn partial_completion_at(&mut self, scn: &Scenario, lo: usize, k: usize) -> f64 {
+        let n = scn.n_workers();
+        let times = &self.times[lo..lo + n];
+        self.batch_min.clear();
+        for ws in &scn.assignment.workers_of_batch {
+            let mut best = f64::INFINITY;
+            for &w in ws {
+                best = best.min(times[w]);
+            }
+            self.batch_min.push(best);
+        }
+        let k = k.clamp(1, self.batch_min.len());
+        let (_, kth, _) = self.batch_min.select_nth_unstable_by(k - 1, f64::total_cmp);
+        *kth
     }
 }
 
@@ -175,6 +211,25 @@ pub fn sample_completion_into(scn: &Scenario, rng: &mut Rng, scratch: &mut Trial
 /// coordinator's post-hoc validation, and the property tests that pin
 /// the scratch-based fast paths to it.
 pub fn completion_from_times(scn: &Scenario, times: &[f64]) -> f64 {
+    if let Some(k) = scn.k_of_b {
+        // k-of-B: the k-th earliest batch completion (a batch completes
+        // when its earliest replica finishes), regardless of layout.
+        let b = scn.assignment.n_batches;
+        let mut mins: Vec<f64> = scn
+            .assignment
+            .workers_of_batch
+            .iter()
+            .map(|ws| {
+                let mut best = f64::INFINITY;
+                for &w in ws {
+                    best = best.min(times[w]);
+                }
+                best
+            })
+            .collect();
+        mins.sort_unstable_by(f64::total_cmp);
+        return mins[k.clamp(1, b) - 1];
+    }
     if !scn.layout.is_overlapping {
         disjoint_completion(scn, times)
     } else {
@@ -270,8 +325,7 @@ pub fn run_trials_with(
     seed: u64,
     scratch: &mut TrialScratch,
 ) -> McSummary {
-    let keep_every = trials.div_ceil(SAMPLE_CAP).max(1);
-    run_shard(scn, trials, Rng::new(seed), keep_every, scratch)
+    run_shard(scn, trials, Rng::new(seed), keep_every(trials), scratch)
 }
 
 /// One pre-block trial: scalar `sample_batch` calls per draw, including
@@ -283,9 +337,11 @@ fn reference_sample_completion(scn: &Scenario, rng: &mut Rng, scratch: &mut Vec<
     scratch.clear();
     match &scn.worker_speeds {
         None => {
-            if !scn.layout.is_overlapping {
+            if !scn.layout.is_overlapping && scn.k_of_b.is_none() {
                 // Homogeneous disjoint fast path of the pre-block code:
                 // fold directly without materializing times at all.
+                // (k-of-B postdates this baseline; those scenarios take
+                // the generic reduction below.)
                 let mut worst = f64::NEG_INFINITY;
                 for ws in &scn.assignment.workers_of_batch {
                     let mut best = f64::INFINITY;
@@ -323,7 +379,7 @@ fn reference_sample_completion(scn: &Scenario, rng: &mut Rng, scratch: &mut Vec<
 pub fn run_trials_reference(scn: &Scenario, trials: u64, seed: u64) -> McSummary {
     let mut rng = Rng::new(seed);
     let mut welford = Welford::new();
-    let keep_every = trials.div_ceil(SAMPLE_CAP).max(1);
+    let keep_every = keep_every(trials);
     let mut samples = Samples::with_capacity((trials / keep_every) as usize + 1);
     let mut times = Vec::with_capacity(scn.n_workers());
     for i in 0..trials {
@@ -336,11 +392,31 @@ pub fn run_trials_reference(scn: &Scenario, trials: u64, seed: u64) -> McSummary
     McSummary { welford, samples }
 }
 
+/// Deterministic shard plan shared by every parallel trial runner (this
+/// sampler and the DES engine's [`crate::des::engine::simulate_many_parallel`]):
+/// per-shard trial counts (the remainder spread over the first shards)
+/// and per-shard RNG substreams, stable for a fixed
+/// `(trials, threads, seed)` triple regardless of thread scheduling.
+pub(crate) fn shard_plan(trials: u64, threads: usize, seed: u64) -> Vec<(u64, Rng)> {
+    let threads = threads.max(1).min(trials.max(1) as usize);
+    let per = trials / threads as u64;
+    let extra = trials % threads as u64;
+    let root = Rng::new(seed);
+    (0..threads)
+        .map(|t| {
+            // Substream seeds: independent per shard, stable across
+            // runs for a fixed (seed, threads).
+            (per + u64::from((t as u64) < extra), root.substream(t as u64 + 1))
+        })
+        .collect()
+}
+
 /// Multi-threaded trial runner: shards `trials` across `threads` OS
-/// threads with independent RNG substreams. Shard summaries are merged
-/// in shard-index order after all threads join, so the result is
-/// independent of thread completion order: a fixed `(seed, threads)`
-/// pair produces a bit-identical [`McSummary`] on every run.
+/// threads with independent RNG substreams ([`shard_plan`]). Shard
+/// summaries are merged in shard-index order after all threads join, so
+/// the result is independent of thread completion order: a fixed
+/// `(seed, threads)` pair produces a bit-identical [`McSummary`] on
+/// every run.
 pub fn run_trials_parallel(
     scn: &Scenario,
     trials: u64,
@@ -351,19 +427,14 @@ pub fn run_trials_parallel(
     if threads == 1 {
         return run_trials(scn, trials, seed);
     }
-    let per = trials / threads as u64;
-    let extra = trials % threads as u64;
     // One shared thinning rate, so the union of shard sample sets obeys
     // the global cap and depends only on (trials, threads).
-    let keep_every = trials.div_ceil(SAMPLE_CAP).max(1);
+    let keep_every = keep_every(trials);
     let shards: Vec<McSummary> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..threads)
-            .map(|t| {
+        let handles: Vec<_> = shard_plan(trials, threads, seed)
+            .into_iter()
+            .map(|(shard_trials, shard_rng)| {
                 let scn_ref = &*scn;
-                let shard_trials = per + u64::from((t as u64) < extra);
-                // Substream seeds: independent per shard, stable across
-                // runs for a fixed (seed, threads).
-                let shard_rng = Rng::new(seed).substream(t as u64 + 1);
                 scope.spawn(move || {
                     let mut scratch = TrialScratch::new();
                     run_shard(scn_ref, shard_trials, shard_rng, keep_every, &mut scratch)
@@ -520,6 +591,43 @@ mod tests {
     }
 
     #[test]
+    fn k_of_b_matches_partial_closed_form() {
+        // The scenario-level partial-aggregation field must reproduce
+        // the k-th-order-statistic closed form.
+        let spec = ServiceSpec::shifted_exp(1.0, 0.3);
+        for (n, b, k) in [(24u64, 6u64, 3u64), (12, 4, 2), (24, 4, 4)] {
+            let scn = paper_scn(n as usize, b as usize, spec.clone())
+                .with_k_of_b(k as usize)
+                .unwrap();
+            let mc = run_trials(&scn, 150_000, 11);
+            let cf =
+                crate::analysis::partial_completion_stats(n, b, k, &spec).unwrap();
+            assert!(
+                (mc.mean() - cf.mean).abs() < 4.0 * mc.ci95().max(1e-3),
+                "n={n} B={b} k={k}: mc {} vs cf {}",
+                mc.mean(),
+                cf.mean
+            );
+            let rel_var = (mc.variance() - cf.var).abs() / cf.var;
+            assert!(rel_var < 0.06, "n={n} B={b} k={k}: var mc {} vs cf {}", mc.variance(), cf.var);
+        }
+    }
+
+    #[test]
+    fn k_of_b_full_equals_unrestricted_on_disjoint_layouts() {
+        // k = B on a disjoint layout is the ordinary completion: the
+        // k-th smallest batch min is the max, bit-for-bit.
+        let scn_full = paper_scn(12, 4, ServiceSpec::shifted_exp(1.0, 0.2));
+        let scn_k = paper_scn(12, 4, ServiceSpec::shifted_exp(1.0, 0.2))
+            .with_k_of_b(4)
+            .unwrap();
+        let a = run_trials(&scn_full, 20_000, 3);
+        let b = run_trials(&scn_k, 20_000, 3);
+        assert_eq!(a.mean().to_bits(), b.mean().to_bits());
+        assert_eq!(a.variance().to_bits(), b.variance().to_bits());
+    }
+
+    #[test]
     fn heterogeneous_speeds_slow_down_completion() {
         let svc = BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.5));
         let base = Scenario::paper_balanced(8, 4, svc.clone()).unwrap();
@@ -601,6 +709,10 @@ mod tests {
             if g.coin(0.5) {
                 let speeds: Vec<f64> = (0..n).map(|_| g.f64_in(0.5, 3.0)).collect();
                 scn = scn.with_speeds(speeds).unwrap();
+            }
+            if g.coin(0.4) {
+                let bb = scn.assignment.n_batches;
+                scn = scn.with_k_of_b(g.usize_in(1, bb)).unwrap();
             }
             let seed = g.u64_in(0, 1 << 40);
             let mut scratch = TrialScratch::new();

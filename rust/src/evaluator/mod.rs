@@ -18,8 +18,10 @@
 //!   direct completion-time sampler (zero-allocation scratch,
 //!   multi-threaded by default, deterministic per `(seed, threads)`).
 //! * [`DesEvaluator`] — the full event engine: replica cancellation,
-//!   speculative relaunch, failure injection, and busy/wasted
-//!   worker-second cost accounting.
+//!   speculative relaunch, failure injection, k-of-B partial
+//!   aggregation, and busy/wasted worker-second cost accounting
+//!   (flat-event-queue trial loop, multi-threaded by default,
+//!   deterministic per `(seed, threads)`).
 //! * [`LiveEvaluator`] — the real coordinator + worker threads with
 //!   injected stragglers (mock or PJRT compute backend).
 //!
@@ -33,7 +35,7 @@ use crate::assignment::{Assignment, Policy};
 use crate::batching::DataLayout;
 use crate::config::SystemConfig;
 use crate::coordinator::{Backend, Coordinator};
-use crate::des::engine::{simulate_one_with, EngineConfig, Redundancy, Workspace};
+use crate::des::engine::{simulate_many_parallel, EngineConfig, Redundancy};
 use crate::des::{montecarlo, Scenario};
 use crate::dist::{BatchModel, BatchService};
 use crate::util::harmonic::{harmonic, harmonic2};
@@ -41,6 +43,13 @@ use crate::util::rng::Rng;
 use crate::util::stats::{Samples, Welford};
 use crate::worker::JobSpec;
 use std::sync::Arc;
+
+/// The machine's available parallelism (1 when it cannot be
+/// determined) — the thread count the `Default` simulation backends
+/// pick.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1)
+}
 
 /// Quantiles every evaluator reports (when it can produce them).
 pub const QUANTILES: [f64; 4] = [0.5, 0.9, 0.99, 0.999];
@@ -235,6 +244,39 @@ impl Evaluator for AnalyticEvaluator {
             scn.service.model == BatchModel::SizeScaled,
             "closed forms hold for the size-scaled batch model only"
         );
+        if let Some(k) = scn.k_of_b {
+            let b = scn.assignment.n_batches;
+            if k < b {
+                // Partial aggregation: the k-th order statistic of the
+                // B i.i.d. batch-min times (analysis::partial_completion_stats).
+                // Quantiles and cancellation cost have no simple closed
+                // form here; simulation backends report them.
+                anyhow::ensure!(
+                    scn.assignment.is_balanced(),
+                    "closed-form k-of-B needs a balanced assignment"
+                );
+                anyhow::ensure!(
+                    scn.layout.n_units == scn.assignment.n_workers,
+                    "closed-form k-of-B uses the paper normalization U = N"
+                );
+                let st = crate::analysis::partial_completion_stats(
+                    scn.assignment.n_workers as u64,
+                    b as u64,
+                    k as u64,
+                    &scn.service.spec,
+                )?;
+                return Ok(CompletionStats {
+                    mean: st.mean,
+                    variance: st.var,
+                    quantiles: Vec::new(),
+                    cost: None,
+                    sem: 0.0,
+                    samples: 0,
+                });
+            }
+            // k = B waits for every batch: the full-completion closed
+            // forms below apply unchanged.
+        }
         let (mu, delta) = scn.service.spec.exp_family().ok_or_else(|| {
             anyhow::anyhow!(
                 "closed forms cover exp/sexp service only, got {}",
@@ -353,10 +395,9 @@ pub struct MonteCarloEvaluator {
 }
 
 impl MonteCarloEvaluator {
-    /// The thread count `Default` picks: the machine's available
-    /// parallelism (1 when it cannot be determined).
+    /// The thread count `Default` picks (alias of [`auto_threads`]).
     pub fn auto_threads() -> usize {
-        std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1)
+        auto_threads()
     }
 }
 
@@ -403,12 +444,18 @@ impl Evaluator for MonteCarloEvaluator {
 
 /// Full event engine: models the mechanics the closed forms abstract
 /// away — replica cancellation, the scenario's redundancy mode
-/// (upfront or speculative), optional failure injection — and accounts
-/// busy/wasted worker-seconds, reported as [`CostStats`].
+/// (upfront or speculative), optional failure injection, k-of-B partial
+/// aggregation — and accounts busy/wasted worker-seconds, reported as
+/// [`CostStats`]. `Default` shards trials over **all available cores**
+/// (flat event queue + block-sampled launch waves per shard); results
+/// are bit-deterministic for a fixed `(scenario, seed, threads)` triple
+/// regardless of thread scheduling.
 #[derive(Debug, Clone, Copy)]
 pub struct DesEvaluator {
     /// Number of simulated jobs.
     pub trials: u64,
+    /// Worker threads (1 = sequential; `Default` = all cores).
+    pub threads: usize,
     /// Cancel sibling replicas when a batch completes.
     pub cancellation: bool,
     /// Per-replica crash probability (0 = reliable cluster).
@@ -419,7 +466,13 @@ pub struct DesEvaluator {
 
 impl Default for DesEvaluator {
     fn default() -> Self {
-        Self { trials: 20_000, cancellation: true, fail_prob: 0.0, relaunch_timeout_factor: 3.0 }
+        Self {
+            trials: 20_000,
+            threads: auto_threads(),
+            cancellation: true,
+            fail_prob: 0.0,
+            relaunch_timeout_factor: 3.0,
+        }
     }
 }
 
@@ -436,30 +489,14 @@ impl Evaluator for DesEvaluator {
             fail_prob: self.fail_prob,
             relaunch_timeout_factor: self.relaunch_timeout_factor,
         };
-        let mut rng = Rng::new(scn.seed);
-        let mut ws = Workspace::default();
-        let mut completion = Welford::new();
-        let mut busy = Welford::new();
-        let mut wasted = Welford::new();
-        const SAMPLE_CAP: u64 = 200_000;
-        let keep_every = self.trials.div_ceil(SAMPLE_CAP).max(1);
-        let mut samples = Samples::with_capacity((self.trials / keep_every) as usize + 1);
-        for i in 0..self.trials {
-            let r = simulate_one_with(scn, &cfg, &mut rng, &mut ws);
-            completion.push(r.completion);
-            busy.push(r.busy);
-            wasted.push(r.wasted);
-            if i % keep_every == 0 {
-                samples.push(r.completion);
-            }
-        }
+        let mut sum = simulate_many_parallel(scn, &cfg, self.trials, scn.seed, self.threads);
         Ok(CompletionStats {
-            mean: completion.mean(),
-            variance: completion.variance(),
-            quantiles: quantiles_from(&mut samples),
-            cost: Some(CostStats { busy: busy.mean(), wasted: wasted.mean() }),
-            sem: completion.sem(),
-            samples: completion.count(),
+            mean: sum.completion.mean(),
+            variance: sum.completion.variance(),
+            quantiles: quantiles_from(&mut sum.samples),
+            cost: Some(CostStats { busy: sum.busy.mean(), wasted: sum.wasted.mean() }),
+            sem: sum.completion.sem(),
+            samples: sum.completion.count(),
         })
     }
 }
@@ -516,6 +553,11 @@ impl Evaluator for LiveEvaluator {
         anyhow::ensure!(
             scn.redundancy == Redundancy::Upfront,
             "live evaluator models upfront replication only"
+        );
+        anyhow::ensure!(
+            scn.k_of_b.is_none(),
+            "live evaluator does not model k-of-B partial aggregation; \
+             use the des or montecarlo backend"
         );
         let mut cfg = SystemConfig {
             time_scale: self.time_scale,
@@ -834,6 +876,91 @@ mod tests {
             sim.wasted,
             exact.wasted
         );
+    }
+
+    #[test]
+    fn des_cross_checks_against_analytic_on_fig2_scale() {
+        // The acceptance gate: the event engine (upfront, cancellation
+        // on, no failures) agrees with the exact closed form on E[T]
+        // within Monte-Carlo error on the fig2-scale scenario.
+        let scn = paper_scn(24, 4, ServiceSpec::shifted_exp(1.0, 0.2), 42);
+        let des = DesEvaluator { trials: 150_000, threads: 2, ..DesEvaluator::default() };
+        let ck = cross_check(&AnalyticEvaluator, &des, &scn).unwrap();
+        assert!(ck.mean_diff <= ck.tolerance);
+        assert_eq!(ck.b.samples, 150_000);
+        // Quantiles land on the closed-form inverse CDF too.
+        let (pa, pd) = (ck.a.quantile(0.5).unwrap(), ck.b.quantile(0.5).unwrap());
+        assert!((pa - pd).abs() / pa < 0.02, "p50 analytic {pa} vs des {pd}");
+    }
+
+    #[test]
+    fn des_evaluator_default_is_parallel_and_deterministic() {
+        // The default backend shards across all cores, yet two runs of
+        // the same (scenario, seed, threads) triple are bit-identical.
+        assert_eq!(DesEvaluator::default().threads, auto_threads());
+        let scn = paper_scn(12, 3, ServiceSpec::shifted_exp(1.0, 0.2), 7);
+        let ev = DesEvaluator { trials: 30_000, threads: 4, ..DesEvaluator::default() };
+        let a = ev.evaluate(&scn).unwrap();
+        let b = ev.evaluate(&scn).unwrap();
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.variance.to_bits(), b.variance.to_bits());
+        assert_eq!(a.sem.to_bits(), b.sem.to_bits());
+        assert_eq!(a.quantiles, b.quantiles);
+        let (ca, cb) = (a.cost.unwrap(), b.cost.unwrap());
+        assert_eq!(ca.busy.to_bits(), cb.busy.to_bits());
+        assert_eq!(ca.wasted.to_bits(), cb.wasted.to_bits());
+        // And the sharded run agrees with a sequential one statistically.
+        let seq = DesEvaluator { trials: 30_000, threads: 1, ..DesEvaluator::default() }
+            .evaluate(&scn)
+            .unwrap();
+        assert!(
+            (a.mean - seq.mean).abs() < 4.0 * (a.sem + seq.sem).max(1e-3),
+            "parallel {} vs sequential {}",
+            a.mean,
+            seq.mean
+        );
+    }
+
+    #[test]
+    fn k_of_b_is_consumed_by_every_capable_backend() {
+        // The partial-aggregation scenario field routes through the
+        // analytic closed form, the MC sampler, and the DES engine; the
+        // live backend refuses rather than silently mis-evaluating.
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let scn = paper_scn(24, 6, spec.clone(), 9).with_k_of_b(3).unwrap();
+        let exact = AnalyticEvaluator.evaluate(&scn).unwrap();
+        let cf = analysis::partial_completion_stats(24, 6, 3, &spec).unwrap();
+        assert!((exact.mean - cf.mean).abs() < 1e-12);
+        assert!((exact.variance - cf.var).abs() < 1e-12);
+        assert!(exact.cost.is_none() && exact.quantiles.is_empty());
+        let mc = MonteCarloEvaluator { trials: 100_000, threads: 2 }.evaluate(&scn).unwrap();
+        assert!(
+            (mc.mean - exact.mean).abs() < 4.0 * mc.sem.max(1e-3),
+            "mc {} vs exact {}",
+            mc.mean,
+            exact.mean
+        );
+        let des = DesEvaluator { trials: 60_000, threads: 2, ..DesEvaluator::default() }
+            .evaluate(&scn)
+            .unwrap();
+        assert!(
+            (des.mean - exact.mean).abs() < 4.0 * des.sem.max(1e-3),
+            "des {} vs exact {}",
+            des.mean,
+            exact.mean
+        );
+        // Partial aggregation leaves the unneeded batches' replicas as
+        // pure redundancy cost, which only the engine accounts.
+        assert!(des.cost.unwrap().wasted > 0.0);
+        assert!(LiveEvaluator::default().evaluate(&scn).is_err());
+        // k = B routes through the ordinary closed form (quantiles and
+        // cost included) and matches the unrestricted scenario exactly.
+        let full = paper_scn(24, 6, spec.clone(), 9);
+        let kfull = paper_scn(24, 6, spec, 9).with_k_of_b(6).unwrap();
+        let a = AnalyticEvaluator.evaluate(&full).unwrap();
+        let b = AnalyticEvaluator.evaluate(&kfull).unwrap();
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert!(b.cost.is_some() && !b.quantiles.is_empty());
     }
 
     #[test]

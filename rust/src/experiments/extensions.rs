@@ -9,17 +9,18 @@
 //!   `ServiceSpec` inside the scenario.
 //! * **E10 partial aggregation (k-of-B)** — the gradient-coding regime
 //!   the paper cites: the master proceeds with the earliest `k` of `B`
-//!   batch results. Closed form vs simulation, and the
+//!   batch results. `k_of_b` is a first-class [`Scenario`] field, so the
+//!   same scenario value flows through the analytic closed form
+//!   (`partial_completion_stats` behind `AnalyticEvaluator`) and the
+//!   Monte-Carlo sampler — closed form vs simulation, and the
 //!   latency/completeness frontier.
 
 use super::ExpContext;
-use crate::analysis;
 use crate::assignment::feasible_batch_counts;
 use crate::des::Scenario;
 use crate::dist::{BatchService, ServiceSpec};
-use crate::evaluator::{Evaluator, ReplicationPolicy};
+use crate::evaluator::{AnalyticEvaluator, Evaluator, ReplicationPolicy};
 use crate::trace::{generate_markov_trace, trace_spec, MarkovTraceParams};
-use crate::util::rng::Rng;
 use crate::util::table::{fmt_f, Table};
 
 /// Workers.
@@ -71,38 +72,35 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     }
     ctx.emit("ext_trace_robustness", &t9)?;
 
-    // --- E10: k-of-B partial aggregation ---
+    // --- E10: k-of-B partial aggregation (a scenario field, not a
+    // bespoke sampler: every backend consumes the same value) ---
     let sexp = ServiceSpec::shifted_exp(1.0, 0.2);
-    let service = BatchService::paper(sexp.clone());
+    let service = BatchService::paper(sexp);
     let mut t10 = Table::new(
         "E10 — partial aggregation: wait for k of B batches (N=24, SExp(1,0.2))",
         &["B", "k", "k/B", "E[T] analytic", "E[T] sim", "speedup vs k=B"],
     );
-    let mut rng = Rng::new(ctx.seed ^ 0x0b_0f_b7);
     for &b in &[4usize, 8, 12] {
-        let full = analysis::partial_completion_stats(N as u64, b as u64, b as u64, &sexp)?;
+        let seed = ctx.seed ^ 0x0b_0f_b7 ^ (b as u64);
+        let base = Scenario::from_policy(
+            ReplicationPolicy::BalancedDisjoint,
+            N,
+            b,
+            service.clone(),
+            seed,
+        )?;
+        let full = AnalyticEvaluator.evaluate(&base)?;
         for k in [b / 2, (3 * b) / 4, b] {
             let k = k.max(1);
-            let cf = analysis::partial_completion_stats(N as u64, b as u64, k as u64, &sexp)?;
-            let trials = ctx.trials / 5;
-            let mean: f64 = (0..trials)
-                .map(|_| {
-                    analysis::sample_partial_completion(
-                        N as u64,
-                        b as u64,
-                        k as u64,
-                        &service,
-                        &mut rng,
-                    )
-                })
-                .sum::<f64>()
-                / trials as f64;
+            let scn = base.clone().with_k_of_b(k)?;
+            let cf = AnalyticEvaluator.evaluate(&scn)?;
+            let sim = mc.evaluate(&scn)?;
             t10.row(vec![
                 b.to_string(),
                 k.to_string(),
                 fmt_f(k as f64 / b as f64, 2),
                 fmt_f(cf.mean, 4),
-                fmt_f(mean, 4),
+                fmt_f(sim.mean, 4),
                 fmt_f(full.mean / cf.mean, 3),
             ]);
         }

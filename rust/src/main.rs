@@ -10,6 +10,7 @@
 //!   train       run the live distributed-SGD System1 (PJRT backend)
 //!   mapsum      run one live distributed map-sum evaluation
 //!   bench-mc    Monte-Carlo throughput harness → BENCH_mc.json
+//!   bench-des   event-engine throughput harness → BENCH_des.json
 //!
 //! Global options: `--config <file.toml>` plus per-key overrides
 //! (`--n-workers 24`, `--service sexp:1.0,0.2`, `--seed 7`, ...). The
@@ -47,9 +48,10 @@ USAGE:
   batchrep trace      [--n 100000] [--seed 42] [--out trace.csv]
                       [--p-enter 0.0026] [--p-exit 0.05] [--slowdown 8]
   batchrep bench-mc   [--trials N] [--threads K] [--out BENCH_mc.json] [--fast]
+  batchrep bench-des  [--trials N] [--threads K] [--out BENCH_des.json] [--fast]
 
 Config keys (file or --key value): n_workers, n_batches, policy, service,
-batch_model, overlapping, cancellation, speculative, seed, trials,
+batch_model, overlapping, cancellation, speculative, k_of_b, seed, trials,
 artifacts_dir, time_scale, kernel, dim, n_samples, steps.
 ";
 
@@ -69,8 +71,8 @@ fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
     // CLI overrides use dashed names: --n-workers → n_workers.
     let keys = [
         "n_workers", "n_batches", "policy", "service", "batch_model", "speculative",
-        "seed", "trials", "artifacts_dir", "time_scale", "kernel", "dim", "n_samples",
-        "steps",
+        "k_of_b", "seed", "trials", "artifacts_dir", "time_scale", "kernel", "dim",
+        "n_samples", "steps",
     ];
     for key in keys {
         let dashed = key.replace('_', "-");
@@ -106,6 +108,7 @@ fn run() -> anyhow::Result<()> {
         Some("mapsum") => cmd_mapsum(&args),
         Some("trace") => cmd_trace(&args),
         Some("bench-mc") => cmd_bench_mc(&args),
+        Some("bench-des") => cmd_bench_des(&args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -176,6 +179,7 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     let mc = MonteCarloEvaluator { trials: cfg.trials, threads };
     let des = DesEvaluator {
         trials: (cfg.trials / 5).max(1),
+        threads,
         cancellation: cfg.cancellation,
         ..DesEvaluator::default()
     };
@@ -432,6 +436,58 @@ fn cmd_bench_mc(args: &Args) -> anyhow::Result<()> {
     println!(
         "speedup: block vs scalar {:.2}x, threads vs single {:.2}x — wrote {out}",
         report.speedup_block_vs_reference, report.speedup_threads_vs_single
+    );
+    Ok(())
+}
+
+/// DES throughput trajectory: measure trials/sec of the three engine
+/// paths (reference / flat-queue single-thread / multi-thread) on the
+/// fixed fig2-scale reference scenario, upfront and speculative, write
+/// BENCH_des.json, and fail if the written artifact does not validate
+/// against the schema.
+fn cmd_bench_des(args: &Args) -> anyhow::Result<()> {
+    let fast = args.flag("fast") || std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let trials = args.get_or::<u64>("trials", if fast { 4_000 } else { 200_000 })?;
+    let threads = args.get_or::<usize>("threads", batchrep::evaluator::auto_threads())?;
+    let out = args.get_or::<String>("out", "BENCH_des.json".into())?;
+    args.finish()?;
+    let report = batchrep::benchkit::des::run(trials, threads);
+    let path = std::path::Path::new(&out);
+    report.write(path)?;
+    // The CI gate: a malformed artifact is an error, not a warning.
+    batchrep::benchkit::des::validate_file(path)?;
+    let fmt_tps = |t: &batchrep::benchkit::mc::Throughput| format!("{:.3e}", t.trials_per_sec);
+    let mut t = Table::new(
+        &format!("bench-des — {} trials on the fig2-scale reference scenario", trials),
+        &["mode", "engine", "trials/s", "elapsed"],
+    );
+    for (mode, m) in
+        [("upfront", &report.upfront), ("speculative", &report.speculative)]
+    {
+        t.row(vec![
+            mode.into(),
+            "reference (heap+scalar)".into(),
+            fmt_tps(&m.reference_scalar),
+            format!("{:.3}s", m.reference_scalar.elapsed_s),
+        ]);
+        t.row(vec![
+            mode.into(),
+            "flat+block single-thread".into(),
+            fmt_tps(&m.single_thread),
+            format!("{:.3}s", m.single_thread.elapsed_s),
+        ]);
+        t.row(vec![
+            mode.into(),
+            format!("flat+block {} threads", report.threads),
+            fmt_tps(&m.multi_thread),
+            format!("{:.3}s", m.multi_thread.elapsed_s),
+        ]);
+    }
+    t.print();
+    println!(
+        "speedup (upfront): flat vs reference {:.2}x, threads vs single {:.2}x — wrote {out}",
+        report.upfront.speedup_flat_vs_reference,
+        report.upfront.speedup_threads_vs_single
     );
     Ok(())
 }

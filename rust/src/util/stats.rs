@@ -1,6 +1,42 @@
 //! Streaming and batch statistics used by the simulator, the live
 //! coordinator metrics, and the benchmark harness.
 
+/// Compensated (Kahan–Neumaier) running sum: adds f64 terms with an
+/// error-compensation carry so long accumulations (e.g. busy
+/// worker-seconds over thousands of events per trial) do not drift the
+/// way a naive `+=` loop does. `sum()` folds the carry back in.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Kahan {
+    sum: f64,
+    carry: f64,
+}
+
+impl Kahan {
+    /// Empty (zero) sum.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one term (Neumaier's branch: compensate whichever operand
+    /// loses low-order bits).
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        let t = self.sum + x;
+        if self.sum.abs() >= x.abs() {
+            self.carry += (self.sum - t) + x;
+        } else {
+            self.carry += (x - t) + self.sum;
+        }
+        self.sum = t;
+    }
+
+    /// The compensated total.
+    #[inline]
+    pub fn sum(&self) -> f64 {
+        self.sum + self.carry
+    }
+}
+
 /// Numerically stable streaming mean/variance (Welford), mergeable so
 /// per-thread accumulators can be combined.
 #[derive(Debug, Clone, Copy, Default)]
@@ -247,6 +283,33 @@ impl LogHistogram {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn kahan_recovers_cancelled_low_order_bits() {
+        // Naive summation loses the 1.0 entirely; Kahan keeps it.
+        let mut k = Kahan::new();
+        for x in [1e16, 1.0, -1e16] {
+            k.add(x);
+        }
+        assert_eq!(k.sum(), 1.0);
+        // Neumaier branch: the incoming term can also be the big one.
+        let mut k = Kahan::new();
+        for x in [1.0, 1e16, 1.0, -1e16] {
+            k.add(x);
+        }
+        assert_eq!(k.sum(), 2.0);
+    }
+
+    #[test]
+    fn kahan_tracks_long_accumulations_exactly() {
+        // 10^6 × 0.1 drifts in naive f64 accumulation; the compensated
+        // sum stays within one ulp of the true value.
+        let mut k = Kahan::new();
+        for _ in 0..1_000_000 {
+            k.add(0.1);
+        }
+        assert!((k.sum() - 100_000.0).abs() < 1e-9, "kahan {}", k.sum());
+    }
 
     #[test]
     fn welford_matches_naive() {

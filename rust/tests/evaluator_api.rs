@@ -119,6 +119,40 @@ fn backends_swap_with_one_line() {
 }
 
 #[test]
+fn k_of_b_is_a_first_class_scenario_field() {
+    // Partial aggregation rides the scenario, not a bespoke sampler:
+    // the analytic, Monte-Carlo, and DES backends all consume it and
+    // agree; the live runtime refuses rather than mis-evaluating.
+    let scn = paper_scn(24, 6, ServiceSpec::shifted_exp(1.0, 0.2), 17)
+        .with_k_of_b(3)
+        .unwrap();
+    let exact = AnalyticEvaluator.evaluate(&scn).unwrap();
+    let mc = MonteCarloEvaluator { trials: 60_000, threads: 2 }.evaluate(&scn).unwrap();
+    let des = DesEvaluator { trials: 30_000, ..DesEvaluator::default() }
+        .evaluate(&scn)
+        .unwrap();
+    assert!((mc.mean - exact.mean).abs() < 6.0 * mc.sem.max(1e-3));
+    assert!((des.mean - exact.mean).abs() < 6.0 * des.sem.max(1e-3));
+    // Waiting for fewer batches is strictly faster than full completion.
+    let full = AnalyticEvaluator
+        .evaluate(&paper_scn(24, 6, ServiceSpec::shifted_exp(1.0, 0.2), 17))
+        .unwrap();
+    assert!(exact.mean < full.mean);
+    assert!(LiveEvaluator::default().evaluate(&scn).is_err());
+}
+
+#[test]
+fn des_evaluator_is_deterministic_per_seed_and_threads() {
+    let scn = paper_scn(12, 4, ServiceSpec::shifted_exp(1.0, 0.2), 23);
+    let ev = DesEvaluator { trials: 20_000, threads: 3, ..DesEvaluator::default() };
+    let a = ev.evaluate(&scn).unwrap();
+    let b = ev.evaluate(&scn).unwrap();
+    assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+    assert_eq!(a.variance.to_bits(), b.variance.to_bits());
+    assert_eq!(a.quantiles, b.quantiles);
+}
+
+#[test]
 fn speculative_scenarios_route_to_capable_backends() {
     let scn = paper_scn(12, 3, ServiceSpec::shifted_exp(1.0, 0.2), 5)
         .with_redundancy(Redundancy::Speculative { deadline_factor: 1.5 });
