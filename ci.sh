@@ -27,6 +27,13 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== conformance matrix (fast mode) =="
+# Sweeps generated scenarios through every applicable backend pair
+# (analytic/MC/DES/reference/live) with stderr-scaled z-bound
+# tolerances. Fails on any disagreement; the failure output includes
+# the shrunk minimal case and its BATCHREP_PROP_SEED replay seed.
+cargo run --release -- conformance --fast
+
 echo "== bench smoke (bench_fig2, fast mode) =="
 BATCHREP_BENCH_FAST=1 cargo bench --bench bench_fig2
 

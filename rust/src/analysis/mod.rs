@@ -14,7 +14,12 @@
 //! This module also computes the exact mean/variance of **unbalanced**
 //! balanced-size assignments by inclusion–exclusion over the maximum of
 //! independent non-identical exponentials, which lets E2 verify
-//! Theorem 1 analytically rather than only by simulation.
+//! Theorem 1 analytically rather than only by simulation; and
+//! completion-time statistics for **heterogeneous-speed** clusters
+//! ([`hetero_completion_bounds`]): exact per-worker-rate order
+//! statistics for Exponential service, a provable two-sided bound for
+//! Shifted-Exponential — the closed-form legs of the conformance
+//! matrix's `worker_speeds` cells.
 //!
 //! The balanced closed form is **memoized** per `(N, B, spec)` in a
 //! thread-local cache (see [`ct_cache_counters`]), and the harmonic
@@ -49,14 +54,68 @@ fn exp_family(spec: &ServiceSpec) -> Option<(f64, f64)> {
     spec.exp_family()
 }
 
-/// Memo key of one balanced closed-form evaluation: `(N, B, spec)` with
-/// the exp-family parameters keyed by their exact bit patterns.
+/// Memo key of one closed-form evaluation: `(N, B, spec)` with the
+/// exp-family parameters keyed by their exact bit patterns. The
+/// homogeneous balanced entry point uses `kind = 0` (shape hashes 0);
+/// [`hetero_completion_bounds`] stores its inclusion–exclusion base
+/// under `kind = 1` with **two independent** 64-bit fingerprints of
+/// the per-worker speeds and the batch-of-worker map (FNV-1a and a
+/// SplitMix64 fold), so dense heterogeneous sweeps recompute nothing
+/// and a silent same-key collision would need both 64-bit hashes to
+/// collide at once (~2⁻¹²⁸ per pair).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct CtKey {
     n: u64,
+    /// Data units `U` — distinct from `n` in the heterogeneous entry
+    /// point, where the per-worker rates scale with `s = U/B` (the
+    /// homogeneous closed form is defined at the paper normalization
+    /// `U = N`).
+    units: u64,
     b: u64,
     mu_bits: u64,
     delta_bits: u64,
+    kind: u8,
+    shape_hash: u64,
+    shape_hash2: u64,
+}
+
+impl CtKey {
+    /// Key of the homogeneous balanced closed form (`U = N`).
+    fn homogeneous(n: u64, b: u64, mu: f64, delta: f64) -> Self {
+        Self {
+            n,
+            units: n,
+            b,
+            mu_bits: mu.to_bits(),
+            delta_bits: delta.to_bits(),
+            kind: 0,
+            shape_hash: 0,
+            shape_hash2: 0,
+        }
+    }
+}
+
+/// Two independent fingerprints (FNV-1a and a SplitMix64 fold) over the
+/// worker-speed bit patterns and the batch-of-worker map — the part of
+/// a heterogeneous scenario the `(N, B, spec)` key cannot see.
+fn hetero_shape_hashes(speeds: &[f64], batch_of_worker: &[usize]) -> (u64, u64) {
+    let mut fnv: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut smx: u64 = 0x9E37_79B9_7F4A_7C15;
+    let mut eat = |v: u64| {
+        for byte in v.to_le_bytes() {
+            fnv = (fnv ^ byte as u64).wrapping_mul(0x1000_0000_01b3);
+        }
+        let mut s = smx ^ v.wrapping_mul(0xA24B_AED4_963E_E407);
+        smx = crate::util::rng::splitmix64(&mut s);
+    };
+    eat(speeds.len() as u64);
+    for &s in speeds {
+        eat(s.to_bits());
+    }
+    for &b in batch_of_worker {
+        eat(b as u64);
+    }
+    (fnv, smx)
 }
 
 thread_local! {
@@ -92,9 +151,8 @@ pub fn completion_time_stats(n: u64, b: u64, spec: &ServiceSpec) -> anyhow::Resu
     anyhow::ensure!(n % b == 0, "closed form needs B | N (N={n}, B={b})");
     let (mu, delta) = exp_family(spec)
         .ok_or_else(|| anyhow::anyhow!("closed form only for exp/sexp, got {}", spec.name()))?;
-    let key = CtKey { n, b, mu_bits: mu.to_bits(), delta_bits: delta.to_bits() };
-    if let Some(st) = CT_CACHE.with(|c| c.borrow().get(&key).copied()) {
-        CT_HITS.with(|h| h.set(h.get() + 1));
+    let key = CtKey::homogeneous(n, b, mu, delta);
+    if let Some(st) = ct_cache_get(&key) {
         return Ok(st);
     }
     CT_MISSES.with(|m| m.set(m.get() + 1));
@@ -103,6 +161,21 @@ pub fn completion_time_stats(n: u64, b: u64, spec: &ServiceSpec) -> anyhow::Resu
         mean: s * delta + harmonic(b) / mu,
         var: harmonic2(b) / (mu * mu),
     };
+    ct_cache_put(key, st);
+    Ok(st)
+}
+
+/// Memo lookup (bumps the hit counter on success).
+fn ct_cache_get(key: &CtKey) -> Option<CtStats> {
+    let hit = CT_CACHE.with(|c| c.borrow().get(key).copied());
+    if hit.is_some() {
+        CT_HITS.with(|h| h.set(h.get() + 1));
+    }
+    hit
+}
+
+/// Memo insert with the leak-guard cap.
+fn ct_cache_put(key: CtKey, st: CtStats) {
     CT_CACHE.with(|c| {
         let mut map = c.borrow_mut();
         if map.len() >= CT_CACHE_CAP {
@@ -110,7 +183,6 @@ pub fn completion_time_stats(n: u64, b: u64, spec: &ServiceSpec) -> anyhow::Resu
         }
         map.insert(key, st);
     });
-    Ok(st)
 }
 
 /// One point of the diversity–parallelism spectrum.
@@ -250,6 +322,119 @@ pub fn assignment_stats(
         .collect();
     let base = max_of_exponentials_stats(&rates);
     Ok(CtStats { mean: s * delta + base.mean, var: base.var })
+}
+
+/// Completion-time bounds for a **heterogeneous-speed** cluster: exact
+/// for Exponential service, a provable two-sided bound for
+/// Shifted-Exponential.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CtBounds {
+    /// Stochastic lower bound on `(E[T], Var-model)`.
+    pub lower: CtStats,
+    /// Stochastic upper bound.
+    pub upper: CtStats,
+    /// `true` when `lower == upper` (Exponential service, or a uniform
+    /// speed factor) — the bound collapses to the exact value.
+    pub exact: bool,
+}
+
+impl CtBounds {
+    /// Midpoint of the mean interval (the exact mean when `exact`).
+    pub fn mid_mean(&self) -> f64 {
+        0.5 * (self.lower.mean + self.upper.mean)
+    }
+
+    /// Half-width of the mean interval (0 when `exact`).
+    pub fn half_width(&self) -> f64 {
+        0.5 * (self.upper.mean - self.lower.mean)
+    }
+}
+
+/// Closed-form completion-time bounds under **heterogeneous worker
+/// speeds** (the `Scenario::worker_speeds` field): worker `w` with
+/// speed factor `c_w ≥ 0` serves its batch of `s` units in
+/// `c_w·(s∆ + Exp(µ/s)) = c_w·s∆ + Exp(µ/(s·c_w))`, so batch `i`'s
+/// earliest replica has exponential part `Exp(Λᵢ)` with per-worker
+/// rates `λ_w = µ/(s·c_w)` summed over its replicas:
+///
+/// * **Exponential (∆ = 0): exact.** `T = max_i Exp(Λᵢ)`, evaluated by
+///   inclusion–exclusion over the per-batch rates
+///   ([`max_of_exponentials_stats`]) — the per-worker-rate order
+///   statistics, with no homogeneity assumption.
+/// * **Shifted-Exponential: two-sided bound.** `c_w·s∆ + Exp(λ_w)`
+///   is stochastically sandwiched by shifting every worker to the
+///   cluster-wide `c_min`/`c_max`:
+///   `s∆·c_min + max_i Exp(Λᵢ)  ≤st  T  ≤st  s∆·c_max + max_i Exp(Λᵢ)`,
+///   so the mean lies in an interval of width `s∆·(c_max − c_min)`; the
+///   exponential part still uses the exact per-worker rates. Both
+///   bounds carry the inclusion–exclusion variance of the exponential
+///   part (the shift contributes no variance to either bound).
+///
+/// Requires Exp/SExp per-unit service, equal-size disjoint batches
+/// (`B | U`), and `B ≤ 20` (inclusion–exclusion). Works for unbalanced
+/// replication degrees. The inclusion–exclusion base is memoized in the
+/// same thread-local cache as [`completion_time_stats`], keyed by
+/// `(N, B, spec, shape_hash(speeds, assignment))`, so sweeps over a
+/// fixed cluster shape evaluate each point once per thread.
+pub fn hetero_completion_bounds(
+    assignment: &Assignment,
+    spec: &ServiceSpec,
+    n_units: u64,
+    speeds: &[f64],
+) -> anyhow::Result<CtBounds> {
+    let (mu, delta) = exp_family(spec).ok_or_else(|| {
+        anyhow::anyhow!(
+            "heterogeneous closed forms cover exp/sexp service only, got {}",
+            spec.name()
+        )
+    })?;
+    let n = assignment.n_workers;
+    let b = assignment.n_batches as u64;
+    anyhow::ensure!(
+        speeds.len() == n,
+        "worker_speeds has {} entries for {n} workers",
+        speeds.len()
+    );
+    anyhow::ensure!(speeds.iter().all(|&c| c > 0.0), "worker speeds must be positive");
+    anyhow::ensure!(n_units % b == 0, "need B | U for equal-size batches");
+    anyhow::ensure!(
+        b <= 20,
+        "heterogeneous inclusion–exclusion limited to B <= 20 (got {b})"
+    );
+    let s = (n_units / b) as f64;
+    let (c_min, c_max) = speeds
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &c| (lo.min(c), hi.max(c)));
+
+    let (shape_hash, shape_hash2) = hetero_shape_hashes(speeds, &assignment.batch_of_worker);
+    let key = CtKey {
+        n: n as u64,
+        units: n_units,
+        b,
+        mu_bits: mu.to_bits(),
+        delta_bits: delta.to_bits(),
+        kind: 1,
+        shape_hash,
+        shape_hash2,
+    };
+    let base = match ct_cache_get(&key) {
+        Some(st) => st,
+        None => {
+            CT_MISSES.with(|m| m.set(m.get() + 1));
+            let rates: Vec<f64> = assignment
+                .workers_of_batch
+                .iter()
+                .map(|ws| ws.iter().map(|&w| mu / (s * speeds[w])).sum())
+                .collect();
+            let st = max_of_exponentials_stats(&rates);
+            ct_cache_put(key, st);
+            st
+        }
+    };
+
+    let lower = CtStats { mean: s * delta * c_min + base.mean, var: base.var };
+    let upper = CtStats { mean: s * delta * c_max + base.mean, var: base.var };
+    Ok(CtBounds { exact: lower.mean == upper.mean, lower, upper })
 }
 
 /// Closed-form CDF of the completion time for balanced disjoint
@@ -448,6 +633,154 @@ mod tests {
                 skw.mean
             );
         }
+    }
+
+    #[test]
+    fn hetero_exponential_is_exact_per_worker_rate_order_statistics() {
+        // ∆ = 0: the bound collapses and must match a Monte-Carlo run of
+        // the same heterogeneous scenario within sampling error.
+        let spec = ServiceSpec::exp(1.3);
+        let n = 12usize;
+        let speeds: Vec<f64> = (0..n).map(|w| 0.6 + 0.12 * w as f64).collect();
+        let a = balanced(n, 3).unwrap();
+        let bounds = hetero_completion_bounds(&a, &spec, n as u64, &speeds).unwrap();
+        assert!(bounds.exact);
+        assert_eq!(bounds.lower.mean.to_bits(), bounds.upper.mean.to_bits());
+        let scn = crate::des::Scenario::paper_balanced(
+            n,
+            3,
+            crate::dist::BatchService::paper(spec.clone()),
+        )
+        .unwrap()
+        .with_speeds(speeds)
+        .unwrap();
+        let mc = crate::des::montecarlo::run_trials(&scn, 150_000, 41);
+        assert!(
+            (mc.mean() - bounds.mid_mean()).abs() < 4.0 * mc.ci95().max(1e-3),
+            "mc {} vs exact {}",
+            mc.mean(),
+            bounds.mid_mean()
+        );
+        let rel_var = (mc.variance() - bounds.lower.var).abs() / bounds.lower.var;
+        assert!(rel_var < 0.06, "var mc {} vs exact {}", mc.variance(), bounds.lower.var);
+    }
+
+    #[test]
+    fn hetero_uniform_speeds_reduce_to_scaled_homogeneous_closed_form() {
+        // A uniform factor c is the homogeneous system with spec
+        // (µ/c, c∆): the bound is exact and matches the scaled closed
+        // form; c = 1 recovers completion_time_stats itself.
+        let spec = ServiceSpec::shifted_exp(1.0, 0.3);
+        let a = balanced(12, 4).unwrap();
+        for c in [1.0f64, 1.7] {
+            let bounds =
+                hetero_completion_bounds(&a, &spec, 12, &vec![c; 12]).unwrap();
+            assert!(bounds.exact, "c={c}");
+            let scaled = ServiceSpec::shifted_exp(1.0 / c, c * 0.3);
+            let direct = completion_time_stats(12, 4, &scaled).unwrap();
+            assert!(
+                (bounds.mid_mean() - direct.mean).abs() < 1e-9,
+                "c={c}: {} vs {}",
+                bounds.mid_mean(),
+                direct.mean
+            );
+            assert!((bounds.lower.var - direct.var).abs() < 1e-9, "c={c}");
+        }
+    }
+
+    #[test]
+    fn hetero_sexp_bounds_contain_montecarlo_mean() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.4);
+        let n = 8usize;
+        let speeds: Vec<f64> = (0..n).map(|w| if w % 2 == 0 { 0.7 } else { 1.8 }).collect();
+        let a = balanced(n, 2).unwrap();
+        let bounds = hetero_completion_bounds(&a, &spec, n as u64, &speeds).unwrap();
+        assert!(!bounds.exact);
+        assert!(bounds.lower.mean < bounds.upper.mean);
+        // Interval width is exactly s∆(c_max − c_min).
+        let s = (n / 2) as f64;
+        assert!((2.0 * bounds.half_width() - s * 0.4 * (1.8 - 0.7)).abs() < 1e-12);
+        let scn = crate::des::Scenario::paper_balanced(
+            n,
+            2,
+            crate::dist::BatchService::paper(spec.clone()),
+        )
+        .unwrap()
+        .with_speeds(speeds)
+        .unwrap();
+        let mc = crate::des::montecarlo::run_trials(&scn, 150_000, 43);
+        let slack = 4.0 * mc.ci95().max(1e-3);
+        assert!(
+            mc.mean() >= bounds.lower.mean - slack && mc.mean() <= bounds.upper.mean + slack,
+            "mc {} outside [{}, {}]",
+            mc.mean(),
+            bounds.lower.mean,
+            bounds.upper.mean
+        );
+    }
+
+    #[test]
+    fn hetero_bounds_work_for_unbalanced_assignments() {
+        // The per-worker-rate construction never assumed balance: a
+        // skewed assignment's bound must still contain the MC mean.
+        let spec = ServiceSpec::exp(1.0);
+        let n = 12usize;
+        let speeds: Vec<f64> = (0..n).map(|w| 0.5 + 0.1 * w as f64).collect();
+        let a = skewed(n, 3).unwrap();
+        let bounds = hetero_completion_bounds(&a, &spec, n as u64, &speeds).unwrap();
+        let layout = crate::batching::disjoint(n, 3).unwrap();
+        let scn = crate::des::Scenario::new(
+            layout,
+            a,
+            crate::dist::BatchService::paper(spec),
+        )
+        .unwrap()
+        .with_speeds(speeds)
+        .unwrap();
+        let mc = crate::des::montecarlo::run_trials(&scn, 120_000, 47);
+        assert!(
+            (mc.mean() - bounds.mid_mean()).abs() < 4.0 * mc.ci95().max(1e-3),
+            "mc {} vs exact {}",
+            mc.mean(),
+            bounds.mid_mean()
+        );
+    }
+
+    #[test]
+    fn hetero_bounds_are_memoized_per_shape() {
+        let spec = ServiceSpec::shifted_exp(1.2, 0.2);
+        let a = balanced(16, 4).unwrap();
+        let speeds: Vec<f64> = (0..16).map(|w| 1.0 + 0.05 * w as f64).collect();
+        let first = hetero_completion_bounds(&a, &spec, 16, &speeds).unwrap();
+        let (h0, m0) = ct_cache_counters();
+        let again = hetero_completion_bounds(&a, &spec, 16, &speeds).unwrap();
+        let (h1, m1) = ct_cache_counters();
+        assert_eq!(m1, m0, "repeat evaluation must not recompute the IE base");
+        assert_eq!(h1, h0 + 1);
+        assert_eq!(first, again);
+        // A different speed vector is a different key.
+        let mut other = speeds.clone();
+        other[0] *= 2.0;
+        let _ = hetero_completion_bounds(&a, &spec, 16, &other).unwrap();
+        let (_, m2) = ct_cache_counters();
+        assert_eq!(m2, m1 + 1);
+    }
+
+    #[test]
+    fn hetero_bounds_reject_bad_inputs() {
+        let a = balanced(8, 2).unwrap();
+        let ok = vec![1.0; 8];
+        assert!(hetero_completion_bounds(&a, &ServiceSpec::pareto(1.0, 2.5), 8, &ok).is_err());
+        assert!(hetero_completion_bounds(&a, &ServiceSpec::exp(1.0), 8, &ok[..7]).is_err());
+        let mut neg = ok.clone();
+        neg[3] = 0.0;
+        assert!(hetero_completion_bounds(&a, &ServiceSpec::exp(1.0), 8, &neg).is_err());
+        let wide = balanced(24, 24).unwrap();
+        assert!(
+            hetero_completion_bounds(&wide, &ServiceSpec::exp(1.0), 24, &vec![1.0; 24])
+                .is_err(),
+            "B > 20 exceeds the inclusion–exclusion budget"
+        );
     }
 
     #[test]

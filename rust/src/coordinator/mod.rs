@@ -18,7 +18,12 @@
 //!
 //! Completion is declared at coverage: for disjoint layouts every batch
 //! must report; overlapping layouts complete as soon as finished
-//! workers' units cover the dataset.
+//! workers' units cover the dataset. With a `k_of_b` target (the
+//! gradient-coding regime — `Scenario::k_of_b` or the `k_of_b` config
+//! key) the round instead completes at the **k-th finished batch**: the
+//! master aggregates the earliest `k` batch results, cancels every
+//! remaining replica, and counts stragglers that beat their cancel as
+//! redundant.
 
 pub mod data;
 
@@ -127,6 +132,10 @@ pub struct Coordinator {
     /// Per-worker speed multipliers for the injected delays (`None` =
     /// homogeneous) — the live analogue of `Scenario::worker_speeds`.
     speeds: Option<Vec<f64>>,
+    /// Partial-aggregation target: the round completes at the k-th
+    /// finished batch (`None` = full coverage) — the live analogue of
+    /// `Scenario::k_of_b`.
+    k_of_b: Option<usize>,
     scratch: RoundScratch,
     /// Metrics across all jobs run by this coordinator.
     pub metrics: RunMetrics,
@@ -164,6 +173,7 @@ impl Coordinator {
         cfg.service = scn.service.spec.clone();
         cfg.batch_model = scn.service.model;
         cfg.seed = scn.seed;
+        cfg.k_of_b = scn.k_of_b.unwrap_or(0);
         Self::from_parts(
             cfg,
             scn.layout.clone(),
@@ -224,6 +234,10 @@ impl Coordinator {
 
         let service = BatchService { spec: cfg.service.clone(), model: cfg.batch_model };
         let scratch = RoundScratch::new(layout.n_units, assignment.n_batches);
+        let k_of_b = match cfg.k_of_b {
+            0 => None,
+            k => Some(k.min(assignment.n_batches)),
+        };
         Ok(Coordinator {
             rng,
             assignment,
@@ -234,6 +248,7 @@ impl Coordinator {
             results: res_rx,
             next_job: 0,
             speeds,
+            k_of_b,
             scratch,
             metrics: RunMetrics::new(),
             cfg,
@@ -286,11 +301,13 @@ impl Coordinator {
                 .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))?;
         }
 
-        // Collect. Coverage-complete when all data units are covered by
-        // winning batches; the round ends for bookkeeping when every
+        // Collect. Completion is declared at coverage (all data units
+        // covered by winning batches) or, under a k-of-B target, at the
+        // k-th finished batch; the round ends for bookkeeping when every
         // worker has reported (cancelled workers report quickly).
         let n_units = self.layout.n_units;
         let mut units_left = n_units;
+        let mut batches_won = 0usize;
         let mut reported = 0usize;
         let mut redundant = 0u64;
         let mut cancelled = 0u64;
@@ -314,7 +331,17 @@ impl Coordinator {
                         redundant += 1;
                         continue;
                     }
+                    if completion_wall.is_some() {
+                        // The job already completed (k-of-B target hit,
+                        // or coverage reached in an overlapping layout):
+                        // a straggler that beat its cancel is pure
+                        // redundancy — don't aggregate it or let it move
+                        // the completion statistics.
+                        redundant += 1;
+                        continue;
+                    }
                     self.scratch.batch_won[msg.batch_id] = gen;
+                    batches_won += 1;
                     if self.cfg.cancellation {
                         self.scratch.cancels[msg.batch_id].store(true, Ordering::Relaxed);
                     }
@@ -341,11 +368,17 @@ impl Coordinator {
                             units_left -= 1;
                         }
                     }
-                    if units_left == 0 && completion_wall.is_none() {
+                    let complete = match self.k_of_b {
+                        Some(k) => batches_won >= k,
+                        None => units_left == 0,
+                    };
+                    if complete && completion_wall.is_none() {
                         completion_wall = Some(timer.secs());
                         if self.cfg.cancellation {
-                            // Overlapping layouts: remaining batches are
-                            // moot once coverage is reached.
+                            // Remaining batches — overlapping stragglers
+                            // past coverage, or batches beyond the
+                            // k-of-B target — are moot once the job is
+                            // complete.
                             for c in &self.scratch.cancels {
                                 c.store(true, Ordering::Relaxed);
                             }
@@ -530,6 +563,41 @@ mod tests {
         assert_eq!(recs.len(), 1);
         assert_eq!(recs[0].dispatched, 4);
         assert_eq!(recs[0].redundant + recs[0].cancelled, 3);
+    }
+
+    #[test]
+    fn k_of_b_round_completes_at_kth_batch() {
+        // 8 workers, 4 batches, k = 2: exactly two batch winners are
+        // aggregated per round (the other six replicas are cancelled or
+        // redundant), and the injected completion sits well below the
+        // full-completion run of the same config.
+        let rounds = 20;
+        let run = |k: usize| -> (f64, Vec<crate::metrics::JobRecord>) {
+            let mut cfg = test_cfg(8, 4);
+            cfg.k_of_b = k;
+            let mut c = Coordinator::new(cfg, Backend::Mock).unwrap();
+            for _ in 0..rounds {
+                c.run_round(JobSpec::Grad { w: Arc::new(vec![0.0; 4]) }).unwrap();
+            }
+            let recs = c.metrics.records().to_vec();
+            let mean = c.metrics.mean_injected();
+            c.shutdown();
+            (mean, recs)
+        };
+        let (mean_k, recs_k) = run(2);
+        for r in &recs_k {
+            assert_eq!(r.dispatched, 8);
+            assert_eq!(
+                r.redundant + r.cancelled,
+                6,
+                "k=2 of 4 must aggregate exactly two batch winners: {r:?}"
+            );
+        }
+        let (mean_full, _) = run(0);
+        assert!(
+            mean_k < mean_full,
+            "k-of-B completion {mean_k} must beat full completion {mean_full}"
+        );
     }
 
     #[test]

@@ -44,10 +44,11 @@
 //!   accumulate through [`crate::util::stats::Kahan`] sums rather than a
 //!   naive `+=` over thousands of events.
 //! * **Deterministic parallel sharding** — [`simulate_many_parallel`]
-//!   splits trials over OS threads with per-shard RNG substreams and
-//!   merges shard summaries in shard-index order (Welford merges), so a
-//!   fixed `(seed, threads)` pair is bit-reproducible regardless of
-//!   thread scheduling.
+//!   splits trials over a fixed set of logical shards with per-shard
+//!   RNG substreams and merges shard summaries in shard-index order
+//!   (Welford merges); OS threads only execute the plan, so a fixed
+//!   `(seed, trials)` pair is bit-reproducible regardless of thread
+//!   scheduling **and of the thread count itself**.
 //!
 //! [`simulate_many_reference`] retains the pre-flat-queue engine — a
 //! `BinaryHeap<Reverse<QueuedEvent>>` and one scalar `sample_batch` call
@@ -556,14 +557,16 @@ pub fn simulate_many(
     })
 }
 
-/// Multi-threaded trial runner: shards `trials` across `threads` OS
-/// threads with independent RNG substreams (the same
-/// `shard_plan` the Monte-Carlo sampler uses). Shard summaries are
-/// merged in shard-index order after all threads join — Welford merges
-/// for the moments, concatenation for the retained samples — so the
-/// result is independent of thread completion order: a fixed
-/// `(seed, threads)` pair produces a bit-identical [`EngineSummary`] on
-/// every run.
+/// Sharded trial runner: splits `trials` over the fixed logical shards
+/// of the shared `shard_plan` (the same plan the Monte-Carlo sampler
+/// uses — per-shard RNG substreams, shard count independent of the
+/// thread count) and executes the plan on up to `threads` OS threads.
+/// Shard summaries are merged in shard-index order after all threads
+/// join — Welford merges for the moments, concatenation for the
+/// retained samples — so the result is independent of thread completion
+/// order **and of the thread count itself**: a fixed
+/// `(scenario, trials, seed)` triple produces a bit-identical
+/// [`EngineSummary`] for every `threads ∈ {1, 2, 4, …}`.
 pub fn simulate_many_parallel(
     scn: &Scenario,
     cfg: &EngineConfig,
@@ -571,30 +574,17 @@ pub fn simulate_many_parallel(
     seed: u64,
     threads: usize,
 ) -> EngineSummary {
-    let threads = threads.max(1).min(trials.max(1) as usize);
-    if threads == 1 {
-        return simulate_many(scn, cfg, trials, seed);
-    }
     // One shared thinning rate, so the union of shard sample sets obeys
-    // the global cap and depends only on (trials, threads).
+    // the global cap and depends only on the trial count.
     let keep = keep_every(trials);
-    let plan = shard_plan(trials, threads, seed);
-    let shards: Vec<EngineSummary> = std::thread::scope(|scope| {
-        let handles: Vec<_> = plan
-            .into_iter()
-            .map(|(shard_trials, mut rng)| {
-                let scn_ref = &*scn;
-                let cfg_copy = *cfg;
-                scope.spawn(move || {
-                    let mut ws = Workspace::default();
-                    summarize_trials(shard_trials, keep, || {
-                        simulate_one_with(scn_ref, &cfg_copy, &mut rng, &mut ws)
-                    })
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("des shard panicked")).collect()
-    });
+    let shards = super::montecarlo::execute_shard_plan(
+        shard_plan(trials, seed),
+        threads,
+        Workspace::default,
+        |ws, shard_trials, mut rng| {
+            summarize_trials(shard_trials, keep, || simulate_one_with(scn, cfg, &mut rng, ws))
+        },
+    );
     let mut out = EngineSummary::empty();
     for sh in &shards {
         out.completion.merge(&sh.completion);
@@ -1067,11 +1057,15 @@ mod tests {
             assert_eq!(a.total_events, b.total_events, "k={k}");
             assert_eq!(a.samples.raw(), b.samples.raw(), "k={k}");
         }
-        // threads = 1 is exactly the sequential path.
+        // The logical-shard plan makes the result invariant to the
+        // thread count, not just to scheduling: threads = 1 executes
+        // the identical plan sequentially.
         let p1 = simulate_many_parallel(&s, &cfg, 5_000, 3, 1);
-        let sq = simulate_many(&s, &cfg, 5_000, 3);
-        assert_eq!(p1.completion.mean().to_bits(), sq.completion.mean().to_bits());
-        assert_eq!(p1.total_events, sq.total_events);
+        let p3 = simulate_many_parallel(&s, &cfg, 5_000, 3, 3);
+        assert_eq!(p1.completion.mean().to_bits(), p3.completion.mean().to_bits());
+        assert_eq!(p1.busy.mean().to_bits(), p3.busy.mean().to_bits());
+        assert_eq!(p1.total_events, p3.total_events);
+        assert_eq!(p1.samples.raw(), p3.samples.raw());
     }
 
     #[test]

@@ -52,8 +52,9 @@ pub struct Scenario {
     /// cites): the job completes once the earliest `k` of the `B`
     /// batches have finished, a batch completing when its earliest
     /// replica does. `None` = full completion (every data unit
-    /// covered). Consumed by the analytic, Monte-Carlo, and DES
-    /// backends.
+    /// covered). Consumed by all four backends — the live coordinator
+    /// completes the round at the k-th finished batch and cancels the
+    /// rest.
     pub k_of_b: Option<usize>,
     /// Root RNG seed: all stochastic backends derive their randomness
     /// from it, so results are bit-reproducible given one scenario.

@@ -21,9 +21,11 @@
 //!   generation-stamped coverage array, so steady-state trials perform
 //!   no heap allocation at all (overlapping layouts included).
 //! * **Deterministic sharding** — [`run_trials_parallel`] splits trials
-//!   over OS threads with per-shard RNG substreams and merges shard
-//!   summaries in shard-index order, so a fixed `(seed, threads)` pair
-//!   is bit-reproducible regardless of thread scheduling.
+//!   over [`LOGICAL_SHARDS`] fixed logical shards with per-shard RNG
+//!   substreams and merges shard summaries in shard-index order; OS
+//!   threads only execute the plan, so a fixed `(seed, trials)` pair is
+//!   bit-reproducible regardless of thread scheduling **and of the
+//!   thread count itself**.
 //!
 //! [`run_trials_reference`] retains the pre-block scalar sampler as the
 //! measured baseline for the `bench-mc` perf harness.
@@ -392,57 +394,106 @@ pub fn run_trials_reference(scn: &Scenario, trials: u64, seed: u64) -> McSummary
     McSummary { welford, samples }
 }
 
+/// Number of fixed *logical* shards every parallel trial runner splits
+/// its trials into (fewer when there are fewer trials than shards). The
+/// shard count — and therefore every shard's RNG substream and trial
+/// budget — is a constant of the run, **not** a function of the worker
+/// thread count, so results are identical no matter how many OS threads
+/// execute the plan.
+pub(crate) const LOGICAL_SHARDS: u64 = 64;
+
 /// Deterministic shard plan shared by every parallel trial runner (this
 /// sampler and the DES engine's [`crate::des::engine::simulate_many_parallel`]):
 /// per-shard trial counts (the remainder spread over the first shards)
-/// and per-shard RNG substreams, stable for a fixed
-/// `(trials, threads, seed)` triple regardless of thread scheduling.
-pub(crate) fn shard_plan(trials: u64, threads: usize, seed: u64) -> Vec<(u64, Rng)> {
-    let threads = threads.max(1).min(trials.max(1) as usize);
-    let per = trials / threads as u64;
-    let extra = trials % threads as u64;
+/// and per-shard RNG substreams over [`LOGICAL_SHARDS`] fixed shards.
+/// The plan depends only on `(trials, seed)` — thread counts never
+/// enter it — so sharded results are reproducible across machines and
+/// across any `threads` setting.
+pub(crate) fn shard_plan(trials: u64, seed: u64) -> Vec<(u64, Rng)> {
+    let shards = LOGICAL_SHARDS.min(trials.max(1));
+    let per = trials / shards;
+    let extra = trials % shards;
     let root = Rng::new(seed);
-    (0..threads)
+    (0..shards)
         .map(|t| {
-            // Substream seeds: independent per shard, stable across
-            // runs for a fixed (seed, threads).
-            (per + u64::from((t as u64) < extra), root.substream(t as u64 + 1))
+            // Substream seeds: independent per logical shard, stable
+            // across runs and thread counts for a fixed seed.
+            (per + u64::from(t < extra), root.substream(t + 1))
         })
         .collect()
 }
 
-/// Multi-threaded trial runner: shards `trials` across `threads` OS
-/// threads with independent RNG substreams ([`shard_plan`]). Shard
-/// summaries are merged in shard-index order after all threads join, so
-/// the result is independent of thread completion order: a fixed
-/// `(seed, threads)` pair produces a bit-identical [`McSummary`] on
-/// every run.
+/// Execute a [`shard_plan`] on up to `threads` OS threads (shard `i`
+/// goes to worker `i % workers`; each worker owns one reusable `state`)
+/// and return the per-shard results **in shard-index order** — the one
+/// shared execution scaffold of every parallel trial runner, so the
+/// thread-count-invariance argument lives in exactly one place.
+pub(crate) fn execute_shard_plan<T, S>(
+    plan: Vec<(u64, Rng)>,
+    threads: usize,
+    make_state: impl Fn() -> S + Sync,
+    run: impl Fn(&mut S, u64, Rng) -> T + Sync,
+) -> Vec<T>
+where
+    T: Send,
+{
+    let workers = threads.max(1).min(plan.len());
+    if workers <= 1 {
+        let mut state = make_state();
+        return plan.into_iter().map(|(t, rng)| run(&mut state, t, rng)).collect();
+    }
+    let mut slots: Vec<Option<T>> = plan.iter().map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let plan_ref = &plan;
+                let make_ref = &make_state;
+                let run_ref = &run;
+                scope.spawn(move || {
+                    let mut state = make_ref();
+                    let mut out = Vec::new();
+                    let mut i = w;
+                    while i < plan_ref.len() {
+                        let (t, rng) = plan_ref[i].clone();
+                        out.push((i, run_ref(&mut state, t, rng)));
+                        i += workers;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, s) in h.join().expect("shard worker panicked") {
+                slots[i] = Some(s);
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("every shard is assigned a worker")).collect()
+}
+
+/// Sharded trial runner: splits `trials` over the fixed
+/// [`LOGICAL_SHARDS`] logical shards with independent RNG substreams
+/// ([`shard_plan`]) and executes the plan via [`execute_shard_plan`].
+/// Shard summaries are merged in shard-index order after all threads
+/// join, so the result is independent of thread completion order **and
+/// of the thread count itself**: a fixed `(scenario, trials, seed)`
+/// triple produces a bit-identical [`McSummary`] for every
+/// `threads ∈ {1, 2, 4, …}`.
 pub fn run_trials_parallel(
     scn: &Scenario,
     trials: u64,
     seed: u64,
     threads: usize,
 ) -> McSummary {
-    let threads = threads.max(1).min(trials.max(1) as usize);
-    if threads == 1 {
-        return run_trials(scn, trials, seed);
-    }
     // One shared thinning rate, so the union of shard sample sets obeys
-    // the global cap and depends only on (trials, threads).
+    // the global cap and depends only on the trial count.
     let keep_every = keep_every(trials);
-    let shards: Vec<McSummary> = std::thread::scope(|scope| {
-        let handles: Vec<_> = shard_plan(trials, threads, seed)
-            .into_iter()
-            .map(|(shard_trials, shard_rng)| {
-                let scn_ref = &*scn;
-                scope.spawn(move || {
-                    let mut scratch = TrialScratch::new();
-                    run_shard(scn_ref, shard_trials, shard_rng, keep_every, &mut scratch)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("mc shard panicked")).collect()
-    });
+    let shards = execute_shard_plan(
+        shard_plan(trials, seed),
+        threads,
+        TrialScratch::new,
+        |scratch, t, rng| run_shard(scn, t, rng, keep_every, scratch),
+    );
     let mut welford = Welford::new();
     let mut samples = Samples::new();
     for sh in &shards {
@@ -678,12 +729,33 @@ mod tests {
     #[test]
     fn parallel_degenerate_cases() {
         let scn = paper_scn(4, 2, ServiceSpec::exp(1.0));
-        // threads > trials, threads = 1
+        // threads > trials: the plan clamps to one shard per trial.
         let a = run_trials_parallel(&scn, 5, 3, 16);
         assert_eq!(a.welford.count(), 5);
+        // threads = 1 executes the same logical-shard plan sequentially.
         let b = run_trials_parallel(&scn, 1000, 3, 1);
-        let c = run_trials(&scn, 1000, 3);
-        assert_eq!(b.mean(), c.mean());
+        assert_eq!(b.welford.count(), 1000);
+    }
+
+    #[test]
+    fn parallel_is_invariant_to_thread_count() {
+        // The logical-shard plan is fixed per (trials, seed), so the
+        // thread count changes wall-clock only: every statistic —
+        // moments, sem, and the retained sample set — is bit-identical
+        // across thread counts (the conformance harness's determinism
+        // property relies on this).
+        let scn = paper_scn(12, 4, ServiceSpec::shifted_exp(1.0, 0.3));
+        let base = run_trials_parallel(&scn, 20_000, 13, 1);
+        for threads in [2usize, 4, 8] {
+            let run = run_trials_parallel(&scn, 20_000, 13, threads);
+            assert_eq!(base.mean().to_bits(), run.mean().to_bits(), "threads={threads}");
+            assert_eq!(
+                base.variance().to_bits(),
+                run.variance().to_bits(),
+                "threads={threads}"
+            );
+            assert_eq!(base.samples.raw(), run.samples.raw(), "threads={threads}");
+        }
     }
 
     #[test]

@@ -16,12 +16,13 @@
 //!   non-identical exponentials.
 //! * [`MonteCarloEvaluator`] — block-sampled trial batches over the
 //!   direct completion-time sampler (zero-allocation scratch,
-//!   multi-threaded by default, deterministic per `(seed, threads)`).
+//!   multi-threaded by default, deterministic per seed for any thread
+//!   count).
 //! * [`DesEvaluator`] — the full event engine: replica cancellation,
 //!   speculative relaunch, failure injection, k-of-B partial
 //!   aggregation, and busy/wasted worker-second cost accounting
 //!   (flat-event-queue trial loop, multi-threaded by default,
-//!   deterministic per `(seed, threads)`).
+//!   deterministic per seed for any thread count).
 //! * [`LiveEvaluator`] — the real coordinator + worker threads with
 //!   injected stragglers (mock or PJRT compute backend).
 //!
@@ -214,11 +215,18 @@ impl ReplicationPolicy {
 // Analytic backend
 // ---------------------------------------------------------------------
 
-/// Exact closed forms (paper Theorems 2–4 / Eq. 4) — requires
-/// Exponential or Shifted-Exponential per-unit service, the size-scaled
-/// batch model, disjoint layouts, homogeneous workers, and upfront
-/// replication. Errors otherwise: the caller should fall back to a
-/// simulation backend.
+/// Closed forms (paper Theorems 2–4 / Eq. 4) — requires Exponential or
+/// Shifted-Exponential per-unit service, the size-scaled batch model,
+/// disjoint layouts, and upfront replication. Heterogeneous
+/// `worker_speeds` are supported for full completion:
+/// **exact** per-worker-rate order statistics under Exponential
+/// service, a **two-sided bound** under Shifted-Exponential
+/// ([`crate::analysis::hetero_completion_bounds`]) — the bounded result
+/// reports the interval midpoint as `mean` and encodes the half-width
+/// as `sem = half_width / 4`, so [`cross_check`]'s 4σ window spans the
+/// whole interval. Errors otherwise, naming the offending `Scenario`
+/// field and value: the caller should fall back to a simulation
+/// backend.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct AnalyticEvaluator;
 
@@ -230,20 +238,33 @@ impl Evaluator for AnalyticEvaluator {
     fn evaluate(&self, scn: &Scenario) -> anyhow::Result<CompletionStats> {
         anyhow::ensure!(
             !scn.layout.is_overlapping,
-            "analytic evaluator requires a disjoint layout"
-        );
-        anyhow::ensure!(
-            scn.worker_speeds.is_none(),
-            "analytic evaluator requires homogeneous workers"
+            "analytic evaluator requires a disjoint layout; Scenario::layout is an \
+             overlapping cyclic layout ({} units across {} windows)",
+            scn.layout.n_units,
+            scn.layout.n_batches()
         );
         anyhow::ensure!(
             scn.redundancy == Redundancy::Upfront,
-            "analytic evaluator models upfront replication only"
+            "analytic evaluator models upfront replication only; Scenario::redundancy = \
+             {:?} is unsupported (use DesEvaluator for speculative redundancy)",
+            scn.redundancy
         );
         anyhow::ensure!(
             scn.service.model == BatchModel::SizeScaled,
-            "closed forms hold for the size-scaled batch model only"
+            "closed forms hold for the size-scaled batch model only; \
+             Scenario::service.model = {}",
+            scn.service.model.name()
         );
+        let (mu, delta) = scn.service.spec.exp_family().ok_or_else(|| {
+            anyhow::anyhow!(
+                "closed forms cover Exponential/Shifted-Exponential service only; \
+                 Scenario::service.spec = {}",
+                scn.service.spec.name()
+            )
+        })?;
+        if let Some(speeds) = &scn.worker_speeds {
+            return self.evaluate_hetero(scn, speeds);
+        }
         if let Some(k) = scn.k_of_b {
             let b = scn.assignment.n_batches;
             if k < b {
@@ -253,11 +274,17 @@ impl Evaluator for AnalyticEvaluator {
                 // form here; simulation backends report them.
                 anyhow::ensure!(
                     scn.assignment.is_balanced(),
-                    "closed-form k-of-B needs a balanced assignment"
+                    "closed-form k-of-B needs a balanced assignment; \
+                     Scenario::k_of_b = Some({k}) with an unbalanced \
+                     Scenario::assignment (degrees {:?})",
+                    (0..b).map(|i| scn.assignment.replication(i)).collect::<Vec<_>>()
                 );
                 anyhow::ensure!(
                     scn.layout.n_units == scn.assignment.n_workers,
-                    "closed-form k-of-B uses the paper normalization U = N"
+                    "closed-form k-of-B uses the paper normalization U = N; \
+                     Scenario::layout.n_units = {} with {} workers",
+                    scn.layout.n_units,
+                    scn.assignment.n_workers
                 );
                 let st = crate::analysis::partial_completion_stats(
                     scn.assignment.n_workers as u64,
@@ -277,12 +304,6 @@ impl Evaluator for AnalyticEvaluator {
             // k = B waits for every batch: the full-completion closed
             // forms below apply unchanged.
         }
-        let (mu, delta) = scn.service.spec.exp_family().ok_or_else(|| {
-            anyhow::anyhow!(
-                "closed forms cover exp/sexp service only, got {}",
-                scn.service.spec.name()
-            )
-        })?;
         let b = scn.assignment.n_batches;
         let s = scn.layout.batch_units() as f64;
         let shift = s * delta;
@@ -328,7 +349,8 @@ impl Evaluator for AnalyticEvaluator {
             // max of independent non-identical exponentials.
             anyhow::ensure!(
                 b <= 20,
-                "inclusion–exclusion closed form limited to B <= 20 (got {b})"
+                "inclusion–exclusion closed form limited to B <= 20; unbalanced \
+                 Scenario::assignment has n_batches = {b}"
             );
             let rates: Vec<f64> = (0..b)
                 .map(|i| scn.assignment.replication(i) as f64 * mu / s)
@@ -347,6 +369,48 @@ impl Evaluator for AnalyticEvaluator {
             quantiles,
             cost: Some(CostStats { busy, wasted }),
             sem: 0.0,
+            samples: 0,
+        })
+    }
+}
+
+impl AnalyticEvaluator {
+    /// Heterogeneous-speed leg: exact for Exponential service, a
+    /// midpoint-plus-interval encoding of the Shifted-Exponential bound
+    /// (`sem = half_width / 4`, so a 4σ window spans the interval; the
+    /// conformance matrix reads the interval itself via
+    /// [`crate::analysis::hetero_completion_bounds`]). Partial
+    /// aggregation below `k = B` has no heterogeneous closed form.
+    fn evaluate_hetero(
+        &self,
+        scn: &Scenario,
+        speeds: &[f64],
+    ) -> anyhow::Result<CompletionStats> {
+        let b = scn.assignment.n_batches;
+        if let Some(k) = scn.k_of_b {
+            anyhow::ensure!(
+                k >= b,
+                "analytic evaluator cannot combine Scenario::worker_speeds \
+                 ({} factors in [{:.3}, {:.3}]) with partial aggregation \
+                 Scenario::k_of_b = Some({k}) < B = {b}; use the montecarlo or des \
+                 backend",
+                speeds.len(),
+                speeds.iter().cloned().fold(f64::INFINITY, f64::min),
+                speeds.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            );
+        }
+        let bounds = crate::analysis::hetero_completion_bounds(
+            &scn.assignment,
+            &scn.service.spec,
+            scn.layout.n_units as u64,
+            speeds,
+        )?;
+        Ok(CompletionStats {
+            mean: bounds.mid_mean(),
+            variance: bounds.lower.var,
+            quantiles: Vec::new(),
+            cost: None,
+            sem: bounds.half_width() / 4.0,
             samples: 0,
         })
     }
@@ -383,9 +447,10 @@ fn quantile_bisect(rates: &[f64], shift: f64, q: f64) -> f64 {
 /// Direct completion-time sampler: block-samples every worker's batch
 /// service time (vectorizable `fill_batch_times` kernel, zero-allocation
 /// [`montecarlo::TrialScratch`]) and reduces (per-batch min, global max /
-/// coverage). `Default` shards trials over **all available cores**;
-/// results are bit-deterministic for a fixed `(scenario, seed, threads)`
-/// triple regardless of thread scheduling.
+/// coverage). Trials always run through the fixed logical-shard plan,
+/// so results are bit-deterministic for a fixed `(scenario, seed)` pair
+/// **for any thread count** — `threads` (all cores under `Default`)
+/// only changes wall-clock time.
 #[derive(Debug, Clone, Copy)]
 pub struct MonteCarloEvaluator {
     /// Number of independent trials.
@@ -419,11 +484,7 @@ impl Evaluator for MonteCarloEvaluator {
             "monte-carlo evaluator models upfront replication only; use DesEvaluator \
              for speculative redundancy"
         );
-        let mut mc = if self.threads > 1 {
-            montecarlo::run_trials_parallel(scn, self.trials, scn.seed, self.threads)
-        } else {
-            montecarlo::run_trials(scn, self.trials, scn.seed)
-        };
+        let mut mc = montecarlo::run_trials_parallel(scn, self.trials, scn.seed, self.threads);
         // Quantiles sort the summary's own retained samples in place —
         // no per-call clone of the sample buffer.
         let quantiles = quantiles_from(&mut mc.samples);
@@ -446,10 +507,11 @@ impl Evaluator for MonteCarloEvaluator {
 /// away — replica cancellation, the scenario's redundancy mode
 /// (upfront or speculative), optional failure injection, k-of-B partial
 /// aggregation — and accounts busy/wasted worker-seconds, reported as
-/// [`CostStats`]. `Default` shards trials over **all available cores**
-/// (flat event queue + block-sampled launch waves per shard); results
-/// are bit-deterministic for a fixed `(scenario, seed, threads)` triple
-/// regardless of thread scheduling.
+/// [`CostStats`]. Trials always run through the fixed logical-shard
+/// plan (flat event queue + block-sampled launch waves per shard), so
+/// results are bit-deterministic for a fixed `(scenario, seed)` pair
+/// **for any thread count** — `threads` (all cores under `Default`)
+/// only changes wall-clock time.
 #[derive(Debug, Clone, Copy)]
 pub struct DesEvaluator {
     /// Number of simulated jobs.
@@ -507,9 +569,11 @@ impl Evaluator for DesEvaluator {
 
 /// The real System1: coordinator + worker threads executing compute
 /// jobs with injected straggler delays and first-replica-wins
-/// cancellation. Completion is measured in injected service units
-/// (wall time divided by `time_scale`), so the numbers are directly
-/// comparable to the other backends.
+/// cancellation. `Scenario::k_of_b` is consumed live: the round
+/// completes at the k-th finished batch and the coordinator cancels the
+/// rest. Completion is measured in injected service units (wall time
+/// divided by `time_scale`), so the numbers are directly comparable to
+/// the other backends.
 #[derive(Debug, Clone)]
 pub struct LiveEvaluator {
     /// Job rounds to run (each round is one sample).
@@ -552,12 +616,8 @@ impl Evaluator for LiveEvaluator {
         anyhow::ensure!(self.rounds >= 1, "need at least one round");
         anyhow::ensure!(
             scn.redundancy == Redundancy::Upfront,
-            "live evaluator models upfront replication only"
-        );
-        anyhow::ensure!(
-            scn.k_of_b.is_none(),
-            "live evaluator does not model k-of-B partial aggregation; \
-             use the des or montecarlo backend"
+            "live evaluator models upfront replication only; Scenario::redundancy = {:?}",
+            scn.redundancy
         );
         let mut cfg = SystemConfig {
             time_scale: self.time_scale,
@@ -952,7 +1012,6 @@ mod tests {
         // Partial aggregation leaves the unneeded batches' replicas as
         // pure redundancy cost, which only the engine accounts.
         assert!(des.cost.unwrap().wasted > 0.0);
-        assert!(LiveEvaluator::default().evaluate(&scn).is_err());
         // k = B routes through the ordinary closed form (quantiles and
         // cost included) and matches the unrestricted scenario exactly.
         let full = paper_scn(24, 6, spec.clone(), 9);
@@ -961,6 +1020,94 @@ mod tests {
         let b = AnalyticEvaluator.evaluate(&kfull).unwrap();
         assert_eq!(a.mean.to_bits(), b.mean.to_bits());
         assert!(b.cost.is_some() && !b.quantiles.is_empty());
+    }
+
+    #[test]
+    fn live_backend_consumes_k_of_b() {
+        // The live coordinator completes a round at the k-th finished
+        // batch; its injected completion must track the k-of-B closed
+        // form, and waiting for fewer batches must be measurably faster.
+        let spec = ServiceSpec::shifted_exp(2.0, 0.1);
+        let live = LiveEvaluator {
+            rounds: 30,
+            time_scale: 0.01,
+            n_samples: 32,
+            ..LiveEvaluator::default()
+        };
+        let scn_k = paper_scn(8, 4, spec.clone(), 31).with_k_of_b(2).unwrap();
+        let st_k = live.evaluate(&scn_k).unwrap();
+        let cf_k = analysis::partial_completion_stats(8, 4, 2, &spec).unwrap();
+        assert!(
+            (st_k.mean - cf_k.mean).abs() < (5.0 * st_k.sem).max(0.2 * cf_k.mean),
+            "live k-of-B {} vs closed form {}",
+            st_k.mean,
+            cf_k.mean
+        );
+        let st_full = live.evaluate(&paper_scn(8, 4, spec, 31)).unwrap();
+        assert!(
+            st_k.mean < st_full.mean,
+            "k=2 of 4 must beat full completion: {} !< {}",
+            st_k.mean,
+            st_full.mean
+        );
+    }
+
+    #[test]
+    fn analytic_accepts_worker_speeds() {
+        // Exponential: exact per-worker-rate order statistics, zero sem.
+        let n = 12usize;
+        let speeds: Vec<f64> = (0..n).map(|w| 0.7 + 0.1 * w as f64).collect();
+        let exp_scn = paper_scn(n, 3, ServiceSpec::exp(1.1), 3)
+            .with_speeds(speeds.clone())
+            .unwrap();
+        let st = AnalyticEvaluator.evaluate(&exp_scn).unwrap();
+        let bounds = analysis::hetero_completion_bounds(
+            &exp_scn.assignment,
+            &exp_scn.service.spec,
+            n as u64,
+            &speeds,
+        )
+        .unwrap();
+        assert!(bounds.exact);
+        assert_eq!(st.mean.to_bits(), bounds.mid_mean().to_bits());
+        assert_eq!(st.sem, 0.0);
+        // Shifted-Exponential: midpoint + sem-encoded interval, and the
+        // stock cross_check accepts the MC backend inside the bound.
+        let sexp_scn = paper_scn(n, 3, ServiceSpec::shifted_exp(1.0, 0.4), 3)
+            .with_speeds(speeds)
+            .unwrap();
+        let st = AnalyticEvaluator.evaluate(&sexp_scn).unwrap();
+        assert!(st.sem > 0.0, "bounded result must carry its half-width");
+        let mc = MonteCarloEvaluator { trials: 80_000, threads: 2 };
+        cross_check(&AnalyticEvaluator, &mc, &sexp_scn).unwrap();
+    }
+
+    #[test]
+    fn analytic_rejections_name_the_offending_field() {
+        let err = |scn: &Scenario| {
+            AnalyticEvaluator.evaluate(scn).unwrap_err().to_string()
+        };
+        // Unsupported service family names the spec.
+        let msg = err(&paper_scn(8, 2, ServiceSpec::pareto(0.5, 2.2), 1));
+        assert!(msg.contains("Scenario::service.spec"), "{msg}");
+        assert!(msg.contains("pareto:0.5,2.2"), "{msg}");
+        // Unsupported redundancy names the mode and its parameter.
+        let spec_scn = paper_scn(8, 2, ServiceSpec::exp(1.0), 1)
+            .with_redundancy(Redundancy::Speculative { deadline_factor: 1.5 });
+        let msg = err(&spec_scn);
+        assert!(msg.contains("Scenario::redundancy"), "{msg}");
+        assert!(msg.contains("Speculative"), "{msg}");
+        assert!(msg.contains("1.5"), "{msg}");
+        // worker_speeds × partial aggregation names both fields.
+        let hetero_partial = paper_scn(8, 4, ServiceSpec::exp(1.0), 1)
+            .with_speeds(vec![1.25; 8])
+            .unwrap()
+            .with_k_of_b(2)
+            .unwrap();
+        let msg = err(&hetero_partial);
+        assert!(msg.contains("Scenario::worker_speeds"), "{msg}");
+        assert!(msg.contains("Scenario::k_of_b = Some(2)"), "{msg}");
+        assert!(msg.contains("1.250"), "{msg}");
     }
 
     #[test]

@@ -107,7 +107,53 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     }
     ctx.emit("ext_partial_aggregation", &t10)?;
 
-    Ok(vec![t9, t10])
+    // --- E11: heterogeneous worker speeds (closed-form leg of the
+    // conformance matrix) — per-worker-rate order statistics, exact for
+    // Exp, a two-sided bound for SExp, against the same scenarios
+    // simulated ---
+    let mut t11 = Table::new(
+        "E11 — heterogeneous speeds: analytic bounds vs simulation (N=24, B=4)",
+        &["spread", "service", "E[T] lo", "E[T] hi", "E[T] sim", "sim inside"],
+    );
+    for &spread in &[1.0f64, 1.5, 3.0] {
+        // Linear ramp with unit geometric midpoint: c_w ∈ [1/√spread, √spread].
+        let (lo_c, hi_c) = (1.0 / spread.sqrt(), spread.sqrt());
+        let speeds: Vec<f64> = (0..N)
+            .map(|w| lo_c + (hi_c - lo_c) * w as f64 / (N - 1) as f64)
+            .collect();
+        for spec in [ServiceSpec::exp(1.0), ServiceSpec::shifted_exp(1.0, 0.3)] {
+            let seed = ctx.seed ^ 0xE11 ^ (spread.to_bits() >> 32);
+            let scn = Scenario::from_policy(
+                ReplicationPolicy::BalancedDisjoint,
+                N,
+                4,
+                BatchService::paper(spec.clone()),
+                seed,
+            )?
+            .with_speeds(speeds.clone())?;
+            let bounds = crate::analysis::hetero_completion_bounds(
+                &scn.assignment,
+                &spec,
+                N as u64,
+                &speeds,
+            )?;
+            let sim = mc.evaluate(&scn)?;
+            let slack = 4.0 * sim.sem;
+            let inside =
+                sim.mean >= bounds.lower.mean - slack && sim.mean <= bounds.upper.mean + slack;
+            t11.row(vec![
+                fmt_f(spread, 2),
+                spec.name(),
+                fmt_f(bounds.lower.mean, 4),
+                fmt_f(bounds.upper.mean, 4),
+                fmt_f(sim.mean, 4),
+                inside.to_string(),
+            ]);
+        }
+    }
+    ctx.emit("ext_hetero_speeds", &t11)?;
+
+    Ok(vec![t9, t10, t11])
 }
 
 #[cfg(test)]
@@ -139,6 +185,20 @@ mod tests {
             assert!((ana - sim).abs() / ana < 0.05, "{r:?}");
             let speedup: f64 = r[5].parse().unwrap();
             assert!(speedup >= 0.999, "{r:?}");
+        }
+
+        // E11: every simulated mean sits inside its analytic bound, and
+        // the bound is a point (lo == hi) exactly when the service is
+        // Exponential or the cluster is homogeneous (spread = 1).
+        for r in &tables[2].rows {
+            assert_eq!(r[5], "true", "simulation escaped the bound: {r:?}");
+            let spread: f64 = r[0].parse().unwrap();
+            let (lo, hi): (f64, f64) = (r[2].parse().unwrap(), r[3].parse().unwrap());
+            if spread == 1.0 || r[1].starts_with("exp:") {
+                assert!((hi - lo).abs() < 1e-9, "bound should collapse: {r:?}");
+            } else {
+                assert!(hi > lo, "SExp spread must widen the bound: {r:?}");
+            }
         }
     }
 }

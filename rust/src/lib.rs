@@ -21,7 +21,8 @@
 //!   Theorems 2–4, Eq. 4; Exponential/Shifted-Exponential only);
 //! * [`evaluator::MonteCarloEvaluator`] — the direct completion-time
 //!   sampler (block-sampled RNG kernel, zero-allocation trials,
-//!   auto-threaded by default, bit-deterministic per `(seed, threads)`;
+//!   auto-threaded by default, bit-deterministic per seed for any
+//!   thread count;
 //!   see `PERF.md` and the `bench-mc` harness for measured trials/s);
 //! * [`evaluator::DesEvaluator`] — the event engine with cancellation,
 //!   speculative relaunch, failure injection, and cost accounting;
@@ -55,6 +56,13 @@
 //! JSON, TOML-subset config, property-testing ([`testkit`]) and
 //! micro-benchmarking ([`benchkit`]).
 //!
+//! The [`conformance`] subsystem sweeps randomly generated scenarios
+//! (policy × redundancy × k-of-B × worker speeds × failure injection ×
+//! service spec) through every applicable backend pair with
+//! stderr-scaled z-bound tolerances — `batchrep conformance --fast` is
+//! the CI gate; failures replay deterministically from their printed
+//! seed.
+//!
 //! ## Quickstart
 //!
 //! ```
@@ -85,6 +93,7 @@ pub mod assignment;
 pub mod batching;
 pub mod benchkit;
 pub mod config;
+pub mod conformance;
 pub mod coordinator;
 pub mod des;
 pub mod dist;

@@ -9,6 +9,8 @@
 //!               ablations|live|all)
 //!   train       run the live distributed-SGD System1 (PJRT backend)
 //!   mapsum      run one live distributed map-sum evaluation
+//!   conformance sweep generated scenarios through every backend pair
+//!               (z-bound tolerances, deterministic replay seeds)
 //!   bench-mc    Monte-Carlo throughput harness → BENCH_mc.json
 //!   bench-des   event-engine throughput harness → BENCH_des.json
 //!
@@ -47,6 +49,8 @@ USAGE:
   batchrep mapsum     [--config f] [--mock] [...]
   batchrep trace      [--n 100000] [--seed 42] [--out trace.csv]
                       [--p-enter 0.0026] [--p-exit 0.05] [--slowdown 8]
+  batchrep conformance [--fast] [--scenarios N] [--mc-trials N] [--des-trials N]
+                      [--live-rounds N] [--threads K] [--seed S] [--no-live]
   batchrep bench-mc   [--trials N] [--threads K] [--out BENCH_mc.json] [--fast]
   batchrep bench-des  [--trials N] [--threads K] [--out BENCH_des.json] [--fast]
 
@@ -107,6 +111,7 @@ fn run() -> anyhow::Result<()> {
         Some("train") => cmd_train(&args),
         Some("mapsum") => cmd_mapsum(&args),
         Some("trace") => cmd_trace(&args),
+        Some("conformance") => cmd_conformance(&args),
         Some("bench-mc") => cmd_bench_mc(&args),
         Some("bench-des") => cmd_bench_des(&args),
         Some("help") | None => {
@@ -391,6 +396,60 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     println!(
         "wrote {n} per-unit service times to {out} (mean {mean:.4}, max {max:.4}); \
          replay with service trace files via batchrep::trace::load_trace"
+    );
+    Ok(())
+}
+
+/// The conformance gate: sweep deterministic anchors plus generated
+/// scenarios through every applicable backend pair with stderr-scaled
+/// z-bound tolerances. Exits nonzero on any disagreement; the failure
+/// output carries the shrunk minimal case and its `BATCHREP_PROP_SEED`
+/// replay seed.
+fn cmd_conformance(args: &Args) -> anyhow::Result<()> {
+    let fast = args.flag("fast") || std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let mut opts = if fast {
+        batchrep::conformance::MatrixOptions::fast()
+    } else {
+        batchrep::conformance::MatrixOptions::full()
+    };
+    opts.scenarios = args.get_or::<u64>("scenarios", opts.scenarios)?;
+    opts.mc_trials = args.get_or::<u64>("mc-trials", opts.mc_trials)?;
+    opts.des_trials = args.get_or::<u64>("des-trials", opts.des_trials)?;
+    opts.live_rounds = args.get_or::<u64>("live-rounds", opts.live_rounds)?;
+    opts.threads = args.get_or::<usize>("threads", opts.threads)?;
+    opts.seed = args.get::<u64>("seed")?;
+    if args.flag("no-live") {
+        opts.include_live = false;
+    }
+    args.finish()?;
+    println!(
+        "conformance matrix: {} generated scenarios + anchors, mc {} / des {} trials, \
+         z = {}, live {}",
+        opts.scenarios,
+        opts.mc_trials,
+        opts.des_trials,
+        opts.z,
+        if opts.include_live { "on" } else { "off" }
+    );
+    let report = batchrep::conformance::run_matrix(&opts)?;
+    let mut t = Table::new(
+        "Conformance matrix — backend-pair agreement over generated scenarios",
+        &["backend pair", "cells"],
+    );
+    t.row(vec!["analytic <-> montecarlo".into(), report.analytic_mc.to_string()]);
+    t.row(vec!["analytic <-> des".into(), report.analytic_des.to_string()]);
+    t.row(vec!["montecarlo <-> des".into(), report.mc_des.to_string()]);
+    t.row(vec!["des <-> des-reference".into(), report.des_reference.to_string()]);
+    t.row(vec!["des <-> live".into(), report.des_live.to_string()]);
+    t.print();
+    println!(
+        "conformance: {} scenarios, {} cells agree (worst gap/tol {:.3}); \
+         heterogeneous-speed analytic cells: {}, live k-of-B cells: {}",
+        report.scenarios,
+        report.cells,
+        report.worst_gap_over_tol,
+        report.hetero_analytic_cells,
+        report.live_k_of_b_cells
     );
     Ok(())
 }

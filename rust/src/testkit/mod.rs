@@ -49,11 +49,16 @@ impl Gen {
         g
     }
 
-    fn record(&self, lo: i64, sampled: i64) -> i64 {
+    fn record(&self, lo: i64, hi: i64, sampled: i64) -> i64 {
         let idx = *self.cursor.borrow();
         *self.cursor.borrow_mut() += 1;
+        // Clamp overrides to the *live* bounds of this replay: earlier
+        // shrunk draws can tighten later draws' ranges (e.g. a smaller
+        // N shrinks the divisor list a later pick indexes), and an
+        // unclamped stale override would panic inside generation and
+        // corrupt the minimal-case report.
         let v = match self.overrides.get(idx).copied().flatten() {
-            Some(o) => o.max(lo),
+            Some(o) => o.clamp(lo, hi),
             None => sampled,
         };
         self.draws.borrow_mut().push((v, lo));
@@ -63,7 +68,7 @@ impl Gen {
     /// Integer in inclusive `[lo, hi]`, shrinkable toward `lo`.
     pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
         let sampled = self.rng.int_in(lo, hi);
-        self.record(lo, sampled)
+        self.record(lo, hi, sampled)
     }
 
     /// `usize` in inclusive `[lo, hi]`, shrinkable toward `lo`.
@@ -104,15 +109,27 @@ pub fn check<F>(name: &str, cases: u64, prop: F)
 where
     F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
 {
+    check_with(name, cases, None, prop)
+}
+
+/// [`check`] with an explicit base seed (the conformance harness plumbs
+/// its `--seed` through here). Precedence: `base_seed` argument >
+/// `BATCHREP_PROP_SEED` env override > the name hash, so a failure's
+/// printed seed reproduces the identical case sequence either way.
+pub fn check_with<F>(name: &str, cases: u64, base_seed: Option<u64>, prop: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
     // Deterministic per-property seed: hash the name.
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in name.bytes() {
         h = (h ^ b as u64).wrapping_mul(0x1000_0000_01b3);
     }
     // Allow override for reproducing failures.
-    let base = std::env::var("BATCHREP_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
+    let base = base_seed
+        .or_else(|| {
+            std::env::var("BATCHREP_PROP_SEED").ok().and_then(|s| s.parse().ok())
+        })
         .unwrap_or(h);
 
     for case in 0..cases {
@@ -131,7 +148,9 @@ where
     }
 }
 
-fn payload_msg(payload: &dyn std::any::Any) -> String {
+/// Best-effort text of a caught panic payload (shared with the
+/// conformance harness's matrix runner).
+pub(crate) fn payload_msg(payload: &dyn std::any::Any) -> String {
     if let Some(s) = payload.downcast_ref::<String>() {
         s.clone()
     } else if let Some(s) = payload.downcast_ref::<&str>() {
@@ -245,6 +264,102 @@ mod tests {
             }
             seed += 1;
         }
+    }
+
+    #[test]
+    fn shrink_clamps_dependent_draw_overrides() {
+        // The second draw's range depends on the first: when the
+        // shrinker lowers n, the stale index override for the pick must
+        // clamp into the new range instead of panicking inside
+        // generation and hijacking the minimal-case report.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            check("dependent-draws", 300, |g| {
+                let n = g.usize_in(1, 50);
+                let xs: Vec<usize> = (0..n).collect();
+                let x = *g.pick(&xs);
+                assert!(n < 20, "planted: n={n} x={x}");
+            })
+        }));
+        let msg = payload_msg(&*r.unwrap_err());
+        assert!(msg.contains("planted: n=20"), "must shrink to the boundary: {msg}");
+        assert!(!msg.contains("index out of bounds"), "{msg}");
+    }
+
+    #[test]
+    fn explicit_base_seed_reproduces_the_reported_failure() {
+        // check_with(seed) must replay the exact case sequence: the
+        // failing seed printed by one run, fed back as the base seed,
+        // reproduces the same minimal case in case 0 position.
+        let prop = |g: &mut Gen| {
+            let n = g.i64_in(0, 1000);
+            assert!(n < 700, "too big: {n}");
+        };
+        let first = catch_unwind(AssertUnwindSafe(|| check("seeded-repro", 300, prop)));
+        let msg = payload_msg(&*first.unwrap_err());
+        let seed: u64 = msg
+            .split("seed=")
+            .nth(1)
+            .and_then(|s| s.split(|c: char| !c.is_ascii_digit()).next())
+            .and_then(|s| s.parse().ok())
+            .expect("failure message must carry a replay seed");
+        let again = catch_unwind(AssertUnwindSafe(|| {
+            check_with("seeded-repro", 1, Some(seed), prop)
+        }));
+        let msg2 = payload_msg(&*again.unwrap_err());
+        assert!(msg2.contains("minimal draws: [700]"), "{msg2}");
+        assert!(msg2.contains("case=0"), "{msg2}");
+    }
+
+    #[test]
+    fn shrinker_reports_the_smallest_planted_n() {
+        // A planted invariant over a scenario-shaped draw: "N < 17".
+        // Whatever N the random case trips on, the shrinker must walk it
+        // down to the exact boundary and report the minimal failing N —
+        // the guarantee the conformance generator's failures rely on.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            check("planted-min-n", 400, |g| {
+                let n = g.usize_in(2, 64);
+                // Unrelated draws must not confuse the per-draw shrink.
+                let _b = g.usize_in(1, n);
+                let _seed = g.u64_in(0, 1 << 40);
+                assert!(n < 17, "planted invariant violated at N={n}");
+            })
+        }));
+        let msg = payload_msg(&*r.unwrap_err());
+        assert!(
+            msg.contains("planted invariant violated at N=17"),
+            "must re-report at the minimal case: {msg}"
+        );
+        assert!(msg.contains("reproduce with BATCHREP_PROP_SEED="), "{msg}");
+    }
+
+    #[test]
+    fn shrinker_minimizes_interacting_draws_to_the_boundary() {
+        // Two interacting draws, failure region a + b >= 100: greedy
+        // per-draw binary search lands exactly on the boundary sum.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            check("planted-sum", 200, |g| {
+                let a = g.i64_in(0, 100);
+                let b = g.i64_in(0, 100);
+                assert!(a + b < 100, "sum {}", a + b);
+            })
+        }));
+        let msg = payload_msg(&*r.unwrap_err());
+        // The minimal draws line holds the two shrunk values; their sum
+        // is exactly the boundary.
+        let draws: Vec<i64> = msg
+            .split("minimal draws: [")
+            .nth(1)
+            .and_then(|s| s.split(']').next())
+            .map(|s| {
+                s.split(',')
+                    .filter_map(|t| t.trim().parse().ok())
+                    .collect()
+            })
+            .unwrap_or_default();
+        assert_eq!(draws.len(), 2, "{msg}");
+        assert_eq!(draws[0] + draws[1], 100, "not minimal: {msg}");
+        assert!(msg.contains("sum 100"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,114 @@
+//! Integration tests of the conformance subsystem: the thread-count
+//! bit-determinism property of the sharded backends, and a small
+//! end-to-end matrix run including the live k-of-B cells the
+//! acceptance criteria name.
+
+use batchrep::conformance::{self, MatrixOptions};
+use batchrep::des::engine::Redundancy;
+use batchrep::evaluator::{DesEvaluator, Evaluator, MonteCarloEvaluator};
+use batchrep::testkit;
+
+#[test]
+fn prop_mc_and_des_are_bit_deterministic_across_thread_counts() {
+    // The satellite property: for a fixed seed, `MonteCarloEvaluator`
+    // and `DesEvaluator` produce *identical* CompletionStats across
+    // threads ∈ {1, 2, 4, 8} on generated scenarios — the logical-shard
+    // plan makes the thread count a pure wall-clock knob.
+    testkit::check("conformance-thread-determinism", 25, |g| {
+        let case = conformance::gen_case(g);
+        let scn = &case.scenario;
+        let assert_same = |a: &batchrep::evaluator::CompletionStats,
+                           b: &batchrep::evaluator::CompletionStats,
+                           what: &str| {
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "{what} mean");
+            assert_eq!(a.variance.to_bits(), b.variance.to_bits(), "{what} variance");
+            assert_eq!(a.sem.to_bits(), b.sem.to_bits(), "{what} sem");
+            assert_eq!(a.quantiles, b.quantiles, "{what} quantiles");
+            assert_eq!(a.samples, b.samples, "{what} samples");
+            match (&a.cost, &b.cost) {
+                (None, None) => {}
+                (Some(ca), Some(cb)) => {
+                    assert_eq!(ca.busy.to_bits(), cb.busy.to_bits(), "{what} busy");
+                    assert_eq!(ca.wasted.to_bits(), cb.wasted.to_bits(), "{what} wasted");
+                }
+                _ => panic!("{what}: cost presence differs across thread counts"),
+            }
+        };
+        if scn.redundancy == Redundancy::Upfront {
+            let base = MonteCarloEvaluator { trials: 4_000, threads: 1 }
+                .evaluate(scn)
+                .unwrap();
+            for threads in [2usize, 4, 8] {
+                let run = MonteCarloEvaluator { trials: 4_000, threads }
+                    .evaluate(scn)
+                    .unwrap();
+                assert_same(&base, &run, &format!("mc threads={threads}"));
+            }
+        }
+        let des = |threads: usize| {
+            DesEvaluator {
+                trials: 2_000,
+                threads,
+                fail_prob: case.fail_prob,
+                ..DesEvaluator::default()
+            }
+            .evaluate(scn)
+            .unwrap()
+        };
+        let base = des(1);
+        for threads in [2usize, 4, 8] {
+            assert_same(&base, &des(threads), &format!("des threads={threads}"));
+        }
+    });
+}
+
+#[test]
+fn matrix_with_live_cells_covers_the_required_corners() {
+    // End-to-end: anchors + a few generated scenarios, live cells on.
+    // The report must show at least one heterogeneous-speed analytic
+    // cell and at least one live k-of-B DES↔Live cell — the two corners
+    // the acceptance criteria name explicitly.
+    let opts = MatrixOptions {
+        scenarios: 5,
+        mc_trials: 8_000,
+        des_trials: 4_000,
+        live_rounds: 40,
+        threads: 2,
+        include_live: true,
+        seed: Some(11),
+        z: 5.5,
+        rel_floor: 0.01,
+        live_floor: 0.15,
+    };
+    let report = conformance::run_matrix(&opts).unwrap();
+    assert!(report.scenarios >= 16, "{report:?}");
+    assert!(report.hetero_analytic_cells >= 2, "{report:?}");
+    assert!(report.des_live >= 3, "live anchors must run: {report:?}");
+    assert!(report.live_k_of_b_cells >= 1, "{report:?}");
+    assert!(report.worst_gap_over_tol <= 1.0, "{report:?}");
+}
+
+#[test]
+fn matrix_failure_reports_a_replay_seed() {
+    // Sabotage: an impossibly tight tolerance must make some cell fail,
+    // and the error must carry the deterministic replay instructions
+    // (anchor context or a BATCHREP_PROP_SEED line).
+    let opts = MatrixOptions {
+        scenarios: 3,
+        mc_trials: 2_000,
+        des_trials: 1_000,
+        live_rounds: 1,
+        threads: 2,
+        include_live: false,
+        seed: Some(3),
+        z: 0.0,
+        rel_floor: 0.0,
+        live_floor: 0.0,
+    };
+    let err = conformance::run_matrix(&opts).unwrap_err().to_string();
+    assert!(err.contains("conformance"), "{err}");
+    assert!(
+        err.contains("scenario:"),
+        "failure must describe the offending scenario: {err}"
+    );
+}

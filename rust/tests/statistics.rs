@@ -53,6 +53,36 @@ fn three_way_agreement_matrix() {
 }
 
 #[test]
+fn mc_k_of_b_matches_partial_closed_form_under_z_test() {
+    // Satellite acceptance: the MC k-of-B sampler vs
+    // `analysis::partial_completion_stats` on Shifted-Exponential with
+    // a tolerance that is *derived from the trial count* (a z-bound on
+    // the estimator's standard error — no hard-coded epsilon), at the
+    // (k, B) corners including k = 1 and k = B.
+    let z = 4.5;
+    let spec = ServiceSpec::shifted_exp(1.0, 0.3);
+    for (n, b) in [(12u64, 4u64), (24, 6)] {
+        for k in [1u64, b.div_ceil(2), b] {
+            let s = scn(n as usize, b as usize, &spec)
+                .with_k_of_b(k as usize)
+                .unwrap();
+            let mc = montecarlo::run_trials(&s, TRIALS, 77 + k);
+            let cf = analysis::partial_completion_stats(n, b, k, &spec).unwrap();
+            // SE of the mean straight from the sampled variance and the
+            // trial count: tol shrinks as 1/√TRIALS.
+            let sem = (mc.variance() / TRIALS as f64).sqrt();
+            assert!(
+                (mc.mean() - cf.mean).abs() <= z * sem,
+                "N={n} B={b} k={k}: mc {} vs cf {} exceeds {z}σ = {}",
+                mc.mean(),
+                cf.mean,
+                z * sem
+            );
+        }
+    }
+}
+
+#[test]
 fn empirical_cdf_matches_closed_form() {
     let spec = ServiceSpec::shifted_exp(1.5, 0.4);
     let (n, b) = (12u64, 3u64);
