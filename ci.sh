@@ -34,6 +34,18 @@ echo "== conformance matrix (fast mode) =="
 # the shrunk minimal case and its BATCHREP_PROP_SEED replay seed.
 cargo run --release -- conformance --fast
 
+echo "== study smoke (declarative sweep planner) =="
+# Compiles the smoke preset into a deduplicated plan, runs it on the
+# shared pool at --fast budgets, and schema-validates the STUDY artifact
+# it writes (the subcommand re-reads the file and fails on a malformed
+# schema). Same no-clobber rule as the bench JSONs: a full-budget
+# artifact at the repo root is never overwritten by smoke numbers.
+if [ -f ../STUDY_smoke.json ]; then
+  cargo run --release -- study smoke --fast --quiet --out target/STUDY_smoke.json
+else
+  cargo run --release -- study smoke --fast --quiet --out ../STUDY_smoke.json
+fi
+
 echo "== bench smoke (bench_fig2, fast mode) =="
 BATCHREP_BENCH_FAST=1 cargo bench --bench bench_fig2
 

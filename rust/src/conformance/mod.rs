@@ -36,8 +36,14 @@
 //! `BATCHREP_PROP_SEED` replay seed that reproduces it deterministically
 //! (backend results are bit-reproducible per seed for *any* thread
 //! count — the logical-shard plan guarantees it). Run it as
-//! `batchrep conformance [--fast]`; `ci.sh` runs the fast mode as a
-//! merge gate.
+//! `batchrep conformance [--fast|--long]`; `ci.sh` runs the fast mode
+//! as a merge gate, and `--long` is the off-by-default soak sweep
+//! ([`MatrixOptions::long`]) for releases and backend rewrites.
+//!
+//! The deterministic anchor corners are **enumerated through the study
+//! planner** ([`crate::study::StudySpec`] grids compiled to scenario
+//! lists), so the matrix and the planner share one grid vocabulary —
+//! axes, canonicalization, and derived seeds.
 
 use crate::analysis;
 use crate::des::engine::{simulate_many_reference, EngineConfig, Redundancy};
@@ -105,6 +111,23 @@ impl MatrixOptions {
             mc_trials: 120_000,
             des_trials: 50_000,
             live_rounds: 90,
+            ..Self::fast()
+        }
+    }
+
+    /// The soak sweep (`batchrep conformance --long`, off by default):
+    /// a much larger scenario count at full-precision trial budgets.
+    /// Expect minutes to hours of wall clock — run it before releases
+    /// or after backend rewrites, not in CI. Failures replay exactly
+    /// like the other modes: rerun `batchrep conformance --long` with
+    /// the printed `BATCHREP_PROP_SEED` environment variable (or
+    /// `--seed`) and the same trial counts.
+    pub fn long() -> Self {
+        Self {
+            scenarios: 2_000,
+            mc_trials: 240_000,
+            des_trials: 100_000,
+            live_rounds: 120,
             ..Self::fast()
         }
     }
@@ -462,89 +485,140 @@ fn check_case(
 }
 
 /// Deterministic anchor cases: the corners the acceptance criteria name
-/// (heterogeneous-speed analytic cells, live k-of-B, both k-of-B
-/// extremes, speculative and failure-injected engine pairs, an
-/// overlapping layout, a heavy-tail spec). They run before the random
-/// sweep on every invocation, so the required coverage never depends on
-/// the random draw.
+/// (heterogeneous-speed analytic cells, live k-of-B, the k = 1 extreme,
+/// speculative and failure-injected engine pairs, an overlapping
+/// layout, a heavy-tail spec). They run before the random sweep on
+/// every invocation, so the required coverage never depends on the
+/// random draw.
+///
+/// The anchors are **enumerated through the study planner**: each
+/// corner block is a small [`StudySpec`] grid whose compiled
+/// `ExecutionPlan::scenarios` supply the cases, so the conformance
+/// matrix and the study layer share one grid vocabulary (axes,
+/// canonicalization, derived seeds). Only failure injection stays a
+/// per-case knob — it is an engine parameter, not a scenario field.
+/// (The old k = B anchor is gone by design: on disjoint layouts the
+/// planner canonicalizes `k = B` onto the full-completion cell, and
+/// that equivalence is pinned by the evaluator unit tests.)
 fn anchor_cases() -> Vec<GeneratedCase> {
+    use crate::study::{BatchAxis, KTarget, RedundancyAxis, SpeedAxis, StudySpec};
     let paper =
         |mu: f64, delta: f64| BatchService::paper(ServiceSpec::shifted_exp(mu, delta));
-    let balanced = |n: usize, b: usize, svc: BatchService, seed: u64| {
-        Scenario::from_policy(ReplicationPolicy::BalancedDisjoint, n, b, svc, seed)
-            .expect("anchor scenarios are valid by construction")
+    let grid = |spec: StudySpec| -> Vec<Scenario> {
+        spec.compile().expect("anchor grids are valid by construction").scenarios
     };
-    let case = |scenario: Scenario, fail_prob: f64, live: bool| GeneratedCase {
-        scenario,
-        fail_prob,
-        live,
+    let mut cases: Vec<GeneratedCase> = Vec::new();
+    let mut push = |scenarios: Vec<Scenario>, fail_prob: f64, live: bool| {
+        for scenario in scenarios {
+            cases.push(GeneratedCase { scenario, fail_prob, live });
+        }
     };
-    let ramp = |n: usize| (0..n).map(|w| 0.6 + 1.2 * w as f64 / n as f64).collect::<Vec<_>>();
-    vec![
-        // Heterogeneous speeds, Exponential: exact analytic cells.
-        case(
-            balanced(12, 4, BatchService::paper(ServiceSpec::exp(1.3)), 9001)
-                .with_speeds(ramp(12))
-                .expect("12 positive speeds"),
-            0.0,
-            false,
-        ),
-        // Heterogeneous speeds, Shifted-Exponential: bounded analytic cells.
-        case(
-            balanced(8, 2, paper(1.0, 0.5), 9002).with_speeds(ramp(8)).expect("8 speeds"),
-            0.0,
-            false,
-        ),
-        // Live k-of-B: round completes at the k-th finished batch.
-        case(
-            balanced(6, 3, paper(2.0, 0.1), 9003).with_k_of_b(2).expect("k=2 of 3"),
-            0.0,
-            true,
-        ),
-        // Live plain and live heterogeneous.
-        case(balanced(4, 2, paper(2.0, 0.1), 9004), 0.0, true),
-        case(
-            balanced(6, 2, paper(2.0, 0.05), 9005).with_speeds(ramp(6)).expect("6 speeds"),
-            0.0,
-            true,
-        ),
-        // Speculative redundancy and failure injection: engine-pair cells.
-        case(
-            balanced(12, 3, paper(1.0, 0.2), 9006)
-                .with_redundancy(Redundancy::Speculative { deadline_factor: 1.5 }),
-            0.0,
-            false,
-        ),
-        case(balanced(12, 3, paper(1.0, 0.2), 9007), 0.3, false),
-        // k-of-B extremes: k = 1 and k = B.
-        case(
-            balanced(12, 4, BatchService::paper(ServiceSpec::exp(1.0)), 9008)
-                .with_k_of_b(1)
-                .expect("k=1"),
-            0.0,
-            false,
-        ),
-        case(balanced(12, 4, paper(1.0, 0.3), 9009).with_k_of_b(4).expect("k=B"), 0.0, false),
-        // Overlapping layout (MC↔DES + engine pair only).
-        case(
-            Scenario::from_policy(
-                ReplicationPolicy::OverlappingCyclic,
-                8,
-                4,
-                paper(1.0, 0.2),
-                9010,
-            )
-            .expect("8 % 4 == 0"),
-            0.0,
-            false,
-        ),
-        // Heavy-tail spec outside the closed forms' scope.
-        case(
-            balanced(8, 4, BatchService::paper(ServiceSpec::pareto(0.8, 3.5)), 9011),
-            0.0,
-            false,
-        ),
-    ]
+
+    // Heterogeneous-speed analytic corners: exact Exp cells and bounded
+    // SExp cells across two cluster shapes (8 scenarios).
+    push(
+        grid(StudySpec {
+            n_workers: vec![12, 8],
+            batches: BatchAxis::Explicit(vec![2, 4]),
+            services: vec![BatchService::paper(ServiceSpec::exp(1.3)), paper(1.0, 0.5)],
+            speeds: vec![SpeedAxis::Ramp { lo: 0.6, hi: 1.8 }],
+            seed: 9001,
+            ..StudySpec::base("conformance-anchor-hetero")
+        }),
+        0.0,
+        false,
+    );
+    // Live corners: k-of-B (round completes at the k-th finished batch)
+    // and plain full completion on the same small cluster.
+    push(
+        grid(StudySpec {
+            n_workers: vec![6],
+            batches: BatchAxis::Explicit(vec![3]),
+            services: vec![paper(2.0, 0.1)],
+            k_targets: vec![KTarget::Exact(2), KTarget::Full],
+            seed: 9002,
+            ..StudySpec::base("conformance-anchor-live")
+        }),
+        0.0,
+        true,
+    );
+    // Live heterogeneous.
+    push(
+        grid(StudySpec {
+            n_workers: vec![6],
+            batches: BatchAxis::Explicit(vec![2]),
+            services: vec![paper(2.0, 0.05)],
+            speeds: vec![SpeedAxis::Ramp { lo: 0.6, hi: 1.8 }],
+            seed: 9003,
+            ..StudySpec::base("conformance-anchor-live-hetero")
+        }),
+        0.0,
+        true,
+    );
+    // k = 1 extreme.
+    push(
+        grid(StudySpec {
+            n_workers: vec![12],
+            batches: BatchAxis::Explicit(vec![4]),
+            services: vec![BatchService::paper(ServiceSpec::exp(1.0))],
+            k_targets: vec![KTarget::Exact(1)],
+            seed: 9004,
+            ..StudySpec::base("conformance-anchor-k1")
+        }),
+        0.0,
+        false,
+    );
+    // Speculative redundancy (engine-pair cells only).
+    push(
+        grid(StudySpec {
+            n_workers: vec![12],
+            batches: BatchAxis::Explicit(vec![3]),
+            services: vec![paper(1.0, 0.2)],
+            redundancy: vec![RedundancyAxis::Speculative(1.5)],
+            seed: 9005,
+            ..StudySpec::base("conformance-anchor-speculative")
+        }),
+        0.0,
+        false,
+    );
+    // Failure injection: same grid shape, the fail knob rides per case.
+    push(
+        grid(StudySpec {
+            n_workers: vec![12],
+            batches: BatchAxis::Explicit(vec![3]),
+            services: vec![paper(1.0, 0.2)],
+            seed: 9006,
+            ..StudySpec::base("conformance-anchor-fail")
+        }),
+        0.3,
+        false,
+    );
+    // Overlapping layout (MC↔DES + engine pair only).
+    push(
+        grid(StudySpec {
+            n_workers: vec![8],
+            batches: BatchAxis::Explicit(vec![4]),
+            policies: vec![ReplicationPolicy::OverlappingCyclic],
+            services: vec![paper(1.0, 0.2)],
+            seed: 9007,
+            ..StudySpec::base("conformance-anchor-overlapping")
+        }),
+        0.0,
+        false,
+    );
+    // Heavy-tail spec outside the closed forms' scope.
+    push(
+        grid(StudySpec {
+            n_workers: vec![8],
+            batches: BatchAxis::Explicit(vec![4]),
+            services: vec![BatchService::paper(ServiceSpec::pareto(0.8, 3.5))],
+            seed: 9008,
+            ..StudySpec::base("conformance-anchor-pareto")
+        }),
+        0.0,
+        false,
+    );
+    cases
 }
 
 /// Run the full conformance matrix: the deterministic anchors first,
@@ -645,6 +719,64 @@ mod tests {
     }
 
     #[test]
+    fn anchors_cover_the_required_corners() {
+        // The StudySpec-enumerated anchor grids must still reach every
+        // corner the acceptance criteria name, independent of the
+        // random sweep.
+        let anchors = anchor_cases();
+        let hetero = anchors
+            .iter()
+            .filter(|c| c.scenario.worker_speeds.is_some() && !c.live)
+            .count();
+        assert!(hetero >= 4, "hetero anchors: {hetero}");
+        assert!(
+            anchors.iter().any(|c| {
+                let b = c.scenario.assignment.n_batches;
+                c.live && matches!(c.scenario.k_of_b, Some(k) if k < b)
+            }),
+            "live k-of-B anchor missing"
+        );
+        assert!(
+            anchors.iter().any(|c| c.live && c.scenario.worker_speeds.is_some()),
+            "live hetero anchor missing"
+        );
+        assert!(
+            anchors.iter().any(|c| c.scenario.k_of_b == Some(1)),
+            "k = 1 anchor missing"
+        );
+        assert!(
+            anchors
+                .iter()
+                .any(|c| matches!(c.scenario.redundancy, Redundancy::Speculative { .. })),
+            "speculative anchor missing"
+        );
+        assert!(anchors.iter().any(|c| c.fail_prob > 0.0), "fail-injected anchor missing");
+        assert!(
+            anchors.iter().any(|c| c.scenario.layout.is_overlapping),
+            "overlapping anchor missing"
+        );
+        assert!(
+            anchors.iter().any(|c| c.scenario.service.spec.exp_family().is_none()),
+            "heavy-tail anchor missing"
+        );
+        // Every anchor is a valid scenario with a planner-derived seed.
+        for c in &anchors {
+            c.scenario.layout.validate().unwrap();
+            c.scenario.assignment.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn long_mode_extends_the_full_sweep() {
+        let fast = MatrixOptions::fast();
+        let full = MatrixOptions::full();
+        let long = MatrixOptions::long();
+        assert!(long.scenarios > full.scenarios && full.scenarios > fast.scenarios);
+        assert!(long.mc_trials >= full.mc_trials && long.des_trials >= full.des_trials);
+        assert!(long.include_live, "soak mode keeps the live cells");
+    }
+
+    #[test]
     fn cell_interval_logic() {
         let report = Mutex::new(MatrixReport::default());
         let exact = Estimate { mean: 1.0, sem: 0.0, lo: 1.0, hi: 1.0 };
@@ -681,7 +813,11 @@ mod tests {
             live_floor: 0.2,
         };
         let report = run_matrix(&opts).unwrap();
-        assert_eq!(report.scenarios, 15 + 11, "15 random + 11 anchors");
+        assert_eq!(
+            report.scenarios,
+            15 + anchor_cases().len() as u64,
+            "15 random + the StudySpec-enumerated anchors"
+        );
         assert!(report.des_reference >= report.scenarios, "engine pair runs everywhere");
         assert!(report.analytic_mc >= 3, "{report:?}");
         assert!(report.analytic_des >= 3, "{report:?}");

@@ -300,6 +300,9 @@ impl Coordinator {
                 })
                 .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))?;
         }
+        // One clock read: wall time spent sampling + dispatching the
+        // whole round (the dispatch leg of OverheadStats).
+        let dispatch_s = timer.secs();
 
         // Collect. Completion is declared at coverage (all data units
         // covered by winning batches) or, under a k-of-B target, at the
@@ -395,6 +398,7 @@ impl Coordinator {
             job_id,
             completion_s: completion,
             injected_s: max_injected_winner,
+            dispatch_s,
             dispatched: n as u64,
             redundant,
             cancelled,

@@ -543,6 +543,22 @@ fn summarize_trials(
     sum
 }
 
+/// One shard of the engine trial loop: `trials` flat-queue trials from
+/// an already-positioned RNG, keeping every `keep_every`-th sample.
+/// Crate-visible so the [`crate::study`] planner can schedule shards of
+/// *different* cells across one shared worker pool while reproducing
+/// [`simulate_many_parallel`]'s per-cell results bit-for-bit.
+pub(crate) fn simulate_shard(
+    scn: &Scenario,
+    cfg: &EngineConfig,
+    trials: u64,
+    mut rng: Rng,
+    keep_every: u64,
+    ws: &mut Workspace,
+) -> EngineSummary {
+    summarize_trials(trials, keep_every, || simulate_one_with(scn, cfg, &mut rng, ws))
+}
+
 /// Run `trials` trials (single-threaded, flat queue + block sampling).
 pub fn simulate_many(
     scn: &Scenario,
@@ -581,12 +597,20 @@ pub fn simulate_many_parallel(
         shard_plan(trials, seed),
         threads,
         Workspace::default,
-        |ws, shard_trials, mut rng| {
-            summarize_trials(shard_trials, keep, || simulate_one_with(scn, cfg, &mut rng, ws))
-        },
+        |ws, shard_trials, rng| simulate_shard(scn, cfg, shard_trials, rng, keep, ws),
     );
+    merge_shard_summaries(shards)
+}
+
+/// Merge per-shard engine summaries **in shard-index order** — the
+/// single definition shared by [`simulate_many_parallel`] and the
+/// study pool ([`crate::study`]), so their per-cell bitwise equality
+/// holds by construction.
+pub(crate) fn merge_shard_summaries(
+    shards: impl IntoIterator<Item = EngineSummary>,
+) -> EngineSummary {
     let mut out = EngineSummary::empty();
-    for sh in &shards {
+    for sh in shards {
         out.completion.merge(&sh.completion);
         out.busy.merge(&sh.busy);
         out.wasted.merge(&sh.wasted);

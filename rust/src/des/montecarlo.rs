@@ -286,7 +286,10 @@ impl McSummary {
 
 /// One shard of the trial loop: `trials` block-sampled trials from an
 /// already-positioned RNG, keeping every `keep_every`-th sample.
-fn run_shard(
+/// Crate-visible so the [`crate::study`] planner can schedule shards of
+/// *different* cells across one shared worker pool while reproducing
+/// [`run_trials_parallel`]'s per-cell results bit-for-bit.
+pub(crate) fn run_shard(
     scn: &Scenario,
     trials: u64,
     mut rng: Rng,
@@ -494,9 +497,20 @@ pub fn run_trials_parallel(
         TrialScratch::new,
         |scratch, t, rng| run_shard(scn, t, rng, keep_every, scratch),
     );
+    merge_shard_summaries(shards)
+}
+
+/// Merge per-shard summaries **in shard-index order**: Welford merges
+/// for the moments, shard-order concatenation for the retained
+/// samples. The single definition shared by [`run_trials_parallel`]
+/// and the study pool ([`crate::study`]), so their per-cell bitwise
+/// equality holds by construction.
+pub(crate) fn merge_shard_summaries(
+    shards: impl IntoIterator<Item = McSummary>,
+) -> McSummary {
     let mut welford = Welford::new();
     let mut samples = Samples::new();
-    for sh in &shards {
+    for sh in shards {
         welford.merge(&sh.welford);
         for &x in sh.samples.raw() {
             samples.push(x);

@@ -36,7 +36,7 @@ use crate::assignment::{Assignment, Policy};
 use crate::batching::DataLayout;
 use crate::config::SystemConfig;
 use crate::coordinator::{Backend, Coordinator};
-use crate::des::engine::{simulate_many_parallel, EngineConfig, Redundancy};
+use crate::des::engine::{simulate_many_parallel, EngineConfig, EngineSummary, Redundancy};
 use crate::des::{montecarlo, Scenario};
 use crate::dist::{BatchModel, BatchService};
 use crate::util::harmonic::{harmonic, harmonic2};
@@ -65,6 +65,40 @@ pub struct CostStats {
     pub wasted: f64,
 }
 
+/// Wall-clock overhead of the live runtime, measured against the
+/// injected (simulated-service) time — the [`CostStats`] extension that
+/// lets study reports track how much of a live round is dispatch,
+/// channel traffic, and aggregation rather than modeled service.
+/// Reported only by [`LiveEvaluator`] (`None` everywhere else).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverheadStats {
+    /// Mean wall-clock seconds from round start until the last task of
+    /// the round was handed to its worker channel (dispatch + sampling).
+    pub dispatch_s: f64,
+    /// Mean wall-clock round completion, seconds.
+    pub wall_s: f64,
+    /// Mean injected (simulated-service) completion, seconds.
+    pub injected_s: f64,
+}
+
+impl OverheadStats {
+    /// Mean wall-clock seconds not explained by injected service time
+    /// (dispatch + channel + aggregation overhead).
+    pub fn overhead_s(&self) -> f64 {
+        self.wall_s - self.injected_s
+    }
+
+    /// Overhead as a fraction of the wall-clock round (0 when no wall
+    /// time was recorded).
+    pub fn overhead_frac(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.overhead_s() / self.wall_s
+        }
+    }
+}
+
 /// Completion-time statistics in the common currency all evaluators
 /// speak.
 #[derive(Debug, Clone)]
@@ -82,6 +116,9 @@ pub struct CompletionStats {
     pub sem: f64,
     /// Trials/rounds behind the estimate (0 = closed form).
     pub samples: u64,
+    /// Live-runtime wall-clock overhead; `None` for every backend whose
+    /// time axis is purely simulated.
+    pub overhead: Option<OverheadStats>,
 }
 
 impl CompletionStats {
@@ -173,7 +210,11 @@ impl ReplicationPolicy {
             "overlapping_cyclic" => ReplicationPolicy::OverlappingCyclic,
             "full_diversity" => ReplicationPolicy::FullDiversity,
             "full_parallelism" => ReplicationPolicy::FullParallelism,
-            _ => anyhow::bail!("unknown replication policy '{s}'"),
+            _ => anyhow::bail!(
+                "unknown replication policy '{s}' (accepted: balanced_disjoint, \
+                 random_balanced, skewed_unbalanced, overlapping_cyclic, \
+                 full_diversity, full_parallelism)"
+            ),
         })
     }
 
@@ -299,6 +340,7 @@ impl Evaluator for AnalyticEvaluator {
                     cost: None,
                     sem: 0.0,
                     samples: 0,
+                    overhead: None,
                 });
             }
             // k = B waits for every batch: the full-completion closed
@@ -370,6 +412,7 @@ impl Evaluator for AnalyticEvaluator {
             cost: Some(CostStats { busy, wasted }),
             sem: 0.0,
             samples: 0,
+            overhead: None,
         })
     }
 }
@@ -412,6 +455,7 @@ impl AnalyticEvaluator {
             cost: None,
             sem: bounds.half_width() / 4.0,
             samples: 0,
+            overhead: None,
         })
     }
 }
@@ -484,18 +528,41 @@ impl Evaluator for MonteCarloEvaluator {
             "monte-carlo evaluator models upfront replication only; use DesEvaluator \
              for speculative redundancy"
         );
-        let mut mc = montecarlo::run_trials_parallel(scn, self.trials, scn.seed, self.threads);
-        // Quantiles sort the summary's own retained samples in place —
-        // no per-call clone of the sample buffer.
-        let quantiles = quantiles_from(&mut mc.samples);
-        Ok(CompletionStats {
-            mean: mc.welford.mean(),
-            variance: mc.welford.variance(),
-            quantiles,
-            cost: None,
-            sem: mc.welford.sem(),
-            samples: mc.welford.count(),
-        })
+        let mc = montecarlo::run_trials_parallel(scn, self.trials, scn.seed, self.threads);
+        Ok(stats_from_mc(mc))
+    }
+}
+
+/// Assemble [`CompletionStats`] from a Monte-Carlo summary — the single
+/// definition shared by [`MonteCarloEvaluator`] and the study pool
+/// ([`crate::study`]), so their results are identical by construction.
+/// Quantiles sort the summary's own retained samples in place — no
+/// per-call clone of the sample buffer.
+pub(crate) fn stats_from_mc(mut mc: montecarlo::McSummary) -> CompletionStats {
+    let quantiles = quantiles_from(&mut mc.samples);
+    CompletionStats {
+        mean: mc.welford.mean(),
+        variance: mc.welford.variance(),
+        quantiles,
+        cost: None,
+        sem: mc.welford.sem(),
+        samples: mc.welford.count(),
+        overhead: None,
+    }
+}
+
+/// Assemble [`CompletionStats`] from an engine summary — the single
+/// definition shared by [`DesEvaluator`] and the study pool
+/// ([`crate::study`]), so their results are identical by construction.
+pub(crate) fn stats_from_des(mut sum: EngineSummary) -> CompletionStats {
+    CompletionStats {
+        mean: sum.completion.mean(),
+        variance: sum.completion.variance(),
+        quantiles: quantiles_from(&mut sum.samples),
+        cost: Some(CostStats { busy: sum.busy.mean(), wasted: sum.wasted.mean() }),
+        sem: sum.completion.sem(),
+        samples: sum.completion.count(),
+        overhead: None,
     }
 }
 
@@ -551,15 +618,8 @@ impl Evaluator for DesEvaluator {
             fail_prob: self.fail_prob,
             relaunch_timeout_factor: self.relaunch_timeout_factor,
         };
-        let mut sum = simulate_many_parallel(scn, &cfg, self.trials, scn.seed, self.threads);
-        Ok(CompletionStats {
-            mean: sum.completion.mean(),
-            variance: sum.completion.variance(),
-            quantiles: quantiles_from(&mut sum.samples),
-            cost: Some(CostStats { busy: sum.busy.mean(), wasted: sum.wasted.mean() }),
-            sem: sum.completion.sem(),
-            samples: sum.completion.count(),
-        })
+        let sum = simulate_many_parallel(scn, &cfg, self.trials, scn.seed, self.threads);
+        Ok(stats_from_des(sum))
     }
 }
 
@@ -640,10 +700,16 @@ impl Evaluator for LiveEvaluator {
         let outcome = run();
         let mut welford = Welford::new();
         let mut samples = Samples::with_capacity(coord.metrics.len());
+        let mut dispatch = Welford::new();
+        let mut wall = Welford::new();
+        let mut injected = Welford::new();
         for rec in coord.metrics.records() {
             let units = rec.injected_s / self.time_scale;
             welford.push(units);
             samples.push(units);
+            dispatch.push(rec.dispatch_s);
+            wall.push(rec.completion_s);
+            injected.push(rec.injected_s);
         }
         coord.shutdown();
         outcome?;
@@ -655,11 +721,16 @@ impl Evaluator for LiveEvaluator {
             cost: None,
             sem: welford.sem(),
             samples: welford.count(),
+            overhead: Some(OverheadStats {
+                dispatch_s: dispatch.mean(),
+                wall_s: wall.mean(),
+                injected_s: injected.mean(),
+            }),
         })
     }
 }
 
-fn quantiles_from(samples: &mut Samples) -> Vec<(f64, f64)> {
+pub(crate) fn quantiles_from(samples: &mut Samples) -> Vec<(f64, f64)> {
     if samples.is_empty() {
         return Vec::new();
     }
@@ -694,14 +765,26 @@ pub fn cross_check(
 ) -> anyhow::Result<CrossCheck> {
     let sa = a.evaluate(scn)?;
     let sb = b.evaluate(scn)?;
+    cross_check_stats(a.name(), b.name(), sa, sb)
+}
+
+/// The statistics half of [`cross_check`]: validate two
+/// already-computed estimates of one scenario against each other. Lets
+/// callers that obtained their stats elsewhere (e.g. from a deduplicated
+/// [`crate::study`] report, where each cell is evaluated once and fanned
+/// out) run the same gate without re-evaluating.
+pub fn cross_check_stats(
+    a_name: &str,
+    b_name: &str,
+    sa: CompletionStats,
+    sb: CompletionStats,
+) -> anyhow::Result<CrossCheck> {
     let sem = (sa.sem * sa.sem + sb.sem * sb.sem).sqrt();
     let tolerance = (4.0 * sem).max(0.005 * sa.mean.abs().max(sb.mean.abs()));
     let mean_diff = (sa.mean - sb.mean).abs();
     anyhow::ensure!(
         mean_diff <= tolerance,
-        "{} and {} disagree on E[T]: {:.6} vs {:.6} (diff {:.6} > tol {:.6})",
-        a.name(),
-        b.name(),
+        "{a_name} and {b_name} disagree on E[T]: {:.6} vs {:.6} (diff {:.6} > tol {:.6})",
         sa.mean,
         sb.mean,
         mean_diff,
@@ -712,9 +795,7 @@ pub fn cross_check(
         let rel = (sa.variance - sb.variance).abs() / sa.variance.max(sb.variance);
         anyhow::ensure!(
             rel < 0.2,
-            "{} and {} disagree on Var[T]: {:.6} vs {:.6}",
-            a.name(),
-            b.name(),
+            "{a_name} and {b_name} disagree on Var[T]: {:.6} vs {:.6}",
             sa.variance,
             sb.variance
         );
@@ -907,6 +988,7 @@ mod tests {
                     cost: None,
                     sem: 0.0,
                     samples: 0,
+                    overhead: None,
                 })
             }
         }
@@ -1036,6 +1118,13 @@ mod tests {
         };
         let scn_k = paper_scn(8, 4, spec.clone(), 31).with_k_of_b(2).unwrap();
         let st_k = live.evaluate(&scn_k).unwrap();
+        // The live backend is the one evaluator that reports wall-clock
+        // overhead: dispatch is part of the wall round, the wall round
+        // is at least the injected service it slept through.
+        let ov = st_k.overhead.expect("live backend reports OverheadStats");
+        assert!(ov.dispatch_s >= 0.0 && ov.dispatch_s <= ov.wall_s, "{ov:?}");
+        assert!(ov.wall_s >= ov.injected_s, "{ov:?}");
+        assert!(ov.overhead_s() >= 0.0 && ov.overhead_frac() < 1.0, "{ov:?}");
         let cf_k = analysis::partial_completion_stats(8, 4, 2, &spec).unwrap();
         assert!(
             (st_k.mean - cf_k.mean).abs() < (5.0 * st_k.sem).max(0.2 * cf_k.mean),
@@ -1187,6 +1276,11 @@ mod tests {
             assert_eq!(ReplicationPolicy::parse(p.name()).unwrap(), *p);
         }
         assert!(ReplicationPolicy::parse("custom").is_err());
-        assert!(ReplicationPolicy::parse("nope").is_err());
+        // Unknown policies name the value and list what is accepted.
+        let msg = ReplicationPolicy::parse("nope").unwrap_err().to_string();
+        assert!(msg.contains("'nope'"), "{msg}");
+        for p in ReplicationPolicy::all() {
+            assert!(msg.contains(p.name()), "accepted list missing {}: {msg}", p.name());
+        }
     }
 }

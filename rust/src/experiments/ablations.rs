@@ -2,51 +2,48 @@
 //!
 //! 1. **Batch service model**: size-scaled (the paper/Gardner model) vs
 //!    decoupled slowdown vs per-sample-sum — how much of the
-//!    diversity–parallelism geometry survives each change.
+//!    diversity–parallelism geometry survives each change. A service
+//!    axis (same spec, three models) in one study.
 //! 2. **Cancellation**: completion time is unchanged; the *cost* (busy
-//!    and wasted worker-seconds) is what redundancy spends.
+//!    and wasted worker-seconds) is what redundancy spends. Two studies
+//!    differing only in the planner-level `des_cancellation` knob.
 //! 3. **Upfront replication vs speculative relaunch** (reactive
-//!    MapReduce-style baseline): latency vs cost frontier — expressed
-//!    purely through the scenario's redundancy mode, same backend.
-//! 4. **Heterogeneous workers**: a mixed-speed cluster under the same
-//!    policies.
+//!    MapReduce-style baseline): latency vs cost frontier — a
+//!    redundancy axis, same backend.
+//! 4. **Heterogeneous workers**: a speed axis (homogeneous vs a
+//!    shuffled mixed-speed cluster) under the same policies.
 
 use super::ExpContext;
 use crate::assignment::feasible_batch_counts;
-use crate::des::engine::Redundancy;
-use crate::des::Scenario;
 use crate::dist::{BatchModel, BatchService, ServiceSpec};
-use crate::evaluator::{DesEvaluator, Evaluator, ReplicationPolicy};
+use crate::study::{BackendSel, BatchAxis, RedundancyAxis, SpeedAxis, StudySpec};
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_f, Table};
 
 /// Workers for the ablations.
 pub const N: usize = 12;
 
-fn balanced_scn(b: usize, service: BatchService, seed: u64) -> anyhow::Result<Scenario> {
-    Scenario::from_policy(ReplicationPolicy::BalancedDisjoint, N, b, service, seed)
-}
-
 /// Run E8.
 pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     let sexp = ServiceSpec::shifted_exp(1.0, 0.2);
-    let mc = ctx.mc();
-    let des = ctx.des();
+    let models = [BatchModel::SizeScaled, BatchModel::DecoupledSlowdown, BatchModel::PerSampleSum];
 
     // --- 1. batch service model ablation ---
     let mut t1 = Table::new(
         "Ablation — batch service model (SExp(1,0.2), N=12): E[T] vs B",
         &["model", "B", "E[T] sim", "Var sim"],
     );
-    for model in [BatchModel::SizeScaled, BatchModel::DecoupledSlowdown, BatchModel::PerSampleSum]
-    {
+    let t1_report = ctx.study(StudySpec {
+        n_workers: vec![N],
+        services: models
+            .iter()
+            .map(|&model| BatchService { spec: sexp.clone(), model })
+            .collect(),
+        ..ctx.spec("ablation-batch-model")
+    })?;
+    for (mi, model) in models.iter().enumerate() {
         for &b in &feasible_batch_counts(N) {
-            let scn = balanced_scn(
-                b,
-                BatchService { spec: sexp.clone(), model },
-                ctx.seed + b as u64,
-            )?;
-            let st = mc.evaluate(&scn)?;
+            let st = t1_report.stats_where(&|c| c.service_idx == mi && c.b == b)?;
             t1.row(vec![
                 model.name().to_string(),
                 b.to_string(),
@@ -58,15 +55,24 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     ctx.emit("ablation_batch_model", &t1)?;
 
     // --- 2. cancellation cost ---
+    // Cancellation is an engine knob, not a scenario field: the same
+    // grid is compiled twice, differing only in `des_cancellation`.
     let mut t2 = Table::new(
         "Ablation — cancellation (SExp(1,0.2), N=12): completion unchanged, cost reduced",
         &["B", "cancel", "E[T]", "busy (worker-s)", "wasted (worker-s)"],
     );
+    let cancel_grid = |cancel: bool| StudySpec {
+        n_workers: vec![N],
+        services: vec![BatchService::paper(sexp.clone())],
+        backends: vec![BackendSel::Des],
+        des_cancellation: cancel,
+        ..ctx.spec(if cancel { "ablation-cancel-on" } else { "ablation-cancel-off" })
+    };
+    let with_cancel = ctx.study(cancel_grid(true))?;
+    let without_cancel = ctx.study(cancel_grid(false))?;
     for &b in &feasible_batch_counts(N) {
-        for cancel in [true, false] {
-            let scn = balanced_scn(b, BatchService::paper(sexp.clone()), ctx.seed + b as u64)?;
-            let ev = DesEvaluator { cancellation: cancel, ..des };
-            let st = ev.evaluate(&scn)?;
+        for (cancel, report) in [(true, &with_cancel), (false, &without_cancel)] {
+            let st = report.stats_where(&|c| c.b == b)?;
             let cost = st.cost.expect("des backend reports cost");
             t2.row(vec![
                 b.to_string(),
@@ -80,31 +86,32 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     ctx.emit("ablation_cancellation", &t2)?;
 
     // --- 3. upfront vs speculative ---
-    // One scenario family; only the redundancy mode changes. The same
-    // DesEvaluator consumes both — the trade-off is in the scenario,
-    // not in backend-specific wiring.
+    // One scenario family; only the redundancy axis varies. The same
+    // DES backend consumes every mode — the trade-off is in the
+    // scenario, not in backend-specific wiring.
+    let deadline_factors = [1.0, 1.5, 2.0, 3.0];
     let mut t3 = Table::new(
         "Ablation — upfront replication vs speculative relaunch (B=3, N=12)",
         &["strategy", "E[T]", "p99", "busy", "wasted"],
     );
-    let base = balanced_scn(3, BatchService::paper(sexp.clone()), ctx.seed)?;
-    let upfront = des.evaluate(&base)?;
-    let up_cost = upfront.cost.expect("des backend reports cost");
-    t3.row(vec![
-        "upfront".into(),
-        fmt_f(upfront.mean, 4),
-        fmt_f(upfront.quantile(0.99).unwrap(), 4),
-        fmt_f(up_cost.busy, 4),
-        fmt_f(up_cost.wasted, 4),
-    ]);
-    for df in [1.0, 1.5, 2.0, 3.0] {
-        let scn = base
-            .clone()
-            .with_redundancy(Redundancy::Speculative { deadline_factor: df });
-        let st = des.evaluate(&scn)?;
+    let t3_report = ctx.study(StudySpec {
+        n_workers: vec![N],
+        batches: BatchAxis::Explicit(vec![3]),
+        services: vec![BatchService::paper(sexp.clone())],
+        redundancy: std::iter::once(RedundancyAxis::Upfront)
+            .chain(deadline_factors.iter().map(|&df| RedundancyAxis::Speculative(df)))
+            .collect(),
+        backends: vec![BackendSel::Des],
+        ..ctx.spec("ablation-speculative")
+    })?;
+    for (ri, label) in std::iter::once("upfront".to_string())
+        .chain(deadline_factors.iter().map(|df| format!("speculative x{df}")))
+        .enumerate()
+    {
+        let st = t3_report.stats_where(&|c| c.redundancy_idx == ri)?;
         let cost = st.cost.expect("des backend reports cost");
         t3.row(vec![
-            format!("speculative x{df}"),
+            label,
             fmt_f(st.mean, 4),
             fmt_f(st.quantile(0.99).unwrap(), 4),
             fmt_f(cost.busy, 4),
@@ -124,13 +131,15 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
         *s = 3.0;
     }
     rng.shuffle(&mut speeds);
+    let t4_report = ctx.study(StudySpec {
+        n_workers: vec![N],
+        services: vec![BatchService::paper(sexp)],
+        speeds: vec![SpeedAxis::Homogeneous, SpeedAxis::Explicit(speeds)],
+        ..ctx.spec("ablation-heterogeneous")
+    })?;
     for &b in &feasible_batch_counts(N) {
-        let seed = ctx.seed + 7 + b as u64;
-        let homo = balanced_scn(b, BatchService::paper(sexp.clone()), seed)?;
-        let hetero = balanced_scn(b, BatchService::paper(sexp.clone()), seed)?
-            .with_speeds(speeds.clone())?;
-        let mh = mc.evaluate(&homo)?;
-        let mx = mc.evaluate(&hetero)?;
+        let mh = t4_report.stats_where(&|c| c.b == b && c.speeds_idx == 0)?;
+        let mx = t4_report.stats_where(&|c| c.b == b && c.speeds_idx == 1)?;
         t4.row(vec![
             b.to_string(),
             fmt_f(mh.mean, 4),

@@ -1,32 +1,32 @@
-//! E9/E10 — extension experiments beyond the paper's evaluation:
+//! E9/E10/E11 — extension experiments beyond the paper's evaluation:
 //!
 //! * **E9 trace robustness** — replace the parametric service
 //!   distributions with replayed Markov-modulated straggler traces
 //!   (`trace` module; the documented substitution for production
 //!   traces) and re-ask the paper's question: where is B* when
-//!   stragglers are bursty rather than memoryless? Both spectra run
-//!   through the same Monte-Carlo backend — the trace is just another
-//!   `ServiceSpec` inside the scenario.
+//!   stragglers are bursty rather than memoryless? The trace is just
+//!   another service-axis entry (trace specs key by content hash in the
+//!   planner), swept next to its fitted SExp through one study.
 //! * **E10 partial aggregation (k-of-B)** — the gradient-coding regime
 //!   the paper cites: the master proceeds with the earliest `k` of `B`
-//!   batch results. `k_of_b` is a first-class [`Scenario`] field, so the
-//!   same scenario value flows through the analytic closed form
-//!   (`partial_completion_stats` behind `AnalyticEvaluator`) and the
-//!   Monte-Carlo sampler — closed form vs simulation, and the
-//!   latency/completeness frontier.
+//!   batch results. A k-target axis (`½B`, `¾B`, full) × a batch axis ×
+//!   the `{analytic, montecarlo}` backend pair; the planner
+//!   canonicalizes `k = B` onto the full-completion cell.
+//! * **E11 heterogeneous worker speeds** — a speed-ramp axis across
+//!   spreads; the closed-form leg (`hetero_completion_bounds`) brackets
+//!   the simulated mean of the same scenarios.
 
 use super::ExpContext;
 use crate::assignment::feasible_batch_counts;
-use crate::des::Scenario;
 use crate::dist::{BatchService, ServiceSpec};
-use crate::evaluator::{AnalyticEvaluator, Evaluator, ReplicationPolicy};
+use crate::study::{BackendSel, BatchAxis, KTarget, SpeedAxis, StudySpec};
 use crate::trace::{generate_markov_trace, trace_spec, MarkovTraceParams};
 use crate::util::table::{fmt_f, Table};
 
 /// Workers.
 pub const N: usize = 24;
 
-/// Run E9 + E10.
+/// Run E9 + E10 + E11.
 pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     // --- E9: trace-driven spectrum ---
     let params = MarkovTraceParams::default();
@@ -36,33 +36,18 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
         1.0 / (spec.mean().unwrap() - params.base_delta),
         params.base_delta,
     );
-    let mc = ctx.mc();
     let mut t9 = Table::new(
         "E9 — bursty straggler trace vs fitted SExp: E[T] across the spectrum (N=24)",
         &["B", "E[T] trace replay", "E[T] fitted SExp", "trace/SExp"],
     );
-    let mut best_trace = (f64::INFINITY, 0usize);
+    let t9_report = ctx.study(StudySpec {
+        n_workers: vec![N],
+        services: vec![BatchService::paper(spec), BatchService::paper(sexp_match)],
+        ..ctx.spec("ext-trace-robustness")
+    })?;
     for &b in &feasible_batch_counts(N) {
-        let seed = ctx.seed + b as u64;
-        let scn_t = Scenario::from_policy(
-            ReplicationPolicy::BalancedDisjoint,
-            N,
-            b,
-            BatchService::paper(spec.clone()),
-            seed,
-        )?;
-        let scn_s = Scenario::from_policy(
-            ReplicationPolicy::BalancedDisjoint,
-            N,
-            b,
-            BatchService::paper(sexp_match.clone()),
-            seed,
-        )?;
-        let mt = mc.evaluate(&scn_t)?;
-        let ms = mc.evaluate(&scn_s)?;
-        if mt.mean < best_trace.0 {
-            best_trace = (mt.mean, b);
-        }
+        let mt = t9_report.stats_where(&|c| c.b == b && c.service_idx == 0)?;
+        let ms = t9_report.stats_where(&|c| c.b == b && c.service_idx == 1)?;
         t9.row(vec![
             b.to_string(),
             fmt_f(mt.mean, 4),
@@ -72,29 +57,43 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     }
     ctx.emit("ext_trace_robustness", &t9)?;
 
-    // --- E10: k-of-B partial aggregation (a scenario field, not a
-    // bespoke sampler: every backend consumes the same value) ---
+    // --- E10: k-of-B partial aggregation (a scenario field and a
+    // planner axis, not a bespoke sampler: every backend consumes the
+    // same value, and k = B is canonicalized onto the full cell) ---
     let sexp = ServiceSpec::shifted_exp(1.0, 0.2);
-    let service = BatchService::paper(sexp);
     let mut t10 = Table::new(
         "E10 — partial aggregation: wait for k of B batches (N=24, SExp(1,0.2))",
         &["B", "k", "k/B", "E[T] analytic", "E[T] sim", "speedup vs k=B"],
     );
+    let k_axis = [KTarget::Fraction(0.5), KTarget::Fraction(0.75), KTarget::Full];
+    let t10_report = ctx.study(StudySpec {
+        n_workers: vec![N],
+        batches: BatchAxis::Explicit(vec![4, 8, 12]),
+        services: vec![BatchService::paper(sexp.clone())],
+        k_targets: k_axis.to_vec(),
+        backends: vec![BackendSel::Analytic, BackendSel::MonteCarlo],
+        ..ctx.spec("ext-partial-aggregation")
+    })?;
     for &b in &[4usize, 8, 12] {
-        let seed = ctx.seed ^ 0x0b_0f_b7 ^ (b as u64);
-        let base = Scenario::from_policy(
-            ReplicationPolicy::BalancedDisjoint,
-            N,
-            b,
-            service.clone(),
-            seed,
-        )?;
-        let full = AnalyticEvaluator.evaluate(&base)?;
-        for k in [b / 2, (3 * b) / 4, b] {
-            let k = k.max(1);
-            let scn = base.clone().with_k_of_b(k)?;
-            let cf = AnalyticEvaluator.evaluate(&scn)?;
-            let sim = mc.evaluate(&scn)?;
+        let full = t10_report
+            .stats_where(&|c| c.b == b && c.k_idx == 2 && c.backend == BackendSel::Analytic)?
+            .clone();
+        for ki in 0..k_axis.len() {
+            // The printed k is the planner-resolved coordinate of the
+            // evaluated cell (None = full completion), not a local
+            // re-derivation of the fraction rule.
+            let point = t10_report
+                .point_where(&|c| {
+                    c.b == b && c.k_idx == ki && c.backend == BackendSel::Analytic
+                })
+                .ok_or_else(|| anyhow::anyhow!("E10 grid missing (B={b}, k_idx={ki})"))?;
+            let k = point.coords.k_of_b.unwrap_or(b);
+            let cf = t10_report.stats_where(&|c| {
+                c.b == b && c.k_idx == ki && c.backend == BackendSel::Analytic
+            })?;
+            let sim = t10_report.stats_where(&|c| {
+                c.b == b && c.k_idx == ki && c.backend == BackendSel::MonteCarlo
+            })?;
             t10.row(vec![
                 b.to_string(),
                 k.to_string(),
@@ -115,29 +114,39 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
         "E11 — heterogeneous speeds: analytic bounds vs simulation (N=24, B=4)",
         &["spread", "service", "E[T] lo", "E[T] hi", "E[T] sim", "sim inside"],
     );
-    for &spread in &[1.0f64, 1.5, 3.0] {
-        // Linear ramp with unit geometric midpoint: c_w ∈ [1/√spread, √spread].
-        let (lo_c, hi_c) = (1.0 / spread.sqrt(), spread.sqrt());
-        let speeds: Vec<f64> = (0..N)
-            .map(|w| lo_c + (hi_c - lo_c) * w as f64 / (N - 1) as f64)
-            .collect();
-        for spec in [ServiceSpec::exp(1.0), ServiceSpec::shifted_exp(1.0, 0.3)] {
-            let seed = ctx.seed ^ 0xE11 ^ (spread.to_bits() >> 32);
-            let scn = Scenario::from_policy(
-                ReplicationPolicy::BalancedDisjoint,
-                N,
-                4,
-                BatchService::paper(spec.clone()),
-                seed,
-            )?
-            .with_speeds(speeds.clone())?;
+    let spreads = [1.0f64, 1.5, 3.0];
+    // Linear ramp with unit geometric midpoint: c_w ∈ [1/√spread, √spread].
+    let ramp_of = |spread: f64| SpeedAxis::Ramp {
+        lo: 1.0 / spread.sqrt(),
+        hi: spread.sqrt(),
+    };
+    let t11_report = ctx.study(StudySpec {
+        n_workers: vec![N],
+        batches: BatchAxis::Explicit(vec![4]),
+        services: vec![
+            BatchService::paper(ServiceSpec::exp(1.0)),
+            BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.3)),
+        ],
+        speeds: spreads.iter().map(|&s| ramp_of(s)).collect(),
+        ..ctx.spec("ext-hetero-speeds")
+    })?;
+    let assignment = crate::assignment::balanced(N, 4)?;
+    for (wi, &spread) in spreads.iter().enumerate() {
+        // The bounds leg consumes the same resolved vector the planner
+        // gave the simulated cells (spread = 1 canonicalizes to the
+        // homogeneous cluster, i.e. unit factors).
+        let speeds = ramp_of(spread).resolve(N)?.unwrap_or_else(|| vec![1.0; N]);
+        for (si, spec) in
+            [ServiceSpec::exp(1.0), ServiceSpec::shifted_exp(1.0, 0.3)].iter().enumerate()
+        {
             let bounds = crate::analysis::hetero_completion_bounds(
-                &scn.assignment,
-                &spec,
+                &assignment,
+                spec,
                 N as u64,
                 &speeds,
             )?;
-            let sim = mc.evaluate(&scn)?;
+            let sim = t11_report
+                .stats_where(&|c| c.service_idx == si && c.speeds_idx == wi)?;
             let slack = 4.0 * sim.sem;
             let inside =
                 sim.mean >= bounds.lower.mean - slack && sim.mean <= bounds.upper.mean + slack;

@@ -2,18 +2,20 @@
 //! `B`, Shifted-Exponential per-sample service, one curve per `∆µ`.
 //!
 //! The paper plots `E[T] = N∆/B + H_B/µ` over `B ∈ F_B` and observes
-//! that larger `∆µ` pushes the optimum toward parallelism. Each point
-//! is produced twice through the [`Evaluator`] API — once by the
-//! [`AnalyticEvaluator`] and once by the [`MonteCarloEvaluator`] — and
-//! validated with [`cross_check`], the repo's strongest check that
-//! simulator and theory describe the same system.
+//! that larger `∆µ` pushes the optimum toward parallelism. The whole
+//! figure is **one study**: a ∆µ-service axis × the feasible batch
+//! counts × the `{analytic, montecarlo}` backend axis, compiled into a
+//! deduplicated plan and executed on the shared pool. Each grid point's
+//! two cells are then validated against each other with
+//! [`cross_check_stats`] — the repo's strongest check that simulator
+//! and theory describe the same system.
 
 use super::ExpContext;
 use crate::analysis;
 use crate::assignment::feasible_batch_counts;
-use crate::des::Scenario;
 use crate::dist::{BatchService, ServiceSpec};
-use crate::evaluator::{cross_check, AnalyticEvaluator, ReplicationPolicy};
+use crate::evaluator::cross_check_stats;
+use crate::study::BackendSel;
 use crate::util::table::{fmt_f, Table};
 
 /// Workers, matching the paper's figure scale (divisor-rich).
@@ -24,7 +26,7 @@ pub const MU: f64 = 1.0;
 pub const DELTA_MUS: [f64; 5] = [0.05, 0.2, 0.5, 1.0, 2.0];
 
 /// Run E1: one table of curves + one table of optima. Every row is a
-/// cross-checked (analytic, Monte-Carlo) pair.
+/// cross-checked (analytic, Monte-Carlo) cell pair from one study.
 pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     let mut curve = Table::new(
         "Fig. 2 — E[T] vs B (Shifted-Exponential service), analytic vs simulated",
@@ -35,21 +37,33 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
         &["delta_mu", "B* analytic", "B* sim", "E[T] at B*"],
     );
 
-    let mc = ctx.mc();
+    let spec = crate::study::StudySpec {
+        n_workers: vec![N],
+        services: DELTA_MUS
+            .iter()
+            .map(|&dm| BatchService::paper(ServiceSpec::shifted_exp(MU, dm / MU)))
+            .collect(),
+        backends: vec![BackendSel::Analytic, BackendSel::MonteCarlo],
+        ..ctx.spec("fig2")
+    };
+    let report = ctx.study(spec)?;
+
     for (di, &dm) in DELTA_MUS.iter().enumerate() {
-        let spec = ServiceSpec::shifted_exp(MU, dm / MU);
         let mut best_sim = (f64::INFINITY, 1usize);
         for &b in &feasible_batch_counts(N) {
-            let scn = Scenario::from_policy(
-                ReplicationPolicy::BalancedDisjoint,
-                N,
-                b,
-                BatchService::paper(spec.clone()),
-                ctx.seed + di as u64 * 131 + b as u64,
-            )?;
+            let cf = report
+                .stats_where(&|c| {
+                    c.service_idx == di && c.b == b && c.backend == BackendSel::Analytic
+                })?
+                .clone();
+            let sim = report
+                .stats_where(&|c| {
+                    c.service_idx == di && c.b == b && c.backend == BackendSel::MonteCarlo
+                })?
+                .clone();
             // The paper's own validation, as one API call: theory and
             // simulation must agree on this point or the run fails.
-            let ck = cross_check(&AnalyticEvaluator, &mc, &scn)?;
+            let ck = cross_check_stats("analytic", "montecarlo", cf, sim)?;
             let (cf, sim) = (&ck.a, &ck.b);
             if sim.mean < best_sim.0 {
                 best_sim = (sim.mean, b);
@@ -65,6 +79,7 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
                 fmt_f(sim.variance, 4),
             ]);
         }
+        let spec = ServiceSpec::shifted_exp(MU, dm / MU);
         let b_star = analysis::optimum_b(N as u64, &spec);
         let at_star = analysis::completion_time_stats(N as u64, b_star, &spec)?.mean;
         optima.row(vec![

@@ -1,11 +1,15 @@
 //! Experiment drivers: one function per paper figure/table (DESIGN.md
-//! experiment index E1–E8), each emitting CSV + Markdown into an output
-//! directory and returning its [`Table`]s for inspection.
+//! experiment index E1–E11), each emitting CSV + Markdown into an
+//! output directory and returning its [`Table`]s for inspection.
 //!
-//! Every driver is a thin sweep over the [`crate::evaluator`] API: build
-//! self-describing scenarios, evaluate them with the appropriate
-//! backend(s), tabulate. The context's `seed` is the only source of
-//! randomness, so regenerated tables are bit-identical across runs.
+//! Every driver is declarative: it builds one or two
+//! [`crate::study::StudySpec`]s (axes over the quantities the figure
+//! sweeps), compiles them into deduplicated execution plans, runs them
+//! through the shared study pool ([`ExpContext::study`]), and tabulates
+//! from the [`crate::study::StudyReport`] — no hand-rolled scenario
+//! loops. The context's `seed` is the only source of randomness (cell
+//! seeds are derived from it through the planner's canonical keys), so
+//! regenerated tables are bit-identical across runs.
 
 pub mod ablations;
 pub mod extensions;
@@ -14,7 +18,7 @@ pub mod live;
 pub mod policies;
 pub mod spectrum;
 
-use crate::evaluator::{DesEvaluator, MonteCarloEvaluator};
+use crate::study::{StudyReport, StudySpec};
 use crate::util::table::Table;
 use std::path::PathBuf;
 
@@ -43,15 +47,24 @@ impl ExpContext {
         Ok(())
     }
 
-    /// The Monte-Carlo backend at this context's trial budget
-    /// (auto-threaded; deterministic per machine for a fixed seed).
-    pub fn mc(&self) -> MonteCarloEvaluator {
-        MonteCarloEvaluator { trials: self.trials.max(1), ..MonteCarloEvaluator::default() }
+    /// A study-spec skeleton carrying this context's budgets and seed:
+    /// Monte-Carlo cells at the full trial budget, event-engine cells at
+    /// 1/5 of it (costlier per trial). Drivers fill the axes via
+    /// struct-update syntax.
+    pub fn spec(&self, name: &str) -> StudySpec {
+        StudySpec {
+            mc_trials: self.trials.max(1),
+            des_trials: (self.trials / 5).max(1),
+            seed: self.seed,
+            ..StudySpec::base(name)
+        }
     }
 
-    /// The event-engine backend (costlier per trial: 1/5 the budget).
-    pub fn des(&self) -> DesEvaluator {
-        DesEvaluator { trials: (self.trials / 5).max(1), ..DesEvaluator::default() }
+    /// Compile and execute a study on the shared pool (all cores; the
+    /// report is identical for any thread count).
+    pub fn study(&self, spec: StudySpec) -> anyhow::Result<StudyReport> {
+        let plan = spec.compile()?;
+        crate::study::execute(&plan, crate::evaluator::auto_threads(), &mut |_, _, _, _| {})
     }
 }
 

@@ -5,13 +5,15 @@
 //! (Exp, SExp). We compare every [`ReplicationPolicy`] — including the
 //! storage-equal *overlapping* layout — under the paper's distributions
 //! and two heavy-tailed robustness cases where the theorem's hypothesis
-//! fails. One scenario family, two backends: Monte-Carlo for every
-//! policy, the analytic evaluator wherever the closed forms apply.
+//! fails. One study: a policy axis × a distribution axis × the
+//! `{montecarlo, analytic}` backend axis; the closed form fills its
+//! column wherever it applies and its refusal is rendered as "-"
+//! everywhere else.
 
 use super::ExpContext;
-use crate::des::Scenario;
 use crate::dist::{BatchService, ServiceSpec};
-use crate::evaluator::{AnalyticEvaluator, Evaluator, ReplicationPolicy};
+use crate::evaluator::ReplicationPolicy;
+use crate::study::{BackendSel, BatchAxis};
 use crate::util::table::{fmt_f, Table};
 
 /// Workers.
@@ -36,23 +38,32 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
         &["distribution", "dec-convex", "policy", "E[T] sim", "ci95", "E[T] analytic"],
     );
 
-    let mc = ctx.mc();
-    for (di, (dname, spec, decconv)) in dists.iter().enumerate() {
-        for (pi, policy) in ReplicationPolicy::all().iter().enumerate() {
-            let scn = Scenario::from_policy(
-                *policy,
-                N,
-                B,
-                BatchService::paper(spec.clone()),
-                ctx.seed + 17 + di as u64 * 101 + pi as u64,
-            )?;
-            let sim = mc.evaluate(&scn)?;
+    let spec = crate::study::StudySpec {
+        n_workers: vec![N],
+        batches: BatchAxis::Explicit(vec![B]),
+        policies: ReplicationPolicy::all().to_vec(),
+        services: dists.iter().map(|(_, s, _)| BatchService::paper(s.clone())).collect(),
+        backends: vec![BackendSel::MonteCarlo, BackendSel::Analytic],
+        ..ctx.spec("policies")
+    };
+    let report = ctx.study(spec)?;
+
+    for (di, (dname, _, decconv)) in dists.iter().enumerate() {
+        for policy in ReplicationPolicy::all() {
+            let sim = report.stats_where(&|c| {
+                c.service_idx == di && c.policy == *policy && c.backend == BackendSel::MonteCarlo
+            })?;
             // Exact value wherever the closed forms apply (equal-size
-            // disjoint batches + exp family); "-" otherwise.
-            let analytic = AnalyticEvaluator
-                .evaluate(&scn)
+            // disjoint batches + exp family); "-" otherwise (the
+            // analytic cell is planned but refused).
+            let analytic = report
+                .try_stats_where(&|c| {
+                    c.service_idx == di
+                        && c.policy == *policy
+                        && c.backend == BackendSel::Analytic
+                })
                 .map(|s| fmt_f(s.mean, 4))
-                .unwrap_or_else(|_| "-".into());
+                .unwrap_or_else(|| "-".into());
             t.row(vec![
                 dname.to_string(),
                 decconv.to_string(),
@@ -96,6 +107,25 @@ mod tests {
             assert!(bal <= get("skewed_unbalanced") * 1.01, "{dname}");
             assert!(bal <= get("overlapping_cyclic") * 1.02, "{dname}");
             assert!((bal - get("random_balanced")).abs() < 0.05 * bal, "{dname}");
+        }
+    }
+
+    #[test]
+    fn analytic_column_follows_closed_form_scope() {
+        // Exp-family rows carry an exact value; heavy-tail rows render
+        // the planned-but-refused analytic cell as "-".
+        let dir = std::env::temp_dir().join("batchrep_policies_scope_test");
+        let ctx = ExpContext { out_dir: dir.clone(), trials: 4_000, seed: 6 };
+        let tables = run(&ctx).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        for r in &tables[0].rows {
+            let heavy = r[1] == "false";
+            let overlapping = r[2] == "overlapping_cyclic";
+            if heavy || overlapping {
+                assert_eq!(r[5], "-", "{r:?}");
+            } else {
+                assert!(r[5].parse::<f64>().is_ok(), "{r:?}");
+            }
         }
     }
 }

@@ -7,14 +7,16 @@
 //!   at `B = 1`, so whenever `B* > 1` the mean-optimal operating point
 //!   is variance-suboptimal — the paper's mean–variance trade-off.
 //!
-//! All spectra are produced by [`paper_sweep`]: the same generic driver
-//! with the backend swapped (analytic for exact curves, Monte-Carlo for
-//! the validation column).
+//! E3 and E5 are one study each over the feasible-B axis (E3 with the
+//! `{analytic, montecarlo}` backend pair for the validation column, E5
+//! analytic-only with quantiles and cost); E4 stays on the raw
+//! closed-form optimizer (`bstar_sweep` — no scenarios involved).
 
 use super::ExpContext;
 use crate::analysis::{self, bstar_sweep};
+use crate::assignment::feasible_batch_counts;
 use crate::dist::{BatchService, ServiceSpec};
-use crate::evaluator::{paper_sweep, AnalyticEvaluator};
+use crate::study::BackendSel;
 use crate::util::table::{fmt_f, Table};
 
 /// Workers.
@@ -23,20 +25,27 @@ pub const N: u64 = 24;
 /// Run E3+E4+E5.
 pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     // --- E3: Exponential spectrum (Theorem 2) ---
-    let exp_service = BatchService::paper(ServiceSpec::exp(1.0));
     let mut e3 = Table::new(
         "Theorem 2 — Exp(1) service: E[T] and Var[T] vs B (B=1 optimal for both)",
         &["B", "E[T] analytic", "E[T] sim", "Var analytic", "Var sim"],
     );
-    let exact = paper_sweep(N as usize, &AnalyticEvaluator, &exp_service, ctx.seed)?;
-    let sim = paper_sweep(N as usize, &ctx.mc(), &exp_service, ctx.seed)?;
-    for (cf, mc) in exact.iter().zip(&sim) {
+    let e3_report = ctx.study(crate::study::StudySpec {
+        n_workers: vec![N as usize],
+        services: vec![BatchService::paper(ServiceSpec::exp(1.0))],
+        backends: vec![BackendSel::Analytic, BackendSel::MonteCarlo],
+        ..ctx.spec("thm2-exp-spectrum")
+    })?;
+    for &b in &feasible_batch_counts(N as usize) {
+        let cf = e3_report
+            .stats_where(&|c| c.b == b && c.backend == BackendSel::Analytic)?;
+        let mc = e3_report
+            .stats_where(&|c| c.b == b && c.backend == BackendSel::MonteCarlo)?;
         e3.row(vec![
-            cf.b.to_string(),
-            fmt_f(cf.stats.mean, 4),
-            fmt_f(mc.stats.mean, 4),
-            fmt_f(cf.stats.variance, 4),
-            fmt_f(mc.stats.variance, 4),
+            b.to_string(),
+            fmt_f(cf.mean, 4),
+            fmt_f(mc.mean, 4),
+            fmt_f(cf.variance, 4),
+            fmt_f(mc.variance, 4),
         ]);
     }
     ctx.emit("thm2_exp_spectrum", &e3)?;
@@ -65,7 +74,6 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
 
     // --- E5: mean–variance trade-off under SExp (Theorem 4) ---
     let sexp = ServiceSpec::shifted_exp(1.0, 0.2);
-    let sexp_service = BatchService::paper(sexp.clone());
     let mut e5 = Table::new(
         "Theorem 4 — SExp(1,0.2): Var[T] minimized at B=1 while E[T] is not \
          (the mean–variance trade-off)",
@@ -73,16 +81,22 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     );
     let b_star_mean = analysis::optimum_b(N, &sexp);
     let b_star_var = analysis::optimum_b_variance(N, &sexp);
-    let points = paper_sweep(N as usize, &AnalyticEvaluator, &sexp_service, ctx.seed)?;
-    for p in &points {
-        let b = p.b as u64;
+    let e5_report = ctx.study(crate::study::StudySpec {
+        n_workers: vec![N as usize],
+        services: vec![BatchService::paper(sexp)],
+        backends: vec![BackendSel::Analytic],
+        ..ctx.spec("thm4-tradeoff")
+    })?;
+    let bs = feasible_batch_counts(N as usize);
+    for &b in &bs {
+        let st = e5_report.stats_where(&|c| c.b == b)?;
         e5.row(vec![
             b.to_string(),
-            fmt_f(p.stats.mean, 4),
-            fmt_f(p.stats.variance, 4),
-            fmt_f(p.stats.stddev(), 4),
-            (b == b_star_mean).to_string(),
-            (b == b_star_var).to_string(),
+            fmt_f(st.mean, 4),
+            fmt_f(st.variance, 4),
+            fmt_f(st.stddev(), 4),
+            (b as u64 == b_star_mean).to_string(),
+            (b as u64 == b_star_var).to_string(),
         ]);
     }
     ctx.emit("thm4_tradeoff", &e5)?;
@@ -95,16 +109,17 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
         "Extension — tail latency and redundancy cost vs B (SExp(1,0.2), N=24)",
         &["B", "E[T]", "p50", "p99", "p99.9", "E[cost] (worker-s)", "cost/E[T]"],
     );
-    for p in &points {
-        let cost = p.stats.cost.expect("analytic backend reports cost").busy;
+    for &b in &bs {
+        let st = e5_report.stats_where(&|c| c.b == b)?;
+        let cost = st.cost.expect("analytic backend reports cost").busy;
         e5x.row(vec![
-            p.b.to_string(),
-            fmt_f(p.stats.mean, 4),
-            fmt_f(p.stats.quantile(0.5).unwrap(), 4),
-            fmt_f(p.stats.quantile(0.99).unwrap(), 4),
-            fmt_f(p.stats.quantile(0.999).unwrap(), 4),
+            b.to_string(),
+            fmt_f(st.mean, 4),
+            fmt_f(st.quantile(0.5).unwrap(), 4),
+            fmt_f(st.quantile(0.99).unwrap(), 4),
+            fmt_f(st.quantile(0.999).unwrap(), 4),
             fmt_f(cost, 3),
-            fmt_f(cost / p.stats.mean, 3),
+            fmt_f(cost / st.mean, 3),
         ]);
     }
     ctx.emit("ext_tail_and_cost", &e5x)?;

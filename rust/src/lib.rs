@@ -32,8 +32,23 @@
 //! Swapping backends is a one-line change; [`evaluator::cross_check`]
 //! asserts two backends agree on one scenario (the paper's Fig. 2
 //! theory-vs-simulation validation as an API call), and
-//! [`evaluator::sweep`] is the generic driver the [`experiments`] layer
-//! is built on.
+//! [`evaluator::sweep`] is the generic single-backend driver.
+//!
+//! ## The Study layer
+//!
+//! One scenario is rarely the question — the paper's results are
+//! *families* of scenarios. The [`study`] module is the second layer of
+//! the public API: a declarative [`study::StudySpec`] (axes over policy
+//! × redundancy × k-of-B × worker speeds × service spec × backend, plus
+//! trial budgets) compiles into a deduplicated
+//! [`study::ExecutionPlan`] — identical `(scenario, backend, trials)`
+//! cells are evaluated once and fanned out, analytic cells share one
+//! memo, and every Monte-Carlo/DES cell's logical shards run on one
+//! shared worker pool (bit-deterministic per seed for any thread
+//! count). Execution streams [`study::CellResult`]s and collects a
+//! versioned, schema-validated [`study::StudyReport`] artifact (JSON +
+//! CSV). The [`experiments`] drivers and the `batchrep study`/`batchrep
+//! evaluate` subcommands are built on it.
 //!
 //! Supporting layers:
 //!
@@ -101,6 +116,7 @@ pub mod evaluator;
 pub mod experiments;
 pub mod metrics;
 pub mod runtime;
+pub mod study;
 pub mod testkit;
 pub mod trace;
 pub mod util;

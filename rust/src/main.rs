@@ -4,13 +4,19 @@
 //!   analyze     closed-form diversity–parallelism spectrum (Theorems 2–4)
 //!   evaluate    run one scenario through any Evaluator backend(s) and
 //!               cross-check them (analytic | montecarlo | des | live | all)
+//!               — planned and executed as a one-point study
+//!   study       compile a declarative multi-scenario spec (preset or
+//!               spec.json) into a deduplicated plan, run it on the
+//!               shared pool, stream per-cell progress, and write a
+//!               schema-validated STUDY artifact (+ optional CSV)
 //!   simulate    Monte-Carlo + event-engine simulation of one scenario
 //!   experiment  regenerate paper figures/tables (fig2|policies|spectrum|
 //!               ablations|live|all)
 //!   train       run the live distributed-SGD System1 (PJRT backend)
 //!   mapsum      run one live distributed map-sum evaluation
 //!   conformance sweep generated scenarios through every backend pair
-//!               (z-bound tolerances, deterministic replay seeds)
+//!               (z-bound tolerances, deterministic replay seeds;
+//!               --long for the soak sweep)
 //!   bench-mc    Monte-Carlo throughput harness → BENCH_mc.json
 //!   bench-des   event-engine throughput harness → BENCH_des.json
 //!
@@ -26,9 +32,10 @@ use batchrep::config::SystemConfig;
 use batchrep::coordinator::{Backend, Coordinator};
 use batchrep::des::engine::Redundancy;
 use batchrep::evaluator::{
-    cross_check, AnalyticEvaluator, DesEvaluator, Evaluator, LiveEvaluator, MonteCarloEvaluator,
+    cross_check_stats, AnalyticEvaluator, DesEvaluator, Evaluator, MonteCarloEvaluator,
 };
 use batchrep::experiments::{self, ExpContext};
+use batchrep::study::{BackendSel, BatchAxis, KTarget, LiveKnobs, RedundancyAxis, StudySpec};
 use batchrep::util::table::{fmt_f, Table};
 
 const USAGE: &str = "\
@@ -40,6 +47,9 @@ USAGE:
                       [--config f] [--n-workers 24] [--n-batches 4] [--policy p]
                       [--service spec] [--trials 100000] [--seed 42] [--threads K]
                       [--speculative 1.5] [--rounds 30] [--live]
+  batchrep study      <smoke|fig2|tradeoff|policies|spec.json> [--fast]
+                      [--out STUDY.json] [--csv points.csv] [--threads K]
+                      [--seed S] [--quiet]
   batchrep simulate   [--config f] [--n-workers 12] [--n-batches 4] [--policy p]
                       [--service spec] [--trials 100000] [--seed 42]
                       [--overlapping] [--no-cancel] [--speculative 1.5]
@@ -49,8 +59,9 @@ USAGE:
   batchrep mapsum     [--config f] [--mock] [...]
   batchrep trace      [--n 100000] [--seed 42] [--out trace.csv]
                       [--p-enter 0.0026] [--p-exit 0.05] [--slowdown 8]
-  batchrep conformance [--fast] [--scenarios N] [--mc-trials N] [--des-trials N]
-                      [--live-rounds N] [--threads K] [--seed S] [--no-live]
+  batchrep conformance [--fast|--long] [--scenarios N] [--mc-trials N]
+                      [--des-trials N] [--live-rounds N] [--threads K]
+                      [--seed S] [--no-live]
   batchrep bench-mc   [--trials N] [--threads K] [--out BENCH_mc.json] [--fast]
   batchrep bench-des  [--trials N] [--threads K] [--out BENCH_des.json] [--fast]
 
@@ -106,6 +117,7 @@ fn run() -> anyhow::Result<()> {
     match args.subcommand() {
         Some("analyze") => cmd_analyze(&args),
         Some("evaluate") => cmd_evaluate(&args),
+        Some("study") => cmd_study(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("train") => cmd_train(&args),
@@ -149,7 +161,9 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The unified entry point: one scenario, any backend(s).
+/// The unified entry point: one scenario, any backend(s) — planned and
+/// executed as a one-point study, so dedup/canonicalization and the
+/// shared pool serve the CLI exactly like the experiment drivers.
 fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     let which = args.get_or::<String>("backend", "all".into())?;
     let rounds = args.get_or::<u64>("rounds", 30)?;
@@ -158,8 +172,9 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     let include_live = args.flag("live") || which == "live";
     let cfg = load_config(args)?;
     args.finish()?;
+    // Validate the config the same way the direct scenario path would
+    // (overlapping-vs-policy conflicts, k_of_b bounds, ...).
     let scn = cfg.scenario()?;
-
     println!(
         "scenario: N={} B={} policy={} service={} model={} redundancy={:?} seed={}",
         scn.n_workers(),
@@ -168,64 +183,92 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
         cfg.service.name(),
         cfg.batch_model.name(),
         scn.redundancy,
-        scn.seed
+        cfg.seed
     );
 
-    let live_backend = if batchrep::runtime::default_artifact_dir()
-        .join("manifest.json")
-        .exists()
-        && cfg!(feature = "pjrt")
-    {
-        Backend::Pjrt
-    } else {
-        Backend::Mock
-    };
-    let analytic = AnalyticEvaluator;
-    let mc = MonteCarloEvaluator { trials: cfg.trials, threads };
-    let des = DesEvaluator {
-        trials: (cfg.trials / 5).max(1),
-        threads,
-        cancellation: cfg.cancellation,
-        ..DesEvaluator::default()
-    };
-    let live = LiveEvaluator {
-        rounds,
-        backend: live_backend,
-        time_scale: cfg.time_scale,
-        n_samples: cfg.n_samples,
-        dim: cfg.dim,
-        cancellation: cfg.cancellation,
-        artifacts_dir: Some(cfg.artifacts_dir.clone()),
-    };
-    let mut backends: Vec<&dyn Evaluator> = Vec::new();
-    match which.as_str() {
-        "analytic" => backends.push(&analytic),
-        "montecarlo" => backends.push(&mc),
-        "des" => backends.push(&des),
-        "live" => backends.push(&live),
+    let mut backends: Vec<BackendSel> = match which.as_str() {
+        "analytic" => vec![BackendSel::Analytic],
+        "montecarlo" => vec![BackendSel::MonteCarlo],
+        "des" => vec![BackendSel::Des],
+        "live" => vec![BackendSel::Live],
         "all" => {
-            backends.push(&analytic);
-            backends.push(&mc);
-            backends.push(&des);
+            let mut v = vec![BackendSel::Analytic, BackendSel::MonteCarlo, BackendSel::Des];
             if include_live {
-                backends.push(&live);
+                v.push(BackendSel::Live);
             }
+            v
         }
         other => anyhow::bail!("unknown backend '{other}' (analytic|montecarlo|des|live|all)"),
+    };
+    if check {
+        // The cross-check gate always compares analytic vs montecarlo.
+        for b in [BackendSel::Analytic, BackendSel::MonteCarlo] {
+            if !backends.contains(&b) {
+                backends.push(b);
+            }
+        }
     }
+
+    let pjrt = batchrep::runtime::default_artifact_dir().join("manifest.json").exists()
+        && cfg!(feature = "pjrt");
+    let spec = StudySpec {
+        n_workers: vec![cfg.n_workers],
+        batches: BatchAxis::Explicit(vec![cfg.n_batches]),
+        policies: vec![cfg.replication_policy()],
+        services: vec![batchrep::dist::BatchService {
+            spec: cfg.service.clone(),
+            model: cfg.batch_model,
+        }],
+        redundancy: vec![if cfg.speculative > 0.0 {
+            RedundancyAxis::Speculative(cfg.speculative)
+        } else {
+            RedundancyAxis::Upfront
+        }],
+        k_targets: vec![if cfg.k_of_b > 0 {
+            KTarget::Exact(cfg.k_of_b)
+        } else {
+            KTarget::Full
+        }],
+        backends,
+        mc_trials: cfg.trials.max(1),
+        des_trials: (cfg.trials / 5).max(1),
+        live_rounds: rounds,
+        des_cancellation: cfg.cancellation,
+        live: LiveKnobs {
+            time_scale: cfg.time_scale,
+            n_samples: cfg.n_samples,
+            dim: cfg.dim,
+            pjrt,
+            artifacts_dir: Some(cfg.artifacts_dir.clone()),
+            cancellation: cfg.cancellation,
+        },
+        seed: cfg.seed,
+        ..StudySpec::base("evaluate")
+    };
+    let mut plan = spec.compile()?;
+    // CLI contract: `--seed` *is* the scenario seed, so `evaluate`
+    // stays bit-comparable with `batchrep simulate --seed` and prior
+    // releases (the planner's derived seeds exist for multi-point
+    // studies). The one-point grid is served by exactly the scenario
+    // the config describes — including its seed-derived assignment.
+    for cell in &mut plan.cells {
+        cell.scenario = scn.clone();
+    }
+    plan.scenarios = vec![scn.clone()];
+    let report = batchrep::study::execute(&plan, threads, &mut |_, _, _, _| {})?;
 
     let mut t = Table::new(
         "Completion time, one scenario across evaluator backends",
         &["backend", "E[T]", "ci95", "Var[T]", "p50", "p99", "busy cost", "samples"],
     );
-    for ev in &backends {
-        match ev.evaluate(&scn) {
-            Ok(st) => {
+    for cell in &report.cells {
+        match cell.stats() {
+            Some(st) => {
                 let q = |q: f64| {
                     st.quantile(q).map(|v| fmt_f(v, 4)).unwrap_or_else(|| "-".into())
                 };
                 t.row(vec![
-                    ev.name().to_string(),
+                    cell.backend.name().to_string(),
                     fmt_f(st.mean, 4),
                     fmt_f(st.ci95(), 4),
                     fmt_f(st.variance, 4),
@@ -235,10 +278,10 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
                     st.samples.to_string(),
                 ]);
             }
-            Err(e) => {
+            None => {
                 t.row(vec![
-                    ev.name().to_string(),
-                    format!("n/a ({e})"),
+                    cell.backend.name().to_string(),
+                    format!("n/a ({})", cell.refusal().unwrap_or("refused")),
                     "-".into(),
                     "-".into(),
                     "-".into(),
@@ -252,12 +295,110 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     t.print();
 
     if check {
-        let ck = cross_check(&analytic, &mc, &scn)?;
+        let an = report
+            .stats_where(&|c| c.backend == BackendSel::Analytic)?
+            .clone();
+        let mc = report
+            .stats_where(&|c| c.backend == BackendSel::MonteCarlo)?
+            .clone();
+        let ck = cross_check_stats("analytic", "montecarlo", an, mc)?;
         println!(
             "cross-check analytic vs montecarlo: |diff| {:.6} <= tol {:.6}  OK",
             ck.mean_diff, ck.tolerance
         );
     }
+    Ok(())
+}
+
+/// The declarative sweep entry point: load a preset or spec file,
+/// compile it into a deduplicated plan, execute on the shared pool with
+/// streaming progress, write + validate the STUDY artifact, optionally
+/// emit CSV.
+fn cmd_study(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positionals
+        .get(1)
+        .cloned()
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "usage: batchrep study <spec.json|{}> [--fast] [--out f] [--csv f]",
+                StudySpec::preset_names().join("|")
+            )
+        })?;
+    let fast = args.flag("fast") || std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let quiet = args.flag("quiet");
+    let threads =
+        args.get_or::<usize>("threads", batchrep::evaluator::auto_threads())?;
+    let seed = args.get::<u64>("seed")?;
+    let csv = args.get::<String>("csv")?;
+    let mut spec = StudySpec::load(&which)?;
+    if let Some(s) = seed {
+        spec.seed = s;
+    }
+    if fast {
+        spec = spec.fast();
+    }
+    let out = args.get_or::<String>("out", format!("STUDY_{}.json", spec.name))?;
+    args.finish()?;
+
+    let plan = spec.compile()?;
+    println!(
+        "study '{}': {} axis points -> {} unique cells ({} deduplicated away, {} \
+         analytic / {} montecarlo / {} des / {} live), seed {}",
+        spec.name,
+        plan.axis_points(),
+        plan.cells.len(),
+        plan.deduped_points(),
+        plan.backend_cells(BackendSel::Analytic),
+        plan.backend_cells(BackendSel::MonteCarlo),
+        plan.backend_cells(BackendSel::Des),
+        plan.backend_cells(BackendSel::Live),
+        spec.seed
+    );
+    let timer = batchrep::util::Timer::start();
+    let report = batchrep::study::execute(&plan, threads, &mut |cell, res, done, total| {
+        if quiet {
+            return;
+        }
+        match res.stats() {
+            Some(st) => println!(
+                "  [{done}/{total}] {:<10} {}  E[T] {:.4}  ci95 {:.4}",
+                cell.backend.name(),
+                cell.key,
+                st.mean,
+                st.ci95()
+            ),
+            None => println!(
+                "  [{done}/{total}] {:<10} {}  refused: {}",
+                cell.backend.name(),
+                cell.key,
+                res.refusal().unwrap_or("(no message)")
+            ),
+        }
+    })?;
+    let elapsed = timer.secs();
+
+    let path = std::path::Path::new(&out);
+    report.write(path)?;
+    // The CI gate: a malformed artifact is an error, not a warning.
+    batchrep::study::validate_file(path)?;
+    if let Some(csv_path) = csv {
+        report.write_csv(std::path::Path::new(&csv_path))?;
+        println!("csv points written to {csv_path}");
+    }
+
+    let mut t = Table::new(
+        &format!("study '{}' — plan and outcome", spec.name),
+        &["metric", "value"],
+    );
+    t.row(vec!["axis points".into(), report.axis_points.to_string()]);
+    t.row(vec!["unique cells".into(), report.unique_cells.to_string()]);
+    t.row(vec!["deduplicated points".into(), report.deduped_points.to_string()]);
+    t.row(vec!["refused cells".into(), report.refused_cells.to_string()]);
+    t.row(vec!["threads".into(), threads.to_string()]);
+    t.row(vec!["elapsed".into(), format!("{elapsed:.3}s")]);
+    t.print();
+    println!("study artifact written to {out} (schema v{})", batchrep::study::SCHEMA_VERSION);
     Ok(())
 }
 
@@ -407,8 +548,12 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
 /// replay seed.
 fn cmd_conformance(args: &Args) -> anyhow::Result<()> {
     let fast = args.flag("fast") || std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let long = args.flag("long");
+    anyhow::ensure!(!(fast && long), "--fast and --long are mutually exclusive");
     let mut opts = if fast {
         batchrep::conformance::MatrixOptions::fast()
+    } else if long {
+        batchrep::conformance::MatrixOptions::long()
     } else {
         batchrep::conformance::MatrixOptions::full()
     };

@@ -13,6 +13,11 @@ pub struct JobRecord {
     pub completion_s: f64,
     /// Injected (simulated-service) completion time, seconds.
     pub injected_s: f64,
+    /// Wall-clock seconds from round start until the last task of the
+    /// round was handed to its worker channel (sampling + dispatch) —
+    /// one component of the wall-vs-injected overhead the
+    /// `LiveEvaluator` surfaces as `OverheadStats`.
+    pub dispatch_s: f64,
     /// Number of replica tasks dispatched.
     pub dispatched: u64,
     /// Replica results that arrived after their batch was already
@@ -162,6 +167,7 @@ mod tests {
             job_id: id,
             completion_s: wall,
             injected_s: wall * 0.9,
+            dispatch_s: wall * 0.01,
             dispatched: 8,
             redundant: 1,
             cancelled: 3,

@@ -1,0 +1,504 @@
+//! Plan execution: one shared worker pool for every Monte-Carlo and DES
+//! cell of a study, serial analytic/live cells on the coordinating
+//! thread, streaming [`CellResult`]s as cells complete.
+//!
+//! ## Determinism
+//!
+//! Each MC/DES cell is split into the same fixed logical shards its
+//! standalone evaluator would use (`des::montecarlo::shard_plan`
+//! keyed by the cell's `(trials, scenario.seed)`), and the resulting
+//! `(cell, shard)` work items are claimed by pool workers in arbitrary
+//! order. Because every shard owns an independent RNG substream and a
+//! cell's shard summaries are merged **in shard-index order** once its
+//! last shard lands, each cell's [`CompletionStats`] is bit-identical to
+//! what `MonteCarloEvaluator`/`DesEvaluator` would produce — for any
+//! thread count and any interleaving with other cells. Only the
+//! *streaming order* of the progress callback depends on scheduling;
+//! the collected [`StudyReport`] does not (live cells excepted: they
+//! measure wall clock).
+//!
+//! ## Resource sharing
+//!
+//! The pool spans the whole study, so a straggling cell no longer
+//! serializes the sweep: workers drain shards of whatever cell still
+//! has work. Analytic cells all run on the coordinating thread while
+//! the pool works, grouped by cell key, so the entire study shares one
+//! thread-local `ct_cache` memo (`analysis::completion_time_stats`).
+//! Live cells run **after** the pool has fully drained, so their
+//! wall-clock overhead numbers are measured without scheduler
+//! contention from the shard workers.
+
+use super::report::{CellOutcome, CellResult, StudyReport};
+use super::{BackendSel, ExecutionPlan, PlannedCell};
+use crate::coordinator::Backend;
+use crate::des::engine::{self, EngineConfig, EngineSummary, Redundancy, Workspace};
+use crate::des::montecarlo::{self, McSummary, TrialScratch};
+use crate::evaluator::{
+    stats_from_des, stats_from_mc, AnalyticEvaluator, CompletionStats, Evaluator, LiveEvaluator,
+};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Which simulation family a pooled cell belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Mc,
+    Des,
+}
+
+/// A completed shard of one pooled cell.
+enum ShardOut {
+    Mc(McSummary),
+    Des(EngineSummary),
+}
+
+/// One `(cell, shard)` work item of the shared pool.
+struct Item {
+    cell: usize,
+    acc: usize,
+    shard: usize,
+    trials: u64,
+    rng: crate::util::rng::Rng,
+    kind: Kind,
+    keep: u64,
+}
+
+/// Shard slots of one pooled cell; merged in shard-index order when
+/// `remaining` reaches zero.
+struct Acc {
+    slots: Vec<Option<ShardOut>>,
+    remaining: usize,
+}
+
+/// Execute a compiled plan on up to `threads` pool workers, invoking
+/// `on_cell(cell, result, completed, total)` from the coordinating
+/// thread as each cell finishes (in completion order), and return the
+/// collected [`StudyReport`] (in plan order — deterministic per seed
+/// for any `threads`).
+///
+/// Backend refusals (e.g. the analytic backend on an out-of-scope
+/// scenario, Monte-Carlo on speculative redundancy) are recorded as
+/// [`CellOutcome::Refused`] with the backend's own message rather than
+/// aborting the study.
+pub fn execute(
+    plan: &ExecutionPlan,
+    threads: usize,
+    on_cell: &mut dyn FnMut(&PlannedCell, &CellResult, usize, usize),
+) -> anyhow::Result<StudyReport> {
+    let total = plan.cells.len();
+    let mut results: Vec<Option<CellResult>> = plan.cells.iter().map(|_| None).collect();
+    let mut done = 0usize;
+
+    // Partition: analytic cells run serially on this thread while the
+    // pool works; live cells run serially *after* the pool drains, so
+    // their wall-clock measurements (the OverheadStats this layer
+    // surfaces) are not contaminated by scheduler contention from the
+    // saturated shard pool. MC/DES cells are pooled. Monte-Carlo cells
+    // outside the sampler's scope are refused at plan time, mirroring
+    // the evaluator's check.
+    let mut serial: Vec<usize> = Vec::new();
+    let mut live_cells: Vec<usize> = Vec::new();
+    let mut pool: Vec<(usize, Kind)> = Vec::new();
+    for (i, c) in plan.cells.iter().enumerate() {
+        match c.backend {
+            BackendSel::Analytic => serial.push(i),
+            BackendSel::Live => live_cells.push(i),
+            BackendSel::Des => pool.push((i, Kind::Des)),
+            BackendSel::MonteCarlo => {
+                if c.scenario.redundancy == Redundancy::Upfront {
+                    pool.push((i, Kind::Mc));
+                } else {
+                    results[i] = Some(refused(
+                        c,
+                        format!(
+                            "monte-carlo evaluator models upfront replication only; \
+                             Scenario::redundancy = {:?} is unsupported (use the des \
+                             backend for speculative redundancy)",
+                            c.scenario.redundancy
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    for (i, c) in plan.cells.iter().enumerate() {
+        if let Some(r) = &results[i] {
+            done += 1;
+            on_cell(c, r, done, total);
+        }
+    }
+    // Group the analytic leg by cell key, so same-service/same-cluster
+    // cells are adjacent and all hit the one coordinating-thread
+    // ct_cache memo.
+    serial.sort_by(|&a, &b| plan.cells[a].key.cmp(&plan.cells[b].key));
+
+    // Flatten pooled cells into (cell, shard) work items over the
+    // shared 64-logical-shard plan.
+    let mut items: Vec<Item> = Vec::new();
+    let mut accs: Vec<Mutex<Acc>> = Vec::new();
+    for &(ci, kind) in &pool {
+        let c = &plan.cells[ci];
+        let shards = montecarlo::shard_plan(c.trials, c.scenario.seed);
+        let keep = montecarlo::keep_every(c.trials);
+        let acc = accs.len();
+        accs.push(Mutex::new(Acc {
+            slots: (0..shards.len()).map(|_| None).collect(),
+            remaining: shards.len(),
+        }));
+        for (shard, (trials, rng)) in shards.into_iter().enumerate() {
+            items.push(Item { cell: ci, acc, shard, trials, rng, kind, keep });
+        }
+    }
+
+    let next = AtomicUsize::new(0);
+    let workers = threads.max(1).min(items.len());
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, CellResult)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let txc = tx.clone();
+            let next = &next;
+            let items = &items;
+            let accs = &accs;
+            scope.spawn(move || {
+                let mut scratch = TrialScratch::new();
+                let mut ws = Workspace::default();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let it = &items[i];
+                    let c = &plan.cells[it.cell];
+                    let out = match it.kind {
+                        Kind::Mc => ShardOut::Mc(montecarlo::run_shard(
+                            &c.scenario,
+                            it.trials,
+                            it.rng.clone(),
+                            it.keep,
+                            &mut scratch,
+                        )),
+                        Kind::Des => {
+                            let cfg = EngineConfig {
+                                cancellation: plan.spec.des_cancellation,
+                                redundancy: c.scenario.redundancy,
+                                fail_prob: 0.0,
+                                relaunch_timeout_factor: 3.0,
+                            };
+                            ShardOut::Des(engine::simulate_shard(
+                                &c.scenario,
+                                &cfg,
+                                it.trials,
+                                it.rng.clone(),
+                                it.keep,
+                                &mut ws,
+                            ))
+                        }
+                    };
+                    let mut acc = accs[it.acc].lock().expect("no shard panicked with the lock");
+                    acc.slots[it.shard] = Some(out);
+                    acc.remaining -= 1;
+                    if acc.remaining == 0 {
+                        let res = merge_cell(c, &mut acc.slots);
+                        // The receiver outlives every sender inside this
+                        // scope; a send can only fail on coordinator
+                        // panic, which aborts the study anyway.
+                        let _ = txc.send((it.cell, res));
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        // Analytic cells on the coordinating thread while the pool works.
+        for &ci in &serial {
+            let c = &plan.cells[ci];
+            let res = from_eval(c, AnalyticEvaluator.evaluate(&c.scenario));
+            done += 1;
+            on_cell(c, &res, done, total);
+            results[ci] = Some(res);
+        }
+
+        // Drain pooled completions; ends when every worker has dropped
+        // its sender.
+        for (ci, res) in rx {
+            done += 1;
+            on_cell(&plan.cells[ci], &res, done, total);
+            results[ci] = Some(res);
+        }
+    });
+
+    // Live cells last, with every pool thread joined: their wall-clock
+    // numbers (dispatch/channel/aggregation overhead) are measured on
+    // an otherwise idle process.
+    for &ci in &live_cells {
+        let c = &plan.cells[ci];
+        let lk = &plan.spec.live;
+        let live = LiveEvaluator {
+            rounds: c.trials.max(1),
+            backend: if lk.pjrt { Backend::Pjrt } else { Backend::Mock },
+            time_scale: lk.time_scale,
+            n_samples: lk.n_samples,
+            dim: lk.dim,
+            cancellation: lk.cancellation,
+            artifacts_dir: lk.artifacts_dir.clone(),
+        };
+        let res = from_eval(c, live.evaluate(&c.scenario));
+        done += 1;
+        on_cell(c, &res, done, total);
+        results[ci] = Some(res);
+    }
+
+    let cells: Vec<CellResult> = results
+        .into_iter()
+        .map(|r| r.expect("every planned cell produced a result"))
+        .collect();
+    let refused_cells =
+        cells.iter().filter(|c| matches!(c.outcome, CellOutcome::Refused(_))).count() as u64;
+    Ok(StudyReport {
+        name: plan.spec.name.clone(),
+        seed: plan.spec.seed,
+        quantiles: plan.spec.quantiles,
+        cost: plan.spec.cost,
+        axis_points: plan.points.len() as u64,
+        unique_cells: cells.len() as u64,
+        deduped_points: plan.deduped_points() as u64,
+        refused_cells,
+        points: plan.points.clone(),
+        cells,
+    })
+}
+
+fn refused(c: &PlannedCell, msg: String) -> CellResult {
+    CellResult {
+        key: c.key.clone(),
+        backend: c.backend,
+        trials: c.trials,
+        outcome: CellOutcome::Refused(msg),
+    }
+}
+
+fn from_eval(c: &PlannedCell, r: anyhow::Result<CompletionStats>) -> CellResult {
+    CellResult {
+        key: c.key.clone(),
+        backend: c.backend,
+        trials: c.trials,
+        outcome: match r {
+            Ok(st) => CellOutcome::Stats(st),
+            Err(e) => CellOutcome::Refused(format!("{e:#}")),
+        },
+    }
+}
+
+/// Merge a pooled cell's shard summaries through the *same* shard-merge
+/// and stats-assembly code the standalone evaluators use
+/// (`merge_shard_summaries` + `stats_from_mc`/`stats_from_des`), so the
+/// pool reproduces `MonteCarloEvaluator`/`DesEvaluator` by
+/// construction, not by parallel maintenance.
+fn merge_cell(c: &PlannedCell, slots: &mut [Option<ShardOut>]) -> CellResult {
+    let stats = match c.backend {
+        BackendSel::MonteCarlo => {
+            stats_from_mc(montecarlo::merge_shard_summaries(slots.iter_mut().map(|s| {
+                match s.take() {
+                    Some(ShardOut::Mc(sh)) => sh,
+                    _ => unreachable!("monte-carlo cell holds monte-carlo shards"),
+                }
+            })))
+        }
+        BackendSel::Des => {
+            stats_from_des(engine::merge_shard_summaries(slots.iter_mut().map(|s| {
+                match s.take() {
+                    Some(ShardOut::Des(sh)) => sh,
+                    _ => unreachable!("des cell holds des shards"),
+                }
+            })))
+        }
+        _ => unreachable!("serial cells are never pooled"),
+    };
+    CellResult {
+        key: c.key.clone(),
+        backend: c.backend,
+        trials: c.trials,
+        outcome: CellOutcome::Stats(stats),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{BatchService, ServiceSpec};
+    use crate::evaluator::{DesEvaluator, MonteCarloEvaluator};
+    use crate::study::{BatchAxis, KTarget, RedundancyAxis, StudySpec};
+
+    fn small_spec() -> StudySpec {
+        StudySpec {
+            n_workers: vec![12],
+            batches: BatchAxis::Explicit(vec![3, 4]),
+            services: vec![BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.2))],
+            backends: vec![BackendSel::Analytic, BackendSel::MonteCarlo, BackendSel::Des],
+            mc_trials: 6_000,
+            des_trials: 2_000,
+            seed: 11,
+            ..StudySpec::base("exec-test")
+        }
+    }
+
+    #[test]
+    fn pooled_cells_match_their_standalone_evaluators_bitwise() {
+        // The acceptance bar of the shared pool: interleaving shards of
+        // many cells across one pool must not change any cell's result
+        // relative to the standalone evaluator at the same
+        // (scenario, trials, seed).
+        let plan = small_spec().compile().unwrap();
+        let report = execute(&plan, 4, &mut |_, _, _, _| {}).unwrap();
+        for (i, cell) in plan.cells.iter().enumerate() {
+            let got = report.cells[i].stats().expect("no refusals in this grid");
+            let want = match cell.backend {
+                BackendSel::Analytic => {
+                    AnalyticEvaluator.evaluate(&cell.scenario).unwrap()
+                }
+                BackendSel::MonteCarlo => MonteCarloEvaluator {
+                    trials: cell.trials,
+                    threads: 3,
+                }
+                .evaluate(&cell.scenario)
+                .unwrap(),
+                BackendSel::Des => DesEvaluator {
+                    trials: cell.trials,
+                    threads: 2,
+                    ..DesEvaluator::default()
+                }
+                .evaluate(&cell.scenario)
+                .unwrap(),
+                BackendSel::Live => unreachable!(),
+            };
+            assert_eq!(got.mean.to_bits(), want.mean.to_bits(), "{}", cell.key);
+            assert_eq!(got.variance.to_bits(), want.variance.to_bits(), "{}", cell.key);
+            assert_eq!(got.sem.to_bits(), want.sem.to_bits(), "{}", cell.key);
+            assert_eq!(got.samples, want.samples, "{}", cell.key);
+            assert_eq!(got.quantiles, want.quantiles, "{}", cell.key);
+            match (&got.cost, &want.cost) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.busy.to_bits(), b.busy.to_bits(), "{}", cell.key);
+                    assert_eq!(a.wasted.to_bits(), b.wasted.to_bits(), "{}", cell.key);
+                }
+                other => panic!("cost mismatch for {}: {other:?}", cell.key),
+            }
+        }
+    }
+
+    #[test]
+    fn report_is_bit_deterministic_for_any_thread_count() {
+        // The acceptance property: the collected report (serialized
+        // artifact included) is identical for threads ∈ {1, 2, 4, 8}.
+        let plan = small_spec().compile().unwrap();
+        let baseline = execute(&plan, 1, &mut |_, _, _, _| {}).unwrap().to_json().to_string();
+        for threads in [2usize, 4, 8] {
+            let run = execute(&plan, threads, &mut |_, _, _, _| {}).unwrap();
+            assert_eq!(
+                run.to_json().to_string(),
+                baseline,
+                "report diverged at {threads} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_reports_every_cell_exactly_once() {
+        let plan = small_spec().compile().unwrap();
+        let mut seen: Vec<String> = Vec::new();
+        let mut last = 0usize;
+        let report = execute(&plan, 2, &mut |cell, res, done, total| {
+            assert_eq!(total, plan.cells.len());
+            assert_eq!(done, last + 1, "completion counter is monotone");
+            last = done;
+            assert_eq!(cell.key, res.key);
+            seen.push(res.key.clone());
+        })
+        .unwrap();
+        assert_eq!(seen.len(), plan.cells.len());
+        let mut sorted = seen.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), seen.len(), "no cell streamed twice");
+        assert_eq!(report.cells.len(), plan.cells.len());
+        assert_eq!(report.axis_points as usize, plan.points.len());
+    }
+
+    #[test]
+    fn refusals_are_recorded_not_fatal() {
+        // Monte-Carlo under speculative redundancy and analytic on a
+        // heavy-tail spec both refuse; DES serves every cell.
+        let spec = StudySpec {
+            n_workers: vec![8],
+            batches: BatchAxis::Explicit(vec![2]),
+            services: vec![BatchService::paper(ServiceSpec::pareto(0.5, 3.5))],
+            redundancy: vec![RedundancyAxis::Speculative(1.5)],
+            backends: vec![BackendSel::Analytic, BackendSel::MonteCarlo, BackendSel::Des],
+            mc_trials: 1_000,
+            des_trials: 1_000,
+            ..StudySpec::base("refusal-test")
+        };
+        let plan = spec.compile().unwrap();
+        let report = execute(&plan, 2, &mut |_, _, _, _| {}).unwrap();
+        assert_eq!(report.refused_cells, 2);
+        let refusal_of = |b: BackendSel| {
+            report
+                .cells
+                .iter()
+                .find(|c| c.backend == b)
+                .and_then(|c| c.refusal())
+                .map(str::to_string)
+        };
+        let mc = refusal_of(BackendSel::MonteCarlo).expect("mc cell refused");
+        assert!(mc.contains("Scenario::redundancy"), "{mc}");
+        let an = refusal_of(BackendSel::Analytic).expect("analytic cell refused");
+        assert!(an.contains("Scenario::redundancy") || an.contains("service"), "{an}");
+        assert!(refusal_of(BackendSel::Des).is_none(), "des serves every cell");
+    }
+
+    #[test]
+    fn k_of_b_and_redundancy_cells_flow_through_the_pool() {
+        // A grid reaching the partial-aggregation closed form and the
+        // speculative engine path: analytic↔MC agreement on the k cell,
+        // and the speculative DES cell is slower but cheaper than
+        // upfront (Ablation 3's invariant, now planner-served).
+        let spec = StudySpec {
+            n_workers: vec![12],
+            batches: BatchAxis::Explicit(vec![4]),
+            services: vec![BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.2))],
+            redundancy: vec![RedundancyAxis::Upfront, RedundancyAxis::Speculative(1.5)],
+            k_targets: vec![KTarget::Full, KTarget::Exact(2)],
+            backends: vec![BackendSel::Analytic, BackendSel::MonteCarlo, BackendSel::Des],
+            mc_trials: 40_000,
+            des_trials: 15_000,
+            seed: 5,
+            ..StudySpec::base("k-spec-test")
+        };
+        let plan = spec.compile().unwrap();
+        let report = execute(&plan, 4, &mut |_, _, _, _| {}).unwrap();
+        let stats = |f: &dyn Fn(&crate::study::PointCoords) -> bool| {
+            report.stats_where(f).expect("cell present and served").clone()
+        };
+        let upfront = |c: &crate::study::PointCoords| c.redundancy_idx == 0;
+        let an_k =
+            stats(&|c| upfront(c) && c.k_of_b == Some(2) && c.backend == BackendSel::Analytic);
+        let mc_k =
+            stats(&|c| upfront(c) && c.k_of_b == Some(2) && c.backend == BackendSel::MonteCarlo);
+        assert!(
+            (an_k.mean - mc_k.mean).abs() <= (4.0 * mc_k.sem).max(0.01 * an_k.mean),
+            "analytic {} vs mc {}",
+            an_k.mean,
+            mc_k.mean
+        );
+        let des_up = stats(&|c| upfront(c) && c.k_of_b.is_none() && c.backend == BackendSel::Des);
+        let des_spec = stats(&|c| {
+            c.redundancy_idx == 1 && c.k_of_b.is_none() && c.backend == BackendSel::Des
+        });
+        assert!(des_spec.mean > des_up.mean, "speculative must be slower");
+        assert!(
+            des_spec.cost.unwrap().busy < des_up.cost.unwrap().busy,
+            "speculative must be cheaper"
+        );
+    }
+}

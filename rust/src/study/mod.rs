@@ -1,0 +1,1459 @@
+//! The declarative **Study** layer: compile multi-scenario sweeps into
+//! deduplicated, shared-resource execution plans with streaming results.
+//!
+//! The paper's results are all *families* of scenarios — Fig. 2 sweeps
+//! redundancy levels, the E[T]-vs-Var(T) trade-off sweeps ∆/µ grids, and
+//! the diversity/parallelism and clone-scheduling literature both demand
+//! dense grids over `(N, B, r, k, spec)`. A [`StudySpec`] describes such
+//! a family declaratively — axes over cluster size × batch count ×
+//! [`ReplicationPolicy`] × service spec × redundancy mode × k-of-B ×
+//! worker speeds × backend, plus trial budgets and requested statistics
+//! — and [`StudySpec::compile`] turns it into an [`ExecutionPlan`]:
+//!
+//! * **Canonicalized** — axis points are normalized before keying
+//!   (`k = B` collapses to full completion on disjoint layouts,
+//!   all-ones speed vectors to a homogeneous cluster, and batch counts that a policy ignores —
+//!   `FullDiversity` is always one batch, `FullParallelism` always `N`
+//!   — collapse to their canonical value), so equivalent requests are
+//!   recognized as one cell.
+//! * **Deduplicated** — identical `(scenario, backend, trials)` cells
+//!   are planned **once** and fanned out to every axis point that
+//!   requested them; `ExecutionPlan::deduped_points` counts the saved
+//!   evaluations.
+//! * **Shared-resource** — Monte-Carlo and DES cells are flattened into
+//!   `(cell, shard)` work items over the fixed 64-logical-shard plan
+//!   (`des::montecarlo::shard_plan`) and executed on **one** worker pool
+//!   spanning the whole study, so cores stay saturated *across* cells
+//!   instead of per-cell, while per-cell results stay bit-identical to
+//!   the standalone `MonteCarloEvaluator`/`DesEvaluator` for any thread
+//!   count. Analytic cells all run on the coordinating thread (grouped
+//!   by cell key), so the whole study shares one thread-local `ct_cache`
+//!   memo.
+//! * **Streaming** — [`execute`](exec::execute) reports every cell through a
+//!   progress callback as it completes and collects everything into a
+//!   [`StudyReport`] with a versioned, schema-validated JSON artifact
+//!   (plus CSV emit for plotting).
+//!
+//! Scenario seeds are derived deterministically from
+//! `(StudySpec::seed, canonical cell key)`, so a study is reproducible
+//! from its spec alone and the report is bit-deterministic per seed for
+//! **any** thread count (live cells excepted — they measure wall clock).
+
+pub mod exec;
+pub mod report;
+
+pub use exec::execute;
+pub use report::{
+    validate_file, validate_json, CellOutcome, CellResult, StudyReport, SCHEMA_VERSION,
+};
+
+use crate::des::engine::Redundancy;
+use crate::des::Scenario;
+use crate::dist::{BatchModel, BatchService, ServiceSpec};
+use crate::evaluator::ReplicationPolicy;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------------
+// Axes
+// ---------------------------------------------------------------------
+
+/// Which evaluation backend a cell runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendSel {
+    /// Closed forms (exact or provably bounded; trial budget 0).
+    Analytic,
+    /// Block-sampled Monte-Carlo trials (`StudySpec::mc_trials`).
+    MonteCarlo,
+    /// Discrete-event engine trials (`StudySpec::des_trials`).
+    Des,
+    /// The live coordinator with injected time (`StudySpec::live_rounds`
+    /// rounds; wall-clock, not bit-deterministic).
+    Live,
+}
+
+impl BackendSel {
+    /// Every backend, in canonical order.
+    pub fn all() -> &'static [BackendSel] {
+        &[BackendSel::Analytic, BackendSel::MonteCarlo, BackendSel::Des, BackendSel::Live]
+    }
+
+    /// Stable identifier (spec files, artifacts, tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendSel::Analytic => "analytic",
+            BackendSel::MonteCarlo => "montecarlo",
+            BackendSel::Des => "des",
+            BackendSel::Live => "live",
+        }
+    }
+
+    /// Parse a backend name.
+    pub fn parse(s: &str) -> anyhow::Result<BackendSel> {
+        BackendSel::all()
+            .iter()
+            .copied()
+            .find(|b| b.name() == s)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown backend '{s}' (accepted: analytic, montecarlo, des, live)"
+                )
+            })
+    }
+}
+
+/// Batch-count axis.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BatchAxis {
+    /// Every feasible batch count of each cluster size (the divisors of
+    /// `N` — the paper's spectrum).
+    Feasible,
+    /// An explicit list of batch counts.
+    Explicit(Vec<usize>),
+}
+
+/// Redundancy-mode axis entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RedundancyAxis {
+    /// All replicas start at t = 0 (the paper's model).
+    Upfront,
+    /// Speculative relaunch with the given deadline factor.
+    Speculative(f64),
+}
+
+impl RedundancyAxis {
+    /// The engine-level redundancy mode.
+    pub fn to_redundancy(self) -> Redundancy {
+        match self {
+            RedundancyAxis::Upfront => Redundancy::Upfront,
+            RedundancyAxis::Speculative(f) => Redundancy::Speculative { deadline_factor: f },
+        }
+    }
+
+    /// Stable label (spec files, cell keys, CSV).
+    pub fn label(self) -> String {
+        match self {
+            RedundancyAxis::Upfront => "upfront".to_string(),
+            RedundancyAxis::Speculative(f) => format!("speculative:{f}"),
+        }
+    }
+
+    /// Parse `upfront` or `speculative:FACTOR`.
+    pub fn parse(s: &str) -> anyhow::Result<RedundancyAxis> {
+        if s == "upfront" {
+            return Ok(RedundancyAxis::Upfront);
+        }
+        if let Some(rest) = s.strip_prefix("speculative:") {
+            let f: f64 = rest.trim().parse().map_err(|e| {
+                anyhow::anyhow!("bad speculative deadline factor '{rest}': {e}")
+            })?;
+            anyhow::ensure!(f > 0.0, "speculative deadline factor must be positive, got {f}");
+            return Ok(RedundancyAxis::Speculative(f));
+        }
+        anyhow::bail!(
+            "unknown redundancy mode '{s}' (accepted: upfront, speculative:FACTOR)"
+        )
+    }
+}
+
+/// k-of-B partial-aggregation axis entry. On disjoint layouts,
+/// resolution canonicalizes `k = B` to full completion, so `Full`,
+/// `Fraction(1.0)`, and `Exact(B)` all plan the same cell. Overlapping
+/// layouts keep `k = B`: their native full completion is the *coverage*
+/// rule (finished windows covering every unit, possibly before every
+/// window finishes), a strictly different — earlier — event than
+/// waiting for the B-th window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KTarget {
+    /// Wait for every batch.
+    Full,
+    /// Wait for the earliest `round(f · B)` batches (clamped to `[1, B]`).
+    Fraction(f64),
+    /// Wait for the earliest `k` batches exactly (`1 ≤ k ≤ B` required).
+    Exact(usize),
+}
+
+impl KTarget {
+    /// Resolve against a scenario's effective batch count; `None` means
+    /// the scenario's native full completion. `collapse_full` controls
+    /// whether `k = B` canonicalizes to `None` — true for disjoint
+    /// layouts (where the two are the same event), false for
+    /// overlapping layouts (where full completion is the earlier
+    /// coverage rule).
+    pub fn resolve(self, eff_b: usize, collapse_full: bool) -> anyhow::Result<Option<usize>> {
+        let k = match self {
+            KTarget::Full => return Ok(None),
+            KTarget::Fraction(f) => {
+                anyhow::ensure!(
+                    f > 0.0 && f <= 1.0,
+                    "k-of-B fraction must be in (0, 1], got {f}"
+                );
+                ((f * eff_b as f64).round() as usize).clamp(1, eff_b)
+            }
+            KTarget::Exact(k) => {
+                anyhow::ensure!(
+                    k >= 1 && k <= eff_b,
+                    "k-of-B target must satisfy 1 <= k <= B (got k={k}, B={eff_b})"
+                );
+                k
+            }
+        };
+        Ok(if k == eff_b && collapse_full { None } else { Some(k) })
+    }
+
+    /// Stable label (spec files, CSV).
+    pub fn label(self) -> String {
+        match self {
+            KTarget::Full => "full".to_string(),
+            KTarget::Fraction(f) => format!("frac:{f}"),
+            KTarget::Exact(k) => format!("k:{k}"),
+        }
+    }
+
+    /// Parse a label: `full`, `k:N`, or `frac:F`.
+    pub fn parse(s: &str) -> anyhow::Result<KTarget> {
+        if s == "full" {
+            return Ok(KTarget::Full);
+        }
+        if let Some(rest) = s.strip_prefix("k:") {
+            let k: usize = rest
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad k-of-B target '{s}': {e}"))?;
+            anyhow::ensure!(k >= 1, "k-of-B target must be >= 1, got {k}");
+            return Ok(KTarget::Exact(k));
+        }
+        if let Some(rest) = s.strip_prefix("frac:") {
+            let f: f64 = rest
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad k-of-B fraction '{s}': {e}"))?;
+            anyhow::ensure!(
+                f > 0.0 && f <= 1.0,
+                "k-of-B fraction must be in (0, 1], got {f}"
+            );
+            return Ok(KTarget::Fraction(f));
+        }
+        anyhow::bail!("unknown k-of-B target '{s}' (accepted: full, k:N, frac:F)")
+    }
+}
+
+/// Worker-speed axis entry. Resolution canonicalizes an all-ones speed
+/// vector to the homogeneous cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpeedAxis {
+    /// Every worker at unit speed.
+    Homogeneous,
+    /// Linear ramp of speed factors from `lo` (worker 0) to `hi`
+    /// (worker N−1).
+    Ramp {
+        /// Factor of the fastest-dispatch end.
+        lo: f64,
+        /// Factor of the other end.
+        hi: f64,
+    },
+    /// Explicit per-worker factors (length must equal the cluster size).
+    Explicit(Vec<f64>),
+}
+
+impl SpeedAxis {
+    /// Resolve to per-worker factors for an `n`-worker cluster; `None`
+    /// means homogeneous (including any vector of all exact 1.0s).
+    pub fn resolve(&self, n: usize) -> anyhow::Result<Option<Vec<f64>>> {
+        let v: Vec<f64> = match self {
+            SpeedAxis::Homogeneous => return Ok(None),
+            SpeedAxis::Ramp { lo, hi } => {
+                anyhow::ensure!(
+                    *lo > 0.0 && *hi > 0.0,
+                    "speed ramp endpoints must be positive, got lo={lo}, hi={hi}"
+                );
+                (0..n)
+                    .map(|w| {
+                        if n == 1 {
+                            *lo
+                        } else {
+                            lo + (hi - lo) * w as f64 / (n - 1) as f64
+                        }
+                    })
+                    .collect()
+            }
+            SpeedAxis::Explicit(v) => {
+                anyhow::ensure!(
+                    v.len() == n,
+                    "explicit speed vector has {} factors but the cluster has {n} workers",
+                    v.len()
+                );
+                anyhow::ensure!(
+                    v.iter().all(|&c| c > 0.0),
+                    "speed factors must be positive, got {v:?}"
+                );
+                v.clone()
+            }
+        };
+        Ok(if v.iter().all(|&c| c == 1.0) { None } else { Some(v) })
+    }
+
+    /// Stable label (spec files, CSV).
+    pub fn label(&self) -> String {
+        match self {
+            SpeedAxis::Homogeneous => "homogeneous".to_string(),
+            SpeedAxis::Ramp { lo, hi } => format!("ramp:{lo},{hi}"),
+            SpeedAxis::Explicit(v) => format!("explicit:{v:?}"),
+        }
+    }
+
+    /// Parse `homogeneous` or `ramp:LO,HI` (explicit vectors only exist
+    /// as JSON arrays).
+    pub fn parse(s: &str) -> anyhow::Result<SpeedAxis> {
+        if s == "homogeneous" {
+            return Ok(SpeedAxis::Homogeneous);
+        }
+        if let Some(rest) = s.strip_prefix("ramp:") {
+            let (lo, hi) = rest.split_once(',').ok_or_else(|| {
+                anyhow::anyhow!("speed ramp '{s}' needs two comma-separated factors")
+            })?;
+            let lo: f64 = lo.trim().parse().map_err(|e| {
+                anyhow::anyhow!("bad speed ramp endpoint '{lo}': {e}")
+            })?;
+            let hi: f64 = hi.trim().parse().map_err(|e| {
+                anyhow::anyhow!("bad speed ramp endpoint '{hi}': {e}")
+            })?;
+            return Ok(SpeedAxis::Ramp { lo, hi });
+        }
+        anyhow::bail!(
+            "unknown speed axis '{s}' (accepted: homogeneous, ramp:LO,HI, or a JSON \
+             array of per-worker factors)"
+        )
+    }
+}
+
+/// Live-backend knobs (only consulted when the `live` backend is on an
+/// axis).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LiveKnobs {
+    /// Wall-clock seconds per unit of injected service time.
+    pub time_scale: f64,
+    /// Dataset rows.
+    pub n_samples: usize,
+    /// Model feature dimension.
+    pub dim: usize,
+    /// Use the PJRT compute backend instead of the pure-Rust mock.
+    pub pjrt: bool,
+    /// Artifact directory for the PJRT backend.
+    pub artifacts_dir: Option<String>,
+    /// Cancel sibling replicas when a batch completes.
+    pub cancellation: bool,
+}
+
+impl Default for LiveKnobs {
+    fn default() -> Self {
+        Self {
+            time_scale: 0.002,
+            n_samples: 64,
+            dim: 4,
+            pjrt: false,
+            artifacts_dir: None,
+            cancellation: true,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The declarative spec
+// ---------------------------------------------------------------------
+
+/// Accepted top-level fields of a study spec file (the error message of
+/// any unknown field lists these).
+pub const SPEC_FIELDS: &[&str] = &[
+    "name",
+    "n_workers",
+    "batches",
+    "policies",
+    "services",
+    "batch_model",
+    "redundancy",
+    "k_of_b",
+    "speeds",
+    "backends",
+    "mc_trials",
+    "des_trials",
+    "live_rounds",
+    "des_cancellation",
+    "live",
+    "seed",
+    "quantiles",
+    "cost",
+];
+
+/// Accepted keys of the nested `live` spec object.
+pub const LIVE_FIELDS: &[&str] =
+    &["time_scale", "n_samples", "dim", "pjrt", "cancellation", "artifacts_dir"];
+
+/// A declarative multi-scenario study: the cartesian product of its
+/// axes, evaluated by every backend on the `backends` axis. See the
+/// module docs for the compile/dedup/execution pipeline.
+#[derive(Debug, Clone)]
+pub struct StudySpec {
+    /// Study name (artifact `study` field, default artifact file stem).
+    pub name: String,
+    /// Cluster sizes `N`.
+    pub n_workers: Vec<usize>,
+    /// Batch counts per cluster size.
+    pub batches: BatchAxis,
+    /// Replication policies.
+    pub policies: Vec<ReplicationPolicy>,
+    /// Batch service laws (service spec + batch model).
+    pub services: Vec<BatchService>,
+    /// Redundancy activation modes.
+    pub redundancy: Vec<RedundancyAxis>,
+    /// k-of-B partial-aggregation targets.
+    pub k_targets: Vec<KTarget>,
+    /// Worker-speed profiles.
+    pub speeds: Vec<SpeedAxis>,
+    /// Evaluation backends (each axis point is evaluated by every one).
+    pub backends: Vec<BackendSel>,
+    /// Monte-Carlo trials per cell.
+    pub mc_trials: u64,
+    /// DES trials per cell.
+    pub des_trials: u64,
+    /// Live rounds per cell.
+    pub live_rounds: u64,
+    /// DES replica cancellation (the engine knob that is not a scenario
+    /// field).
+    pub des_cancellation: bool,
+    /// Live-backend knobs.
+    pub live: LiveKnobs,
+    /// Root seed: every cell's scenario seed is derived from this and
+    /// the cell's canonical key.
+    pub seed: u64,
+    /// Emit per-cell quantiles into the artifact/CSV.
+    pub quantiles: bool,
+    /// Emit per-cell redundancy cost into the artifact/CSV.
+    pub cost: bool,
+}
+
+impl StudySpec {
+    /// A spec skeleton with every non-axis knob at its default; callers
+    /// fill the axes via struct-update syntax.
+    pub fn base(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            n_workers: Vec::new(),
+            batches: BatchAxis::Feasible,
+            policies: vec![ReplicationPolicy::BalancedDisjoint],
+            services: Vec::new(),
+            redundancy: vec![RedundancyAxis::Upfront],
+            k_targets: vec![KTarget::Full],
+            speeds: vec![SpeedAxis::Homogeneous],
+            backends: vec![BackendSel::MonteCarlo],
+            mc_trials: 100_000,
+            des_trials: 20_000,
+            live_rounds: 30,
+            des_cancellation: true,
+            live: LiveKnobs::default(),
+            seed: 42,
+            quantiles: true,
+            cost: true,
+        }
+    }
+
+    /// Smoke-quality budgets for CI and quick iterations.
+    pub fn fast(mut self) -> Self {
+        self.mc_trials = (self.mc_trials / 5).max(2_000);
+        self.des_trials = (self.des_trials / 5).max(500);
+        self.live_rounds = (self.live_rounds / 3).max(10);
+        self
+    }
+
+    /// Trial budget of one backend.
+    pub fn trials_for(&self, backend: BackendSel) -> u64 {
+        match backend {
+            BackendSel::Analytic => 0,
+            BackendSel::MonteCarlo => self.mc_trials,
+            BackendSel::Des => self.des_trials,
+            BackendSel::Live => self.live_rounds,
+        }
+    }
+
+    /// Compile the spec into a deduplicated [`ExecutionPlan`]: enumerate
+    /// the cartesian product in canonical axis order (services ×
+    /// clusters × batches × policies × redundancy × k × speeds ×
+    /// backends), canonicalize each point, derive its scenario seed from
+    /// the canonical key, and unify identical `(scenario, backend,
+    /// trials)` cells.
+    pub fn compile(&self) -> anyhow::Result<ExecutionPlan> {
+        let axis = |name: &str, empty: bool| -> anyhow::Result<()> {
+            anyhow::ensure!(
+                !empty,
+                "StudySpec::{name} axis is empty (need at least one entry)"
+            );
+            Ok(())
+        };
+        axis("n_workers", self.n_workers.is_empty())?;
+        axis("services", self.services.is_empty())?;
+        axis("policies", self.policies.is_empty())?;
+        axis("redundancy", self.redundancy.is_empty())?;
+        axis("k_targets", self.k_targets.is_empty())?;
+        axis("speeds", self.speeds.is_empty())?;
+        axis("backends", self.backends.is_empty())?;
+        if let BatchAxis::Explicit(v) = &self.batches {
+            axis("batches", v.is_empty())?;
+        }
+        for &backend in &self.backends {
+            anyhow::ensure!(
+                backend == BackendSel::Analytic || self.trials_for(backend) >= 1,
+                "StudySpec trial budget for backend '{}' is 0 (set {})",
+                backend.name(),
+                match backend {
+                    BackendSel::MonteCarlo => "mc_trials",
+                    BackendSel::Des => "des_trials",
+                    _ => "live_rounds",
+                }
+            );
+        }
+
+        let mut scenarios: Vec<Scenario> = Vec::new();
+        let mut scen_idx: BTreeMap<String, usize> = BTreeMap::new();
+        let mut cells: Vec<PlannedCell> = Vec::new();
+        let mut cell_idx: BTreeMap<String, usize> = BTreeMap::new();
+        let mut points: Vec<PlannedPoint> = Vec::new();
+
+        for (si, svc) in self.services.iter().enumerate() {
+            let skey = service_key(svc);
+            for &n in &self.n_workers {
+                anyhow::ensure!(
+                    n >= 1,
+                    "StudySpec::n_workers contains {n}; cluster sizes must be >= 1"
+                );
+                let blist: Vec<usize> = match &self.batches {
+                    BatchAxis::Feasible => crate::assignment::feasible_batch_counts(n),
+                    BatchAxis::Explicit(v) => v.clone(),
+                };
+                for &b in &blist {
+                    for &policy in &self.policies {
+                        let eff_b = effective_batches(policy, n, b);
+                        // Canonical batch identity: FullDiversity and
+                        // FullParallelism ignore the requested b, so
+                        // every b plans the same physical cell.
+                        // (OverlappingCyclic keeps b — its window size
+                        // is N/b.)
+                        let key_b = match policy {
+                            ReplicationPolicy::FullDiversity => 1,
+                            ReplicationPolicy::FullParallelism => n,
+                            _ => b,
+                        };
+                        for (ri, red) in self.redundancy.iter().enumerate() {
+                            for (ki, kt) in self.k_targets.iter().enumerate() {
+                                let collapse_full =
+                                    policy != ReplicationPolicy::OverlappingCyclic;
+                                let k = kt.resolve(eff_b, collapse_full).map_err(|e| {
+                                    anyhow::anyhow!(
+                                        "StudySpec::k_targets[{ki}] = {} at axis point \
+                                         (N={n}, B={b}, policy={}): {e}",
+                                        kt.label(),
+                                        policy.name()
+                                    )
+                                })?;
+                                for (wi, sp) in self.speeds.iter().enumerate() {
+                                    let speeds = sp.resolve(n).map_err(|e| {
+                                        anyhow::anyhow!(
+                                            "StudySpec::speeds[{wi}] = {} at axis point \
+                                             (N={n}): {e}",
+                                            sp.label()
+                                        )
+                                    })?;
+                                    let speeds_key = match &speeds {
+                                        None => "homogeneous".to_string(),
+                                        Some(v) => format!("{v:?}"),
+                                    };
+                                    let structural = format!(
+                                        "n={n};b={key_b};policy={};service={skey};red={};\
+                                         k={k:?};speeds={speeds_key}",
+                                        policy.name(),
+                                        red.label()
+                                    );
+                                    let scn_i = match scen_idx.get(&structural) {
+                                        Some(&i) => i,
+                                        None => {
+                                            let seed = derive_seed(self.seed, &structural);
+                                            let mut scn = Scenario::from_policy(
+                                                policy,
+                                                n,
+                                                key_b,
+                                                svc.clone(),
+                                                seed,
+                                            )
+                                            .map_err(|e| {
+                                                anyhow::anyhow!(
+                                                    "StudySpec axis point (N={n}, B={b}, \
+                                                     policy={}): {e}",
+                                                    policy.name()
+                                                )
+                                            })?
+                                            .with_redundancy(red.to_redundancy());
+                                            if let Some(kv) = k {
+                                                scn = scn.with_k_of_b(kv)?;
+                                            }
+                                            if let Some(v) = speeds.clone() {
+                                                scn = scn.with_speeds(v)?;
+                                            }
+                                            scenarios.push(scn);
+                                            scen_idx
+                                                .insert(structural.clone(), scenarios.len() - 1);
+                                            scenarios.len() - 1
+                                        }
+                                    };
+                                    for &backend in &self.backends {
+                                        let trials = self.trials_for(backend);
+                                        let ck = format!(
+                                            "{structural}|backend={};trials={trials}",
+                                            backend.name()
+                                        );
+                                        let cell = match cell_idx.get(&ck) {
+                                            Some(&i) => i,
+                                            None => {
+                                                cells.push(PlannedCell {
+                                                    scenario: scenarios[scn_i].clone(),
+                                                    backend,
+                                                    trials,
+                                                    key: ck.clone(),
+                                                });
+                                                cell_idx.insert(ck, cells.len() - 1);
+                                                cells.len() - 1
+                                            }
+                                        };
+                                        points.push(PlannedPoint {
+                                            coords: PointCoords {
+                                                n,
+                                                b,
+                                                eff_b,
+                                                policy,
+                                                service_idx: si,
+                                                service: skey.clone(),
+                                                redundancy_idx: ri,
+                                                redundancy: red.label(),
+                                                k_idx: ki,
+                                                k_of_b: k,
+                                                speeds_idx: wi,
+                                                speeds: speeds_key.clone(),
+                                                backend,
+                                            },
+                                            cell,
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(ExecutionPlan { spec: self.clone(), scenarios, cells, points })
+    }
+
+    // -----------------------------------------------------------------
+    // Presets and spec files
+    // -----------------------------------------------------------------
+
+    /// Names of the built-in presets.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["smoke", "fig2", "tradeoff", "policies"]
+    }
+
+    /// A built-in preset spec.
+    pub fn preset(name: &str) -> anyhow::Result<StudySpec> {
+        let sexp = |mu: f64, delta: f64| BatchService::paper(ServiceSpec::shifted_exp(mu, delta));
+        Ok(match name {
+            // The CI smoke grid: one cluster, full spectrum, half-k
+            // partial aggregation, three backends. The B = 1 row's k
+            // axis canonicalizes to full completion, so the plan always
+            // exercises dedup.
+            "smoke" => StudySpec {
+                n_workers: vec![12],
+                services: vec![sexp(1.0, 0.2)],
+                k_targets: vec![KTarget::Full, KTarget::Fraction(0.5)],
+                backends: vec![BackendSel::Analytic, BackendSel::MonteCarlo, BackendSel::Des],
+                mc_trials: 20_000,
+                des_trials: 4_000,
+                ..StudySpec::base("smoke")
+            },
+            // Fig. 2: E[T] vs B, one curve per ∆µ, theory and simulation.
+            "fig2" => StudySpec {
+                n_workers: vec![24],
+                services: [0.05, 0.2, 0.5, 1.0, 2.0].iter().map(|&dm| sexp(1.0, dm)).collect(),
+                backends: vec![BackendSel::Analytic, BackendSel::MonteCarlo],
+                ..StudySpec::base("fig2")
+            },
+            // The mean–variance trade-off over a dense ∆µ grid (pure
+            // closed forms: exercises the analytic memo grouping).
+            "tradeoff" => StudySpec {
+                n_workers: vec![24],
+                services: (0..40).map(|i| sexp(1.0, 0.01 + 0.05 * i as f64)).collect(),
+                backends: vec![BackendSel::Analytic],
+                ..StudySpec::base("tradeoff")
+            },
+            // Theorem 1 policy comparison.
+            "policies" => StudySpec {
+                n_workers: vec![12],
+                batches: BatchAxis::Explicit(vec![4]),
+                policies: ReplicationPolicy::all().to_vec(),
+                services: vec![
+                    BatchService::paper(ServiceSpec::exp(1.0)),
+                    sexp(1.0, 0.2),
+                ],
+                backends: vec![BackendSel::MonteCarlo, BackendSel::Analytic],
+                mc_trials: 60_000,
+                ..StudySpec::base("policies")
+            },
+            other => anyhow::bail!(
+                "unknown study preset '{other}' (accepted: {})",
+                Self::preset_names().join(", ")
+            ),
+        })
+    }
+
+    /// Resolve a CLI argument: a preset name, else a spec file path.
+    pub fn load(arg: &str) -> anyhow::Result<StudySpec> {
+        if Self::preset_names().contains(&arg) {
+            return Self::preset(arg);
+        }
+        let path = std::path::Path::new(arg);
+        if path.exists() {
+            return Self::from_file(path);
+        }
+        anyhow::bail!(
+            "unknown study '{arg}': neither a preset ({}) nor a spec file on disk",
+            Self::preset_names().join(", ")
+        )
+    }
+
+    /// Load a spec from a JSON file.
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<StudySpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading study spec {}: {e}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("study spec {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    /// Parse a spec from its JSON document. Errors name the offending
+    /// field and value and list what is accepted.
+    pub fn from_json(j: &Json) -> anyhow::Result<StudySpec> {
+        let obj = j.as_object().ok_or_else(|| {
+            anyhow::anyhow!(
+                "study spec must be a JSON object (accepted fields: {})",
+                SPEC_FIELDS.join(", ")
+            )
+        })?;
+        for key in obj.keys() {
+            anyhow::ensure!(
+                SPEC_FIELDS.contains(&key.as_str()),
+                "unknown study-spec field '{key}' (accepted: {})",
+                SPEC_FIELDS.join(", ")
+            );
+        }
+        let mut spec = StudySpec::base(json_str(obj, "name")?.unwrap_or("study"));
+
+        let workers = json_arr(obj, "n_workers")?
+            .ok_or_else(|| anyhow::anyhow!("study spec is missing required field 'n_workers'"))?;
+        spec.n_workers = workers
+            .iter()
+            .map(|v| match v.as_i64() {
+                Some(n) if n >= 1 => Ok(n as usize),
+                _ => Err(spec_field_err("n_workers", "an array of positive integers", v)),
+            })
+            .collect::<anyhow::Result<_>>()?;
+
+        if let Some(v) = obj.get("batches") {
+            spec.batches = match v {
+                Json::Str(s) if s == "feasible" => BatchAxis::Feasible,
+                Json::Array(items) => BatchAxis::Explicit(
+                    items
+                        .iter()
+                        .map(|x| match x.as_i64() {
+                            Some(b) if b >= 1 => Ok(b as usize),
+                            _ => Err(spec_field_err(
+                                "batches",
+                                "\"feasible\" or an array of positive integers",
+                                x,
+                            )),
+                        })
+                        .collect::<anyhow::Result<_>>()?,
+                ),
+                other => {
+                    return Err(spec_field_err(
+                        "batches",
+                        "\"feasible\" or an array of positive integers",
+                        other,
+                    ))
+                }
+            };
+        }
+
+        if let Some(items) = json_arr(obj, "policies")? {
+            spec.policies = items
+                .iter()
+                .map(|v| {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| spec_field_err("policies", "an array of policy names", v))?;
+                    ReplicationPolicy::parse(s)
+                        .map_err(|e| anyhow::anyhow!("study-spec field 'policies': {e}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+
+        let model = match json_str(obj, "batch_model")? {
+            None => BatchModel::SizeScaled,
+            Some(s) => BatchModel::parse(s)
+                .map_err(|e| anyhow::anyhow!("study-spec field 'batch_model': {e}"))?,
+        };
+        let services = json_arr(obj, "services")?
+            .ok_or_else(|| anyhow::anyhow!("study spec is missing required field 'services'"))?;
+        spec.services = services
+            .iter()
+            .map(|v| {
+                let s = v.as_str().ok_or_else(|| {
+                    spec_field_err("services", "an array of service spec strings", v)
+                })?;
+                let parsed = ServiceSpec::parse(s)
+                    .map_err(|e| anyhow::anyhow!("study-spec field 'services': {e}"))?;
+                Ok(BatchService { spec: parsed, model })
+            })
+            .collect::<anyhow::Result<_>>()?;
+
+        if let Some(items) = json_arr(obj, "redundancy")? {
+            spec.redundancy = items
+                .iter()
+                .map(|v| {
+                    let s = v.as_str().ok_or_else(|| {
+                        spec_field_err("redundancy", "an array of redundancy-mode strings", v)
+                    })?;
+                    RedundancyAxis::parse(s)
+                        .map_err(|e| anyhow::anyhow!("study-spec field 'redundancy': {e}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+
+        if let Some(items) = json_arr(obj, "k_of_b")? {
+            spec.k_targets = items
+                .iter()
+                .map(|v| match v {
+                    Json::Str(s) if s == "full" => Ok(KTarget::Full),
+                    Json::Str(s) if s.starts_with("k:") || s.starts_with("frac:") => {
+                        KTarget::parse(s)
+                            .map_err(|e| anyhow::anyhow!("study-spec field 'k_of_b': {e}"))
+                    }
+                    Json::Num(x) if *x > 0.0 && *x < 1.0 => Ok(KTarget::Fraction(*x)),
+                    // The bare number 1 is ambiguous (k = 1 vs the
+                    // fraction 1.0 = every batch): force the explicit
+                    // spelling rather than silently flipping semantics.
+                    Json::Num(x) if *x == 1.0 => Err(anyhow::anyhow!(
+                        "study-spec field 'k_of_b': 1 is ambiguous — write \"full\" to \
+                         wait for every batch or \"k:1\" to wait for the single \
+                         earliest batch"
+                    )),
+                    Json::Num(x) if x.fract() == 0.0 && *x >= 2.0 => {
+                        Ok(KTarget::Exact(*x as usize))
+                    }
+                    other => Err(spec_field_err(
+                        "k_of_b",
+                        "\"full\", \"k:N\", \"frac:F\", a fraction in (0, 1), or an \
+                         integer k >= 2",
+                        other,
+                    )),
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+
+        if let Some(items) = json_arr(obj, "speeds")? {
+            spec.speeds = items
+                .iter()
+                .map(|v| match v {
+                    Json::Str(s) => SpeedAxis::parse(s)
+                        .map_err(|e| anyhow::anyhow!("study-spec field 'speeds': {e}")),
+                    Json::Array(xs) => {
+                        let factors = xs
+                            .iter()
+                            .map(|x| {
+                                x.as_f64().ok_or_else(|| {
+                                    spec_field_err("speeds", "arrays of per-worker factors", x)
+                                })
+                            })
+                            .collect::<anyhow::Result<Vec<f64>>>()?;
+                        Ok(SpeedAxis::Explicit(factors))
+                    }
+                    other => Err(spec_field_err(
+                        "speeds",
+                        "\"homogeneous\", \"ramp:LO,HI\", or an array of factors",
+                        other,
+                    )),
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+
+        if let Some(items) = json_arr(obj, "backends")? {
+            spec.backends = items
+                .iter()
+                .map(|v| {
+                    let s = v.as_str().ok_or_else(|| {
+                        spec_field_err("backends", "an array of backend names", v)
+                    })?;
+                    BackendSel::parse(s)
+                        .map_err(|e| anyhow::anyhow!("study-spec field 'backends': {e}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+
+        if let Some(t) = json_int(obj, "mc_trials")? {
+            spec.mc_trials = t.max(0) as u64;
+        }
+        if let Some(t) = json_int(obj, "des_trials")? {
+            spec.des_trials = t.max(0) as u64;
+        }
+        if let Some(t) = json_int(obj, "live_rounds")? {
+            spec.live_rounds = t.max(0) as u64;
+        }
+        if let Some(b) = json_bool(obj, "des_cancellation")? {
+            spec.des_cancellation = b;
+        }
+        if let Some(v) = obj.get("live") {
+            let lobj = v.as_object().ok_or_else(|| {
+                spec_field_err(
+                    "live",
+                    &format!("an object with keys {}", LIVE_FIELDS.join(", ")),
+                    v,
+                )
+            })?;
+            for key in lobj.keys() {
+                anyhow::ensure!(
+                    LIVE_FIELDS.contains(&key.as_str()),
+                    "unknown study-spec field 'live.{key}' (accepted: {})",
+                    LIVE_FIELDS.join(", ")
+                );
+            }
+            if let Some(x) = lobj.get("time_scale") {
+                spec.live.time_scale = x
+                    .as_f64()
+                    .filter(|t| *t > 0.0)
+                    .ok_or_else(|| spec_field_err("live.time_scale", "a positive number", x))?;
+            }
+            if let Some(n) = json_int(lobj, "n_samples")? {
+                spec.live.n_samples = n.max(1) as usize;
+            }
+            if let Some(d) = json_int(lobj, "dim")? {
+                spec.live.dim = d.max(1) as usize;
+            }
+            if let Some(p) = json_bool(lobj, "pjrt")? {
+                spec.live.pjrt = p;
+            }
+            if let Some(c) = json_bool(lobj, "cancellation")? {
+                spec.live.cancellation = c;
+            }
+            if let Some(a) = json_str(lobj, "artifacts_dir")? {
+                spec.live.artifacts_dir = Some(a.to_string());
+            }
+        }
+        if let Some(s) = json_int(obj, "seed")? {
+            spec.seed = s as u64;
+        }
+        if let Some(q) = json_bool(obj, "quantiles")? {
+            spec.quantiles = q;
+        }
+        if let Some(c) = json_bool(obj, "cost")? {
+            spec.cost = c;
+        }
+        Ok(spec)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The compiled plan
+// ---------------------------------------------------------------------
+
+/// One unique evaluation cell: a scenario under one backend at one
+/// trial budget. Evaluated once, fanned out to every axis point that
+/// references it.
+#[derive(Debug, Clone)]
+pub struct PlannedCell {
+    /// The fully self-describing scenario (seed derived from the
+    /// canonical key).
+    pub scenario: Scenario,
+    /// The backend that evaluates it.
+    pub backend: BackendSel,
+    /// Trial/round budget (0 for the analytic backend).
+    pub trials: u64,
+    /// Canonical cell key (the dedup identity; stable across runs).
+    pub key: String,
+}
+
+/// Axis coordinates of one point of the study grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointCoords {
+    /// Cluster size.
+    pub n: usize,
+    /// Requested batch count (axis value, before policy normalization).
+    pub b: usize,
+    /// The scenario's actual batch count (e.g. 1 under `FullDiversity`).
+    pub eff_b: usize,
+    /// Replication policy.
+    pub policy: ReplicationPolicy,
+    /// Index into `StudySpec::services`.
+    pub service_idx: usize,
+    /// Service key (`spec-name/model-name`).
+    pub service: String,
+    /// Index into `StudySpec::redundancy`.
+    pub redundancy_idx: usize,
+    /// Redundancy label (`upfront`, `speculative:F`).
+    pub redundancy: String,
+    /// Index into `StudySpec::k_targets`.
+    pub k_idx: usize,
+    /// Resolved partial-aggregation target (`None` = full completion).
+    pub k_of_b: Option<usize>,
+    /// Index into `StudySpec::speeds`.
+    pub speeds_idx: usize,
+    /// Canonical speed key (`homogeneous` or the resolved factor vector).
+    pub speeds: String,
+    /// Backend of this point.
+    pub backend: BackendSel,
+}
+
+/// One axis point of the compiled grid and the cell that serves it.
+#[derive(Debug, Clone)]
+pub struct PlannedPoint {
+    /// The point's axis coordinates.
+    pub coords: PointCoords,
+    /// Index into [`ExecutionPlan::cells`] / [`StudyReport`]'s cells.
+    pub cell: usize,
+}
+
+/// A compiled, deduplicated study: unique cells plus the point→cell
+/// fan-out map.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    /// The spec this plan was compiled from.
+    pub spec: StudySpec,
+    /// Unique structural scenarios in first-seen (canonical) order —
+    /// the shared grid vocabulary the conformance matrix enumerates.
+    pub scenarios: Vec<Scenario>,
+    /// Unique `(scenario, backend, trials)` cells in first-seen order.
+    pub cells: Vec<PlannedCell>,
+    /// Every axis point, mapped onto its cell.
+    pub points: Vec<PlannedPoint>,
+}
+
+impl ExecutionPlan {
+    /// Number of axis points the grid spans.
+    pub fn axis_points(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Axis points served by an already-planned cell (the dedup win).
+    pub fn deduped_points(&self) -> usize {
+        self.points.len() - self.cells.len()
+    }
+
+    /// Number of cells a backend contributes.
+    pub fn backend_cells(&self, backend: BackendSel) -> usize {
+        self.cells.iter().filter(|c| c.backend == backend).count()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spec-file field helpers
+// ---------------------------------------------------------------------
+
+/// Typed study-spec field error: names the field, what was expected,
+/// and echoes the offending value.
+fn spec_field_err(field: &str, want: &str, got: &Json) -> anyhow::Error {
+    anyhow::anyhow!("study-spec field '{field}': expected {want}, got {got}")
+}
+
+fn json_str<'a>(
+    obj: &'a BTreeMap<String, Json>,
+    field: &str,
+) -> anyhow::Result<Option<&'a str>> {
+    match obj.get(field) {
+        None => Ok(None),
+        Some(v) => v.as_str().map(Some).ok_or_else(|| spec_field_err(field, "a string", v)),
+    }
+}
+
+fn json_int(obj: &BTreeMap<String, Json>, field: &str) -> anyhow::Result<Option<i64>> {
+    match obj.get(field) {
+        None => Ok(None),
+        Some(v) => v.as_i64().map(Some).ok_or_else(|| spec_field_err(field, "an integer", v)),
+    }
+}
+
+fn json_bool(obj: &BTreeMap<String, Json>, field: &str) -> anyhow::Result<Option<bool>> {
+    match obj.get(field) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(v) => Err(spec_field_err(field, "a bool", v)),
+    }
+}
+
+fn json_arr<'a>(
+    obj: &'a BTreeMap<String, Json>,
+    field: &str,
+) -> anyhow::Result<Option<&'a [Json]>> {
+    match obj.get(field) {
+        None => Ok(None),
+        Some(v) => v.as_array().map(Some).ok_or_else(|| spec_field_err(field, "an array", v)),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Canonicalization helpers
+// ---------------------------------------------------------------------
+
+/// The batch count a policy actually produces for a requested `(n, b)`.
+fn effective_batches(policy: ReplicationPolicy, n: usize, b: usize) -> usize {
+    match policy {
+        ReplicationPolicy::FullDiversity => 1,
+        ReplicationPolicy::FullParallelism => n,
+        // One cyclic window per worker.
+        ReplicationPolicy::OverlappingCyclic => n,
+        _ => b,
+    }
+}
+
+/// Content-stable service key: the compact spec name plus the batch
+/// model. Trace specs append a content hash, because their display name
+/// only carries the sample count.
+fn service_key(svc: &BatchService) -> String {
+    match &svc.spec {
+        ServiceSpec::Trace { samples } => {
+            let h = crate::util::rng::fnv1a(
+                samples.iter().flat_map(|x| x.to_bits().to_le_bytes()),
+            );
+            format!("trace[{};{h:016x}]/{}", samples.len(), svc.model.name())
+        }
+        spec => format!("{}/{}", spec.name(), svc.model.name()),
+    }
+}
+
+/// FNV-1a over the canonical key, folded with the root seed through
+/// SplitMix64 — a deterministic, well-mixed per-scenario seed.
+fn derive_seed(root: u64, key: &str) -> u64 {
+    let mut state = crate::util::rng::fnv1a(key.bytes()) ^ root.rotate_left(17);
+    crate::util::rng::splitmix64(&mut state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sexp_paper() -> BatchService {
+        BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.2))
+    }
+
+    #[test]
+    fn compile_dedups_duplicate_axis_points() {
+        // Duplicate axis entries (the same batch count requested three
+        // times, under two backends) plan one cell per unique
+        // (scenario, backend, trials) triple and fan it out.
+        let spec = StudySpec {
+            n_workers: vec![12],
+            batches: BatchAxis::Explicit(vec![4, 4, 2, 4]),
+            services: vec![sexp_paper()],
+            backends: vec![BackendSel::MonteCarlo, BackendSel::Analytic],
+            mc_trials: 100,
+            ..StudySpec::base("dedup-test")
+        };
+        let plan = spec.compile().unwrap();
+        assert_eq!(plan.points.len(), 8, "4 batch entries × 2 backends");
+        assert_eq!(plan.cells.len(), 4, "2 unique scenarios × 2 backends");
+        assert_eq!(plan.deduped_points(), 4);
+        assert_eq!(plan.scenarios.len(), 2);
+        assert_eq!(plan.backend_cells(BackendSel::MonteCarlo), 2);
+        assert_eq!(plan.backend_cells(BackendSel::Analytic), 2);
+        // Duplicate points reference the same cell index.
+        let b4_mc: Vec<usize> = plan
+            .points
+            .iter()
+            .filter(|p| p.coords.b == 4 && p.coords.backend == BackendSel::MonteCarlo)
+            .map(|p| p.cell)
+            .collect();
+        assert_eq!(b4_mc.len(), 3);
+        assert!(b4_mc.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn canonicalization_collapses_equivalent_axes() {
+        let spec = StudySpec {
+            n_workers: vec![12],
+            batches: BatchAxis::Explicit(vec![4]),
+            services: vec![sexp_paper()],
+            k_targets: vec![KTarget::Full, KTarget::Fraction(1.0), KTarget::Exact(4)],
+            speeds: vec![
+                SpeedAxis::Homogeneous,
+                SpeedAxis::Ramp { lo: 1.0, hi: 1.0 },
+                SpeedAxis::Explicit(vec![1.0; 12]),
+            ],
+            backends: vec![BackendSel::MonteCarlo],
+            mc_trials: 100,
+            ..StudySpec::base("canon-test")
+        };
+        let plan = spec.compile().unwrap();
+        // 3 k entries × 3 speed entries = 9 axis points, all one cell.
+        assert_eq!(plan.points.len(), 9);
+        assert_eq!(plan.cells.len(), 1);
+        assert_eq!(plan.deduped_points(), 8);
+        assert_eq!(plan.scenarios.len(), 1);
+        assert!(plan.scenarios[0].k_of_b.is_none());
+        assert!(plan.scenarios[0].worker_speeds.is_none());
+        // Every point keeps its own axis coordinates despite sharing
+        // the cell.
+        assert!(plan.points.iter().any(|p| p.coords.k_idx == 2));
+        assert!(plan.points.iter().any(|p| p.coords.speeds_idx == 1));
+        for p in &plan.points {
+            assert_eq!(p.cell, 0);
+        }
+    }
+
+    #[test]
+    fn overlapping_k_equals_b_is_not_canonicalized() {
+        // Full completion for an overlapping layout is the coverage
+        // rule, which can fire before every window finishes — waiting
+        // for the B-th window is a strictly different (later) event, so
+        // the planner must keep it a distinct cell.
+        let spec = StudySpec {
+            n_workers: vec![8],
+            batches: BatchAxis::Explicit(vec![4]),
+            policies: vec![ReplicationPolicy::OverlappingCyclic],
+            services: vec![sexp_paper()],
+            // eff_b for the overlapping layout is N = 8 windows.
+            k_targets: vec![KTarget::Full, KTarget::Exact(8)],
+            backends: vec![BackendSel::MonteCarlo],
+            mc_trials: 100,
+            ..StudySpec::base("overlap-k-canon")
+        };
+        let plan = spec.compile().unwrap();
+        assert_eq!(plan.cells.len(), 2, "coverage vs all-windows are distinct cells");
+        assert_eq!(plan.scenarios[0].k_of_b, None);
+        assert_eq!(plan.scenarios[1].k_of_b, Some(8));
+        // The same k = B axis on a disjoint policy collapses onto the
+        // full-completion cell.
+        let spec = StudySpec {
+            policies: vec![ReplicationPolicy::BalancedDisjoint],
+            k_targets: vec![KTarget::Full, KTarget::Exact(4)],
+            ..spec
+        };
+        let plan = spec.compile().unwrap();
+        assert_eq!(plan.cells.len(), 1);
+    }
+
+    #[test]
+    fn b_insensitive_policies_canonicalize_the_batch_axis() {
+        // FullDiversity is one batch and FullParallelism is N batches
+        // whatever b the axis requests: the whole feasible-b axis must
+        // collapse to one cell per policy, while BalancedDisjoint keeps
+        // one cell per b. OverlappingCyclic keeps b too (window = N/b).
+        let spec = StudySpec {
+            n_workers: vec![12],
+            policies: vec![
+                ReplicationPolicy::FullDiversity,
+                ReplicationPolicy::FullParallelism,
+                ReplicationPolicy::BalancedDisjoint,
+            ],
+            services: vec![sexp_paper()],
+            backends: vec![BackendSel::MonteCarlo],
+            mc_trials: 100,
+            ..StudySpec::base("policy-b-canon")
+        };
+        let plan = spec.compile().unwrap();
+        let n_b = crate::assignment::feasible_batch_counts(12).len();
+        assert_eq!(plan.points.len(), 3 * n_b);
+        assert_eq!(plan.cells.len(), 2 + n_b, "one FD cell + one FP cell + n_b balanced");
+        let cells_of = |p: ReplicationPolicy| {
+            let mut v: Vec<usize> = plan
+                .points
+                .iter()
+                .filter(|pt| pt.coords.policy == p)
+                .map(|pt| pt.cell)
+                .collect();
+            v.dedup();
+            v.len()
+        };
+        assert_eq!(cells_of(ReplicationPolicy::FullDiversity), 1);
+        assert_eq!(cells_of(ReplicationPolicy::FullParallelism), 1);
+        assert_eq!(cells_of(ReplicationPolicy::BalancedDisjoint), n_b);
+    }
+
+    #[test]
+    fn derived_seeds_are_stable_and_distinct() {
+        let spec = StudySpec {
+            n_workers: vec![12],
+            batches: BatchAxis::Explicit(vec![2, 4]),
+            services: vec![sexp_paper()],
+            backends: vec![BackendSel::MonteCarlo],
+            mc_trials: 100,
+            ..StudySpec::base("seed-test")
+        };
+        let a = spec.compile().unwrap();
+        let b = spec.compile().unwrap();
+        assert_eq!(a.scenarios.len(), 2);
+        assert_eq!(a.scenarios[0].seed, b.scenarios[0].seed, "seeds are reproducible");
+        assert_ne!(a.scenarios[0].seed, a.scenarios[1].seed, "cells draw distinct seeds");
+        // A different root seed moves every derived seed.
+        let other = StudySpec { seed: 43, ..spec }.compile().unwrap();
+        assert_ne!(other.scenarios[0].seed, a.scenarios[0].seed);
+    }
+
+    #[test]
+    fn compile_errors_name_the_offending_field() {
+        let base = StudySpec {
+            n_workers: vec![12],
+            services: vec![sexp_paper()],
+            backends: vec![BackendSel::MonteCarlo],
+            ..StudySpec::base("err-test")
+        };
+        let msg = StudySpec { services: vec![], ..base.clone() }
+            .compile()
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("StudySpec::services"), "{msg}");
+        let msg = StudySpec {
+            k_targets: vec![KTarget::Exact(9)],
+            batches: BatchAxis::Explicit(vec![4]),
+            ..base.clone()
+        }
+        .compile()
+        .unwrap_err()
+        .to_string();
+        assert!(msg.contains("StudySpec::k_targets[0]"), "{msg}");
+        assert!(msg.contains("k=9"), "{msg}");
+        let msg = StudySpec { mc_trials: 0, ..base.clone() }
+            .compile()
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("mc_trials"), "{msg}");
+        let msg = StudySpec {
+            speeds: vec![SpeedAxis::Explicit(vec![1.0; 3])],
+            ..base
+        }
+        .compile()
+        .unwrap_err()
+        .to_string();
+        assert!(msg.contains("StudySpec::speeds[0]"), "{msg}");
+        assert!(msg.contains("12 workers"), "{msg}");
+    }
+
+    #[test]
+    fn spec_json_round_trip_and_errors() {
+        let j = Json::parse(
+            r#"{
+                "name": "from-json",
+                "n_workers": [12, 24],
+                "batches": [2, 4],
+                "policies": ["balanced_disjoint", "full_diversity"],
+                "services": ["sexp:1.0,0.2", "exp:1.0"],
+                "redundancy": ["upfront", "speculative:1.5"],
+                "k_of_b": ["full", 0.5, 2],
+                "speeds": ["homogeneous", "ramp:0.5,2.0", [1.0, 2.0]],
+                "backends": ["analytic", "montecarlo"],
+                "mc_trials": 5000,
+                "seed": 7,
+                "quantiles": false
+            }"#,
+        )
+        .unwrap();
+        let spec = StudySpec::from_json(&j).unwrap();
+        assert_eq!(spec.name, "from-json");
+        assert_eq!(spec.n_workers, vec![12, 24]);
+        assert_eq!(spec.batches, BatchAxis::Explicit(vec![2, 4]));
+        assert_eq!(spec.policies.len(), 2);
+        assert_eq!(spec.services.len(), 2);
+        assert_eq!(spec.redundancy[1], RedundancyAxis::Speculative(1.5));
+        assert_eq!(spec.k_targets, vec![KTarget::Full, KTarget::Fraction(0.5), KTarget::Exact(2)]);
+        assert_eq!(spec.speeds.len(), 3);
+        assert_eq!(spec.backends, vec![BackendSel::Analytic, BackendSel::MonteCarlo]);
+        assert_eq!(spec.mc_trials, 5000);
+        assert_eq!(spec.seed, 7);
+        assert!(!spec.quantiles && spec.cost);
+
+        // Unknown fields are named and the accepted list is printed.
+        let bad = Json::parse(r#"{"n_workers": [4], "services": ["exp:1"], "nope": 1}"#).unwrap();
+        let msg = StudySpec::from_json(&bad).unwrap_err().to_string();
+        assert!(msg.contains("'nope'"), "{msg}");
+        assert!(msg.contains("n_workers") && msg.contains("backends"), "{msg}");
+        // Wrong value types name the field and echo the value.
+        let bad = Json::parse(r#"{"n_workers": "x", "services": ["exp:1"]}"#).unwrap();
+        let msg = StudySpec::from_json(&bad).unwrap_err().to_string();
+        assert!(msg.contains("'n_workers'") && msg.contains("\"x\""), "{msg}");
+        // The engine/live knobs are reachable from spec files.
+        let knobs = Json::parse(
+            r#"{"n_workers": [4], "services": ["exp:1"],
+                "backends": ["des", "live"], "des_cancellation": false,
+                "live": {"time_scale": 0.01, "n_samples": 128, "dim": 8,
+                         "cancellation": false}}"#,
+        )
+        .unwrap();
+        let spec_k = StudySpec::from_json(&knobs).unwrap();
+        assert!(!spec_k.des_cancellation);
+        assert_eq!(spec_k.live.time_scale, 0.01);
+        assert_eq!(spec_k.live.n_samples, 128);
+        assert_eq!(spec_k.live.dim, 8);
+        assert!(!spec_k.live.cancellation && !spec_k.live.pjrt);
+        // Unknown nested live keys are named with the accepted list.
+        let bad = Json::parse(
+            r#"{"n_workers": [4], "services": ["exp:1"], "live": {"speed": 1}}"#,
+        )
+        .unwrap();
+        let msg = StudySpec::from_json(&bad).unwrap_err().to_string();
+        assert!(msg.contains("'live.speed'") && msg.contains("time_scale"), "{msg}");
+
+        // The ambiguous bare 1 is rejected with both spellings offered;
+        // the explicit label forms parse.
+        let bad = Json::parse(r#"{"n_workers": [4], "services": ["exp:1"], "k_of_b": [1]}"#)
+            .unwrap();
+        let msg = StudySpec::from_json(&bad).unwrap_err().to_string();
+        assert!(msg.contains("ambiguous"), "{msg}");
+        assert!(msg.contains("\"full\"") && msg.contains("\"k:1\""), "{msg}");
+        let labeled = Json::parse(
+            r#"{"n_workers": [4], "services": ["exp:1"], "k_of_b": ["k:1", "frac:0.75"]}"#,
+        )
+        .unwrap();
+        let spec_l = StudySpec::from_json(&labeled).unwrap();
+        assert_eq!(spec_l.k_targets, vec![KTarget::Exact(1), KTarget::Fraction(0.75)]);
+        // Bad enum values list what is accepted.
+        let bad =
+            Json::parse(r#"{"n_workers": [4], "services": ["exp:1"], "backends": ["speedy"]}"#)
+                .unwrap();
+        let msg = StudySpec::from_json(&bad).unwrap_err().to_string();
+        assert!(msg.contains("'speedy'") && msg.contains("montecarlo"), "{msg}");
+        let bad = Json::parse(
+            r#"{"n_workers": [4], "services": ["exp:1"], "policies": ["fancy"]}"#,
+        )
+        .unwrap();
+        let msg = StudySpec::from_json(&bad).unwrap_err().to_string();
+        assert!(msg.contains("'fancy'") && msg.contains("balanced_disjoint"), "{msg}");
+    }
+
+    #[test]
+    fn presets_compile() {
+        for name in StudySpec::preset_names() {
+            let spec = StudySpec::preset(name).unwrap().fast();
+            let plan = spec.compile().unwrap();
+            assert!(!plan.cells.is_empty(), "preset {name} plans no cells");
+            assert!(plan.points.len() >= plan.cells.len());
+        }
+        let msg = StudySpec::preset("nope").unwrap_err().to_string();
+        assert!(msg.contains("smoke"), "{msg}");
+        // The smoke preset always exercises dedup: the B = 1 row's
+        // half-k target canonicalizes onto the full-completion cell.
+        let plan = StudySpec::preset("smoke").unwrap().compile().unwrap();
+        assert!(plan.deduped_points() > 0, "{:?}", plan.deduped_points());
+    }
+
+    #[test]
+    fn trace_specs_key_by_content() {
+        use std::sync::Arc;
+        let a = BatchService::paper(ServiceSpec::Trace { samples: Arc::new(vec![1.0, 2.0]) });
+        let b = BatchService::paper(ServiceSpec::Trace { samples: Arc::new(vec![1.0, 3.0]) });
+        assert_ne!(service_key(&a), service_key(&b));
+        assert_eq!(service_key(&a), service_key(&a.clone()));
+    }
+}

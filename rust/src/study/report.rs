@@ -1,0 +1,494 @@
+//! Study results: per-cell outcomes, point lookups for the experiment
+//! drivers, and the versioned `STUDY` JSON artifact (schema-validated
+//! like the `BENCH_*.json` trajectories) plus CSV emit for plotting.
+
+use super::{BackendSel, PlannedPoint, PointCoords};
+use crate::evaluator::CompletionStats;
+use crate::util::json::Json;
+use crate::util::table::{fmt_f, Table};
+use std::path::Path;
+
+/// Schema version of the study artifact.
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// What one cell produced.
+#[derive(Debug, Clone)]
+pub enum CellOutcome {
+    /// The backend's statistics.
+    Stats(CompletionStats),
+    /// The backend refused the scenario (its own message, naming the
+    /// offending `Scenario` field and value).
+    Refused(String),
+}
+
+/// One evaluated (or refused) cell of a study.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// Canonical cell key (matches the plan's `PlannedCell::key`).
+    pub key: String,
+    /// Backend that served the cell.
+    pub backend: BackendSel,
+    /// Trial/round budget (0 for analytic cells).
+    pub trials: u64,
+    /// Statistics or refusal.
+    pub outcome: CellOutcome,
+}
+
+impl CellResult {
+    /// The statistics, when the cell was served.
+    pub fn stats(&self) -> Option<&CompletionStats> {
+        match &self.outcome {
+            CellOutcome::Stats(st) => Some(st),
+            CellOutcome::Refused(_) => None,
+        }
+    }
+
+    /// The refusal message, when the backend declined the scenario.
+    pub fn refusal(&self) -> Option<&str> {
+        match &self.outcome {
+            CellOutcome::Refused(msg) => Some(msg),
+            CellOutcome::Stats(_) => None,
+        }
+    }
+}
+
+/// The collected result of one executed study. Bit-deterministic per
+/// `(spec, seed)` for any thread count (live cells excepted — they
+/// measure wall clock).
+#[derive(Debug, Clone)]
+pub struct StudyReport {
+    /// Study name.
+    pub name: String,
+    /// Root seed of the spec.
+    pub seed: u64,
+    /// Whether quantiles were requested (gates artifact/CSV emit).
+    pub quantiles: bool,
+    /// Whether redundancy cost was requested (gates artifact/CSV emit).
+    pub cost: bool,
+    /// Axis points the grid spanned.
+    pub axis_points: u64,
+    /// Unique cells evaluated.
+    pub unique_cells: u64,
+    /// Axis points served by an already-evaluated cell (dedup savings).
+    pub deduped_points: u64,
+    /// Cells refused by their backend.
+    pub refused_cells: u64,
+    /// Every axis point, mapped onto its cell index.
+    pub points: Vec<PlannedPoint>,
+    /// Cell outcomes, in plan (canonical first-seen) order.
+    pub cells: Vec<CellResult>,
+}
+
+impl StudyReport {
+    /// The cell serving one planned point.
+    pub fn cell_of(&self, point: &PlannedPoint) -> &CellResult {
+        &self.cells[point.cell]
+    }
+
+    /// First point whose coordinates match the predicate.
+    pub fn point_where(
+        &self,
+        f: &dyn Fn(&PointCoords) -> bool,
+    ) -> Option<&PlannedPoint> {
+        self.points.iter().find(|p| f(&p.coords))
+    }
+
+    /// Statistics of the first matching point; `None` when no point
+    /// matches or its backend refused the cell.
+    pub fn try_stats_where(
+        &self,
+        f: &dyn Fn(&PointCoords) -> bool,
+    ) -> Option<&CompletionStats> {
+        self.point_where(f).and_then(|p| self.cell_of(p).stats())
+    }
+
+    /// Statistics of the first matching point; errors (naming the cell
+    /// and any refusal) when missing.
+    pub fn stats_where(
+        &self,
+        f: &dyn Fn(&PointCoords) -> bool,
+    ) -> anyhow::Result<&CompletionStats> {
+        let p = self
+            .point_where(f)
+            .ok_or_else(|| anyhow::anyhow!("no study point matches the predicate"))?;
+        let cell = self.cell_of(p);
+        cell.stats().ok_or_else(|| {
+            anyhow::anyhow!(
+                "study cell '{}' was refused by its backend: {}",
+                cell.key,
+                cell.refusal().unwrap_or("(no message)")
+            )
+        })
+    }
+
+    /// Serialize to the versioned artifact schema (see `README.md`
+    /// §Running studies).
+    pub fn to_json(&self) -> Json {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut pairs: Vec<(&str, Json)> = vec![
+                    ("key", c.key.as_str().into()),
+                    ("backend", c.backend.name().into()),
+                    ("trials", (c.trials as i64).into()),
+                ];
+                match &c.outcome {
+                    CellOutcome::Refused(msg) => pairs.push(("refused", msg.as_str().into())),
+                    CellOutcome::Stats(st) => {
+                        pairs.push(("mean", st.mean.into()));
+                        pairs.push(("variance", st.variance.into()));
+                        pairs.push(("sem", st.sem.into()));
+                        pairs.push(("samples", (st.samples as i64).into()));
+                        if self.quantiles && !st.quantiles.is_empty() {
+                            pairs.push((
+                                "quantiles",
+                                Json::Array(
+                                    st.quantiles
+                                        .iter()
+                                        .map(|&(q, t)| {
+                                            Json::Array(vec![Json::Num(q), Json::Num(t)])
+                                        })
+                                        .collect(),
+                                ),
+                            ));
+                        }
+                        if self.cost {
+                            if let Some(cost) = &st.cost {
+                                pairs.push((
+                                    "cost",
+                                    Json::obj(vec![
+                                        ("busy", cost.busy.into()),
+                                        ("wasted", cost.wasted.into()),
+                                    ]),
+                                ));
+                            }
+                        }
+                        if let Some(ov) = &st.overhead {
+                            pairs.push((
+                                "overhead",
+                                Json::obj(vec![
+                                    ("dispatch_s", ov.dispatch_s.into()),
+                                    ("wall_s", ov.wall_s.into()),
+                                    ("injected_s", ov.injected_s.into()),
+                                    ("overhead_s", ov.overhead_s().into()),
+                                ]),
+                            ));
+                        }
+                    }
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let c = &p.coords;
+                Json::obj(vec![
+                    ("cell", (p.cell as i64).into()),
+                    ("n", c.n.into()),
+                    ("b", c.b.into()),
+                    ("eff_b", c.eff_b.into()),
+                    ("policy", c.policy.name().into()),
+                    ("service", c.service.as_str().into()),
+                    ("redundancy", c.redundancy.as_str().into()),
+                    (
+                        "k_of_b",
+                        c.k_of_b.map(|k| Json::from(k as i64)).unwrap_or(Json::Null),
+                    ),
+                    ("speeds", c.speeds.as_str().into()),
+                    ("backend", c.backend.name().into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", SCHEMA_VERSION.into()),
+            ("study", self.name.as_str().into()),
+            ("seed", (self.seed as i64).into()),
+            ("axis_points", (self.axis_points as i64).into()),
+            ("unique_cells", (self.unique_cells as i64).into()),
+            ("deduped_points", (self.deduped_points as i64).into()),
+            ("refused_cells", (self.refused_cells as i64).into()),
+            ("cells", Json::Array(cells)),
+            ("points", Json::Array(points)),
+        ])
+    }
+
+    /// Write the artifact to `path`.
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
+    /// Render one CSV row per axis point (coordinates + stats) for
+    /// plotting.
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(
+            &self.name,
+            &[
+                "n", "b", "eff_b", "policy", "service", "redundancy", "k_of_b", "speeds",
+                "backend", "trials", "mean", "variance", "sem", "samples", "p50", "p99",
+                "busy", "wasted", "refused",
+            ],
+        );
+        for p in &self.points {
+            let c = &p.coords;
+            let cell = self.cell_of(p);
+            let (mean, variance, sem, samples, p50, p99, busy, wasted, refused) =
+                match &cell.outcome {
+                    CellOutcome::Refused(msg) => (
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "0".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        msg.clone(),
+                    ),
+                    CellOutcome::Stats(st) => {
+                        let q = |q: f64| {
+                            if self.quantiles {
+                                st.quantile(q)
+                                    .map(|v| fmt_f(v, 6))
+                                    .unwrap_or_else(|| "-".into())
+                            } else {
+                                "-".into()
+                            }
+                        };
+                        let (busy, wasted) = match (&st.cost, self.cost) {
+                            (Some(cost), true) => (fmt_f(cost.busy, 6), fmt_f(cost.wasted, 6)),
+                            _ => ("-".into(), "-".into()),
+                        };
+                        (
+                            fmt_f(st.mean, 6),
+                            fmt_f(st.variance, 6),
+                            fmt_f(st.sem, 6),
+                            st.samples.to_string(),
+                            q(0.5),
+                            q(0.99),
+                            busy,
+                            wasted,
+                            String::new(),
+                        )
+                    }
+                };
+            t.row(vec![
+                c.n.to_string(),
+                c.b.to_string(),
+                c.eff_b.to_string(),
+                c.policy.name().to_string(),
+                c.service.clone(),
+                c.redundancy.clone(),
+                c.k_of_b.map(|k| k.to_string()).unwrap_or_else(|| "full".into()),
+                c.speeds.clone(),
+                c.backend.name().to_string(),
+                cell.trials.to_string(),
+                mean,
+                variance,
+                sem,
+                samples,
+                p50,
+                p99,
+                busy,
+                wasted,
+                refused,
+            ]);
+        }
+        t.to_csv()
+    }
+
+    /// Write the CSV rendering to `path`.
+    pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_csv())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+/// Schema check of a study artifact: version, required counters, every
+/// cell either refused or carrying finite statistics, every point
+/// referencing a valid cell, and the counters consistent with the
+/// arrays. The `batchrep study` subcommand re-reads and validates the
+/// file it wrote, so a malformed artifact fails the CI gate.
+pub fn validate_json(j: &Json) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        j.get("version").and_then(Json::as_i64) == Some(SCHEMA_VERSION),
+        "missing or unexpected study schema version"
+    );
+    for key in ["study", "seed", "axis_points", "unique_cells", "deduped_points", "refused_cells"]
+    {
+        anyhow::ensure!(j.get(key).is_some(), "missing key '{key}'");
+    }
+    let cells = j
+        .get("cells")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow::anyhow!("missing or non-array 'cells'"))?;
+    anyhow::ensure!(!cells.is_empty(), "study artifact has no cells");
+    let mut refused = 0i64;
+    for (i, c) in cells.iter().enumerate() {
+        let backend = c
+            .get("backend")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("cell {i} missing 'backend'"))?;
+        BackendSel::parse(backend).map_err(|e| anyhow::anyhow!("cell {i}: {e}"))?;
+        anyhow::ensure!(c.get("key").and_then(Json::as_str).is_some(), "cell {i} missing 'key'");
+        if c.get("refused").is_some() {
+            refused += 1;
+            continue;
+        }
+        for stat in ["mean", "variance", "sem"] {
+            let v = c
+                .get(stat)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("cell {i} missing '{stat}'"))?;
+            anyhow::ensure!(v.is_finite(), "cell {i} has non-finite '{stat}' = {v}");
+        }
+        let samples = c
+            .get("samples")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("cell {i} missing 'samples'"))?;
+        anyhow::ensure!(samples >= 0, "cell {i} has negative samples");
+    }
+    let points = j
+        .get("points")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow::anyhow!("missing or non-array 'points'"))?;
+    for (i, p) in points.iter().enumerate() {
+        let cell = p
+            .get("cell")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("point {i} missing 'cell'"))?;
+        anyhow::ensure!(
+            cell >= 0 && (cell as usize) < cells.len(),
+            "point {i} references cell {cell} of {}",
+            cells.len()
+        );
+        for key in ["n", "b", "policy", "service", "backend"] {
+            anyhow::ensure!(p.get(key).is_some(), "point {i} missing '{key}'");
+        }
+    }
+    let count = |key: &str| j.get(key).and_then(Json::as_i64).unwrap_or(-1);
+    anyhow::ensure!(
+        count("axis_points") == points.len() as i64,
+        "axis_points {} != points array length {}",
+        count("axis_points"),
+        points.len()
+    );
+    anyhow::ensure!(
+        count("unique_cells") == cells.len() as i64,
+        "unique_cells {} != cells array length {}",
+        count("unique_cells"),
+        cells.len()
+    );
+    anyhow::ensure!(
+        count("deduped_points") == points.len() as i64 - cells.len() as i64,
+        "deduped_points {} inconsistent with {} points / {} cells",
+        count("deduped_points"),
+        points.len(),
+        cells.len()
+    );
+    anyhow::ensure!(
+        count("refused_cells") == refused,
+        "refused_cells {} != {} cells carrying a refusal",
+        count("refused_cells"),
+        refused
+    );
+    Ok(())
+}
+
+/// Read `path` and [`validate_json`] it.
+pub fn validate_file(path: &Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    validate_json(&j)?;
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{BatchService, ServiceSpec};
+    use crate::study::{execute, BatchAxis, StudySpec};
+
+    fn smoke_report() -> StudyReport {
+        let spec = StudySpec {
+            n_workers: vec![8],
+            batches: BatchAxis::Explicit(vec![2, 4]),
+            services: vec![BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.2))],
+            backends: vec![BackendSel::Analytic, BackendSel::MonteCarlo],
+            mc_trials: 2_000,
+            ..StudySpec::base("report-test")
+        };
+        let plan = spec.compile().unwrap();
+        execute(&plan, 2, &mut |_, _, _, _| {}).unwrap()
+    }
+
+    #[test]
+    fn artifact_round_trips_and_validates() {
+        let report = smoke_report();
+        let j = report.to_json();
+        validate_json(&j).unwrap();
+        let path = std::env::temp_dir().join("batchrep_study_report_test.json");
+        report.write(&path).unwrap();
+        let parsed = validate_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(parsed.get("version").and_then(Json::as_i64), Some(SCHEMA_VERSION));
+        assert_eq!(parsed.get("study").and_then(Json::as_str), Some("report-test"));
+        assert_eq!(
+            parsed.get("points").and_then(Json::as_array).map(<[Json]>::len),
+            Some(report.points.len())
+        );
+    }
+
+    #[test]
+    fn validation_rejects_malformed_documents() {
+        assert!(validate_json(&Json::parse("{}").unwrap()).is_err());
+        let report = smoke_report();
+        let good = report.to_json();
+        validate_json(&good).unwrap();
+        // Dropping a cell breaks the unique_cells counter.
+        if let Json::Object(mut m) = good.clone() {
+            if let Some(Json::Array(cells)) = m.get_mut("cells") {
+                cells.pop();
+            }
+            assert!(validate_json(&Json::Object(m)).is_err());
+        } else {
+            panic!("artifact is an object");
+        }
+        // A point referencing a missing cell is rejected.
+        if let Json::Object(mut m) = good.clone() {
+            if let Some(Json::Array(points)) = m.get_mut("points") {
+                if let Some(Json::Object(p)) = points.first_mut() {
+                    p.insert("cell".into(), Json::Num(1e6));
+                }
+            }
+            assert!(validate_json(&Json::Object(m)).is_err());
+        }
+        // Wrong version is malformed.
+        assert!(validate_json(&Json::parse("{\"version\": 99}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn csv_has_one_row_per_point() {
+        let report = smoke_report();
+        let csv = report.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 1 + report.points.len(), "header + one row per point");
+        assert!(lines[0].starts_with("n,b,eff_b,policy,service"));
+        // Service names contain commas — the CSV must quote them.
+        assert!(lines[1].contains("\"sexp:1,0.2/size_scaled\""), "{}", lines[1]);
+    }
+
+    #[test]
+    fn lookups_surface_refusals() {
+        let report = smoke_report();
+        // Analytic cells exist for this grid.
+        assert!(report.stats_where(&|c| c.backend == BackendSel::Analytic && c.b == 2).is_ok());
+        assert!(report.point_where(&|c| c.b == 99).is_none());
+        assert!(report.try_stats_where(&|c| c.b == 99).is_none());
+        assert!(report.stats_where(&|c| c.b == 99).is_err());
+    }
+}

@@ -120,11 +120,9 @@ pub fn check_with<F>(name: &str, cases: u64, base_seed: Option<u64>, prop: F)
 where
     F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
 {
-    // Deterministic per-property seed: hash the name.
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in name.bytes() {
-        h = (h ^ b as u64).wrapping_mul(0x1000_0000_01b3);
-    }
+    // Deterministic per-property seed: hash the name (the shared
+    // FNV-1a — same constants as always, so replay seeds are stable).
+    let h = crate::util::rng::fnv1a(name.bytes());
     // Allow override for reproducing failures.
     let base = base_seed
         .or_else(|| {

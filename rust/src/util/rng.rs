@@ -6,6 +6,19 @@
 //! deterministically) and independent substreams for parallel workers —
 //! both provided here without external dependencies.
 
+/// FNV-1a over a byte stream: the crate's stable non-cryptographic
+/// content hash (canonical-key seeds, trace-content keys). Not for
+/// adversarial input.
+#[inline]
+pub fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// SplitMix64 step — used for seeding and for cheap stateless mixing.
 #[inline]
 pub fn splitmix64(state: &mut u64) -> u64 {

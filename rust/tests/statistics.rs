@@ -8,7 +8,9 @@ use batchrep::analysis;
 use batchrep::des::engine::{simulate_many, EngineConfig};
 use batchrep::des::{montecarlo, Scenario};
 use batchrep::dist::{BatchService, ServiceSpec};
+use batchrep::evaluator::CompletionStats;
 use batchrep::testkit;
+use batchrep::util::stats::{Samples, Welford};
 
 const TRIALS: u64 = 60_000;
 
@@ -127,6 +129,145 @@ fn prop_mean_dominance_of_balanced_holds_in_simulation() {
             m_skw.mean()
         );
     });
+}
+
+#[test]
+fn completion_stats_quantile_edge_cases() {
+    // The reported-quantile lookup: an exact backend with no retained
+    // samples reports an empty quantile list, and every lookup is None
+    // rather than a panic or a fabricated number.
+    let empty = CompletionStats {
+        mean: 1.0,
+        variance: 0.5,
+        quantiles: Vec::new(),
+        cost: None,
+        sem: 0.0,
+        samples: 0,
+        overhead: None,
+    };
+    for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+        assert_eq!(empty.quantile(q), None, "q={q}");
+    }
+    // Populated lists match within the lookup's epsilon and miss
+    // cleanly outside it.
+    let st = CompletionStats {
+        quantiles: vec![(0.5, 2.0), (0.9, 3.0), (0.99, 4.0)],
+        ..empty.clone()
+    };
+    assert_eq!(st.quantile(0.5), Some(2.0));
+    assert_eq!(st.quantile(0.5 + 1e-12), Some(2.0), "lookup tolerates fp wobble");
+    assert_eq!(st.quantile(0.75), None);
+    assert_eq!(st.quantile(1.0), None);
+
+    // The sample-set quantile under the same edge cases: a single
+    // sample answers every q; q = 0 / q = 1 are the extreme order
+    // statistics; ties and unsorted input are fine (total_cmp order).
+    let mut one = Samples::new();
+    one.push(7.5);
+    for q in [0.0, 0.3, 1.0] {
+        assert_eq!(one.quantile(q), 7.5);
+    }
+    let mut s = Samples::new();
+    for x in [3.0f64, 1.0, 2.0, 2.0, 0.0, -1.0] {
+        s.push(x);
+    }
+    assert_eq!(s.quantile(0.0), -1.0);
+    assert_eq!(s.quantile(1.0), 3.0);
+    let p50 = s.quantile(0.5);
+    assert!((0.0..=3.0).contains(&p50), "median {p50} inside the sample range");
+    // NaN-free ordering: zeros and negative zeros don't wedge the
+    // total_cmp sort, and quantiles stay monotone in q.
+    let mut z = Samples::new();
+    for x in [0.0f64, -0.0, 1.0, -1.0, 0.5] {
+        z.push(x);
+    }
+    let mut prev = f64::NEG_INFINITY;
+    for q in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let v = z.quantile(q);
+        assert!(v >= prev, "quantiles must be monotone: q={q} v={v} prev={prev}");
+        prev = v;
+    }
+}
+
+#[test]
+fn welford_merge_is_associative_across_arbitrary_shard_splits() {
+    // The study pool and both sharded runners rely on Welford merges
+    // being split-invariant: any partition of the trial stream into
+    // shards, merged in any grouping, must agree with the sequential
+    // accumulator to fp accuracy (count exactly).
+    let mut rng = batchrep::util::rng::Rng::new(99);
+    let xs: Vec<f64> = (0..5_000).map(|_| rng.f64() * 10.0 - 3.0).collect();
+    let mut sequential = Welford::new();
+    for &x in &xs {
+        sequential.push(x);
+    }
+    let splits: Vec<Vec<usize>> = vec![
+        vec![5_000],
+        vec![1, 4_999],
+        vec![2_500, 2_500],
+        vec![1, 1, 1, 4_997],
+        vec![64; 5_000 / 64]
+            .into_iter()
+            .chain(std::iter::once(5_000 % 64))
+            .collect(),
+    ];
+    for split in &splits {
+        // Build the shard accumulators.
+        let mut shards: Vec<Welford> = Vec::new();
+        let mut i = 0usize;
+        for &len in split {
+            let mut w = Welford::new();
+            for &x in &xs[i..i + len] {
+                w.push(x);
+            }
+            i += len;
+            shards.push(w);
+        }
+        assert_eq!(i, xs.len());
+        // Left fold.
+        let mut left = Welford::new();
+        for sh in &shards {
+            left.merge(sh);
+        }
+        // Pairwise tree fold (a different association).
+        let mut level = shards.clone();
+        while level.len() > 1 {
+            let mut next = Vec::new();
+            for pair in level.chunks(2) {
+                let mut m = pair[0];
+                if let Some(b) = pair.get(1) {
+                    m.merge(b);
+                }
+                next.push(m);
+            }
+            level = next;
+        }
+        let tree = level[0];
+        for (name, merged) in [("left", &left), ("tree", &tree)] {
+            assert_eq!(merged.count(), sequential.count(), "{name} {split:?}");
+            assert!(
+                (merged.mean() - sequential.mean()).abs() < 1e-10,
+                "{name} {split:?}: mean {} vs {}",
+                merged.mean(),
+                sequential.mean()
+            );
+            assert!(
+                (merged.variance() - sequential.variance()).abs() < 1e-8,
+                "{name} {split:?}: var {} vs {}",
+                merged.variance(),
+                sequential.variance()
+            );
+            assert_eq!(merged.min(), sequential.min(), "{name} {split:?}");
+            assert_eq!(merged.max(), sequential.max(), "{name} {split:?}");
+        }
+        // Merging an empty accumulator from either side is the identity.
+        let mut with_empty = left;
+        with_empty.merge(&Welford::new());
+        assert_eq!(with_empty.count(), left.count());
+        let mut from_empty = Welford::new();
+        from_empty.merge(&left);
+        assert!((from_empty.mean() - left.mean()).abs() < 1e-12);
+    }
 }
 
 #[test]

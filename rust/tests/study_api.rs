@@ -1,0 +1,173 @@
+//! Public-surface tests of the declarative Study API: spec → plan →
+//! shared-pool execution → report/artifact, exercised exactly the way
+//! downstream consumers (experiments, CLI, conformance) use it.
+
+use batchrep::dist::{BatchService, ServiceSpec};
+use batchrep::evaluator::{cross_check_stats, AnalyticEvaluator, Evaluator};
+use batchrep::study::{
+    execute, validate_json, BackendSel, BatchAxis, KTarget, SpeedAxis, StudySpec,
+};
+
+fn paper_services(delta_mus: &[f64]) -> Vec<BatchService> {
+    delta_mus
+        .iter()
+        .map(|&dm| BatchService::paper(ServiceSpec::shifted_exp(1.0, dm)))
+        .collect()
+}
+
+#[test]
+fn fig2_style_study_cross_checks_and_dedups() {
+    // A miniature Fig. 2: a ∆µ axis × feasible batch counts × the
+    // {analytic, montecarlo} backend pair, with one ∆µ listed twice —
+    // the duplicate service axis entry must not cost a second
+    // evaluation, and every grid point must cross-check.
+    let spec = StudySpec {
+        n_workers: vec![12],
+        services: paper_services(&[0.2, 2.0, 0.2]),
+        backends: vec![BackendSel::Analytic, BackendSel::MonteCarlo],
+        mc_trials: 30_000,
+        seed: 17,
+        ..StudySpec::base("fig2-mini")
+    };
+    let plan = spec.compile().unwrap();
+    let n_b = batchrep::assignment::feasible_batch_counts(12).len();
+    assert_eq!(plan.axis_points(), 3 * n_b * 2);
+    assert_eq!(plan.cells.len(), 2 * n_b * 2, "duplicate delta_mu planned once");
+    assert_eq!(plan.deduped_points(), n_b * 2);
+
+    let report = execute(&plan, 4, &mut |_, _, _, _| {}).unwrap();
+    assert_eq!(report.refused_cells, 0);
+    for si in 0..2 {
+        for &b in &batchrep::assignment::feasible_batch_counts(12) {
+            let an = report
+                .stats_where(&|c| {
+                    c.service_idx == si && c.b == b && c.backend == BackendSel::Analytic
+                })
+                .unwrap()
+                .clone();
+            let mc = report
+                .stats_where(&|c| {
+                    c.service_idx == si && c.b == b && c.backend == BackendSel::MonteCarlo
+                })
+                .unwrap()
+                .clone();
+            cross_check_stats("analytic", "montecarlo", an, mc).unwrap();
+        }
+    }
+    // The duplicate axis entry resolves to the same cell as its twin.
+    let first = report.point_where(&|c| c.service_idx == 0 && c.b == 2).unwrap().cell;
+    let twin = report.point_where(&|c| c.service_idx == 2 && c.b == 2).unwrap().cell;
+    assert_eq!(first, twin);
+}
+
+#[test]
+fn study_report_identical_across_thread_counts() {
+    // Acceptance property, public surface: the whole report — artifact
+    // serialization included — is bit-identical for threads ∈ {1,2,4,8}.
+    let spec = StudySpec {
+        n_workers: vec![8],
+        batches: BatchAxis::Explicit(vec![2, 4, 8]),
+        services: paper_services(&[0.3]),
+        k_targets: vec![KTarget::Full, KTarget::Fraction(0.5)],
+        speeds: vec![SpeedAxis::Homogeneous, SpeedAxis::Ramp { lo: 0.7, hi: 1.6 }],
+        backends: vec![BackendSel::Analytic, BackendSel::MonteCarlo, BackendSel::Des],
+        mc_trials: 8_000,
+        des_trials: 2_000,
+        seed: 23,
+        ..StudySpec::base("threads-property")
+    };
+    let plan = spec.compile().unwrap();
+    let baseline = execute(&plan, 1, &mut |_, _, _, _| {}).unwrap();
+    let baseline_json = baseline.to_json().to_string();
+    validate_json(&baseline.to_json()).unwrap();
+    for threads in [2usize, 4, 8] {
+        let run = execute(&plan, threads, &mut |_, _, _, _| {}).unwrap();
+        assert_eq!(
+            run.to_json().to_string(),
+            baseline_json,
+            "study artifact diverged at {threads} threads"
+        );
+        assert_eq!(run.to_csv(), baseline.to_csv());
+    }
+}
+
+#[test]
+fn analytic_cells_match_the_evaluator_and_hetero_cells_refuse_correctly() {
+    // Analytic study cells are the evaluator's own numbers; the
+    // hetero × partial-aggregation combination is refused with the
+    // evaluator's field-naming message rather than silently dropped.
+    let spec = StudySpec {
+        n_workers: vec![8],
+        batches: BatchAxis::Explicit(vec![4]),
+        services: paper_services(&[0.2]),
+        k_targets: vec![KTarget::Exact(2)],
+        speeds: vec![SpeedAxis::Ramp { lo: 0.5, hi: 1.5 }],
+        backends: vec![BackendSel::Analytic],
+        seed: 3,
+        ..StudySpec::base("hetero-k-refusal")
+    };
+    let plan = spec.compile().unwrap();
+    let report = execute(&plan, 2, &mut |_, _, _, _| {}).unwrap();
+    assert_eq!(report.refused_cells, 1);
+    let err = report.stats_where(&|c| c.backend == BackendSel::Analytic).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("Scenario::worker_speeds"), "{msg}");
+    assert!(msg.contains("Scenario::k_of_b"), "{msg}");
+
+    // Same grid without the k axis: served, and equal to the direct
+    // evaluator call on the planned scenario.
+    let spec = StudySpec { k_targets: vec![KTarget::Full], ..spec };
+    let plan = spec.compile().unwrap();
+    let report = execute(&plan, 2, &mut |_, _, _, _| {}).unwrap();
+    let got = report.stats_where(&|c| c.backend == BackendSel::Analytic).unwrap();
+    let want = AnalyticEvaluator.evaluate(&plan.cells[0].scenario).unwrap();
+    assert_eq!(got.mean.to_bits(), want.mean.to_bits());
+    assert_eq!(got.sem.to_bits(), want.sem.to_bits());
+}
+
+#[test]
+fn spec_files_round_trip_through_the_planner() {
+    // A spec written to disk loads, compiles, and names its study; an
+    // unknown file errors with the preset list.
+    let dir = std::env::temp_dir().join("batchrep_study_api_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("spec.json");
+    std::fs::write(
+        &path,
+        r#"{"name": "disk-spec", "n_workers": [8], "batches": [2, 4],
+            "services": ["sexp:1.0,0.2"], "backends": ["analytic", "montecarlo"],
+            "mc_trials": 2000, "seed": 9}"#,
+    )
+    .unwrap();
+    let spec = StudySpec::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(spec.name, "disk-spec");
+    let plan = spec.compile().unwrap();
+    assert_eq!(plan.cells.len(), 4);
+    let report = execute(&plan, 2, &mut |_, _, _, _| {}).unwrap();
+    let out = dir.join("STUDY_disk-spec.json");
+    report.write(&out).unwrap();
+    batchrep::study::validate_file(&out).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let err = StudySpec::load("no-such-study").unwrap_err().to_string();
+    assert!(err.contains("smoke") && err.contains("spec file"), "{err}");
+}
+
+#[test]
+fn smoke_preset_runs_fast_end_to_end() {
+    // The ci.sh gate in miniature: the smoke preset under --fast
+    // budgets compiles, executes with dedup, streams every cell, and
+    // validates its artifact.
+    let spec = StudySpec::preset("smoke").unwrap().fast();
+    let plan = spec.compile().unwrap();
+    let mut streamed = 0usize;
+    let report = execute(&plan, 4, &mut |_, _, done, total| {
+        assert!(done <= total);
+        streamed += 1;
+    })
+    .unwrap();
+    assert_eq!(streamed, plan.cells.len());
+    assert!(report.deduped_points > 0, "smoke preset always exercises dedup");
+    assert_eq!(report.refused_cells, 0, "smoke grid is fully in-scope");
+    validate_json(&report.to_json()).unwrap();
+}
