@@ -24,6 +24,13 @@ fi
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== cargo build --release --features pjrt (vendored xla stub) =="
+# The pjrt feature must always *compile* — offline it resolves to the
+# vendored no-op xla stub (rust/vendor/xla-stub), which errors at
+# runtime instead of faking results. This catches drift between
+# runtime::Engine and the xla API surface it targets.
+cargo build --release --features pjrt
+
 echo "== cargo test -q =="
 cargo test -q
 
@@ -44,6 +51,17 @@ if [ -f ../STUDY_smoke.json ]; then
   cargo run --release -- study smoke --fast --quiet --out target/STUDY_smoke.json
 else
   cargo run --release -- study smoke --fast --quiet --out ../STUDY_smoke.json
+fi
+
+echo "== control smoke (adaptive redundancy controller) =="
+# Runs the closed-loop controller preset at --fast budgets and
+# schema-validates the CONTROL artifact it writes (the subcommand
+# re-reads the file and fails on a malformed schema). Same no-clobber
+# rule as the bench JSONs.
+if [ -f ../CONTROL_smoke.json ]; then
+  cargo run --release -- control smoke --fast --quiet --out target/CONTROL_smoke.json
+else
+  cargo run --release -- control smoke --fast --quiet --out ../CONTROL_smoke.json
 fi
 
 echo "== bench smoke (bench_fig2, fast mode) =="

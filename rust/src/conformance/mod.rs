@@ -21,7 +21,12 @@
 //!   the only pair that covers speculative redundancy and failure
 //!   injection;
 //! * **DES ↔ Live** — small clusters, upfront, no failures, exp-family:
-//!   the real coordinator with injected time, k-of-B included.
+//!   the real coordinator with injected time, k-of-B included;
+//! * **Live-crash ↔ Analytic** — a worker thread is crashed *mid-round*
+//!   (not just a replica coin flip): its thread exits, the survivors
+//!   must still complete every round, and their post-crash completion
+//!   must match [`analysis::assignment_stats`] on the reduced
+//!   (one-replica-poorer) assignment.
 //!
 //! Tolerances are **statistically sound**: each cell compares two mean
 //! estimates through an interval test — `|gap| ≤ z·√(sem_a² + sem_b²) +
@@ -35,10 +40,15 @@
 //! reported at its **shrunk minimal case** together with a
 //! `BATCHREP_PROP_SEED` replay seed that reproduces it deterministically
 //! (backend results are bit-reproducible per seed for *any* thread
-//! count — the logical-shard plan guarantees it). Run it as
-//! `batchrep conformance [--fast|--long]`; `ci.sh` runs the fast mode
-//! as a merge gate, and `--long` is the off-by-default soak sweep
-//! ([`MatrixOptions::long`]) for releases and backend rewrites.
+//! count — the logical-shard plan guarantees it). The shrunk case is
+//! also **appended to the adversarial corpus**
+//! (`conformance/corpus.json` by default, [`MatrixOptions::corpus`]):
+//! corpus cases replay *before* the anchors and the random sweep on
+//! every run, so each bug the generator ever found becomes a permanent
+//! regression gate. Run it as `batchrep conformance [--fast|--long]`;
+//! `ci.sh` runs the fast mode as a merge gate, and `--long` is the
+//! off-by-default soak sweep ([`MatrixOptions::long`]) for releases and
+//! backend rewrites.
 //!
 //! The deterministic anchor corners are **enumerated through the study
 //! planner** ([`crate::study::StudySpec`] grids compiled to scenario
@@ -46,16 +56,23 @@
 //! axes, canonicalization, and derived seeds.
 
 use crate::analysis;
+use crate::assignment::Assignment;
+use crate::config::SystemConfig;
+use crate::coordinator::{Backend, Coordinator};
 use crate::des::engine::{simulate_many_reference, EngineConfig, Redundancy};
 use crate::des::Scenario;
-use crate::dist::{BatchService, ServiceSpec};
+use crate::dist::{BatchModel, BatchService, ServiceSpec};
 use crate::evaluator::{
     AnalyticEvaluator, CompletionStats, DesEvaluator, Evaluator, LiveEvaluator,
     MonteCarloEvaluator, ReplicationPolicy,
 };
 use crate::testkit::{self, Gen};
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+use crate::worker::JobSpec;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::Mutex;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 /// Knobs of one conformance-matrix run.
 #[derive(Debug, Clone)]
@@ -85,6 +102,11 @@ pub struct MatrixOptions {
     /// Relative tolerance floor of the live cells (wall-clock
     /// scheduling noise rides on top of sampling error).
     pub live_floor: f64,
+    /// Adversarial-corpus file: cases recorded from past failures are
+    /// replayed before everything else, and a newly failing generated
+    /// case is appended (shrunk) on the way out. `None` disables corpus
+    /// I/O entirely (hermetic runs, unit tests).
+    pub corpus: Option<PathBuf>,
 }
 
 impl MatrixOptions {
@@ -101,6 +123,7 @@ impl MatrixOptions {
             z: 5.0,
             rel_floor: 0.004,
             live_floor: 0.12,
+            corpus: None,
         }
     }
 
@@ -152,10 +175,14 @@ pub struct MatrixReport {
     pub des_reference: u64,
     /// DES ↔ Live cells.
     pub des_live: u64,
+    /// Live-crash ↔ Analytic cells.
+    pub live_crash: u64,
     /// Cells whose analytic leg used heterogeneous `worker_speeds`.
     pub hetero_analytic_cells: u64,
     /// DES ↔ Live cells with a `k_of_b` target below `B`.
     pub live_k_of_b_cells: u64,
+    /// Corpus cases replayed before the anchors and the random sweep.
+    pub corpus_replayed: u64,
     /// Largest observed `gap / tolerance` over all cells (1.0 = the
     /// tightest cell sat exactly on its bound).
     pub worst_gap_over_tol: f64,
@@ -169,6 +196,7 @@ enum Pair {
     McDes,
     DesReference,
     DesLive,
+    LiveCrash,
 }
 
 impl Pair {
@@ -179,6 +207,7 @@ impl Pair {
             Pair::McDes => "montecarlo<->des",
             Pair::DesReference => "des<->des-reference",
             Pair::DesLive => "des<->live",
+            Pair::LiveCrash => "live-crash<->analytic",
         }
     }
 }
@@ -209,6 +238,10 @@ pub struct GeneratedCase {
     /// Whether this case also runs a DES↔Live cell (live cells cost
     /// real wall-clock, so only a small fraction of cases draw one).
     pub live: bool,
+    /// Whether this case also runs a live-crash cell: a worker thread
+    /// is killed mid-round and the survivors' completion is checked
+    /// against the reduced-assignment closed form.
+    pub crash: bool,
 }
 
 /// Draw one valid scenario from the full cross-product the backends
@@ -250,7 +283,8 @@ pub fn gen_case(g: &mut Gen) -> GeneratedCase {
     }
     let fail_prob = if g.coin(0.2) { g.f64_in(0.05, 0.4) } else { 0.0 };
     let live = g.coin(0.05);
-    GeneratedCase { scenario: scn, fail_prob, live }
+    let crash = g.coin(0.04);
+    GeneratedCase { scenario: scn, fail_prob, live, crash }
 }
 
 /// Human-readable cell context (embedded in every failure message so a
@@ -264,7 +298,7 @@ pub fn describe(case: &GeneratedCase) -> String {
         .unwrap_or_else(|| "homogeneous".into());
     format!(
         "N={} B={} policy={} service={} redundancy={:?} k_of_b={:?} speeds={speeds} \
-         fail_prob={:.3} seed={}",
+         fail_prob={:.3} crash={} seed={}",
         scn.n_workers(),
         scn.assignment.n_batches,
         scn.policy.name(),
@@ -272,8 +306,161 @@ pub fn describe(case: &GeneratedCase) -> String {
         scn.redundancy,
         scn.k_of_b,
         case.fail_prob,
+        case.crash,
         scn.seed,
     )
+}
+
+/// Serialize a case for the adversarial corpus (inverse of
+/// [`case_from_json`]). Everything a replay needs is captured: the
+/// policy/shape/service/seed quadruple rebuilds the scenario
+/// bit-identically, and the optional knobs ride alongside.
+pub fn case_to_json(case: &GeneratedCase) -> Json {
+    let scn = &case.scenario;
+    // Record the *constructor's* B, not the effective batch count: an
+    // overlapping-cyclic build always ends with `n_batches = N` (one
+    // window per worker), and the original B survives only in the
+    // window size — `from_policy(.., N, b_ctor, ..)` then rebuilds the
+    // identical layout.
+    let b_ctor = if scn.layout.is_overlapping {
+        scn.n_workers() / scn.layout.batch_units()
+    } else {
+        scn.assignment.n_batches
+    };
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("n", Json::from(scn.n_workers())),
+        ("b", Json::from(b_ctor)),
+        ("policy", Json::from(scn.policy.name())),
+        ("service", Json::from(scn.service.spec.name())),
+        ("model", Json::from(scn.service.model.name())),
+        ("seed", Json::from(scn.seed as i64)),
+        ("fail_prob", Json::from(case.fail_prob)),
+        ("live", Json::from(case.live)),
+        ("crash", Json::from(case.crash)),
+    ];
+    if let Redundancy::Speculative { deadline_factor } = scn.redundancy {
+        pairs.push(("speculative", Json::from(deadline_factor)));
+    }
+    if let Some(k) = scn.k_of_b {
+        pairs.push(("k_of_b", Json::from(k)));
+    }
+    if let Some(speeds) = &scn.worker_speeds {
+        pairs.push(("speeds", Json::Array(speeds.iter().map(|&s| Json::from(s)).collect())));
+    }
+    Json::obj(pairs)
+}
+
+/// Rebuild a corpus case from its JSON form.
+pub fn case_from_json(v: &Json) -> anyhow::Result<GeneratedCase> {
+    let field = |k: &str| {
+        v.get(k).ok_or_else(|| anyhow::anyhow!("corpus case is missing field '{k}'"))
+    };
+    let int = |k: &str| -> anyhow::Result<i64> {
+        field(k)?.as_i64().ok_or_else(|| anyhow::anyhow!("corpus field '{k}' is not an integer"))
+    };
+    let text = |k: &str| -> anyhow::Result<String> {
+        Ok(field(k)?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("corpus field '{k}' is not a string"))?
+            .to_string())
+    };
+    let n = int("n")? as usize;
+    let b = int("b")? as usize;
+    let policy = ReplicationPolicy::parse(&text("policy")?)?;
+    let spec = ServiceSpec::parse(&text("service")?)?;
+    let model = match v.get("model") {
+        Some(m) => BatchModel::parse(
+            m.as_str().ok_or_else(|| anyhow::anyhow!("corpus field 'model' is not a string"))?,
+        )?,
+        None => BatchModel::SizeScaled,
+    };
+    let seed = int("seed")? as u64;
+    let mut scn = Scenario::from_policy(policy, n, b, BatchService { spec, model }, seed)?;
+    if let Some(df) = v.get("speculative").and_then(Json::as_f64) {
+        scn = scn.with_redundancy(Redundancy::Speculative { deadline_factor: df });
+    }
+    if let Some(k) = v.get("k_of_b").and_then(Json::as_i64) {
+        scn = scn.with_k_of_b(k as usize)?;
+    }
+    if let Some(arr) = v.get("speeds").and_then(Json::as_array) {
+        let speeds = arr
+            .iter()
+            .map(|s| s.as_f64().ok_or_else(|| anyhow::anyhow!("corpus speed is not a number")))
+            .collect::<anyhow::Result<Vec<f64>>>()?;
+        scn = scn.with_speeds(speeds)?;
+    }
+    let fail_prob = v.get("fail_prob").and_then(Json::as_f64).unwrap_or(0.0);
+    let live = v.get("live").and_then(Json::as_bool).unwrap_or(false);
+    let crash = v.get("crash").and_then(Json::as_bool).unwrap_or(false);
+    Ok(GeneratedCase { scenario: scn, fail_prob, live, crash })
+}
+
+/// The default adversarial-corpus location: `$BATCHREP_CORPUS`, else
+/// `conformance/corpus.json` found by walking up from the working
+/// directory (the repo checkout), else a fresh `conformance/corpus.json`
+/// relative to the working directory.
+pub fn default_corpus_path() -> PathBuf {
+    if let Ok(p) = std::env::var("BATCHREP_CORPUS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("conformance").join("corpus.json");
+        if cand.exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return Path::new("conformance").join("corpus.json");
+        }
+    }
+}
+
+/// Load every case in a corpus file (missing file = empty corpus; a
+/// malformed file is an error — silently skipping recorded regressions
+/// would defeat the point).
+pub fn load_corpus(path: &Path) -> anyhow::Result<Vec<GeneratedCase>> {
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let body = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read corpus {}: {e}", path.display()))?;
+    let v = Json::parse(&body)
+        .map_err(|e| anyhow::anyhow!("corpus {} is not valid JSON: {e:?}", path.display()))?;
+    let arr = v
+        .as_array()
+        .ok_or_else(|| anyhow::anyhow!("corpus {} must be a JSON array", path.display()))?;
+    arr.iter()
+        .map(case_from_json)
+        .collect::<anyhow::Result<Vec<_>>>()
+        .map_err(|e| anyhow::anyhow!("corpus {}: {e}", path.display()))
+}
+
+/// Append a case to the corpus (creating the file if needed), deduped
+/// by serialized form.
+pub fn append_to_corpus(path: &Path, case: &GeneratedCase) -> anyhow::Result<()> {
+    let mut entries: Vec<Json> = if path.exists() {
+        let body = std::fs::read_to_string(path)?;
+        match Json::parse(&body) {
+            Ok(Json::Array(items)) => items,
+            _ => anyhow::bail!("corpus {} is not a JSON array", path.display()),
+        }
+    } else {
+        Vec::new()
+    };
+    let new = case_to_json(case);
+    let key = new.to_string();
+    if entries.iter().any(|e| e.to_string() == key) {
+        return Ok(());
+    }
+    entries.push(new);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, format!("{}\n", Json::Array(entries)))
+        .map_err(|e| anyhow::anyhow!("cannot write corpus {}: {e}", path.display()))?;
+    Ok(())
 }
 
 /// Does the analytic backend cover this scenario? (Mirror of
@@ -305,6 +492,105 @@ fn live_applies(scn: &Scenario, fail_prob: f64) -> bool {
         && !scn.layout.is_overlapping
         && scn.service.spec.exp_family().is_some()
         && scn.n_workers() <= 8
+}
+
+/// Does a live-crash cell make sense here? Live constraints, plus:
+/// every batch must survive losing one replica (balanced, g ≥ 2), the
+/// reduced-assignment closed form needs full completion, homogeneous
+/// speeds, and equal-size batches (`B | U`).
+fn crash_applies(scn: &Scenario, fail_prob: f64) -> bool {
+    live_applies(scn, fail_prob)
+        && scn.worker_speeds.is_none()
+        && scn.k_of_b.is_none()
+        && scn.assignment.is_balanced()
+        && scn.assignment.n_batches >= 1
+        && scn.assignment.replication(0) >= 2
+        && scn.layout.n_units % scn.assignment.n_batches == 0
+}
+
+/// The live-crash cell: run a few warm-up rounds with the full cluster,
+/// kill one worker thread halfway through its straggle, then check that
+/// (a) the crash round and every later round still complete, and
+/// (b) the survivors' mean injected completion matches
+/// [`analysis::assignment_stats`] on the assignment with the dead
+/// worker's replica removed (survivor indices reindexed).
+fn check_crash_cell(
+    case: &GeneratedCase,
+    opts: &MatrixOptions,
+    report: &Mutex<MatrixReport>,
+) -> anyhow::Result<()> {
+    let scn = &case.scenario;
+    let ctx = describe(case);
+    let n_units = scn.layout.n_units as u64;
+
+    // Scale wall time off the full-cluster closed form, exactly like
+    // the DES↔Live cells scale off the DES mean.
+    let full = analysis::assignment_stats(&scn.assignment, &scn.service.spec, n_units)?;
+    let time_scale = (0.004 / full.mean.max(1e-6)).clamp(0.000_8, 0.02);
+    let cfg = SystemConfig {
+        time_scale,
+        n_samples: 32.max(scn.n_workers()),
+        dim: 4,
+        cancellation: true,
+        ..SystemConfig::default()
+    };
+    let scn_run = scn.clone().with_seed(scn.seed ^ 0xC4A5_11ED);
+    let mut coord = Coordinator::from_scenario(&scn_run, cfg, Backend::Mock)?;
+    let w = Arc::new(vec![0.0f32; 4]);
+    let pre = 3u64;
+    let victim = 0usize;
+    let mut run = || -> anyhow::Result<Welford> {
+        for _ in 0..pre {
+            coord.run_round(JobSpec::Grad { w: w.clone() })?;
+        }
+        coord.crash_worker_next_round(victim, 0.5)?;
+        coord
+            .run_round(JobSpec::Grad { w: w.clone() })
+            .map_err(|e| anyhow::anyhow!("crash round did not complete: {e}"))?;
+        anyhow::ensure!(
+            coord.live_workers() == scn.n_workers() - 1,
+            "expected exactly one dead worker"
+        );
+        for _ in 0..opts.live_rounds {
+            coord.run_round(JobSpec::Grad { w: w.clone() })?;
+        }
+        // Post-crash rounds only: skip the warm-up and the crash round
+        // itself (its completion law is a mixture).
+        let mut post = Welford::new();
+        for rec in coord.metrics.records().iter().skip(pre as usize + 1) {
+            post.push(rec.injected_s / time_scale);
+        }
+        Ok(post)
+    };
+    let outcome = run();
+    coord.shutdown();
+    let post = outcome.map_err(|e| anyhow::anyhow!("live-crash cell failed on {ctx}: {e}"))?;
+
+    // Reduced assignment: drop the victim, reindex the survivors.
+    let bow: Vec<usize> = scn
+        .assignment
+        .batch_of_worker
+        .iter()
+        .enumerate()
+        .filter(|&(wk, _)| wk != victim)
+        .map(|(_, &b)| b)
+        .collect();
+    let mut workers_of_batch = vec![Vec::new(); scn.assignment.n_batches];
+    for (wk, &b) in bow.iter().enumerate() {
+        workers_of_batch[b].push(wk);
+    }
+    let reduced = Assignment {
+        n_workers: scn.n_workers() - 1,
+        n_batches: scn.assignment.n_batches,
+        workers_of_batch,
+        batch_of_worker: bow,
+    };
+    reduced.validate()?;
+    let want = analysis::assignment_stats(&reduced, &scn.service.spec, n_units)?;
+    let an = Estimate { mean: want.mean, sem: 0.0, lo: want.mean, hi: want.mean };
+    let live =
+        Estimate { mean: post.mean(), sem: post.sem(), lo: post.mean(), hi: post.mean() };
+    check_cell(Pair::LiveCrash, &an, &live, opts.z, opts.live_floor, &ctx, report)
 }
 
 /// The analytic leg as an [`Estimate`]: a zero-width point when exact,
@@ -355,6 +641,7 @@ fn check_cell(
             Pair::McDes => r.mc_des += 1,
             Pair::DesReference => r.des_reference += 1,
             Pair::DesLive => r.des_live += 1,
+            Pair::LiveCrash => r.live_crash += 1,
         }
         let ratio = gap / tol.max(1e-300);
         if ratio > r.worst_gap_over_tol {
@@ -480,6 +767,11 @@ fn check_case(
                 report.lock().unwrap().live_k_of_b_cells += 1;
             }
         }
+
+        // --- Live-crash ↔ Analytic: a worker dies mid-round. ---
+        if opts.include_live && case.crash && crash_applies(scn, case.fail_prob) {
+            check_crash_cell(case, opts, report)?;
+        }
     }
     Ok(())
 }
@@ -508,9 +800,9 @@ fn anchor_cases() -> Vec<GeneratedCase> {
         spec.compile().expect("anchor grids are valid by construction").scenarios
     };
     let mut cases: Vec<GeneratedCase> = Vec::new();
-    let mut push = |scenarios: Vec<Scenario>, fail_prob: f64, live: bool| {
+    let mut push = |scenarios: Vec<Scenario>, fail_prob: f64, live: bool, crash: bool| {
         for scenario in scenarios {
-            cases.push(GeneratedCase { scenario, fail_prob, live });
+            cases.push(GeneratedCase { scenario, fail_prob, live, crash });
         }
     };
 
@@ -527,6 +819,7 @@ fn anchor_cases() -> Vec<GeneratedCase> {
         }),
         0.0,
         false,
+        false,
     );
     // Live corners: k-of-B (round completes at the k-th finished batch)
     // and plain full completion on the same small cluster.
@@ -541,6 +834,7 @@ fn anchor_cases() -> Vec<GeneratedCase> {
         }),
         0.0,
         true,
+        false,
     );
     // Live heterogeneous.
     push(
@@ -554,6 +848,7 @@ fn anchor_cases() -> Vec<GeneratedCase> {
         }),
         0.0,
         true,
+        false,
     );
     // k = 1 extreme.
     push(
@@ -566,6 +861,7 @@ fn anchor_cases() -> Vec<GeneratedCase> {
             ..StudySpec::base("conformance-anchor-k1")
         }),
         0.0,
+        false,
         false,
     );
     // Speculative redundancy (engine-pair cells only).
@@ -580,6 +876,7 @@ fn anchor_cases() -> Vec<GeneratedCase> {
         }),
         0.0,
         false,
+        false,
     );
     // Failure injection: same grid shape, the fail knob rides per case.
     push(
@@ -591,6 +888,7 @@ fn anchor_cases() -> Vec<GeneratedCase> {
             ..StudySpec::base("conformance-anchor-fail")
         }),
         0.3,
+        false,
         false,
     );
     // Overlapping layout (MC↔DES + engine pair only).
@@ -605,6 +903,7 @@ fn anchor_cases() -> Vec<GeneratedCase> {
         }),
         0.0,
         false,
+        false,
     );
     // Heavy-tail spec outside the closed forms' scope.
     push(
@@ -617,6 +916,21 @@ fn anchor_cases() -> Vec<GeneratedCase> {
         }),
         0.0,
         false,
+        false,
+    );
+    // Live crash: a worker thread dies mid-round (g = 3, so every batch
+    // survives), survivors checked against the reduced closed form.
+    push(
+        grid(StudySpec {
+            n_workers: vec![6],
+            batches: BatchAxis::Explicit(vec![2]),
+            services: vec![paper(2.0, 0.1)],
+            seed: 9009,
+            ..StudySpec::base("conformance-anchor-crash")
+        }),
+        0.0,
+        false,
+        true,
     );
     cases
 }
@@ -627,6 +941,21 @@ fn anchor_cases() -> Vec<GeneratedCase> {
 /// error carries the shrunk minimal case and its replay seed.
 pub fn run_matrix(opts: &MatrixOptions) -> anyhow::Result<MatrixReport> {
     let report = Mutex::new(MatrixReport::default());
+    // Adversarial corpus first: every shrunk case a past sweep recorded
+    // replays before anything else, so a regression on a previously
+    // found bug fails in seconds, deterministically.
+    if let Some(path) = &opts.corpus {
+        for case in load_corpus(path)? {
+            check_case(&case, opts, &report).map_err(|e| {
+                anyhow::anyhow!(
+                    "conformance corpus case failed (recorded in {}):\n  case: {}\n{e:#}",
+                    path.display(),
+                    describe(&case)
+                )
+            })?;
+            report.lock().unwrap().corpus_replayed += 1;
+        }
+    }
     for case in anchor_cases() {
         check_case(&case, opts, &report).map_err(|e| {
             anyhow::anyhow!(
@@ -656,6 +985,10 @@ pub fn run_matrix(opts: &MatrixOptions) -> anyhow::Result<MatrixReport> {
     let shrink_nolive = MatrixOptions { include_live: false, ..shrink_base.clone() };
     let shrink_live =
         MatrixOptions { live_rounds: (opts.live_rounds / 2).max(20), ..shrink_base };
+    // The last case the checker rejected — by the time the shrinker
+    // stops, this is the minimal failing case it reports, and the one
+    // worth recording in the corpus.
+    let last_failed: Mutex<Option<GeneratedCase>> = Mutex::new(None);
     let sweep = catch_unwind(AssertUnwindSafe(|| {
         testkit::check_with("conformance-matrix", opts.scenarios, opts.seed, |g| {
             let case = gen_case(g);
@@ -668,12 +1001,29 @@ pub fn run_matrix(opts: &MatrixOptions) -> anyhow::Result<MatrixReport> {
                 let text = format!("{e:#}");
                 let mode = if text.contains(Pair::DesLive.name()) { FAILED_LIVE } else { FAILED };
                 state.store(mode, std::sync::atomic::Ordering::Relaxed);
+                *last_failed.lock().unwrap() = Some(case);
                 panic!("{text}");
             }
         })
     }));
     if let Err(payload) = sweep {
-        anyhow::bail!("conformance matrix failed:\n{}", testkit::payload_msg(&*payload));
+        let mut note = String::new();
+        if let Some(path) = &opts.corpus {
+            if let Some(case) = last_failed.lock().unwrap().take() {
+                note = match append_to_corpus(path, &case) {
+                    Ok(()) => format!(
+                        "\n  shrunk case appended to {} — it will replay first on every \
+                         future run",
+                        path.display()
+                    ),
+                    Err(e) => format!("\n  (failed to record the case in the corpus: {e})"),
+                };
+            }
+        }
+        anyhow::bail!(
+            "conformance matrix failed:{note}\n{}",
+            testkit::payload_msg(&*payload)
+        );
     }
     Ok(report.into_inner().expect("no checker panicked while holding the report lock"))
 }
@@ -759,11 +1109,65 @@ mod tests {
             anchors.iter().any(|c| c.scenario.service.spec.exp_family().is_none()),
             "heavy-tail anchor missing"
         );
+        assert!(
+            anchors.iter().any(|c| c.crash && c.scenario.assignment.replication(0) >= 2),
+            "live-crash anchor missing"
+        );
         // Every anchor is a valid scenario with a planner-derived seed.
         for c in &anchors {
             c.scenario.layout.validate().unwrap();
             c.scenario.assignment.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn corpus_round_trips_and_dedupes() {
+        // Serialization is the regression record: a case must survive
+        // JSON → case → JSON bit-identically, and appending the same
+        // case twice must not grow the file.
+        let scn = Scenario::from_policy(
+            ReplicationPolicy::BalancedDisjoint,
+            8,
+            4,
+            BatchService::paper(ServiceSpec::shifted_exp(1.5, 0.25)),
+            42,
+        )
+        .unwrap()
+        .with_redundancy(Redundancy::Speculative { deadline_factor: 1.25 })
+        .with_k_of_b(3)
+        .unwrap()
+        .with_speeds(vec![0.5, 1.0, 1.5, 2.0, 0.5, 1.0, 1.5, 2.0])
+        .unwrap();
+        let case = GeneratedCase { scenario: scn, fail_prob: 0.125, live: true, crash: false };
+        let round = case_from_json(&case_to_json(&case)).unwrap();
+        assert_eq!(case_to_json(&round).to_string(), case_to_json(&case).to_string());
+        assert_eq!(describe(&round), describe(&case));
+
+        let dir = std::env::temp_dir().join(format!("batchrep-corpus-{}", std::process::id()));
+        let path = dir.join("corpus.json");
+        let _ = std::fs::remove_file(&path);
+        assert!(load_corpus(&path).unwrap().is_empty(), "missing file = empty corpus");
+        append_to_corpus(&path, &case).unwrap();
+        append_to_corpus(&path, &case).unwrap();
+        assert_eq!(load_corpus(&path).unwrap().len(), 1, "dedup by serialized form");
+        let other = GeneratedCase {
+            scenario: Scenario::from_policy(
+                ReplicationPolicy::BalancedDisjoint,
+                6,
+                2,
+                BatchService::paper(ServiceSpec::exp(2.0)),
+                9009,
+            )
+            .unwrap(),
+            fail_prob: 0.0,
+            live: false,
+            crash: true,
+        };
+        append_to_corpus(&path, &other).unwrap();
+        let loaded = load_corpus(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert!(loaded.iter().any(|c| c.crash), "crash flag survives the file");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]
@@ -811,6 +1215,7 @@ mod tests {
             z: 5.5,
             rel_floor: 0.01,
             live_floor: 0.2,
+            corpus: None,
         };
         let report = run_matrix(&opts).unwrap();
         assert_eq!(

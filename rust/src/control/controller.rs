@@ -1,0 +1,612 @@
+//! The closed-loop redundancy controller: objective-driven planning
+//! over the `analysis` closed forms, CUSUM drift detection, and the
+//! replan policy tying them together.
+//!
+//! The controller holds a **planned** parameter fit (initially the
+//! caller's prior, wrapped as a zero-width [`FittedSpec`]) and the
+//! batch count `B` that optimizes the declared [`Objective`] under it.
+//! Each [`Controller::step`] refits the censored MLE and replans only
+//! when one of two triggers fires:
+//!
+//! 1. **Confidence-band exit** — the new fit and the planned fit
+//!    [`FittedSpec::disagrees`]: neither confidence band covers the
+//!    other's point estimate. This is the ISSUE's primary trigger and
+//!    what moves the controller off a mis-specified prior.
+//! 2. **Plan-consistency** — the argmin under the current fit differs
+//!    from the held plan *and* switching improves the fitted objective
+//!    score by more than [`ControllerConfig::replan_margin`]. Without
+//!    this, a plan chosen from an early noisy fit could survive forever
+//!    because later (correct) fits stay inside its parameter band; the
+//!    margin stops near-tie divisors from flapping.
+//!
+//! Drift is watched continuously by a two-sided CUSUM on the exact
+//! (winner) observations, standardized against the *planned* winner
+//! law: under the plan a batch winner is the minimum of `g` replicas,
+//! i.e. `∆ + Exp(g·µ)`. When the CUSUM crosses its threshold the
+//! history is stale by definition, so the accumulator is rebuilt from a
+//! ring buffer of the most recent observations and the next step
+//! replans from post-change data only ([`Action::DriftReplan`]).
+
+use super::estimator::{CensoredAccumulator, FitKind, FittedSpec, Observation};
+use crate::analysis::{completion_time_quantile, completion_time_stats};
+use crate::assignment::feasible_batch_counts;
+use crate::dist::ServiceSpec;
+use crate::util::json::Json;
+use std::collections::VecDeque;
+
+/// What the optimizer minimizes, over the paper's closed forms.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Objective {
+    /// Expected completion time `E[T]` (paper Eq. 4).
+    Mean,
+    /// Completion-time variance `Var[T]`.
+    Variance,
+    /// `(1−λ)·E[T] + λ·σ[T]` — the paper's mean/variance trade-off as a
+    /// single dial, `λ ∈ [0, 1]`.
+    Blend {
+        /// Weight on the standard deviation.
+        lambda: f64,
+    },
+    /// The q-quantile of the completion time (performance guarantee).
+    Quantile {
+        /// Probability level, `q ∈ (0, 1)`.
+        q: f64,
+    },
+}
+
+impl Objective {
+    /// Stable name (round-trips through [`Objective::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Objective::Mean => "mean".into(),
+            Objective::Variance => "variance".into(),
+            Objective::Blend { lambda } => format!("blend:{lambda}"),
+            Objective::Quantile { q } => format!("quantile:{q}"),
+        }
+    }
+
+    /// Parse `mean | variance | blend:<λ> | quantile:<q>`.
+    pub fn parse(s: &str) -> anyhow::Result<Objective> {
+        if s == "mean" {
+            return Ok(Objective::Mean);
+        }
+        if s == "variance" {
+            return Ok(Objective::Variance);
+        }
+        if let Some(rest) = s.strip_prefix("blend:") {
+            let lambda: f64 = rest.parse().map_err(|_| anyhow::anyhow!("bad blend '{s}'"))?;
+            anyhow::ensure!((0.0..=1.0).contains(&lambda), "blend lambda must be in [0, 1]");
+            return Ok(Objective::Blend { lambda });
+        }
+        if let Some(rest) = s.strip_prefix("quantile:") {
+            let q: f64 = rest.parse().map_err(|_| anyhow::anyhow!("bad quantile '{s}'"))?;
+            anyhow::ensure!(q > 0.0 && q < 1.0, "quantile q must be in (0, 1)");
+            return Ok(Objective::Quantile { q });
+        }
+        anyhow::bail!("unknown objective '{s}' (expected mean|variance|blend:<l>|quantile:<q>)")
+    }
+
+    /// Score (lower is better) of running `n` workers with `b` batches
+    /// under `spec`. Requires an exp-family spec.
+    pub fn score(&self, n: u64, b: u64, spec: &ServiceSpec) -> anyhow::Result<f64> {
+        anyhow::ensure!(
+            spec.exp_family().is_some(),
+            "objective scoring needs exp/sexp service, got {}",
+            spec.name()
+        );
+        match self {
+            Objective::Mean => Ok(completion_time_stats(n, b, spec)?.mean),
+            Objective::Variance => Ok(completion_time_stats(n, b, spec)?.var),
+            Objective::Blend { lambda } => {
+                let st = completion_time_stats(n, b, spec)?;
+                Ok((1.0 - lambda) * st.mean + lambda * st.stddev())
+            }
+            Objective::Quantile { q } => completion_time_quantile(n, b, spec, *q),
+        }
+    }
+}
+
+/// An optimized redundancy plan: the feasible batch count minimizing
+/// the objective, with its score.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Plan {
+    /// Chosen batch count `B` (replication degree is `N/B`).
+    pub b: usize,
+    /// Objective score at `b`.
+    pub score: f64,
+}
+
+/// Scan the feasible batch counts (divisors of `n`) and pick the
+/// objective minimizer under `spec`.
+pub fn plan(n: usize, spec: &ServiceSpec, objective: &Objective) -> anyhow::Result<Plan> {
+    anyhow::ensure!(n >= 1, "need at least one worker");
+    let mut best: Option<Plan> = None;
+    for b in feasible_batch_counts(n) {
+        let score = objective.score(n as u64, b as u64, spec)?;
+        anyhow::ensure!(score.is_finite(), "non-finite objective score at B={b}");
+        if best.map_or(true, |p| score < p.score) {
+            best = Some(Plan { b, score });
+        }
+    }
+    best.ok_or_else(|| anyhow::anyhow!("no feasible batch count for n={n}"))
+}
+
+/// Two-sided CUSUM detector on standardized residuals: fires when
+/// either one-sided statistic exceeds `h`. `k` is the usual allowance
+/// (insensitivity half-width) in standardized units.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    k: f64,
+    h: f64,
+    pos: f64,
+    neg: f64,
+}
+
+impl DriftDetector {
+    /// New detector with allowance `k` and threshold `h`.
+    pub fn new(k: f64, h: f64) -> Self {
+        assert!(k >= 0.0 && h > 0.0);
+        Self { k, h, pos: 0.0, neg: 0.0 }
+    }
+
+    /// Feed one standardized residual; returns `true` when the
+    /// cumulative sum crosses the threshold (the caller should
+    /// [`DriftDetector::reset`] after handling the alarm).
+    pub fn push(&mut self, z: f64) -> bool {
+        self.pos = (self.pos + z - self.k).max(0.0);
+        self.neg = (self.neg - z - self.k).max(0.0);
+        self.pos > self.h || self.neg > self.h
+    }
+
+    /// Clear both one-sided statistics.
+    pub fn reset(&mut self) {
+        self.pos = 0.0;
+        self.neg = 0.0;
+    }
+}
+
+/// Tuning of a [`Controller`]. [`ControllerConfig::new`] fills the
+/// knobs with defaults that hold the stationary false-alarm rate low
+/// (see the FPR test) while detecting the E12 drift within a couple of
+/// rounds.
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Cluster size `N` (batch counts are divisors of this).
+    pub n_workers: usize,
+    /// Which exponential-family shape to fit.
+    pub kind: FitKind,
+    /// What the plan minimizes.
+    pub objective: Objective,
+    /// Assumed service spec before any telemetry (may be wrong — that
+    /// is the point). Must be exp-family.
+    pub prior: ServiceSpec,
+    /// Confidence multiplier for the estimator bands.
+    pub z: f64,
+    /// Exact observations required before the first data-driven replan.
+    pub min_fit_obs: u64,
+    /// CUSUM allowance `k` (standardized units).
+    pub cusum_k: f64,
+    /// CUSUM threshold `h`.
+    pub cusum_h: f64,
+    /// Ring-buffer size: observations kept for the post-drift rebuild.
+    pub window: usize,
+    /// Minimum relative score improvement before a plan-consistency
+    /// replan (damps flapping between near-tie divisors).
+    pub replan_margin: f64,
+}
+
+impl ControllerConfig {
+    /// Config with default tuning.
+    pub fn new(n_workers: usize, kind: FitKind, objective: Objective, prior: ServiceSpec) -> Self {
+        Self {
+            n_workers,
+            kind,
+            objective,
+            prior,
+            z: 4.0,
+            min_fit_obs: 48,
+            cusum_k: 0.5,
+            cusum_h: 20.0,
+            window: 512,
+            replan_margin: 0.002,
+        }
+    }
+}
+
+/// Why a decision happened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Plan kept (no trigger, or not enough data yet).
+    Hold,
+    /// Replanned: band exit or a margin-clearing argmin change.
+    Replan,
+    /// Replanned after a CUSUM alarm, from post-change data only.
+    DriftReplan,
+}
+
+impl Action {
+    /// Stable name (round-trips through [`Action::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Action::Hold => "hold",
+            Action::Replan => "replan",
+            Action::DriftReplan => "drift_replan",
+        }
+    }
+
+    /// Parse an [`Action::name`] string.
+    pub fn parse(s: &str) -> anyhow::Result<Action> {
+        match s {
+            "hold" => Ok(Action::Hold),
+            "replan" => Ok(Action::Replan),
+            "drift_replan" => Ok(Action::DriftReplan),
+            other => anyhow::bail!("unknown action '{other}'"),
+        }
+    }
+}
+
+/// One structured entry of the controller's decision log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlDecision {
+    /// Control epoch the decision closed.
+    pub epoch: u64,
+    /// What happened.
+    pub action: Action,
+    /// Batch count in force after the decision.
+    pub b: usize,
+    /// Replication degree `N/B` after the decision.
+    pub g: usize,
+    /// Rate the plan is based on.
+    pub mu: f64,
+    /// Shift the plan is based on.
+    pub delta: f64,
+    /// Objective score of `b` under the planned parameters.
+    pub score: f64,
+    /// Exact observations accumulated when the decision was taken.
+    pub n_exact: u64,
+    /// Censored observations accumulated when the decision was taken.
+    pub n_censored: u64,
+}
+
+impl ControlDecision {
+    /// JSON object for the decision log artifact.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", (self.epoch as i64).into()),
+            ("action", self.action.name().into()),
+            ("b", self.b.into()),
+            ("g", self.g.into()),
+            ("mu", self.mu.into()),
+            ("delta", self.delta.into()),
+            ("score", self.score.into()),
+            ("n_exact", (self.n_exact as i64).into()),
+            ("n_censored", (self.n_censored as i64).into()),
+        ])
+    }
+}
+
+/// The adaptive redundancy controller (see module docs).
+#[derive(Debug, Clone)]
+pub struct Controller {
+    cfg: ControllerConfig,
+    acc: CensoredAccumulator,
+    recent: VecDeque<Observation>,
+    detector: DriftDetector,
+    planned: FittedSpec,
+    b: usize,
+    drift_pending: bool,
+    decisions: Vec<ControlDecision>,
+}
+
+impl Controller {
+    /// Build a controller and derive the initial plan from the prior.
+    pub fn new(cfg: ControllerConfig) -> anyhow::Result<Controller> {
+        let planned = FittedSpec::from_prior(cfg.kind, &cfg.prior).ok_or_else(|| {
+            anyhow::anyhow!("controller prior must be exp/sexp, got {}", cfg.prior.name())
+        })?;
+        let initial = plan(cfg.n_workers, &planned.spec(), &cfg.objective)?;
+        let detector = DriftDetector::new(cfg.cusum_k, cfg.cusum_h);
+        Ok(Controller {
+            acc: CensoredAccumulator::new(),
+            recent: VecDeque::with_capacity(cfg.window),
+            detector,
+            planned,
+            b: initial.b,
+            drift_pending: false,
+            decisions: Vec::new(),
+            cfg,
+        })
+    }
+
+    /// Batch count currently in force.
+    pub fn current_b(&self) -> usize {
+        self.b
+    }
+
+    /// Replication degree currently in force.
+    pub fn replication(&self) -> usize {
+        self.cfg.n_workers / self.b
+    }
+
+    /// Parameters the current plan is based on.
+    pub fn planned(&self) -> &FittedSpec {
+        &self.planned
+    }
+
+    /// The full decision log so far.
+    pub fn decisions(&self) -> &[ControlDecision] {
+        &self.decisions
+    }
+
+    /// Feed one replica observation. Exact observations additionally
+    /// drive the CUSUM, standardized against the planned winner law
+    /// `∆ + Exp(g·µ)`.
+    pub fn observe(&mut self, obs: Observation) {
+        self.acc.push(obs);
+        if self.recent.len() == self.cfg.window {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(obs);
+        if obs.exact && !self.drift_pending {
+            let rate = self.replication() as f64 * self.planned.mu;
+            let z = (obs.t - self.planned.delta) * rate - 1.0;
+            if self.detector.push(z) {
+                self.drift_pending = true;
+            }
+        }
+    }
+
+    /// Feed a batch of observations.
+    pub fn observe_all(&mut self, obs: impl IntoIterator<Item = Observation>) {
+        for o in obs {
+            self.observe(o);
+        }
+    }
+
+    /// Adopt a fit: replan under it and reset the drift watch.
+    fn adopt(&mut self, fit: FittedSpec) -> anyhow::Result<()> {
+        let p = plan(self.cfg.n_workers, &fit.spec(), &self.cfg.objective)?;
+        self.planned = fit;
+        self.b = p.b;
+        self.detector.reset();
+        Ok(())
+    }
+
+    /// Close a control epoch: refit, decide, log. Returns the decision.
+    pub fn step(&mut self, epoch: u64) -> anyhow::Result<ControlDecision> {
+        let action = if self.drift_pending {
+            // History before the change point is stale: rebuild the
+            // sufficient statistics from the recent window only.
+            let mut acc = CensoredAccumulator::new();
+            for &o in &self.recent {
+                acc.push(o);
+            }
+            self.acc = acc;
+            self.detector.reset();
+            self.drift_pending = false;
+            // Post-drift data are scarce by construction; accept a
+            // quarter of the usual evidence before moving the plan.
+            let enough = (self.cfg.min_fit_obs / 4).max(2);
+            match self.acc.fit(self.cfg.kind, self.cfg.z) {
+                Some(fit) if fit.n_exact >= enough => {
+                    self.adopt(fit)?;
+                    Action::DriftReplan
+                }
+                _ => Action::Hold,
+            }
+        } else {
+            match self.acc.fit(self.cfg.kind, self.cfg.z) {
+                Some(fit) if fit.n_exact >= self.cfg.min_fit_obs => {
+                    if fit.disagrees(&self.planned) {
+                        self.adopt(fit)?;
+                        Action::Replan
+                    } else {
+                        // Plan-consistency trigger: same parameter
+                        // neighborhood, but the argmin moved by more
+                        // than the flap margin.
+                        let n = self.cfg.n_workers;
+                        let p = plan(n, &fit.spec(), &self.cfg.objective)?;
+                        let held =
+                            self.cfg.objective.score(n as u64, self.b as u64, &fit.spec())?;
+                        if p.b != self.b && held - p.score > self.cfg.replan_margin * held.abs() {
+                            self.adopt(fit)?;
+                            Action::Replan
+                        } else {
+                            Action::Hold
+                        }
+                    }
+                }
+                _ => Action::Hold,
+            }
+        };
+        let score = self.cfg.objective.score(
+            self.cfg.n_workers as u64,
+            self.b as u64,
+            &self.planned.spec(),
+        )?;
+        let decision = ControlDecision {
+            epoch,
+            action,
+            b: self.b,
+            g: self.replication(),
+            mu: self.planned.mu,
+            delta: self.planned.delta,
+            score,
+            n_exact: self.acc.n_exact(),
+            n_censored: self.acc.n_censored(),
+        };
+        self.decisions.push(decision.clone());
+        Ok(decision)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::optimum_b;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn objective_round_trips_and_scores() {
+        for s in ["mean", "variance", "blend:0.5", "quantile:0.9"] {
+            let o = Objective::parse(s).expect("parse");
+            assert_eq!(o.name(), s);
+        }
+        assert!(Objective::parse("blend:1.5").is_err());
+        assert!(Objective::parse("quantile:1").is_err());
+        assert!(Objective::parse("median").is_err());
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let mean = Objective::Mean.score(12, 3, &spec).expect("score");
+        // s∆ + H_3/µ = 4·0.2 + (1 + 1/2 + 1/3)
+        assert!((mean - (0.8 + 11.0 / 6.0)).abs() < 1e-12);
+        assert!(Objective::Mean.score(12, 3, &ServiceSpec::pareto(1.0, 2.5)).is_err());
+    }
+
+    #[test]
+    fn plan_matches_analysis_optimum_for_mean() {
+        for spec in [
+            ServiceSpec::exp(1.3),
+            ServiceSpec::shifted_exp(1.0, 0.2),
+            ServiceSpec::shifted_exp(1.0, 1.0),
+            ServiceSpec::shifted_exp(1.0, 0.02),
+        ] {
+            for n in [12usize, 24] {
+                let p = plan(n, &spec, &Objective::Mean).expect("plan");
+                assert_eq!(p.b as u64, optimum_b(n as u64, &spec), "spec={}", spec.name());
+            }
+        }
+        // Variance is minimized at full replication for both shapes.
+        let p = plan(24, &ServiceSpec::shifted_exp(1.0, 0.2), &Objective::Variance).expect("plan");
+        assert_eq!(p.b, 1);
+    }
+
+    #[test]
+    fn cusum_fires_on_shift_and_resets() {
+        let mut d = DriftDetector::new(0.5, 20.0);
+        // Standardized Exp(1)−1 residuals: no alarm on a short clean
+        // stretch, alarm within ~60 observations of a +2σ shift.
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            assert!(!d.push(-rng.f64_open0().ln() - 1.0));
+        }
+        let mut fired_at = None;
+        for i in 0..200 {
+            if d.push(-rng.f64_open0().ln() + 1.0) {
+                fired_at = Some(i);
+                break;
+            }
+        }
+        assert!(fired_at.is_some_and(|i| i < 100), "fired_at={fired_at:?}");
+        d.reset();
+        assert!(!d.push(0.0));
+    }
+
+    /// Feed `rounds` rounds of winner telemetry at the controller's
+    /// current plan: per batch, the winner of `g` replicas is exact and
+    /// the siblings are censored at the winner's time.
+    fn feed_rounds(c: &mut Controller, truth: &ServiceSpec, rounds: usize, rng: &mut Rng) {
+        for _ in 0..rounds {
+            let b = c.current_b();
+            let g = c.replication();
+            for _ in 0..b {
+                let mut win = f64::INFINITY;
+                for _ in 0..g {
+                    win = win.min(truth.sample(rng));
+                }
+                c.observe(Observation::exact(win));
+                for _ in 1..g {
+                    c.observe(Observation::censored(win));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn controller_converges_from_misspecified_prior() {
+        let truth = ServiceSpec::shifted_exp(1.0, 0.2);
+        let cfg = ControllerConfig::new(
+            12,
+            FitKind::ShiftedExp,
+            Objective::Mean,
+            ServiceSpec::shifted_exp(4.0, 0.8),
+        );
+        let mut c = Controller::new(cfg).expect("controller");
+        // The mis-specified prior has ∆µ = 3.2 → full parallelism.
+        assert_eq!(c.current_b(), 12);
+        let mut rng = Rng::new(77);
+        for epoch in 0..6 {
+            feed_rounds(&mut c, &truth, 30, &mut rng);
+            c.step(epoch).expect("step");
+        }
+        // Truth has ∆µ = 0.2 → oracle B = 3 for N = 12.
+        assert_eq!(c.current_b() as u64, optimum_b(12, &truth));
+        let replans =
+            c.decisions().iter().filter(|d| d.action != Action::Hold).count();
+        assert!(replans >= 1 && replans <= 3, "replans={replans}");
+    }
+
+    #[test]
+    fn drift_detector_false_positive_rate_is_low_when_stationary() {
+        // Prior == truth, stationary service: across 10k+ exact
+        // observations the CUSUM should essentially never fire.
+        let truth = ServiceSpec::shifted_exp(1.5, 0.3);
+        let cfg = ControllerConfig::new(
+            12,
+            FitKind::ShiftedExp,
+            Objective::Mean,
+            truth.clone(),
+        );
+        let mut c = Controller::new(cfg).expect("controller");
+        let mut rng = Rng::new(4242);
+        let mut drift_replans = 0usize;
+        for epoch in 0..40 {
+            feed_rounds(&mut c, &truth, 30, &mut rng);
+            let d = c.step(epoch).expect("step");
+            if d.action == Action::DriftReplan {
+                drift_replans += 1;
+            }
+        }
+        assert!(drift_replans <= 1, "stationary drift replans = {drift_replans}");
+    }
+
+    #[test]
+    fn controller_detects_injected_shift_and_replans_from_fresh_data() {
+        let pre = ServiceSpec::shifted_exp(1.0, 1.0);
+        let post = ServiceSpec::shifted_exp(1.0, 0.02);
+        let cfg = ControllerConfig::new(24, FitKind::ShiftedExp, Objective::Mean, pre.clone());
+        let mut c = Controller::new(cfg).expect("controller");
+        let mut rng = Rng::new(11);
+        for epoch in 0..4 {
+            feed_rounds(&mut c, &pre, 40, &mut rng);
+            c.step(epoch).expect("step");
+        }
+        assert_eq!(c.current_b() as u64, optimum_b(24, &pre));
+        let mut saw_drift = false;
+        for epoch in 4..8 {
+            feed_rounds(&mut c, &post, 40, &mut rng);
+            let d = c.step(epoch).expect("step");
+            saw_drift |= d.action == Action::DriftReplan;
+        }
+        assert!(saw_drift, "no drift replan after the injected shift");
+        assert_eq!(c.current_b() as u64, optimum_b(24, &post));
+    }
+
+    #[test]
+    fn decision_log_serializes() {
+        let d = ControlDecision {
+            epoch: 3,
+            action: Action::Replan,
+            b: 4,
+            g: 6,
+            mu: 1.5,
+            delta: 0.2,
+            score: 2.5,
+            n_exact: 100,
+            n_censored: 300,
+        };
+        let j = d.to_json();
+        assert_eq!(j.get("action").and_then(|a| a.as_str()), Some("replan"));
+        assert_eq!(j.get("b").and_then(|b| b.as_i64()), Some(4));
+        assert_eq!(Action::parse("drift_replan").expect("parse"), Action::DriftReplan);
+    }
+}

@@ -1,0 +1,445 @@
+//! Censoring-aware online estimation of service-time parameters.
+//!
+//! Replicated execution with cancellation observes the service-time
+//! distribution through a censoring lens: the **winner** of each batch
+//! contributes an exact per-unit service sample, while every cancelled
+//! sibling contributes only a *right-censored* observation ("its service
+//! time exceeds the elapsed time at cancellation"). Throwing the
+//! censored replicas away would bias the fit — the winner of `g`
+//! replicas is the minimum of `g` draws, systematically faster than the
+//! distribution it came from. The censored-MLE likelihood restores
+//! exactly the information the cancellation destroyed: one exact sample
+//! plus `g − 1` censored-at-the-winner samples is the same likelihood
+//! as `g` i.i.d. draws observed through right censoring.
+//!
+//! The accumulator is streaming: it keeps only the exact/censored
+//! counts, a compensated (Kahan) running sum of all observed times, and
+//! the minimum exact observation — O(1) state, mergeable in spirit with
+//! the crate's Welford accumulators. Closed forms:
+//!
+//! * **Exponential(µ)** — the classic censored-data MLE
+//!   `µ̂ = d / Σtᵢ` (exact events over total time on test), valid for
+//!   *any* right-censoring pattern.
+//! * **Shifted-Exponential(µ, ∆)** — `∆̂` anchors on the minimum exact
+//!   observation `m`; the rate is fit on the excess time
+//!   `S = Σtᵢ − n·m` with the standard one-event bias correction
+//!   `µ̂ = (d − 1)/S`, and `∆̂ = m − 1/(n·µ̂)` corrects the minimum's
+//!   own upward bias (`E[m − ∆] ≈ 1/(n·µ)` because the per-unit
+//!   censoring times never undercut `m` in this telemetry: a cancelled
+//!   replica is censored at its batch winner's exact time, which is
+//!   itself ≥ `m`).
+//!
+//! Confidence intervals come from the observed Fisher information of
+//! the censored likelihood: `Var[ln µ̂] ≈ 1/d`, so the µ band is
+//! `µ̂·e^{±z/√d}`; the ∆ band has half-width `z/(n·µ̂)` (the scale of
+//! `m − ∆`).
+
+use crate::dist::ServiceSpec;
+use crate::util::stats::Kahan;
+
+/// One per-unit service-time observation from a single replica.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    /// Observed per-unit time: the replica's full service time when
+    /// `exact`, else the elapsed per-unit time at which it was
+    /// cancelled (a lower bound on its service time).
+    pub t: f64,
+    /// `true` — the replica finished (exact sample); `false` — it was
+    /// cancelled at `t` (right-censored).
+    pub exact: bool,
+}
+
+impl Observation {
+    /// An exact (uncensored) sample.
+    pub fn exact(t: f64) -> Self {
+        Self { t, exact: true }
+    }
+
+    /// A right-censored sample (service time exceeds `t`).
+    pub fn censored(t: f64) -> Self {
+        Self { t, exact: false }
+    }
+}
+
+/// Which exponential-family shape the estimator fits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitKind {
+    /// Exponential(µ) — ∆ pinned to 0.
+    Exp,
+    /// Shifted-Exponential(µ, ∆).
+    ShiftedExp,
+}
+
+impl FitKind {
+    /// Stable name (round-trips through [`FitKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FitKind::Exp => "exp",
+            FitKind::ShiftedExp => "sexp",
+        }
+    }
+
+    /// Parse a [`FitKind::name`] string.
+    pub fn parse(s: &str) -> anyhow::Result<FitKind> {
+        match s {
+            "exp" => Ok(FitKind::Exp),
+            "sexp" => Ok(FitKind::ShiftedExp),
+            other => anyhow::bail!("unknown fit kind '{other}' (expected exp|sexp)"),
+        }
+    }
+}
+
+/// Streaming sufficient statistics of the censored exponential-family
+/// MLE. O(1) state; push order does not matter.
+#[derive(Debug, Clone)]
+pub struct CensoredAccumulator {
+    n_exact: u64,
+    n_censored: u64,
+    sum_t: Kahan,
+    min_exact: f64,
+}
+
+impl Default for CensoredAccumulator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CensoredAccumulator {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Self { n_exact: 0, n_censored: 0, sum_t: Kahan::new(), min_exact: f64::INFINITY }
+    }
+
+    /// Add one observation. Non-finite or negative times are ignored
+    /// (they carry no likelihood information and would poison the sums).
+    pub fn push(&mut self, obs: Observation) {
+        if !obs.t.is_finite() || obs.t < 0.0 {
+            return;
+        }
+        self.sum_t.add(obs.t);
+        if obs.exact {
+            self.n_exact += 1;
+            self.min_exact = self.min_exact.min(obs.t);
+        } else {
+            self.n_censored += 1;
+        }
+    }
+
+    /// Number of exact (uncensored) observations.
+    pub fn n_exact(&self) -> u64 {
+        self.n_exact
+    }
+
+    /// Number of right-censored observations.
+    pub fn n_censored(&self) -> u64 {
+        self.n_censored
+    }
+
+    /// Total observations of either kind.
+    pub fn n_total(&self) -> u64 {
+        self.n_exact + self.n_censored
+    }
+
+    /// Total observed time (exact + censored), the "time on test".
+    pub fn observed_time(&self) -> f64 {
+        self.sum_t.sum()
+    }
+
+    /// Fit the censored MLE at confidence multiplier `z` (e.g. 4.0).
+    /// Returns `None` until at least two exact observations with
+    /// positive excess time are available.
+    pub fn fit(&self, kind: FitKind, z: f64) -> Option<FittedSpec> {
+        let d = self.n_exact;
+        if d < 2 {
+            return None;
+        }
+        let total = self.sum_t.sum();
+        let df = d as f64;
+        match kind {
+            FitKind::Exp => {
+                if total <= 0.0 {
+                    return None;
+                }
+                let mu = df / total;
+                let band = (z / df.sqrt()).exp();
+                Some(FittedSpec {
+                    kind,
+                    mu,
+                    mu_lo: mu / band,
+                    mu_hi: mu * band,
+                    delta: 0.0,
+                    delta_lo: 0.0,
+                    delta_hi: 0.0,
+                    n_exact: d,
+                    n_censored: self.n_censored,
+                })
+            }
+            FitKind::ShiftedExp => {
+                let n_all = self.n_total() as f64;
+                let m = self.min_exact;
+                // Excess time on test beyond the anchored shift. Every
+                // censoring time in this telemetry is a batch winner's
+                // exact time, so the subtraction never goes negative up
+                // to rounding; a non-positive excess means the data are
+                // still degenerate (e.g. deterministic-looking).
+                let excess = total - n_all * m;
+                if excess <= 0.0 {
+                    return None;
+                }
+                // One-event bias correction: the minimum observation
+                // contributes zero excess by construction.
+                let mu = (df - 1.0) / excess;
+                let band = (z / (df - 1.0).sqrt()).exp();
+                let half = z / (n_all * mu);
+                let delta = (m - 1.0 / (n_all * mu)).max(0.0);
+                Some(FittedSpec {
+                    kind,
+                    mu,
+                    mu_lo: mu / band,
+                    mu_hi: mu * band,
+                    delta,
+                    delta_lo: (delta - half).max(0.0),
+                    delta_hi: delta + half,
+                    n_exact: d,
+                    n_censored: self.n_censored,
+                })
+            }
+        }
+    }
+}
+
+/// A fitted exponential-family spec with confidence bands.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FittedSpec {
+    /// Shape that was fit.
+    pub kind: FitKind,
+    /// Rate point estimate.
+    pub mu: f64,
+    /// Lower end of the µ confidence band.
+    pub mu_lo: f64,
+    /// Upper end of the µ confidence band.
+    pub mu_hi: f64,
+    /// Shift point estimate (0 for [`FitKind::Exp`]).
+    pub delta: f64,
+    /// Lower end of the ∆ confidence band.
+    pub delta_lo: f64,
+    /// Upper end of the ∆ confidence band.
+    pub delta_hi: f64,
+    /// Exact observations behind the fit.
+    pub n_exact: u64,
+    /// Censored observations behind the fit.
+    pub n_censored: u64,
+}
+
+impl FittedSpec {
+    /// Wrap a known (prior) spec as a zero-width "fit" — the controller
+    /// seeds its plan with this before any telemetry arrives. `None`
+    /// when the spec is not in the exponential family.
+    pub fn from_prior(kind: FitKind, spec: &ServiceSpec) -> Option<FittedSpec> {
+        let (mu, delta) = spec.exp_family()?;
+        let delta = match kind {
+            FitKind::Exp => 0.0,
+            FitKind::ShiftedExp => delta,
+        };
+        Some(FittedSpec {
+            kind,
+            mu,
+            mu_lo: mu,
+            mu_hi: mu,
+            delta,
+            delta_lo: delta,
+            delta_hi: delta,
+            n_exact: 0,
+            n_censored: 0,
+        })
+    }
+
+    /// The point-estimate service spec.
+    pub fn spec(&self) -> ServiceSpec {
+        match self.kind {
+            FitKind::Exp => ServiceSpec::exp(self.mu),
+            FitKind::ShiftedExp => {
+                if self.delta > 0.0 {
+                    ServiceSpec::shifted_exp(self.mu, self.delta)
+                } else {
+                    ServiceSpec::exp(self.mu)
+                }
+            }
+        }
+    }
+
+    /// Mean of the fitted per-unit service time.
+    pub fn mean(&self) -> f64 {
+        self.delta + 1.0 / self.mu
+    }
+
+    /// Does this fit's confidence band contain the point `(µ, ∆)`?
+    pub fn covers(&self, mu: f64, delta: f64) -> bool {
+        let mu_in = (self.mu_lo..=self.mu_hi).contains(&mu);
+        let delta_in = delta >= self.delta_lo - 1e-12 && delta <= self.delta_hi + 1e-12;
+        mu_in && delta_in
+    }
+
+    /// Two fits disagree when **neither** band covers the other's point
+    /// estimate — the symmetric exit-the-confidence-band test the
+    /// controller uses as its replan trigger. (One-sided containment is
+    /// treated as agreement so a tightening band does not spuriously
+    /// reject the plan it was built from.)
+    pub fn disagrees(&self, other: &FittedSpec) -> bool {
+        !self.covers(other.mu, other.delta) && !other.covers(self.mu, self.delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Simulate the telemetry of `batches` replicated batches with `g`
+    /// replicas each: per batch the winner is exact, siblings are
+    /// censored at the winner's time — censoring fraction (g−1)/g.
+    fn feed_replicated(
+        acc: &mut CensoredAccumulator,
+        spec: &ServiceSpec,
+        g: usize,
+        batches: usize,
+        rng: &mut Rng,
+    ) {
+        for _ in 0..batches {
+            let mut win = f64::INFINITY;
+            for _ in 0..g {
+                win = win.min(spec.sample(rng));
+            }
+            acc.push(Observation::exact(win));
+            for _ in 1..g {
+                acc.push(Observation::censored(win));
+            }
+        }
+    }
+
+    #[test]
+    fn exp_mle_recovers_planted_mu_at_several_censoring_fractions() {
+        let mu = 2.3;
+        let spec = ServiceSpec::exp(mu);
+        for (i, g) in [1usize, 2, 4, 8].into_iter().enumerate() {
+            let mut rng = Rng::new(100 + i as u64);
+            let mut acc = CensoredAccumulator::new();
+            feed_replicated(&mut acc, &spec, g, 4000, &mut rng);
+            let fit = acc.fit(FitKind::Exp, 4.0).expect("fit");
+            assert_eq!(fit.n_exact, 4000);
+            assert_eq!(fit.n_censored, 4000 * (g as u64 - 1));
+            let rel = (fit.mu - mu).abs() / mu;
+            assert!(rel < 0.08, "g={g} mu_hat={} rel={rel}", fit.mu);
+            assert!(
+                fit.covers(mu, 0.0),
+                "g={g} band [{}, {}] misses planted mu={mu}",
+                fit.mu_lo,
+                fit.mu_hi
+            );
+        }
+    }
+
+    #[test]
+    fn exp_mle_handles_fixed_deadline_censoring() {
+        // The time-on-test estimator is valid for any right-censoring
+        // pattern, not just winner-censoring: censor at a fixed
+        // deadline chosen for ~50% censoring.
+        let mu = 1.4;
+        let spec = ServiceSpec::exp(mu);
+        let deadline = std::f64::consts::LN_2 / mu; // median
+        let mut rng = Rng::new(7);
+        let mut acc = CensoredAccumulator::new();
+        for _ in 0..8000 {
+            let t = spec.sample(&mut rng);
+            if t <= deadline {
+                acc.push(Observation::exact(t));
+            } else {
+                acc.push(Observation::censored(deadline));
+            }
+        }
+        let fit = acc.fit(FitKind::Exp, 4.0).expect("fit");
+        let rel = (fit.mu - mu).abs() / mu;
+        assert!(rel < 0.06, "mu_hat={} rel={rel}", fit.mu);
+        assert!(fit.covers(mu, 0.0));
+    }
+
+    #[test]
+    fn sexp_mle_recovers_planted_mu_and_delta() {
+        let (mu, delta) = (1.7, 0.4);
+        let spec = ServiceSpec::shifted_exp(mu, delta);
+        for (i, g) in [1usize, 2, 4].into_iter().enumerate() {
+            let mut rng = Rng::new(200 + i as u64);
+            let mut acc = CensoredAccumulator::new();
+            feed_replicated(&mut acc, &spec, g, 6000, &mut rng);
+            let fit = acc.fit(FitKind::ShiftedExp, 4.0).expect("fit");
+            let rel_mu = (fit.mu - mu).abs() / mu;
+            let rel_delta = (fit.delta - delta).abs() / delta;
+            assert!(rel_mu < 0.08, "g={g} mu_hat={} rel={rel_mu}", fit.mu);
+            assert!(rel_delta < 0.02, "g={g} delta_hat={} rel={rel_delta}", fit.delta);
+            assert!(
+                fit.covers(mu, delta),
+                "g={g} bands mu=[{}, {}] delta=[{}, {}] miss ({mu}, {delta})",
+                fit.mu_lo,
+                fit.mu_hi,
+                fit.delta_lo,
+                fit.delta_hi
+            );
+        }
+    }
+
+    #[test]
+    fn sexp_consistency_band_shrinks_with_data() {
+        let spec = ServiceSpec::shifted_exp(2.0, 0.25);
+        let mut rng = Rng::new(9);
+        let mut acc = CensoredAccumulator::new();
+        feed_replicated(&mut acc, &spec, 2, 500, &mut rng);
+        let narrow_at_500 = acc.fit(FitKind::ShiftedExp, 4.0).expect("fit").mu_hi;
+        feed_replicated(&mut acc, &spec, 2, 7500, &mut rng);
+        let fit = acc.fit(FitKind::ShiftedExp, 4.0).expect("fit");
+        assert!(fit.mu_hi - fit.mu_lo < narrow_at_500 - fit.mu_lo);
+        assert!(fit.covers(2.0, 0.25));
+    }
+
+    #[test]
+    fn fit_degenerate_inputs_return_none() {
+        let mut acc = CensoredAccumulator::new();
+        assert!(acc.fit(FitKind::Exp, 4.0).is_none());
+        acc.push(Observation::exact(1.0));
+        assert!(acc.fit(FitKind::Exp, 4.0).is_none(), "one exact obs is not enough");
+        acc.push(Observation::exact(1.0));
+        // Two identical exact observations: zero excess, SExp undefined.
+        assert!(acc.fit(FitKind::ShiftedExp, 4.0).is_none());
+        assert!(acc.fit(FitKind::Exp, 4.0).is_some());
+        // Garbage observations are ignored, not accumulated.
+        acc.push(Observation::exact(f64::NAN));
+        acc.push(Observation::censored(-1.0));
+        assert_eq!(acc.n_total(), 2);
+    }
+
+    #[test]
+    fn prior_wrapping_and_disagreement() {
+        let prior =
+            FittedSpec::from_prior(FitKind::ShiftedExp, &ServiceSpec::shifted_exp(4.0, 0.8))
+                .expect("exp-family prior");
+        assert_eq!(prior.mu, 4.0);
+        assert!(prior.covers(4.0, 0.8));
+        assert!(!prior.covers(1.0, 0.2));
+        assert!(FittedSpec::from_prior(FitKind::Exp, &ServiceSpec::pareto(1.0, 2.5)).is_none());
+
+        // A tight fit far from the prior disagrees; near the prior it
+        // does not.
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let mut rng = Rng::new(3);
+        let mut acc = CensoredAccumulator::new();
+        for _ in 0..4000 {
+            acc.push(Observation::exact(spec.sample(&mut rng)));
+        }
+        let fit = acc.fit(FitKind::ShiftedExp, 4.0).expect("fit");
+        assert!(fit.disagrees(&prior));
+        let near =
+            FittedSpec::from_prior(FitKind::ShiftedExp, &ServiceSpec::shifted_exp(fit.mu, fit.delta))
+                .expect("exp-family");
+        assert!(!fit.disagrees(&near));
+    }
+}

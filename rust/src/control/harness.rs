@@ -1,0 +1,343 @@
+//! Closed-loop harness: run the controller against a hidden (and
+//! optionally time-varying) true service spec and measure regret
+//! against the oracle plan.
+//!
+//! Each **replicate** simulates `epochs × rounds_per_epoch` rounds of
+//! replicated execution at the replica level, with exactly the DES
+//! upfront-cancellation semantics: per batch the `g = N/B` replicas
+//! draw i.i.d. per-unit service times from the *true* spec, the
+//! earliest replica wins (exact observation), the siblings are
+//! cancelled at the winner's time (right-censored observations), and
+//! the round completes at the slowest batch winner (size-scaled,
+//! `s·τ`). The controller sees only the telemetry — never the true
+//! spec — and closes each epoch with a [`Controller::step`].
+//!
+//! **Regret** is scored analytically: at every epoch the objective
+//! score of the batch count the controller actually ran, evaluated
+//! under the *true* spec via the `analysis` closed forms, minus the
+//! oracle score (the best feasible batch count under the same true
+//! spec). Relative regret divides by the oracle score.
+//!
+//! Replicates fan out over the crate's fixed 64-shard plan
+//! ([`crate::des::montecarlo`]): shard RNG substreams and per-shard
+//! replicate counts depend only on `(replicates, seed)`, and results
+//! merge in shard-index order, so a report is **bit-identical for any
+//! thread count** — pinned by a test below, mirroring the study
+//! engine's cross-thread equality test.
+
+use super::controller::{Action, ControlDecision, Controller, ControllerConfig};
+use super::estimator::Observation;
+use super::report::{ControlReport, EpochAgg};
+use super::ControlSpec;
+use crate::des::montecarlo::{execute_shard_plan, shard_plan};
+use crate::dist::ServiceSpec;
+use crate::util::rng::Rng;
+use crate::util::stats::Welford;
+
+/// One stationary segment of the hidden truth.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServicePhase {
+    /// First epoch (inclusive) this spec is in force.
+    pub start_epoch: u64,
+    /// True per-unit service spec during the phase.
+    pub spec: ServiceSpec,
+}
+
+/// Piecewise-stationary hidden truth: the spec in force at an epoch is
+/// the last phase starting at or before it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrueService {
+    phases: Vec<ServicePhase>,
+}
+
+impl TrueService {
+    /// A single stationary phase.
+    pub fn stationary(spec: ServiceSpec) -> anyhow::Result<TrueService> {
+        TrueService::piecewise(vec![ServicePhase { start_epoch: 0, spec }])
+    }
+
+    /// Validate and wrap a phase list. Phases must start at epoch 0,
+    /// be strictly increasing, and be exp-family (the oracle scores
+    /// them through the closed forms).
+    pub fn piecewise(phases: Vec<ServicePhase>) -> anyhow::Result<TrueService> {
+        anyhow::ensure!(!phases.is_empty(), "need at least one service phase");
+        anyhow::ensure!(phases[0].start_epoch == 0, "first phase must start at epoch 0");
+        for w in phases.windows(2) {
+            anyhow::ensure!(
+                w[0].start_epoch < w[1].start_epoch,
+                "phase starts must be strictly increasing"
+            );
+        }
+        for p in &phases {
+            anyhow::ensure!(
+                p.spec.exp_family().is_some(),
+                "true service must be exp/sexp (oracle uses closed forms), got {}",
+                p.spec.name()
+            );
+        }
+        Ok(TrueService { phases })
+    }
+
+    /// The spec in force at `epoch`.
+    pub fn at(&self, epoch: u64) -> &ServiceSpec {
+        let mut cur = &self.phases[0].spec;
+        for p in &self.phases {
+            if p.start_epoch <= epoch {
+                cur = &p.spec;
+            }
+        }
+        cur
+    }
+
+    /// The phase list.
+    pub fn phases(&self) -> &[ServicePhase] {
+        &self.phases
+    }
+}
+
+/// Per-epoch record of one replicate.
+struct EpochRec {
+    /// Batch count actually run during the epoch.
+    b: usize,
+    /// Oracle batch count under the true spec.
+    oracle_b: usize,
+    /// Objective score gap vs the oracle (≥ 0 up to rounding).
+    regret: f64,
+    /// Regret divided by the oracle score.
+    rel_regret: f64,
+    /// Mean realized completion time over the epoch's rounds.
+    realized_mean: f64,
+    /// The decision that closed the epoch.
+    action: Action,
+}
+
+/// One replicate's full trajectory.
+struct ReplicateRun {
+    epochs: Vec<EpochRec>,
+    decisions: Vec<ControlDecision>,
+}
+
+/// One round of replicated execution at the replica level: feeds the
+/// controller winner/censored telemetry and returns the realized
+/// completion time (size-scaled max of batch winners).
+fn run_round(truth: &ServiceSpec, c: &mut Controller, n: usize, rng: &mut Rng) -> f64 {
+    let b = c.current_b();
+    let g = n / b;
+    let s = (n / b) as f64; // balanced: batch size == replication degree
+    let mut slowest = 0.0f64;
+    for _ in 0..b {
+        let mut win = f64::INFINITY;
+        for _ in 0..g {
+            win = win.min(truth.sample(rng));
+        }
+        slowest = slowest.max(s * win);
+        c.observe(Observation::exact(win));
+        for _ in 1..g {
+            c.observe(Observation::censored(win));
+        }
+    }
+    slowest
+}
+
+/// Run one closed-loop replicate: the controller starts from the
+/// (possibly mis-specified) prior and adapts to the hidden truth.
+fn run_replicate(
+    spec: &ControlSpec,
+    truth: &TrueService,
+    rng: &mut Rng,
+) -> anyhow::Result<ReplicateRun> {
+    let n = spec.n_workers;
+    let cfg = ControllerConfig::new(
+        n,
+        spec.kind,
+        spec.objective.clone(),
+        spec.prior.clone(),
+    );
+    let mut c = Controller::new(cfg)?;
+    let mut epochs = Vec::with_capacity(spec.epochs as usize);
+    for epoch in 0..spec.epochs {
+        let true_spec = truth.at(epoch);
+        let b = c.current_b();
+        let mut realized = Welford::new();
+        for _ in 0..spec.rounds_per_epoch {
+            realized.push(run_round(true_spec, &mut c, n, rng));
+        }
+        let oracle = super::controller::plan(n, true_spec, &spec.objective)?;
+        let score = spec.objective.score(n as u64, b as u64, true_spec)?;
+        let decision = c.step(epoch)?;
+        epochs.push(EpochRec {
+            b,
+            oracle_b: oracle.b,
+            regret: score - oracle.score,
+            rel_regret: (score - oracle.score) / oracle.score,
+            realized_mean: realized.mean(),
+            action: decision.action,
+        });
+    }
+    Ok(ReplicateRun { epochs, decisions: c.decisions().to_vec() })
+}
+
+/// Run the full closed-loop study: `spec.replicates` independent
+/// replicates over the fixed shard plan, aggregated per epoch.
+/// Bit-deterministic per seed for any `threads`.
+pub fn run_loop(spec: &ControlSpec, threads: usize) -> anyhow::Result<ControlReport> {
+    spec.validate()?;
+    let truth = TrueService::piecewise(spec.phases.clone())?;
+    let shards = shard_plan(spec.replicates, spec.seed);
+    let per_shard: Vec<anyhow::Result<Vec<ReplicateRun>>> = execute_shard_plan(
+        shards,
+        threads,
+        || (),
+        |_, count, mut rng| (0..count).map(|_| run_replicate(spec, &truth, &mut rng)).collect(),
+    );
+    let mut runs: Vec<ReplicateRun> = Vec::with_capacity(spec.replicates as usize);
+    for shard in per_shard {
+        runs.extend(shard?);
+    }
+    anyhow::ensure!(!runs.is_empty(), "control loop needs at least one replicate");
+
+    let mut epochs = Vec::with_capacity(spec.epochs as usize);
+    for e in 0..spec.epochs as usize {
+        let mut regret = Welford::new();
+        let mut rel = Welford::new();
+        let mut realized = Welford::new();
+        let mut b_mean = Welford::new();
+        let (mut hits, mut replans, mut drift_replans) = (0u64, 0u64, 0u64);
+        for run in &runs {
+            let r = &run.epochs[e];
+            regret.push(r.regret);
+            rel.push(r.rel_regret);
+            realized.push(r.realized_mean);
+            b_mean.push(r.b as f64);
+            hits += u64::from(r.b == r.oracle_b);
+            match r.action {
+                Action::Hold => {}
+                Action::Replan => replans += 1,
+                Action::DriftReplan => drift_replans += 1,
+            }
+        }
+        epochs.push(EpochAgg {
+            epoch: e as u64,
+            oracle_b: runs[0].epochs[e].oracle_b,
+            mean_b: b_mean.mean(),
+            frac_oracle: hits as f64 / runs.len() as f64,
+            mean_regret: regret.mean(),
+            sem_regret: regret.sem(),
+            mean_rel_regret: rel.mean(),
+            mean_realized: realized.mean(),
+            replans,
+            drift_replans,
+        });
+    }
+    let (final_frac_oracle, final_mean_rel_regret) =
+        epochs.last().map(|a| (a.frac_oracle, a.mean_rel_regret)).unwrap_or((0.0, 0.0));
+    Ok(ControlReport {
+        name: spec.name.clone(),
+        seed: spec.seed,
+        n_workers: spec.n_workers,
+        objective: spec.objective.name(),
+        kind: spec.kind.name().to_string(),
+        prior: spec.prior.name(),
+        phases: truth
+            .phases()
+            .iter()
+            .map(|p| (p.start_epoch, p.spec.name()))
+            .collect(),
+        replicates: spec.replicates,
+        rounds_per_epoch: spec.rounds_per_epoch,
+        epochs,
+        decisions: runs[0].decisions.clone(),
+        final_frac_oracle,
+        final_mean_rel_regret,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::optimum_b;
+
+    #[test]
+    fn true_service_phase_lookup_and_validation() {
+        let ts = TrueService::piecewise(vec![
+            ServicePhase { start_epoch: 0, spec: ServiceSpec::exp(1.0) },
+            ServicePhase { start_epoch: 5, spec: ServiceSpec::exp(2.0) },
+        ])
+        .expect("valid");
+        assert_eq!(ts.at(0).name(), "exp:1");
+        assert_eq!(ts.at(4).name(), "exp:1");
+        assert_eq!(ts.at(5).name(), "exp:2");
+        assert_eq!(ts.at(99).name(), "exp:2");
+        assert!(TrueService::piecewise(vec![]).is_err());
+        assert!(TrueService::piecewise(vec![ServicePhase {
+            start_epoch: 1,
+            spec: ServiceSpec::exp(1.0)
+        }])
+        .is_err());
+        assert!(TrueService::stationary(ServiceSpec::pareto(1.0, 2.5)).is_err());
+    }
+
+    #[test]
+    fn smoke_loop_converges_to_oracle_plan() {
+        let spec = ControlSpec::smoke();
+        let report = run_loop(&spec, 2).expect("run");
+        let truth = spec.phases[0].spec.clone();
+        let oracle = optimum_b(spec.n_workers as u64, &truth) as usize;
+        let last = report.epochs.last().expect("epochs");
+        assert_eq!(last.oracle_b, oracle);
+        assert!(
+            last.frac_oracle >= 0.75,
+            "final frac_oracle = {} (oracle B = {oracle})",
+            last.frac_oracle
+        );
+        assert!(
+            last.mean_rel_regret < 0.05,
+            "final mean relative regret = {}",
+            last.mean_rel_regret
+        );
+        // The mis-specified prior causes real regret in epoch 0.
+        assert!(report.epochs[0].mean_regret > 10.0 * last.mean_regret.max(1e-9));
+        super::report::validate_json(&report.to_json()).expect("self-validates");
+    }
+
+    #[test]
+    fn drift_loop_reconverges_after_shift() {
+        let spec = ControlSpec::drift().fast();
+        let report = run_loop(&spec, 2).expect("run");
+        let shift = spec.phases[1].start_epoch as usize;
+        let pre = &report.epochs[shift - 1];
+        let at = &report.epochs[shift];
+        let last = report.epochs.last().expect("epochs");
+        // Converged before the shift, regret spikes at the shift epoch
+        // (the plan in force was tuned to the old truth), and the
+        // controller re-converges by the end.
+        assert!(pre.frac_oracle >= 0.75, "pre-shift frac={}", pre.frac_oracle);
+        assert!(at.mean_regret > 5.0 * pre.mean_regret.max(1e-9));
+        assert!(last.frac_oracle >= 0.75, "final frac={}", last.frac_oracle);
+        assert!(last.mean_rel_regret < 0.05, "final rel regret={}", last.mean_rel_regret);
+        let drift_replans: u64 = report.epochs.iter().map(|a| a.drift_replans).sum();
+        assert!(drift_replans >= report.replicates / 2, "drift replans={drift_replans}");
+    }
+
+    #[test]
+    fn report_is_bit_deterministic_for_any_thread_count() {
+        let spec = ControlSpec::smoke().fast();
+        let reference = run_loop(&spec, 1).expect("run").to_json().to_string();
+        for threads in [2usize, 4] {
+            let got = run_loop(&spec, threads).expect("run").to_json().to_string();
+            assert_eq!(got, reference, "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ_but_same_seed_repeats() {
+        let spec = ControlSpec::smoke().fast();
+        let a = run_loop(&spec, 2).expect("run").to_json().to_string();
+        let b = run_loop(&spec, 2).expect("run").to_json().to_string();
+        assert_eq!(a, b);
+        let mut other = spec.clone();
+        other.seed ^= 1;
+        let c = run_loop(&other, 2).expect("run").to_json().to_string();
+        assert_ne!(a, c);
+    }
+}

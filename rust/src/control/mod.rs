@@ -1,0 +1,318 @@
+//! Adaptive redundancy control: online service-time estimation and
+//! closed-loop re-planning.
+//!
+//! The rest of the crate answers "given (µ, ∆), what is the optimal
+//! replication level?" — this module closes the loop for the practical
+//! question "what if the parameters are unknown, or change under your
+//! feet?". It ties three pieces together:
+//!
+//! * [`estimator`] — censoring-aware streaming MLE over per-replica
+//!   telemetry (winners are exact samples, cancelled replicas are
+//!   right-censored), with confidence bands;
+//! * [`controller`] — a declarative [`Objective`] (mean / variance /
+//!   λ-blend / quantile) optimized over the `analysis` closed forms,
+//!   a two-sided CUSUM drift detector, and the replan policy emitting
+//!   a structured [`ControlDecision`] log;
+//! * [`harness`] — the closed-loop study: the controller runs against
+//!   a hidden, optionally time-varying true spec, fanned over the
+//!   crate's fixed 64-shard plan so results are bit-deterministic per
+//!   seed for any thread count, measuring **regret** vs the oracle
+//!   plan; results land in the versioned `CONTROL_*.json` artifact
+//!   ([`report`]).
+//!
+//! Entry points: [`ControlSpec::load`] (preset name or spec JSON) and
+//! [`ControlSpec::run`]; the CLI wraps them as `batchrep control`.
+
+pub mod controller;
+pub mod estimator;
+pub mod harness;
+pub mod report;
+
+pub use controller::{plan, Action, ControlDecision, Controller, ControllerConfig, Objective, Plan};
+pub use estimator::{CensoredAccumulator, FitKind, FittedSpec, Observation};
+pub use harness::{run_loop, ServicePhase, TrueService};
+pub use report::{validate_file, validate_json, ControlReport, EpochAgg, SCHEMA_VERSION};
+
+use crate::dist::ServiceSpec;
+use crate::util::json::Json;
+
+/// Declarative description of one closed-loop control run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlSpec {
+    /// Name (artifact stem).
+    pub name: String,
+    /// Cluster size `N`.
+    pub n_workers: usize,
+    /// Which exponential-family shape the controller fits.
+    pub kind: FitKind,
+    /// What the controller minimizes.
+    pub objective: Objective,
+    /// The controller's prior spec — deliberately allowed to be wrong.
+    pub prior: ServiceSpec,
+    /// Hidden-truth phases (epoch-indexed, first must start at 0).
+    pub phases: Vec<ServicePhase>,
+    /// Control epochs per replicate.
+    pub epochs: u64,
+    /// Rounds simulated per epoch.
+    pub rounds_per_epoch: u64,
+    /// Independent replicates (fanned over the 64-shard plan).
+    pub replicates: u64,
+    /// Root seed.
+    pub seed: u64,
+}
+
+impl ControlSpec {
+    /// Names accepted by [`ControlSpec::preset`].
+    pub fn preset_names() -> &'static [&'static str] {
+        &["smoke", "drift"]
+    }
+
+    /// Look up a built-in preset.
+    pub fn preset(name: &str) -> Option<ControlSpec> {
+        match name {
+            "smoke" => Some(ControlSpec::smoke()),
+            "drift" => Some(ControlSpec::drift()),
+            _ => None,
+        }
+    }
+
+    /// Stationary convergence preset: the prior (µ=4, ∆=0.8, ∆µ=3.2)
+    /// plans full parallelism, the truth (µ=1, ∆=0.2) wants B*=3 of
+    /// N=12 — the controller must walk the plan across the paper's
+    /// ∆µ crossover from telemetry alone.
+    pub fn smoke() -> ControlSpec {
+        ControlSpec {
+            name: "smoke".into(),
+            n_workers: 12,
+            kind: FitKind::ShiftedExp,
+            objective: Objective::Mean,
+            prior: ServiceSpec::shifted_exp(4.0, 0.8),
+            phases: vec![ServicePhase {
+                start_epoch: 0,
+                spec: ServiceSpec::shifted_exp(1.0, 0.2),
+            }],
+            epochs: 10,
+            rounds_per_epoch: 30,
+            replicates: 16,
+            seed: 42,
+        }
+    }
+
+    /// Drift preset: truth starts at ∆µ=1.0 (oracle: full parallelism,
+    /// B*=N) and shifts mid-run to ∆µ=0.02 (oracle: full replication,
+    /// B*=1) — the two ends of the diversity–parallelism spectrum. The
+    /// CUSUM must catch the shift and re-plan from post-change data.
+    pub fn drift() -> ControlSpec {
+        ControlSpec {
+            name: "drift".into(),
+            n_workers: 24,
+            kind: FitKind::ShiftedExp,
+            objective: Objective::Mean,
+            prior: ServiceSpec::shifted_exp(2.0, 0.1),
+            phases: vec![
+                ServicePhase { start_epoch: 0, spec: ServiceSpec::shifted_exp(1.0, 1.0) },
+                ServicePhase { start_epoch: 12, spec: ServiceSpec::shifted_exp(1.0, 0.02) },
+            ],
+            epochs: 24,
+            rounds_per_epoch: 40,
+            replicates: 32,
+            seed: 42,
+        }
+    }
+
+    /// Shrink budgets for smoke-test/CI latency (epochs are kept so
+    /// phase structure — e.g. the drift shift — survives).
+    pub fn fast(mut self) -> ControlSpec {
+        self.replicates = self.replicates.min(8);
+        self.rounds_per_epoch = self.rounds_per_epoch.min(16);
+        self
+    }
+
+    /// Resolve a CLI argument: a preset name, else a path to a spec
+    /// JSON file (see [`ControlSpec::from_json`] for the format).
+    pub fn load(which: &str) -> anyhow::Result<ControlSpec> {
+        if let Some(spec) = ControlSpec::preset(which) {
+            return Ok(spec);
+        }
+        let text = std::fs::read_to_string(which).map_err(|e| {
+            anyhow::anyhow!(
+                "'{which}' is not a preset ({}) and not a readable file: {e}",
+                ControlSpec::preset_names().join("|")
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {which}: {e}"))?;
+        let mut spec = ControlSpec::from_json(&j)?;
+        if spec.name.is_empty() {
+            spec.name = std::path::Path::new(which)
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("custom")
+                .to_string();
+        }
+        Ok(spec)
+    }
+
+    /// Parse a spec object:
+    ///
+    /// ```json
+    /// {
+    ///   "name": "custom",
+    ///   "n_workers": 12,
+    ///   "kind": "sexp",
+    ///   "objective": "mean",
+    ///   "prior": "sexp:4,0.8",
+    ///   "phases": [{"start_epoch": 0, "spec": "sexp:1,0.2"}],
+    ///   "epochs": 10,
+    ///   "rounds_per_epoch": 30,
+    ///   "replicates": 16,
+    ///   "seed": 42
+    /// }
+    /// ```
+    ///
+    /// `name` and `seed` are optional (default: file stem, 42).
+    pub fn from_json(j: &Json) -> anyhow::Result<ControlSpec> {
+        let int = |key: &str| -> anyhow::Result<u64> {
+            j.get(key)
+                .and_then(Json::as_i64)
+                .filter(|v| *v >= 1)
+                .map(|v| v as u64)
+                .ok_or_else(|| anyhow::anyhow!("control spec needs positive integer '{key}'"))
+        };
+        let text = |key: &str| -> anyhow::Result<&str> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("control spec needs string '{key}'"))
+        };
+        let phases_j = j
+            .get("phases")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow::anyhow!("control spec needs array 'phases'"))?;
+        let mut phases = Vec::with_capacity(phases_j.len());
+        for (i, p) in phases_j.iter().enumerate() {
+            let start = p
+                .get("start_epoch")
+                .and_then(Json::as_i64)
+                .filter(|v| *v >= 0)
+                .ok_or_else(|| anyhow::anyhow!("phase {i} needs integer 'start_epoch'"))?;
+            let spec_name = p
+                .get("spec")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("phase {i} needs string 'spec'"))?;
+            phases.push(ServicePhase {
+                start_epoch: start as u64,
+                spec: ServiceSpec::parse(spec_name)?,
+            });
+        }
+        let spec = ControlSpec {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            n_workers: int("n_workers")? as usize,
+            kind: FitKind::parse(text("kind")?)?,
+            objective: Objective::parse(text("objective")?)?,
+            prior: ServiceSpec::parse(text("prior")?)?,
+            phases,
+            epochs: int("epochs")?,
+            rounds_per_epoch: int("rounds_per_epoch")?,
+            replicates: int("replicates")?,
+            seed: j.get("seed").and_then(Json::as_i64).map(|s| s as u64).unwrap_or(42),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Structural validation (also run by [`run_loop`]).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_workers >= 1, "need at least one worker");
+        anyhow::ensure!(self.epochs >= 1, "need at least one epoch");
+        anyhow::ensure!(self.rounds_per_epoch >= 1, "need at least one round per epoch");
+        anyhow::ensure!(self.replicates >= 1, "need at least one replicate");
+        anyhow::ensure!(
+            self.prior.exp_family().is_some(),
+            "controller prior must be exp/sexp, got {}",
+            self.prior.name()
+        );
+        let truth = TrueService::piecewise(self.phases.clone())?;
+        for p in truth.phases() {
+            anyhow::ensure!(
+                p.start_epoch < self.epochs,
+                "phase starting at epoch {} is beyond the {}-epoch run",
+                p.start_epoch,
+                self.epochs
+            );
+        }
+        Ok(())
+    }
+
+    /// Run the closed loop; see [`run_loop`].
+    pub fn run(&self, threads: usize) -> anyhow::Result<ControlReport> {
+        run_loop(self, threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for name in ControlSpec::preset_names() {
+            let spec = ControlSpec::preset(name).expect("preset");
+            assert_eq!(&spec.name, name);
+            spec.validate().expect("valid");
+            spec.fast().validate().expect("fast stays valid");
+        }
+        assert!(ControlSpec::preset("nope").is_none());
+        assert!(ControlSpec::load("nope").is_err());
+    }
+
+    #[test]
+    fn spec_json_round_trip() {
+        let j = Json::parse(
+            r#"{
+                "name": "custom", "n_workers": 12, "kind": "sexp",
+                "objective": "blend:0.5", "prior": "sexp:4,0.8",
+                "phases": [
+                    {"start_epoch": 0, "spec": "sexp:1,0.2"},
+                    {"start_epoch": 4, "spec": "exp:2"}
+                ],
+                "epochs": 8, "rounds_per_epoch": 10, "replicates": 4, "seed": 7
+            }"#,
+        )
+        .expect("json");
+        let spec = ControlSpec::from_json(&j).expect("spec");
+        assert_eq!(spec.name, "custom");
+        assert_eq!(spec.objective, Objective::Blend { lambda: 0.5 });
+        assert_eq!(spec.phases.len(), 2);
+        assert_eq!(spec.phases[1].spec.name(), "exp:2");
+        assert_eq!(spec.seed, 7);
+    }
+
+    #[test]
+    fn spec_json_rejects_malformed() {
+        let base = r#"{
+            "n_workers": 12, "kind": "sexp", "objective": "mean",
+            "prior": "sexp:4,0.8",
+            "phases": [{"start_epoch": 0, "spec": "sexp:1,0.2"}],
+            "epochs": 8, "rounds_per_epoch": 10, "replicates": 4
+        }"#;
+        // The base parses (name/seed optional).
+        let spec = ControlSpec::from_json(&Json::parse(base).expect("json")).expect("spec");
+        assert_eq!(spec.seed, 42);
+        for broken in [
+            base.replace("\"kind\": \"sexp\"", "\"kind\": \"pareto\""),
+            base.replace("\"objective\": \"mean\"", "\"objective\": \"p99\""),
+            base.replace("\"prior\": \"sexp:4,0.8\"", "\"prior\": \"pareto:1,2.5\""),
+            base.replace("\"start_epoch\": 0", "\"start_epoch\": 3"),
+            base.replace("\"epochs\": 8", "\"epochs\": 0"),
+        ] {
+            let j = Json::parse(&broken).expect("json");
+            assert!(ControlSpec::from_json(&j).is_err(), "accepted: {broken}");
+        }
+        // A phase starting beyond the run is rejected by validate().
+        let late = base.replace("\"epochs\": 8", "\"epochs\": 8, \"extra\": 0").replace(
+            "{\"start_epoch\": 0, \"spec\": \"sexp:1,0.2\"}",
+            "{\"start_epoch\": 0, \"spec\": \"sexp:1,0.2\"}, {\"start_epoch\": 9, \"spec\": \"exp:1\"}",
+        );
+        let j = Json::parse(&late).expect("json");
+        assert!(ControlSpec::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,314 @@
+//! The `CONTROL_*.json` artifact: a versioned, schema-validated record
+//! of one closed-loop control run — per-epoch regret aggregates across
+//! replicates plus the first replicate's full decision log.
+//!
+//! Follows the crate's artifact idiom (`study::report`): an explicit
+//! `version` field, a [`validate_json`] that checks structure *and*
+//! internal consistency (counters vs arrays, finite stats), and a
+//! [`validate_file`] the CLI runs on the artifact it just wrote — a
+//! malformed artifact is an error, not a warning.
+
+use super::controller::{Action, ControlDecision};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Artifact schema version.
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// Per-epoch aggregate across replicates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochAgg {
+    /// Epoch index.
+    pub epoch: u64,
+    /// Oracle batch count under the true spec in force.
+    pub oracle_b: usize,
+    /// Mean batch count the replicates actually ran.
+    pub mean_b: f64,
+    /// Fraction of replicates running exactly the oracle batch count.
+    pub frac_oracle: f64,
+    /// Mean objective regret vs the oracle.
+    pub mean_regret: f64,
+    /// Standard error of the regret mean.
+    pub sem_regret: f64,
+    /// Mean relative regret (regret / oracle score).
+    pub mean_rel_regret: f64,
+    /// Mean realized completion time over the epoch's rounds.
+    pub mean_realized: f64,
+    /// Replicates that replanned (band exit / argmin move) this epoch.
+    pub replans: u64,
+    /// Replicates that drift-replanned this epoch.
+    pub drift_replans: u64,
+}
+
+impl EpochAgg {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", (self.epoch as i64).into()),
+            ("oracle_b", self.oracle_b.into()),
+            ("mean_b", self.mean_b.into()),
+            ("frac_oracle", self.frac_oracle.into()),
+            ("mean_regret", self.mean_regret.into()),
+            ("sem_regret", self.sem_regret.into()),
+            ("mean_rel_regret", self.mean_rel_regret.into()),
+            ("mean_realized", self.mean_realized.into()),
+            ("replans", (self.replans as i64).into()),
+            ("drift_replans", (self.drift_replans as i64).into()),
+        ])
+    }
+}
+
+/// Result of one closed-loop control run (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlReport {
+    /// Spec name (preset or file stem).
+    pub name: String,
+    /// Root seed of the shard plan.
+    pub seed: u64,
+    /// Cluster size `N`.
+    pub n_workers: usize,
+    /// Objective name ([`super::Objective::name`]).
+    pub objective: String,
+    /// Fit kind name (`exp` | `sexp`).
+    pub kind: String,
+    /// The controller's (mis-specified) prior spec name.
+    pub prior: String,
+    /// Hidden-truth phases as `(start_epoch, spec_name)`.
+    pub phases: Vec<(u64, String)>,
+    /// Replicates run.
+    pub replicates: u64,
+    /// Rounds simulated per epoch.
+    pub rounds_per_epoch: u64,
+    /// Per-epoch aggregates, one per epoch in order.
+    pub epochs: Vec<EpochAgg>,
+    /// Decision log of the first replicate (shard 0, replicate 0).
+    pub decisions: Vec<ControlDecision>,
+    /// `frac_oracle` of the final epoch.
+    pub final_frac_oracle: f64,
+    /// `mean_rel_regret` of the final epoch.
+    pub final_mean_rel_regret: f64,
+}
+
+impl ControlReport {
+    /// Serialize to the versioned artifact schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", SCHEMA_VERSION.into()),
+            ("name", self.name.as_str().into()),
+            ("seed", (self.seed as i64).into()),
+            ("n_workers", self.n_workers.into()),
+            ("objective", self.objective.as_str().into()),
+            ("kind", self.kind.as_str().into()),
+            ("prior", self.prior.as_str().into()),
+            (
+                "phases",
+                Json::Array(
+                    self.phases
+                        .iter()
+                        .map(|(start, spec)| {
+                            Json::obj(vec![
+                                ("start_epoch", (*start as i64).into()),
+                                ("spec", spec.as_str().into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("replicates", (self.replicates as i64).into()),
+            ("rounds_per_epoch", (self.rounds_per_epoch as i64).into()),
+            ("epochs", Json::Array(self.epochs.iter().map(EpochAgg::to_json).collect())),
+            ("decisions", Json::Array(self.decisions.iter().map(ControlDecision::to_json).collect())),
+            ("final_frac_oracle", self.final_frac_oracle.into()),
+            ("final_mean_rel_regret", self.final_mean_rel_regret.into()),
+        ])
+    }
+
+    /// Write the artifact (newline-terminated canonical JSON).
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+/// Validate a control artifact: schema version, required keys, finite
+/// per-epoch stats, well-formed decision log, and summary fields
+/// consistent with the final epoch entry.
+pub fn validate_json(j: &Json) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        j.get("version").and_then(Json::as_i64) == Some(SCHEMA_VERSION),
+        "missing or unexpected control schema version"
+    );
+    for key in ["name", "seed", "objective", "kind", "prior", "replicates", "rounds_per_epoch"] {
+        anyhow::ensure!(j.get(key).is_some(), "missing key '{key}'");
+    }
+    let n_workers = j
+        .get("n_workers")
+        .and_then(Json::as_i64)
+        .ok_or_else(|| anyhow::anyhow!("missing 'n_workers'"))?;
+    anyhow::ensure!(n_workers >= 1, "n_workers must be >= 1");
+    let phases = j
+        .get("phases")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow::anyhow!("missing or non-array 'phases'"))?;
+    anyhow::ensure!(!phases.is_empty(), "artifact has no service phases");
+    for (i, p) in phases.iter().enumerate() {
+        anyhow::ensure!(
+            p.get("start_epoch").and_then(Json::as_i64).is_some_and(|s| s >= 0),
+            "phase {i} missing 'start_epoch'"
+        );
+        anyhow::ensure!(p.get("spec").and_then(Json::as_str).is_some(), "phase {i} missing 'spec'");
+    }
+    let epochs = j
+        .get("epochs")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow::anyhow!("missing or non-array 'epochs'"))?;
+    anyhow::ensure!(!epochs.is_empty(), "artifact has no epochs");
+    for (i, e) in epochs.iter().enumerate() {
+        anyhow::ensure!(
+            e.get("epoch").and_then(Json::as_i64) == Some(i as i64),
+            "epoch entry {i} out of order"
+        );
+        anyhow::ensure!(
+            e.get("oracle_b").and_then(Json::as_i64).is_some_and(|b| b >= 1),
+            "epoch {i} missing 'oracle_b'"
+        );
+        for stat in
+            ["mean_b", "frac_oracle", "mean_regret", "sem_regret", "mean_rel_regret", "mean_realized"]
+        {
+            let v = e
+                .get(stat)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("epoch {i} missing '{stat}'"))?;
+            anyhow::ensure!(v.is_finite(), "epoch {i} has non-finite '{stat}' = {v}");
+        }
+        let frac = e.get("frac_oracle").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        anyhow::ensure!((0.0..=1.0).contains(&frac), "epoch {i} frac_oracle out of [0,1]");
+        for counter in ["replans", "drift_replans"] {
+            anyhow::ensure!(
+                e.get(counter).and_then(Json::as_i64).is_some_and(|c| c >= 0),
+                "epoch {i} missing '{counter}'"
+            );
+        }
+    }
+    let decisions = j
+        .get("decisions")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow::anyhow!("missing or non-array 'decisions'"))?;
+    anyhow::ensure!(
+        decisions.len() == epochs.len(),
+        "decision log has {} entries for {} epochs",
+        decisions.len(),
+        epochs.len()
+    );
+    for (i, d) in decisions.iter().enumerate() {
+        let action = d
+            .get("action")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("decision {i} missing 'action'"))?;
+        Action::parse(action).map_err(|e| anyhow::anyhow!("decision {i}: {e}"))?;
+        let b = d
+            .get("b")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("decision {i} missing 'b'"))?;
+        anyhow::ensure!(b >= 1 && b <= n_workers, "decision {i} has B={b} outside [1, N]");
+        for stat in ["mu", "delta", "score"] {
+            let v = d
+                .get(stat)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("decision {i} missing '{stat}'"))?;
+            anyhow::ensure!(v.is_finite(), "decision {i} has non-finite '{stat}'");
+        }
+    }
+    let last = epochs.last().expect("non-empty");
+    let consistent = |summary: &str, per_epoch: &str| -> anyhow::Result<()> {
+        let a = j.get(summary).and_then(Json::as_f64);
+        let b = last.get(per_epoch).and_then(Json::as_f64);
+        anyhow::ensure!(
+            a.is_some() && a == b,
+            "'{summary}' does not match the final epoch's '{per_epoch}'"
+        );
+        Ok(())
+    };
+    consistent("final_frac_oracle", "frac_oracle")?;
+    consistent("final_mean_rel_regret", "mean_rel_regret")?;
+    Ok(())
+}
+
+/// Read, parse, and validate an artifact file; returns the parsed JSON.
+pub fn validate_file(path: &Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+    validate_json(&j).map_err(|e| anyhow::anyhow!("validating {}: {e}", path.display()))?;
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::ControlSpec;
+
+    fn sample_report() -> ControlReport {
+        crate::control::run_loop(&ControlSpec::smoke().fast(), 1).expect("run")
+    }
+
+    #[test]
+    fn artifact_round_trips_and_validates() {
+        let report = sample_report();
+        let j = report.to_json();
+        validate_json(&j).expect("valid");
+        let reparsed = Json::parse(&j.to_string()).expect("parse");
+        assert_eq!(reparsed, j);
+        validate_json(&reparsed).expect("still valid");
+    }
+
+    #[test]
+    fn write_then_validate_file() {
+        let report = sample_report();
+        let dir = std::env::temp_dir().join("batchrep-control-report-test");
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let path = dir.join("CONTROL_roundtrip.json");
+        report.write(&path).expect("write");
+        let j = validate_file(&path).expect("validate");
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("smoke"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn validation_rejects_malformed_artifacts() {
+        let good = sample_report().to_json();
+        let mutate = |f: &dyn Fn(&mut std::collections::BTreeMap<String, Json>)| {
+            let mut m = good.as_object().expect("obj").clone();
+            f(&mut m);
+            Json::Object(m)
+        };
+        // Wrong version.
+        let bad = mutate(&|m| {
+            m.insert("version".into(), Json::Num(99.0));
+        });
+        assert!(validate_json(&bad).is_err());
+        // Missing epochs.
+        let bad = mutate(&|m| {
+            m.remove("epochs");
+        });
+        assert!(validate_json(&bad).is_err());
+        // Decision log length mismatch.
+        let bad = mutate(&|m| {
+            m.insert("decisions".into(), Json::Array(vec![]));
+        });
+        assert!(validate_json(&bad).is_err());
+        // Unknown action in the decision log.
+        let bad = mutate(&|m| {
+            let mut ds = m.get("decisions").and_then(Json::as_array).expect("ds").to_vec();
+            if let Json::Object(d0) = &mut ds[0] {
+                d0.insert("action".into(), "panic".into());
+            }
+            m.insert("decisions".into(), Json::Array(ds));
+        });
+        assert!(validate_json(&bad).is_err());
+        // Summary field out of sync with the final epoch.
+        let bad = mutate(&|m| {
+            m.insert("final_frac_oracle".into(), Json::Num(0.123_456));
+        });
+        assert!(validate_json(&bad).is_err());
+    }
+}

@@ -86,6 +86,10 @@ struct RoundScratch {
     unit_covered: Vec<u32>,
     /// `batch_won[b] == generation` ⇔ batch `b` already has a winner.
     batch_won: Vec<u32>,
+    /// `batch_ok[b] == generation` ⇔ batch `b` was dispatched to at
+    /// least one live, non-crashing replica this round (the coverage
+    /// feasibility check under worker death).
+    batch_ok: Vec<u32>,
     /// Stamp of the current round; bumping it resets both maps in O(1).
     generation: u32,
 }
@@ -96,6 +100,7 @@ impl RoundScratch {
             cancels: (0..n_batches).map(|_| Arc::new(AtomicBool::new(false))).collect(),
             unit_covered: vec![0; n_units],
             batch_won: vec![0; n_batches],
+            batch_ok: vec![0; n_batches],
             generation: 0,
         }
     }
@@ -109,6 +114,7 @@ impl RoundScratch {
             // Stamp wraparound: clear once every 2^32 rounds.
             self.unit_covered.fill(0);
             self.batch_won.fill(0);
+            self.batch_ok.fill(0);
             self.generation = 1;
         }
         for c in &self.cancels {
@@ -136,6 +142,19 @@ pub struct Coordinator {
     /// finished batch (`None` = full coverage) — the live analogue of
     /// `Scenario::k_of_b`.
     k_of_b: Option<usize>,
+    /// `dead[w]` ⇔ worker `w` crashed in an earlier round; it is never
+    /// dispatched to again.
+    dead: Vec<bool>,
+    /// Fault injection armed by [`Coordinator::crash_worker_next_round`]:
+    /// `(worker, fraction_of_delay)` applied to the next round only.
+    pending_crash: Option<(usize, f64)>,
+    /// Per-replica telemetry of the last round:
+    /// `(batch, draw, speed, crash_at)` with `draw` the sampled
+    /// size-scaled batch service (no time scale, no speed multiplier),
+    /// `speed` the worker's multiplier, and `crash_at` the normalized
+    /// time a crashing replica dies at. Consumed by
+    /// [`Coordinator::take_round_observations`].
+    round_times: Vec<(usize, f64, f64, Option<f64>)>,
     scratch: RoundScratch,
     /// Metrics across all jobs run by this coordinator.
     pub metrics: RunMetrics,
@@ -238,6 +257,7 @@ impl Coordinator {
             0 => None,
             k => Some(k.min(assignment.n_batches)),
         };
+        let dead = vec![false; cfg.n_workers];
         Ok(Coordinator {
             rng,
             assignment,
@@ -249,6 +269,9 @@ impl Coordinator {
             next_job: 0,
             speeds,
             k_of_b,
+            dead,
+            pending_crash: None,
+            round_times: Vec::new(),
             scratch,
             metrics: RunMetrics::new(),
             cfg,
@@ -265,6 +288,78 @@ impl Coordinator {
         &self.assignment
     }
 
+    /// Number of workers still alive (not crashed).
+    pub fn live_workers(&self) -> usize {
+        self.dead.iter().filter(|&&d| !d).count()
+    }
+
+    /// Per-worker liveness (`true` = crashed).
+    pub fn dead_workers(&self) -> &[bool] {
+        &self.dead
+    }
+
+    /// Arm fault injection: worker `w` crashes during the **next** round,
+    /// `fraction` of the way through its sampled straggle. It reports one
+    /// final `out: None` result, its thread exits, and it is excluded
+    /// from every later dispatch — the live analogue of the DES engine's
+    /// replica failure, but taking the whole node down mid-round.
+    pub fn crash_worker_next_round(&mut self, w: usize, fraction: f64) -> anyhow::Result<()> {
+        anyhow::ensure!(w < self.cfg.n_workers, "worker {w} out of range");
+        anyhow::ensure!(!self.dead[w], "worker {w} is already dead");
+        anyhow::ensure!(
+            fraction > 0.0 && fraction.is_finite(),
+            "crash fraction must be positive and finite"
+        );
+        anyhow::ensure!(self.pending_crash.is_none(), "a crash is already armed");
+        self.pending_crash = Some((w, fraction));
+        Ok(())
+    }
+
+    /// Drain the last round's per-replica telemetry as censoring-aware
+    /// observations for [`crate::control::CensoredAccumulator`]: per
+    /// batch, the replica with the smallest injected wall-clock delay
+    /// among those that can complete is the winner — an **exact**
+    /// observation of the size-scaled batch service — and every sibling
+    /// is **right-censored** at the winner's wall time converted into
+    /// the sibling's own normalized units (first-completion-wins
+    /// cancellation stops it there); a crashed replica is censored at
+    /// the earlier of its crash and the winner. Times carry no
+    /// `time_scale` or worker-speed factor, so observations from fast
+    /// and slow workers estimate the same service law.
+    pub fn take_round_observations(&mut self) -> Vec<crate::control::Observation> {
+        use crate::control::Observation;
+        let b = self.assignment.n_batches;
+        // Per-batch winner among completing replicas, by wall-clock
+        // delay (draw × speed); remember the winning delay.
+        let mut win_delay = vec![f64::INFINITY; b];
+        for &(batch, draw, speed, crash_at) in &self.round_times {
+            if crash_at.is_none() && draw * speed < win_delay[batch] {
+                win_delay[batch] = draw * speed;
+            }
+        }
+        let mut obs = Vec::with_capacity(self.round_times.len());
+        let mut won = vec![false; b];
+        for &(batch, draw, speed, crash_at) in &self.round_times {
+            let wd = win_delay[batch];
+            if crash_at.is_none() && draw * speed == wd && !won[batch] {
+                won[batch] = true;
+                obs.push(Observation::exact(draw));
+                continue;
+            }
+            // The winner finished at wall delay `wd`; in this replica's
+            // normalized units that instant is `wd / speed` (≤ its own
+            // draw, since the winner minimizes the wall delay).
+            let cancel_at = if wd.is_finite() { wd / speed } else { draw };
+            let cap = match crash_at {
+                Some(c) => c.min(cancel_at),
+                None => cancel_at,
+            };
+            obs.push(Observation::censored(cap));
+        }
+        self.round_times.clear();
+        obs
+    }
+
     /// Run one job round: dispatch to every worker, first replica per
     /// batch wins, aggregate the winners.
     pub fn run_round(&mut self, spec: JobSpec) -> anyhow::Result<RoundResult> {
@@ -278,16 +373,36 @@ impl Coordinator {
         // allocation.
         let gen = self.scratch.begin_round();
 
-        // Dispatch: one replica per worker with a sampled straggle.
+        // Fault schedule for this round (applied to at most one worker).
+        let crash = self.pending_crash.take();
+
+        // Dispatch: one replica per live worker with a sampled straggle.
         let timer = Timer::start();
         let mut max_injected_winner = 0f64;
+        let mut dispatched = 0usize;
+        self.round_times.clear();
         for w in 0..n {
-            let batch = self.assignment.batch_of_worker[w];
-            let mut delay =
-                self.cfg.time_scale * self.service.sample_batch(s_units, &mut self.rng);
-            if let Some(speeds) = &self.speeds {
-                delay *= speeds[w];
+            if self.dead[w] {
+                continue;
             }
+            let batch = self.assignment.batch_of_worker[w];
+            let speed = self.speeds.as_ref().map_or(1.0, |sp| sp[w]);
+            let draw = self.service.sample_batch(s_units, &mut self.rng);
+            let delay = self.cfg.time_scale * draw * speed;
+            let crash_after_s = match crash {
+                Some((cw, frac)) if cw == w => Some(frac * delay),
+                _ => None,
+            };
+            if crash_after_s.is_none() {
+                self.scratch.batch_ok[batch] = gen;
+            }
+            // Telemetry: the raw draw, this worker's speed, and (for a
+            // crashing replica) the normalized time it dies at.
+            let crash_at = match crash {
+                Some((cw, frac)) if cw == w => Some(frac * draw),
+                _ => None,
+            };
+            self.round_times.push((batch, draw, speed, crash_at));
             let cancel = self.scratch.cancels[batch].clone();
             self.workers[w]
                 .tx
@@ -297,8 +412,26 @@ impl Coordinator {
                     spec: spec.clone(),
                     delay_s: delay,
                     cancel,
+                    crash_after_s,
                 })
                 .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))?;
+            dispatched += 1;
+        }
+        // Coverage feasibility under worker death: every batch (or at
+        // least k of them, under a k-of-B target) must keep one replica
+        // that can complete, otherwise the round can never finish.
+        let ok_batches = self.scratch.batch_ok.iter().filter(|&&s| s == gen).count();
+        match self.k_of_b {
+            Some(k) => anyhow::ensure!(
+                ok_batches >= k,
+                "only {ok_batches} batches have a live replica (k-of-B target {k})"
+            ),
+            None => anyhow::ensure!(
+                ok_batches == self.assignment.n_batches,
+                "{} of {} batches lost every live replica — cannot cover the dataset",
+                self.assignment.n_batches - ok_batches,
+                self.assignment.n_batches
+            ),
         }
         // One clock read: wall time spent sampling + dispatching the
         // whole round (the dispatch leg of OverheadStats).
@@ -307,7 +440,8 @@ impl Coordinator {
         // Collect. Completion is declared at coverage (all data units
         // covered by winning batches) or, under a k-of-B target, at the
         // k-th finished batch; the round ends for bookkeeping when every
-        // worker has reported (cancelled workers report quickly).
+        // dispatched worker has reported (cancelled workers report
+        // quickly, and a crashing worker reports its death notice).
         let n_units = self.layout.n_units;
         let mut units_left = n_units;
         let mut batches_won = 0usize;
@@ -317,7 +451,7 @@ impl Coordinator {
         let mut completion_wall = None;
         let mut agg: Option<RoundResult> = None;
 
-        while reported < n {
+        while reported < dispatched {
             let msg = self
                 .results
                 .recv_timeout(std::time::Duration::from_secs(300))
@@ -391,6 +525,12 @@ impl Coordinator {
             }
         }
 
+        // The crashed worker's thread has exited; never dispatch to it
+        // again.
+        if let Some((cw, _)) = crash {
+            self.dead[cw] = true;
+        }
+
         let completion = completion_wall.ok_or_else(|| {
             anyhow::anyhow!("round ended without coverage (all replicas cancelled?)")
         })?;
@@ -399,7 +539,7 @@ impl Coordinator {
             completion_s: completion,
             injected_s: max_injected_winner,
             dispatch_s,
-            dispatched: n as u64,
+            dispatched: dispatched as u64,
             redundant,
             cancelled,
         });
@@ -615,5 +755,83 @@ mod tests {
         c.shutdown();
         assert_eq!(recs[0].redundant, 0);
         assert_eq!(recs[0].cancelled, 0);
+    }
+
+    #[test]
+    fn crash_mid_round_survivors_complete_and_worker_stays_dead() {
+        // N=4, B=2 (g=2): crashing one worker leaves its batch one live
+        // replica, so the crash round and every later round must still
+        // aggregate the exact full-batch gradient.
+        let mut c = Coordinator::new(test_cfg(4, 2), Backend::Mock).unwrap();
+        let w = vec![0.25f32, -0.5, 1.0, 0.0];
+        let oracle = {
+            let full = c.dataset().shard(&[(0, 64)]);
+            let mut m = crate::worker::MockCompute;
+            match m.run(&full, &JobSpec::Grad { w: Arc::new(w.clone()) }).unwrap() {
+                JobOut::Grad(g) => g,
+                _ => panic!(),
+            }
+        };
+        let check = |got: RoundResult| {
+            let g = match got {
+                RoundResult::Grad(g) => g,
+                _ => panic!(),
+            };
+            for (a, e) in g.grad.iter().zip(&oracle.grad) {
+                assert!((a - e).abs() < 1e-2 * e.abs().max(1.0), "{a} vs {e}");
+            }
+        };
+        c.crash_worker_next_round(0, 0.5).unwrap();
+        check(c.run_round(JobSpec::Grad { w: Arc::new(w.clone()) }).unwrap());
+        assert_eq!(c.live_workers(), 3);
+        assert!(c.dead_workers()[0]);
+        // Post-crash rounds dispatch only to survivors.
+        check(c.run_round(JobSpec::Grad { w: Arc::new(w.clone()) }).unwrap());
+        let recs = c.metrics.records().to_vec();
+        c.shutdown();
+        assert_eq!(recs[0].dispatched, 4);
+        assert_eq!(recs[1].dispatched, 3);
+    }
+
+    #[test]
+    fn crash_of_sole_replica_fails_fast() {
+        // g=1: the crashed worker was its batch's only replica — the
+        // round can never cover the dataset, and the coordinator must
+        // say so instead of hanging on results that will never come.
+        let mut c = Coordinator::new(test_cfg(2, 2), Backend::Mock).unwrap();
+        c.crash_worker_next_round(1, 0.5).unwrap();
+        let err = c.run_round(JobSpec::Grad { w: Arc::new(vec![0.0; 4]) }).unwrap_err();
+        assert!(err.to_string().contains("lost every live replica"), "{err}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn round_telemetry_recovers_service_law() {
+        // The closed loop's input: per-replica (winner exact, sibling
+        // censored) observations drained after each round must let the
+        // censored MLE recover the size-scaled service law. With
+        // Exp(mu) service and s units per batch, draws are s·Exp(mu) =
+        // Exp(mu/s).
+        use crate::control::{CensoredAccumulator, FitKind};
+        let mut cfg = test_cfg(4, 2);
+        cfg.service = ServiceSpec::exp(20.0);
+        cfg.time_scale = 1e-3;
+        let mut c = Coordinator::new(cfg, Backend::Mock).unwrap();
+        let s = c.layout.batch_units() as f64;
+        let mut acc = CensoredAccumulator::new();
+        for _ in 0..300 {
+            c.run_round(JobSpec::Grad { w: Arc::new(vec![0.0; 4]) }).unwrap();
+            let obs = c.take_round_observations();
+            assert_eq!(obs.len(), 4, "one observation per dispatched replica");
+            assert_eq!(obs.iter().filter(|o| o.exact).count(), 2, "one winner per batch");
+            for o in obs {
+                acc.push(o);
+            }
+        }
+        c.shutdown();
+        let fit = acc.fit(FitKind::Exp, 1.96).expect("fit");
+        let expect = 20.0 / s;
+        let rel = (fit.mu - expect).abs() / expect;
+        assert!(rel < 0.1, "mu {} vs {expect} (rel {rel:.3})", fit.mu);
     }
 }

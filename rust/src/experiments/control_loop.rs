@@ -1,0 +1,164 @@
+//! E12 — closed-loop adaptive control: regret vs the oracle plan.
+//!
+//! Unlike E1–E11 this driver does not sweep a study grid — the quantity
+//! under test is the *feedback loop* (estimate → plan → observe), so it
+//! runs the [`crate::control`] harness directly: the controller starts
+//! from a deliberately mis-specified prior, sees only censored
+//! per-replica telemetry, and is scored per epoch against the oracle
+//! batch count computed from the hidden true spec via the `analysis`
+//! closed forms.
+//!
+//! * **E12a (stationary)** — the `smoke` preset across objectives
+//!   (mean, λ-blend, variance): does the chosen B converge to the
+//!   oracle B*, and how much regret does the mis-specified start cost?
+//! * **E12b (drift)** — the `drift` preset trajectory: the truth shifts
+//!   from ∆µ = 1.0 (oracle: full parallelism) to ∆µ = 0.02 (oracle:
+//!   full replication) mid-run; the CUSUM must catch it and the
+//!   controller re-converge from post-change data.
+//!
+//! Replicates run over the crate's fixed shard plan, so both tables are
+//! bit-identical across runs and thread counts for a fixed seed.
+
+use super::ExpContext;
+use crate::control::{plan, ControlSpec, Objective, TrueService};
+use crate::evaluator::auto_threads;
+use crate::util::table::{fmt_f, Table};
+
+/// Scale a preset to the context's budget: small smoke budgets get the
+/// `fast()` cut, full runs keep the preset sizes.
+fn sized(ctx: &ExpContext, spec: ControlSpec) -> ControlSpec {
+    if ctx.trials < 10_000 {
+        spec.fast()
+    } else {
+        spec
+    }
+}
+
+/// Run E12a + E12b.
+pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
+    // --- E12a: stationary convergence across objectives ---
+    let objectives =
+        [Objective::Mean, Objective::Blend { lambda: 0.5 }, Objective::Variance];
+    let mut t12a = Table::new(
+        "E12a — adaptive controller vs oracle: stationary truth SExp(1,0.2), \
+         prior SExp(4,0.8), N=12",
+        &[
+            "objective",
+            "prior B",
+            "oracle B",
+            "final mean B",
+            "frac@oracle",
+            "final rel regret",
+            "replans",
+            "drift replans",
+        ],
+    );
+    for obj in &objectives {
+        let mut spec = sized(ctx, ControlSpec::smoke());
+        spec.objective = obj.clone();
+        spec.seed = ctx.seed;
+        spec.name = format!("e12-{}", obj.name());
+        let prior_b = plan(spec.n_workers, &spec.prior, obj)?.b;
+        let report = spec.run(auto_threads())?;
+        let last = report.epochs.last().expect("epochs");
+        let replans: u64 = report.epochs.iter().map(|e| e.replans).sum();
+        let drifts: u64 = report.epochs.iter().map(|e| e.drift_replans).sum();
+        t12a.row(vec![
+            obj.name(),
+            prior_b.to_string(),
+            last.oracle_b.to_string(),
+            fmt_f(last.mean_b, 2),
+            fmt_f(last.frac_oracle, 2),
+            fmt_f(last.mean_rel_regret, 4),
+            replans.to_string(),
+            drifts.to_string(),
+        ]);
+    }
+    ctx.emit("e12_control_regret", &t12a)?;
+
+    // --- E12b: drift trajectory, mean objective ---
+    let mut spec = sized(ctx, ControlSpec::drift());
+    spec.seed = ctx.seed;
+    let truth = TrueService::piecewise(spec.phases.clone())?;
+    let report = spec.run(auto_threads())?;
+    let mut t12b = Table::new(
+        "E12b — drift re-convergence: truth shifts SExp(1,1) → SExp(1,0.02) at \
+         epoch 12 (N=24, mean objective)",
+        &[
+            "epoch",
+            "truth",
+            "oracle B",
+            "mean B",
+            "frac@oracle",
+            "mean regret",
+            "rel regret",
+            "replans",
+            "drift replans",
+        ],
+    );
+    for e in &report.epochs {
+        t12b.row(vec![
+            e.epoch.to_string(),
+            truth.at(e.epoch).name(),
+            e.oracle_b.to_string(),
+            fmt_f(e.mean_b, 2),
+            fmt_f(e.frac_oracle, 2),
+            fmt_f(e.mean_regret, 4),
+            fmt_f(e.mean_rel_regret, 4),
+            e.replans.to_string(),
+            e.drift_replans.to_string(),
+        ]);
+    }
+    ctx.emit("e12_control_drift", &t12b)?;
+
+    Ok(vec![t12a, t12b])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ExpContext {
+        let dir = std::env::temp_dir().join("batchrep_e12_test");
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        ExpContext { out_dir: dir, trials: 2_000, seed: 1 }
+    }
+
+    #[test]
+    fn e12_demonstrates_adaptation() {
+        let tables = run(&ctx()).expect("run");
+        assert_eq!(tables.len(), 2);
+
+        // E12a: the mean-objective row converges to the oracle plan.
+        let t12a = &tables[0];
+        let mean_row = &t12a.rows[0];
+        assert_eq!(mean_row[0], "mean");
+        assert_eq!(mean_row[1], "12", "mis-specified prior should plan full parallelism");
+        assert_eq!(mean_row[2], "3", "oracle B* for SExp(1,0.2), N=12");
+        let frac: f64 = mean_row[4].parse().expect("frac");
+        let rel: f64 = mean_row[5].parse().expect("rel regret");
+        assert!(frac >= 0.75, "frac@oracle = {frac}");
+        assert!(rel < 0.05, "final rel regret = {rel}");
+        // The variance objective is minimized at full replication for
+        // any exp-family parameters, so prior and oracle agree at B=1.
+        let var_row = &t12a.rows[2];
+        assert_eq!(var_row[0], "variance");
+        assert_eq!(var_row[1], "1");
+        assert_eq!(var_row[2], "1");
+
+        // E12b: converged pre-shift, regret spike at the shift epoch,
+        // re-converged by the end.
+        let t12b = &tables[1];
+        let shift = 12usize;
+        let pre: f64 = t12b.rows[shift - 1][4].parse().expect("pre frac");
+        let at_regret: f64 = t12b.rows[shift][5].parse().expect("shift regret");
+        let pre_regret: f64 = t12b.rows[shift - 1][5].parse().expect("pre regret");
+        let final_frac: f64 = t12b.rows.last().expect("rows")[4].parse().expect("final frac");
+        assert!(pre >= 0.75, "pre-shift frac@oracle = {pre}");
+        assert!(at_regret > 5.0 * pre_regret.max(1e-9), "no regret spike at the shift");
+        assert!(final_frac >= 0.75, "final frac@oracle = {final_frac}");
+        // Oracle flips from full parallelism to full replication.
+        assert_eq!(t12b.rows[shift - 1][2], "24");
+        assert_eq!(t12b.rows[shift][2], "1");
+    }
+}

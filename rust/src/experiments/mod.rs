@@ -1,5 +1,5 @@
 //! Experiment drivers: one function per paper figure/table (DESIGN.md
-//! experiment index E1–E11), each emitting CSV + Markdown into an
+//! experiment index E1–E12), each emitting CSV + Markdown into an
 //! output directory and returning its [`Table`]s for inspection.
 //!
 //! Every driver is declarative: it builds one or two
@@ -9,9 +9,14 @@
 //! from the [`crate::study::StudyReport`] — no hand-rolled scenario
 //! loops. The context's `seed` is the only source of randomness (cell
 //! seeds are derived from it through the planner's canonical keys), so
-//! regenerated tables are bit-identical across runs.
+//! regenerated tables are bit-identical across runs. The one deliberate
+//! exception is [`control_loop`] (E12): a feedback loop cannot be a
+//! static grid, so it drives the [`crate::control`] harness directly —
+//! which shards its replicates over the same fixed plan, keeping the
+//! bit-determinism guarantee.
 
 pub mod ablations;
+pub mod control_loop;
 pub mod extensions;
 pub mod fig2;
 pub mod live;
@@ -76,6 +81,7 @@ pub fn run_all(ctx: &ExpContext, include_live: bool) -> anyhow::Result<Vec<Table
     tables.extend(spectrum::run(ctx)?);
     tables.extend(ablations::run(ctx)?);
     tables.extend(extensions::run(ctx)?);
+    tables.extend(control_loop::run(ctx)?);
     if include_live {
         tables.extend(live::run(ctx)?);
     }

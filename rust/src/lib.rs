@@ -65,6 +65,11 @@
 //!   first-completion-wins cancellation;
 //! * [`dist`] — service-time distributions and the size-dependent batch
 //!   service model (Gardner et al.) the paper builds on;
+//! * [`control`] — the adaptive layer: every backend above assumes the
+//!   service parameters are known; `control` estimates them online from
+//!   censored per-replica telemetry, plans redundancy under a
+//!   declarative objective, detects drift (CUSUM), and measures regret
+//!   vs the oracle plan in a closed loop (`batchrep control`);
 //! * [`experiments`] — drivers that regenerate every figure/table.
 //!
 //! Substrates built in-crate (offline environment): PRNG, statistics,
@@ -109,6 +114,7 @@ pub mod batching;
 pub mod benchkit;
 pub mod config;
 pub mod conformance;
+pub mod control;
 pub mod coordinator;
 pub mod des;
 pub mod dist;

@@ -9,9 +9,13 @@
 //!               spec.json) into a deduplicated plan, run it on the
 //!               shared pool, stream per-cell progress, and write a
 //!               schema-validated STUDY artifact (+ optional CSV)
+//!   control     closed-loop adaptive redundancy: online censored-MLE
+//!               estimation + re-planning against a hidden, optionally
+//!               drifting true spec (preset or spec.json), regret vs
+//!               the oracle plan → schema-validated CONTROL artifact
 //!   simulate    Monte-Carlo + event-engine simulation of one scenario
 //!   experiment  regenerate paper figures/tables (fig2|policies|spectrum|
-//!               ablations|live|all)
+//!               ablations|extensions|control|live|all)
 //!   train       run the live distributed-SGD System1 (PJRT backend)
 //!   mapsum      run one live distributed map-sum evaluation
 //!   conformance sweep generated scenarios through every backend pair
@@ -50,10 +54,12 @@ USAGE:
   batchrep study      <smoke|fig2|tradeoff|policies|spec.json> [--fast]
                       [--out STUDY.json] [--csv points.csv] [--threads K]
                       [--seed S] [--quiet]
+  batchrep control    <smoke|drift|spec.json> [--fast] [--out CONTROL.json]
+                      [--threads K] [--seed S] [--quiet]
   batchrep simulate   [--config f] [--n-workers 12] [--n-batches 4] [--policy p]
                       [--service spec] [--trials 100000] [--seed 42]
                       [--overlapping] [--no-cancel] [--speculative 1.5]
-  batchrep experiment <fig2|policies|spectrum|ablations|extensions|live|all>
+  batchrep experiment <fig2|policies|spectrum|ablations|extensions|control|live|all>
                       [--out results] [--trials 100000] [--seed 42] [--live]
   batchrep train      [--config f] [--steps 200] [--lr 0.3] [--mock] [...]
   batchrep mapsum     [--config f] [--mock] [...]
@@ -61,7 +67,7 @@ USAGE:
                       [--p-enter 0.0026] [--p-exit 0.05] [--slowdown 8]
   batchrep conformance [--fast|--long] [--scenarios N] [--mc-trials N]
                       [--des-trials N] [--live-rounds N] [--threads K]
-                      [--seed S] [--no-live]
+                      [--seed S] [--no-live] [--corpus f] [--no-corpus]
   batchrep bench-mc   [--trials N] [--threads K] [--out BENCH_mc.json] [--fast]
   batchrep bench-des  [--trials N] [--threads K] [--out BENCH_des.json] [--fast]
 
@@ -118,6 +124,7 @@ fn run() -> anyhow::Result<()> {
         Some("analyze") => cmd_analyze(&args),
         Some("evaluate") => cmd_evaluate(&args),
         Some("study") => cmd_study(&args),
+        Some("control") => cmd_control(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("train") => cmd_train(&args),
@@ -402,6 +409,80 @@ fn cmd_study(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_control(args: &Args) -> anyhow::Result<()> {
+    use batchrep::control::ControlSpec;
+    let which = args.positionals.get(1).cloned().ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: batchrep control <spec.json|{}> [--fast] [--out f]",
+            ControlSpec::preset_names().join("|")
+        )
+    })?;
+    let fast = args.flag("fast") || std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let quiet = args.flag("quiet");
+    let threads = args.get_or::<usize>("threads", batchrep::evaluator::auto_threads())?;
+    let seed = args.get::<u64>("seed")?;
+    let mut spec = ControlSpec::load(&which)?;
+    if let Some(s) = seed {
+        spec.seed = s;
+    }
+    if fast {
+        spec = spec.fast();
+    }
+    let out = args.get_or::<String>("out", format!("CONTROL_{}.json", spec.name))?;
+    args.finish()?;
+
+    println!(
+        "control '{}': N={} objective={} fit={} prior={} phases={} epochs={} \
+         rounds/epoch={} replicates={} seed={}",
+        spec.name,
+        spec.n_workers,
+        spec.objective.name(),
+        spec.kind.name(),
+        spec.prior.name(),
+        spec.phases.len(),
+        spec.epochs,
+        spec.rounds_per_epoch,
+        spec.replicates,
+        spec.seed
+    );
+    let timer = batchrep::util::Timer::start();
+    let report = spec.run(threads)?;
+    let elapsed = timer.secs();
+
+    let path = std::path::Path::new(&out);
+    report.write(path)?;
+    // The CI gate: a malformed artifact is an error, not a warning.
+    batchrep::control::validate_file(path)?;
+
+    if !quiet {
+        let mut t = Table::new(
+            &format!("control '{}' — regret vs oracle per epoch", spec.name),
+            &["epoch", "oracle B", "mean B", "frac@oracle", "mean regret", "replans", "drift"],
+        );
+        for e in &report.epochs {
+            t.row(vec![
+                e.epoch.to_string(),
+                e.oracle_b.to_string(),
+                fmt_f(e.mean_b, 2),
+                fmt_f(e.frac_oracle, 2),
+                fmt_f(e.mean_regret, 4),
+                e.replans.to_string(),
+                e.drift_replans.to_string(),
+            ]);
+        }
+        t.print();
+    }
+    println!(
+        "final frac@oracle {:.2}, final rel regret {:.4}, {} decisions, {:.3}s",
+        report.final_frac_oracle,
+        report.final_mean_rel_regret,
+        report.decisions.len(),
+        elapsed
+    );
+    println!("control artifact written to {out} (schema v{})", batchrep::control::SCHEMA_VERSION);
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     // Back-compat: --speculative also works as the config key.
     let speculative = args.get::<f64>("speculative")?;
@@ -477,6 +558,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
         "spectrum" => experiments::spectrum::run(&ctx)?,
         "ablations" => experiments::ablations::run(&ctx)?,
         "extensions" => experiments::extensions::run(&ctx)?,
+        "control" => experiments::control_loop::run(&ctx)?,
         "live" => experiments::live::run(&ctx)?,
         "all" => experiments::run_all(&ctx, include_live)?,
         other => anyhow::bail!("unknown experiment '{other}'"),
@@ -566,6 +648,14 @@ fn cmd_conformance(args: &Args) -> anyhow::Result<()> {
     if args.flag("no-live") {
         opts.include_live = false;
     }
+    opts.corpus = if args.flag("no-corpus") {
+        None
+    } else {
+        Some(match args.get::<String>("corpus")? {
+            Some(p) => std::path::PathBuf::from(p),
+            None => batchrep::conformance::default_corpus_path(),
+        })
+    };
     args.finish()?;
     println!(
         "conformance matrix: {} generated scenarios + anchors, mc {} / des {} trials, \
@@ -586,15 +676,19 @@ fn cmd_conformance(args: &Args) -> anyhow::Result<()> {
     t.row(vec!["montecarlo <-> des".into(), report.mc_des.to_string()]);
     t.row(vec!["des <-> des-reference".into(), report.des_reference.to_string()]);
     t.row(vec!["des <-> live".into(), report.des_live.to_string()]);
+    t.row(vec!["live-crash <-> analytic".into(), report.live_crash.to_string()]);
     t.print();
     println!(
-        "conformance: {} scenarios, {} cells agree (worst gap/tol {:.3}); \
-         heterogeneous-speed analytic cells: {}, live k-of-B cells: {}",
+        "conformance: {} scenarios ({} corpus replays), {} cells agree \
+         (worst gap/tol {:.3}); heterogeneous-speed analytic cells: {}, \
+         live k-of-B cells: {}, live-crash cells: {}",
         report.scenarios,
+        report.corpus_replayed,
         report.cells,
         report.worst_gap_over_tol,
         report.hetero_analytic_cells,
-        report.live_k_of_b_cells
+        report.live_k_of_b_cells,
+        report.live_crash
     );
     Ok(())
 }

@@ -14,6 +14,12 @@
 //! worker thread owns its own [`Engine`] (client + compiled
 //! executables). Compilation happens once per thread at startup, never
 //! on the request path.
+//!
+//! Offline builds resolve the `xla` package to the vendored no-op stub
+//! (`rust/vendor/xla-stub`), so `--features pjrt` *compiles*
+//! everywhere; at runtime the stub fails from `PjRtClient::cpu` with a
+//! clear message rather than faking results. Point the Cargo
+//! dependency at the real bindings to execute artifacts.
 
 use crate::util::json::Json;
 #[cfg(feature = "pjrt")]

@@ -48,6 +48,14 @@ impl Json {
         }
     }
 
+    /// As boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// As number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {

@@ -62,6 +62,11 @@ pub struct TaskMsg {
     pub delay_s: f64,
     /// Cooperative cancellation token for this (job, batch).
     pub cancel: Arc<AtomicBool>,
+    /// Fault injection: `Some(s)` crashes the worker `s` wall-clock
+    /// seconds into this task — it reports one final `out: None` result
+    /// (the failure detector firing) and its thread exits, never to
+    /// accept another task.
+    pub crash_after_s: Option<f64>,
 }
 
 /// Worker → master result.
@@ -239,6 +244,19 @@ where
                 }
             };
             while let Ok(task) = rx.recv() {
+                if let Some(crash_s) = task.crash_after_s {
+                    // Die mid-task: sleep out the time-to-failure, emit
+                    // the death notice, and exit the thread.
+                    std::thread::sleep(std::time::Duration::from_secs_f64(crash_s));
+                    let _ = results.send(ResultMsg {
+                        job_id: task.job_id,
+                        batch_id: task.batch_id,
+                        worker_id,
+                        out: None,
+                        injected_s: task.delay_s,
+                    });
+                    return;
+                }
                 let out = run_task(worker_id, &shard, compute.as_mut(), &task);
                 let msg = ResultMsg {
                     job_id: task.job_id,
@@ -339,6 +357,7 @@ mod tests {
             spec: JobSpec::Grad { w: Arc::new(vec![0.0, 0.0]) },
             delay_s: 0.0,
             cancel,
+            crash_after_s: None,
         })
         .unwrap();
         let r = res_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
@@ -358,6 +377,7 @@ mod tests {
             spec: JobSpec::Grad { w: Arc::new(vec![0.0, 0.0]) },
             delay_s: 10.0, // would block the test if not cancelled
             cancel: cancel.clone(),
+            crash_after_s: None,
         })
         .unwrap();
         std::thread::sleep(std::time::Duration::from_millis(20));
@@ -378,10 +398,42 @@ mod tests {
             spec: JobSpec::Grad { w: Arc::new(vec![0.0, 0.0]) },
             delay_s: 0.0,
             cancel,
+            crash_after_s: None,
         })
         .unwrap();
         let r = res_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
         assert!(r.out.is_none());
+        h.shutdown();
+    }
+
+    #[test]
+    fn crash_reports_death_notice_and_kills_thread() {
+        let (res_tx, res_rx) = std::sync::mpsc::channel();
+        let h = spawn_worker(2, shard_2x2(), || Ok(Box::new(MockCompute) as Box<dyn Compute>), res_tx);
+        let cancel = Arc::new(AtomicBool::new(false));
+        h.tx.send(TaskMsg {
+            job_id: 7,
+            batch_id: 0,
+            spec: JobSpec::Grad { w: Arc::new(vec![0.0, 0.0]) },
+            delay_s: 10.0, // never slept: the crash preempts the task
+            cancel: cancel.clone(),
+            crash_after_s: Some(0.005),
+        })
+        .unwrap();
+        let r = res_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!((r.job_id, r.batch_id, r.worker_id), (7, 0, 2));
+        assert!(r.out.is_none(), "crashed replica must not produce output");
+        // The thread has exited: a follow-up task is never answered, and
+        // shutdown (which joins) returns promptly.
+        h.tx.send(TaskMsg {
+            job_id: 8,
+            batch_id: 0,
+            spec: JobSpec::Grad { w: Arc::new(vec![0.0, 0.0]) },
+            delay_s: 0.0,
+            cancel,
+            crash_after_s: None,
+        })
+        .ok();
         h.shutdown();
     }
 }

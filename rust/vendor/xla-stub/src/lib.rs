@@ -1,0 +1,156 @@
+//! No-op stand-in for the `xla` crate (xla_extension 0.5.1 bindings).
+//!
+//! The real bindings link against a prebuilt `libxla_extension` that is
+//! not available in the offline build environment. This stub keeps the
+//! `pjrt` feature of `batchrep` *compiling* — the whole API surface
+//! `runtime::Engine` uses exists with the right shapes — while every
+//! runtime entry point returns [`Error`]. The first call a PJRT engine
+//! makes ([`PjRtClient::cpu`]) fails, so no stubbed computation is ever
+//! silently wrong: you either get the real backend or an error, never a
+//! fake number.
+//!
+//! To run against real XLA, replace this path dependency with the
+//! actual `xla` crate (the package name matches); no source change in
+//! `batchrep` is needed.
+
+use std::fmt;
+
+/// The single error every stub entry point returns.
+#[derive(Debug, Clone)]
+pub struct Error(&'static str);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {} (this build vendors the no-op xla crate; link the real xla_extension bindings to execute PJRT artifacts)", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &'static str) -> Result<T, Error> {
+    Err(Error(what))
+}
+
+/// Parsed HLO module text (stub: retains nothing).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Always errors: the stub cannot parse HLO text.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation handle (stub: empty).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Infallible wrap, matching the real signature; the computation is
+    /// inert and compiling it errors.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Host-side tensor value (stub: holds no data).
+pub struct Literal(());
+
+impl Literal {
+    /// Infallible construction, matching the real signature. The value
+    /// is inert — it can only flow into calls that error.
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    /// Always errors.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Always errors.
+    pub fn shape(&self) -> Result<Shape, Error> {
+        unavailable("Literal::shape")
+    }
+
+    /// Always errors.
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    /// Always errors.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal), Error> {
+        unavailable("Literal::to_tuple2")
+    }
+
+    /// Always errors.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable("Literal::to_vec")
+    }
+
+    /// Always errors.
+    pub fn get_first_element<T>(&self) -> Result<T, Error> {
+        unavailable("Literal::get_first_element")
+    }
+}
+
+/// Array-vs-tuple result shape.
+pub enum Shape {
+    /// Tupled entry root.
+    Tuple(Vec<Shape>),
+    /// Bare array root (the stub never distinguishes element types).
+    Array,
+}
+
+/// Device-side result buffer.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Always errors.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (stub: inert).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Always errors.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] is the first call every
+/// engine makes, so construction failing here guarantees no stub value
+/// ever reaches a caller.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Always errors: no PJRT runtime is linked.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Always errors.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtLoadedExecutable compilation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_errors_not_fakes() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[1, 2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.get_first_element::<f32>().is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("xla stub"), "{msg}");
+    }
+}
