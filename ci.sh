@@ -41,6 +41,19 @@ echo "== conformance matrix (fast mode) =="
 # the shrunk minimal case and its BATCHREP_PROP_SEED replay seed.
 cargo run --release -- conformance --fast
 
+echo "== chaos smoke (fault-plan replay + recovery metrics) =="
+# Replays the smoke fault plan (transient crash + respawn, scheduled
+# slowdown, task drops) through the fault-aware event engine at --fast
+# budgets and schema-validates the CHAOS artifact it writes (the
+# subcommand re-reads the file and fails on a malformed schema). Same
+# no-clobber rule as the bench JSONs: a full-budget artifact at the
+# repo root is never overwritten by smoke numbers.
+if [ -f ../CHAOS_smoke.json ]; then
+  cargo run --release -- chaos smoke --fast --quiet --out target/CHAOS_smoke.json
+else
+  cargo run --release -- chaos smoke --fast --quiet --out ../CHAOS_smoke.json
+fi
+
 echo "== study smoke (declarative sweep planner) =="
 # Compiles the smoke preset into a deduplicated plan, runs it on the
 # shared pool at --fast budgets, and schema-validates the STUDY artifact

@@ -54,6 +54,14 @@ pub struct SystemConfig {
     pub n_samples: usize,
     /// Live runtime: training steps (rounds of the job).
     pub steps: u64,
+    /// Live runtime: a batch's speculative relaunch deadline (and the
+    /// whole-round liveness bound) is this factor times its slowest
+    /// dispatched injected delay — the live analogue of the DES
+    /// engine's `relaunch_timeout_factor`.
+    pub relaunch_factor: f64,
+    /// Live runtime: maximum deadline relaunches per batch per round
+    /// before the round fails with a liveness error.
+    pub max_relaunches: u64,
 }
 
 impl Default for SystemConfig {
@@ -76,6 +84,8 @@ impl Default for SystemConfig {
             dim: 64,
             n_samples: 4096,
             steps: 20,
+            relaunch_factor: 3.0,
+            max_relaunches: 5,
         }
     }
 }
@@ -132,6 +142,8 @@ impl SystemConfig {
             "dim" => self.dim = want_i()? as usize,
             "n_samples" => self.n_samples = want_i()? as usize,
             "steps" => self.steps = want_i()? as u64,
+            "relaunch_factor" => self.relaunch_factor = want_f()?,
+            "max_relaunches" => self.max_relaunches = want_i()? as u64,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -155,6 +167,11 @@ impl SystemConfig {
             "kernel must be 'grad' or 'mapsum'"
         );
         anyhow::ensure!(self.dim >= 1 && self.n_samples >= self.n_workers, "bad dims");
+        anyhow::ensure!(
+            self.relaunch_factor.is_finite() && self.relaunch_factor > 1.0,
+            "relaunch_factor must be finite and > 1"
+        );
+        anyhow::ensure!(self.max_relaunches >= 1, "max_relaunches must be >= 1");
         Ok(())
     }
 
@@ -293,6 +310,19 @@ mod tests {
             ..SystemConfig::default()
         };
         assert!(clash.scenario().is_err());
+    }
+
+    #[test]
+    fn relaunch_knobs_parse_and_validate() {
+        let doc = toml::parse("relaunch_factor = 4.5\nmax_relaunches = 2").unwrap();
+        let mut cfg = SystemConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.relaunch_factor, 4.5);
+        assert_eq!(cfg.max_relaunches, 2);
+        let bad = SystemConfig { relaunch_factor: 1.0, ..SystemConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = SystemConfig { max_relaunches: 0, ..SystemConfig::default() };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -177,6 +177,8 @@ pub struct MatrixReport {
     pub des_live: u64,
     /// Live-crash ↔ Analytic cells.
     pub live_crash: u64,
+    /// Live ↔ DES fault-plan cells (shared `FaultPlan` on both sides).
+    pub live_des_fault: u64,
     /// Cells whose analytic leg used heterogeneous `worker_speeds`.
     pub hetero_analytic_cells: u64,
     /// DES ↔ Live cells with a `k_of_b` target below `B`.
@@ -197,6 +199,7 @@ enum Pair {
     DesReference,
     DesLive,
     LiveCrash,
+    LiveDesFault,
 }
 
 impl Pair {
@@ -208,6 +211,7 @@ impl Pair {
             Pair::DesReference => "des<->des-reference",
             Pair::DesLive => "des<->live",
             Pair::LiveCrash => "live-crash<->analytic",
+            Pair::LiveDesFault => "live<->des-fault",
         }
     }
 }
@@ -242,6 +246,11 @@ pub struct GeneratedCase {
     /// is killed mid-round and the survivors' completion is checked
     /// against the reduced-assignment closed form.
     pub crash: bool,
+    /// Whether this case also runs a live↔DES fault-plan cell: the same
+    /// [`crate::fault::FaultPlan`] (transient crash + Markov slowdown)
+    /// drives the live self-healing pipeline and the DES fault model,
+    /// and their mean completions must agree.
+    pub fault: bool,
 }
 
 /// Draw one valid scenario from the full cross-product the backends
@@ -284,7 +293,8 @@ pub fn gen_case(g: &mut Gen) -> GeneratedCase {
     let fail_prob = if g.coin(0.2) { g.f64_in(0.05, 0.4) } else { 0.0 };
     let live = g.coin(0.05);
     let crash = g.coin(0.04);
-    GeneratedCase { scenario: scn, fail_prob, live, crash }
+    let fault = g.coin(0.04);
+    GeneratedCase { scenario: scn, fail_prob, live, crash, fault }
 }
 
 /// Human-readable cell context (embedded in every failure message so a
@@ -298,7 +308,7 @@ pub fn describe(case: &GeneratedCase) -> String {
         .unwrap_or_else(|| "homogeneous".into());
     format!(
         "N={} B={} policy={} service={} redundancy={:?} k_of_b={:?} speeds={speeds} \
-         fail_prob={:.3} crash={} seed={}",
+         fail_prob={:.3} crash={} fault={} seed={}",
         scn.n_workers(),
         scn.assignment.n_batches,
         scn.policy.name(),
@@ -307,6 +317,7 @@ pub fn describe(case: &GeneratedCase) -> String {
         scn.k_of_b,
         case.fail_prob,
         case.crash,
+        case.fault,
         scn.seed,
     )
 }
@@ -337,6 +348,7 @@ pub fn case_to_json(case: &GeneratedCase) -> Json {
         ("fail_prob", Json::from(case.fail_prob)),
         ("live", Json::from(case.live)),
         ("crash", Json::from(case.crash)),
+        ("fault", Json::from(case.fault)),
     ];
     if let Redundancy::Speculative { deadline_factor } = scn.redundancy {
         pairs.push(("speculative", Json::from(deadline_factor)));
@@ -392,7 +404,8 @@ pub fn case_from_json(v: &Json) -> anyhow::Result<GeneratedCase> {
     let fail_prob = v.get("fail_prob").and_then(Json::as_f64).unwrap_or(0.0);
     let live = v.get("live").and_then(Json::as_bool).unwrap_or(false);
     let crash = v.get("crash").and_then(Json::as_bool).unwrap_or(false);
-    Ok(GeneratedCase { scenario: scn, fail_prob, live, crash })
+    let fault = v.get("fault").and_then(Json::as_bool).unwrap_or(false);
+    Ok(GeneratedCase { scenario: scn, fail_prob, live, crash, fault })
 }
 
 /// The default adversarial-corpus location: `$BATCHREP_CORPUS`, else
@@ -506,6 +519,111 @@ fn crash_applies(scn: &Scenario, fail_prob: f64) -> bool {
         && scn.assignment.n_batches >= 1
         && scn.assignment.replication(0) >= 2
         && scn.layout.n_units % scn.assignment.n_batches == 0
+}
+
+/// Does a live↔DES fault-plan cell make sense here? The crash-cell
+/// constraints (the plan's transient crash must leave every batch
+/// covered, so g ≥ 2), plus the fault-round DES model's own scope:
+/// `U = N` units over a balanced disjoint layout, homogeneous speeds,
+/// full completion.
+fn fault_applies(scn: &Scenario, fail_prob: f64) -> bool {
+    crash_applies(scn, fail_prob)
+        && scn.n_workers() >= 2
+        && scn.layout.n_units == scn.n_workers()
+}
+
+/// The live↔DES fault-plan cell: one shared [`FaultPlan`] — a transient
+/// crash with backoff respawn on worker 0 and a Markov-modulated
+/// slowdown on worker 1 — drives both the live coordinator's
+/// self-healing pipeline and the DES fault model
+/// ([`crate::des::engine::simulate_fault_rounds`]) over the same round
+/// horizon. The per-round fault schedule (who is dead, how slow, when
+/// respawned) is plan-deterministic and identical on both sides; only
+/// the service draws differ, so the two mean completions over the
+/// horizon estimate the same mixture and must agree within the live
+/// z-bound.
+fn check_fault_cell(
+    case: &GeneratedCase,
+    opts: &MatrixOptions,
+    report: &Mutex<MatrixReport>,
+) -> anyhow::Result<()> {
+    use crate::fault::{FaultEvent, FaultPlan};
+    let scn = &case.scenario;
+    let ctx = describe(case);
+    let rounds = opts.live_rounds.max(12);
+    let plan = FaultPlan {
+        name: "conformance".into(),
+        seed: scn.seed ^ 0xFA17_0001,
+        events: vec![
+            (0, FaultEvent::TransientCrash { round: 2, fraction: 0.5, respawn_after: 2 }),
+            (
+                1,
+                FaultEvent::Slowdown {
+                    from_round: 1,
+                    rounds: 8,
+                    params: crate::trace::MarkovTraceParams::default(),
+                },
+            ),
+        ],
+    };
+
+    // DES leg: replicates of the identical fault-round schedule. Every
+    // (replicate, round) completion is one draw from the same
+    // round-mixture the live leg samples once per round.
+    let compiled = plan.compile(scn.n_workers())?;
+    let eng_cfg = EngineConfig::default();
+    let trials = (opts.des_trials / rounds.max(1)).clamp(40, 400);
+    let mut des = Welford::new();
+    let mut rng = crate::util::rng::Rng::new(scn.seed ^ 0x00DE_5EED ^ 0xFA17);
+    for _ in 0..trials {
+        let stats =
+            crate::des::engine::simulate_fault_rounds(scn, &compiled, rounds, &eng_cfg, &mut rng)?;
+        for st in stats {
+            des.push(st.completion);
+        }
+    }
+    let des_est = Estimate { mean: des.mean(), sem: des.sem(), lo: des.mean(), hi: des.mean() };
+
+    // Live leg: the real coordinator with the plan installed.
+    let time_scale = (0.004 / des.mean().max(1e-6)).clamp(0.000_8, 0.02);
+    let cfg = SystemConfig {
+        time_scale,
+        n_samples: 32.max(scn.n_workers()),
+        dim: 4,
+        cancellation: true,
+        ..SystemConfig::default()
+    };
+    let scn_live = scn.clone().with_seed(scn.seed ^ 0x11FE_5EED ^ 0xFA17);
+    let mut coord = Coordinator::from_scenario(&scn_live, cfg, Backend::Mock)?;
+    coord.install_fault_plan(&plan)?;
+    let w = Arc::new(vec![0.0f32; 4]);
+    let mut run = || -> anyhow::Result<Welford> {
+        for _ in 0..rounds {
+            coord.run_round(JobSpec::Grad { w: w.clone() })?;
+        }
+        let totals = coord.metrics.fault_totals();
+        anyhow::ensure!(
+            totals.crashes >= 1 && totals.respawns >= 1,
+            "the fault plan did not fire on the live side (totals {totals:?})"
+        );
+        anyhow::ensure!(
+            coord.live_workers() == scn.n_workers(),
+            "the transient crash never healed: {}/{} workers live",
+            coord.live_workers(),
+            scn.n_workers()
+        );
+        let mut acc = Welford::new();
+        for rec in coord.metrics.records() {
+            acc.push(rec.injected_s / time_scale);
+        }
+        Ok(acc)
+    };
+    let outcome = run();
+    coord.shutdown();
+    let live = outcome.map_err(|e| anyhow::anyhow!("live-des-fault cell failed on {ctx}: {e}"))?;
+    let live_est =
+        Estimate { mean: live.mean(), sem: live.sem(), lo: live.mean(), hi: live.mean() };
+    check_cell(Pair::LiveDesFault, &des_est, &live_est, opts.z, opts.live_floor, &ctx, report)
 }
 
 /// The live-crash cell: run a few warm-up rounds with the full cluster,
@@ -642,6 +760,7 @@ fn check_cell(
             Pair::DesReference => r.des_reference += 1,
             Pair::DesLive => r.des_live += 1,
             Pair::LiveCrash => r.live_crash += 1,
+            Pair::LiveDesFault => r.live_des_fault += 1,
         }
         let ratio = gap / tol.max(1e-300);
         if ratio > r.worst_gap_over_tol {
@@ -772,6 +891,12 @@ fn check_case(
         if opts.include_live && case.crash && crash_applies(scn, case.fail_prob) {
             check_crash_cell(case, opts, report)?;
         }
+
+        // --- Live ↔ DES under one shared fault plan: the self-healing
+        // pipeline vs the DES fault model. ---
+        if opts.include_live && case.fault && fault_applies(scn, case.fail_prob) {
+            check_fault_cell(case, opts, report)?;
+        }
     }
     Ok(())
 }
@@ -802,7 +927,7 @@ fn anchor_cases() -> Vec<GeneratedCase> {
     let mut cases: Vec<GeneratedCase> = Vec::new();
     let mut push = |scenarios: Vec<Scenario>, fail_prob: f64, live: bool, crash: bool| {
         for scenario in scenarios {
-            cases.push(GeneratedCase { scenario, fail_prob, live, crash });
+            cases.push(GeneratedCase { scenario, fail_prob, live, crash, fault: false });
         }
     };
 
@@ -932,6 +1057,24 @@ fn anchor_cases() -> Vec<GeneratedCase> {
         false,
         true,
     );
+    // Live↔DES fault conformance: one shared FaultPlan (transient crash
+    // with backoff respawn + Markov slowdown) on both backends; g = 3,
+    // so the crash never costs coverage.
+    for scenario in grid(StudySpec {
+        n_workers: vec![6],
+        batches: BatchAxis::Explicit(vec![2]),
+        services: vec![paper(1.0, 0.25)],
+        seed: 9010,
+        ..StudySpec::base("conformance-anchor-fault")
+    }) {
+        cases.push(GeneratedCase {
+            scenario,
+            fail_prob: 0.0,
+            live: false,
+            crash: false,
+            fault: true,
+        });
+    }
     cases
 }
 
@@ -999,7 +1142,13 @@ pub fn run_matrix(opts: &MatrixOptions) -> anyhow::Result<MatrixReport> {
             };
             if let Err(e) = check_case(&case, o, &report) {
                 let text = format!("{e:#}");
-                let mode = if text.contains(Pair::DesLive.name()) { FAILED_LIVE } else { FAILED };
+                let mode = if text.contains(Pair::DesLive.name())
+                    || text.contains(Pair::LiveDesFault.name())
+                {
+                    FAILED_LIVE
+                } else {
+                    FAILED
+                };
                 state.store(mode, std::sync::atomic::Ordering::Relaxed);
                 *last_failed.lock().unwrap() = Some(case);
                 panic!("{text}");
@@ -1113,6 +1262,12 @@ mod tests {
             anchors.iter().any(|c| c.crash && c.scenario.assignment.replication(0) >= 2),
             "live-crash anchor missing"
         );
+        assert!(
+            anchors.iter().any(|c| c.fault
+                && c.scenario.assignment.replication(0) >= 2
+                && fault_applies(&c.scenario, c.fail_prob)),
+            "live-des-fault anchor missing or out of the fault cell's scope"
+        );
         // Every anchor is a valid scenario with a planner-derived seed.
         for c in &anchors {
             c.scenario.layout.validate().unwrap();
@@ -1138,7 +1293,13 @@ mod tests {
         .unwrap()
         .with_speeds(vec![0.5, 1.0, 1.5, 2.0, 0.5, 1.0, 1.5, 2.0])
         .unwrap();
-        let case = GeneratedCase { scenario: scn, fail_prob: 0.125, live: true, crash: false };
+        let case = GeneratedCase {
+            scenario: scn,
+            fail_prob: 0.125,
+            live: true,
+            crash: false,
+            fault: false,
+        };
         let round = case_from_json(&case_to_json(&case)).unwrap();
         assert_eq!(case_to_json(&round).to_string(), case_to_json(&case).to_string());
         assert_eq!(describe(&round), describe(&case));
@@ -1162,11 +1323,13 @@ mod tests {
             fail_prob: 0.0,
             live: false,
             crash: true,
+            fault: true,
         };
         append_to_corpus(&path, &other).unwrap();
         let loaded = load_corpus(&path).unwrap();
         assert_eq!(loaded.len(), 2);
         assert!(loaded.iter().any(|c| c.crash), "crash flag survives the file");
+        assert!(loaded.iter().any(|c| c.fault), "fault flag survives the file");
         let _ = std::fs::remove_file(&path);
     }
 

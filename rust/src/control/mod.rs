@@ -26,11 +26,13 @@
 pub mod controller;
 pub mod estimator;
 pub mod harness;
+pub mod live;
 pub mod report;
 
 pub use controller::{plan, Action, ControlDecision, Controller, ControllerConfig, Objective, Plan};
 pub use estimator::{CensoredAccumulator, FitKind, FittedSpec, Observation};
 pub use harness::{run_loop, ServicePhase, TrueService};
+pub use live::run_live;
 pub use report::{validate_file, validate_json, ControlReport, EpochAgg, SCHEMA_VERSION};
 
 use crate::dist::ServiceSpec;

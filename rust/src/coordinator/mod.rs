@@ -54,11 +54,45 @@ pub enum Backend {
 
 /// Aggregated output of one job round.
 #[derive(Debug, Clone)]
-pub enum RoundResult {
+pub enum RoundOutput {
     /// Gradient round: summed gradient + loss over the dataset.
     Grad(GradOut),
     /// Map-sum round: the scalar total.
     MapSum(f32),
+}
+
+/// Fault and recovery events observed during one round — the live
+/// analogue of the DES engine's per-trial counters, surfaced so chaos
+/// runs are debuggable from the round result alone.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RoundEvents {
+    /// Workers that died this round (hand-armed or plan-scheduled).
+    pub crashes: u64,
+    /// Dead workers respawned at the start of this round.
+    pub respawns: u64,
+    /// Speculative deadline relaunches dispatched this round.
+    pub relaunches: u64,
+    /// Degraded-mode re-plans (assignment rebuilt onto survivors).
+    pub degradations: u64,
+    /// Tasks dropped before dispatch by the fault plan.
+    pub dropped: u64,
+}
+
+impl RoundEvents {
+    /// Whether anything fault-related happened this round.
+    pub fn any(&self) -> bool {
+        self.crashes + self.respawns + self.relaunches + self.degradations + self.dropped > 0
+    }
+}
+
+/// Result of one job round: the aggregated output plus the round's
+/// fault/recovery event counters.
+#[derive(Debug, Clone)]
+pub struct RoundResult {
+    /// Aggregated winners (gradient sum or map-sum scalar).
+    pub output: RoundOutput,
+    /// Fault and recovery events observed during the round.
+    pub events: RoundEvents,
 }
 
 /// Report of a training run.
@@ -86,10 +120,18 @@ struct RoundScratch {
     unit_covered: Vec<u32>,
     /// `batch_won[b] == generation` ⇔ batch `b` already has a winner.
     batch_won: Vec<u32>,
-    /// `batch_ok[b] == generation` ⇔ batch `b` was dispatched to at
-    /// least one live, non-crashing replica this round (the coverage
+    /// `batch_ok[b] == generation` ⇔ batch `b` has at least one live,
+    /// non-crashing replica this round (the pre-dispatch coverage
     /// feasibility check under worker death).
     batch_ok: Vec<u32>,
+    /// Slowest injected delay among the batch's dispatched completable
+    /// replicas (the base of its speculative relaunch deadline).
+    batch_max_delay: Vec<f64>,
+    /// Wall-clock instant (round-timer seconds) by which the batch must
+    /// have a winner before the coordinator relaunches it (fault mode).
+    batch_deadline: Vec<f64>,
+    /// Relaunch attempts already spent on the batch this round.
+    batch_attempts: Vec<u32>,
     /// Stamp of the current round; bumping it resets both maps in O(1).
     generation: u32,
 }
@@ -101,6 +143,9 @@ impl RoundScratch {
             unit_covered: vec![0; n_units],
             batch_won: vec![0; n_batches],
             batch_ok: vec![0; n_batches],
+            batch_max_delay: vec![0.0; n_batches],
+            batch_deadline: vec![f64::INFINITY; n_batches],
+            batch_attempts: vec![0; n_batches],
             generation: 0,
         }
     }
@@ -117,12 +162,24 @@ impl RoundScratch {
             self.batch_ok.fill(0);
             self.generation = 1;
         }
+        self.batch_max_delay.fill(0.0);
+        self.batch_deadline.fill(f64::INFINITY);
+        self.batch_attempts.fill(0);
         for c in &self.cancels {
             c.store(false, Ordering::Relaxed);
         }
         self.generation
     }
 }
+
+/// Floor added to every per-batch relaunch deadline: absorbs compute
+/// and scheduler latency that the injected-delay scaling cannot see at
+/// tiny `time_scale`.
+const RELAUNCH_FLOOR_S: f64 = 0.05;
+
+/// Grace added to the whole-round liveness bound beyond the scaled
+/// slowest injected delay (covers real compute + thread scheduling).
+const LIVENESS_GRACE_S: f64 = 5.0;
 
 /// The live coordinator.
 pub struct Coordinator {
@@ -133,8 +190,24 @@ pub struct Coordinator {
     dataset: Arc<Dataset>,
     workers: Vec<WorkerHandle>,
     results: Receiver<ResultMsg>,
+    /// Sender side of the result channel, kept so respawned workers can
+    /// be wired into the same collector.
+    res_tx: Sender<ResultMsg>,
+    /// Which compute backend replacement workers construct.
+    backend: Backend,
     rng: Rng,
     next_job: u64,
+    /// Compiled fault plan driving scheduled crashes, slowdowns, and
+    /// task drops (`None` = no fault injection).
+    fault: Option<crate::fault::CompiledPlan>,
+    /// Rounds run so far (the fault plan's clock).
+    round_index: u64,
+    /// `respawn_at[w] = Some(r)` ⇔ dead worker `w` is respawned at the
+    /// start of round `r`.
+    respawn_at: Vec<Option<u64>>,
+    /// Respawns already spent per worker (drives the exponential
+    /// backoff between attempts).
+    respawn_attempts: Vec<u32>,
     /// Per-worker speed multipliers for the injected delays (`None` =
     /// homogeneous) — the live analogue of `Scenario::worker_speeds`.
     speeds: Option<Vec<f64>>,
@@ -225,57 +298,85 @@ impl Coordinator {
 
         let (res_tx, res_rx): (Sender<ResultMsg>, Receiver<ResultMsg>) =
             std::sync::mpsc::channel();
-        let mut workers = Vec::with_capacity(cfg.n_workers);
-        for w in 0..cfg.n_workers {
-            let batch = assignment.batch_of_worker[w];
-            let ranges = layout.sample_ranges(batch, cfg.n_samples);
-            let shard = dataset.shard(&ranges);
-            let artifact_dir = std::path::PathBuf::from(&cfg.artifacts_dir);
-            let handle = match backend {
-                Backend::Mock => spawn_worker(
-                    w,
-                    shard,
-                    || Ok(Box::new(crate::worker::MockCompute) as Box<dyn Compute>),
-                    res_tx.clone(),
-                ),
-                Backend::Pjrt => spawn_worker(
-                    w,
-                    shard,
-                    move || {
-                        Ok(Box::new(crate::worker::PjrtCompute::new(&artifact_dir)?)
-                            as Box<dyn Compute>)
-                    },
-                    res_tx.clone(),
-                ),
-            };
-            workers.push(handle);
-        }
-
         let service = BatchService { spec: cfg.service.clone(), model: cfg.batch_model };
         let scratch = RoundScratch::new(layout.n_units, assignment.n_batches);
         let k_of_b = match cfg.k_of_b {
             0 => None,
             k => Some(k.min(assignment.n_batches)),
         };
-        let dead = vec![false; cfg.n_workers];
-        Ok(Coordinator {
+        let n = cfg.n_workers;
+        let mut coord = Coordinator {
             rng,
             assignment,
             layout,
             service,
             dataset,
-            workers,
+            workers: Vec::with_capacity(n),
             results: res_rx,
+            res_tx,
+            backend,
             next_job: 0,
+            fault: None,
+            round_index: 0,
+            respawn_at: vec![None; n],
+            respawn_attempts: vec![0; n],
             speeds,
             k_of_b,
-            dead,
+            dead: vec![false; n],
             pending_crash: None,
             round_times: Vec::new(),
             scratch,
             metrics: RunMetrics::new(),
             cfg,
-        })
+        };
+        for w in 0..n {
+            let handle = coord.spawn_one(w);
+            coord.workers.push(handle);
+        }
+        Ok(coord)
+    }
+
+    /// Spawn (or respawn) worker `w` against the **current** layout and
+    /// assignment — the shard is rebuilt from scratch, so a degraded
+    /// re-plan hands every worker its new batch.
+    fn spawn_one(&self, w: usize) -> WorkerHandle {
+        let batch = self.assignment.batch_of_worker[w];
+        let ranges = self.layout.sample_ranges(batch, self.cfg.n_samples);
+        let shard = self.dataset.shard(&ranges);
+        let artifact_dir = std::path::PathBuf::from(&self.cfg.artifacts_dir);
+        match self.backend {
+            Backend::Mock => spawn_worker(
+                w,
+                shard,
+                || Ok(Box::new(crate::worker::MockCompute) as Box<dyn Compute>),
+                self.res_tx.clone(),
+            ),
+            Backend::Pjrt => spawn_worker(
+                w,
+                shard,
+                move || {
+                    Ok(Box::new(crate::worker::PjrtCompute::new(&artifact_dir)?)
+                        as Box<dyn Compute>)
+                },
+                self.res_tx.clone(),
+            ),
+        }
+    }
+
+    /// Install a compiled [`crate::fault::FaultPlan`]. Event round
+    /// indices are absolute (the coordinator's round counter, 0-based
+    /// from construction), so install the plan before the first round
+    /// for the schedule to line up. Installing a plan also arms the
+    /// self-healing machinery: per-batch deadline relaunch, worker
+    /// respawn, and degraded-mode re-planning.
+    pub fn install_fault_plan(&mut self, plan: &crate::fault::FaultPlan) -> anyhow::Result<()> {
+        self.fault = Some(plan.compile(self.cfg.n_workers)?);
+        Ok(())
+    }
+
+    /// Rounds run so far.
+    pub fn round_index(&self) -> u64 {
+        self.round_index
     }
 
     /// The dataset in use.
@@ -360,23 +461,184 @@ impl Coordinator {
         obs
     }
 
-    /// Run one job round: dispatch to every worker, first replica per
-    /// batch wins, aggregate the winners.
+    /// Respawn every dead worker whose backoff expired at this round.
+    fn process_respawns(&mut self, round: u64, events: &mut RoundEvents) {
+        for w in 0..self.cfg.n_workers {
+            if self.dead[w] && self.respawn_at[w].is_some_and(|at| round >= at) {
+                self.respawn_at[w] = None;
+                let fresh = self.spawn_one(w);
+                let old = std::mem::replace(&mut self.workers[w], fresh);
+                // The crashed thread has already exited; this just joins
+                // it and drops its stale channel.
+                old.shutdown();
+                self.dead[w] = false;
+                events.respawns += 1;
+            }
+        }
+    }
+
+    /// Take worker `w` down: mark it dead and, for a transient crash,
+    /// schedule its respawn with exponential backoff between attempts
+    /// (`d`, `2d`, `4d`, `8d` rounds, capped at 8×).
+    fn mark_dead(
+        &mut self,
+        w: usize,
+        round: u64,
+        respawn_after: Option<u64>,
+        events: &mut RoundEvents,
+    ) {
+        self.dead[w] = true;
+        events.crashes += 1;
+        if let Some(d) = respawn_after {
+            let backoff = 1u64 << self.respawn_attempts[w].min(3);
+            self.respawn_at[w] = Some(round + d.saturating_mul(backoff));
+            self.respawn_attempts[w] = self.respawn_attempts[w].saturating_add(1);
+        }
+    }
+
+    /// Stamp `batch_ok` for every batch holding at least one live,
+    /// non-crashing replica and return the count — the round's coverage
+    /// feasibility, checked **before** dispatch. (A plan-dropped task
+    /// does not count against feasibility: the dropping worker is alive
+    /// and the deadline relaunch recovers the batch within the round.)
+    fn covered_batches(&mut self, crashing: &[Option<(f64, Option<u64>)>], gen: u32) -> usize {
+        for w in 0..self.cfg.n_workers {
+            if !self.dead[w] && crashing[w].is_none() {
+                self.scratch.batch_ok[self.assignment.batch_of_worker[w]] = gen;
+            }
+        }
+        self.scratch.batch_ok.iter().filter(|&&s| s == gen).count()
+    }
+
+    /// Batches a round must cover to complete.
+    fn needed_batches(&self) -> usize {
+        match self.k_of_b {
+            Some(k) => k,
+            None => self.assignment.n_batches,
+        }
+    }
+
+    /// Graceful degradation: re-plan the assignment onto the surviving
+    /// workers at a (possibly) reduced batch count — more replication
+    /// per batch, never less — rebuild the disjoint layout and every
+    /// live worker's shard, and clamp the k-of-B target.
+    fn degrade_to_survivors(&mut self, events: &mut RoundEvents) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.layout.is_overlapping,
+            "cannot re-plan an overlapping layout onto survivors"
+        );
+        let n_live = self.live_workers();
+        anyhow::ensure!(n_live >= 1, "every worker is dead — nothing to re-plan onto");
+        let b_new = crate::fault::degraded_batch_count(
+            self.layout.n_units,
+            n_live,
+            self.assignment.n_batches,
+        );
+        self.assignment =
+            crate::fault::degraded_assignment(self.cfg.n_workers, &self.dead, b_new)?;
+        self.layout = crate::batching::disjoint(self.layout.n_units, b_new)?;
+        self.scratch = RoundScratch::new(self.layout.n_units, b_new);
+        if let Some(k) = &mut self.k_of_b {
+            *k = (*k).min(b_new);
+        }
+        // Every live worker's shard changed under the new layout —
+        // replace them all (respawn with the new batch).
+        for w in 0..self.cfg.n_workers {
+            if !self.dead[w] {
+                let fresh = self.spawn_one(w);
+                let old = std::mem::replace(&mut self.workers[w], fresh);
+                old.shutdown();
+            }
+        }
+        events.degradations += 1;
+        Ok(())
+    }
+
+    /// Run one job round: dispatch to every live worker, first replica
+    /// per batch wins, aggregate the winners. With a fault plan
+    /// installed ([`Coordinator::install_fault_plan`]) the round also
+    /// runs the self-healing pipeline: respawn due workers, inject
+    /// scheduled crashes / slowdowns / task drops, re-plan onto
+    /// survivors when coverage becomes infeasible, and relaunch batches
+    /// that miss their per-batch liveness deadline (capped exponential
+    /// backoff). There is no blanket worker timeout: every injected
+    /// delay is known at dispatch, so the collect loop is bounded by
+    /// per-batch deadlines plus a delay-scaled whole-round liveness
+    /// bound, and breaching either is a named error.
     pub fn run_round(&mut self, spec: JobSpec) -> anyhow::Result<RoundResult> {
         let job_id = self.next_job;
         self.next_job += 1;
+        let round = self.round_index;
+        self.round_index += 1;
         let n = self.cfg.n_workers;
+        let mut events = RoundEvents::default();
+
+        // Self-healing step 1: bring back dead workers whose respawn
+        // backoff expired.
+        self.process_respawns(round, &mut events);
+
+        // Fault schedule for this round: the hand-armed single crash
+        // plus any plan-scheduled crashes firing now on live workers.
+        // `crashing[w] = Some((fraction_of_delay, respawn_after))`.
+        let mut crashing: Vec<Option<(f64, Option<u64>)>> = vec![None; n];
+        if let Some((cw, frac)) = self.pending_crash.take() {
+            crashing[cw] = Some((frac, None));
+        }
+        if let Some(plan) = &self.fault {
+            for w in 0..n {
+                if let Some(c) = plan.crash_of(w) {
+                    if !self.dead[w] && c.round == round {
+                        crashing[w] = Some((c.fraction, c.respawn_after));
+                    }
+                }
+            }
+        }
+
+        // Coverage feasibility under worker death, checked before any
+        // dispatch: every batch (or at least k of them, under a k-of-B
+        // target) must keep one replica that can complete, otherwise
+        // the round can never finish. With a fault plan the answer to
+        // infeasibility is graceful degradation; without one it is a
+        // named error.
+        let mut gen = self.scratch.begin_round();
+        let ok_batches = self.covered_batches(&crashing, gen);
+        if ok_batches < self.needed_batches() {
+            if self.fault.is_some() {
+                // The crashing workers are doomed either way — take
+                // them down at round start so the re-plan sees the true
+                // survivor set, then rebuild the assignment onto it.
+                for w in 0..n {
+                    if !self.dead[w] {
+                        if let Some((_, respawn_after)) = crashing[w].take() {
+                            self.mark_dead(w, round, respawn_after, &mut events);
+                        }
+                    }
+                }
+                self.degrade_to_survivors(&mut events)?;
+                gen = self.scratch.begin_round();
+                let ok = self.covered_batches(&crashing, gen);
+                anyhow::ensure!(
+                    ok >= self.needed_batches(),
+                    "degraded re-plan still infeasible: {ok} of {} batches have a live replica",
+                    self.assignment.n_batches
+                );
+            } else {
+                match self.k_of_b {
+                    Some(k) => anyhow::bail!(
+                        "only {ok_batches} batches have a live replica (k-of-B target {k})"
+                    ),
+                    None => anyhow::bail!(
+                        "{} of {} batches lost every live replica — cannot cover the dataset",
+                        self.assignment.n_batches - ok_batches,
+                        self.assignment.n_batches
+                    ),
+                }
+            }
+        }
         let s_units = self.layout.batch_units() as u64;
 
-        // Reusable round scratch: cancellation tokens reset in place,
-        // coverage/winner maps cleared by generation stamp — no per-round
-        // allocation.
-        let gen = self.scratch.begin_round();
-
-        // Fault schedule for this round (applied to at most one worker).
-        let crash = self.pending_crash.take();
-
-        // Dispatch: one replica per live worker with a sampled straggle.
+        // Dispatch: one replica per live worker with a sampled straggle
+        // (scaled by any plan slowdown), skipping plan-dropped tasks.
         let timer = Timer::start();
         let mut max_injected_winner = 0f64;
         let mut dispatched = 0usize;
@@ -385,23 +647,28 @@ impl Coordinator {
             if self.dead[w] {
                 continue;
             }
+            if let Some(plan) = &self.fault {
+                if plan.drops_task(w, round) {
+                    // The worker never starts this round's task; the
+                    // per-batch deadline relaunch recovers the batch.
+                    events.dropped += 1;
+                    continue;
+                }
+            }
             let batch = self.assignment.batch_of_worker[w];
             let speed = self.speeds.as_ref().map_or(1.0, |sp| sp[w]);
-            let draw = self.service.sample_batch(s_units, &mut self.rng);
+            let slow = self.fault.as_ref().map_or(1.0, |p| p.slow_factor(w, round));
+            // The effective draw folds the slowdown in, so telemetry
+            // (and the control loop fed by it) observes the drifted law.
+            let draw = self.service.sample_batch(s_units, &mut self.rng) * slow;
             let delay = self.cfg.time_scale * draw * speed;
-            let crash_after_s = match crash {
-                Some((cw, frac)) if cw == w => Some(frac * delay),
-                _ => None,
-            };
-            if crash_after_s.is_none() {
-                self.scratch.batch_ok[batch] = gen;
+            let crash_after_s = crashing[w].map(|(frac, _)| frac * delay);
+            if crash_after_s.is_none() && delay > self.scratch.batch_max_delay[batch] {
+                self.scratch.batch_max_delay[batch] = delay;
             }
-            // Telemetry: the raw draw, this worker's speed, and (for a
-            // crashing replica) the normalized time it dies at.
-            let crash_at = match crash {
-                Some((cw, frac)) if cw == w => Some(frac * draw),
-                _ => None,
-            };
+            // Telemetry: the effective draw, this worker's speed, and
+            // (for a crashing replica) the normalized time it dies at.
+            let crash_at = crashing[w].map(|(frac, _)| frac * draw);
             self.round_times.push((batch, draw, speed, crash_at));
             let cancel = self.scratch.cancels[batch].clone();
             self.workers[w]
@@ -417,31 +684,33 @@ impl Coordinator {
                 .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))?;
             dispatched += 1;
         }
-        // Coverage feasibility under worker death: every batch (or at
-        // least k of them, under a k-of-B target) must keep one replica
-        // that can complete, otherwise the round can never finish.
-        let ok_batches = self.scratch.batch_ok.iter().filter(|&&s| s == gen).count();
-        match self.k_of_b {
-            Some(k) => anyhow::ensure!(
-                ok_batches >= k,
-                "only {ok_batches} batches have a live replica (k-of-B target {k})"
-            ),
-            None => anyhow::ensure!(
-                ok_batches == self.assignment.n_batches,
-                "{} of {} batches lost every live replica — cannot cover the dataset",
-                self.assignment.n_batches - ok_batches,
-                self.assignment.n_batches
-            ),
-        }
         // One clock read: wall time spent sampling + dispatching the
         // whole round (the dispatch leg of OverheadStats).
         let dispatch_s = timer.secs();
 
+        // Liveness bounds. The whole round is bounded by the slowest
+        // completable replica (scaled by the relaunch factor, plus
+        // real-compute grace); in fault mode each batch additionally
+        // carries a speculative relaunch deadline — a batch with no
+        // completable replica dispatched (all dropped) gets an
+        // immediate one.
+        let b_count = self.assignment.n_batches;
+        let fault_mode = self.fault.is_some();
+        let mut overall_deadline = dispatch_s + LIVENESS_GRACE_S;
+        for b in 0..b_count {
+            let base = self.cfg.relaunch_factor * self.scratch.batch_max_delay[b];
+            overall_deadline = overall_deadline.max(dispatch_s + base + LIVENESS_GRACE_S);
+            if fault_mode {
+                self.scratch.batch_deadline[b] = dispatch_s + base + RELAUNCH_FLOOR_S;
+            }
+        }
+
         // Collect. Completion is declared at coverage (all data units
         // covered by winning batches) or, under a k-of-B target, at the
-        // k-th finished batch; the round ends for bookkeeping when every
-        // dispatched worker has reported (cancelled workers report
-        // quickly, and a crashing worker reports its death notice).
+        // k-th finished batch; the round ends for bookkeeping when
+        // every dispatched (or relaunched) task has reported (cancelled
+        // workers report quickly, and a crashing worker reports its
+        // death notice).
         let n_units = self.layout.n_units;
         let mut units_left = n_units;
         let mut batches_won = 0usize;
@@ -449,13 +718,106 @@ impl Coordinator {
         let mut redundant = 0u64;
         let mut cancelled = 0u64;
         let mut completion_wall = None;
-        let mut agg: Option<RoundResult> = None;
+        let mut agg: Option<RoundOutput> = None;
 
         while reported < dispatched {
-            let msg = self
-                .results
-                .recv_timeout(std::time::Duration::from_secs(300))
-                .map_err(|e| anyhow::anyhow!("worker result wait failed: {e}"))?;
+            // The nearest actionable instant: an unwon batch's relaunch
+            // deadline (fault mode) or the whole-round liveness bound.
+            let mut next_deadline = overall_deadline;
+            if fault_mode && completion_wall.is_none() {
+                for b in 0..b_count {
+                    if self.scratch.batch_won[b] != gen {
+                        next_deadline = next_deadline.min(self.scratch.batch_deadline[b]);
+                    }
+                }
+            }
+            let wait = (next_deadline - timer.secs()).max(1e-3);
+            let msg = match self.results.recv_timeout(std::time::Duration::from_secs_f64(wait)) {
+                Ok(msg) => msg,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("worker result channel disconnected mid-round")
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    let now = timer.secs();
+                    if fault_mode && completion_wall.is_none() {
+                        // Speculative relaunch of every batch past its
+                        // deadline, with capped exponential backoff.
+                        for b in 0..b_count {
+                            if self.scratch.batch_won[b] == gen
+                                || now < self.scratch.batch_deadline[b]
+                            {
+                                continue;
+                            }
+                            // Workers hold batch-specific shards, so the
+                            // relaunch targets the batch's first live,
+                            // non-crashing replica.
+                            let target = self.assignment.workers_of_batch[b]
+                                .iter()
+                                .copied()
+                                .find(|&w| !self.dead[w] && crashing[w].is_none());
+                            let Some(w) = target else {
+                                // No live replica to relaunch on: under
+                                // a k-of-B target the round can finish
+                                // without this batch; otherwise the
+                                // liveness bound below names the stall.
+                                self.scratch.batch_deadline[b] = f64::INFINITY;
+                                continue;
+                            };
+                            anyhow::ensure!(
+                                (self.scratch.batch_attempts[b] as u64)
+                                    < self.cfg.max_relaunches,
+                                "batch {b} kept missing its liveness deadline — giving up \
+                                 after {} relaunches",
+                                self.cfg.max_relaunches
+                            );
+                            let speed = self.speeds.as_ref().map_or(1.0, |sp| sp[w]);
+                            let slow =
+                                self.fault.as_ref().map_or(1.0, |p| p.slow_factor(w, round));
+                            // Fresh draw; the drop coin is NOT re-flipped
+                            // — the relaunch is the recovery path.
+                            let draw = self.service.sample_batch(s_units, &mut self.rng) * slow;
+                            let delay = self.cfg.time_scale * draw * speed;
+                            self.round_times.push((b, draw, speed, None));
+                            let cancel = self.scratch.cancels[b].clone();
+                            self.workers[w]
+                                .tx
+                                .send(TaskMsg {
+                                    job_id,
+                                    batch_id: b,
+                                    spec: spec.clone(),
+                                    delay_s: delay,
+                                    cancel,
+                                    crash_after_s: None,
+                                })
+                                .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))?;
+                            dispatched += 1;
+                            events.relaunches += 1;
+                            if delay > self.scratch.batch_max_delay[b] {
+                                self.scratch.batch_max_delay[b] = delay;
+                            }
+                            // Back off: double the timeout per attempt,
+                            // capped at 16×.
+                            self.scratch.batch_attempts[b] += 1;
+                            let backoff =
+                                f64::from(1u32 << self.scratch.batch_attempts[b].min(4));
+                            let timeout = (self.cfg.relaunch_factor
+                                * self.scratch.batch_max_delay[b]
+                                + RELAUNCH_FLOOR_S)
+                                * backoff;
+                            self.scratch.batch_deadline[b] = now + timeout;
+                            overall_deadline =
+                                overall_deadline.max(now + timeout + LIVENESS_GRACE_S);
+                        }
+                    }
+                    anyhow::ensure!(
+                        now < overall_deadline,
+                        "round {round} missed its liveness deadline ({overall_deadline:.1}s): \
+                         {} of {dispatched} tasks unreported",
+                        dispatched - reported
+                    );
+                    continue;
+                }
+            };
             if msg.job_id != job_id {
                 // Stale result from a previous (already-completed) round.
                 continue;
@@ -484,17 +846,17 @@ impl Coordinator {
                     }
                     // Aggregation unit: fold the winner in.
                     agg = Some(match (agg.take(), out) {
-                        (None, JobOut::Grad(g)) => RoundResult::Grad(g),
-                        (None, JobOut::MapSum(v)) => RoundResult::MapSum(v),
-                        (Some(RoundResult::Grad(mut acc)), JobOut::Grad(g)) => {
+                        (None, JobOut::Grad(g)) => RoundOutput::Grad(g),
+                        (None, JobOut::MapSum(v)) => RoundOutput::MapSum(v),
+                        (Some(RoundOutput::Grad(mut acc)), JobOut::Grad(g)) => {
                             for (a, x) in acc.grad.iter_mut().zip(&g.grad) {
                                 *a += x;
                             }
                             acc.loss += g.loss;
-                            RoundResult::Grad(acc)
+                            RoundOutput::Grad(acc)
                         }
-                        (Some(RoundResult::MapSum(acc)), JobOut::MapSum(v)) => {
-                            RoundResult::MapSum(acc + v)
+                        (Some(RoundOutput::MapSum(acc)), JobOut::MapSum(v)) => {
+                            RoundOutput::MapSum(acc + v)
                         }
                         _ => anyhow::bail!("mixed job outputs in one round"),
                     });
@@ -525,10 +887,14 @@ impl Coordinator {
             }
         }
 
-        // The crashed worker's thread has exited; never dispatch to it
-        // again.
-        if let Some((cw, _)) = crash {
-            self.dead[cw] = true;
+        // Crashed workers' threads have exited; mark them dead and
+        // schedule any transient respawns.
+        for w in 0..n {
+            if !self.dead[w] {
+                if let Some((_, respawn_after)) = crashing[w] {
+                    self.mark_dead(w, round, respawn_after, &mut events);
+                }
+            }
         }
 
         let completion = completion_wall.ok_or_else(|| {
@@ -543,7 +909,9 @@ impl Coordinator {
             redundant,
             cancelled,
         });
-        agg.ok_or_else(|| anyhow::anyhow!("no results aggregated"))
+        self.metrics.note_fault_events(&events);
+        let output = agg.ok_or_else(|| anyhow::anyhow!("no results aggregated"))?;
+        Ok(RoundResult { output, events })
     }
 
     /// Run distributed SGD for `steps` rounds with learning rate `lr`.
@@ -566,14 +934,32 @@ impl Coordinator {
         let mut loss_curve = Vec::with_capacity(steps as usize);
         for _ in 0..steps {
             let spec = JobSpec::Grad { w: Arc::new(w.clone()) };
-            match self.run_round(spec)? {
-                RoundResult::Grad(out) => {
+            let res = self.run_round(spec)?;
+            if res.events.any() {
+                // Surface fault/recovery activity inline so chaos runs
+                // are debuggable without reading the CHAOS artifact.
+                let e = res.events;
+                println!(
+                    "  [fault] round {}: crashes={} respawns={} relaunches={} \
+                     degradations={} dropped={} live={}/{}",
+                    self.round_index - 1,
+                    e.crashes,
+                    e.respawns,
+                    e.relaunches,
+                    e.degradations,
+                    e.dropped,
+                    self.live_workers(),
+                    self.cfg.n_workers
+                );
+            }
+            match res.output {
+                RoundOutput::Grad(out) => {
                     for (wi, gi) in w.iter_mut().zip(&out.grad) {
                         *wi -= (lr * (*gi as f64) / n_samples) as f32;
                     }
                     loss_curve.push(out.loss as f64 / n_samples);
                 }
-                _ => anyhow::bail!("unexpected round result"),
+                RoundOutput::MapSum(_) => anyhow::bail!("unexpected round result"),
             }
         }
         let dist: f64 = w
@@ -597,9 +983,9 @@ impl Coordinator {
             "map-sum aggregation requires a disjoint layout"
         );
         let spec = JobSpec::MapSum { a: Arc::new(a), b: Arc::new(b) };
-        match self.run_round(spec)? {
-            RoundResult::MapSum(v) => Ok(v),
-            _ => anyhow::bail!("unexpected round result"),
+        match self.run_round(spec)?.output {
+            RoundOutput::MapSum(v) => Ok(v),
+            RoundOutput::Grad(_) => anyhow::bail!("unexpected round result"),
         }
     }
 
@@ -654,8 +1040,8 @@ mod tests {
             let mut c = Coordinator::new(test_cfg(4, b), Backend::Mock).unwrap();
             let w = vec![0.25f32, -0.5, 1.0, 0.0];
             let spec = JobSpec::Grad { w: Arc::new(w.clone()) };
-            let out = match c.run_round(spec).unwrap() {
-                RoundResult::Grad(g) => g,
+            let out = match c.run_round(spec).unwrap().output {
+                RoundOutput::Grad(g) => g,
                 _ => panic!(),
             };
             // Oracle: single shard over everything.
@@ -773,8 +1159,8 @@ mod tests {
             }
         };
         let check = |got: RoundResult| {
-            let g = match got {
-                RoundResult::Grad(g) => g,
+            let g = match got.output {
+                RoundOutput::Grad(g) => g,
                 _ => panic!(),
             };
             for (a, e) in g.grad.iter().zip(&oracle.grad) {
@@ -833,5 +1219,64 @@ mod tests {
         let expect = 20.0 / s;
         let rel = (fit.mu - expect).abs() / expect;
         assert!(rel < 0.1, "mu {} vs {expect} (rel {rel:.3})", fit.mu);
+    }
+
+    #[test]
+    fn crash_arming_rejects_bad_targets() {
+        // Named errors for out-of-range, dead, malformed, and
+        // double-armed crash requests — and a crash of an already-dead
+        // worker must not double-decrement `live_workers`.
+        let mut c = Coordinator::new(test_cfg(4, 2), Backend::Mock).unwrap();
+        let err = c.crash_worker_next_round(9, 0.5).unwrap_err();
+        assert!(err.to_string().contains("worker 9 out of range"), "{err}");
+        let err = c.crash_worker_next_round(0, 0.0).unwrap_err();
+        assert!(err.to_string().contains("crash fraction must be positive"), "{err}");
+        let err = c.crash_worker_next_round(0, f64::INFINITY).unwrap_err();
+        assert!(err.to_string().contains("crash fraction must be positive"), "{err}");
+        // Kill worker 0 for real; re-arming it must name the corpse.
+        c.crash_worker_next_round(0, 0.5).unwrap();
+        c.run_round(JobSpec::Grad { w: Arc::new(vec![0.0; 4]) }).unwrap();
+        assert_eq!(c.live_workers(), 3);
+        let err = c.crash_worker_next_round(0, 0.5).unwrap_err();
+        assert!(err.to_string().contains("worker 0 is already dead"), "{err}");
+        assert_eq!(c.live_workers(), 3, "dead worker must not decrement twice");
+        // Two armings before the round runs is also an error.
+        c.crash_worker_next_round(1, 0.5).unwrap();
+        let err = c.crash_worker_next_round(2, 0.5).unwrap_err();
+        assert!(err.to_string().contains("a crash is already armed"), "{err}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn transient_crash_respawns_on_schedule() {
+        // FaultPlan: worker 0 dies half-way through round 1 and comes
+        // back `respawn_after = 2` rounds later (start of round 3). The
+        // per-round event counters and `live_workers` must track it.
+        use crate::fault::{FaultEvent, FaultPlan};
+        let mut c = Coordinator::new(test_cfg(4, 2), Backend::Mock).unwrap();
+        let plan = FaultPlan {
+            name: "t".into(),
+            seed: 7,
+            events: vec![(
+                0,
+                FaultEvent::TransientCrash { round: 1, fraction: 0.5, respawn_after: 2 },
+            )],
+        };
+        c.install_fault_plan(&plan).unwrap();
+        let w = Arc::new(vec![0.0f32; 4]);
+        let r0 = c.run_round(JobSpec::Grad { w: w.clone() }).unwrap();
+        assert_eq!((r0.events.crashes, r0.events.respawns), (0, 0));
+        let r1 = c.run_round(JobSpec::Grad { w: w.clone() }).unwrap();
+        assert_eq!(r1.events.crashes, 1);
+        assert_eq!(c.live_workers(), 3);
+        let r2 = c.run_round(JobSpec::Grad { w: w.clone() }).unwrap();
+        assert_eq!(r2.events.respawns, 0, "still down one round later");
+        assert_eq!(c.live_workers(), 3);
+        let r3 = c.run_round(JobSpec::Grad { w: w.clone() }).unwrap();
+        assert_eq!(r3.events.respawns, 1, "back at crash round + respawn_after");
+        assert_eq!(c.live_workers(), 4);
+        let totals = c.metrics.fault_totals();
+        c.shutdown();
+        assert_eq!((totals.crashes, totals.respawns), (1, 1));
     }
 }

@@ -912,6 +912,263 @@ pub fn simulate_many_reference(
     })
 }
 
+/// Per-round statistics of [`simulate_fault_rounds`] — the DES mirror
+/// of the live coordinator's self-healing round loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultRoundStats {
+    /// Round index (the fault plan's clock).
+    pub round: u64,
+    /// Injected completion time of the round in normalized units — the
+    /// exact observable the live coordinator records as
+    /// `injected_s / time_scale`.
+    pub completion: f64,
+    /// Workers that died this round.
+    pub crashes: u64,
+    /// Dead workers respawned at the start of this round.
+    pub respawns: u64,
+    /// Batches recovered by a deadline relaunch this round.
+    pub relaunches: u64,
+    /// Degraded-mode re-plans performed this round.
+    pub degradations: u64,
+    /// Tasks dropped before dispatch this round.
+    pub dropped: u64,
+    /// Workers alive at the end of the round.
+    pub live_workers: usize,
+}
+
+/// Mark worker `w` dead and, for a transient crash, schedule its
+/// respawn with the same capped exponential backoff the live
+/// coordinator applies (`d`, `2d`, `4d`, `8d` rounds).
+fn fault_kill(
+    w: usize,
+    round: u64,
+    respawn_after: Option<u64>,
+    dead: &mut [bool],
+    respawn_at: &mut [Option<u64>],
+    respawn_attempts: &mut [u32],
+    crashes: &mut u64,
+) {
+    dead[w] = true;
+    *crashes += 1;
+    if let Some(d) = respawn_after {
+        let backoff = 1u64 << respawn_attempts[w].min(3);
+        respawn_at[w] = Some(round + d.saturating_mul(backoff));
+        respawn_attempts[w] = respawn_attempts[w].saturating_add(1);
+    }
+}
+
+/// Batches holding at least one live, non-crashing replica (the
+/// pre-dispatch feasibility count; plan-dropped tasks do not count
+/// against it — the deadline relaunch recovers them within the round).
+fn fault_covered(
+    assignment: &crate::assignment::Assignment,
+    dead: &[bool],
+    crashing: &[Option<crate::fault::CrashSpec>],
+) -> usize {
+    let mut ok = vec![false; assignment.n_batches];
+    for (w, &batch) in assignment.batch_of_worker.iter().enumerate() {
+        if !dead[w] && crashing[w].is_none() {
+            ok[batch] = true;
+        }
+    }
+    ok.iter().filter(|&&x| x).count()
+}
+
+/// Worker-level fault simulation: run `rounds` rounds of System1 under
+/// a compiled [`crate::fault::CompiledPlan`], mirroring the live
+/// coordinator's self-healing round loop step for step — respawns due
+/// at round start, scheduled crashes with backoff-scheduled transient
+/// respawn, pre-dispatch coverage feasibility with graceful degradation
+/// onto survivors, per-worker dispatch draws (skipping plan-dropped
+/// tasks, scaling by plan slowdowns), and deadline relaunch of batches
+/// left with no completable replica (fresh draw on the batch's first
+/// live replica, drop coin not re-flipped). Draw order matches the live
+/// dispatch loop (worker id order, then relaunches in batch order), so
+/// round `completion` estimates the same injected observable the live
+/// run records — the live↔DES fault conformance contract.
+///
+/// Upfront redundancy and disjoint layouts only; the existing engine
+/// RNG streams are untouched (callers pass their own `rng`).
+pub fn simulate_fault_rounds(
+    scn: &Scenario,
+    plan: &crate::fault::CompiledPlan,
+    rounds: u64,
+    cfg: &EngineConfig,
+    rng: &mut Rng,
+) -> anyhow::Result<Vec<FaultRoundStats>> {
+    anyhow::ensure!(
+        matches!(cfg.redundancy, Redundancy::Upfront),
+        "fault-round simulation models upfront replication only"
+    );
+    anyhow::ensure!(
+        !scn.layout.is_overlapping,
+        "fault-round simulation requires a disjoint layout"
+    );
+    anyhow::ensure!(
+        plan.n_workers() == scn.n_workers(),
+        "fault plan compiled for {} workers, scenario has {}",
+        plan.n_workers(),
+        scn.n_workers()
+    );
+    let n = scn.n_workers();
+    let n_units = scn.layout.n_units;
+    let mut assignment = scn.assignment.clone();
+    let mut batch_units = scn.layout.batch_units();
+    let mut k_of_b = scn.k_of_b;
+    let mut dead = vec![false; n];
+    let mut respawn_at: Vec<Option<u64>> = vec![None; n];
+    let mut respawn_attempts = vec![0u32; n];
+    let mut batch_time: Vec<f64> = Vec::new();
+    let mut out = Vec::with_capacity(rounds as usize);
+
+    for round in 0..rounds {
+        let (mut crashes, mut respawns, mut relaunches) = (0u64, 0u64, 0u64);
+        let (mut degradations, mut dropped) = (0u64, 0u64);
+
+        // Respawns due at round start.
+        for w in 0..n {
+            if dead[w] && respawn_at[w].is_some_and(|at| round >= at) {
+                respawn_at[w] = None;
+                dead[w] = false;
+                respawns += 1;
+            }
+        }
+
+        // Crashes firing this round on live workers.
+        let mut crashing: Vec<Option<crate::fault::CrashSpec>> = vec![None; n];
+        for w in 0..n {
+            if let Some(c) = plan.crash_of(w) {
+                if !dead[w] && c.round == round {
+                    crashing[w] = Some(c);
+                }
+            }
+        }
+
+        // Pre-dispatch feasibility; degrade onto survivors if broken.
+        let b_cur = assignment.n_batches;
+        let need = k_of_b.unwrap_or(b_cur);
+        if fault_covered(&assignment, &dead, &crashing) < need {
+            for w in 0..n {
+                if !dead[w] {
+                    if let Some(c) = crashing[w].take() {
+                        fault_kill(
+                            w,
+                            round,
+                            c.respawn_after,
+                            &mut dead,
+                            &mut respawn_at,
+                            &mut respawn_attempts,
+                            &mut crashes,
+                        );
+                    }
+                }
+            }
+            let n_live = dead.iter().filter(|&&d| !d).count();
+            anyhow::ensure!(n_live >= 1, "every worker is dead at round {round}");
+            let b_new = crate::fault::degraded_batch_count(n_units, n_live, b_cur);
+            assignment = crate::fault::degraded_assignment(n, &dead, b_new)?;
+            batch_units = n_units / b_new;
+            if let Some(k) = &mut k_of_b {
+                *k = (*k).min(b_new);
+            }
+            degradations += 1;
+            anyhow::ensure!(
+                fault_covered(&assignment, &dead, &crashing) >= k_of_b.unwrap_or(b_new),
+                "degraded re-plan still infeasible at round {round}"
+            );
+        }
+        let b = assignment.n_batches;
+        let s_units = batch_units as u64;
+
+        // Dispatch draws in worker id order (the live RNG order); a
+        // crashing replica consumes its draw but never completes.
+        batch_time.clear();
+        batch_time.resize(b, f64::INFINITY);
+        for w in 0..n {
+            if dead[w] {
+                continue;
+            }
+            if plan.drops_task(w, round) {
+                dropped += 1;
+                continue;
+            }
+            let speed = scn.worker_speeds.as_ref().map_or(1.0, |sp| sp[w]);
+            let draw = scn.service.sample_batch(s_units, rng) * plan.slow_factor(w, round);
+            if crashing[w].is_some() {
+                continue;
+            }
+            let batch = assignment.batch_of_worker[w];
+            let t = draw * speed;
+            if t < batch_time[batch] {
+                batch_time[batch] = t;
+            }
+        }
+
+        // Deadline relaunch of every batch left with no completable
+        // replica, in batch order (fresh draw, drop coin not
+        // re-flipped) — matching the live relaunch of such batches at
+        // their near-immediate deadline.
+        for (bi, t) in batch_time.iter_mut().enumerate() {
+            if t.is_finite() {
+                continue;
+            }
+            let target = assignment.workers_of_batch[bi]
+                .iter()
+                .copied()
+                .find(|&w| !dead[w] && crashing[w].is_none());
+            let Some(w) = target else { continue };
+            let speed = scn.worker_speeds.as_ref().map_or(1.0, |sp| sp[w]);
+            let draw = scn.service.sample_batch(s_units, rng) * plan.slow_factor(w, round);
+            *t = draw * speed;
+            relaunches += 1;
+        }
+
+        // Round completion: k-th finished batch or full coverage.
+        let completion = match k_of_b {
+            Some(k) => {
+                let mut ts = batch_time.clone();
+                ts.sort_by(|a, b| a.total_cmp(b));
+                ts[k - 1]
+            }
+            None => batch_time.iter().fold(0.0f64, |a, &t| a.max(t)),
+        };
+        anyhow::ensure!(
+            completion.is_finite(),
+            "round {round} could not complete (a needed batch has no live replica)"
+        );
+
+        // Crashing workers die at end of round (even if their task was
+        // dropped — the node goes down either way).
+        for w in 0..n {
+            if !dead[w] {
+                if let Some(c) = crashing[w] {
+                    fault_kill(
+                        w,
+                        round,
+                        c.respawn_after,
+                        &mut dead,
+                        &mut respawn_at,
+                        &mut respawn_attempts,
+                        &mut crashes,
+                    );
+                }
+            }
+        }
+        let live_workers = dead.iter().filter(|&&d| !d).count();
+        out.push(FaultRoundStats {
+            round,
+            completion,
+            crashes,
+            respawns,
+            relaunches,
+            degradations,
+            dropped,
+            live_workers,
+        });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1339,5 +1596,93 @@ mod tests {
                 / refr.completion.mean().abs().max(1.0);
             assert!(rel <= 1e-9, "completion rel diff {rel}");
         });
+    }
+
+    #[test]
+    fn fault_rounds_track_transient_crash_and_respawn() {
+        use crate::fault::{FaultEvent, FaultPlan};
+        let s = scn(6, 3, ServiceSpec::shifted_exp(1.0, 0.25));
+        let plan = FaultPlan {
+            name: "t".into(),
+            seed: 5,
+            events: vec![(
+                0,
+                FaultEvent::TransientCrash { round: 2, fraction: 0.5, respawn_after: 2 },
+            )],
+        }
+        .compile(6)
+        .unwrap();
+        let mut rng = Rng::new(77);
+        let stats =
+            simulate_fault_rounds(&s, &plan, 8, &EngineConfig::default(), &mut rng).unwrap();
+        assert_eq!(stats.len(), 8);
+        assert_eq!(stats[2].crashes, 1);
+        assert_eq!(stats[2].live_workers, 5);
+        assert_eq!(stats[3].respawns, 0);
+        // respawn_at = 2 + 2 = 4.
+        assert_eq!(stats[4].respawns, 1);
+        assert_eq!(stats[4].live_workers, 6);
+        for st in &stats {
+            assert!(st.completion.is_finite() && st.completion > 0.0);
+        }
+        // Deterministic per (plan, seed).
+        let mut rng2 = Rng::new(77);
+        let again =
+            simulate_fault_rounds(&s, &plan, 8, &EngineConfig::default(), &mut rng2).unwrap();
+        assert_eq!(stats, again);
+    }
+
+    #[test]
+    fn fault_rounds_degrade_when_a_sole_replica_dies() {
+        use crate::fault::{FaultEvent, FaultPlan};
+        // g = 1 (full parallelism): a permanent crash leaves its batch
+        // with no replica, forcing a degraded re-plan onto survivors.
+        let s = scn(4, 4, ServiceSpec::exp(1.0));
+        let plan = FaultPlan {
+            name: "p".into(),
+            seed: 9,
+            events: vec![(1, FaultEvent::PermanentCrash { round: 1, fraction: 0.5 })],
+        }
+        .compile(4)
+        .unwrap();
+        let mut rng = Rng::new(3);
+        let stats =
+            simulate_fault_rounds(&s, &plan, 4, &EngineConfig::default(), &mut rng).unwrap();
+        assert_eq!(stats[1].degradations, 1);
+        assert_eq!(stats[1].crashes, 1);
+        assert_eq!(stats[1].live_workers, 3);
+        // 4 units on 3 survivors: largest divisor of 4 that is ≤ 3 is 2.
+        for st in &stats[1..] {
+            assert_eq!(st.live_workers, 3);
+            assert!(st.completion.is_finite());
+        }
+    }
+
+    #[test]
+    fn fault_rounds_relaunch_recovers_certain_drops() {
+        use crate::fault::{FaultEvent, FaultPlan};
+        // Drop probability 1: every task is dropped every round, so
+        // every batch must be recovered by exactly one relaunch.
+        let s = scn(4, 2, ServiceSpec::exp(1.0));
+        let plan = FaultPlan {
+            name: "d".into(),
+            seed: 11,
+            events: vec![
+                (0, FaultEvent::TaskDrop { prob: 0.999_999 }),
+                (1, FaultEvent::TaskDrop { prob: 0.999_999 }),
+                (2, FaultEvent::TaskDrop { prob: 0.999_999 }),
+                (3, FaultEvent::TaskDrop { prob: 0.999_999 }),
+            ],
+        }
+        .compile(4)
+        .unwrap();
+        let mut rng = Rng::new(21);
+        let stats =
+            simulate_fault_rounds(&s, &plan, 3, &EngineConfig::default(), &mut rng).unwrap();
+        for st in &stats {
+            assert_eq!(st.dropped, 4, "all four tasks dropped");
+            assert_eq!(st.relaunches, 2, "each batch relaunched once");
+            assert!(st.completion.is_finite());
+        }
     }
 }

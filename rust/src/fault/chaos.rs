@@ -1,0 +1,420 @@
+//! The chaos harness behind `batchrep chaos`: replay a declarative
+//! [`FaultPlan`] against a replicated round loop for many Monte-Carlo
+//! replicates and aggregate recovery behaviour into a
+//! [`ChaosReport`] artifact.
+//!
+//! The round loop is the DES fault model
+//! ([`crate::des::engine::simulate_fault_rounds`]), which mirrors the
+//! live coordinator's semantics event for event — crash, backoff
+//! respawn, deadline relaunch, degraded re-plan, task drop — so the
+//! artifact characterizes both backends (the conformance matrix's
+//! `live<->des-fault` cells pin the equivalence). Replicates fan out
+//! over the crate's block shard plan, so the report is bit-identical
+//! for a fixed `(spec, seed)` at any `--threads`.
+
+use super::report::{ChaosReport, RoundAgg};
+use super::{FaultEvent, FaultPlan};
+use crate::des::engine::{simulate_fault_rounds, EngineConfig, FaultRoundStats};
+use crate::des::montecarlo::{execute_shard_plan, shard_plan};
+use crate::des::Scenario;
+use crate::dist::{BatchService, ServiceSpec};
+use crate::trace::MarkovTraceParams;
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+use std::collections::VecDeque;
+
+/// One chaos experiment: a balanced-disjoint cluster, a service law,
+/// and a fault plan replayed for `rounds` rounds per replicate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosSpec {
+    /// Experiment name (artifact stem).
+    pub name: String,
+    /// Cluster size `N`.
+    pub n_workers: usize,
+    /// Batch count `B` (`B | N`, balanced disjoint replication).
+    pub n_batches: usize,
+    /// Per-unit service law.
+    pub service: ServiceSpec,
+    /// The fault schedule to replay.
+    pub plan: FaultPlan,
+    /// Rounds per replicate.
+    pub rounds: u64,
+    /// Monte-Carlo replicates (service-time draws differ; the fault
+    /// schedule is identical in every replicate).
+    pub replicates: u64,
+    /// Root seed for the replicate shard plan.
+    pub seed: u64,
+}
+
+impl ChaosSpec {
+    /// Names accepted by [`ChaosSpec::preset`].
+    pub fn preset_names() -> &'static [&'static str] {
+        &["smoke", "fig2"]
+    }
+
+    /// Small mixed-fault preset: a transient crash, a congestion
+    /// slowdown, and a lossy worker on an 8-worker, 4-batch cluster.
+    pub fn smoke() -> ChaosSpec {
+        ChaosSpec {
+            name: "smoke".into(),
+            n_workers: 8,
+            n_batches: 4,
+            service: ServiceSpec::shifted_exp(1.0, 0.2),
+            plan: FaultPlan {
+                name: "smoke".into(),
+                seed: 42,
+                events: vec![
+                    (0, FaultEvent::TransientCrash { round: 2, fraction: 0.5, respawn_after: 2 }),
+                    (
+                        1,
+                        FaultEvent::Slowdown {
+                            from_round: 1,
+                            rounds: 12,
+                            params: MarkovTraceParams::default(),
+                        },
+                    ),
+                    (2, FaultEvent::TaskDrop { prob: 0.05 }),
+                ],
+            },
+            rounds: 40,
+            replicates: 16,
+            seed: 42,
+        }
+    }
+
+    /// Fig-2-scale transient-crash preset: 24 workers, 6 batches
+    /// (replication group 4), the built-in `respawn` plan.
+    pub fn fig2() -> ChaosSpec {
+        ChaosSpec {
+            name: "fig2".into(),
+            n_workers: 24,
+            n_batches: 6,
+            service: ServiceSpec::shifted_exp(1.0, 0.2),
+            plan: FaultPlan::preset("respawn").expect("built-in preset"),
+            rounds: 48,
+            replicates: 16,
+            seed: 42,
+        }
+    }
+
+    /// Look up a built-in preset.
+    pub fn preset(name: &str) -> Option<ChaosSpec> {
+        match name {
+            "smoke" => Some(Self::smoke()),
+            "fig2" => Some(Self::fig2()),
+            _ => None,
+        }
+    }
+
+    /// Resolve a CLI argument: a preset name, else a path to a spec
+    /// JSON file (see [`ChaosSpec::from_json`]).
+    pub fn load(which: &str) -> anyhow::Result<ChaosSpec> {
+        if let Some(spec) = Self::preset(which) {
+            return Ok(spec);
+        }
+        let text = std::fs::read_to_string(which).map_err(|e| {
+            anyhow::anyhow!(
+                "'{which}' is not a chaos preset ({}) and not a readable file: {e}",
+                Self::preset_names().join(", ")
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {which}: {e}"))?;
+        let spec = Self::from_json(&j)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a spec from JSON:
+    ///
+    /// ```json
+    /// {"name": "my-chaos", "n_workers": 8, "n_batches": 4,
+    ///  "service": "sexp:1,0.2", "rounds": 40, "replicates": 16,
+    ///  "seed": 42, "plan": {"name": "...", "seed": 42, "events": [...]}}
+    /// ```
+    ///
+    /// Optional keys default to the `smoke` preset's values; `plan` is
+    /// required and uses the [`FaultPlan::from_json`] format.
+    pub fn from_json(j: &Json) -> anyhow::Result<ChaosSpec> {
+        let base = Self::smoke();
+        let plan_j = j
+            .get("plan")
+            .ok_or_else(|| anyhow::anyhow!("chaos spec needs a 'plan' object"))?;
+        let service = match j.get("service").and_then(Json::as_str) {
+            Some(s) => ServiceSpec::parse(s)?,
+            None => base.service,
+        };
+        let get_u = |key: &str, default: u64| -> anyhow::Result<u64> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_i64()
+                    .filter(|x| *x >= 0)
+                    .map(|x| x as u64)
+                    .ok_or_else(|| anyhow::anyhow!("'{key}' must be a non-negative integer")),
+            }
+        };
+        Ok(ChaosSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or(&base.name)
+                .to_string(),
+            n_workers: get_u("n_workers", base.n_workers as u64)? as usize,
+            n_batches: get_u("n_batches", base.n_batches as u64)? as usize,
+            service,
+            plan: FaultPlan::from_json(plan_j)?,
+            rounds: get_u("rounds", base.rounds)?,
+            replicates: get_u("replicates", base.replicates)?,
+            seed: get_u("seed", base.seed)?,
+        })
+    }
+
+    /// Serialize (round-trips through [`ChaosSpec::from_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("n_workers", self.n_workers.into()),
+            ("n_batches", self.n_batches.into()),
+            ("service", self.service.name().as_str().into()),
+            ("rounds", (self.rounds as i64).into()),
+            ("replicates", (self.replicates as i64).into()),
+            ("seed", (self.seed as i64).into()),
+            ("plan", self.plan.to_json()),
+        ])
+    }
+
+    /// Check internal consistency (cluster shape, counts, plan).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_workers >= 1, "n_workers must be >= 1");
+        anyhow::ensure!(
+            self.n_batches >= 1 && self.n_batches <= self.n_workers,
+            "n_batches must be in [1, n_workers]"
+        );
+        anyhow::ensure!(
+            self.n_workers % self.n_batches == 0,
+            "chaos runs use balanced replication: n_batches must divide n_workers"
+        );
+        anyhow::ensure!(self.rounds >= 1, "rounds must be >= 1");
+        anyhow::ensure!(self.replicates >= 1, "replicates must be >= 1");
+        self.plan.validate(self.n_workers)
+    }
+
+    /// Shrink for `--fast` smoke runs (caps replicates and rounds).
+    pub fn fast(mut self) -> ChaosSpec {
+        self.replicates = self.replicates.min(8);
+        self.rounds = self.rounds.min(16);
+        self
+    }
+}
+
+/// Run the chaos experiment: `spec.replicates` independent replicates
+/// of `spec.rounds` fault-injected rounds, sharded over `threads`
+/// workers with the block shard plan (bit-identical results for any
+/// `threads`). The fault/recovery counters and the liveness trajectory
+/// are schedule-driven and must agree across replicates — divergence is
+/// an internal-determinism error; only the round completion time is a
+/// random variable and gets mean/sem aggregation.
+pub fn run_chaos(spec: &ChaosSpec, threads: usize) -> anyhow::Result<ChaosReport> {
+    spec.validate()?;
+    let scn = Scenario::paper_balanced(
+        spec.n_workers,
+        spec.n_batches,
+        BatchService::paper(spec.service.clone()),
+    )?
+    .with_seed(spec.seed);
+    let plan = spec.plan.compile(spec.n_workers)?;
+    let cfg = EngineConfig::default();
+    let shards = shard_plan(spec.replicates, spec.seed);
+    let per_shard: Vec<anyhow::Result<Vec<Vec<FaultRoundStats>>>> = execute_shard_plan(
+        shards,
+        threads,
+        || (),
+        |_, count, mut rng| {
+            (0..count)
+                .map(|_| simulate_fault_rounds(&scn, &plan, spec.rounds, &cfg, &mut rng))
+                .collect()
+        },
+    );
+    let mut runs: Vec<Vec<FaultRoundStats>> = Vec::with_capacity(spec.replicates as usize);
+    for shard in per_shard {
+        runs.extend(shard?);
+    }
+    anyhow::ensure!(!runs.is_empty(), "chaos run produced no replicates");
+
+    let schedule_key = |s: &FaultRoundStats| {
+        (s.crashes, s.respawns, s.relaunches, s.degradations, s.dropped, s.live_workers)
+    };
+    let mut per_round = Vec::with_capacity(spec.rounds as usize);
+    for r in 0..spec.rounds as usize {
+        let first = runs[0][r];
+        let mut comp = Welford::new();
+        for run in &runs {
+            let st = run[r];
+            anyhow::ensure!(
+                schedule_key(&st) == schedule_key(&first),
+                "fault schedule diverged across replicates at round {r}"
+            );
+            comp.push(st.completion);
+        }
+        per_round.push(RoundAgg {
+            round: r as u64,
+            mean_completion: comp.mean(),
+            sem_completion: comp.sem(),
+            live_workers: first.live_workers,
+            crashes: first.crashes,
+            respawns: first.respawns,
+            relaunches: first.relaunches,
+            degradations: first.degradations,
+            dropped: first.dropped,
+        });
+    }
+
+    // MTTR: FIFO-match each respawn to the oldest outstanding crash.
+    // Respawns fire at round start (before that round's crashes), so
+    // they are consumed before the round's crashes are enqueued.
+    let mut outstanding: VecDeque<u64> = VecDeque::new();
+    let mut mttr_sum = 0.0;
+    let mut mttr_n = 0u64;
+    for agg in &per_round {
+        for _ in 0..agg.respawns {
+            if let Some(crashed_at) = outstanding.pop_front() {
+                mttr_sum += (agg.round - crashed_at) as f64;
+                mttr_n += 1;
+            }
+        }
+        for _ in 0..agg.crashes {
+            outstanding.push_back(agg.round);
+        }
+    }
+    let mttr_rounds = if mttr_n > 0 { mttr_sum / mttr_n as f64 } else { 0.0 };
+
+    let first_crash = per_round.iter().find(|a| a.crashes > 0).map(|a| a.round);
+    let last_degraded = per_round
+        .iter()
+        .rev()
+        .find(|a| a.live_workers < spec.n_workers)
+        .map(|a| a.round);
+    let rounds_to_recover = match (first_crash, last_degraded) {
+        (Some(f), Some(l)) if l >= f => l + 1 - f,
+        _ => 0,
+    };
+
+    let degraded_rounds = per_round
+        .iter()
+        .filter(|a| a.live_workers < spec.n_workers)
+        .count();
+    let degraded_round_frac = degraded_rounds as f64 / per_round.len() as f64;
+
+    let mut normal = (0.0f64, 0u64);
+    let mut degraded = (0.0f64, 0u64);
+    for a in &per_round {
+        if a.live_workers < spec.n_workers {
+            degraded.0 += a.mean_completion;
+            degraded.1 += 1;
+        } else if a.crashes + a.respawns + a.relaunches + a.degradations + a.dropped == 0 {
+            normal.0 += a.mean_completion;
+            normal.1 += 1;
+        }
+    }
+    let mean_of = |(sum, n): (f64, u64)| if n > 0 { sum / n as f64 } else { 0.0 };
+
+    let (t_crash, t_respawn, t_relaunch, t_degrade, t_drop) =
+        per_round.iter().fold((0, 0, 0, 0, 0), |acc, a| {
+            (
+                acc.0 + a.crashes,
+                acc.1 + a.respawns,
+                acc.2 + a.relaunches,
+                acc.3 + a.degradations,
+                acc.4 + a.dropped,
+            )
+        });
+
+    Ok(ChaosReport {
+        name: spec.name.clone(),
+        seed: spec.seed,
+        n_workers: spec.n_workers,
+        n_batches: spec.n_batches,
+        service: spec.service.name(),
+        plan: spec.plan.clone(),
+        rounds: spec.rounds,
+        replicates: runs.len() as u64,
+        total_crashes: t_crash,
+        total_respawns: t_respawn,
+        total_relaunches: t_relaunch,
+        total_degradations: t_degrade,
+        total_dropped: t_drop,
+        mttr_rounds,
+        rounds_to_recover,
+        degraded_round_frac,
+        mean_completion_normal: mean_of(normal),
+        mean_completion_degraded: mean_of(degraded),
+        per_round,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate_and_load() {
+        for name in ChaosSpec::preset_names() {
+            let spec = ChaosSpec::preset(name).expect("preset exists");
+            spec.validate().expect("preset is valid");
+            assert_eq!(&ChaosSpec::load(name).expect("loads").name, name);
+        }
+        assert!(ChaosSpec::load("no-such-preset-or-file").is_err());
+    }
+
+    #[test]
+    fn spec_round_trips_through_json() {
+        let spec = ChaosSpec::fig2();
+        let j = spec.to_json();
+        let back = ChaosSpec::from_json(&j).expect("parse");
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn smoke_run_recovers_and_counts_faults() {
+        let spec = ChaosSpec::smoke().fast();
+        let report = run_chaos(&spec, 1).expect("run");
+        assert_eq!(report.per_round.len(), spec.rounds as usize);
+        // The transient crash fires and the worker comes back.
+        assert_eq!(report.total_crashes, 1);
+        assert_eq!(report.total_respawns, 1);
+        assert!((report.mttr_rounds - 2.0).abs() < 1e-12);
+        assert_eq!(report.rounds_to_recover, 2);
+        assert!(report.degraded_round_frac > 0.0 && report.degraded_round_frac < 1.0);
+        // Degraded rounds still complete (replication covers the loss).
+        assert!(report.mean_completion_degraded > 0.0);
+        assert!(report.mean_completion_normal > 0.0);
+        crate::fault::report::validate_json(&report.to_json()).expect("schema-valid");
+    }
+
+    #[test]
+    fn report_is_bit_identical_across_thread_counts() {
+        let spec = ChaosSpec::smoke().fast();
+        let base = run_chaos(&spec, 1).expect("run").to_json().to_string();
+        for threads in [2, 4] {
+            let other = run_chaos(&spec, threads).expect("run").to_json().to_string();
+            assert_eq!(base, other, "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn fig2_scale_transient_crash_completes_every_round() {
+        let mut spec = ChaosSpec::fig2().fast();
+        spec.replicates = 2;
+        let report = run_chaos(&spec, 2).expect("run");
+        assert_eq!(report.per_round.len(), spec.rounds as usize);
+        for agg in &report.per_round {
+            assert!(
+                agg.mean_completion.is_finite() && agg.mean_completion > 0.0,
+                "round {} did not complete",
+                agg.round
+            );
+        }
+        assert_eq!(report.total_crashes, 2);
+        assert_eq!(report.total_respawns, 2);
+    }
+}

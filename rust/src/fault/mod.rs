@@ -1,0 +1,687 @@
+//! Declarative fault injection shared by the live runtime and the DES
+//! engine.
+//!
+//! A [`FaultPlan`] is a seed-deterministic schedule of per-worker fault
+//! events — permanent crashes, transient crashes with respawn, straggler
+//! slowdown intervals driven by the [`crate::trace`] Markov law, and
+//! per-round task drops. The same plan compiles (via
+//! [`FaultPlan::compile`]) into a [`CompiledPlan`] consumed by **both**
+//! backends: the live [`crate::coordinator::Coordinator`] injects the
+//! faults into real worker threads (and self-heals: deadline relaunch,
+//! respawn, degraded re-planning), while
+//! [`crate::des::engine::simulate_fault_rounds`] replays the identical
+//! schedule in simulated time. Live↔DES fault conformance cells
+//! ([`crate::conformance`]) hold the two accountable to each other, and
+//! `batchrep chaos` ([`chaos`]) measures recovery (MTTR,
+//! rounds-to-recover, throughput under degradation) into the versioned
+//! `CHAOS_*.json` artifact ([`report`]).
+//!
+//! Determinism contract: every stochastic choice a plan makes (slowdown
+//! trace, task-drop coins) is a pure function of `(plan seed, worker,
+//! round)` — no coordinator or engine RNG state is consumed — so the
+//! injected fault schedule is bit-identical across backends, thread
+//! counts, and replays.
+
+pub mod chaos;
+pub mod report;
+
+pub use chaos::{run_chaos, ChaosSpec};
+pub use report::{validate_file, validate_json, ChaosReport, RoundAgg, SCHEMA_VERSION};
+
+use crate::assignment::Assignment;
+use crate::trace::{generate_markov_trace, MarkovTraceParams};
+use crate::util::json::Json;
+use crate::util::rng::{fnv1a, splitmix64};
+
+/// One scheduled fault on one worker.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// The worker dies at the start of round `round` (it is dispatched
+    /// to, crashes `fraction` of the way through its task, and never
+    /// comes back).
+    PermanentCrash {
+        /// Round index (0-based) the crash fires in.
+        round: u64,
+        /// Fraction of the sampled task delay the worker survives.
+        fraction: f64,
+    },
+    /// Like [`FaultEvent::PermanentCrash`], but the coordinator respawns
+    /// the worker `respawn_after` rounds later (with exponential backoff
+    /// if it keeps dying).
+    TransientCrash {
+        /// Round index (0-based) the crash fires in.
+        round: u64,
+        /// Fraction of the sampled task delay the worker survives.
+        fraction: f64,
+        /// Rounds the worker stays down before its first respawn.
+        respawn_after: u64,
+    },
+    /// The worker's service times are multiplied by a Markov-modulated
+    /// straggle factor for `rounds` rounds starting at `from_round` —
+    /// the [`crate::trace`] contention law, normalized so the factor has
+    /// mean ≈ 1 outside congestion bursts.
+    Slowdown {
+        /// First affected round (0-based).
+        from_round: u64,
+        /// Number of affected rounds.
+        rounds: u64,
+        /// The Markov-modulated straggle law.
+        params: MarkovTraceParams,
+    },
+    /// Every round, the worker independently drops its task (never
+    /// starts it) with probability `prob`; the coordinator's deadline
+    /// relaunch is the recovery path.
+    TaskDrop {
+        /// Per-round drop probability.
+        prob: f64,
+    },
+}
+
+impl FaultEvent {
+    /// Stable kind tag used in the JSON encoding.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FaultEvent::PermanentCrash { .. } => "permanent_crash",
+            FaultEvent::TransientCrash { .. } => "transient_crash",
+            FaultEvent::Slowdown { .. } => "slowdown",
+            FaultEvent::TaskDrop { .. } => "task_drop",
+        }
+    }
+}
+
+/// A declarative, seed-deterministic schedule of worker faults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Name (artifact stem / preset name).
+    pub name: String,
+    /// Seed of the plan's own randomness (slowdown traces, drop coins).
+    pub seed: u64,
+    /// `(worker, event)` pairs; a worker may carry several events but at
+    /// most one crash.
+    pub events: Vec<(usize, FaultEvent)>,
+}
+
+impl FaultPlan {
+    /// Names accepted by [`FaultPlan::preset`].
+    pub fn preset_names() -> &'static [&'static str] {
+        &["crash", "respawn", "slowdown", "mixed"]
+    }
+
+    /// Look up a built-in preset.
+    pub fn preset(name: &str) -> Option<FaultPlan> {
+        match name {
+            "crash" => Some(FaultPlan {
+                name: "crash".into(),
+                seed: 42,
+                events: vec![(0, FaultEvent::PermanentCrash { round: 3, fraction: 0.5 })],
+            }),
+            "respawn" => Some(FaultPlan {
+                name: "respawn".into(),
+                seed: 42,
+                events: vec![
+                    (0, FaultEvent::TransientCrash { round: 2, fraction: 0.5, respawn_after: 2 }),
+                    (1, FaultEvent::TransientCrash { round: 6, fraction: 0.3, respawn_after: 3 }),
+                ],
+            }),
+            "slowdown" => Some(FaultPlan {
+                name: "slowdown".into(),
+                seed: 42,
+                events: vec![(
+                    0,
+                    FaultEvent::Slowdown {
+                        from_round: 2,
+                        rounds: 24,
+                        params: MarkovTraceParams {
+                            // Always-congested burst: enter immediately,
+                            // essentially never exit within the window.
+                            p_enter: 1.0,
+                            p_exit: 1e-9,
+                            ..MarkovTraceParams::default()
+                        },
+                    },
+                )],
+            }),
+            "mixed" => Some(FaultPlan {
+                name: "mixed".into(),
+                seed: 42,
+                events: vec![
+                    (0, FaultEvent::TransientCrash { round: 3, fraction: 0.5, respawn_after: 2 }),
+                    (
+                        1,
+                        FaultEvent::Slowdown {
+                            from_round: 1,
+                            rounds: 16,
+                            params: MarkovTraceParams::default(),
+                        },
+                    ),
+                    (2, FaultEvent::TaskDrop { prob: 0.15 }),
+                ],
+            }),
+            _ => None,
+        }
+    }
+
+    /// Resolve a CLI argument: a preset name, else a path to a plan JSON
+    /// file (see [`FaultPlan::from_json`] for the format).
+    pub fn load(which: &str) -> anyhow::Result<FaultPlan> {
+        if let Some(plan) = FaultPlan::preset(which) {
+            return Ok(plan);
+        }
+        let text = std::fs::read_to_string(which).map_err(|e| {
+            anyhow::anyhow!(
+                "'{which}' is not a fault-plan preset ({}) and not a readable file: {e}",
+                FaultPlan::preset_names().join("|")
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {which}: {e}"))?;
+        let mut plan = FaultPlan::from_json(&j)?;
+        if plan.name.is_empty() {
+            plan.name = std::path::Path::new(which)
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("custom")
+                .to_string();
+        }
+        Ok(plan)
+    }
+
+    /// Parse a plan object:
+    ///
+    /// ```json
+    /// {
+    ///   "name": "custom",
+    ///   "seed": 42,
+    ///   "events": [
+    ///     {"worker": 0, "kind": "transient_crash", "round": 2,
+    ///      "fraction": 0.5, "respawn_after": 2},
+    ///     {"worker": 1, "kind": "permanent_crash", "round": 5,
+    ///      "fraction": 0.5},
+    ///     {"worker": 2, "kind": "slowdown", "from_round": 1, "rounds": 16,
+    ///      "p_enter": 0.1, "p_exit": 0.05, "slowdown": 8.0,
+    ///      "base_mu": 1.0, "base_delta": 0.2},
+    ///     {"worker": 3, "kind": "task_drop", "prob": 0.1}
+    ///   ]
+    /// }
+    /// ```
+    ///
+    /// `name` and `seed` are optional (default: file stem, 42); the
+    /// slowdown's Markov parameters default to
+    /// [`MarkovTraceParams::default`] when omitted.
+    pub fn from_json(j: &Json) -> anyhow::Result<FaultPlan> {
+        let events_j = j
+            .get("events")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow::anyhow!("fault plan needs array 'events'"))?;
+        let mut events = Vec::with_capacity(events_j.len());
+        for (i, e) in events_j.iter().enumerate() {
+            let int = |key: &str| -> anyhow::Result<u64> {
+                e.get(key)
+                    .and_then(Json::as_i64)
+                    .filter(|v| *v >= 0)
+                    .map(|v| v as u64)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("fault event {i} needs non-negative integer '{key}'")
+                    })
+            };
+            let num = |key: &str| -> anyhow::Result<f64> {
+                e.get(key)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("fault event {i} needs number '{key}'"))
+            };
+            let worker = int("worker")? as usize;
+            let kind = e
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("fault event {i} needs string 'kind'"))?;
+            let event = match kind {
+                "permanent_crash" => {
+                    FaultEvent::PermanentCrash { round: int("round")?, fraction: num("fraction")? }
+                }
+                "transient_crash" => FaultEvent::TransientCrash {
+                    round: int("round")?,
+                    fraction: num("fraction")?,
+                    respawn_after: int("respawn_after")?,
+                },
+                "slowdown" => {
+                    let d = MarkovTraceParams::default();
+                    let opt = |key: &str, dv: f64| {
+                        e.get(key).and_then(Json::as_f64).unwrap_or(dv)
+                    };
+                    FaultEvent::Slowdown {
+                        from_round: int("from_round")?,
+                        rounds: int("rounds")?,
+                        params: MarkovTraceParams {
+                            p_enter: opt("p_enter", d.p_enter),
+                            p_exit: opt("p_exit", d.p_exit),
+                            slowdown: opt("slowdown", d.slowdown),
+                            base_mu: opt("base_mu", d.base_mu),
+                            base_delta: opt("base_delta", d.base_delta),
+                        },
+                    }
+                }
+                "task_drop" => FaultEvent::TaskDrop { prob: num("prob")? },
+                other => anyhow::bail!(
+                    "fault event {i} has unknown kind '{other}' \
+                     (permanent_crash|transient_crash|slowdown|task_drop)"
+                ),
+            };
+            events.push((worker, event));
+        }
+        Ok(FaultPlan {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            seed: j.get("seed").and_then(Json::as_i64).map(|s| s as u64).unwrap_or(42),
+            events,
+        })
+    }
+
+    /// Serialize back to the [`FaultPlan::from_json`] format.
+    pub fn to_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|(w, e)| {
+                let mut fields: Vec<(&str, Json)> =
+                    vec![("worker", (*w).into()), ("kind", e.kind().into())];
+                match e {
+                    FaultEvent::PermanentCrash { round, fraction } => {
+                        fields.push(("round", (*round as i64).into()));
+                        fields.push(("fraction", (*fraction).into()));
+                    }
+                    FaultEvent::TransientCrash { round, fraction, respawn_after } => {
+                        fields.push(("round", (*round as i64).into()));
+                        fields.push(("fraction", (*fraction).into()));
+                        fields.push(("respawn_after", (*respawn_after as i64).into()));
+                    }
+                    FaultEvent::Slowdown { from_round, rounds, params } => {
+                        fields.push(("from_round", (*from_round as i64).into()));
+                        fields.push(("rounds", (*rounds as i64).into()));
+                        fields.push(("p_enter", params.p_enter.into()));
+                        fields.push(("p_exit", params.p_exit.into()));
+                        fields.push(("slowdown", params.slowdown.into()));
+                        fields.push(("base_mu", params.base_mu.into()));
+                        fields.push(("base_delta", params.base_delta.into()));
+                    }
+                    FaultEvent::TaskDrop { prob } => {
+                        fields.push(("prob", (*prob).into()));
+                    }
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("seed", (self.seed as i64).into()),
+            ("events", Json::Array(events)),
+        ])
+    }
+
+    /// Structural validation against a cluster of `n_workers`.
+    pub fn validate(&self, n_workers: usize) -> anyhow::Result<()> {
+        let mut has_crash = vec![false; n_workers];
+        for (w, e) in &self.events {
+            anyhow::ensure!(
+                *w < n_workers,
+                "fault plan '{}' targets worker {w} of a {n_workers}-worker cluster",
+                self.name
+            );
+            match e {
+                FaultEvent::PermanentCrash { fraction, .. }
+                | FaultEvent::TransientCrash { fraction, .. } => {
+                    anyhow::ensure!(
+                        !has_crash[*w],
+                        "fault plan '{}' schedules two crashes on worker {w}",
+                        self.name
+                    );
+                    has_crash[*w] = true;
+                    anyhow::ensure!(
+                        *fraction > 0.0 && *fraction <= 1.0 && fraction.is_finite(),
+                        "crash fraction must be in (0, 1], got {fraction}"
+                    );
+                    if let FaultEvent::TransientCrash { respawn_after, .. } = e {
+                        anyhow::ensure!(
+                            *respawn_after >= 1,
+                            "transient crash needs respawn_after >= 1"
+                        );
+                    }
+                }
+                FaultEvent::Slowdown { rounds, params, .. } => {
+                    anyhow::ensure!(*rounds >= 1, "slowdown needs rounds >= 1");
+                    anyhow::ensure!(
+                        params.slowdown >= 1.0 && params.slowdown.is_finite(),
+                        "slowdown factor must be >= 1, got {}",
+                        params.slowdown
+                    );
+                    anyhow::ensure!(
+                        params.base_mu > 0.0 && params.base_delta >= 0.0,
+                        "slowdown base law needs mu > 0 and delta >= 0"
+                    );
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&params.p_enter)
+                            && (0.0..=1.0).contains(&params.p_exit),
+                        "slowdown Markov probabilities must be in [0, 1]"
+                    );
+                }
+                FaultEvent::TaskDrop { prob } => {
+                    anyhow::ensure!(
+                        (0.0..1.0).contains(prob),
+                        "task-drop probability must be in [0, 1), got {prob}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Compile the plan for an `n_workers` cluster: precompute the
+    /// per-worker crash schedule, slowdown factor traces, and drop
+    /// probabilities. Validates first.
+    pub fn compile(&self, n_workers: usize) -> anyhow::Result<CompiledPlan> {
+        self.validate(n_workers)?;
+        let mut crash: Vec<Option<CrashSpec>> = vec![None; n_workers];
+        let mut slow: Vec<Vec<(u64, Vec<f64>)>> = vec![Vec::new(); n_workers];
+        let mut drop_prob = vec![0f64; n_workers];
+        for (w, e) in &self.events {
+            match e {
+                FaultEvent::PermanentCrash { round, fraction } => {
+                    crash[*w] = Some(CrashSpec {
+                        round: *round,
+                        fraction: *fraction,
+                        respawn_after: None,
+                    });
+                }
+                FaultEvent::TransientCrash { round, fraction, respawn_after } => {
+                    crash[*w] = Some(CrashSpec {
+                        round: *round,
+                        fraction: *fraction,
+                        respawn_after: Some(*respawn_after),
+                    });
+                }
+                FaultEvent::Slowdown { from_round, rounds, params } => {
+                    // Normalize the Markov trace by its base mean so the
+                    // factor is ≈ 1 in the normal state and ≈ `slowdown`
+                    // inside a congestion burst; the trace seed mixes
+                    // the plan seed with (worker, from_round) so every
+                    // slowdown interval gets its own stream.
+                    let trace_seed = self.seed
+                        ^ fnv1a(
+                            (*w as u64)
+                                .to_le_bytes()
+                                .into_iter()
+                                .chain(from_round.to_le_bytes()),
+                        );
+                    let trace = generate_markov_trace(params, *rounds as usize, trace_seed);
+                    let base_mean = params.base_delta + 1.0 / params.base_mu;
+                    let factors = trace.iter().map(|t| t / base_mean).collect();
+                    slow[*w].push((*from_round, factors));
+                }
+                FaultEvent::TaskDrop { prob } => drop_prob[*w] = *prob,
+            }
+        }
+        Ok(CompiledPlan { n_workers, seed: self.seed, crash, slow, drop_prob })
+    }
+}
+
+/// A compiled crash event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashSpec {
+    /// Round the crash fires in.
+    pub round: u64,
+    /// Fraction of the sampled task delay the worker survives.
+    pub fraction: f64,
+    /// `Some(d)` = transient (respawn after `d` rounds), `None` =
+    /// permanent.
+    pub respawn_after: Option<u64>,
+}
+
+/// A [`FaultPlan`] compiled for a concrete cluster size: pure-function
+/// lookups for the coordinator's dispatch loop and the DES engine.
+#[derive(Debug, Clone)]
+pub struct CompiledPlan {
+    n_workers: usize,
+    seed: u64,
+    crash: Vec<Option<CrashSpec>>,
+    slow: Vec<Vec<(u64, Vec<f64>)>>,
+    drop_prob: Vec<f64>,
+}
+
+impl CompiledPlan {
+    /// Cluster size the plan was compiled for.
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// The crash scheduled on worker `w`, if any.
+    pub fn crash_of(&self, w: usize) -> Option<CrashSpec> {
+        self.crash[w]
+    }
+
+    /// Multiplicative straggle factor for worker `w` in round `round`
+    /// (product over overlapping slowdown intervals; 1.0 outside them).
+    pub fn slow_factor(&self, w: usize, round: u64) -> f64 {
+        let mut f = 1.0;
+        for (from, factors) in &self.slow[w] {
+            if round >= *from {
+                if let Some(x) = factors.get((round - from) as usize) {
+                    f *= x;
+                }
+            }
+        }
+        f
+    }
+
+    /// Whether worker `w` drops its task in round `round`. A pure
+    /// function of `(plan seed, w, round)` — the live coordinator and
+    /// the DES engine flip the **same** coin, so dropped-task counts
+    /// agree deterministically across backends.
+    pub fn drops_task(&self, w: usize, round: u64) -> bool {
+        let p = self.drop_prob[w];
+        if p <= 0.0 {
+            return false;
+        }
+        let mut state = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((w as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93))
+            .wrapping_add(round.wrapping_mul(0xA076_1D64_78BD_642F));
+        let x = splitmix64(&mut state);
+        ((x >> 11) as f64) * (1.0 / 9_007_199_254_740_992.0) < p
+    }
+
+    /// Drop probability configured for worker `w`.
+    pub fn drop_prob(&self, w: usize) -> f64 {
+        self.drop_prob[w]
+    }
+
+    /// One past the last round any scheduled (non-drop) event is still
+    /// active — the minimum horizon a chaos run needs to see every
+    /// event fire at least once.
+    pub fn horizon(&self) -> u64 {
+        let mut h = 0u64;
+        for c in self.crash.iter().flatten() {
+            h = h.max(c.round + 1 + c.respawn_after.unwrap_or(0));
+        }
+        for per_worker in &self.slow {
+            for (from, factors) in per_worker {
+                h = h.max(from + factors.len() as u64);
+            }
+        }
+        h
+    }
+}
+
+/// Largest feasible batch count for a degraded round: the biggest
+/// divisor of `n_units` that is at most `min(n_live, b_cur)` (a batch
+/// needs at least one live worker, and degradation only ever *shrinks*
+/// the batch count — more replication, never less).
+pub fn degraded_batch_count(n_units: usize, n_live: usize, b_cur: usize) -> usize {
+    let cap = n_live.min(b_cur).max(1);
+    (1..=cap).rev().find(|d| n_units % d == 0).unwrap_or(1)
+}
+
+/// Re-plan the assignment onto the survivors: live workers round-robin
+/// over the `b_new` batches in id order (every batch gets at least one
+/// live replica when `b_new <= live count`), dead workers continue the
+/// round-robin so the [`Assignment`] stays total (they are never
+/// dispatched to).
+pub fn degraded_assignment(
+    n_workers: usize,
+    dead: &[bool],
+    b_new: usize,
+) -> anyhow::Result<Assignment> {
+    anyhow::ensure!(dead.len() == n_workers, "need one liveness flag per worker");
+    let n_live = dead.iter().filter(|&&d| !d).count();
+    anyhow::ensure!(
+        b_new >= 1 && b_new <= n_live,
+        "degraded batch count {b_new} needs at least that many live workers ({n_live} live)"
+    );
+    let mut workers_of_batch = vec![Vec::new(); b_new];
+    let mut batch_of_worker = vec![0usize; n_workers];
+    let mut next = 0usize;
+    for (w, b) in batch_of_worker.iter_mut().enumerate() {
+        if !dead[w] {
+            *b = next % b_new;
+            workers_of_batch[next % b_new].push(w);
+            next += 1;
+        }
+    }
+    for (w, b) in batch_of_worker.iter_mut().enumerate() {
+        if dead[w] {
+            *b = next % b_new;
+            workers_of_batch[next % b_new].push(w);
+            next += 1;
+        }
+    }
+    let assignment = Assignment { n_workers, n_batches: b_new, workers_of_batch, batch_of_worker };
+    assignment.validate()?;
+    Ok(assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_compile() {
+        for name in FaultPlan::preset_names() {
+            let plan = FaultPlan::preset(name).expect("preset");
+            assert_eq!(&plan.name, name);
+            plan.compile(8).expect("compiles for N=8");
+        }
+        assert!(FaultPlan::preset("nope").is_none());
+        assert!(FaultPlan::load("nope").is_err());
+    }
+
+    #[test]
+    fn plan_json_round_trips() {
+        let plan = FaultPlan::preset("mixed").expect("preset");
+        let j = plan.to_json();
+        let back = FaultPlan::from_json(&Json::parse(&j.to_string()).expect("parse"))
+            .expect("from_json");
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_plans() {
+        let base = FaultPlan {
+            name: "t".into(),
+            seed: 1,
+            events: vec![(0, FaultEvent::PermanentCrash { round: 1, fraction: 0.5 })],
+        };
+        base.validate(4).expect("valid");
+        // Worker out of range.
+        assert!(base.validate(0).is_err());
+        // Two crashes on one worker.
+        let double = FaultPlan {
+            events: vec![
+                (0, FaultEvent::PermanentCrash { round: 1, fraction: 0.5 }),
+                (0, FaultEvent::TransientCrash { round: 3, fraction: 0.5, respawn_after: 1 }),
+            ],
+            ..base.clone()
+        };
+        assert!(double.validate(4).is_err());
+        // Bad fraction / probability.
+        let bad_frac = FaultPlan {
+            events: vec![(0, FaultEvent::PermanentCrash { round: 1, fraction: 1.5 })],
+            ..base.clone()
+        };
+        assert!(bad_frac.validate(4).is_err());
+        let bad_drop =
+            FaultPlan { events: vec![(0, FaultEvent::TaskDrop { prob: 1.0 })], ..base.clone() };
+        assert!(bad_drop.validate(4).is_err());
+    }
+
+    #[test]
+    fn compiled_lookups_are_deterministic() {
+        let plan = FaultPlan::preset("mixed").expect("preset");
+        let a = plan.compile(8).expect("compile");
+        let b = plan.compile(8).expect("compile");
+        for w in 0..8 {
+            assert_eq!(a.crash_of(w), b.crash_of(w));
+            for round in 0..40 {
+                assert_eq!(a.slow_factor(w, round), b.slow_factor(w, round));
+                assert_eq!(a.drops_task(w, round), b.drops_task(w, round));
+            }
+        }
+        // A different plan seed flips at least one drop coin over a
+        // long window (prob 0.15 on worker 2).
+        let reseeded = FaultPlan { seed: 7, ..plan }.compile(8).expect("compile");
+        let flips = (0..400)
+            .filter(|&r| reseeded.drops_task(2, r) != a.drops_task(2, r))
+            .count();
+        assert!(flips > 0, "reseeded plan flipped no drop coins");
+    }
+
+    #[test]
+    fn slowdown_factor_is_one_outside_the_interval() {
+        let plan = FaultPlan::preset("slowdown").expect("preset");
+        let c = plan.compile(4).expect("compile");
+        assert_eq!(c.slow_factor(0, 0), 1.0);
+        assert_eq!(c.slow_factor(0, 1), 1.0);
+        assert_eq!(c.slow_factor(0, 2 + 24), 1.0);
+        assert_eq!(c.slow_factor(1, 5), 1.0, "untargeted worker never slows");
+        // Inside the always-congested interval the mean factor is far
+        // above 1 (slowdown 8 on a mean-1.2 base law).
+        let mean: f64 =
+            (2..26).map(|r| c.slow_factor(0, r)).sum::<f64>() / 24.0;
+        assert!(mean > 3.0, "congested mean factor {mean}");
+        assert_eq!(c.horizon(), 26);
+    }
+
+    #[test]
+    fn drop_coin_frequency_tracks_probability() {
+        let plan = FaultPlan {
+            name: "d".into(),
+            seed: 9,
+            events: vec![(0, FaultEvent::TaskDrop { prob: 0.25 })],
+        };
+        let c = plan.compile(2).expect("compile");
+        let hits = (0..4000).filter(|&r| c.drops_task(0, r)).count() as f64 / 4000.0;
+        assert!((hits - 0.25).abs() < 0.03, "drop frequency {hits}");
+        assert!(!(0..4000).any(|r| c.drops_task(1, r)), "untargeted worker never drops");
+    }
+
+    #[test]
+    fn degraded_replan_covers_every_batch_with_a_live_worker() {
+        // 8 units, 4 batches, workers {1, 3, 6} alive → b_new = 2.
+        let mut dead = vec![true; 8];
+        for w in [1usize, 3, 6] {
+            dead[w] = false;
+        }
+        let b_new = degraded_batch_count(8, 3, 4);
+        assert_eq!(b_new, 2);
+        let a = degraded_assignment(8, &dead, b_new).expect("assignment");
+        assert_eq!(a.n_batches, 2);
+        for (b, ws) in a.workers_of_batch.iter().enumerate() {
+            assert!(
+                ws.iter().any(|&w| !dead[w]),
+                "degraded batch {b} has no live replica: {ws:?}"
+            );
+        }
+        // Sole survivor degrades to full replication.
+        assert_eq!(degraded_batch_count(8, 1, 4), 1);
+        // Prime unit counts can always fall back to b = 1.
+        assert_eq!(degraded_batch_count(7, 3, 4), 1);
+        // Requesting more batches than live workers is refused.
+        assert!(degraded_assignment(8, &dead, 4).is_err());
+    }
+}

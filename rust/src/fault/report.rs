@@ -1,0 +1,344 @@
+//! The `CHAOS_*.json` artifact: a versioned, schema-validated record of
+//! one chaos run — per-round completion aggregates across replicates,
+//! the deterministic fault/recovery counters, and the derived recovery
+//! metrics (MTTR, rounds-to-recover, throughput under degradation).
+//!
+//! Follows the crate's artifact idiom (`study::report`,
+//! `control::report`): an explicit `version` field, a [`validate_json`]
+//! that checks structure *and* internal consistency (totals vs per-round
+//! columns, finite stats), and a [`validate_file`] the CLI runs on the
+//! artifact it just wrote. The artifact carries no thread count or wall
+//! time: a fixed `(spec, seed)` pair is bit-identical for any
+//! `--threads`.
+
+use super::FaultPlan;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Artifact schema version.
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// Per-round aggregate across replicates. The fault/recovery counters
+/// and the liveness column are schedule-driven (identical in every
+/// replicate — [`super::chaos::run_chaos`] verifies it); only the
+/// completion statistics average over replicates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundAgg {
+    /// Round index (the fault plan's clock).
+    pub round: u64,
+    /// Mean injected completion across replicates (normalized units).
+    pub mean_completion: f64,
+    /// Standard error of the completion mean.
+    pub sem_completion: f64,
+    /// Workers alive at the end of the round.
+    pub live_workers: usize,
+    /// Workers that died this round.
+    pub crashes: u64,
+    /// Dead workers respawned at the start of this round.
+    pub respawns: u64,
+    /// Batches recovered by a deadline relaunch this round.
+    pub relaunches: u64,
+    /// Degraded-mode re-plans performed this round.
+    pub degradations: u64,
+    /// Tasks dropped before dispatch this round.
+    pub dropped: u64,
+}
+
+impl RoundAgg {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", (self.round as i64).into()),
+            ("mean_completion", self.mean_completion.into()),
+            ("sem_completion", self.sem_completion.into()),
+            ("live_workers", self.live_workers.into()),
+            ("crashes", (self.crashes as i64).into()),
+            ("respawns", (self.respawns as i64).into()),
+            ("relaunches", (self.relaunches as i64).into()),
+            ("degradations", (self.degradations as i64).into()),
+            ("dropped", (self.dropped as i64).into()),
+        ])
+    }
+}
+
+/// Result of one chaos run (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosReport {
+    /// Spec name (preset or file stem).
+    pub name: String,
+    /// Root seed of the shard plan (and of the fault plan's schedule).
+    pub seed: u64,
+    /// Cluster size `N`.
+    pub n_workers: usize,
+    /// Initial batch count `B`.
+    pub n_batches: usize,
+    /// Service spec string (e.g. `sexp:1,0.2`).
+    pub service: String,
+    /// The fault plan, embedded verbatim for replay.
+    pub plan: FaultPlan,
+    /// Rounds simulated per replicate.
+    pub rounds: u64,
+    /// Replicates run.
+    pub replicates: u64,
+    /// Sum of per-round `crashes`.
+    pub total_crashes: u64,
+    /// Sum of per-round `respawns`.
+    pub total_respawns: u64,
+    /// Sum of per-round `relaunches`.
+    pub total_relaunches: u64,
+    /// Sum of per-round `degradations`.
+    pub total_degradations: u64,
+    /// Sum of per-round `dropped`.
+    pub total_dropped: u64,
+    /// Mean rounds from a crash to the matching respawn (FIFO-matched;
+    /// 0 when nothing respawned).
+    pub mttr_rounds: f64,
+    /// Rounds from the first crash until full liveness was last
+    /// restored (0 when nothing crashed; equals the remaining rounds
+    /// when the run ends still degraded).
+    pub rounds_to_recover: u64,
+    /// Fraction of rounds that ended with fewer than `N` live workers.
+    pub degraded_round_frac: f64,
+    /// Mean round completion over fault-free full-liveness rounds
+    /// (0 when there are none).
+    pub mean_completion_normal: f64,
+    /// Mean round completion over rounds that ended short-handed —
+    /// throughput under degradation (0 when there are none).
+    pub mean_completion_degraded: f64,
+    /// Per-round aggregates, one per round in order.
+    pub per_round: Vec<RoundAgg>,
+}
+
+impl ChaosReport {
+    /// Serialize to the versioned artifact schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", SCHEMA_VERSION.into()),
+            ("name", self.name.as_str().into()),
+            ("seed", (self.seed as i64).into()),
+            ("n_workers", self.n_workers.into()),
+            ("n_batches", self.n_batches.into()),
+            ("service", self.service.as_str().into()),
+            ("plan", self.plan.to_json()),
+            ("rounds", (self.rounds as i64).into()),
+            ("replicates", (self.replicates as i64).into()),
+            (
+                "totals",
+                Json::obj(vec![
+                    ("crashes", (self.total_crashes as i64).into()),
+                    ("respawns", (self.total_respawns as i64).into()),
+                    ("relaunches", (self.total_relaunches as i64).into()),
+                    ("degradations", (self.total_degradations as i64).into()),
+                    ("dropped", (self.total_dropped as i64).into()),
+                ]),
+            ),
+            ("mttr_rounds", self.mttr_rounds.into()),
+            ("rounds_to_recover", (self.rounds_to_recover as i64).into()),
+            ("degraded_round_frac", self.degraded_round_frac.into()),
+            ("mean_completion_normal", self.mean_completion_normal.into()),
+            ("mean_completion_degraded", self.mean_completion_degraded.into()),
+            ("per_round", Json::Array(self.per_round.iter().map(RoundAgg::to_json).collect())),
+        ])
+    }
+
+    /// Write the artifact (newline-terminated canonical JSON).
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+/// Validate a chaos artifact: schema version, required keys, a parseable
+/// embedded fault plan, finite per-round stats, and totals consistent
+/// with the per-round columns.
+pub fn validate_json(j: &Json) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        j.get("version").and_then(Json::as_i64) == Some(SCHEMA_VERSION),
+        "missing or unexpected chaos schema version"
+    );
+    for key in ["name", "seed", "service"] {
+        anyhow::ensure!(j.get(key).is_some(), "missing key '{key}'");
+    }
+    let n_workers = j
+        .get("n_workers")
+        .and_then(Json::as_i64)
+        .ok_or_else(|| anyhow::anyhow!("missing 'n_workers'"))?;
+    anyhow::ensure!(n_workers >= 1, "n_workers must be >= 1");
+    let n_batches = j
+        .get("n_batches")
+        .and_then(Json::as_i64)
+        .ok_or_else(|| anyhow::anyhow!("missing 'n_batches'"))?;
+    anyhow::ensure!(
+        n_batches >= 1 && n_batches <= n_workers,
+        "n_batches must be in [1, n_workers]"
+    );
+    let plan_j = j.get("plan").ok_or_else(|| anyhow::anyhow!("missing 'plan'"))?;
+    FaultPlan::from_json(plan_j).map_err(|e| anyhow::anyhow!("embedded plan: {e}"))?;
+    let rounds = j
+        .get("rounds")
+        .and_then(Json::as_i64)
+        .filter(|r| *r >= 1)
+        .ok_or_else(|| anyhow::anyhow!("missing or non-positive 'rounds'"))?;
+    anyhow::ensure!(
+        j.get("replicates").and_then(Json::as_i64).is_some_and(|r| r >= 1),
+        "missing or non-positive 'replicates'"
+    );
+    let per_round = j
+        .get("per_round")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow::anyhow!("missing or non-array 'per_round'"))?;
+    anyhow::ensure!(
+        per_round.len() as i64 == rounds,
+        "per_round has {} entries for {rounds} rounds",
+        per_round.len()
+    );
+    let counters = ["crashes", "respawns", "relaunches", "degradations", "dropped"];
+    let mut sums = [0i64; 5];
+    for (i, r) in per_round.iter().enumerate() {
+        anyhow::ensure!(
+            r.get("round").and_then(Json::as_i64) == Some(i as i64),
+            "per_round entry {i} out of order"
+        );
+        for stat in ["mean_completion", "sem_completion"] {
+            let v = r
+                .get(stat)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("round {i} missing '{stat}'"))?;
+            anyhow::ensure!(v.is_finite() && v >= 0.0, "round {i} has bad '{stat}' = {v}");
+        }
+        let live = r
+            .get("live_workers")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("round {i} missing 'live_workers'"))?;
+        anyhow::ensure!(
+            (0..=n_workers).contains(&live),
+            "round {i} live_workers {live} outside [0, {n_workers}]"
+        );
+        for (k, &counter) in counters.iter().enumerate() {
+            let c = r
+                .get(counter)
+                .and_then(Json::as_i64)
+                .filter(|c| *c >= 0)
+                .ok_or_else(|| anyhow::anyhow!("round {i} missing counter '{counter}'"))?;
+            sums[k] += c;
+        }
+    }
+    let totals = j
+        .get("totals")
+        .ok_or_else(|| anyhow::anyhow!("missing 'totals'"))?;
+    for (k, &counter) in counters.iter().enumerate() {
+        let t = totals
+            .get(counter)
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("totals missing '{counter}'"))?;
+        anyhow::ensure!(
+            t == sums[k],
+            "totals.{counter} = {t} but per-round column sums to {}",
+            sums[k]
+        );
+    }
+    let frac = j
+        .get("degraded_round_frac")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("missing 'degraded_round_frac'"))?;
+    anyhow::ensure!((0.0..=1.0).contains(&frac), "degraded_round_frac out of [0, 1]");
+    let mttr = j
+        .get("mttr_rounds")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("missing 'mttr_rounds'"))?;
+    anyhow::ensure!(mttr.is_finite() && mttr >= 0.0, "bad mttr_rounds = {mttr}");
+    let recover = j
+        .get("rounds_to_recover")
+        .and_then(Json::as_i64)
+        .ok_or_else(|| anyhow::anyhow!("missing 'rounds_to_recover'"))?;
+    anyhow::ensure!(
+        (0..=rounds).contains(&recover),
+        "rounds_to_recover {recover} outside [0, rounds]"
+    );
+    for stat in ["mean_completion_normal", "mean_completion_degraded"] {
+        let v = j
+            .get(stat)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing '{stat}'"))?;
+        anyhow::ensure!(v.is_finite() && v >= 0.0, "bad '{stat}' = {v}");
+    }
+    Ok(())
+}
+
+/// Read, parse, and validate an artifact file; returns the parsed JSON.
+pub fn validate_file(path: &Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+    validate_json(&j).map_err(|e| anyhow::anyhow!("validating {}: {e}", path.display()))?;
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::chaos::{run_chaos, ChaosSpec};
+
+    fn sample_report() -> ChaosReport {
+        run_chaos(&ChaosSpec::smoke().fast(), 1).expect("run")
+    }
+
+    #[test]
+    fn artifact_round_trips_and_validates() {
+        let report = sample_report();
+        let j = report.to_json();
+        validate_json(&j).expect("valid");
+        let reparsed = Json::parse(&j.to_string()).expect("parse");
+        assert_eq!(reparsed, j);
+        validate_json(&reparsed).expect("still valid");
+    }
+
+    #[test]
+    fn write_then_validate_file() {
+        let report = sample_report();
+        let dir = std::env::temp_dir().join("batchrep-chaos-report-test");
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let path = dir.join("CHAOS_roundtrip.json");
+        report.write(&path).expect("write");
+        let j = validate_file(&path).expect("validate");
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("smoke"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn validation_rejects_malformed_artifacts() {
+        let good = sample_report().to_json();
+        let mutate = |f: &dyn Fn(&mut std::collections::BTreeMap<String, Json>)| {
+            let mut m = good.as_object().expect("obj").clone();
+            f(&mut m);
+            Json::Object(m)
+        };
+        // Wrong version.
+        let bad = mutate(&|m| {
+            m.insert("version".into(), Json::Num(99.0));
+        });
+        assert!(validate_json(&bad).is_err());
+        // Missing per-round array.
+        let bad = mutate(&|m| {
+            m.remove("per_round");
+        });
+        assert!(validate_json(&bad).is_err());
+        // Totals out of sync with the per-round columns.
+        let bad = mutate(&|m| {
+            let mut totals =
+                m.get("totals").and_then(Json::as_object).expect("totals").clone();
+            totals.insert("crashes".into(), Json::Num(999.0));
+            m.insert("totals".into(), Json::Object(totals));
+        });
+        assert!(validate_json(&bad).is_err());
+        // Degraded fraction outside [0, 1].
+        let bad = mutate(&|m| {
+            m.insert("degraded_round_frac".into(), Json::Num(1.5));
+        });
+        assert!(validate_json(&bad).is_err());
+        // Unparseable embedded plan.
+        let bad = mutate(&|m| {
+            m.insert("plan".into(), Json::obj(vec![("events", Json::Num(1.0))]));
+        });
+        assert!(validate_json(&bad).is_err());
+    }
+}

@@ -120,6 +120,7 @@ pub mod des;
 pub mod dist;
 pub mod evaluator;
 pub mod experiments;
+pub mod fault;
 pub mod metrics;
 pub mod runtime;
 pub mod study;

@@ -12,7 +12,13 @@
 //!   control     closed-loop adaptive redundancy: online censored-MLE
 //!               estimation + re-planning against a hidden, optionally
 //!               drifting true spec (preset or spec.json), regret vs
-//!               the oracle plan → schema-validated CONTROL artifact
+//!               the oracle plan → schema-validated CONTROL artifact;
+//!               --live drives the real thread-backed coordinator
+//!               (optionally under a --fault plan)
+//!   chaos       replay a declarative fault plan (preset or spec.json)
+//!               through the fault-aware event engine: crashes,
+//!               respawns, relaunches, degradations, MTTR and
+//!               rounds-to-recover → schema-validated CHAOS artifact
 //!   simulate    Monte-Carlo + event-engine simulation of one scenario
 //!   experiment  regenerate paper figures/tables (fig2|policies|spectrum|
 //!               ablations|extensions|control|live|all)
@@ -56,6 +62,9 @@ USAGE:
                       [--seed S] [--quiet]
   batchrep control    <smoke|drift|spec.json> [--fast] [--out CONTROL.json]
                       [--threads K] [--seed S] [--quiet]
+                      [--live] [--fault <crash|respawn|slowdown|mixed|plan.json>]
+  batchrep chaos      <smoke|fig2|spec.json> [--fast] [--out CHAOS.json]
+                      [--threads K] [--seed S] [--quiet]
   batchrep simulate   [--config f] [--n-workers 12] [--n-batches 4] [--policy p]
                       [--service spec] [--trials 100000] [--seed 42]
                       [--overlapping] [--no-cancel] [--speculative 1.5]
@@ -73,7 +82,8 @@ USAGE:
 
 Config keys (file or --key value): n_workers, n_batches, policy, service,
 batch_model, overlapping, cancellation, speculative, k_of_b, seed, trials,
-artifacts_dir, time_scale, kernel, dim, n_samples, steps.
+artifacts_dir, time_scale, kernel, dim, n_samples, steps, relaunch_factor,
+max_relaunches.
 ";
 
 fn main() {
@@ -93,7 +103,7 @@ fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
     let keys = [
         "n_workers", "n_batches", "policy", "service", "batch_model", "speculative",
         "k_of_b", "seed", "trials", "artifacts_dir", "time_scale", "kernel", "dim",
-        "n_samples", "steps",
+        "n_samples", "steps", "relaunch_factor", "max_relaunches",
     ];
     for key in keys {
         let dashed = key.replace('_', "-");
@@ -125,6 +135,7 @@ fn run() -> anyhow::Result<()> {
         Some("evaluate") => cmd_evaluate(&args),
         Some("study") => cmd_study(&args),
         Some("control") => cmd_control(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("train") => cmd_train(&args),
@@ -413,12 +424,22 @@ fn cmd_control(args: &Args) -> anyhow::Result<()> {
     use batchrep::control::ControlSpec;
     let which = args.positionals.get(1).cloned().ok_or_else(|| {
         anyhow::anyhow!(
-            "usage: batchrep control <spec.json|{}> [--fast] [--out f]",
+            "usage: batchrep control <spec.json|{}> [--fast] [--out f] [--live [--fault p]]",
             ControlSpec::preset_names().join("|")
         )
     })?;
     let fast = args.flag("fast") || std::env::var("BATCHREP_BENCH_FAST").is_ok();
     let quiet = args.flag("quiet");
+    let live = args.flag("live");
+    let fault_which = args.get::<String>("fault")?;
+    anyhow::ensure!(
+        fault_which.is_none() || live,
+        "--fault requires --live (the simulated study has no cluster to inject into)"
+    );
+    let fault = match &fault_which {
+        Some(w) => Some(batchrep::fault::FaultPlan::load(w)?),
+        None => None,
+    };
     let threads = args.get_or::<usize>("threads", batchrep::evaluator::auto_threads())?;
     let seed = args.get::<u64>("seed")?;
     let mut spec = ControlSpec::load(&which)?;
@@ -428,13 +449,19 @@ fn cmd_control(args: &Args) -> anyhow::Result<()> {
     if fast {
         spec = spec.fast();
     }
-    let out = args.get_or::<String>("out", format!("CONTROL_{}.json", spec.name))?;
+    let default_out = if live {
+        format!("CONTROL_{}_live.json", spec.name)
+    } else {
+        format!("CONTROL_{}.json", spec.name)
+    };
+    let out = args.get_or::<String>("out", default_out)?;
     args.finish()?;
 
     println!(
-        "control '{}': N={} objective={} fit={} prior={} phases={} epochs={} \
-         rounds/epoch={} replicates={} seed={}",
+        "control '{}'{}: N={} objective={} fit={} prior={} phases={} epochs={} \
+         rounds/epoch={} replicates={} seed={}{}",
         spec.name,
+        if live { " (live coordinator)" } else { "" },
         spec.n_workers,
         spec.objective.name(),
         spec.kind.name(),
@@ -442,11 +469,16 @@ fn cmd_control(args: &Args) -> anyhow::Result<()> {
         spec.phases.len(),
         spec.epochs,
         spec.rounds_per_epoch,
-        spec.replicates,
-        spec.seed
+        if live { 1 } else { spec.replicates },
+        spec.seed,
+        fault.as_ref().map(|p| format!(" fault-plan={}", p.name)).unwrap_or_default()
     );
     let timer = batchrep::util::Timer::start();
-    let report = spec.run(threads)?;
+    let report = if live {
+        batchrep::control::run_live(&spec, fault.as_ref())?
+    } else {
+        spec.run(threads)?
+    };
     let elapsed = timer.secs();
 
     let path = std::path::Path::new(&out);
@@ -480,6 +512,82 @@ fn cmd_control(args: &Args) -> anyhow::Result<()> {
         elapsed
     );
     println!("control artifact written to {out} (schema v{})", batchrep::control::SCHEMA_VERSION);
+    Ok(())
+}
+
+/// The chaos gate: replay a declarative fault plan through the
+/// fault-aware event engine across replicates, aggregate the recovery
+/// trajectory (MTTR, rounds-to-recover, degraded throughput), write a
+/// CHAOS artifact, and fail if it does not validate against the schema.
+/// Bit-deterministic per seed for any `--threads`.
+fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
+    use batchrep::fault::ChaosSpec;
+    let which = args.positionals.get(1).cloned().ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: batchrep chaos <spec.json|{}> [--fast] [--out f]",
+            ChaosSpec::preset_names().join("|")
+        )
+    })?;
+    let fast = args.flag("fast") || std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let quiet = args.flag("quiet");
+    let threads = args.get_or::<usize>("threads", batchrep::evaluator::auto_threads())?;
+    let seed = args.get::<u64>("seed")?;
+    let mut spec = ChaosSpec::load(&which)?;
+    if let Some(s) = seed {
+        spec.seed = s;
+    }
+    if fast {
+        spec = spec.fast();
+    }
+    let out = args.get_or::<String>("out", format!("CHAOS_{}.json", spec.name))?;
+    args.finish()?;
+
+    println!(
+        "chaos '{}': N={} B={} service={} plan={} ({} events) rounds={} replicates={} seed={}",
+        spec.name,
+        spec.n_workers,
+        spec.n_batches,
+        spec.service.name(),
+        spec.plan.name,
+        spec.plan.events.len(),
+        spec.rounds,
+        spec.replicates,
+        spec.seed
+    );
+    let timer = batchrep::util::Timer::start();
+    let report = batchrep::fault::run_chaos(&spec, threads)?;
+    let elapsed = timer.secs();
+
+    let path = std::path::Path::new(&out);
+    report.write(path)?;
+    // The CI gate: a malformed artifact is an error, not a warning.
+    batchrep::fault::validate_file(path)?;
+
+    if !quiet {
+        let mut t = Table::new(
+            &format!("chaos '{}' — fault totals and recovery", spec.name),
+            &["metric", "value"],
+        );
+        t.row(vec!["crashes".into(), report.total_crashes.to_string()]);
+        t.row(vec!["respawns".into(), report.total_respawns.to_string()]);
+        t.row(vec!["relaunches".into(), report.total_relaunches.to_string()]);
+        t.row(vec!["degradations".into(), report.total_degradations.to_string()]);
+        t.row(vec!["dropped tasks".into(), report.total_dropped.to_string()]);
+        t.row(vec!["MTTR (rounds)".into(), fmt_f(report.mttr_rounds, 2)]);
+        t.row(vec!["rounds to recover".into(), report.rounds_to_recover.to_string()]);
+        t.row(vec!["degraded round frac".into(), fmt_f(report.degraded_round_frac, 3)]);
+        t.row(vec![
+            "mean completion (normal)".into(),
+            fmt_f(report.mean_completion_normal, 4),
+        ]);
+        t.row(vec![
+            "mean completion (degraded)".into(),
+            fmt_f(report.mean_completion_degraded, 4),
+        ]);
+        t.row(vec!["elapsed".into(), format!("{elapsed:.3}s")]);
+        t.print();
+    }
+    println!("chaos artifact written to {out} (schema v{})", batchrep::fault::SCHEMA_VERSION);
     Ok(())
 }
 
@@ -677,18 +785,20 @@ fn cmd_conformance(args: &Args) -> anyhow::Result<()> {
     t.row(vec!["des <-> des-reference".into(), report.des_reference.to_string()]);
     t.row(vec!["des <-> live".into(), report.des_live.to_string()]);
     t.row(vec!["live-crash <-> analytic".into(), report.live_crash.to_string()]);
+    t.row(vec!["live <-> des-fault".into(), report.live_des_fault.to_string()]);
     t.print();
     println!(
         "conformance: {} scenarios ({} corpus replays), {} cells agree \
          (worst gap/tol {:.3}); heterogeneous-speed analytic cells: {}, \
-         live k-of-B cells: {}, live-crash cells: {}",
+         live k-of-B cells: {}, live-crash cells: {}, live fault-plan cells: {}",
         report.scenarios,
         report.corpus_replayed,
         report.cells,
         report.worst_gap_over_tol,
         report.hetero_analytic_cells,
         report.live_k_of_b_cells,
-        report.live_crash
+        report.live_crash,
+        report.live_des_fault
     );
     Ok(())
 }

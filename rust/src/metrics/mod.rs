@@ -27,6 +27,29 @@ pub struct JobRecord {
     pub cancelled: u64,
 }
 
+/// Run-wide totals of fault and recovery events (the sum of every
+/// round's [`crate::coordinator::RoundEvents`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultTotals {
+    /// Worker crashes observed (hand-armed or plan-scheduled).
+    pub crashes: u64,
+    /// Dead workers respawned.
+    pub respawns: u64,
+    /// Speculative deadline relaunches dispatched.
+    pub relaunches: u64,
+    /// Degraded-mode re-plans (assignment rebuilt onto survivors).
+    pub degradations: u64,
+    /// Tasks dropped before dispatch by the fault plan.
+    pub dropped: u64,
+}
+
+impl FaultTotals {
+    /// Whether any fault-related event occurred during the run.
+    pub fn any(&self) -> bool {
+        self.crashes + self.respawns + self.relaunches + self.degradations + self.dropped > 0
+    }
+}
+
 /// Aggregated metrics over a run.
 #[derive(Debug, Clone)]
 pub struct RunMetrics {
@@ -34,6 +57,7 @@ pub struct RunMetrics {
     wall: Welford,
     injected: Welford,
     hist: LogHistogram,
+    faults: FaultTotals,
 }
 
 impl Default for RunMetrics {
@@ -50,7 +74,23 @@ impl RunMetrics {
             wall: Welford::new(),
             injected: Welford::new(),
             hist: LogHistogram::for_latency(),
+            faults: FaultTotals::default(),
         }
+    }
+
+    /// Fold one round's fault/recovery event counters into the run
+    /// totals.
+    pub fn note_fault_events(&mut self, e: &crate::coordinator::RoundEvents) {
+        self.faults.crashes += e.crashes;
+        self.faults.respawns += e.respawns;
+        self.faults.relaunches += e.relaunches;
+        self.faults.degradations += e.degradations;
+        self.faults.dropped += e.dropped;
+    }
+
+    /// Run-wide fault/recovery totals.
+    pub fn fault_totals(&self) -> FaultTotals {
+        self.faults
     }
 
     /// Record a completed job.
@@ -135,6 +175,14 @@ impl RunMetrics {
         t.row(vec!["tasks dispatched".into(), d.to_string()]);
         t.row(vec!["redundant arrivals".into(), r.to_string()]);
         t.row(vec!["tasks cancelled".into(), c.to_string()]);
+        if self.faults.any() {
+            let f = &self.faults;
+            t.row(vec!["worker crashes".into(), f.crashes.to_string()]);
+            t.row(vec!["worker respawns".into(), f.respawns.to_string()]);
+            t.row(vec!["deadline relaunches".into(), f.relaunches.to_string()]);
+            t.row(vec!["degraded re-plans".into(), f.degradations.to_string()]);
+            t.row(vec!["tasks dropped".into(), f.dropped.to_string()]);
+        }
         t
     }
 
@@ -195,6 +243,26 @@ mod tests {
         assert!(t.to_markdown().contains("mean wall completion"));
         let rt = m.records_table("jobs");
         assert_eq!(rt.rows.len(), 1);
+    }
+
+    #[test]
+    fn fault_totals_accumulate_and_render() {
+        let mut m = RunMetrics::new();
+        m.push(rec(0, 0.5));
+        assert!(!m.fault_totals().any());
+        assert!(!m.summary_table("run").to_markdown().contains("deadline relaunches"));
+        let e = crate::coordinator::RoundEvents {
+            crashes: 1,
+            respawns: 1,
+            relaunches: 2,
+            degradations: 0,
+            dropped: 3,
+        };
+        m.note_fault_events(&e);
+        m.note_fault_events(&e);
+        let f = m.fault_totals();
+        assert_eq!((f.crashes, f.respawns, f.relaunches, f.dropped), (2, 2, 4, 6));
+        assert!(m.summary_table("run").to_markdown().contains("deadline relaunches"));
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::util::rng::Rng;
 use std::sync::Arc;
 
 /// Parameters of the two-state Markov-modulated slowdown process.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MarkovTraceParams {
     /// Probability of entering congestion from the normal state, per draw.
     pub p_enter: f64,
@@ -34,7 +34,13 @@ impl Default for MarkovTraceParams {
         // ~5% of time congested in bursts of mean length 20, 8× slower —
         // the "contention + I/O burst" regime described in the paper's
         // straggler citations (Dean & Barroso, The Tail at Scale).
-        Self { p_enter: 1.0 / 380.0, p_exit: 1.0 / 20.0, slowdown: 8.0, base_mu: 1.0, base_delta: 0.2 }
+        Self {
+            p_enter: 1.0 / 380.0,
+            p_exit: 1.0 / 20.0,
+            slowdown: 8.0,
+            base_mu: 1.0,
+            base_delta: 0.2,
+        }
     }
 }
 

@@ -8,6 +8,8 @@ use batchrep::assignment::Policy;
 use batchrep::config::SystemConfig;
 use batchrep::coordinator::{Backend, Coordinator};
 use batchrep::dist::ServiceSpec;
+use batchrep::fault::{FaultEvent, FaultPlan};
+use batchrep::metrics::FaultTotals;
 
 fn have_artifacts() -> bool {
     let ok = batchrep::runtime::default_artifact_dir()
@@ -124,4 +126,114 @@ fn cancellation_flag_controls_cancelled_counts() {
     // arrives late: all redundancy shows up as redundant, none cancelled.
     assert_eq!(cancelled, 0);
     assert_eq!(redundant, 10 * (6 - 2));
+}
+
+/// Run `rounds` training rounds with a fault plan installed; return the
+/// fault totals plus the end-of-run live count and batch count.
+fn run_with_plan(
+    mut cfg: SystemConfig,
+    plan: &FaultPlan,
+    rounds: u64,
+) -> (FaultTotals, usize, usize) {
+    cfg.n_samples = 60;
+    let mut c = Coordinator::new(cfg, Backend::Mock).unwrap();
+    c.install_fault_plan(plan).unwrap();
+    let report = c.run_training(rounds, 0.1).unwrap();
+    assert_eq!(report.loss_curve.len(), rounds as usize, "a round was lost to a fault");
+    let totals = c.metrics.fault_totals();
+    let live = c.live_workers();
+    let b = c.assignment().n_batches;
+    c.shutdown();
+    (totals, live, b)
+}
+
+#[test]
+fn fault_schedule_is_deterministic_per_seed() {
+    // The plan's crash/respawn/drop schedule is seeded, not wall-clock
+    // driven: two runs with the same config + plan must observe the
+    // identical schedule. (Relaunches are excluded — they fire on real
+    // deadline timeouts, which may differ across runs at the margin.)
+    let plan = FaultPlan::preset("respawn").unwrap();
+    let (a, live_a, _) = run_with_plan(pjrt_cfg(8, 4), &plan, 12);
+    let (b, live_b, _) = run_with_plan(pjrt_cfg(8, 4), &plan, 12);
+    assert_eq!(
+        (a.crashes, a.respawns, a.degradations, a.dropped),
+        (b.crashes, b.respawns, b.degradations, b.dropped),
+        "fault schedule diverged across identically-seeded runs"
+    );
+    // The preset crashes workers 0 (round 2, back after 2) and 1
+    // (round 6, back after 3): both transients fire and both heal
+    // within 12 rounds.
+    assert_eq!(a.crashes, 2);
+    assert_eq!(a.respawns, 2);
+    assert_eq!(live_a, 8);
+    assert_eq!(live_b, 8);
+}
+
+#[test]
+fn deadline_relaunch_keeps_winner_accounting_exact() {
+    // Drop-heavy plan: every worker drops 90% of its tasks before
+    // dispatch, so batches routinely lose all replicas and only the
+    // speculative deadline relaunch can complete the round. Whatever
+    // the relaunch count, per-round accounting must stay exact: every
+    // dispatched replica is the winner, redundant, or cancelled —
+    // dropped tasks were never dispatched and relaunches are ordinary
+    // dispatches.
+    let mut cfg = pjrt_cfg(6, 2);
+    cfg.n_samples = 60;
+    let plan = FaultPlan {
+        name: "drop-heavy".into(),
+        seed: 11,
+        events: (0..6).map(|w| (w, FaultEvent::TaskDrop { prob: 0.9 })).collect(),
+    };
+    let mut c = Coordinator::new(cfg, Backend::Mock).unwrap();
+    c.install_fault_plan(&plan).unwrap();
+    c.run_training(10, 0.1).unwrap();
+    let totals = c.metrics.fault_totals();
+    for r in c.metrics.records() {
+        assert_eq!(
+            r.dispatched,
+            2 + r.redundant + r.cancelled,
+            "round {}: dispatched ≠ winners + redundant + cancelled",
+            r.job_id
+        );
+    }
+    c.shutdown();
+    assert!(totals.dropped > 0, "the drop plan never fired");
+    assert!(
+        totals.relaunches > 0,
+        "90% drops on every replica of every batch must force at least one relaunch"
+    );
+}
+
+#[test]
+fn permanent_crash_degrades_onto_survivors() {
+    // N = B = 4 (no replication): a permanent crash leaves one batch
+    // with zero live replicas, so the coordinator must re-plan onto the
+    // 3 survivors. degraded_batch_count(4, 3, 4) = 2 — the largest
+    // feasible divisor of the unit count.
+    let plan = FaultPlan {
+        name: "perma".into(),
+        seed: 5,
+        events: vec![(0, FaultEvent::PermanentCrash { round: 2, fraction: 0.5 })],
+    };
+    let (totals, live, b) = run_with_plan(pjrt_cfg(4, 4), &plan, 8);
+    assert_eq!(totals.crashes, 1);
+    assert_eq!(totals.respawns, 0, "a permanent crash must never respawn");
+    assert!(totals.degradations >= 1, "no degraded re-plan was recorded");
+    assert_eq!(live, 3);
+    assert_eq!(b, 2, "expected a re-plan to the largest feasible batch count");
+}
+
+#[test]
+fn fig2_scale_transient_crashes_complete_every_round() {
+    // The acceptance scenario: fig2 scale (N=24, B=6) under the
+    // respawn preset — every round completes, both transients heal,
+    // and the cluster ends fully live.
+    let plan = FaultPlan::preset("respawn").unwrap();
+    let (totals, live, b) = run_with_plan(pjrt_cfg(24, 6), &plan, 12);
+    assert_eq!(totals.crashes, 2);
+    assert_eq!(totals.respawns, 2);
+    assert_eq!(live, 24);
+    assert_eq!(b, 6, "transient crashes must not trigger a degraded re-plan here");
 }
