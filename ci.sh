@@ -54,6 +54,20 @@ else
   cargo run --release -- chaos smoke --fast --quiet --out ../CHAOS_smoke.json
 fi
 
+echo "== integrity smoke (m-of-g voting vs silent corruption) =="
+# Sweeps vote size m x corruption probability through the verified
+# event engine at --fast budgets: the certainly-corrupt column must
+# reach detection rate 1.0 with zero false-positive flags, and the
+# INTEGRITY artifact must schema-validate (the subcommand re-reads the
+# file and fails on a malformed schema). Same no-clobber rule as the
+# bench JSONs: a full-budget artifact at the repo root is never
+# overwritten by smoke numbers.
+if [ -f ../INTEGRITY_smoke.json ]; then
+  cargo run --release -- integrity smoke --fast --quiet --out target/INTEGRITY_smoke.json
+else
+  cargo run --release -- integrity smoke --fast --quiet --out ../INTEGRITY_smoke.json
+fi
+
 echo "== study smoke (declarative sweep planner) =="
 # Compiles the smoke preset into a deduplicated plan, runs it on the
 # shared pool at --fast budgets, and schema-validates the STUDY artifact

@@ -278,6 +278,155 @@ pub fn sample_partial_completion(
     mins[(k - 1) as usize]
 }
 
+/// m-of-g **verified** completion — the result-integrity closed form:
+/// replica voting waits for the `m`-th replica of every batch instead
+/// of the first, and the job completes at the `k`-th finished batch
+/// (`k = B` = full completion; `m = 1` recovers
+/// [`partial_completion_stats`] / [`completion_time_stats`]).
+///
+/// Under the size-scaled model with the paper normalization `U = N`,
+/// one replica of a batch takes `s∆ + Exp(λ)` with `s = N/B` and
+/// `λ = µ/s`. Write `u = e^{−λt}` for `t` measured past the `s∆`
+/// shift. The per-replica CDF is `1 − u`; the per-batch (m-of-g) CDF
+/// is the binomial tail `Σ_{j≥m} C(g,j) (1−u)^j u^{g−j}` — a
+/// degree-`g` polynomial in `u` — and the job (k-of-B) CDF is the
+/// binomial tail of *that* polynomial, of degree `g·B = N`. Writing
+/// the composed CDF as `1 + Σ_{i≥1} cᵢ uⁱ`, tail integration gives
+/// exactly
+/// `E[T] − s∆ = (1/λ) Σᵢ (−cᵢ)/i` and
+/// `E[(T − s∆)²] = (2/λ²) Σᵢ (−cᵢ)/i²`.
+///
+/// The expansion is exact but its binomial coefficients alternate in
+/// sign, so the form is restricted to `N ≤ 32` where every
+/// intermediate coefficient is exactly representable in f64 —
+/// simulation backends cover larger clusters.
+pub fn verified_completion_stats(
+    n: u64,
+    b: u64,
+    m: u64,
+    k: u64,
+    spec: &ServiceSpec,
+) -> anyhow::Result<CtStats> {
+    anyhow::ensure!(n >= 1 && b >= 1 && b <= n && n % b == 0, "need B | N");
+    anyhow::ensure!(k >= 1 && k <= b, "need 1 <= k <= B");
+    let g = n / b;
+    anyhow::ensure!(
+        m >= 1 && m <= g,
+        "verified completion needs 1 <= m <= g = N/B (N={n}, B={b}, m={m})"
+    );
+    anyhow::ensure!(
+        n <= 32,
+        "verified closed form limited to N <= 32 (exact polynomial coefficients); got N={n}"
+    );
+    let (mu, delta) = exp_family(spec)
+        .ok_or_else(|| anyhow::anyhow!("closed form only for exp/sexp, got {}", spec.name()))?;
+    let s = g as f64;
+    let lambda = mu / s;
+    // Per-replica CDF as a polynomial in u: 1 − u.
+    let replica = vec![1.0, -1.0];
+    let batch = binomial_tail_poly(&replica, g as usize, m as usize);
+    let total = binomial_tail_poly(&batch, b as usize, k as usize);
+    // total[0] = 1 (the CDF reaches 1 as t → ∞, u → 0); integrate the
+    // survival function term by term: ∫₀¹ u^{i−1} du = 1/i and
+    // ∫₀¹ u^{i−1}(−ln u) du = 1/i².
+    let mut mean_acc = 0.0;
+    let mut m2_acc = 0.0;
+    for (i, &c) in total.iter().enumerate().skip(1) {
+        mean_acc -= c / i as f64;
+        m2_acc -= c / (i as f64 * i as f64);
+    }
+    let mean_past_shift = mean_acc / lambda;
+    let m2 = 2.0 * m2_acc / (lambda * lambda);
+    Ok(CtStats {
+        mean: s * delta + mean_past_shift,
+        var: m2 - mean_past_shift * mean_past_shift,
+    })
+}
+
+/// Expected redundancy bill of one m-of-g verified job (full
+/// completion, balanced disjoint, `U = N`), as `(busy, wasted)`
+/// worker-seconds. Every replica of a batch runs until the batch
+/// verifies at its m-th order statistic `T₍m₎`: the `m` winners
+/// contribute their own finish times `T₍1₎ … T₍m₎`, the `g − m` losers
+/// are cancelled at `T₍m₎` (they are the `wasted` share), with
+/// `E[T₍i₎] = s∆ + (H_g − H_{g−i})·s/µ`.
+pub fn verified_cost_stats(
+    n: u64,
+    b: u64,
+    m: u64,
+    spec: &ServiceSpec,
+) -> anyhow::Result<(f64, f64)> {
+    anyhow::ensure!(n >= 1 && b >= 1 && b <= n && n % b == 0, "need B | N");
+    let g = n / b;
+    anyhow::ensure!(
+        m >= 1 && m <= g,
+        "verified cost needs 1 <= m <= g = N/B (N={n}, B={b}, m={m})"
+    );
+    let (mu, delta) = exp_family(spec)
+        .ok_or_else(|| anyhow::anyhow!("closed form only for exp/sexp, got {}", spec.name()))?;
+    let s = g as f64;
+    let e_order = |i: u64| s * delta + (harmonic(g) - harmonic(g - i)) * s / mu;
+    let e_m = e_order(m);
+    let mut busy_per_batch = (g - m) as f64 * e_m;
+    for i in 1..=m {
+        busy_per_batch += e_order(i);
+    }
+    let wasted_per_batch = (g - m) as f64 * e_m;
+    Ok((b as f64 * busy_per_batch, b as f64 * wasted_per_batch))
+}
+
+/// `p(u) · q(u)` for coefficient vectors indexed by power of `u`.
+fn poly_mul(p: &[f64], q: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; p.len() + q.len() - 1];
+    for (i, &pi) in p.iter().enumerate() {
+        if pi == 0.0 {
+            continue;
+        }
+        for (j, &qj) in q.iter().enumerate() {
+            out[i + j] += pi * qj;
+        }
+    }
+    out
+}
+
+/// The binomial tail `Σ_{j=m}^{g} C(g,j) A(u)^j (1 − A(u))^{g−j}` as a
+/// polynomial in `u` — the CDF of the m-th order statistic of `g`
+/// i.i.d. variables whose CDF is the polynomial `A(u)`.
+fn binomial_tail_poly(a: &[f64], g: usize, m: usize) -> Vec<f64> {
+    let mut one_minus = a.iter().map(|&c| -c).collect::<Vec<f64>>();
+    one_minus[0] += 1.0;
+    // Powers A^j and (1−A)^j for j = 0..=g, then the weighted sum.
+    let mut pow_a: Vec<Vec<f64>> = vec![vec![1.0]];
+    let mut pow_c: Vec<Vec<f64>> = vec![vec![1.0]];
+    for j in 1..=g {
+        pow_a.push(poly_mul(&pow_a[j - 1], a));
+        pow_c.push(poly_mul(&pow_c[j - 1], &one_minus));
+    }
+    let mut out: Vec<f64> = Vec::new();
+    for j in m..=g {
+        let term = poly_mul(&pow_a[j], &pow_c[g - j]);
+        if out.len() < term.len() {
+            out.resize(term.len(), 0.0);
+        }
+        let w = binom(g, j);
+        for (i, &c) in term.iter().enumerate() {
+            out[i] += w * c;
+        }
+    }
+    out
+}
+
+/// `C(n, k)` by the multiplicative recurrence (exact in f64 for the
+/// `n ≤ 32` range the verified closed form is restricted to).
+fn binom(n: usize, k: usize) -> f64 {
+    let k = k.min(n - k);
+    let mut c = 1.0;
+    for i in 0..k {
+        c = c * (n - i) as f64 / (i + 1) as f64;
+    }
+    c
+}
+
 /// Mean and variance of `max{X₁, …, X_k}` for independent `X_i ~
 /// Exp(rates[i])`, by inclusion–exclusion:
 /// `E[max] = Σ_{∅≠S} (−1)^{|S|+1} / λ_S`,
@@ -835,6 +984,93 @@ mod tests {
                 theory.mean
             );
         }
+    }
+
+    #[test]
+    fn verified_stats_m1_pins_to_the_unverified_forms() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.05);
+        for (n, b) in [(24u64, 4u64), (12, 3), (16, 16), (8, 1)] {
+            let v = verified_completion_stats(n, b, 1, b, &spec).unwrap();
+            let full = completion_time_stats(n, b, &spec).unwrap();
+            assert!((v.mean - full.mean).abs() < 1e-9, "N={n} B={b}");
+            assert!((v.var - full.var).abs() < 1e-9, "N={n} B={b}");
+        }
+        for (n, b, k) in [(24u64, 4u64, 2u64), (12, 6, 5), (32, 8, 3)] {
+            let v = verified_completion_stats(n, b, 1, k, &spec).unwrap();
+            let part = partial_completion_stats(n, b, k, &spec).unwrap();
+            assert!((v.mean - part.mean).abs() < 1e-9, "N={n} B={b} k={k}");
+            assert!((v.var - part.var).abs() < 1e-9, "N={n} B={b} k={k}");
+        }
+        // Degenerate single replica of a single batch is a plain
+        // shifted exponential: mean s∆ + 1/λ, var 1/λ².
+        let v = verified_completion_stats(1, 1, 1, 1, &spec).unwrap();
+        assert!((v.mean - (0.05 + 1.0)).abs() < 1e-12);
+        assert!((v.var - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn verified_stats_refuse_out_of_range_shapes() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.05);
+        // m beyond the replication degree g = N/B.
+        assert!(verified_completion_stats(24, 24, 2, 24, &spec).is_err());
+        assert!(verified_completion_stats(24, 4, 7, 4, &spec).is_err());
+        assert!(verified_completion_stats(24, 4, 0, 4, &spec).is_err());
+        assert!(verified_completion_stats(24, 4, 2, 0, &spec).is_err());
+        assert!(verified_completion_stats(24, 4, 2, 5, &spec).is_err());
+        // Exactness guard: the polynomial form stops at N = 32.
+        assert!(verified_completion_stats(64, 8, 2, 8, &spec).is_err());
+        assert!(verified_completion_stats(32, 8, 2, 8, &spec).is_ok());
+    }
+
+    #[test]
+    fn verified_stats_match_montecarlo() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.05);
+        let mut rng = crate::util::rng::Rng::new(97);
+        for (n, b, m, k) in [(24u64, 4u64, 2u64, 4u64), (24, 4, 3, 4), (12, 3, 2, 2)] {
+            let g = n / b;
+            let s = g as f64;
+            let lambda = 1.0 / s;
+            let theory = verified_completion_stats(n, b, m, k, &spec).unwrap();
+            let n_trials = 60_000;
+            let mut acc = 0.0;
+            for _ in 0..n_trials {
+                let mut batch_times: Vec<f64> = (0..b)
+                    .map(|_| {
+                        let mut xs: Vec<f64> = (0..g)
+                            .map(|_| -rng.f64_open0().ln() / lambda)
+                            .collect();
+                        xs.sort_by(f64::total_cmp);
+                        s * 0.05 + xs[m as usize - 1]
+                    })
+                    .collect();
+                batch_times.sort_by(f64::total_cmp);
+                acc += batch_times[k as usize - 1];
+            }
+            let mc = acc / n_trials as f64;
+            assert!(
+                (mc - theory.mean).abs() < 0.03 * theory.mean.max(1.0),
+                "N={n} B={b} m={m} k={k}: mc {mc} vs theory {}",
+                theory.mean
+            );
+        }
+    }
+
+    #[test]
+    fn verified_cost_m1_is_the_cloned_redundancy_bill() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        // m = 1: every replica runs until the batch's first finisher,
+        // so busy = B · g · E[T₍1₎] with E[T₍1₎] = s∆ + s/(gµ).
+        let (n, b) = (12u64, 3u64);
+        let g = n / b;
+        let s = g as f64;
+        let e_min = s * 0.2 + s / (g as f64 * 1.0);
+        let (busy, wasted) = verified_cost_stats(n, b, 1, &spec).unwrap();
+        assert!((busy - b as f64 * g as f64 * e_min).abs() < 1e-9);
+        assert!((wasted - b as f64 * (g - 1) as f64 * e_min).abs() < 1e-9);
+        // m = g: nothing is cancelled, wasted is exactly zero.
+        let (_, wasted_all) = verified_cost_stats(n, b, g, &spec).unwrap();
+        assert_eq!(wasted_all, 0.0);
+        assert!(verified_cost_stats(n, b, g + 1, &spec).is_err());
     }
 
     #[test]

@@ -62,6 +62,16 @@ pub struct SystemConfig {
     /// Live runtime: maximum deadline relaunches per batch per round
     /// before the round fails with a liveness error.
     pub max_relaunches: u64,
+    /// Result-integrity verification level: every batch waits for its
+    /// m-th replica and the coordinator votes on the collected values;
+    /// 0 = off (paper semantics, first replica wins). Nonzero values
+    /// set the scenario's `verify_m` field (must be ≤ the minimum
+    /// replication degree — checked when the scenario is built).
+    pub verify_m: usize,
+    /// Strikes (flagged disagreements) before a worker is quarantined:
+    /// marked dead, excluded from dispatch, and handed to the respawn
+    /// machinery. Strikes reset when the worker respawns.
+    pub verify_strikes: u64,
 }
 
 impl Default for SystemConfig {
@@ -86,6 +96,8 @@ impl Default for SystemConfig {
             steps: 20,
             relaunch_factor: 3.0,
             max_relaunches: 5,
+            verify_m: 0,
+            verify_strikes: 2,
         }
     }
 }
@@ -144,6 +156,8 @@ impl SystemConfig {
             "steps" => self.steps = want_i()? as u64,
             "relaunch_factor" => self.relaunch_factor = want_f()?,
             "max_relaunches" => self.max_relaunches = want_i()? as u64,
+            "verify_m" => self.verify_m = want_i()? as usize,
+            "verify_strikes" => self.verify_strikes = want_i()? as u64,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -172,6 +186,10 @@ impl SystemConfig {
             "relaunch_factor must be finite and > 1"
         );
         anyhow::ensure!(self.max_relaunches >= 1, "max_relaunches must be >= 1");
+        anyhow::ensure!(
+            self.verify_m == 0 || self.verify_strikes >= 1,
+            "verify_strikes must be >= 1 when verify_m is enabled"
+        );
         Ok(())
     }
 
@@ -219,6 +237,9 @@ impl SystemConfig {
         .with_redundancy(redundancy);
         if self.k_of_b > 0 {
             scn = scn.with_k_of_b(self.k_of_b)?;
+        }
+        if self.verify_m > 0 {
+            scn = scn.with_verify_m(self.verify_m)?;
         }
         Ok(scn)
     }
@@ -323,6 +344,29 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = SystemConfig { max_relaunches: 0, ..SystemConfig::default() };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn verify_keys_parse_validate_and_flow_into_the_scenario() {
+        let doc = toml::parse("verify_m = 2\nverify_strikes = 3").unwrap();
+        let mut cfg = SystemConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.verify_m, 2);
+        assert_eq!(cfg.verify_strikes, 3);
+        // Default 8/4 layout has g = 2, so verify_m = 2 is accepted.
+        assert_eq!(cfg.scenario().unwrap().verify_m, Some(2));
+        let off = SystemConfig::default();
+        assert_eq!(off.scenario().unwrap().verify_m, None);
+        // g = 1 layouts refuse verification at scenario build, naming
+        // the field (the satellite's "g=1 with verify_m: 2" case).
+        let lone = SystemConfig { n_batches: 8, verify_m: 2, ..SystemConfig::default() };
+        let err = lone.scenario().unwrap_err().to_string();
+        assert!(err.contains("Scenario::verify_m"), "{err}");
+        let bad = SystemConfig { verify_m: 2, verify_strikes: 0, ..SystemConfig::default() };
+        assert!(bad.validate().is_err());
+        // strikes knob is inert while verification is off.
+        let inert = SystemConfig { verify_strikes: 0, ..SystemConfig::default() };
+        assert!(inert.validate().is_ok());
     }
 
     #[test]

@@ -26,7 +26,16 @@
 //!   (not just a replica coin flip): its thread exits, the survivors
 //!   must still complete every round, and their post-crash completion
 //!   must match [`analysis::assignment_stats`] on the reduced
-//!   (one-replica-poorer) assignment.
+//!   (one-replica-poorer) assignment;
+//! * **Live ↔ DES corruption** — the same silent-corruption
+//!   [`crate::fault::FaultPlan`] drives the live coordinator's m-of-g
+//!   vote and the corruption-aware DES fault model over the same round
+//!   horizon (quarantine disarmed on both sides so the completion law
+//!   is stationary), and the two mean verified completions must agree.
+//!
+//! Scenarios carrying [`Scenario::verify_m`] flow through the
+//! analytic ↔ MC/DES and engine-pair cells like any other: the verified
+//! m-of-g closed form meets both simulators wherever its scope allows.
 //!
 //! Tolerances are **statistically sound**: each cell compares two mean
 //! estimates through an interval test — `|gap| ≤ z·√(sem_a² + sem_b²) +
@@ -179,8 +188,14 @@ pub struct MatrixReport {
     pub live_crash: u64,
     /// Live ↔ DES fault-plan cells (shared `FaultPlan` on both sides).
     pub live_des_fault: u64,
+    /// Live ↔ DES corruption cells (shared silent-corruption plan,
+    /// m-of-g voting on both sides).
+    pub live_des_corrupt: u64,
     /// Cells whose analytic leg used heterogeneous `worker_speeds`.
     pub hetero_analytic_cells: u64,
+    /// Analytic ↔ MC/DES cells whose scenario carried `verify_m` (the
+    /// m-of-g verified closed form against simulation).
+    pub verify_m_analytic_cells: u64,
     /// DES ↔ Live cells with a `k_of_b` target below `B`.
     pub live_k_of_b_cells: u64,
     /// Corpus cases replayed before the anchors and the random sweep.
@@ -200,6 +215,7 @@ enum Pair {
     DesLive,
     LiveCrash,
     LiveDesFault,
+    LiveDesCorrupt,
 }
 
 impl Pair {
@@ -212,6 +228,7 @@ impl Pair {
             Pair::DesLive => "des<->live",
             Pair::LiveCrash => "live-crash<->analytic",
             Pair::LiveDesFault => "live<->des-fault",
+            Pair::LiveDesCorrupt => "live<->des-corrupt",
         }
     }
 }
@@ -251,6 +268,11 @@ pub struct GeneratedCase {
     /// drives the live self-healing pipeline and the DES fault model,
     /// and their mean completions must agree.
     pub fault: bool,
+    /// Whether this case also runs a live↔DES corruption cell: the same
+    /// silent-corruption [`crate::fault::FaultPlan`] drives the live
+    /// m-of-g vote and the corruption-aware DES fault model, and their
+    /// mean verified completions must agree.
+    pub corrupt: bool,
 }
 
 /// Draw one valid scenario from the full cross-product the backends
@@ -291,10 +313,29 @@ pub fn gen_case(g: &mut Gen) -> GeneratedCase {
         scn = scn.with_speeds(speeds).expect("one positive speed per worker");
     }
     let fail_prob = if g.coin(0.2) { g.f64_in(0.05, 0.4) } else { 0.0 };
-    let live = g.coin(0.05);
-    let crash = g.coin(0.04);
-    let fault = g.coin(0.04);
-    GeneratedCase { scenario: scn, fail_prob, live, crash, fault }
+    // m-of-g verification: only where every batch can seat m votes and
+    // the DES evaluator accepts the combination (upfront, reliable).
+    // The live-side cells stay off for verified cases — the live↔DES
+    // integrity comparison has its own dedicated corruption cell.
+    let min_degree = (0..scn.assignment.n_batches)
+        .map(|b| scn.assignment.replication(b))
+        .min()
+        .unwrap_or(0);
+    let mut verified = false;
+    if g.coin(0.3)
+        && fail_prob == 0.0
+        && scn.redundancy == Redundancy::Upfront
+        && min_degree >= 2
+    {
+        let m = g.usize_in(2, min_degree);
+        scn = scn.with_verify_m(m).expect("2 <= m <= min replication degree by construction");
+        verified = true;
+    }
+    let live = g.coin(0.05) && !verified;
+    let crash = g.coin(0.04) && !verified;
+    let fault = g.coin(0.04) && !verified;
+    let corrupt = g.coin(0.04) && !verified;
+    GeneratedCase { scenario: scn, fail_prob, live, crash, fault, corrupt }
 }
 
 /// Human-readable cell context (embedded in every failure message so a
@@ -308,16 +349,18 @@ pub fn describe(case: &GeneratedCase) -> String {
         .unwrap_or_else(|| "homogeneous".into());
     format!(
         "N={} B={} policy={} service={} redundancy={:?} k_of_b={:?} speeds={speeds} \
-         fail_prob={:.3} crash={} fault={} seed={}",
+         verify_m={:?} fail_prob={:.3} crash={} fault={} corrupt={} seed={}",
         scn.n_workers(),
         scn.assignment.n_batches,
         scn.policy.name(),
         scn.service.spec.name(),
         scn.redundancy,
         scn.k_of_b,
+        scn.verify_m,
         case.fail_prob,
         case.crash,
         case.fault,
+        case.corrupt,
         scn.seed,
     )
 }
@@ -349,6 +392,7 @@ pub fn case_to_json(case: &GeneratedCase) -> Json {
         ("live", Json::from(case.live)),
         ("crash", Json::from(case.crash)),
         ("fault", Json::from(case.fault)),
+        ("corrupt", Json::from(case.corrupt)),
     ];
     if let Redundancy::Speculative { deadline_factor } = scn.redundancy {
         pairs.push(("speculative", Json::from(deadline_factor)));
@@ -358,6 +402,9 @@ pub fn case_to_json(case: &GeneratedCase) -> Json {
     }
     if let Some(speeds) = &scn.worker_speeds {
         pairs.push(("speeds", Json::Array(speeds.iter().map(|&s| Json::from(s)).collect())));
+    }
+    if let Some(m) = scn.verify_m {
+        pairs.push(("verify_m", Json::from(m)));
     }
     Json::obj(pairs)
 }
@@ -401,11 +448,15 @@ pub fn case_from_json(v: &Json) -> anyhow::Result<GeneratedCase> {
             .collect::<anyhow::Result<Vec<f64>>>()?;
         scn = scn.with_speeds(speeds)?;
     }
+    if let Some(m) = v.get("verify_m").and_then(Json::as_i64) {
+        scn = scn.with_verify_m(m as usize)?;
+    }
     let fail_prob = v.get("fail_prob").and_then(Json::as_f64).unwrap_or(0.0);
     let live = v.get("live").and_then(Json::as_bool).unwrap_or(false);
     let crash = v.get("crash").and_then(Json::as_bool).unwrap_or(false);
     let fault = v.get("fault").and_then(Json::as_bool).unwrap_or(false);
-    Ok(GeneratedCase { scenario: scn, fail_prob, live, crash, fault })
+    let corrupt = v.get("corrupt").and_then(Json::as_bool).unwrap_or(false);
+    Ok(GeneratedCase { scenario: scn, fail_prob, live, crash, fault, corrupt })
 }
 
 /// The default adversarial-corpus location: `$BATCHREP_CORPUS`, else
@@ -487,6 +538,15 @@ fn analytic_applies(scn: &Scenario) -> bool {
         return false;
     }
     let b = scn.assignment.n_batches;
+    if scn.verify_m.is_some() {
+        // The m-of-g verified closed form: homogeneous balanced
+        // disjoint with the paper normalization U = N and exact f64
+        // binomials (N <= 32); a k-of-B target composes freely.
+        return scn.worker_speeds.is_none()
+            && scn.assignment.is_balanced()
+            && scn.layout.n_units == scn.assignment.n_workers
+            && scn.n_workers() <= 32;
+    }
     if scn.worker_speeds.is_some() {
         // Exact (Exp) or bounded (SExp) — full completion only.
         !matches!(scn.k_of_b, Some(k) if k < b) && b <= 20
@@ -530,6 +590,18 @@ fn fault_applies(scn: &Scenario, fail_prob: f64) -> bool {
     crash_applies(scn, fail_prob)
         && scn.n_workers() >= 2
         && scn.layout.n_units == scn.n_workers()
+}
+
+/// Does a live↔DES corruption cell make sense here? The fault-cell
+/// scope (balanced disjoint, U = N, homogeneous, full completion,
+/// small cluster), plus: replication degree ≥ 3 — so after worker 0's
+/// corrupt replica is out-voted every batch still seats two honest
+/// agreeing votes — and no generator-set `verify_m` (the cell installs
+/// its own m = 2 on both sides).
+fn corrupt_applies(scn: &Scenario, fail_prob: f64) -> bool {
+    fault_applies(scn, fail_prob)
+        && scn.verify_m.is_none()
+        && scn.assignment.replication(0) >= 3
 }
 
 /// The live↔DES fault-plan cell: one shared [`FaultPlan`] — a transient
@@ -624,6 +696,102 @@ fn check_fault_cell(
     let live_est =
         Estimate { mean: live.mean(), sem: live.sem(), lo: live.mean(), hi: live.mean() };
     check_cell(Pair::LiveDesFault, &des_est, &live_est, opts.z, opts.live_floor, &ctx, report)
+}
+
+/// The live↔DES corruption cell: one shared silent-corruption
+/// [`FaultPlan`] — worker 0 perturbs every result from round 1 on —
+/// drives both the live coordinator's m-of-g vote (`verify_m = 2`) and
+/// the corruption-aware DES fault model over the same round horizon.
+/// Quarantine is disarmed on both sides (`verify_strikes = u64::MAX`):
+/// flag *timing* is arrival-order-dependent on the live side, so with
+/// strikes armed the two liveness trajectories could diverge; with
+/// strikes disarmed both sides accept every batch at its second honest
+/// replica — an identical, stationary completion law the z-test can
+/// compare. The live leg must still observe the injection (corrupted
+/// total ≥ 1); detection bookkeeping itself is pinned by the
+/// coordinator and engine unit tests.
+fn check_corrupt_cell(
+    case: &GeneratedCase,
+    opts: &MatrixOptions,
+    report: &Mutex<MatrixReport>,
+) -> anyhow::Result<()> {
+    use crate::fault::{FaultEvent, FaultPlan};
+    let scn = case
+        .scenario
+        .clone()
+        .with_verify_m(2)
+        .expect("corrupt_applies guarantees replication degree >= 3");
+    let ctx = describe(case);
+    let rounds = opts.live_rounds.max(12);
+    let plan = FaultPlan {
+        name: "conformance-corrupt".into(),
+        seed: scn.seed ^ 0x00C0_2207,
+        events: vec![(0, FaultEvent::Corruption { from_round: 1, prob: 1.0 })],
+    };
+
+    // DES leg: replicates of the identical corruption schedule.
+    let compiled = plan.compile(scn.n_workers())?;
+    let eng_cfg = EngineConfig { verify_strikes: u64::MAX, ..EngineConfig::default() };
+    let trials = (opts.des_trials / rounds.max(1)).clamp(40, 400);
+    let mut des = Welford::new();
+    let mut corrupted = 0u64;
+    let mut rng = crate::util::rng::Rng::new(scn.seed ^ 0x00DE_5EED ^ 0xC022);
+    for _ in 0..trials {
+        let stats = crate::des::engine::simulate_fault_rounds(
+            &scn, &compiled, rounds, &eng_cfg, &mut rng,
+        )?;
+        for st in stats {
+            des.push(st.completion);
+            corrupted += st.corrupted;
+        }
+    }
+    anyhow::ensure!(
+        corrupted >= 1,
+        "the corruption plan never fired on the DES side ({ctx})"
+    );
+    let des_est = Estimate { mean: des.mean(), sem: des.sem(), lo: des.mean(), hi: des.mean() };
+
+    // Live leg: the real coordinator votes the corrupt replica out of
+    // every aggregate while the round still completes.
+    let time_scale = (0.004 / des.mean().max(1e-6)).clamp(0.000_8, 0.02);
+    let cfg = SystemConfig {
+        time_scale,
+        n_samples: 32.max(scn.n_workers()),
+        dim: 4,
+        cancellation: true,
+        verify_strikes: u64::MAX,
+        ..SystemConfig::default()
+    };
+    let scn_live = scn.clone().with_seed(scn.seed ^ 0x11FE_5EED ^ 0xC022);
+    let mut coord = Coordinator::from_scenario(&scn_live, cfg, Backend::Mock)?;
+    coord.install_fault_plan(&plan)?;
+    let w = Arc::new(vec![0.0f32; 4]);
+    let mut run = || -> anyhow::Result<Welford> {
+        for _ in 0..rounds {
+            coord.run_round(JobSpec::Grad { w: w.clone() })?;
+        }
+        let totals = coord.metrics.fault_totals();
+        anyhow::ensure!(
+            totals.corrupted >= 1,
+            "the corruption plan did not fire on the live side (totals {totals:?})"
+        );
+        anyhow::ensure!(
+            totals.quarantined == 0,
+            "quarantine fired with verify_strikes disarmed (totals {totals:?})"
+        );
+        let mut acc = Welford::new();
+        for rec in coord.metrics.records() {
+            acc.push(rec.injected_s / time_scale);
+        }
+        Ok(acc)
+    };
+    let outcome = run();
+    coord.shutdown();
+    let live =
+        outcome.map_err(|e| anyhow::anyhow!("live-des-corrupt cell failed on {ctx}: {e}"))?;
+    let live_est =
+        Estimate { mean: live.mean(), sem: live.sem(), lo: live.mean(), hi: live.mean() };
+    check_cell(Pair::LiveDesCorrupt, &des_est, &live_est, opts.z, opts.live_floor, &ctx, report)
 }
 
 /// The live-crash cell: run a few warm-up rounds with the full cluster,
@@ -761,6 +929,7 @@ fn check_cell(
             Pair::DesLive => r.des_live += 1,
             Pair::LiveCrash => r.live_crash += 1,
             Pair::LiveDesFault => r.live_des_fault += 1,
+            Pair::LiveDesCorrupt => r.live_des_corrupt += 1,
         }
         let ratio = gap / tol.max(1e-300);
         if ratio > r.worst_gap_over_tol {
@@ -821,6 +990,7 @@ fn check_case(
         redundancy: scn.redundancy,
         fail_prob: case.fail_prob,
         relaunch_timeout_factor: 3.0,
+        ..EngineConfig::default()
     };
     let refr = simulate_many_reference(
         scn,
@@ -853,6 +1023,9 @@ fn check_case(
             check_cell(Pair::AnalyticDes, &an, &des_est, opts.z, opts.rel_floor, &ctx, report)?;
             if scn.worker_speeds.is_some() {
                 report.lock().unwrap().hetero_analytic_cells += 2;
+            }
+            if scn.verify_m.is_some() {
+                report.lock().unwrap().verify_m_analytic_cells += 2;
             }
         }
 
@@ -897,6 +1070,12 @@ fn check_case(
         if opts.include_live && case.fault && fault_applies(scn, case.fail_prob) {
             check_fault_cell(case, opts, report)?;
         }
+
+        // --- Live ↔ DES under one shared corruption plan: the m-of-g
+        // vote vs the corruption-aware DES fault model. ---
+        if opts.include_live && case.corrupt && corrupt_applies(scn, case.fail_prob) {
+            check_corrupt_cell(case, opts, report)?;
+        }
     }
     Ok(())
 }
@@ -927,7 +1106,14 @@ fn anchor_cases() -> Vec<GeneratedCase> {
     let mut cases: Vec<GeneratedCase> = Vec::new();
     let mut push = |scenarios: Vec<Scenario>, fail_prob: f64, live: bool, crash: bool| {
         for scenario in scenarios {
-            cases.push(GeneratedCase { scenario, fail_prob, live, crash, fault: false });
+            cases.push(GeneratedCase {
+                scenario,
+                fail_prob,
+                live,
+                crash,
+                fault: false,
+                corrupt: false,
+            });
         }
     };
 
@@ -1043,6 +1229,23 @@ fn anchor_cases() -> Vec<GeneratedCase> {
         false,
         false,
     );
+    // m-of-g verification: the verify knob rides the planner grid, so
+    // the verified closed form meets MC and DES on planner-derived
+    // seeds (m = 2 over g = 3, with and without a k-of-B target).
+    push(
+        grid(StudySpec {
+            n_workers: vec![12],
+            batches: BatchAxis::Explicit(vec![4]),
+            services: vec![paper(1.0, 0.2)],
+            k_targets: vec![KTarget::Full, KTarget::Exact(3)],
+            verify_m: 2,
+            seed: 9011,
+            ..StudySpec::base("conformance-anchor-verify")
+        }),
+        0.0,
+        false,
+        false,
+    );
     // Live crash: a worker thread dies mid-round (g = 3, so every batch
     // survives), survivors checked against the reduced closed form.
     push(
@@ -1073,6 +1276,26 @@ fn anchor_cases() -> Vec<GeneratedCase> {
             live: false,
             crash: false,
             fault: true,
+            corrupt: false,
+        });
+    }
+    // Live↔DES corruption conformance: one shared silent-corruption
+    // plan, voted out by m = 2 verification on both backends; g = 3,
+    // so every batch keeps two honest agreeing votes.
+    for scenario in grid(StudySpec {
+        n_workers: vec![6],
+        batches: BatchAxis::Explicit(vec![2]),
+        services: vec![paper(1.0, 0.25)],
+        seed: 9012,
+        ..StudySpec::base("conformance-anchor-corrupt")
+    }) {
+        cases.push(GeneratedCase {
+            scenario,
+            fail_prob: 0.0,
+            live: false,
+            crash: false,
+            fault: false,
+            corrupt: true,
         });
     }
     cases
@@ -1144,6 +1367,7 @@ pub fn run_matrix(opts: &MatrixOptions) -> anyhow::Result<MatrixReport> {
                 let text = format!("{e:#}");
                 let mode = if text.contains(Pair::DesLive.name())
                     || text.contains(Pair::LiveDesFault.name())
+                    || text.contains(Pair::LiveDesCorrupt.name())
                 {
                     FAILED_LIVE
                 } else {
@@ -1197,6 +1421,20 @@ mod tests {
                 assert!(speeds.iter().all(|&c| c > 0.0));
             }
             assert!((0.0..=0.4).contains(&case.fail_prob));
+            if let Some(m) = scn.verify_m {
+                // Verified cases stay inside the scope every backend
+                // accepts: reliable, upfront, m votes seatable on every
+                // batch, and no live-side cells.
+                assert!(m >= 2);
+                assert_eq!(case.fail_prob, 0.0);
+                assert_eq!(scn.redundancy, Redundancy::Upfront);
+                assert!(!case.live && !case.crash && !case.fault && !case.corrupt);
+                let min_degree = (0..scn.assignment.n_batches)
+                    .map(|b| scn.assignment.replication(b))
+                    .min()
+                    .unwrap();
+                assert!(m <= min_degree);
+            }
         });
     }
 
@@ -1268,6 +1506,21 @@ mod tests {
                 && fault_applies(&c.scenario, c.fail_prob)),
             "live-des-fault anchor missing or out of the fault cell's scope"
         );
+        assert!(
+            anchors
+                .iter()
+                .any(|c| c.scenario.verify_m == Some(2) && analytic_applies(&c.scenario)),
+            "verified-analytic anchor missing or out of the closed form's scope"
+        );
+        assert!(
+            anchors.iter().any(|c| c.scenario.verify_m.is_some()
+                && matches!(c.scenario.k_of_b, Some(k) if k < c.scenario.assignment.n_batches)),
+            "verified k-of-B anchor missing"
+        );
+        assert!(
+            anchors.iter().any(|c| c.corrupt && corrupt_applies(&c.scenario, c.fail_prob)),
+            "live-des-corrupt anchor missing or out of the corruption cell's scope"
+        );
         // Every anchor is a valid scenario with a planner-derived seed.
         for c in &anchors {
             c.scenario.layout.validate().unwrap();
@@ -1299,6 +1552,7 @@ mod tests {
             live: true,
             crash: false,
             fault: false,
+            corrupt: false,
         };
         let round = case_from_json(&case_to_json(&case)).unwrap();
         assert_eq!(case_to_json(&round).to_string(), case_to_json(&case).to_string());
@@ -1319,17 +1573,25 @@ mod tests {
                 BatchService::paper(ServiceSpec::exp(2.0)),
                 9009,
             )
+            .unwrap()
+            .with_verify_m(2)
             .unwrap(),
             fail_prob: 0.0,
             live: false,
             crash: true,
             fault: true,
+            corrupt: true,
         };
         append_to_corpus(&path, &other).unwrap();
         let loaded = load_corpus(&path).unwrap();
         assert_eq!(loaded.len(), 2);
         assert!(loaded.iter().any(|c| c.crash), "crash flag survives the file");
         assert!(loaded.iter().any(|c| c.fault), "fault flag survives the file");
+        assert!(loaded.iter().any(|c| c.corrupt), "corrupt flag survives the file");
+        assert!(
+            loaded.iter().any(|c| c.scenario.verify_m == Some(2)),
+            "verify_m survives the file"
+        );
         let _ = std::fs::remove_file(&path);
     }
 
@@ -1391,7 +1653,12 @@ mod tests {
         assert!(report.analytic_des >= 3, "{report:?}");
         assert!(report.mc_des >= 8, "{report:?}");
         assert!(report.hetero_analytic_cells >= 4, "{report:?}");
+        assert!(
+            report.verify_m_analytic_cells >= 4,
+            "the verify anchor alone contributes two scenarios x two cells: {report:?}"
+        );
         assert_eq!(report.des_live, 0, "live disabled");
+        assert_eq!(report.live_des_corrupt, 0, "live disabled");
         assert!(report.worst_gap_over_tol <= 1.0, "{report:?}");
         assert!(
             report.cells

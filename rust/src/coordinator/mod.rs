@@ -72,16 +72,34 @@ pub struct RoundEvents {
     pub respawns: u64,
     /// Speculative deadline relaunches dispatched this round.
     pub relaunches: u64,
-    /// Degraded-mode re-plans (assignment rebuilt onto survivors).
+    /// Degraded-mode re-plans (assignment rebuilt onto survivors) plus
+    /// detected-but-unrecoverable vote rounds (a batch whose replicas
+    /// disagree with no attributable majority).
     pub degradations: u64,
     /// Tasks dropped before dispatch by the fault plan.
     pub dropped: u64,
+    /// Replicas dispatched with a corruption injection this round.
+    pub corrupted: u64,
+    /// Replicas flagged by the m-of-g vote (disagreed with an accepted
+    /// majority value).
+    pub flagged: u64,
+    /// Workers quarantined at the end of this round (strike budget
+    /// exhausted).
+    pub quarantined: u64,
 }
 
 impl RoundEvents {
     /// Whether anything fault-related happened this round.
     pub fn any(&self) -> bool {
-        self.crashes + self.respawns + self.relaunches + self.degradations + self.dropped > 0
+        self.crashes
+            + self.respawns
+            + self.relaunches
+            + self.degradations
+            + self.dropped
+            + self.corrupted
+            + self.flagged
+            + self.quarantined
+            > 0
     }
 }
 
@@ -132,6 +150,14 @@ struct RoundScratch {
     batch_deadline: Vec<f64>,
     /// Relaunch attempts already spent on the batch this round.
     batch_attempts: Vec<u32>,
+    /// Collected replica results per batch awaiting the m-of-g vote
+    /// (`verify_m` mode only): `(worker, output, injected_s)` in
+    /// arrival order.
+    batch_votes: Vec<Vec<(usize, JobOut, f64)>>,
+    /// Replicas dispatched to the batch this round that have not yet
+    /// reported — when it hits zero an unwon batch can collect no more
+    /// votes and must be resolved with whatever arrived.
+    batch_pending: Vec<u32>,
     /// Stamp of the current round; bumping it resets both maps in O(1).
     generation: u32,
 }
@@ -146,6 +172,8 @@ impl RoundScratch {
             batch_max_delay: vec![0.0; n_batches],
             batch_deadline: vec![f64::INFINITY; n_batches],
             batch_attempts: vec![0; n_batches],
+            batch_votes: vec![Vec::new(); n_batches],
+            batch_pending: vec![0; n_batches],
             generation: 0,
         }
     }
@@ -165,6 +193,10 @@ impl RoundScratch {
         self.batch_max_delay.fill(0.0);
         self.batch_deadline.fill(f64::INFINITY);
         self.batch_attempts.fill(0);
+        for v in &mut self.batch_votes {
+            v.clear();
+        }
+        self.batch_pending.fill(0);
         for c in &self.cancels {
             c.store(false, Ordering::Relaxed);
         }
@@ -180,6 +212,49 @@ const RELAUNCH_FLOOR_S: f64 = 0.05;
 /// Grace added to the whole-round liveness bound beyond the scaled
 /// slowest injected delay (covers real compute + thread scheduling).
 const LIVENESS_GRACE_S: f64 = 5.0;
+
+/// Relative agreement tolerance of the m-of-g vote. Honest replicas of
+/// the same batch compute the same deterministic sums and agree
+/// bit-exactly; the tolerance only absorbs backend-order float noise.
+/// The injected corruption (`+1 + worker_id` per component) exceeds it
+/// by orders of magnitude at any realistic output scale, so false
+/// positives are structurally zero.
+const VOTE_REL_TOL: f32 = 1e-4;
+
+fn scalars_agree(a: f32, b: f32) -> bool {
+    (a - b).abs() <= VOTE_REL_TOL * a.abs().max(b.abs()).max(1.0)
+}
+
+/// Whether two replica outputs count as the same value under the vote.
+fn job_out_agree(a: &JobOut, b: &JobOut) -> bool {
+    match (a, b) {
+        (JobOut::Grad(x), JobOut::Grad(y)) => {
+            x.grad.len() == y.grad.len()
+                && scalars_agree(x.loss, y.loss)
+                && x.grad.iter().zip(&y.grad).all(|(p, q)| scalars_agree(*p, *q))
+        }
+        (JobOut::MapSum(x), JobOut::MapSum(y)) => scalars_agree(*x, *y),
+        _ => false,
+    }
+}
+
+/// Largest agreement group among the collected votes: returns the index
+/// of the group's earliest-arrived representative and the group size.
+/// Ties go to the earlier arrival.
+fn vote_winner(votes: &[(usize, JobOut, f64)]) -> (usize, usize) {
+    let mut best = (0usize, 0usize);
+    for i in 0..votes.len() {
+        if (0..i).any(|j| job_out_agree(&votes[j].1, &votes[i].1)) {
+            continue; // not its group's earliest representative
+        }
+        let size =
+            (i..votes.len()).filter(|&j| job_out_agree(&votes[i].1, &votes[j].1)).count();
+        if size > best.1 {
+            best = (i, size);
+        }
+    }
+    best
+}
 
 /// The live coordinator.
 pub struct Coordinator {
@@ -218,6 +293,18 @@ pub struct Coordinator {
     /// `dead[w]` ⇔ worker `w` crashed in an earlier round; it is never
     /// dispatched to again.
     dead: Vec<bool>,
+    /// m-of-g verification level (`None` = first replica wins): each
+    /// batch waits for `m` results and the round accepts the majority
+    /// value — see [`crate::des::Scenario::verify_m`].
+    verify_m: Option<usize>,
+    /// Voting strikes per worker; a worker reaching
+    /// `cfg.verify_strikes` is quarantined at the end of the round.
+    /// Reset on respawn (a fresh process starts with a clean record).
+    strikes: Vec<u64>,
+    /// Set once any strike quarantine fired: arms graceful degradation
+    /// (re-plan onto survivors) even without a fault plan installed, so
+    /// a quarantine that breaks coverage degrades instead of erroring.
+    quarantine_armed: bool,
     /// Fault injection armed by [`Coordinator::crash_worker_next_round`]:
     /// `(worker, fraction_of_delay)` applied to the next round only.
     pending_crash: Option<(usize, f64)>,
@@ -266,6 +353,7 @@ impl Coordinator {
         cfg.batch_model = scn.service.model;
         cfg.seed = scn.seed;
         cfg.k_of_b = scn.k_of_b.unwrap_or(0);
+        cfg.verify_m = scn.verify_m.unwrap_or(0);
         Self::from_parts(
             cfg,
             scn.layout.clone(),
@@ -304,6 +392,22 @@ impl Coordinator {
             0 => None,
             k => Some(k.min(assignment.n_batches)),
         };
+        let verify_m = match cfg.verify_m {
+            0 | 1 => None,
+            m => {
+                let min_degree = (0..assignment.n_batches)
+                    .map(|b| assignment.replication(b))
+                    .min()
+                    .unwrap_or(0);
+                anyhow::ensure!(
+                    m <= min_degree,
+                    "verify_m = {m} exceeds the minimum replication degree {min_degree}: \
+                     some batch has only {min_degree} replica(s) and can never collect \
+                     {m} votes (raise replication or lower verify_m)"
+                );
+                Some(m)
+            }
+        };
         let n = cfg.n_workers;
         let mut coord = Coordinator {
             rng,
@@ -323,6 +427,9 @@ impl Coordinator {
             speeds,
             k_of_b,
             dead: vec![false; n],
+            verify_m,
+            strikes: vec![0; n],
+            quarantine_armed: false,
             pending_crash: None,
             round_times: Vec::new(),
             scratch,
@@ -330,7 +437,7 @@ impl Coordinator {
             cfg,
         };
         for w in 0..n {
-            let handle = coord.spawn_one(w);
+            let handle = coord.spawn_one(w)?;
             coord.workers.push(handle);
         }
         Ok(coord)
@@ -339,7 +446,7 @@ impl Coordinator {
     /// Spawn (or respawn) worker `w` against the **current** layout and
     /// assignment — the shard is rebuilt from scratch, so a degraded
     /// re-plan hands every worker its new batch.
-    fn spawn_one(&self, w: usize) -> WorkerHandle {
+    fn spawn_one(&self, w: usize) -> anyhow::Result<WorkerHandle> {
         let batch = self.assignment.batch_of_worker[w];
         let ranges = self.layout.sample_ranges(batch, self.cfg.n_samples);
         let shard = self.dataset.shard(&ranges);
@@ -461,18 +568,32 @@ impl Coordinator {
         obs
     }
 
-    /// Respawn every dead worker whose backoff expired at this round.
+    /// Respawn every dead worker whose backoff expired at this round. A
+    /// respawned worker starts with a clean strike record. A failed
+    /// spawn (thread limit, OS pressure) leaves the worker dead and
+    /// re-schedules the attempt with the usual backoff instead of
+    /// aborting the run.
     fn process_respawns(&mut self, round: u64, events: &mut RoundEvents) {
         for w in 0..self.cfg.n_workers {
             if self.dead[w] && self.respawn_at[w].is_some_and(|at| round >= at) {
                 self.respawn_at[w] = None;
-                let fresh = self.spawn_one(w);
-                let old = std::mem::replace(&mut self.workers[w], fresh);
-                // The crashed thread has already exited; this just joins
-                // it and drops its stale channel.
-                old.shutdown();
-                self.dead[w] = false;
-                events.respawns += 1;
+                match self.spawn_one(w) {
+                    Ok(fresh) => {
+                        let old = std::mem::replace(&mut self.workers[w], fresh);
+                        // The crashed thread has already exited; this
+                        // just joins it and drops its stale channel.
+                        old.shutdown();
+                        self.dead[w] = false;
+                        self.strikes[w] = 0;
+                        events.respawns += 1;
+                    }
+                    Err(e) => {
+                        eprintln!("worker {w}: respawn failed ({e}); retrying with backoff");
+                        let backoff = 1u64 << self.respawn_attempts[w].min(3);
+                        self.respawn_at[w] = Some(round + backoff.max(1));
+                        self.respawn_attempts[w] = self.respawn_attempts[w].saturating_add(1);
+                    }
+                }
             }
         }
     }
@@ -545,7 +666,7 @@ impl Coordinator {
         // replace them all (respawn with the new batch).
         for w in 0..self.cfg.n_workers {
             if !self.dead[w] {
-                let fresh = self.spawn_one(w);
+                let fresh = self.spawn_one(w)?;
                 let old = std::mem::replace(&mut self.workers[w], fresh);
                 old.shutdown();
             }
@@ -603,7 +724,7 @@ impl Coordinator {
         let mut gen = self.scratch.begin_round();
         let ok_batches = self.covered_batches(&crashing, gen);
         if ok_batches < self.needed_batches() {
-            if self.fault.is_some() {
+            if self.fault.is_some() || self.quarantine_armed {
                 // The crashing workers are doomed either way — take
                 // them down at round start so the re-plan sees the true
                 // survivor set, then rebuild the assignment onto it.
@@ -670,18 +791,35 @@ impl Coordinator {
             // (for a crashing replica) the normalized time it dies at.
             let crash_at = crashing[w].map(|(frac, _)| frac * draw);
             self.round_times.push((batch, draw, speed, crash_at));
+            // Silent-corruption injection: a pure function of the plan
+            // (no RNG consumed), so injected runs replay byte-identical
+            // service draws.
+            let corrupt = self.fault.as_ref().is_some_and(|p| p.corrupts_result(w, round));
             let cancel = self.scratch.cancels[batch].clone();
-            self.workers[w]
-                .tx
-                .send(TaskMsg {
-                    job_id,
-                    batch_id: batch,
-                    spec: spec.clone(),
-                    delay_s: delay,
-                    cancel,
-                    crash_after_s,
-                })
-                .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))?;
+            let send = self.workers[w].tx.send(TaskMsg {
+                job_id,
+                batch_id: batch,
+                spec: spec.clone(),
+                delay_s: delay,
+                cancel,
+                crash_after_s,
+                corrupt,
+            });
+            if send.is_err() {
+                // The worker thread died outside any plan (panic, spawn
+                // failure): treat it as a crash and keep the round
+                // alive — respawn machinery brings it back, and if its
+                // batch cannot recover the liveness bound names the
+                // stall instead of aborting here.
+                eprintln!("worker {w}: task channel closed — marking dead");
+                self.round_times.pop();
+                self.mark_dead(w, round, Some(1), &mut events);
+                continue;
+            }
+            if corrupt {
+                events.corrupted += 1;
+            }
+            self.scratch.batch_pending[batch] += 1;
             dispatched += 1;
         }
         // One clock read: wall time spent sampling + dispatching the
@@ -778,18 +916,36 @@ impl Coordinator {
                             let draw = self.service.sample_batch(s_units, &mut self.rng) * slow;
                             let delay = self.cfg.time_scale * draw * speed;
                             self.round_times.push((b, draw, speed, None));
+                            let corrupt = self
+                                .fault
+                                .as_ref()
+                                .is_some_and(|p| p.corrupts_result(w, round));
                             let cancel = self.scratch.cancels[b].clone();
-                            self.workers[w]
-                                .tx
-                                .send(TaskMsg {
-                                    job_id,
-                                    batch_id: b,
-                                    spec: spec.clone(),
-                                    delay_s: delay,
-                                    cancel,
-                                    crash_after_s: None,
-                                })
-                                .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))?;
+                            let send = self.workers[w].tx.send(TaskMsg {
+                                job_id,
+                                batch_id: b,
+                                spec: spec.clone(),
+                                delay_s: delay,
+                                cancel,
+                                crash_after_s: None,
+                                corrupt,
+                            });
+                            if send.is_err() {
+                                // Same hardening as dispatch: a dead
+                                // relaunch target becomes a crash, not
+                                // an abort — another replica or the
+                                // liveness bound takes over.
+                                eprintln!(
+                                    "worker {w}: task channel closed — marking dead"
+                                );
+                                self.round_times.pop();
+                                self.mark_dead(w, round, Some(1), &mut events);
+                                continue;
+                            }
+                            if corrupt {
+                                events.corrupted += 1;
+                            }
+                            self.scratch.batch_pending[b] += 1;
                             dispatched += 1;
                             events.relaunches += 1;
                             if delay > self.scratch.batch_max_delay[b] {
@@ -823,64 +979,114 @@ impl Coordinator {
                 continue;
             }
             reported += 1;
+            let batch = msg.batch_id;
+            self.scratch.batch_pending[batch] =
+                self.scratch.batch_pending[batch].saturating_sub(1);
+            // The value this arrival decides the batch with, if any.
+            let mut accepted: Option<(JobOut, f64)> = None;
             match msg.out {
                 None => cancelled += 1,
                 Some(out) => {
-                    if self.scratch.batch_won[msg.batch_id] == gen {
+                    if self.scratch.batch_won[batch] == gen || completion_wall.is_some() {
+                        // The batch is already decided, or the whole job
+                        // completed (k-of-B target hit, or coverage
+                        // reached in an overlapping layout): a straggler
+                        // that beat its cancel is pure redundancy —
+                        // don't aggregate it or let it move the
+                        // completion statistics.
                         redundant += 1;
-                        continue;
+                    } else if self.verify_m.is_some() {
+                        self.scratch.batch_votes[batch].push((
+                            msg.worker_id,
+                            out,
+                            msg.injected_s,
+                        ));
+                    } else {
+                        accepted = Some((out, msg.injected_s));
                     }
-                    if completion_wall.is_some() {
-                        // The job already completed (k-of-B target hit,
-                        // or coverage reached in an overlapping layout):
-                        // a straggler that beat its cancel is pure
-                        // redundancy — don't aggregate it or let it move
-                        // the completion statistics.
-                        redundant += 1;
-                        continue;
+                }
+            }
+            // m-of-g vote: decide the batch at the first arrival where
+            // some agreement group has ≥ 2 members and ≥ m results are
+            // in, or when no more replicas can report (exhausted).
+            if let Some(m) = self.verify_m {
+                if accepted.is_none()
+                    && self.scratch.batch_won[batch] != gen
+                    && completion_wall.is_none()
+                    && !self.scratch.batch_votes[batch].is_empty()
+                {
+                    let votes = &self.scratch.batch_votes[batch];
+                    let (rep, size) = vote_winner(votes);
+                    let exhausted = self.scratch.batch_pending[batch] == 0;
+                    if (votes.len() >= m && size >= 2) || exhausted {
+                        let injected = votes.iter().fold(0f64, |a, v| a.max(v.2));
+                        if size >= 2 {
+                            // Majority found: accept its value; flag
+                            // every collected replica that disagreed.
+                            for j in 0..votes.len() {
+                                if !job_out_agree(&votes[rep].1, &votes[j].1) {
+                                    events.flagged += 1;
+                                    self.strikes[votes[j].0] += 1;
+                                }
+                            }
+                            accepted = Some((votes[rep].1.clone(), injected));
+                        } else {
+                            // Exhausted without a majority. Two or more
+                            // disagreeing values = corruption detected
+                            // but unattributable: accept the earliest
+                            // value and count a degradation, flagging
+                            // nobody. A lone vote (quorum short through
+                            // crashes or cancels, nothing to compare
+                            // against) is accepted best-effort.
+                            if votes.len() >= 2 {
+                                events.degradations += 1;
+                            }
+                            accepted = Some((votes[0].1.clone(), injected));
+                        }
                     }
-                    self.scratch.batch_won[msg.batch_id] = gen;
-                    batches_won += 1;
+                }
+            }
+            if let Some((out, injected)) = accepted {
+                self.scratch.batch_won[batch] = gen;
+                batches_won += 1;
+                if self.cfg.cancellation {
+                    self.scratch.cancels[batch].store(true, Ordering::Relaxed);
+                }
+                // Aggregation unit: fold the accepted value in.
+                agg = Some(match (agg.take(), out) {
+                    (None, JobOut::Grad(g)) => RoundOutput::Grad(g),
+                    (None, JobOut::MapSum(v)) => RoundOutput::MapSum(v),
+                    (Some(RoundOutput::Grad(mut acc)), JobOut::Grad(g)) => {
+                        for (a, x) in acc.grad.iter_mut().zip(&g.grad) {
+                            *a += x;
+                        }
+                        acc.loss += g.loss;
+                        RoundOutput::Grad(acc)
+                    }
+                    (Some(RoundOutput::MapSum(acc)), JobOut::MapSum(v)) => {
+                        RoundOutput::MapSum(acc + v)
+                    }
+                    _ => anyhow::bail!("mixed job outputs in one round"),
+                });
+                max_injected_winner = max_injected_winner.max(injected);
+                for &u in &self.layout.units_of_batch[batch] {
+                    if self.scratch.unit_covered[u] != gen {
+                        self.scratch.unit_covered[u] = gen;
+                        units_left -= 1;
+                    }
+                }
+                let complete = match self.k_of_b {
+                    Some(k) => batches_won >= k,
+                    None => units_left == 0,
+                };
+                if complete && completion_wall.is_none() {
+                    completion_wall = Some(timer.secs());
                     if self.cfg.cancellation {
-                        self.scratch.cancels[msg.batch_id].store(true, Ordering::Relaxed);
-                    }
-                    // Aggregation unit: fold the winner in.
-                    agg = Some(match (agg.take(), out) {
-                        (None, JobOut::Grad(g)) => RoundOutput::Grad(g),
-                        (None, JobOut::MapSum(v)) => RoundOutput::MapSum(v),
-                        (Some(RoundOutput::Grad(mut acc)), JobOut::Grad(g)) => {
-                            for (a, x) in acc.grad.iter_mut().zip(&g.grad) {
-                                *a += x;
-                            }
-                            acc.loss += g.loss;
-                            RoundOutput::Grad(acc)
-                        }
-                        (Some(RoundOutput::MapSum(acc)), JobOut::MapSum(v)) => {
-                            RoundOutput::MapSum(acc + v)
-                        }
-                        _ => anyhow::bail!("mixed job outputs in one round"),
-                    });
-                    max_injected_winner = max_injected_winner.max(msg.injected_s);
-                    for &u in &self.layout.units_of_batch[msg.batch_id] {
-                        if self.scratch.unit_covered[u] != gen {
-                            self.scratch.unit_covered[u] = gen;
-                            units_left -= 1;
-                        }
-                    }
-                    let complete = match self.k_of_b {
-                        Some(k) => batches_won >= k,
-                        None => units_left == 0,
-                    };
-                    if complete && completion_wall.is_none() {
-                        completion_wall = Some(timer.secs());
-                        if self.cfg.cancellation {
-                            // Remaining batches — overlapping stragglers
-                            // past coverage, or batches beyond the
-                            // k-of-B target — are moot once the job is
-                            // complete.
-                            for c in &self.scratch.cancels {
-                                c.store(true, Ordering::Relaxed);
-                            }
+                        // Remaining batches — overlapping stragglers
+                        // past coverage, or batches beyond the k-of-B
+                        // target — are moot once the job is complete.
+                        for c in &self.scratch.cancels {
+                            c.store(true, Ordering::Relaxed);
                         }
                     }
                 }
@@ -893,6 +1099,29 @@ impl Coordinator {
             if !self.dead[w] {
                 if let Some((_, respawn_after)) = crashing[w] {
                     self.mark_dead(w, round, respawn_after, &mut events);
+                }
+            }
+        }
+
+        // Strike-budget quarantine, also at end of round (the flagged
+        // results were already rejected by the vote): exclude the
+        // worker from dispatch and hand it to the respawn machinery
+        // with the crash backoff; its strike record resets on respawn.
+        // A worker that crashed this same round is already dead.
+        if self.verify_m.is_some() {
+            let limit = self.cfg.verify_strikes.max(1);
+            for w in 0..n {
+                if !self.dead[w] && self.strikes[w] >= limit {
+                    self.dead[w] = true;
+                    self.quarantine_armed = true;
+                    events.quarantined += 1;
+                    let backoff = 1u64 << self.respawn_attempts[w].min(3);
+                    self.respawn_at[w] = Some(
+                        round
+                            + crate::fault::QUARANTINE_RESPAWN_ROUNDS
+                                .saturating_mul(backoff),
+                    );
+                    self.respawn_attempts[w] = self.respawn_attempts[w].saturating_add(1);
                 }
             }
         }
@@ -941,13 +1170,17 @@ impl Coordinator {
                 let e = res.events;
                 println!(
                     "  [fault] round {}: crashes={} respawns={} relaunches={} \
-                     degradations={} dropped={} live={}/{}",
+                     degradations={} dropped={} corrupted={} flagged={} \
+                     quarantined={} live={}/{}",
                     self.round_index - 1,
                     e.crashes,
                     e.respawns,
                     e.relaunches,
                     e.degradations,
                     e.dropped,
+                    e.corrupted,
+                    e.flagged,
+                    e.quarantined,
                     self.live_workers(),
                     self.cfg.n_workers
                 );
@@ -1278,5 +1511,141 @@ mod tests {
         let totals = c.metrics.fault_totals();
         c.shutdown();
         assert_eq!((totals.crashes, totals.respawns), (1, 1));
+    }
+
+    #[test]
+    fn verify_m_exceeding_replication_is_a_named_refusal() {
+        // g = 1: no batch can ever collect two votes — construction
+        // must refuse, naming the offending knob and the degree.
+        let mut cfg = test_cfg(4, 4);
+        cfg.verify_m = 2;
+        let err = match Coordinator::new(cfg, Backend::Mock) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("verify_m = 2 over g = 1 must be refused"),
+        };
+        assert!(err.contains("verify_m"), "{err}");
+        assert!(err.contains("minimum replication degree 1"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_worker_is_flagged_quarantined_and_respawns_clean() {
+        // N=6, B=2 (g=3), verify_m=2, worker 0 corrupt from round 1
+        // with probability 1. Worker 0 is given a large speed advantage
+        // so its (corrupt) result always arrives first and is always in
+        // the collected votes when the two honest replicas decide the
+        // batch — making the flag schedule deterministic. Strike budget
+        // 2 ⇒ quarantine at the end of round 2, respawn (with a clean
+        // strike record) at round 4, re-quarantine at round 5 with the
+        // doubled backoff.
+        use crate::dist::BatchService;
+        use crate::fault::{FaultEvent, FaultPlan};
+        let svc = BatchService::paper(ServiceSpec::shifted_exp(20.0, 0.05));
+        let scn = crate::des::Scenario::paper_balanced(6, 2, svc)
+            .unwrap()
+            .with_verify_m(2)
+            .unwrap()
+            .with_speeds(vec![0.05, 1.0, 1.0, 1.0, 1.0, 1.0])
+            .unwrap()
+            .with_seed(11);
+        let mut cfg = test_cfg(6, 2);
+        // Wide margin between the sped-up corrupt replica (~0.4 ms) and
+        // the honest arrivals (≥ 7.5 ms): the flag schedule stays
+        // deterministic under scheduler noise.
+        cfg.time_scale = 0.05;
+        let mut c = Coordinator::from_scenario(&scn, cfg, Backend::Mock).unwrap();
+        let plan = FaultPlan {
+            name: "c".into(),
+            seed: 5,
+            events: vec![(0, FaultEvent::Corruption { from_round: 1, prob: 1.0 })],
+        };
+        c.install_fault_plan(&plan).unwrap();
+
+        // The vote must reject the corrupt value: every round's
+        // aggregate stays the exact full-batch gradient.
+        let w = vec![0.25f32, -0.5, 1.0, 0.0];
+        let oracle = {
+            let full = c.dataset().shard(&[(0, c.cfg.n_samples)]);
+            let mut m = crate::worker::MockCompute;
+            match m.run(&full, &JobSpec::Grad { w: Arc::new(w.clone()) }).unwrap() {
+                JobOut::Grad(g) => g,
+                _ => panic!(),
+            }
+        };
+        let mut run = |c: &mut Coordinator| -> RoundEvents {
+            let res = c.run_round(JobSpec::Grad { w: Arc::new(w.clone()) }).unwrap();
+            let g = match res.output {
+                RoundOutput::Grad(g) => g,
+                _ => panic!(),
+            };
+            for (a, e) in g.grad.iter().zip(&oracle.grad) {
+                assert!((a - e).abs() < 1e-2 * e.abs().max(1.0), "{a} vs {e}");
+            }
+            res.events
+        };
+
+        let r0 = run(&mut c);
+        assert_eq!((r0.corrupted, r0.flagged, r0.quarantined), (0, 0, 0));
+        let r1 = run(&mut c);
+        assert_eq!((r1.corrupted, r1.flagged, r1.quarantined), (1, 1, 0));
+        assert_eq!(c.live_workers(), 6);
+        let r2 = run(&mut c);
+        assert_eq!((r2.corrupted, r2.flagged, r2.quarantined), (1, 1, 1));
+        assert_eq!(c.live_workers(), 5, "strike budget hit: worker 0 quarantined");
+        // Quarantined ⇒ excluded from dispatch: with prob = 1 any
+        // dispatch of worker 0 would count as corrupted.
+        let r3 = run(&mut c);
+        assert_eq!((r3.corrupted, r3.respawns), (0, 0));
+        assert_eq!(c.live_workers(), 5);
+        // Respawn at quarantine round + QUARANTINE_RESPAWN_ROUNDS, with
+        // a clean strike record: one fresh flag is not enough to
+        // re-quarantine.
+        let r4 = run(&mut c);
+        assert_eq!((r4.respawns, r4.corrupted, r4.flagged, r4.quarantined), (1, 1, 1, 0));
+        assert_eq!(c.live_workers(), 6);
+        let r5 = run(&mut c);
+        assert_eq!((r5.flagged, r5.quarantined), (1, 1));
+        assert_eq!(c.live_workers(), 5);
+        // Doubled backoff: still down two rounds later.
+        let r6 = run(&mut c);
+        assert_eq!(r6.respawns, 0);
+        assert_eq!(c.live_workers(), 5);
+        let totals = c.metrics.fault_totals();
+        c.shutdown();
+        assert_eq!(totals.corrupted, 4);
+        assert_eq!(totals.flagged, 4);
+        assert_eq!(totals.quarantined, 2);
+    }
+
+    #[test]
+    fn all_corrupt_batch_is_detected_but_unrecoverable() {
+        // N=4, B=2 (g=2), verify_m=2: both replicas of batch 0 corrupt.
+        // Their worker-dependent perturbations disagree with each other
+        // too, so the vote detects the conflict but cannot attribute it
+        // (no 2-group exists): the earliest value is accepted
+        // best-effort, a degradation is counted, and nobody is flagged
+        // or quarantined.
+        use crate::fault::{FaultEvent, FaultPlan};
+        let mut cfg = test_cfg(4, 2);
+        cfg.verify_m = 2;
+        let mut c = Coordinator::new(cfg, Backend::Mock).unwrap();
+        let plan = FaultPlan {
+            name: "cc".into(),
+            seed: 3,
+            events: vec![
+                (0, FaultEvent::Corruption { from_round: 0, prob: 1.0 }),
+                (1, FaultEvent::Corruption { from_round: 0, prob: 1.0 }),
+            ],
+        };
+        c.install_fault_plan(&plan).unwrap();
+        for round in 0..3 {
+            let res = c.run_round(JobSpec::Grad { w: Arc::new(vec![0.0; 4]) }).unwrap();
+            let e = res.events;
+            assert_eq!(e.corrupted, 2, "round {round}");
+            assert_eq!(e.degradations, 1, "round {round}: detected but unrecoverable");
+            assert_eq!(e.flagged, 0, "round {round}: attribution impossible");
+            assert_eq!(e.quarantined, 0, "round {round}");
+            assert_eq!(c.live_workers(), 4, "round {round}");
+        }
+        c.shutdown();
     }
 }

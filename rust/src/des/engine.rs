@@ -91,6 +91,12 @@ pub struct EngineConfig {
     pub fail_prob: f64,
     /// Stall-detection timeout as a multiple of the mean batch service.
     pub relaunch_timeout_factor: f64,
+    /// Result-integrity strike budget: a worker flagged by replica
+    /// voting ([`Scenario::verify_m`]) this many times is quarantined
+    /// (marked dead, excluded from dispatch, respawned with backoff).
+    /// Only read by [`simulate_fault_rounds`]; the trial engines model
+    /// the m-of-g *latency* semantics but have no voting state.
+    pub verify_strikes: u64,
 }
 
 impl Default for EngineConfig {
@@ -100,6 +106,7 @@ impl Default for EngineConfig {
             redundancy: Redundancy::Upfront,
             fail_prob: 0.0,
             relaunch_timeout_factor: 3.0,
+            verify_strikes: 2,
         }
     }
 }
@@ -221,6 +228,8 @@ pub struct Workspace {
     start_time: Vec<f64>,
     unit_covered: Vec<bool>,
     batch_done: Vec<bool>,
+    /// Replica finishes collected per batch (m-of-g verification).
+    batch_hits: Vec<u32>,
     cancelled: Vec<bool>,
 }
 
@@ -296,8 +305,17 @@ pub fn simulate_one_with(
     let b = scn.assignment.n_batches;
     let s = scn.batch_units();
 
-    let Workspace { queue, wave, start_time, unit_covered, batch_done, cancelled } = ws;
+    let Workspace { queue, wave, start_time, unit_covered, batch_done, batch_hits, cancelled } =
+        ws;
     queue.clear();
+
+    // m-of-g verification: a batch completes (and cancels its losers)
+    // only at its `quorum`-th replica finish. `with_verify_m` guarantees
+    // every batch has at least `quorum` replicas; the supported regime
+    // is `fail_prob == 0` (see [`crate::evaluator::DesEvaluator`]'s
+    // named refusal), where launched waves never lose replicas and the
+    // quorum is therefore always reachable without a relaunch.
+    let quorum = scn.verify_m.unwrap_or(1) as u32;
 
     // Stall-detection timeout for crash relaunch (only needed when
     // failures are injected).
@@ -360,6 +378,8 @@ pub fn simulate_one_with(
     let mut units_left = n_units;
     batch_done.clear();
     batch_done.resize(b, false);
+    batch_hits.clear();
+    batch_hits.resize(b, 0);
     let mut batches_done = 0usize;
     cancelled.clear();
     cancelled.resize(n, false);
@@ -382,6 +402,16 @@ pub fn simulate_one_with(
                     // A sibling already finished this batch (cancellation
                     // disabled, or completion raced the cancel).
                     wasted.add(work);
+                    continue;
+                }
+                batch_hits[batch] += 1;
+                if batch_hits[batch] < quorum {
+                    // Quorum member before the m-th: the batch is still
+                    // waiting for more votes. Its work is busy (it is
+                    // part of the verification bill), not wasted. NaN
+                    // start_time marks it idle so the cancellation
+                    // sweeps below do not re-account its finished run.
+                    start_time[worker] = f64::NAN;
                     continue;
                 }
                 batch_done[batch] = true;
@@ -660,6 +690,7 @@ struct ReferenceWorkspace {
     start_time: Vec<f64>,
     unit_covered: Vec<bool>,
     batch_done: Vec<bool>,
+    batch_hits: Vec<u32>,
     cancelled: Vec<bool>,
 }
 
@@ -777,6 +808,10 @@ fn simulate_one_reference_with(
     let batch_done = &mut ws.batch_done;
     batch_done.clear();
     batch_done.resize(b, false);
+    let batch_hits = &mut ws.batch_hits;
+    batch_hits.clear();
+    batch_hits.resize(b, 0);
+    let quorum = scn.verify_m.unwrap_or(1) as u32;
     let mut batches_done = 0usize;
     let cancelled = &mut ws.cancelled;
     cancelled.clear();
@@ -798,6 +833,13 @@ fn simulate_one_reference_with(
                 busy += work;
                 if batch_done[batch] {
                     wasted += work;
+                    continue;
+                }
+                batch_hits[batch] += 1;
+                if batch_hits[batch] < quorum {
+                    // Pre-m quorum member: busy, not wasted; NaN marks
+                    // it idle so cancellation sweeps skip it.
+                    start_time[worker] = f64::NAN;
                     continue;
                 }
                 batch_done[batch] = true;
@@ -932,6 +974,16 @@ pub struct FaultRoundStats {
     pub degradations: u64,
     /// Tasks dropped before dispatch this round.
     pub dropped: u64,
+    /// Results returned corrupted this round (the plan's corruption
+    /// coin — a pure function of `(seed, worker, round)`, so this
+    /// column is replicate-invariant like the counters above).
+    pub corrupted: u64,
+    /// Corrupt replicas flagged by m-of-g voting this round (zero when
+    /// `Scenario::verify_m` is off — corruption is then invisible).
+    pub flagged: u64,
+    /// Workers quarantined at the end of this round (strike budget
+    /// exhausted; they re-enter through the respawn machinery).
+    pub quarantined: u64,
     /// Workers alive at the end of the round.
     pub live_workers: usize,
 }
@@ -987,6 +1039,30 @@ fn fault_covered(
 /// round `completion` estimates the same injected observable the live
 /// run records — the live↔DES fault conformance contract.
 ///
+/// **Result integrity** (PR 8): when the plan carries
+/// [`crate::fault::FaultEvent::Corruption`] events, a completable
+/// result is silently corrupted per the plan's deterministic coin
+/// ([`crate::fault::CompiledPlan::corrupts_result`] — no RNG consumed,
+/// so the PR-7 draw streams are byte-identical). With
+/// [`Scenario::verify_m`] set, every batch waits for its m-th replica
+/// and votes: honest replicas agree bit-exactly, corrupt ones agree
+/// with nobody (the live perturbation is worker-dependent), so the
+/// batch accepts at the first arrival where some agreement group has
+/// ≥ 2 members and ≥ m results are in (arrival order, exact-time ties
+/// by worker index under `total_cmp`). Flagging is modeled
+/// *plan-deterministically*: every corrupt completable replica of a
+/// batch with ≥ 2 honest comparators is flagged (struck), so the
+/// flagged/quarantined schedule — and therefore `live_workers` — stays
+/// replicate-invariant (the chaos harness's cross-replicate identity
+/// check). A worker reaching `cfg.verify_strikes` strikes is
+/// quarantined at end of round: marked dead and handed to the respawn
+/// machinery with the crash backoff
+/// ([`crate::fault::QUARANTINE_RESPAWN_ROUNDS`] doubling per attempt);
+/// its strikes reset on respawn. A batch with fewer than 2 honest
+/// replicas is detected-but-unrecoverable: the earliest value is
+/// accepted at the last arrival, a degradation is counted, and nobody
+/// is flagged (attribution is impossible).
+///
 /// Upfront redundancy and disjoint layouts only; the existing engine
 /// RNG streams are untouched (callers pass their own `rng`).
 pub fn simulate_fault_rounds(
@@ -1018,18 +1094,26 @@ pub fn simulate_fault_rounds(
     let mut dead = vec![false; n];
     let mut respawn_at: Vec<Option<u64>> = vec![None; n];
     let mut respawn_attempts = vec![0u32; n];
+    let mut strikes = vec![0u64; n];
+    let verify_m = scn.verify_m;
+    let strikes_limit = cfg.verify_strikes.max(1);
     let mut batch_time: Vec<f64> = Vec::new();
+    // Completable replicas per batch: (finish time, worker, corrupt).
+    let mut batch_votes: Vec<Vec<(f64, usize, bool)>> = Vec::new();
     let mut out = Vec::with_capacity(rounds as usize);
 
     for round in 0..rounds {
         let (mut crashes, mut respawns, mut relaunches) = (0u64, 0u64, 0u64);
         let (mut degradations, mut dropped) = (0u64, 0u64);
+        let (mut corrupted, mut flagged, mut quarantined) = (0u64, 0u64, 0u64);
 
-        // Respawns due at round start.
+        // Respawns due at round start (strikes reset with the fresh
+        // process — a respawned worker starts with a clean record).
         for w in 0..n {
             if dead[w] && respawn_at[w].is_some_and(|at| round >= at) {
                 respawn_at[w] = None;
                 dead[w] = false;
+                strikes[w] = 0;
                 respawns += 1;
             }
         }
@@ -1081,9 +1165,15 @@ pub fn simulate_fault_rounds(
         let s_units = batch_units as u64;
 
         // Dispatch draws in worker id order (the live RNG order); a
-        // crashing replica consumes its draw but never completes.
+        // crashing replica consumes its draw but never completes. The
+        // corruption coin is a pure function of the plan — it consumes
+        // no RNG, so these streams are byte-identical to PR-7 runs.
         batch_time.clear();
         batch_time.resize(b, f64::INFINITY);
+        batch_votes.resize_with(b, Vec::new);
+        for v in batch_votes.iter_mut() {
+            v.clear();
+        }
         for w in 0..n {
             if dead[w] {
                 continue;
@@ -1099,7 +1189,13 @@ pub fn simulate_fault_rounds(
             }
             let batch = assignment.batch_of_worker[w];
             let t = draw * speed;
-            if t < batch_time[batch] {
+            let corrupt = plan.corrupts_result(w, round);
+            if corrupt {
+                corrupted += 1;
+            }
+            if verify_m.is_some() {
+                batch_votes[batch].push((t, w, corrupt));
+            } else if t < batch_time[batch] {
                 batch_time[batch] = t;
             }
         }
@@ -1108,8 +1204,12 @@ pub fn simulate_fault_rounds(
         // replica, in batch order (fresh draw, drop coin not
         // re-flipped) — matching the live relaunch of such batches at
         // their near-immediate deadline.
-        for (bi, t) in batch_time.iter_mut().enumerate() {
-            if t.is_finite() {
+        for bi in 0..b {
+            let starved = match verify_m {
+                Some(_) => batch_votes[bi].is_empty(),
+                None => !batch_time[bi].is_finite(),
+            };
+            if !starved {
                 continue;
             }
             let target = assignment.workers_of_batch[bi]
@@ -1119,8 +1219,71 @@ pub fn simulate_fault_rounds(
             let Some(w) = target else { continue };
             let speed = scn.worker_speeds.as_ref().map_or(1.0, |sp| sp[w]);
             let draw = scn.service.sample_batch(s_units, rng) * plan.slow_factor(w, round);
-            *t = draw * speed;
+            let t = draw * speed;
+            if verify_m.is_some() {
+                let corrupt = plan.corrupts_result(w, round);
+                if corrupt {
+                    corrupted += 1;
+                }
+                batch_votes[bi].push((t, w, corrupt));
+            } else {
+                batch_time[bi] = t;
+            }
             relaunches += 1;
+        }
+
+        // m-of-g voting: per batch, accept at the first arrival where
+        // some agreement group has ≥ 2 members and ≥ m results are in
+        // (arrival order; exact-time ties by worker index). Honest
+        // replicas agree bit-exactly, corrupt ones with nobody.
+        let mut to_quarantine: Vec<usize> = Vec::new();
+        if let Some(m) = verify_m {
+            for (bi, votes) in batch_votes.iter_mut().enumerate().take(b) {
+                if votes.is_empty() {
+                    continue; // no live replica at all; caught below
+                }
+                votes.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                let honest = votes.iter().filter(|v| !v.2).count();
+                let corrupt_n = votes.len() - honest;
+                let mut h_seen = 0usize;
+                let mut accept = None;
+                for (i, v) in votes.iter().enumerate() {
+                    if !v.2 {
+                        h_seen += 1;
+                    }
+                    if h_seen >= 2 && i + 1 >= m {
+                        accept = Some(v.0);
+                        break;
+                    }
+                }
+                // No accepting prefix: the batch exhausted its replicas
+                // (quorum short, or < 2 honest comparators). It resolves
+                // at the last arrival with the earliest value.
+                batch_time[bi] =
+                    accept.unwrap_or_else(|| votes.last().expect("nonempty").0);
+                if corrupt_n > 0 {
+                    if honest >= 2 {
+                        // Voting succeeded: every corrupt replica of
+                        // this batch is flagged (plan-deterministic, so
+                        // the quarantine schedule is replicate-invariant
+                        // — the chaos identity-key contract).
+                        for v in votes.iter().filter(|v| v.2) {
+                            flagged += 1;
+                            strikes[v.1] += 1;
+                            if strikes[v.1] >= strikes_limit
+                                && !to_quarantine.contains(&v.1)
+                            {
+                                to_quarantine.push(v.1);
+                            }
+                        }
+                    } else {
+                        // Detected-but-unrecoverable: disagreement with
+                        // no attributable majority. Nobody is flagged;
+                        // the round degrades.
+                        degradations += 1;
+                    }
+                }
+            }
         }
 
         // Round completion: k-th finished batch or full coverage.
@@ -1154,6 +1317,22 @@ pub fn simulate_fault_rounds(
                 }
             }
         }
+        // Strike-budget quarantine, also at end of round (the worker's
+        // rejected result is already accounted): exclude from dispatch
+        // and hand to the respawn machinery with the crash backoff. A
+        // worker that crashed this same round is already dead.
+        for &w in &to_quarantine {
+            if dead[w] {
+                continue;
+            }
+            dead[w] = true;
+            quarantined += 1;
+            let backoff = 1u64 << respawn_attempts[w].min(3);
+            respawn_at[w] = Some(
+                round + crate::fault::QUARANTINE_RESPAWN_ROUNDS.saturating_mul(backoff),
+            );
+            respawn_attempts[w] = respawn_attempts[w].saturating_add(1);
+        }
         let live_workers = dead.iter().filter(|&&d| !d).count();
         out.push(FaultRoundStats {
             round,
@@ -1163,6 +1342,9 @@ pub fn simulate_fault_rounds(
             relaunches,
             degradations,
             dropped,
+            corrupted,
+            flagged,
+            quarantined,
             live_workers,
         });
     }
@@ -1596,6 +1778,174 @@ mod tests {
                 / refr.completion.mean().abs().max(1.0);
             assert!(rel <= 1e-9, "completion rel diff {rel}");
         });
+    }
+
+    #[test]
+    fn verify_m_engine_matches_verified_closed_form_and_cost() {
+        // The quorum path of the trial engine must reproduce both the
+        // m-of-g completion closed form and the order-statistic cost
+        // bill (analysis::verified_cost_stats).
+        let spec = ServiceSpec::shifted_exp(1.0, 0.25);
+        for (n, b, m) in [(12usize, 4usize, 2usize), (12, 3, 3), (24, 6, 2)] {
+            let s = scn(n, b, spec.clone()).with_verify_m(m).unwrap();
+            let sum = simulate_many(&s, &EngineConfig::default(), 60_000, 3);
+            let cf = crate::analysis::verified_completion_stats(
+                n as u64, b as u64, m as u64, b as u64, &spec,
+            )
+            .unwrap();
+            assert!(
+                (sum.completion.mean() - cf.mean).abs() < 4.0 * sum.completion.sem() + 0.01,
+                "n={n} b={b} m={m}: engine {} vs cf {}",
+                sum.completion.mean(),
+                cf.mean
+            );
+            let (busy, wasted) =
+                crate::analysis::verified_cost_stats(n as u64, b as u64, m as u64, &spec)
+                    .unwrap();
+            assert!(
+                (sum.busy.mean() - busy).abs() / busy < 0.02,
+                "n={n} b={b} m={m}: busy {} vs cf {busy}",
+                sum.busy.mean()
+            );
+            let w_scale = wasted.max(1.0);
+            assert!(
+                (sum.wasted.mean() - wasted).abs() / w_scale < 0.03,
+                "n={n} b={b} m={m}: wasted {} vs cf {wasted}",
+                sum.wasted.mean()
+            );
+        }
+    }
+
+    #[test]
+    fn verify_m_fast_and_reference_engines_agree() {
+        // Both engines must implement identical quorum semantics.
+        for (n, b, m) in [(12usize, 4usize, 2usize), (8, 2, 3), (12, 3, 4)] {
+            let s = scn(n, b, ServiceSpec::shifted_exp(1.0, 0.3))
+                .with_verify_m(m)
+                .unwrap();
+            for cancellation in [true, false] {
+                let cfg = EngineConfig { cancellation, ..EngineConfig::default() };
+                let fast = simulate_many(&s, &cfg, 500, 41);
+                let refr = simulate_many_reference(&s, &cfg, 500, 41);
+                assert_eq!(fast.total_events, refr.total_events, "n={n} b={b} m={m}");
+                let rel = (fast.completion.mean() - refr.completion.mean()).abs()
+                    / refr.completion.mean().max(1.0);
+                assert!(rel <= 1e-9, "n={n} b={b} m={m}: completion rel diff {rel}");
+                let relb =
+                    (fast.busy.mean() - refr.busy.mean()).abs() / refr.busy.mean().max(1.0);
+                assert!(relb <= 1e-9, "n={n} b={b} m={m}: busy rel diff {relb}");
+            }
+        }
+    }
+
+    #[test]
+    fn fault_rounds_flag_and_quarantine_a_corrupt_worker() {
+        use crate::fault::{FaultEvent, FaultPlan};
+        // Worker 0 corrupts every result from round 1 (prob 1). With
+        // g = 3 and verify_m = 2 its batch always has 2 honest
+        // comparators, so voting flags it each round; at the default
+        // 2-strike budget it is quarantined at the end of round 2 and
+        // respawns QUARANTINE_RESPAWN_ROUNDS = 2 rounds later with a
+        // clean strike record.
+        let s = scn(12, 4, ServiceSpec::shifted_exp(1.0, 0.2)).with_verify_m(2).unwrap();
+        let plan = FaultPlan {
+            name: "c".into(),
+            seed: 5,
+            events: vec![(0, FaultEvent::Corruption { from_round: 1, prob: 1.0 })],
+        }
+        .compile(12)
+        .unwrap();
+        let mut rng = Rng::new(7);
+        let stats =
+            simulate_fault_rounds(&s, &plan, 8, &EngineConfig::default(), &mut rng).unwrap();
+        assert_eq!(stats[0].corrupted, 0);
+        assert_eq!(stats[0].flagged, 0);
+        // Rounds 1, 2: corrupt, flagged; strike budget hits at round 2.
+        for r in [1usize, 2] {
+            assert_eq!(stats[r].corrupted, 1, "round {r}");
+            assert_eq!(stats[r].flagged, 1, "round {r}");
+            assert_eq!(stats[r].degradations, 0, "round {r}");
+        }
+        assert_eq!(stats[1].quarantined, 0);
+        assert_eq!(stats[2].quarantined, 1);
+        assert_eq!(stats[2].live_workers, 11);
+        // Quarantined ⇒ excluded from dispatch: no corrupt results
+        // while dead (the never-dispatched property, DES side).
+        assert_eq!(stats[3].corrupted, 0);
+        assert_eq!(stats[3].live_workers, 11);
+        // Respawn at 2 + 2: back at round 4, strikes reset, so the
+        // second quarantine needs two fresh flags (rounds 4 and 5) and
+        // backs off twice as long.
+        assert_eq!(stats[4].respawns, 1);
+        assert_eq!(stats[4].flagged, 1);
+        assert_eq!(stats[4].quarantined, 0, "strike record was reset on respawn");
+        assert_eq!(stats[5].quarantined, 1);
+        for st in &stats {
+            assert!(st.completion.is_finite() && st.completion > 0.0);
+        }
+        // Plan-deterministic schedule: bit-identical on a fresh RNG.
+        let mut rng2 = Rng::new(7);
+        let again =
+            simulate_fault_rounds(&s, &plan, 8, &EngineConfig::default(), &mut rng2).unwrap();
+        assert_eq!(stats, again);
+    }
+
+    #[test]
+    fn fault_rounds_all_corrupt_batch_is_detected_but_unrecoverable() {
+        use crate::fault::{FaultEvent, FaultPlan};
+        // Workers 0 and 1 are both replicas of batch 0 (balanced 8/4,
+        // g = 2) and both corrupt from round 1: voting sees full
+        // disagreement with < 2 honest comparators — detected but
+        // unrecoverable, counted as a degradation, nobody flagged.
+        let s = scn(8, 4, ServiceSpec::shifted_exp(1.0, 0.2)).with_verify_m(2).unwrap();
+        let plan = FaultPlan {
+            name: "cc".into(),
+            seed: 3,
+            events: vec![
+                (0, FaultEvent::Corruption { from_round: 1, prob: 1.0 }),
+                (1, FaultEvent::Corruption { from_round: 1, prob: 1.0 }),
+            ],
+        }
+        .compile(8)
+        .unwrap();
+        let mut rng = Rng::new(19);
+        let stats =
+            simulate_fault_rounds(&s, &plan, 4, &EngineConfig::default(), &mut rng).unwrap();
+        assert_eq!(stats[0].degradations, 0);
+        for r in 1..4 {
+            assert_eq!(stats[r].corrupted, 2, "round {r}");
+            assert_eq!(stats[r].flagged, 0, "round {r}: attribution impossible");
+            assert_eq!(stats[r].quarantined, 0, "round {r}");
+            assert_eq!(stats[r].degradations, 1, "round {r}");
+            assert_eq!(stats[r].live_workers, 8, "round {r}");
+            assert!(stats[r].completion.is_finite());
+        }
+    }
+
+    #[test]
+    fn fault_rounds_without_verification_accept_corruption_silently() {
+        use crate::fault::{FaultEvent, FaultPlan};
+        // verify_m off: corruption is counted (the plan's coin is
+        // observable) but nothing is flagged — the blind spot the
+        // integrity layer exists to close.
+        let s = scn(8, 4, ServiceSpec::shifted_exp(1.0, 0.2));
+        let plan = FaultPlan {
+            name: "s".into(),
+            seed: 3,
+            events: vec![(2, FaultEvent::Corruption { from_round: 0, prob: 1.0 })],
+        }
+        .compile(8)
+        .unwrap();
+        let mut rng = Rng::new(23);
+        let stats =
+            simulate_fault_rounds(&s, &plan, 3, &EngineConfig::default(), &mut rng).unwrap();
+        for st in &stats {
+            assert_eq!(st.corrupted, 1);
+            assert_eq!(st.flagged, 0);
+            assert_eq!(st.quarantined, 0);
+            assert_eq!(st.degradations, 0);
+            assert_eq!(st.live_workers, 8);
+        }
     }
 
     #[test]

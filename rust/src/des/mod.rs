@@ -56,6 +56,14 @@ pub struct Scenario {
     /// completes the round at the k-th finished batch and cancels the
     /// rest.
     pub k_of_b: Option<usize>,
+    /// Result-integrity verification: a batch completes only once its
+    /// `m`-th replica has finished (m-of-g voting — see
+    /// [`crate::analysis::verified_completion_stats`]). `None` / `m = 1`
+    /// = paper semantics (first replica wins, rest cancelled). Consumed
+    /// by all four backends; the live coordinator additionally votes on
+    /// the `m` collected values, flags disagreeing replicas, and
+    /// quarantines repeat offenders.
+    pub verify_m: Option<usize>,
     /// Root RNG seed: all stochastic backends derive their randomness
     /// from it, so results are bit-reproducible given one scenario.
     pub seed: u64,
@@ -85,6 +93,7 @@ impl Scenario {
             policy: ReplicationPolicy::Custom,
             redundancy: engine::Redundancy::Upfront,
             k_of_b: None,
+            verify_m: None,
             seed: DEFAULT_SEED,
         })
     }
@@ -134,6 +143,27 @@ impl Scenario {
             self.assignment.n_batches
         );
         self.k_of_b = Some(k);
+        Ok(self)
+    }
+
+    /// Set the m-of-g verification level: every batch waits for its
+    /// `m`-th replica before completing (`m = 1` is a no-op and is
+    /// normalized back to `None`). Refused — naming the offending
+    /// field — when `m` exceeds the *minimum* replication degree of
+    /// any batch, since such a batch could never collect `m` results.
+    pub fn with_verify_m(mut self, m: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(m >= 1, "Scenario::verify_m must be >= 1, got {m}");
+        let min_degree = (0..self.assignment.n_batches)
+            .map(|b| self.assignment.replication(b))
+            .min()
+            .unwrap_or(0);
+        anyhow::ensure!(
+            m <= min_degree,
+            "Scenario::verify_m = {m} exceeds the minimum replication degree {min_degree}: \
+             some batch has only {min_degree} replica(s) and can never collect {m} votes \
+             (raise replication or lower verify_m)"
+        );
+        self.verify_m = if m >= 2 { Some(m) } else { None };
         Ok(self)
     }
 
@@ -198,6 +228,25 @@ mod tests {
         assert!(s.clone().with_k_of_b(0).is_err());
         assert!(s.clone().with_k_of_b(5).is_err());
         assert_eq!(s.with_k_of_b(3).unwrap().k_of_b, Some(3));
+    }
+
+    #[test]
+    fn verify_m_checked_against_min_replication_degree() {
+        let svc = BatchService::paper(ServiceSpec::exp(1.0));
+        // Balanced disjoint 8 workers / 4 batches: g = 2 everywhere.
+        let s = Scenario::paper_balanced(8, 4, svc.clone()).unwrap();
+        assert_eq!(s.verify_m, None);
+        assert!(s.clone().with_verify_m(0).is_err());
+        assert_eq!(s.clone().with_verify_m(1).unwrap().verify_m, None);
+        assert_eq!(s.clone().with_verify_m(2).unwrap().verify_m, Some(2));
+        // m = 3 exceeds g = 2 — the refusal names the field and degree.
+        let err = s.with_verify_m(3).unwrap_err().to_string();
+        assert!(err.contains("Scenario::verify_m"), "{err}");
+        assert!(err.contains("minimum replication degree 2"), "{err}");
+        // g = 1 (no replication at all) refuses any m >= 2.
+        let lone = Scenario::paper_balanced(4, 4, svc).unwrap();
+        let err = lone.with_verify_m(2).unwrap_err().to_string();
+        assert!(err.contains("minimum replication degree 1"), "{err}");
     }
 
     #[test]

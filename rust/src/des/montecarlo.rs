@@ -72,6 +72,8 @@ pub struct TrialScratch {
     generation: u32,
     /// Per-batch earliest-replica times (k-of-B partial aggregation).
     batch_min: Vec<f64>,
+    /// Per-replica times of one batch (m-of-g verified completion).
+    replica: Vec<f64>,
 }
 
 impl TrialScratch {
@@ -91,6 +93,9 @@ impl TrialScratch {
     /// Completion time of the trial stored at `times[lo .. lo+n]`.
     #[inline]
     fn completion_at(&mut self, scn: &Scenario, lo: usize) -> f64 {
+        if let Some(m) = scn.verify_m {
+            return self.verified_completion_at(scn, lo, m);
+        }
         if let Some(k) = scn.k_of_b {
             return self.partial_completion_at(scn, lo, k);
         }
@@ -154,6 +159,35 @@ impl TrialScratch {
         let (_, kth, _) = self.batch_min.select_nth_unstable_by(k - 1, f64::total_cmp);
         *kth
     }
+
+    /// m-of-g verified completion of the trial at `times[lo .. lo+n]`:
+    /// a batch completes at the m-th order statistic of its replica
+    /// finish times (the voting quorum), and the job at the k-th
+    /// earliest batch (k = B when no partial-aggregation target).
+    /// `with_verify_m` guarantees every batch has ≥ m replicas.
+    #[inline]
+    fn verified_completion_at(&mut self, scn: &Scenario, lo: usize, m: usize) -> f64 {
+        self.batch_min.clear();
+        for ws in &scn.assignment.workers_of_batch {
+            self.replica.clear();
+            for &w in ws {
+                self.replica.push(self.times[lo + w]);
+            }
+            let mi = m.clamp(1, self.replica.len());
+            let (_, mth, _) = self.replica.select_nth_unstable_by(mi - 1, f64::total_cmp);
+            let t = *mth;
+            self.batch_min.push(t);
+        }
+        match scn.k_of_b {
+            Some(k) => {
+                let k = k.clamp(1, self.batch_min.len());
+                let (_, kth, _) =
+                    self.batch_min.select_nth_unstable_by(k - 1, f64::total_cmp);
+                *kth
+            }
+            None => self.batch_min.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
 }
 
 /// Disjoint-layout reduction: per-batch earliest replica, then the
@@ -213,6 +247,25 @@ pub fn sample_completion_into(scn: &Scenario, rng: &mut Rng, scratch: &mut Trial
 /// coordinator's post-hoc validation, and the property tests that pin
 /// the scratch-based fast paths to it.
 pub fn completion_from_times(scn: &Scenario, times: &[f64]) -> f64 {
+    if let Some(m) = scn.verify_m {
+        // m-of-g verification: every batch waits for its m-th replica;
+        // the job completes at the k-th batch (k = B without a partial
+        // target).
+        let mut batch: Vec<f64> = scn
+            .assignment
+            .workers_of_batch
+            .iter()
+            .map(|ws| {
+                let mut xs: Vec<f64> = ws.iter().map(|&w| times[w]).collect();
+                let mi = m.clamp(1, xs.len());
+                let (_, mth, _) = xs.select_nth_unstable_by(mi - 1, f64::total_cmp);
+                *mth
+            })
+            .collect();
+        batch.sort_unstable_by(f64::total_cmp);
+        let k = scn.k_of_b.unwrap_or(batch.len()).clamp(1, batch.len());
+        return batch[k - 1];
+    }
     if let Some(k) = scn.k_of_b {
         // k-of-B: the k-th earliest batch completion (a batch completes
         // when its earliest replica finishes), regardless of layout.
@@ -342,11 +395,11 @@ fn reference_sample_completion(scn: &Scenario, rng: &mut Rng, scratch: &mut Vec<
     scratch.clear();
     match &scn.worker_speeds {
         None => {
-            if !scn.layout.is_overlapping && scn.k_of_b.is_none() {
+            if !scn.layout.is_overlapping && scn.k_of_b.is_none() && scn.verify_m.is_none() {
                 // Homogeneous disjoint fast path of the pre-block code:
                 // fold directly without materializing times at all.
-                // (k-of-B postdates this baseline; those scenarios take
-                // the generic reduction below.)
+                // (k-of-B and verify_m postdate this baseline; those
+                // scenarios take the generic reduction below.)
                 let mut worst = f64::NEG_INFINITY;
                 for ws in &scn.assignment.workers_of_batch {
                     let mut best = f64::INFINITY;
@@ -679,6 +732,54 @@ mod tests {
     }
 
     #[test]
+    fn verify_m_matches_verified_closed_form() {
+        // The m-of-g MC path must reproduce the polynomial closed form
+        // (analysis::verified_completion_stats) for both full and
+        // partial completion.
+        let spec = ServiceSpec::shifted_exp(1.0, 0.3);
+        for (n, b, m, k) in
+            [(24u64, 4u64, 2u64, 4u64), (24, 4, 3, 4), (12, 3, 2, 2), (24, 6, 2, 6)]
+        {
+            let mut scn = paper_scn(n as usize, b as usize, spec.clone())
+                .with_verify_m(m as usize)
+                .unwrap();
+            if k < b {
+                scn = scn.with_k_of_b(k as usize).unwrap();
+            }
+            let mc = run_trials(&scn, 150_000, 17);
+            let cf =
+                crate::analysis::verified_completion_stats(n, b, m, k, &spec).unwrap();
+            assert!(
+                (mc.mean() - cf.mean).abs() < 4.0 * mc.ci95().max(1e-3),
+                "n={n} B={b} m={m} k={k}: mc {} vs cf {}",
+                mc.mean(),
+                cf.mean
+            );
+            let rel_var = (mc.variance() - cf.var).abs() / cf.var;
+            assert!(
+                rel_var < 0.06,
+                "n={n} B={b} m={m} k={k}: var mc {} vs cf {}",
+                mc.variance(),
+                cf.var
+            );
+        }
+    }
+
+    #[test]
+    fn verify_m_1_is_bitwise_the_unverified_stream() {
+        // m = 1 normalizes to None in with_verify_m, so the block
+        // sampler's stream is untouched — the PR-7 bit-compat guarantee.
+        let base = paper_scn(12, 4, ServiceSpec::shifted_exp(1.0, 0.2));
+        let normalized = paper_scn(12, 4, ServiceSpec::shifted_exp(1.0, 0.2))
+            .with_verify_m(1)
+            .unwrap();
+        let a = run_trials(&base, 20_000, 3);
+        let b = run_trials(&normalized, 20_000, 3);
+        assert_eq!(a.mean().to_bits(), b.mean().to_bits());
+        assert_eq!(a.variance().to_bits(), b.variance().to_bits());
+    }
+
+    #[test]
     fn k_of_b_full_equals_unrestricted_on_disjoint_layouts() {
         // k = B on a disjoint layout is the ordinary completion: the
         // k-th smallest batch min is the max, bit-for-bit.
@@ -799,6 +900,13 @@ mod tests {
             if g.coin(0.4) {
                 let bb = scn.assignment.n_batches;
                 scn = scn.with_k_of_b(g.usize_in(1, bb)).unwrap();
+            }
+            let g_min = (0..scn.assignment.n_batches)
+                .map(|bb| scn.assignment.replication(bb))
+                .min()
+                .unwrap_or(1);
+            if g_min >= 2 && g.coin(0.4) {
+                scn = scn.with_verify_m(g.usize_in(2, g_min)).unwrap();
             }
             let seed = g.u64_in(0, 1 << 40);
             let mut scratch = TrialScratch::new();

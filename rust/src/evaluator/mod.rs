@@ -303,6 +303,61 @@ impl Evaluator for AnalyticEvaluator {
                 scn.service.spec.name()
             )
         })?;
+        if let Some(m) = scn.verify_m {
+            anyhow::ensure!(
+                scn.worker_speeds.is_none(),
+                "analytic evaluator cannot combine Scenario::verify_m = Some({m}) with \
+                 heterogeneous Scenario::worker_speeds; use the montecarlo or des backend"
+            );
+            let b = scn.assignment.n_batches;
+            anyhow::ensure!(
+                scn.assignment.is_balanced(),
+                "closed-form m-of-g verification needs a balanced assignment; \
+                 Scenario::verify_m = Some({m}) with an unbalanced Scenario::assignment \
+                 (degrees {:?})",
+                (0..b).map(|i| scn.assignment.replication(i)).collect::<Vec<_>>()
+            );
+            anyhow::ensure!(
+                scn.layout.n_units == scn.assignment.n_workers,
+                "closed-form m-of-g verification uses the paper normalization U = N; \
+                 Scenario::layout.n_units = {} with {} workers",
+                scn.layout.n_units,
+                scn.assignment.n_workers
+            );
+            let n = scn.assignment.n_workers as u64;
+            let k = scn.k_of_b.unwrap_or(b) as u64;
+            // m-th order statistic per batch composed with k-of-B
+            // (analysis::verified_completion_stats, N <= 32). The cost
+            // closed form assumes every batch verifies, so partial
+            // aggregation reports completion only.
+            let st = crate::analysis::verified_completion_stats(
+                n,
+                b as u64,
+                m as u64,
+                k,
+                &scn.service.spec,
+            )?;
+            let cost = if k == b as u64 {
+                let (busy, wasted) = crate::analysis::verified_cost_stats(
+                    n,
+                    b as u64,
+                    m as u64,
+                    &scn.service.spec,
+                )?;
+                Some(CostStats { busy, wasted })
+            } else {
+                None
+            };
+            return Ok(CompletionStats {
+                mean: st.mean,
+                variance: st.var,
+                quantiles: Vec::new(),
+                cost,
+                sem: 0.0,
+                samples: 0,
+                overhead: None,
+            });
+        }
         if let Some(speeds) = &scn.worker_speeds {
             return self.evaluate_hetero(scn, speeds);
         }
@@ -612,11 +667,27 @@ impl Evaluator for DesEvaluator {
 
     fn evaluate(&self, scn: &Scenario) -> anyhow::Result<CompletionStats> {
         anyhow::ensure!(self.trials >= 1, "need at least one trial");
+        if let Some(m) = scn.verify_m {
+            anyhow::ensure!(
+                self.fail_prob == 0.0,
+                "des evaluator cannot combine Scenario::verify_m = Some({m}) with crash \
+                 injection fail_prob = {}; corruption-under-crash studies run through \
+                 the fault-round loop (simulate_fault_rounds / `batchrep chaos`)",
+                self.fail_prob
+            );
+            anyhow::ensure!(
+                scn.redundancy == Redundancy::Upfront,
+                "des evaluator models m-of-g verification for upfront replication only; \
+                 Scenario::verify_m = Some({m}) with Scenario::redundancy = {:?}",
+                scn.redundancy
+            );
+        }
         let cfg = EngineConfig {
             cancellation: self.cancellation,
             redundancy: scn.redundancy,
             fail_prob: self.fail_prob,
             relaunch_timeout_factor: self.relaunch_timeout_factor,
+            ..EngineConfig::default()
         };
         let sum = simulate_many_parallel(scn, &cfg, self.trials, scn.seed, self.threads);
         Ok(stats_from_des(sum))
@@ -1197,6 +1268,81 @@ mod tests {
         assert!(msg.contains("Scenario::worker_speeds"), "{msg}");
         assert!(msg.contains("Scenario::k_of_b = Some(2)"), "{msg}");
         assert!(msg.contains("1.250"), "{msg}");
+    }
+
+    #[test]
+    fn analytic_verify_m_matches_closed_forms_and_simulation() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let scn = paper_scn(12, 4, spec.clone(), 3).with_verify_m(2).unwrap();
+        let st = AnalyticEvaluator.evaluate(&scn).unwrap();
+        let cf = analysis::verified_completion_stats(12, 4, 2, 4, &spec).unwrap();
+        assert_eq!(st.mean.to_bits(), cf.mean.to_bits());
+        assert_eq!(st.variance.to_bits(), cf.var.to_bits());
+        let cost = st.cost.unwrap();
+        let (busy, wasted) = analysis::verified_cost_stats(12, 4, 2, &spec).unwrap();
+        assert_eq!(cost.busy.to_bits(), busy.to_bits());
+        assert_eq!(cost.wasted.to_bits(), wasted.to_bits());
+        assert_eq!((st.samples, st.sem), (0, 0.0));
+        // Waiting for the 2nd vote costs latency over first-replica-wins.
+        let base = AnalyticEvaluator.evaluate(&paper_scn(12, 4, spec.clone(), 3)).unwrap();
+        assert!(st.mean > base.mean, "verified {} !> unverified {}", st.mean, base.mean);
+        // The simulation backends consume the same scenario and agree.
+        let mc = MonteCarloEvaluator { trials: 60_000, threads: 2 }.evaluate(&scn).unwrap();
+        assert!(
+            (mc.mean - st.mean).abs() < 4.0 * mc.sem.max(1e-3),
+            "mc {} vs exact {}",
+            mc.mean,
+            st.mean
+        );
+        let des = DesEvaluator { trials: 60_000, threads: 2, ..DesEvaluator::default() }
+            .evaluate(&scn)
+            .unwrap();
+        assert!(
+            (des.mean - st.mean).abs() < 4.0 * des.sem.max(1e-3),
+            "des {} vs exact {}",
+            des.mean,
+            st.mean
+        );
+        // k-of-B composes with m-of-g: the k-th verified batch ends the
+        // job, faster than full verification, priced without cost.
+        let scn_k =
+            paper_scn(12, 4, spec.clone(), 3).with_verify_m(2).unwrap().with_k_of_b(3).unwrap();
+        let st_k = AnalyticEvaluator.evaluate(&scn_k).unwrap();
+        let cf_k = analysis::verified_completion_stats(12, 4, 2, 3, &spec).unwrap();
+        assert_eq!(st_k.mean.to_bits(), cf_k.mean.to_bits());
+        assert!(st_k.cost.is_none());
+        assert!(st_k.mean < st.mean);
+        let mc_k = MonteCarloEvaluator { trials: 60_000, threads: 2 }.evaluate(&scn_k).unwrap();
+        assert!(
+            (mc_k.mean - st_k.mean).abs() < 4.0 * mc_k.sem.max(1e-3),
+            "mc k-of-B {} vs exact {}",
+            mc_k.mean,
+            st_k.mean
+        );
+    }
+
+    #[test]
+    fn verify_m_refusals_name_the_offending_fields() {
+        let spec = ServiceSpec::shifted_exp(1.0, 0.2);
+        let scn = paper_scn(12, 4, spec.clone(), 3).with_verify_m(2).unwrap();
+        // DES refuses verification combined with crash injection.
+        let ev = DesEvaluator { fail_prob: 0.1, ..DesEvaluator::default() };
+        let msg = ev.evaluate(&scn).unwrap_err().to_string();
+        assert!(msg.contains("Scenario::verify_m"), "{msg}");
+        assert!(msg.contains("fail_prob"), "{msg}");
+        // Analytic refuses heterogeneous speeds under verification.
+        let hetero = paper_scn(12, 4, spec.clone(), 3)
+            .with_speeds(vec![1.0; 12])
+            .unwrap()
+            .with_verify_m(2)
+            .unwrap();
+        let msg = AnalyticEvaluator.evaluate(&hetero).unwrap_err().to_string();
+        assert!(msg.contains("Scenario::verify_m"), "{msg}");
+        assert!(msg.contains("worker_speeds"), "{msg}");
+        // The verified closed form is limited to N <= 32.
+        let big = paper_scn(36, 6, spec, 3).with_verify_m(2).unwrap();
+        let msg = AnalyticEvaluator.evaluate(&big).unwrap_err().to_string();
+        assert!(msg.contains("32"), "{msg}");
     }
 
     #[test]

@@ -44,6 +44,10 @@ pub struct ChaosSpec {
     pub replicates: u64,
     /// Root seed for the replicate shard plan.
     pub seed: u64,
+    /// Result-integrity vote size `m` (0 or 1 disables verification;
+    /// `m >= 2` makes each batch wait for `m` replicas and vote, so
+    /// the plan's `corruption` events become detectable).
+    pub verify_m: u64,
 }
 
 impl ChaosSpec {
@@ -79,6 +83,7 @@ impl ChaosSpec {
             rounds: 40,
             replicates: 16,
             seed: 42,
+            verify_m: 0,
         }
     }
 
@@ -94,6 +99,7 @@ impl ChaosSpec {
             rounds: 48,
             replicates: 16,
             seed: 42,
+            verify_m: 0,
         }
     }
 
@@ -166,6 +172,7 @@ impl ChaosSpec {
             rounds: get_u("rounds", base.rounds)?,
             replicates: get_u("replicates", base.replicates)?,
             seed: get_u("seed", base.seed)?,
+            verify_m: get_u("verify_m", 0)?,
         })
     }
 
@@ -179,6 +186,7 @@ impl ChaosSpec {
             ("rounds", (self.rounds as i64).into()),
             ("replicates", (self.replicates as i64).into()),
             ("seed", (self.seed as i64).into()),
+            ("verify_m", (self.verify_m as i64).into()),
             ("plan", self.plan.to_json()),
         ])
     }
@@ -196,6 +204,14 @@ impl ChaosSpec {
         );
         anyhow::ensure!(self.rounds >= 1, "rounds must be >= 1");
         anyhow::ensure!(self.replicates >= 1, "replicates must be >= 1");
+        if self.verify_m > 0 {
+            let degree = (self.n_workers / self.n_batches) as u64;
+            anyhow::ensure!(
+                self.verify_m <= degree,
+                "verify_m = {} exceeds the replication degree {degree}",
+                self.verify_m
+            );
+        }
         self.plan.validate(self.n_workers)
     }
 
@@ -216,12 +232,15 @@ impl ChaosSpec {
 /// random variable and gets mean/sem aggregation.
 pub fn run_chaos(spec: &ChaosSpec, threads: usize) -> anyhow::Result<ChaosReport> {
     spec.validate()?;
-    let scn = Scenario::paper_balanced(
+    let mut scn = Scenario::paper_balanced(
         spec.n_workers,
         spec.n_batches,
         BatchService::paper(spec.service.clone()),
     )?
     .with_seed(spec.seed);
+    if spec.verify_m > 0 {
+        scn = scn.with_verify_m(spec.verify_m as usize)?;
+    }
     let plan = spec.plan.compile(spec.n_workers)?;
     let cfg = EngineConfig::default();
     let shards = shard_plan(spec.replicates, spec.seed);
@@ -242,7 +261,17 @@ pub fn run_chaos(spec: &ChaosSpec, threads: usize) -> anyhow::Result<ChaosReport
     anyhow::ensure!(!runs.is_empty(), "chaos run produced no replicates");
 
     let schedule_key = |s: &FaultRoundStats| {
-        (s.crashes, s.respawns, s.relaunches, s.degradations, s.dropped, s.live_workers)
+        (
+            s.crashes,
+            s.respawns,
+            s.relaunches,
+            s.degradations,
+            s.dropped,
+            s.corrupted,
+            s.flagged,
+            s.quarantined,
+            s.live_workers,
+        )
     };
     let mut per_round = Vec::with_capacity(spec.rounds as usize);
     for r in 0..spec.rounds as usize {
@@ -266,6 +295,9 @@ pub fn run_chaos(spec: &ChaosSpec, threads: usize) -> anyhow::Result<ChaosReport
             relaunches: first.relaunches,
             degradations: first.degradations,
             dropped: first.dropped,
+            corrupted: first.corrupted,
+            flagged: first.flagged,
+            quarantined: first.quarantined,
         });
     }
 
@@ -311,21 +343,33 @@ pub fn run_chaos(spec: &ChaosSpec, threads: usize) -> anyhow::Result<ChaosReport
         if a.live_workers < spec.n_workers {
             degraded.0 += a.mean_completion;
             degraded.1 += 1;
-        } else if a.crashes + a.respawns + a.relaunches + a.degradations + a.dropped == 0 {
+        } else if a.crashes
+            + a.respawns
+            + a.relaunches
+            + a.degradations
+            + a.dropped
+            + a.corrupted
+            + a.flagged
+            + a.quarantined
+            == 0
+        {
             normal.0 += a.mean_completion;
             normal.1 += 1;
         }
     }
     let mean_of = |(sum, n): (f64, u64)| if n > 0 { sum / n as f64 } else { 0.0 };
 
-    let (t_crash, t_respawn, t_relaunch, t_degrade, t_drop) =
-        per_round.iter().fold((0, 0, 0, 0, 0), |acc, a| {
+    let (t_crash, t_respawn, t_relaunch, t_degrade, t_drop, t_corrupt, t_flag, t_quar) =
+        per_round.iter().fold((0, 0, 0, 0, 0, 0, 0, 0), |acc, a| {
             (
                 acc.0 + a.crashes,
                 acc.1 + a.respawns,
                 acc.2 + a.relaunches,
                 acc.3 + a.degradations,
                 acc.4 + a.dropped,
+                acc.5 + a.corrupted,
+                acc.6 + a.flagged,
+                acc.7 + a.quarantined,
             )
         });
 
@@ -343,6 +387,9 @@ pub fn run_chaos(spec: &ChaosSpec, threads: usize) -> anyhow::Result<ChaosReport
         total_relaunches: t_relaunch,
         total_degradations: t_degrade,
         total_dropped: t_drop,
+        total_corrupted: t_corrupt,
+        total_flagged: t_flag,
+        total_quarantined: t_quar,
         mttr_rounds,
         rounds_to_recover,
         degraded_round_frac,
@@ -368,10 +415,70 @@ mod tests {
 
     #[test]
     fn spec_round_trips_through_json() {
-        let spec = ChaosSpec::fig2();
+        let mut spec = ChaosSpec::fig2();
+        spec.verify_m = 2;
         let j = spec.to_json();
         let back = ChaosSpec::from_json(&j).expect("parse");
         assert_eq!(back, spec);
+    }
+
+    /// A corruption plan under `verify_m = 2` populates the integrity
+    /// columns: the corrupt worker's results are counted, flagged by
+    /// the vote, and the worker is quarantined — identically in every
+    /// replicate (the flag schedule is plan-deterministic).
+    #[test]
+    fn corruption_columns_flow_through_the_report() {
+        let spec = ChaosSpec {
+            name: "corrupt-smoke".into(),
+            n_workers: 12,
+            n_batches: 4,
+            service: ServiceSpec::shifted_exp(1.0, 0.2),
+            plan: FaultPlan {
+                name: "corrupt-smoke".into(),
+                seed: 7,
+                events: vec![(0, FaultEvent::Corruption { from_round: 1, prob: 1.0 })],
+            },
+            rounds: 8,
+            replicates: 4,
+            seed: 11,
+            verify_m: 2,
+        };
+        let report = run_chaos(&spec, 2).expect("run");
+        assert!(report.total_corrupted >= 2, "corrupt results were injected");
+        assert!(report.total_flagged >= 2, "votes flagged the corrupt replicas");
+        assert!(report.total_quarantined >= 1, "strike budget quarantined the worker");
+        // Quarantine empties a slot, so some rounds run short-handed.
+        assert!(report.degraded_round_frac > 0.0);
+        crate::fault::report::validate_json(&report.to_json()).expect("schema-valid");
+        // The integrity schedule is deterministic across thread counts.
+        let other = run_chaos(&spec, 1).expect("run");
+        assert_eq!(report.to_json().to_string(), other.to_json().to_string());
+    }
+
+    /// Without verification the same plan corrupts silently: results
+    /// are counted as corrupted but nothing is flagged or quarantined.
+    #[test]
+    fn corruption_without_verification_is_silent() {
+        let spec = ChaosSpec {
+            name: "corrupt-blind".into(),
+            n_workers: 8,
+            n_batches: 4,
+            service: ServiceSpec::shifted_exp(1.0, 0.2),
+            plan: FaultPlan {
+                name: "corrupt-blind".into(),
+                seed: 7,
+                events: vec![(0, FaultEvent::Corruption { from_round: 0, prob: 1.0 })],
+            },
+            rounds: 6,
+            replicates: 4,
+            seed: 11,
+            verify_m: 0,
+        };
+        let report = run_chaos(&spec, 1).expect("run");
+        assert!(report.total_corrupted >= spec.rounds, "corruption injected every round");
+        assert_eq!(report.total_flagged, 0);
+        assert_eq!(report.total_quarantined, 0);
+        crate::fault::report::validate_json(&report.to_json()).expect("schema-valid");
     }
 
     #[test]

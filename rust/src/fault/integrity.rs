@@ -1,0 +1,705 @@
+//! The integrity harness behind `batchrep integrity`: sweep the vote
+//! size `m` and the corruption probability over a replicated round
+//! loop and aggregate detection behaviour into an `INTEGRITY_*.json`
+//! artifact.
+//!
+//! Each cell of the `(m, prob)` grid replays the same corruption plan
+//! (worker 0 returns deterministically-perturbed results from
+//! `from_round` on, coin-flipped per round with probability `prob`)
+//! against the DES fault loop
+//! ([`crate::des::engine::simulate_fault_rounds`]) under
+//! [`Scenario::verify_m`] `= m`. All cells share one replicate shard
+//! plan and root seed — common random numbers — so the latency
+//! overhead of `m`-of-`g` voting is a paired comparison against the
+//! `m = 1` baseline, and the artifact is bit-identical for a fixed
+//! `(spec, seed)` at any `--threads`.
+//!
+//! Reported per cell: the deterministic corruption/flag/quarantine
+//! totals, the detection rate (flagged replicas over corrupt results —
+//! 1.0 on disjoint layouts with `m >= 2`), false-positive flags
+//! (flags in excess of corrupt results — structurally zero, and the
+//! `prob = 0` column measures it directly), rounds from corruption
+//! onset to the first quarantine, and the completion-time overhead
+//! relative to the `m = 1` cell at the same corruption probability.
+
+use super::{FaultEvent, FaultPlan};
+use crate::des::engine::{simulate_fault_rounds, EngineConfig, FaultRoundStats};
+use crate::des::montecarlo::{execute_shard_plan, shard_plan};
+use crate::des::Scenario;
+use crate::dist::{BatchService, ServiceSpec};
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+use std::path::Path;
+
+/// `INTEGRITY_*.json` artifact schema version.
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// One integrity experiment: a balanced-disjoint cluster, a service
+/// law, a single corrupt worker, and the `(m, prob)` grid to sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntegritySpec {
+    /// Experiment name (artifact stem).
+    pub name: String,
+    /// Cluster size `N`.
+    pub n_workers: usize,
+    /// Batch count `B` (`B | N`, balanced disjoint replication).
+    pub n_batches: usize,
+    /// Per-unit service law.
+    pub service: ServiceSpec,
+    /// Round from which worker 0's corruption coin is armed.
+    pub from_round: u64,
+    /// Vote sizes to sweep. Must contain `1` — the verification-off
+    /// baseline every overhead is measured against.
+    pub ms: Vec<u64>,
+    /// Corruption probabilities to sweep (worker 0's per-round coin).
+    pub probs: Vec<f64>,
+    /// Strike budget: flags before quarantine.
+    pub strikes: u64,
+    /// Rounds per replicate.
+    pub rounds: u64,
+    /// Monte-Carlo replicates per cell (service-time draws differ; the
+    /// corruption/flag/quarantine schedule is identical in every
+    /// replicate and every cell shares the same draws).
+    pub replicates: u64,
+    /// Root seed for the shard plan and the corruption coin.
+    pub seed: u64,
+}
+
+impl IntegritySpec {
+    /// Names accepted by [`IntegritySpec::preset`].
+    pub fn preset_names() -> &'static [&'static str] {
+        &["smoke", "fig2"]
+    }
+
+    /// Small preset: 16 workers, 4 batches (replication group 4), a
+    /// certainly-corrupt worker versus a clean column.
+    pub fn smoke() -> IntegritySpec {
+        IntegritySpec {
+            name: "smoke".into(),
+            n_workers: 16,
+            n_batches: 4,
+            service: ServiceSpec::shifted_exp(1.0, 0.2),
+            from_round: 1,
+            ms: vec![1, 2, 3],
+            probs: vec![0.0, 1.0],
+            strikes: 2,
+            rounds: 12,
+            replicates: 8,
+            seed: 42,
+        }
+    }
+
+    /// Fig-2-scale preset: 24 workers, 6 batches (replication group
+    /// 4), intermittent and certain corruption columns.
+    pub fn fig2() -> IntegritySpec {
+        IntegritySpec {
+            name: "fig2".into(),
+            n_workers: 24,
+            n_batches: 6,
+            service: ServiceSpec::shifted_exp(1.0, 0.2),
+            from_round: 1,
+            ms: vec![1, 2, 3],
+            probs: vec![0.0, 0.5, 1.0],
+            strikes: 2,
+            rounds: 24,
+            replicates: 16,
+            seed: 42,
+        }
+    }
+
+    /// Look up a built-in preset.
+    pub fn preset(name: &str) -> Option<IntegritySpec> {
+        match name {
+            "smoke" => Some(Self::smoke()),
+            "fig2" => Some(Self::fig2()),
+            _ => None,
+        }
+    }
+
+    /// Resolve a CLI argument: a preset name, else a path to a spec
+    /// JSON file (see [`IntegritySpec::from_json`]).
+    pub fn load(which: &str) -> anyhow::Result<IntegritySpec> {
+        if let Some(spec) = Self::preset(which) {
+            return Ok(spec);
+        }
+        let text = std::fs::read_to_string(which).map_err(|e| {
+            anyhow::anyhow!(
+                "'{which}' is not an integrity preset ({}) and not a readable file: {e}",
+                Self::preset_names().join(", ")
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {which}: {e}"))?;
+        let spec = Self::from_json(&j)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a spec from JSON:
+    ///
+    /// ```json
+    /// {"name": "my-integrity", "n_workers": 16, "n_batches": 4,
+    ///  "service": "sexp:1,0.2", "from_round": 1, "ms": [1, 2],
+    ///  "probs": [0.0, 1.0], "strikes": 2, "rounds": 12,
+    ///  "replicates": 8, "seed": 42}
+    /// ```
+    ///
+    /// Optional keys default to the `smoke` preset's values.
+    pub fn from_json(j: &Json) -> anyhow::Result<IntegritySpec> {
+        let base = Self::smoke();
+        let service = match j.get("service").and_then(Json::as_str) {
+            Some(s) => ServiceSpec::parse(s)?,
+            None => base.service,
+        };
+        let get_u = |key: &str, default: u64| -> anyhow::Result<u64> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_i64()
+                    .filter(|x| *x >= 0)
+                    .map(|x| x as u64)
+                    .ok_or_else(|| anyhow::anyhow!("'{key}' must be a non-negative integer")),
+            }
+        };
+        let ms = match j.get("ms") {
+            None => base.ms,
+            Some(v) => v
+                .as_array()
+                .ok_or_else(|| anyhow::anyhow!("'ms' must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_i64()
+                        .filter(|m| *m >= 1)
+                        .map(|m| m as u64)
+                        .ok_or_else(|| anyhow::anyhow!("'ms' entries must be integers >= 1"))
+                })
+                .collect::<anyhow::Result<Vec<u64>>>()?,
+        };
+        let probs = match j.get("probs") {
+            None => base.probs,
+            Some(v) => v
+                .as_array()
+                .ok_or_else(|| anyhow::anyhow!("'probs' must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .filter(|p| (0.0..=1.0).contains(p))
+                        .ok_or_else(|| anyhow::anyhow!("'probs' entries must be in [0, 1]"))
+                })
+                .collect::<anyhow::Result<Vec<f64>>>()?,
+        };
+        Ok(IntegritySpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or(&base.name)
+                .to_string(),
+            n_workers: get_u("n_workers", base.n_workers as u64)? as usize,
+            n_batches: get_u("n_batches", base.n_batches as u64)? as usize,
+            service,
+            from_round: get_u("from_round", base.from_round)?,
+            ms,
+            probs,
+            strikes: get_u("strikes", base.strikes)?,
+            rounds: get_u("rounds", base.rounds)?,
+            replicates: get_u("replicates", base.replicates)?,
+            seed: get_u("seed", base.seed)?,
+        })
+    }
+
+    /// Serialize (round-trips through [`IntegritySpec::from_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("n_workers", self.n_workers.into()),
+            ("n_batches", self.n_batches.into()),
+            ("service", self.service.name().as_str().into()),
+            ("from_round", (self.from_round as i64).into()),
+            ("ms", Json::Array(self.ms.iter().map(|m| (*m as i64).into()).collect())),
+            ("probs", Json::Array(self.probs.iter().map(|p| (*p).into()).collect())),
+            ("strikes", (self.strikes as i64).into()),
+            ("rounds", (self.rounds as i64).into()),
+            ("replicates", (self.replicates as i64).into()),
+            ("seed", (self.seed as i64).into()),
+        ])
+    }
+
+    /// Check internal consistency (cluster shape, grid, counts).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_workers >= 1, "n_workers must be >= 1");
+        anyhow::ensure!(
+            self.n_batches >= 1 && self.n_batches <= self.n_workers,
+            "n_batches must be in [1, n_workers]"
+        );
+        anyhow::ensure!(
+            self.n_workers % self.n_batches == 0,
+            "integrity runs use balanced replication: n_batches must divide n_workers"
+        );
+        anyhow::ensure!(!self.ms.is_empty(), "ms must be non-empty");
+        anyhow::ensure!(
+            self.ms.contains(&1),
+            "ms must contain 1: the verification-off baseline anchors the overhead column"
+        );
+        let degree = (self.n_workers / self.n_batches) as u64;
+        // Quarantine empties one slot, so the degraded re-plan must
+        // still seat m votes per batch: require m <= degree - 1.
+        for &m in &self.ms {
+            anyhow::ensure!(
+                m < degree,
+                "verify_m = {m} needs replication degree > m (got {degree}) so that \
+                 quarantining the corrupt worker leaves every batch with m replicas"
+            );
+        }
+        anyhow::ensure!(!self.probs.is_empty(), "probs must be non-empty");
+        for &p in &self.probs {
+            anyhow::ensure!((0.0..=1.0).contains(&p), "probs entries must be in [0, 1]");
+        }
+        anyhow::ensure!(self.strikes >= 1, "strikes must be >= 1");
+        anyhow::ensure!(self.rounds >= 1, "rounds must be >= 1");
+        anyhow::ensure!(
+            self.from_round < self.rounds,
+            "from_round must fall inside the simulated rounds"
+        );
+        anyhow::ensure!(self.replicates >= 1, "replicates must be >= 1");
+        Ok(())
+    }
+
+    /// Shrink for `--fast` smoke runs (caps replicates and rounds).
+    pub fn fast(mut self) -> IntegritySpec {
+        self.replicates = self.replicates.min(4);
+        self.rounds = self.rounds.min(8);
+        self
+    }
+}
+
+/// One `(m, prob)` grid cell of an [`IntegrityReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntegrityCell {
+    /// Vote size (1 = verification off).
+    pub m: u64,
+    /// Worker 0's per-round corruption probability.
+    pub prob: f64,
+    /// Corrupt results injected across all rounds (replicate-invariant).
+    pub corrupted: u64,
+    /// Corrupt replicas flagged by voting.
+    pub flagged: u64,
+    /// Quarantines triggered (strike budget exhausted).
+    pub quarantined: u64,
+    /// Degraded-mode re-plans (quarantine coverage loss).
+    pub degradations: u64,
+    /// Flagged over corrupted; 1.0 (vacuously) when nothing was
+    /// corrupted. On disjoint layouts with `m >= 2` this is 1.0.
+    pub detection_rate: f64,
+    /// Flags in excess of corrupt results — honest replicas flagged.
+    /// Structurally zero; the `prob = 0` column measures it directly.
+    pub false_positive_flags: u64,
+    /// Rounds from corruption onset to the first quarantine (0 when
+    /// nothing was quarantined).
+    pub rounds_to_quarantine: u64,
+    /// Mean round completion over all rounds and replicates
+    /// (normalized units).
+    pub mean_completion: f64,
+    /// Standard error of the completion mean.
+    pub sem_completion: f64,
+    /// `mean_completion` relative to the `m = 1` cell at the same
+    /// `prob`, minus one — the price of waiting for `m` votes. Exactly
+    /// 0 on the baseline cells themselves.
+    pub latency_overhead: f64,
+}
+
+impl IntegrityCell {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("m", (self.m as i64).into()),
+            ("prob", self.prob.into()),
+            ("corrupted", (self.corrupted as i64).into()),
+            ("flagged", (self.flagged as i64).into()),
+            ("quarantined", (self.quarantined as i64).into()),
+            ("degradations", (self.degradations as i64).into()),
+            ("detection_rate", self.detection_rate.into()),
+            ("false_positive_flags", (self.false_positive_flags as i64).into()),
+            ("rounds_to_quarantine", (self.rounds_to_quarantine as i64).into()),
+            ("mean_completion", self.mean_completion.into()),
+            ("sem_completion", self.sem_completion.into()),
+            ("latency_overhead", self.latency_overhead.into()),
+        ])
+    }
+}
+
+/// Result of one integrity sweep (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntegrityReport {
+    /// Spec name (preset or file stem).
+    pub name: String,
+    /// The spec, embedded verbatim for replay.
+    pub spec: IntegritySpec,
+    /// Grid cells in `ms`-major, `probs`-minor order.
+    pub cells: Vec<IntegrityCell>,
+}
+
+impl IntegrityReport {
+    /// Serialize to the versioned artifact schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", SCHEMA_VERSION.into()),
+            ("name", self.name.as_str().into()),
+            ("spec", self.spec.to_json()),
+            ("cells", Json::Array(self.cells.iter().map(IntegrityCell::to_json).collect())),
+        ])
+    }
+
+    /// Write the artifact (newline-terminated canonical JSON).
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+/// Run the integrity sweep: every `(m, prob)` cell replays the same
+/// corruption plan over the same replicate shard plan (common random
+/// numbers), aggregating detection and latency metrics. Like the chaos
+/// harness, the corruption/flag/quarantine schedule must agree across
+/// replicates — divergence is an internal-determinism error.
+pub fn run_integrity(spec: &IntegritySpec, threads: usize) -> anyhow::Result<IntegrityReport> {
+    spec.validate()?;
+    let cfg = EngineConfig { verify_strikes: spec.strikes, ..EngineConfig::default() };
+    let mut cells = Vec::with_capacity(spec.ms.len() * spec.probs.len());
+    // Baseline means, one per prob, filled by the m = 1 pass.
+    let mut baselines = vec![f64::NAN; spec.probs.len()];
+    let mut ms = spec.ms.clone();
+    ms.sort_unstable();
+    ms.dedup();
+    for &m in &ms {
+        for (pi, &prob) in spec.probs.iter().enumerate() {
+            let mut scn = Scenario::paper_balanced(
+                spec.n_workers,
+                spec.n_batches,
+                BatchService::paper(spec.service.clone()),
+            )?
+            .with_seed(spec.seed);
+            if m >= 2 {
+                scn = scn.with_verify_m(m as usize)?;
+            }
+            let events = if prob > 0.0 {
+                vec![(0usize, FaultEvent::Corruption { from_round: spec.from_round, prob })]
+            } else {
+                Vec::new()
+            };
+            let plan =
+                FaultPlan { name: spec.name.clone(), seed: spec.seed, events }
+                    .compile(spec.n_workers)?;
+            let shards = shard_plan(spec.replicates, spec.seed);
+            let per_shard: Vec<anyhow::Result<Vec<Vec<FaultRoundStats>>>> = execute_shard_plan(
+                shards,
+                threads,
+                || (),
+                |_, count, mut rng| {
+                    (0..count)
+                        .map(|_| simulate_fault_rounds(&scn, &plan, spec.rounds, &cfg, &mut rng))
+                        .collect()
+                },
+            );
+            let mut runs: Vec<Vec<FaultRoundStats>> = Vec::with_capacity(spec.replicates as usize);
+            for shard in per_shard {
+                runs.extend(shard?);
+            }
+            anyhow::ensure!(!runs.is_empty(), "integrity cell produced no replicates");
+
+            let schedule = &runs[0];
+            let mut comp = Welford::new();
+            for run in &runs {
+                for (r, st) in run.iter().enumerate() {
+                    anyhow::ensure!(
+                        (st.corrupted, st.flagged, st.quarantined, st.live_workers)
+                            == (
+                                schedule[r].corrupted,
+                                schedule[r].flagged,
+                                schedule[r].quarantined,
+                                schedule[r].live_workers
+                            ),
+                        "integrity schedule diverged across replicates at round {r} \
+                         (m = {m}, prob = {prob})"
+                    );
+                    comp.push(st.completion);
+                }
+            }
+            let (mut corrupted, mut flagged, mut quarantined, mut degradations) = (0, 0, 0, 0);
+            for st in schedule {
+                corrupted += st.corrupted;
+                flagged += st.flagged;
+                quarantined += st.quarantined;
+                degradations += st.degradations;
+            }
+            let detection_rate =
+                if corrupted > 0 { flagged as f64 / corrupted as f64 } else { 1.0 };
+            let rounds_to_quarantine = schedule
+                .iter()
+                .position(|st| st.quarantined > 0)
+                .map(|r| (r as u64 + 1).saturating_sub(spec.from_round))
+                .unwrap_or(0);
+            let mean_completion = comp.mean();
+            if m == 1 {
+                baselines[pi] = mean_completion;
+            }
+            let base = baselines[pi];
+            anyhow::ensure!(
+                base.is_finite() && base > 0.0,
+                "m = 1 baseline missing for prob = {prob}"
+            );
+            cells.push(IntegrityCell {
+                m,
+                prob,
+                corrupted,
+                flagged,
+                quarantined,
+                degradations,
+                detection_rate,
+                false_positive_flags: flagged.saturating_sub(corrupted),
+                rounds_to_quarantine,
+                mean_completion,
+                sem_completion: comp.sem(),
+                latency_overhead: mean_completion / base - 1.0,
+            });
+        }
+    }
+    Ok(IntegrityReport { name: spec.name.clone(), spec: spec.clone(), cells })
+}
+
+/// Validate an integrity artifact: schema version, a re-parseable
+/// embedded spec, a full grid, and per-cell internal consistency
+/// (rates recomputable from the counters, exact-zero baseline
+/// overhead, clean `prob = 0` columns).
+pub fn validate_json(j: &Json) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        j.get("version").and_then(Json::as_i64) == Some(SCHEMA_VERSION),
+        "missing or unexpected integrity schema version"
+    );
+    anyhow::ensure!(j.get("name").is_some(), "missing key 'name'");
+    let spec_j = j.get("spec").ok_or_else(|| anyhow::anyhow!("missing 'spec'"))?;
+    let spec = IntegritySpec::from_json(spec_j).map_err(|e| anyhow::anyhow!("embedded spec: {e}"))?;
+    spec.validate().map_err(|e| anyhow::anyhow!("embedded spec: {e}"))?;
+    let cells = j
+        .get("cells")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow::anyhow!("missing or non-array 'cells'"))?;
+    let mut ms = spec.ms.clone();
+    ms.sort_unstable();
+    ms.dedup();
+    anyhow::ensure!(
+        cells.len() == ms.len() * spec.probs.len(),
+        "cells has {} entries for a {}x{} grid",
+        cells.len(),
+        ms.len(),
+        spec.probs.len()
+    );
+    for (i, c) in cells.iter().enumerate() {
+        let m = c
+            .get("m")
+            .and_then(Json::as_i64)
+            .filter(|m| *m >= 1)
+            .ok_or_else(|| anyhow::anyhow!("cell {i} missing 'm'"))?;
+        let prob = c
+            .get("prob")
+            .and_then(Json::as_f64)
+            .filter(|p| (0.0..=1.0).contains(p))
+            .ok_or_else(|| anyhow::anyhow!("cell {i} missing or out-of-range 'prob'"))?;
+        let count = |key: &str| -> anyhow::Result<i64> {
+            c.get(key)
+                .and_then(Json::as_i64)
+                .filter(|v| *v >= 0)
+                .ok_or_else(|| anyhow::anyhow!("cell {i} missing counter '{key}'"))
+        };
+        let corrupted = count("corrupted")?;
+        let flagged = count("flagged")?;
+        let quarantined = count("quarantined")?;
+        count("degradations")?;
+        let fp = count("false_positive_flags")?;
+        let to_quarantine = count("rounds_to_quarantine")?;
+        let rate = c
+            .get("detection_rate")
+            .and_then(Json::as_f64)
+            .filter(|r| (0.0..=1.0).contains(r))
+            .ok_or_else(|| anyhow::anyhow!("cell {i} missing or out-of-range 'detection_rate'"))?;
+        let expect_rate = if corrupted > 0 { flagged as f64 / corrupted as f64 } else { 1.0 };
+        anyhow::ensure!(
+            (rate - expect_rate).abs() < 1e-12,
+            "cell {i} detection_rate {rate} disagrees with flagged/corrupted = {expect_rate}"
+        );
+        anyhow::ensure!(
+            fp == (flagged - corrupted).max(0),
+            "cell {i} false_positive_flags inconsistent with counters"
+        );
+        if prob == 0.0 {
+            anyhow::ensure!(corrupted == 0, "cell {i} corrupted > 0 with prob = 0");
+        }
+        if m == 1 {
+            anyhow::ensure!(
+                flagged == 0 && quarantined == 0,
+                "cell {i} flags or quarantines with verification off"
+            );
+        }
+        anyhow::ensure!(
+            to_quarantine as u64 <= spec.rounds,
+            "cell {i} rounds_to_quarantine outside the run"
+        );
+        for stat in ["mean_completion", "sem_completion"] {
+            let v = c
+                .get(stat)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("cell {i} missing '{stat}'"))?;
+            anyhow::ensure!(v.is_finite() && v >= 0.0, "cell {i} has bad '{stat}' = {v}");
+        }
+        let overhead = c
+            .get("latency_overhead")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("cell {i} missing 'latency_overhead'"))?;
+        anyhow::ensure!(
+            overhead.is_finite() && overhead >= -1.0,
+            "cell {i} has bad 'latency_overhead' = {overhead}"
+        );
+        if m == 1 {
+            anyhow::ensure!(
+                overhead == 0.0,
+                "cell {i} is an m = 1 baseline but has nonzero latency_overhead"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Read, parse, and validate an artifact file; returns the parsed JSON.
+pub fn validate_file(path: &Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+    validate_json(&j).map_err(|e| anyhow::anyhow!("validating {}: {e}", path.display()))?;
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate_and_load() {
+        for name in IntegritySpec::preset_names() {
+            let spec = IntegritySpec::preset(name).expect("preset exists");
+            spec.validate().expect("preset is valid");
+            assert_eq!(&IntegritySpec::load(name).expect("loads").name, name);
+        }
+        assert!(IntegritySpec::load("no-such-preset-or-file").is_err());
+    }
+
+    #[test]
+    fn spec_round_trips_through_json() {
+        let spec = IntegritySpec::fig2();
+        let j = spec.to_json();
+        let back = IntegritySpec::from_json(&j).expect("parse");
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn spec_rejects_degenerate_grids() {
+        let mut spec = IntegritySpec::smoke();
+        spec.ms = vec![2, 3];
+        assert!(spec.validate().is_err(), "missing the m = 1 baseline");
+        let mut spec = IntegritySpec::smoke();
+        spec.ms = vec![1, 4];
+        assert!(spec.validate().is_err(), "m = degree leaves no quarantine headroom");
+        let mut spec = IntegritySpec::smoke();
+        spec.from_round = spec.rounds;
+        assert!(spec.validate().is_err(), "corruption onset outside the run");
+    }
+
+    #[test]
+    fn smoke_sweep_detects_all_corruption_with_zero_false_positives() {
+        let report = run_integrity(&IntegritySpec::smoke().fast(), 2).expect("run");
+        assert_eq!(report.cells.len(), 6);
+        for c in &report.cells {
+            assert_eq!(c.false_positive_flags, 0, "m={} prob={}", c.m, c.prob);
+            if c.prob == 0.0 {
+                assert_eq!(c.corrupted, 0, "clean column stays clean (m={})", c.m);
+                assert_eq!(c.flagged, 0);
+                assert_eq!(c.quarantined, 0);
+            } else if c.m == 1 {
+                assert!(c.corrupted > 0, "corruption was injected");
+                assert_eq!(c.flagged, 0, "verification off: corruption is invisible");
+                assert_eq!(c.quarantined, 0);
+                assert_eq!(c.detection_rate, 0.0);
+            } else {
+                assert!(c.corrupted > 0, "corruption was injected (m={})", c.m);
+                assert_eq!(c.detection_rate, 1.0, "m={} detects every corrupt result", c.m);
+                assert!(c.quarantined > 0, "m={} quarantined the corrupt worker", c.m);
+                assert!(c.rounds_to_quarantine > 0);
+            }
+            if c.m == 1 {
+                assert_eq!(c.latency_overhead, 0.0);
+            } else {
+                assert!(
+                    c.latency_overhead > 0.0,
+                    "waiting for {} votes costs latency (prob={})",
+                    c.m,
+                    c.prob
+                );
+            }
+        }
+        validate_json(&report.to_json()).expect("schema-valid");
+    }
+
+    #[test]
+    fn report_is_bit_identical_across_thread_counts() {
+        let spec = IntegritySpec::smoke().fast();
+        let base = run_integrity(&spec, 1).expect("run").to_json().to_string();
+        for threads in [2, 4, 8] {
+            let other = run_integrity(&spec, threads).expect("run").to_json().to_string();
+            assert_eq!(base, other, "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn write_then_validate_file() {
+        let report = run_integrity(&IntegritySpec::smoke().fast(), 1).expect("run");
+        let dir = std::env::temp_dir().join("batchrep-integrity-report-test");
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let path = dir.join("INTEGRITY_roundtrip.json");
+        report.write(&path).expect("write");
+        let j = validate_file(&path).expect("validate");
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("smoke"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn validation_rejects_malformed_artifacts() {
+        let good = run_integrity(&IntegritySpec::smoke().fast(), 1).expect("run").to_json();
+        let mutate = |f: &dyn Fn(&mut std::collections::BTreeMap<String, Json>)| {
+            let mut m = good.as_object().expect("obj").clone();
+            f(&mut m);
+            Json::Object(m)
+        };
+        // Wrong version.
+        let bad = mutate(&|m| {
+            m.insert("version".into(), Json::Num(99.0));
+        });
+        assert!(validate_json(&bad).is_err());
+        // Grid size mismatch.
+        let bad = mutate(&|m| {
+            let mut cells = m.get("cells").and_then(Json::as_array).expect("cells").clone();
+            cells.pop();
+            m.insert("cells".into(), Json::Array(cells));
+        });
+        assert!(validate_json(&bad).is_err());
+        // Detection rate out of sync with the counters.
+        let bad = mutate(&|m| {
+            let mut cells = m.get("cells").and_then(Json::as_array).expect("cells").clone();
+            let mut cell = cells[0].as_object().expect("cell").clone();
+            cell.insert("detection_rate".into(), Json::Num(0.5));
+            cells[0] = Json::Object(cell);
+            m.insert("cells".into(), Json::Array(cells));
+        });
+        assert!(validate_json(&bad).is_err());
+        // Unparseable embedded spec.
+        let bad = mutate(&|m| {
+            m.insert("spec".into(), Json::obj(vec![("ms", Json::Num(1.0))]));
+        });
+        assert!(validate_json(&bad).is_err());
+    }
+}

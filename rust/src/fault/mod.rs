@@ -23,15 +23,25 @@
 //! counts, and replays.
 
 pub mod chaos;
+pub mod integrity;
 pub mod report;
 
 pub use chaos::{run_chaos, ChaosSpec};
+pub use integrity::{run_integrity, IntegrityCell, IntegrityReport, IntegritySpec};
 pub use report::{validate_file, validate_json, ChaosReport, RoundAgg, SCHEMA_VERSION};
 
 use crate::assignment::Assignment;
 use crate::trace::{generate_markov_trace, MarkovTraceParams};
 use crate::util::json::Json;
 use crate::util::rng::{fnv1a, splitmix64};
+
+/// Base respawn delay, in rounds, of a worker quarantined by the
+/// result-integrity strike budget (m-of-g voting, PR 8). Doubled per
+/// respawn attempt with the same `1 << min(attempts, 3)` backoff the
+/// transient-crash path uses, and shared verbatim by the live
+/// coordinator and the DES fault-round mirror so their quarantine
+/// schedules agree.
+pub const QUARANTINE_RESPAWN_ROUNDS: u64 = 2;
 
 /// One scheduled fault on one worker.
 #[derive(Debug, Clone, PartialEq)]
@@ -75,6 +85,18 @@ pub enum FaultEvent {
         /// Per-round drop probability.
         prob: f64,
     },
+    /// From round `from_round` on, the worker independently returns a
+    /// **silently corrupted** result with probability `prob` each round:
+    /// the task completes on time but its output is deterministically
+    /// perturbed (worker-dependent, so two corrupt replicas never agree
+    /// with each other). Detection is the `verify_m` replica-voting
+    /// path; the quarantine machinery is the recovery path.
+    Corruption {
+        /// First affected round (0-based).
+        from_round: u64,
+        /// Per-round corruption probability.
+        prob: f64,
+    },
 }
 
 impl FaultEvent {
@@ -85,6 +107,7 @@ impl FaultEvent {
             FaultEvent::TransientCrash { .. } => "transient_crash",
             FaultEvent::Slowdown { .. } => "slowdown",
             FaultEvent::TaskDrop { .. } => "task_drop",
+            FaultEvent::Corruption { .. } => "corruption",
         }
     }
 }
@@ -104,7 +127,7 @@ pub struct FaultPlan {
 impl FaultPlan {
     /// Names accepted by [`FaultPlan::preset`].
     pub fn preset_names() -> &'static [&'static str] {
-        &["crash", "respawn", "slowdown", "mixed"]
+        &["crash", "respawn", "slowdown", "mixed", "corrupt"]
     }
 
     /// Look up a built-in preset.
@@ -157,6 +180,14 @@ impl FaultPlan {
                     (2, FaultEvent::TaskDrop { prob: 0.15 }),
                 ],
             }),
+            "corrupt" => Some(FaultPlan {
+                name: "corrupt".into(),
+                seed: 42,
+                events: vec![
+                    (0, FaultEvent::Corruption { from_round: 2, prob: 0.6 }),
+                    (1, FaultEvent::Corruption { from_round: 4, prob: 0.3 }),
+                ],
+            }),
             _ => None,
         }
     }
@@ -199,7 +230,8 @@ impl FaultPlan {
     ///     {"worker": 2, "kind": "slowdown", "from_round": 1, "rounds": 16,
     ///      "p_enter": 0.1, "p_exit": 0.05, "slowdown": 8.0,
     ///      "base_mu": 1.0, "base_delta": 0.2},
-    ///     {"worker": 3, "kind": "task_drop", "prob": 0.1}
+    ///     {"worker": 3, "kind": "task_drop", "prob": 0.1},
+    ///     {"worker": 4, "kind": "corruption", "from_round": 2, "prob": 0.5}
     ///   ]
     /// }
     /// ```
@@ -260,9 +292,13 @@ impl FaultPlan {
                     }
                 }
                 "task_drop" => FaultEvent::TaskDrop { prob: num("prob")? },
+                "corruption" => FaultEvent::Corruption {
+                    from_round: int("from_round")?,
+                    prob: num("prob")?,
+                },
                 other => anyhow::bail!(
                     "fault event {i} has unknown kind '{other}' \
-                     (permanent_crash|transient_crash|slowdown|task_drop)"
+                     (permanent_crash|transient_crash|slowdown|task_drop|corruption)"
                 ),
             };
             events.push((worker, event));
@@ -304,6 +340,10 @@ impl FaultPlan {
                     FaultEvent::TaskDrop { prob } => {
                         fields.push(("prob", (*prob).into()));
                     }
+                    FaultEvent::Corruption { from_round, prob } => {
+                        fields.push(("from_round", (*from_round as i64).into()));
+                        fields.push(("prob", (*prob).into()));
+                    }
                 }
                 Json::obj(fields)
             })
@@ -318,6 +358,7 @@ impl FaultPlan {
     /// Structural validation against a cluster of `n_workers`.
     pub fn validate(&self, n_workers: usize) -> anyhow::Result<()> {
         let mut has_crash = vec![false; n_workers];
+        let mut has_corruption = vec![false; n_workers];
         for (w, e) in &self.events {
             anyhow::ensure!(
                 *w < n_workers,
@@ -367,6 +408,18 @@ impl FaultPlan {
                         "task-drop probability must be in [0, 1), got {prob}"
                     );
                 }
+                FaultEvent::Corruption { prob, .. } => {
+                    anyhow::ensure!(
+                        !has_corruption[*w],
+                        "fault plan '{}' schedules two corruption events on worker {w}",
+                        self.name
+                    );
+                    has_corruption[*w] = true;
+                    anyhow::ensure!(
+                        *prob > 0.0 && *prob <= 1.0 && prob.is_finite(),
+                        "corruption probability must be in (0, 1], got {prob}"
+                    );
+                }
             }
         }
         Ok(())
@@ -380,6 +433,7 @@ impl FaultPlan {
         let mut crash: Vec<Option<CrashSpec>> = vec![None; n_workers];
         let mut slow: Vec<Vec<(u64, Vec<f64>)>> = vec![Vec::new(); n_workers];
         let mut drop_prob = vec![0f64; n_workers];
+        let mut corrupt: Vec<Option<(u64, f64)>> = vec![None; n_workers];
         for (w, e) in &self.events {
             match e {
                 FaultEvent::PermanentCrash { round, fraction } => {
@@ -415,9 +469,12 @@ impl FaultPlan {
                     slow[*w].push((*from_round, factors));
                 }
                 FaultEvent::TaskDrop { prob } => drop_prob[*w] = *prob,
+                FaultEvent::Corruption { from_round, prob } => {
+                    corrupt[*w] = Some((*from_round, *prob));
+                }
             }
         }
-        Ok(CompiledPlan { n_workers, seed: self.seed, crash, slow, drop_prob })
+        Ok(CompiledPlan { n_workers, seed: self.seed, crash, slow, drop_prob, corrupt })
     }
 }
 
@@ -442,6 +499,7 @@ pub struct CompiledPlan {
     crash: Vec<Option<CrashSpec>>,
     slow: Vec<Vec<(u64, Vec<f64>)>>,
     drop_prob: Vec<f64>,
+    corrupt: Vec<Option<(u64, f64)>>,
 }
 
 impl CompiledPlan {
@@ -492,6 +550,39 @@ impl CompiledPlan {
         self.drop_prob[w]
     }
 
+    /// Whether worker `w` silently corrupts its result in round
+    /// `round`. A pure function of `(plan seed, w, round)` on a coin
+    /// stream **independent of the drop coin** (different mixing
+    /// constants), so drop and corruption schedules never correlate.
+    /// The live coordinator and the DES corruption path flip the same
+    /// coin, so corrupted-result counts agree deterministically across
+    /// backends.
+    pub fn corrupts_result(&self, w: usize, round: u64) -> bool {
+        let Some((from, p)) = self.corrupt[w] else {
+            return false;
+        };
+        if round < from || p <= 0.0 {
+            return false;
+        }
+        let mut state = self
+            .seed
+            .wrapping_mul(0xBF58_476D_1CE4_E5B9)
+            .wrapping_add((w as u64).wrapping_mul(0x94D0_49BB_1331_11EB))
+            .wrapping_add(round.wrapping_mul(0x2545_F491_4F6C_DD1D));
+        let x = splitmix64(&mut state);
+        ((x >> 11) as f64) * (1.0 / 9_007_199_254_740_992.0) < p
+    }
+
+    /// Corruption `(from_round, prob)` configured for worker `w`.
+    pub fn corruption_of(&self, w: usize) -> Option<(u64, f64)> {
+        self.corrupt[w]
+    }
+
+    /// Whether any worker carries a corruption event.
+    pub fn any_corruption(&self) -> bool {
+        self.corrupt.iter().any(Option::is_some)
+    }
+
     /// One past the last round any scheduled (non-drop) event is still
     /// active — the minimum horizon a chaos run needs to see every
     /// event fire at least once.
@@ -504,6 +595,11 @@ impl CompiledPlan {
             for (from, factors) in per_worker {
                 h = h.max(from + factors.len() as u64);
             }
+        }
+        // Corruption is open-ended like task drops, but its onset round
+        // must be inside the horizon so a chaos run sees it fire.
+        for (from, _) in self.corrupt.iter().flatten() {
+            h = h.max(from + 1);
         }
         h
     }
@@ -658,6 +754,56 @@ mod tests {
         let hits = (0..4000).filter(|&r| c.drops_task(0, r)).count() as f64 / 4000.0;
         assert!((hits - 0.25).abs() < 0.03, "drop frequency {hits}");
         assert!(!(0..4000).any(|r| c.drops_task(1, r)), "untargeted worker never drops");
+    }
+
+    #[test]
+    fn corruption_round_trips_validates_and_flips_independent_coins() {
+        // Preset resolves, compiles, and survives the JSON round trip.
+        let plan = FaultPlan::preset("corrupt").expect("preset");
+        let j = plan.to_json();
+        let back = FaultPlan::from_json(&Json::parse(&j.to_string()).expect("parse"))
+            .expect("from_json");
+        assert_eq!(plan, back);
+        let c = plan.compile(4).expect("compile");
+        assert_eq!(c.corruption_of(0), Some((2, 0.6)));
+        assert_eq!(c.corruption_of(2), None);
+        assert!(c.any_corruption());
+        assert_eq!(c.horizon(), 5, "corruption onset rounds extend the horizon");
+        // Nothing fires before from_round; the frequency tracks prob after.
+        assert!(!(0..2).any(|r| c.corrupts_result(0, r)));
+        let hits = (2..4002).filter(|&r| c.corrupts_result(0, r)).count() as f64 / 4000.0;
+        assert!((hits - 0.6).abs() < 0.03, "corruption frequency {hits}");
+        assert!(!(0..4000).any(|r| c.corrupts_result(2, r)), "untargeted worker is honest");
+        // Validation: prob bounds and the one-event-per-worker rule.
+        let bad = FaultPlan {
+            name: "bad".into(),
+            seed: 1,
+            events: vec![(0, FaultEvent::Corruption { from_round: 0, prob: 1.5 })],
+        };
+        assert!(bad.validate(4).is_err());
+        let double = FaultPlan {
+            events: vec![
+                (0, FaultEvent::Corruption { from_round: 0, prob: 0.5 }),
+                (0, FaultEvent::Corruption { from_round: 3, prob: 0.2 }),
+            ],
+            ..bad.clone()
+        };
+        assert!(double.validate(4).is_err());
+        // The corruption coin stream is independent of the drop coin
+        // stream: same worker, same prob, same seed — different draws.
+        let both = FaultPlan {
+            name: "both".into(),
+            seed: 11,
+            events: vec![
+                (0, FaultEvent::TaskDrop { prob: 0.5 }),
+                (0, FaultEvent::Corruption { from_round: 0, prob: 0.5 }),
+            ],
+        }
+        .compile(2)
+        .expect("compile");
+        let differs =
+            (0..400).filter(|&r| both.drops_task(0, r) != both.corrupts_result(0, r)).count();
+        assert!(differs > 50, "drop and corruption coins look correlated ({differs}/400 differ)");
     }
 
     #[test]

@@ -15,8 +15,12 @@ use super::FaultPlan;
 use crate::util::json::Json;
 use std::path::Path;
 
-/// Artifact schema version.
-pub const SCHEMA_VERSION: i64 = 1;
+/// Artifact schema version. v2 added the result-integrity columns
+/// (`corrupted`, `flagged`, `quarantined`) to every `per_round` entry
+/// and to `totals`; v1 artifacts are rejected (regenerate them — the
+/// run is deterministic for a fixed `(spec, seed)`). See PERF.md for
+/// the migration note.
+pub const SCHEMA_VERSION: i64 = 2;
 
 /// Per-round aggregate across replicates. The fault/recovery counters
 /// and the liveness column are schedule-driven (identical in every
@@ -42,6 +46,13 @@ pub struct RoundAgg {
     pub degradations: u64,
     /// Tasks dropped before dispatch this round.
     pub dropped: u64,
+    /// Results returned corrupted this round (the plan's corruption
+    /// coin fired on a completed task).
+    pub corrupted: u64,
+    /// Corrupt replicas flagged by m-of-g voting this round.
+    pub flagged: u64,
+    /// Workers quarantined at the end of this round.
+    pub quarantined: u64,
 }
 
 impl RoundAgg {
@@ -56,6 +67,9 @@ impl RoundAgg {
             ("relaunches", (self.relaunches as i64).into()),
             ("degradations", (self.degradations as i64).into()),
             ("dropped", (self.dropped as i64).into()),
+            ("corrupted", (self.corrupted as i64).into()),
+            ("flagged", (self.flagged as i64).into()),
+            ("quarantined", (self.quarantined as i64).into()),
         ])
     }
 }
@@ -89,6 +103,12 @@ pub struct ChaosReport {
     pub total_degradations: u64,
     /// Sum of per-round `dropped`.
     pub total_dropped: u64,
+    /// Sum of per-round `corrupted`.
+    pub total_corrupted: u64,
+    /// Sum of per-round `flagged`.
+    pub total_flagged: u64,
+    /// Sum of per-round `quarantined`.
+    pub total_quarantined: u64,
     /// Mean rounds from a crash to the matching respawn (FIFO-matched;
     /// 0 when nothing respawned).
     pub mttr_rounds: f64,
@@ -129,6 +149,9 @@ impl ChaosReport {
                     ("relaunches", (self.total_relaunches as i64).into()),
                     ("degradations", (self.total_degradations as i64).into()),
                     ("dropped", (self.total_dropped as i64).into()),
+                    ("corrupted", (self.total_corrupted as i64).into()),
+                    ("flagged", (self.total_flagged as i64).into()),
+                    ("quarantined", (self.total_quarantined as i64).into()),
                 ]),
             ),
             ("mttr_rounds", self.mttr_rounds.into()),
@@ -191,8 +214,17 @@ pub fn validate_json(j: &Json) -> anyhow::Result<()> {
         "per_round has {} entries for {rounds} rounds",
         per_round.len()
     );
-    let counters = ["crashes", "respawns", "relaunches", "degradations", "dropped"];
-    let mut sums = [0i64; 5];
+    let counters = [
+        "crashes",
+        "respawns",
+        "relaunches",
+        "degradations",
+        "dropped",
+        "corrupted",
+        "flagged",
+        "quarantined",
+    ];
+    let mut sums = [0i64; 8];
     for (i, r) in per_round.iter().enumerate() {
         anyhow::ensure!(
             r.get("round").and_then(Json::as_i64) == Some(i as i64),
@@ -338,6 +370,15 @@ mod tests {
         // Unparseable embedded plan.
         let bad = mutate(&|m| {
             m.insert("plan".into(), Json::obj(vec![("events", Json::Num(1.0))]));
+        });
+        assert!(validate_json(&bad).is_err());
+        // A v1-style per_round entry (no integrity columns) is rejected.
+        let bad = mutate(&|m| {
+            let mut rounds = m.get("per_round").and_then(Json::as_array).expect("rows").clone();
+            let mut row = rounds[0].as_object().expect("row obj").clone();
+            row.remove("corrupted");
+            rounds[0] = Json::Object(row);
+            m.insert("per_round".into(), Json::Array(rounds));
         });
         assert!(validate_json(&bad).is_err());
     }

@@ -19,6 +19,11 @@
 //!               through the fault-aware event engine: crashes,
 //!               respawns, relaunches, degradations, MTTR and
 //!               rounds-to-recover → schema-validated CHAOS artifact
+//!   integrity   sweep vote size m × corruption probability (preset or
+//!               spec.json) through the verified event engine:
+//!               detection rate, false positives, quarantine latency
+//!               and the m-of-g completion overhead → schema-validated
+//!               INTEGRITY artifact
 //!   simulate    Monte-Carlo + event-engine simulation of one scenario
 //!   experiment  regenerate paper figures/tables (fig2|policies|spectrum|
 //!               ablations|extensions|control|live|all)
@@ -64,6 +69,8 @@ USAGE:
                       [--threads K] [--seed S] [--quiet]
                       [--live] [--fault <crash|respawn|slowdown|mixed|plan.json>]
   batchrep chaos      <smoke|fig2|spec.json> [--fast] [--out CHAOS.json]
+                      [--threads K] [--seed S] [--quiet]
+  batchrep integrity  <smoke|fig2|spec.json> [--fast] [--out INTEGRITY.json]
                       [--threads K] [--seed S] [--quiet]
   batchrep simulate   [--config f] [--n-workers 12] [--n-batches 4] [--policy p]
                       [--service spec] [--trials 100000] [--seed 42]
@@ -136,6 +143,7 @@ fn run() -> anyhow::Result<()> {
         Some("study") => cmd_study(&args),
         Some("control") => cmd_control(&args),
         Some("chaos") => cmd_chaos(&args),
+        Some("integrity") => cmd_integrity(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("train") => cmd_train(&args),
@@ -588,6 +596,89 @@ fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
         t.print();
     }
     println!("chaos artifact written to {out} (schema v{})", batchrep::fault::SCHEMA_VERSION);
+    Ok(())
+}
+
+/// The integrity gate: sweep vote size `m` × corruption probability
+/// through the verified event engine with a single corrupt worker,
+/// aggregate detection rate, false positives, quarantine latency and
+/// the m-of-g completion overhead, write an INTEGRITY artifact, and
+/// fail if it does not validate against the schema. Bit-deterministic
+/// per seed for any `--threads`.
+fn cmd_integrity(args: &Args) -> anyhow::Result<()> {
+    use batchrep::fault::IntegritySpec;
+    let which = args.positionals.get(1).cloned().ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: batchrep integrity <spec.json|{}> [--fast] [--out f]",
+            IntegritySpec::preset_names().join("|")
+        )
+    })?;
+    let fast = args.flag("fast") || std::env::var("BATCHREP_BENCH_FAST").is_ok();
+    let quiet = args.flag("quiet");
+    let threads = args.get_or::<usize>("threads", batchrep::evaluator::auto_threads())?;
+    let seed = args.get::<u64>("seed")?;
+    let mut spec = IntegritySpec::load(&which)?;
+    if let Some(s) = seed {
+        spec.seed = s;
+    }
+    if fast {
+        spec = spec.fast();
+    }
+    let out = args.get_or::<String>("out", format!("INTEGRITY_{}.json", spec.name))?;
+    args.finish()?;
+
+    println!(
+        "integrity '{}': N={} B={} service={} ms={:?} probs={:?} strikes={} \
+         rounds={} replicates={} seed={}",
+        spec.name,
+        spec.n_workers,
+        spec.n_batches,
+        spec.service.name(),
+        spec.ms,
+        spec.probs,
+        spec.strikes,
+        spec.rounds,
+        spec.replicates,
+        spec.seed
+    );
+    let timer = batchrep::util::Timer::start();
+    let report = batchrep::fault::run_integrity(&spec, threads)?;
+    let elapsed = timer.secs();
+
+    let path = std::path::Path::new(&out);
+    report.write(path)?;
+    // The CI gate: a malformed artifact is an error, not a warning.
+    batchrep::fault::integrity::validate_file(path)?;
+
+    if !quiet {
+        let mut t = Table::new(
+            &format!("integrity '{}' — m-of-g voting vs silent corruption", spec.name),
+            &[
+                "m", "prob", "corrupt", "flagged", "quar", "detect", "false+",
+                "rnds→quar", "E[T]", "overhead",
+            ],
+        );
+        for c in &report.cells {
+            t.row(vec![
+                c.m.to_string(),
+                fmt_f(c.prob, 2),
+                c.corrupted.to_string(),
+                c.flagged.to_string(),
+                c.quarantined.to_string(),
+                fmt_f(c.detection_rate, 3),
+                c.false_positive_flags.to_string(),
+                c.rounds_to_quarantine.to_string(),
+                fmt_f(c.mean_completion, 4),
+                fmt_f(c.latency_overhead, 4),
+            ]);
+        }
+        t.print();
+        println!("elapsed {elapsed:.3}s");
+    }
+    println!(
+        "integrity artifact written to {out} (schema v{})",
+        batchrep::fault::integrity::SCHEMA_VERSION
+    );
     Ok(())
 }
 

@@ -37,16 +37,31 @@ pub struct FaultTotals {
     pub respawns: u64,
     /// Speculative deadline relaunches dispatched.
     pub relaunches: u64,
-    /// Degraded-mode re-plans (assignment rebuilt onto survivors).
+    /// Degraded-mode re-plans plus detected-but-unrecoverable vote
+    /// rounds.
     pub degradations: u64,
     /// Tasks dropped before dispatch by the fault plan.
     pub dropped: u64,
+    /// Replicas dispatched with a corruption injection.
+    pub corrupted: u64,
+    /// Replicas flagged by the m-of-g vote.
+    pub flagged: u64,
+    /// Worker quarantines (strike budget exhausted).
+    pub quarantined: u64,
 }
 
 impl FaultTotals {
     /// Whether any fault-related event occurred during the run.
     pub fn any(&self) -> bool {
-        self.crashes + self.respawns + self.relaunches + self.degradations + self.dropped > 0
+        self.crashes
+            + self.respawns
+            + self.relaunches
+            + self.degradations
+            + self.dropped
+            + self.corrupted
+            + self.flagged
+            + self.quarantined
+            > 0
     }
 }
 
@@ -86,6 +101,9 @@ impl RunMetrics {
         self.faults.relaunches += e.relaunches;
         self.faults.degradations += e.degradations;
         self.faults.dropped += e.dropped;
+        self.faults.corrupted += e.corrupted;
+        self.faults.flagged += e.flagged;
+        self.faults.quarantined += e.quarantined;
     }
 
     /// Run-wide fault/recovery totals.
@@ -182,6 +200,9 @@ impl RunMetrics {
             t.row(vec!["deadline relaunches".into(), f.relaunches.to_string()]);
             t.row(vec!["degraded re-plans".into(), f.degradations.to_string()]);
             t.row(vec!["tasks dropped".into(), f.dropped.to_string()]);
+            t.row(vec!["corrupt results injected".into(), f.corrupted.to_string()]);
+            t.row(vec!["replicas flagged by vote".into(), f.flagged.to_string()]);
+            t.row(vec!["workers quarantined".into(), f.quarantined.to_string()]);
         }
         t
     }
@@ -257,12 +278,18 @@ mod tests {
             relaunches: 2,
             degradations: 0,
             dropped: 3,
+            corrupted: 2,
+            flagged: 1,
+            quarantined: 1,
         };
         m.note_fault_events(&e);
         m.note_fault_events(&e);
         let f = m.fault_totals();
         assert_eq!((f.crashes, f.respawns, f.relaunches, f.dropped), (2, 2, 4, 6));
-        assert!(m.summary_table("run").to_markdown().contains("deadline relaunches"));
+        assert_eq!((f.corrupted, f.flagged, f.quarantined), (4, 2, 2));
+        let md = m.summary_table("run").to_markdown();
+        assert!(md.contains("deadline relaunches"));
+        assert!(md.contains("workers quarantined"));
     }
 
     #[test]

@@ -183,6 +183,7 @@ pub fn execute(
                                 redundancy: c.scenario.redundancy,
                                 fail_prob: 0.0,
                                 relaunch_timeout_factor: 3.0,
+                                ..EngineConfig::default()
                             };
                             ShardOut::Des(engine::simulate_shard(
                                 &c.scenario,

@@ -374,6 +374,7 @@ pub const SPEC_FIELDS: &[&str] = &[
     "redundancy",
     "k_of_b",
     "speeds",
+    "verify_m",
     "backends",
     "mc_trials",
     "des_trials",
@@ -410,6 +411,12 @@ pub struct StudySpec {
     pub k_targets: Vec<KTarget>,
     /// Worker-speed profiles.
     pub speeds: Vec<SpeedAxis>,
+    /// m-of-g result verification: `0` or `1` leaves verification off;
+    /// `m >= 2` makes every cell wait for the m-th replica of each
+    /// batch and vote on result agreement (the scenarios carry
+    /// [`Scenario::verify_m`]). Requires upfront redundancy and a
+    /// replication degree of at least `m` at every axis point.
+    pub verify_m: usize,
     /// Evaluation backends (each axis point is evaluated by every one).
     pub backends: Vec<BackendSel>,
     /// Monte-Carlo trials per cell.
@@ -445,6 +452,7 @@ impl StudySpec {
             redundancy: vec![RedundancyAxis::Upfront],
             k_targets: vec![KTarget::Full],
             speeds: vec![SpeedAxis::Homogeneous],
+            verify_m: 0,
             backends: vec![BackendSel::MonteCarlo],
             mc_trials: 100_000,
             des_trials: 20_000,
@@ -498,6 +506,15 @@ impl StudySpec {
         axis("backends", self.backends.is_empty())?;
         if let BatchAxis::Explicit(v) = &self.batches {
             axis("batches", v.is_empty())?;
+        }
+        if self.verify_m >= 2 {
+            anyhow::ensure!(
+                self.redundancy.iter().all(|r| matches!(r, RedundancyAxis::Upfront)),
+                "StudySpec::verify_m = {} requires upfront redundancy on every \
+                 'redundancy' axis entry; m-of-g voting is undefined for \
+                 speculative relaunch",
+                self.verify_m
+            );
         }
         for &backend in &self.backends {
             anyhow::ensure!(
@@ -566,12 +583,20 @@ impl StudySpec {
                                         None => "homogeneous".to_string(),
                                         Some(v) => format!("{v:?}"),
                                     };
-                                    let structural = format!(
+                                    let mut structural = format!(
                                         "n={n};b={key_b};policy={};service={skey};red={};\
                                          k={k:?};speeds={speeds_key}",
                                         policy.name(),
                                         red.label()
                                     );
+                                    // The verify knob changes the completion
+                                    // law, so it joins the canonical key —
+                                    // but only when on, keeping legacy keys
+                                    // (and their derived seeds) stable.
+                                    if self.verify_m >= 2 {
+                                        structural =
+                                            format!("{structural};verify={}", self.verify_m);
+                                    }
                                     let scn_i = match scen_idx.get(&structural) {
                                         Some(&i) => i,
                                         None => {
@@ -596,6 +621,18 @@ impl StudySpec {
                                             }
                                             if let Some(v) = speeds.clone() {
                                                 scn = scn.with_speeds(v)?;
+                                            }
+                                            if self.verify_m >= 2 {
+                                                scn = scn
+                                                    .with_verify_m(self.verify_m)
+                                                    .map_err(|e| {
+                                                        anyhow::anyhow!(
+                                                            "StudySpec::verify_m = {} at axis \
+                                                             point (N={n}, B={b}, policy={}): {e}",
+                                                            self.verify_m,
+                                                            policy.name()
+                                                        )
+                                                    })?;
                                             }
                                             scenarios.push(scn);
                                             scen_idx
@@ -905,6 +942,14 @@ impl StudySpec {
                 .collect::<anyhow::Result<_>>()?;
         }
 
+        if let Some(m) = json_int(obj, "verify_m")? {
+            anyhow::ensure!(
+                m >= 0,
+                "study-spec field 'verify_m': expected a non-negative integer \
+                 (0 or 1 = off, m >= 2 = vote size), got {m}"
+            );
+            spec.verify_m = m as usize;
+        }
         if let Some(t) = json_int(obj, "mc_trials")? {
             spec.mc_trials = t.max(0) as u64;
         }
@@ -1446,6 +1491,65 @@ mod tests {
         // half-k target canonicalizes onto the full-completion cell.
         let plan = StudySpec::preset("smoke").unwrap().compile().unwrap();
         assert!(plan.deduped_points() > 0, "{:?}", plan.deduped_points());
+    }
+
+    #[test]
+    fn verify_m_knob_compiles_gates_and_keys() {
+        let base = StudySpec {
+            n_workers: vec![12],
+            batches: BatchAxis::Explicit(vec![4]),
+            services: vec![sexp_paper()],
+            backends: vec![BackendSel::MonteCarlo],
+            mc_trials: 100,
+            ..StudySpec::base("verify-knob")
+        };
+        let off = base.clone().compile().unwrap();
+        assert_eq!(off.scenarios[0].verify_m, None);
+        let on = StudySpec { verify_m: 2, ..base.clone() }.compile().unwrap();
+        assert_eq!(on.scenarios[0].verify_m, Some(2));
+        // The verify segment joins the canonical key, so the derived
+        // scenario seed moves with it.
+        assert_ne!(on.scenarios[0].seed, off.scenarios[0].seed);
+        // verify_m = 1 is the off spelling: legacy keys (and seeds)
+        // stay byte-stable.
+        let one = StudySpec { verify_m: 1, ..base.clone() }.compile().unwrap();
+        assert_eq!(one.scenarios[0].verify_m, None);
+        assert_eq!(one.scenarios[0].seed, off.scenarios[0].seed);
+        // Infeasible m (FullParallelism has replication degree 1) names
+        // the knob and the axis point.
+        let msg = StudySpec {
+            policies: vec![ReplicationPolicy::FullParallelism],
+            verify_m: 2,
+            ..base.clone()
+        }
+        .compile()
+        .unwrap_err()
+        .to_string();
+        assert!(msg.contains("StudySpec::verify_m"), "{msg}");
+        assert!(msg.contains("full_parallelism"), "{msg}");
+        // Speculative redundancy is refused before any cell is planned.
+        let msg = StudySpec {
+            redundancy: vec![RedundancyAxis::Speculative(1.5)],
+            verify_m: 2,
+            ..base.clone()
+        }
+        .compile()
+        .unwrap_err()
+        .to_string();
+        assert!(msg.contains("StudySpec::verify_m") && msg.contains("upfront"), "{msg}");
+        // The spec-file field parses, and junk is rejected with the
+        // off/on semantics spelled out.
+        let j = Json::parse(
+            r#"{"n_workers": [12], "services": ["sexp:1.0,0.2"], "verify_m": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(StudySpec::from_json(&j).unwrap().verify_m, 2);
+        let bad = Json::parse(
+            r#"{"n_workers": [12], "services": ["sexp:1.0,0.2"], "verify_m": -1}"#,
+        )
+        .unwrap();
+        let msg = StudySpec::from_json(&bad).unwrap_err().to_string();
+        assert!(msg.contains("'verify_m'"), "{msg}");
     }
 
     #[test]

@@ -67,6 +67,29 @@ pub struct TaskMsg {
     /// (the failure detector firing) and its thread exits, never to
     /// accept another task.
     pub crash_after_s: Option<f64>,
+    /// Fault injection: silently corrupt this replica's result — the
+    /// worker completes on time but returns a deterministically
+    /// perturbed value (see [`corrupt_output`]), the failure mode the
+    /// m-of-g vote exists to catch.
+    pub corrupt: bool,
+}
+
+/// The silent-corruption perturbation: every output component is
+/// shifted by `1 + worker_id`. Additive (so zero outputs still differ)
+/// and worker-dependent (so two corrupt replicas of the same batch
+/// never agree with *each other* either — an all-corrupt batch stays
+/// detectable as disagreement even though it is unattributable).
+pub fn corrupt_output(worker_id: usize, out: &mut JobOut) {
+    let shift = 1.0 + worker_id as f32;
+    match out {
+        JobOut::Grad(g) => {
+            for v in &mut g.grad {
+                *v += shift;
+            }
+            g.loss += shift;
+        }
+        JobOut::MapSum(v) => *v += shift,
+    }
 }
 
 /// Worker → master result.
@@ -223,12 +246,14 @@ const CANCEL_POLL: std::time::Duration = std::time::Duration::from_millis(1);
 /// `compute_factory` runs *on the worker thread* (PJRT engines are not
 /// `Send`); a factory error is reported once and the worker then answers
 /// every task with a cancelled result rather than wedging the master.
+/// A thread-spawn failure (OS limit) is a named error, not a panic —
+/// the coordinator routes it through its respawn/degradation machinery.
 pub fn spawn_worker<F>(
     worker_id: usize,
     shard: Shard,
     compute_factory: F,
     results: Sender<ResultMsg>,
-) -> WorkerHandle
+) -> anyhow::Result<WorkerHandle>
 where
     F: FnOnce() -> anyhow::Result<Box<dyn Compute>> + Send + 'static,
 {
@@ -257,7 +282,12 @@ where
                     });
                     return;
                 }
-                let out = run_task(worker_id, &shard, compute.as_mut(), &task);
+                let mut out = run_task(worker_id, &shard, compute.as_mut(), &task);
+                if task.corrupt {
+                    if let Some(o) = &mut out {
+                        corrupt_output(worker_id, o);
+                    }
+                }
                 let msg = ResultMsg {
                     job_id: task.job_id,
                     batch_id: task.batch_id,
@@ -270,8 +300,8 @@ where
                 }
             }
         })
-        .expect("spawn worker thread");
-    WorkerHandle { tx, join }
+        .map_err(|e| anyhow::anyhow!("failed to spawn worker thread {worker_id}: {e}"))?;
+    Ok(WorkerHandle { tx, join })
 }
 
 fn run_task(
@@ -349,7 +379,9 @@ mod tests {
     #[test]
     fn worker_executes_and_reports() {
         let (res_tx, res_rx) = std::sync::mpsc::channel();
-        let h = spawn_worker(3, shard_2x2(), || Ok(Box::new(MockCompute) as Box<dyn Compute>), res_tx);
+        let h =
+            spawn_worker(3, shard_2x2(), || Ok(Box::new(MockCompute) as Box<dyn Compute>), res_tx)
+                .unwrap();
         let cancel = Arc::new(AtomicBool::new(false));
         h.tx.send(TaskMsg {
             job_id: 9,
@@ -358,6 +390,7 @@ mod tests {
             delay_s: 0.0,
             cancel,
             crash_after_s: None,
+            corrupt: false,
         })
         .unwrap();
         let r = res_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
@@ -369,7 +402,9 @@ mod tests {
     #[test]
     fn cancellation_stops_delayed_task() {
         let (res_tx, res_rx) = std::sync::mpsc::channel();
-        let h = spawn_worker(0, shard_2x2(), || Ok(Box::new(MockCompute) as Box<dyn Compute>), res_tx);
+        let h =
+            spawn_worker(0, shard_2x2(), || Ok(Box::new(MockCompute) as Box<dyn Compute>), res_tx)
+                .unwrap();
         let cancel = Arc::new(AtomicBool::new(false));
         h.tx.send(TaskMsg {
             job_id: 1,
@@ -378,6 +413,7 @@ mod tests {
             delay_s: 10.0, // would block the test if not cancelled
             cancel: cancel.clone(),
             crash_after_s: None,
+            corrupt: false,
         })
         .unwrap();
         std::thread::sleep(std::time::Duration::from_millis(20));
@@ -390,7 +426,7 @@ mod tests {
     #[test]
     fn failed_factory_reports_cancelled_results() {
         let (res_tx, res_rx) = std::sync::mpsc::channel();
-        let h = spawn_worker(0, shard_2x2(), || anyhow::bail!("boom"), res_tx);
+        let h = spawn_worker(0, shard_2x2(), || anyhow::bail!("boom"), res_tx).unwrap();
         let cancel = Arc::new(AtomicBool::new(false));
         h.tx.send(TaskMsg {
             job_id: 1,
@@ -399,6 +435,7 @@ mod tests {
             delay_s: 0.0,
             cancel,
             crash_after_s: None,
+            corrupt: false,
         })
         .unwrap();
         let r = res_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
@@ -409,7 +446,9 @@ mod tests {
     #[test]
     fn crash_reports_death_notice_and_kills_thread() {
         let (res_tx, res_rx) = std::sync::mpsc::channel();
-        let h = spawn_worker(2, shard_2x2(), || Ok(Box::new(MockCompute) as Box<dyn Compute>), res_tx);
+        let h =
+            spawn_worker(2, shard_2x2(), || Ok(Box::new(MockCompute) as Box<dyn Compute>), res_tx)
+                .unwrap();
         let cancel = Arc::new(AtomicBool::new(false));
         h.tx.send(TaskMsg {
             job_id: 7,
@@ -418,6 +457,7 @@ mod tests {
             delay_s: 10.0, // never slept: the crash preempts the task
             cancel: cancel.clone(),
             crash_after_s: Some(0.005),
+            corrupt: false,
         })
         .unwrap();
         let r = res_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
@@ -432,8 +472,56 @@ mod tests {
             delay_s: 0.0,
             cancel,
             crash_after_s: None,
+            corrupt: false,
         })
         .ok();
         h.shutdown();
+    }
+
+    #[test]
+    fn corrupt_task_perturbs_deterministically() {
+        // A corrupted replica completes on time but returns the honest
+        // value shifted by 1 + worker_id on every component — so two
+        // corrupt workers never agree with the honest value or each
+        // other.
+        let run = |worker: usize, corrupt: bool| -> JobOut {
+            let (res_tx, res_rx) = std::sync::mpsc::channel();
+            let h = spawn_worker(
+                worker,
+                shard_2x2(),
+                || Ok(Box::new(MockCompute) as Box<dyn Compute>),
+                res_tx,
+            )
+            .unwrap();
+            h.tx.send(TaskMsg {
+                job_id: 0,
+                batch_id: 0,
+                spec: JobSpec::Grad { w: Arc::new(vec![1.0, 0.0]) },
+                delay_s: 0.0,
+                cancel: Arc::new(AtomicBool::new(false)),
+                crash_after_s: None,
+                corrupt,
+            })
+            .unwrap();
+            let r = res_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            h.shutdown();
+            r.out.expect("task completed")
+        };
+        let honest = run(3, false);
+        match honest {
+            JobOut::Grad(ref g) => assert_eq!(g.grad, vec![6.0, 8.0]),
+            _ => panic!("wrong output kind"),
+        }
+        let corrupt3 = run(3, true);
+        match (&honest, &corrupt3) {
+            (JobOut::Grad(h), JobOut::Grad(c)) => {
+                assert_eq!(c.grad, vec![h.grad[0] + 4.0, h.grad[1] + 4.0]);
+                assert_eq!(c.loss, h.loss + 4.0);
+            }
+            _ => panic!("wrong output kind"),
+        }
+        // Determinism and worker-dependence.
+        assert_eq!(run(3, true), corrupt3);
+        assert_ne!(run(5, true), corrupt3);
     }
 }
