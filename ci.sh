@@ -80,6 +80,21 @@ else
   cargo run --release -- study smoke --fast --quiet --out ../STUDY_smoke.json
 fi
 
+echo "== obs smoke (event log capture + summarize) =="
+# Runs the same smoke study with the observability sink installed
+# (--events), then pushes the captured JSON-lines log through
+# `obs summarize` — which schema-validates every line and fails on a
+# malformed or empty log. Same no-clobber rule as the bench JSONs: a
+# full-budget event log at the repo root is never overwritten.
+if [ -f ../EVENTS_smoke.jsonl ]; then
+  EVENTS_OUT=target/EVENTS_smoke.jsonl
+else
+  EVENTS_OUT=../EVENTS_smoke.jsonl
+fi
+cargo run --release -- study smoke --fast --quiet \
+  --events "$EVENTS_OUT" --out target/STUDY_obs_smoke.json
+cargo run --release -- obs summarize "$EVENTS_OUT"
+
 echo "== control smoke (adaptive redundancy controller) =="
 # Runs the closed-loop controller preset at --fast budgets and
 # schema-validates the CONTROL artifact it writes (the subcommand
@@ -111,5 +126,20 @@ if [ -f ../BENCH_des.json ]; then
 else
   BATCHREP_BENCH_FAST=1 cargo run --release -- bench-des --out ../BENCH_des.json
 fi
+
+echo "== bench trajectory artifacts present at repo root =="
+# PERF.md records a perf trajectory for the MC and DES hot loops; the
+# bench smokes above seed these files on first run. If either is
+# missing the trajectory is silently empty — fail loudly instead.
+for f in ../BENCH_mc.json ../BENCH_des.json; do
+  if [ ! -f "$f" ]; then
+    name=$(basename "$f" .json)
+    sub=${name#BENCH_}
+    echo "error: $(basename "$f") missing at the repo root — the perf" >&2
+    echo "trajectory in PERF.md has no baseline. Regenerate with:" >&2
+    echo "  (cd rust && cargo run --release -- bench-${sub} --out $f)" >&2
+    exit 1
+  fi
+done
 
 echo "ci.sh: all gates passed"

@@ -165,17 +165,25 @@ pub fn completion_time_stats(n: u64, b: u64, spec: &ServiceSpec) -> anyhow::Resu
     Ok(st)
 }
 
-/// Memo lookup (bumps the hit counter on success).
+/// Memo lookup (bumps the hit counters on success).
 fn ct_cache_get(key: &CtKey) -> Option<CtStats> {
     let hit = CT_CACHE.with(|c| c.borrow().get(key).copied());
     if hit.is_some() {
         CT_HITS.with(|h| h.set(h.get() + 1));
+        crate::obs::bump(crate::obs::Counter::CtHit, 1);
     }
     hit
 }
 
-/// Memo insert with the leak-guard cap.
+/// Memo insert with the leak-guard cap. Every insert is a miss that was
+/// just computed, so this is also where the process-wide miss counter
+/// and (when a sink is installed) the `analysis/cache_miss` event live —
+/// exactly mirroring the thread-local `CT_MISSES` semantics.
 fn ct_cache_put(key: CtKey, st: CtStats) {
+    crate::obs::bump(crate::obs::Counter::CtMiss, 1);
+    if crate::obs::enabled() {
+        crate::obs::emit("analysis", "cache_miss", &[("n", key.n.into()), ("b", key.b.into())]);
+    }
     CT_CACHE.with(|c| {
         let mut map = c.borrow_mut();
         if map.len() >= CT_CACHE_CAP {
@@ -1106,7 +1114,7 @@ mod tests {
         let mut mc = crate::des::montecarlo::run_trials(&scn, 200_000, 31);
         for q in [0.5, 0.9, 0.99] {
             let theory = completion_time_quantile(12, 4, &spec, q).unwrap();
-            let emp = mc.samples.quantile(q);
+            let emp = mc.samples.quantile(q).unwrap();
             let rel = (theory - emp).abs() / theory;
             assert!(rel < 0.03, "q={q}: theory {theory} vs mc {emp}");
         }

@@ -190,8 +190,14 @@ pub fn validate_json(j: &Json) -> anyhow::Result<()> {
 
 /// Read `path` and [`validate_json`] it.
 pub fn validate_file(path: &Path) -> anyhow::Result<Json> {
-    let text = std::fs::read_to_string(path)
-        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        anyhow::anyhow!(
+            "reading {}: {e} — regenerate with `batchrep bench-mc --out {}` \
+             (baseline workflow in PERF.md)",
+            path.display(),
+            path.display()
+        )
+    })?;
     let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
     validate_json(&j)?;
     Ok(j)

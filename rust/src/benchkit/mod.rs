@@ -167,13 +167,13 @@ fn run_bench<F: FnMut()>(
         total_iters += batch;
     }
 
-    let median = per_iter.median();
+    let median = per_iter.median().expect("bench measured at least one iteration");
     let mean = per_iter.mean();
     let mut devs = Samples::new();
     for &x in per_iter.raw() {
         devs.push((x - median).abs());
     }
-    let mad = devs.median();
+    let mad = devs.median().expect("deviations mirror the non-empty samples");
     Measurement {
         name: name.to_string(),
         median_s: median,

@@ -436,6 +436,26 @@ impl Controller {
             n_censored: self.acc.n_censored(),
         };
         self.decisions.push(decision.clone());
+        match action {
+            Action::Replan => crate::obs::bump(crate::obs::Counter::ControlReplans, 1),
+            Action::DriftReplan => {
+                crate::obs::bump(crate::obs::Counter::ControlDriftReplans, 1)
+            }
+            Action::Hold => {}
+        }
+        if action != Action::Hold && crate::obs::enabled() {
+            crate::obs::emit(
+                "control",
+                action.name(),
+                &[
+                    ("epoch", epoch.into()),
+                    ("b", decision.b.into()),
+                    ("g", decision.g.into()),
+                    ("mu", decision.mu.into()),
+                    ("delta", decision.delta.into()),
+                ],
+            );
+        }
         Ok(decision)
     }
 }

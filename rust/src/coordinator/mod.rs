@@ -586,6 +586,13 @@ impl Coordinator {
                         self.dead[w] = false;
                         self.strikes[w] = 0;
                         events.respawns += 1;
+                        if crate::obs::enabled() {
+                            crate::obs::emit(
+                                "coordinator",
+                                "respawn",
+                                &[("worker", w.into()), ("round", round.into())],
+                            );
+                        }
                     }
                     Err(e) => {
                         eprintln!("worker {w}: respawn failed ({e}); retrying with backoff");
@@ -610,6 +617,13 @@ impl Coordinator {
     ) {
         self.dead[w] = true;
         events.crashes += 1;
+        if crate::obs::enabled() {
+            crate::obs::emit(
+                "coordinator",
+                "crash",
+                &[("worker", w.into()), ("round", round.into())],
+            );
+        }
         if let Some(d) = respawn_after {
             let backoff = 1u64 << self.respawn_attempts[w].min(3);
             self.respawn_at[w] = Some(round + d.saturating_mul(backoff));
@@ -672,6 +686,13 @@ impl Coordinator {
             }
         }
         events.degradations += 1;
+        if crate::obs::enabled() {
+            crate::obs::emit(
+                "coordinator",
+                "degrade",
+                &[("b_new", b_new.into()), ("live", n_live.into())],
+            );
+        }
         Ok(())
     }
 
@@ -773,12 +794,26 @@ impl Coordinator {
                     // The worker never starts this round's task; the
                     // per-batch deadline relaunch recovers the batch.
                     events.dropped += 1;
+                    if crate::obs::enabled() {
+                        crate::obs::emit(
+                            "fault",
+                            "task_drop",
+                            &[("worker", w.into()), ("round", round.into())],
+                        );
+                    }
                     continue;
                 }
             }
             let batch = self.assignment.batch_of_worker[w];
             let speed = self.speeds.as_ref().map_or(1.0, |sp| sp[w]);
             let slow = self.fault.as_ref().map_or(1.0, |p| p.slow_factor(w, round));
+            if slow != 1.0 && crate::obs::enabled() {
+                crate::obs::emit(
+                    "fault",
+                    "slowdown",
+                    &[("worker", w.into()), ("round", round.into()), ("factor", slow.into())],
+                );
+            }
             // The effective draw folds the slowdown in, so telemetry
             // (and the control loop fed by it) observes the drifted law.
             let draw = self.service.sample_batch(s_units, &mut self.rng) * slow;
@@ -948,6 +983,17 @@ impl Coordinator {
                             self.scratch.batch_pending[b] += 1;
                             dispatched += 1;
                             events.relaunches += 1;
+                            if crate::obs::enabled() {
+                                crate::obs::emit(
+                                    "coordinator",
+                                    "relaunch",
+                                    &[
+                                        ("round", round.into()),
+                                        ("batch", b.into()),
+                                        ("worker", w.into()),
+                                    ],
+                                );
+                            }
                             if delay > self.scratch.batch_max_delay[b] {
                                 self.scratch.batch_max_delay[b] = delay;
                             }
@@ -965,12 +1011,23 @@ impl Coordinator {
                                 overall_deadline.max(now + timeout + LIVENESS_GRACE_S);
                         }
                     }
-                    anyhow::ensure!(
-                        now < overall_deadline,
-                        "round {round} missed its liveness deadline ({overall_deadline:.1}s): \
-                         {} of {dispatched} tasks unreported",
-                        dispatched - reported
-                    );
+                    if now >= overall_deadline {
+                        if crate::obs::enabled() {
+                            crate::obs::emit(
+                                "coordinator",
+                                "timeout",
+                                &[
+                                    ("round", round.into()),
+                                    ("unreported", (dispatched - reported).into()),
+                                ],
+                            );
+                        }
+                        anyhow::bail!(
+                            "round {round} missed its liveness deadline \
+                             ({overall_deadline:.1}s): {} of {dispatched} tasks unreported",
+                            dispatched - reported
+                        );
+                    }
                     continue;
                 }
             };
@@ -1115,6 +1172,13 @@ impl Coordinator {
                     self.dead[w] = true;
                     self.quarantine_armed = true;
                     events.quarantined += 1;
+                    if crate::obs::enabled() {
+                        crate::obs::emit(
+                            "coordinator",
+                            "quarantine",
+                            &[("round", round.into()), ("worker", w.into())],
+                        );
+                    }
                     let backoff = 1u64 << self.respawn_attempts[w].min(3);
                     self.respawn_at[w] = Some(
                         round
@@ -1139,6 +1203,36 @@ impl Coordinator {
             cancelled,
         });
         self.metrics.note_fault_events(&events);
+        {
+            use crate::obs::{bump, Counter};
+            bump(Counter::LiveRounds, 1);
+            bump(Counter::LiveCrashes, events.crashes);
+            bump(Counter::LiveRespawns, events.respawns);
+            bump(Counter::LiveRelaunches, events.relaunches);
+            bump(Counter::LiveDegradations, events.degradations);
+            bump(Counter::LiveDropped, events.dropped);
+            bump(Counter::LiveCorrupted, events.corrupted);
+            bump(Counter::LiveFlagged, events.flagged);
+            bump(Counter::LiveQuarantined, events.quarantined);
+        }
+        if crate::obs::enabled() {
+            crate::obs::emit(
+                "coordinator",
+                "round",
+                &[
+                    ("round", round.into()),
+                    ("wall_s", completion.into()),
+                    ("injected_s", max_injected_winner.into()),
+                    ("dispatch_s", dispatch_s.into()),
+                    ("dispatched", dispatched.into()),
+                    ("redundant", redundant.into()),
+                    ("cancelled", cancelled.into()),
+                    ("relaunches", events.relaunches.into()),
+                    ("crashes", events.crashes.into()),
+                    ("quarantined", events.quarantined.into()),
+                ],
+            );
+        }
         let output = agg.ok_or_else(|| anyhow::anyhow!("no results aggregated"))?;
         Ok(RoundResult { output, events })
     }

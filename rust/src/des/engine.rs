@@ -586,6 +586,16 @@ pub(crate) fn simulate_shard(
     keep_every: u64,
     ws: &mut Workspace,
 ) -> EngineSummary {
+    let _span = crate::obs::span("des.shard");
+    crate::obs::bump(crate::obs::Counter::DesShards, 1);
+    crate::obs::bump(crate::obs::Counter::DesTrials, trials);
+    if crate::obs::enabled() {
+        crate::obs::emit(
+            "des",
+            "shard",
+            &[("trials", trials.into()), ("workers", scn.n_workers().into())],
+        );
+    }
     summarize_trials(trials, keep_every, || simulate_one_with(scn, cfg, &mut rng, ws))
 }
 

@@ -350,6 +350,12 @@ pub(crate) fn run_shard(
     scratch: &mut TrialScratch,
 ) -> McSummary {
     let n = scn.n_workers();
+    let _span = crate::obs::span("mc.shard");
+    crate::obs::bump(crate::obs::Counter::McShards, 1);
+    crate::obs::bump(crate::obs::Counter::McTrials, trials);
+    if crate::obs::enabled() {
+        crate::obs::emit("mc", "shard", &[("trials", trials.into()), ("workers", n.into())]);
+    }
     let block = trials_per_block(n);
     let mut welford = Welford::new();
     let mut samples = Samples::with_capacity((trials / keep_every) as usize + 1);

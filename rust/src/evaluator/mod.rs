@@ -802,10 +802,7 @@ impl Evaluator for LiveEvaluator {
 }
 
 pub(crate) fn quantiles_from(samples: &mut Samples) -> Vec<(f64, f64)> {
-    if samples.is_empty() {
-        return Vec::new();
-    }
-    QUANTILES.iter().map(|&q| (q, samples.quantile(q))).collect()
+    QUANTILES.iter().filter_map(|&q| samples.quantile(q).map(|v| (q, v))).collect()
 }
 
 // ---------------------------------------------------------------------

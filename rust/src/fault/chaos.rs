@@ -373,6 +373,23 @@ pub fn run_chaos(spec: &ChaosSpec, threads: usize) -> anyhow::Result<ChaosReport
             )
         });
 
+    crate::obs::bump(crate::obs::Counter::FaultChaosRuns, 1);
+    if crate::obs::enabled() {
+        crate::obs::emit(
+            "fault",
+            "chaos_run",
+            &[
+                ("rounds", spec.rounds.into()),
+                ("replicates", (runs.len() as u64).into()),
+                ("crashes", t_crash.into()),
+                ("respawns", t_respawn.into()),
+                ("relaunches", t_relaunch.into()),
+                ("degradations", t_degrade.into()),
+                ("dropped", t_drop.into()),
+                ("mttr_rounds", mttr_rounds.into()),
+            ],
+        );
+    }
     Ok(ChaosReport {
         name: spec.name.clone(),
         seed: spec.seed,

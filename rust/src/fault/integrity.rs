@@ -461,6 +461,18 @@ pub fn run_integrity(spec: &IntegritySpec, threads: usize) -> anyhow::Result<Int
             });
         }
     }
+    crate::obs::bump(crate::obs::Counter::FaultIntegrityRuns, 1);
+    if crate::obs::enabled() {
+        crate::obs::emit(
+            "fault",
+            "integrity_run",
+            &[
+                ("cells", cells.len().into()),
+                ("rounds", spec.rounds.into()),
+                ("replicates", spec.replicates.into()),
+            ],
+        );
+    }
     Ok(IntegrityReport { name: spec.name.clone(), spec: spec.clone(), cells })
 }
 

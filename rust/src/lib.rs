@@ -70,7 +70,12 @@
 //!   censored per-replica telemetry, plans redundancy under a
 //!   declarative objective, detects drift (CUSUM), and measures regret
 //!   vs the oracle plan in a closed loop (`batchrep control`);
-//! * [`experiments`] — drivers that regenerate every figure/table.
+//! * [`experiments`] — drivers that regenerate every figure/table;
+//! * [`obs`] — the unified observability layer: an explicitly-installed
+//!   JSON-lines event sink (`--events <path>` on the CLI), wall-clock
+//!   spans, and a typed counters registry, all no-op by default so
+//!   bit-determinism and hot-path cost are untouched (`batchrep obs
+//!   summarize` renders the log).
 //!
 //! Substrates built in-crate (offline environment): PRNG, statistics,
 //! JSON, TOML-subset config, property-testing ([`testkit`]) and
@@ -122,6 +127,7 @@ pub mod evaluator;
 pub mod experiments;
 pub mod fault;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod study;
 pub mod testkit;

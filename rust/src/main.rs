@@ -34,6 +34,10 @@
 //!               --long for the soak sweep)
 //!   bench-mc    Monte-Carlo throughput harness → BENCH_mc.json
 //!   bench-des   event-engine throughput harness → BENCH_des.json
+//!   obs         summarize + schema-validate a structured event log
+//!               (the `--events <path>` JSONL that evaluate/study/
+//!               control/chaos/integrity write): per-span time
+//!               breakdown, event counts, relaunch histogram
 //!
 //! Global options: `--config <file.toml>` plus per-key overrides
 //! (`--n-workers 24`, `--service sexp:1.0,0.2`, `--seed 7`, ...). The
@@ -62,16 +66,18 @@ USAGE:
                       [--config f] [--n-workers 24] [--n-batches 4] [--policy p]
                       [--service spec] [--trials 100000] [--seed 42] [--threads K]
                       [--speculative 1.5] [--rounds 30] [--live]
+                      [--events ev.jsonl]
   batchrep study      <smoke|fig2|tradeoff|policies|spec.json> [--fast]
                       [--out STUDY.json] [--csv points.csv] [--threads K]
-                      [--seed S] [--quiet]
+                      [--seed S] [--quiet] [--events ev.jsonl]
   batchrep control    <smoke|drift|spec.json> [--fast] [--out CONTROL.json]
-                      [--threads K] [--seed S] [--quiet]
+                      [--threads K] [--seed S] [--quiet] [--events ev.jsonl]
                       [--live] [--fault <crash|respawn|slowdown|mixed|plan.json>]
   batchrep chaos      <smoke|fig2|spec.json> [--fast] [--out CHAOS.json]
-                      [--threads K] [--seed S] [--quiet]
+                      [--threads K] [--seed S] [--quiet] [--events ev.jsonl]
   batchrep integrity  <smoke|fig2|spec.json> [--fast] [--out INTEGRITY.json]
-                      [--threads K] [--seed S] [--quiet]
+                      [--threads K] [--seed S] [--quiet] [--events ev.jsonl]
+  batchrep obs        summarize <events.jsonl>
   batchrep simulate   [--config f] [--n-workers 12] [--n-batches 4] [--policy p]
                       [--service spec] [--trials 100000] [--seed 42]
                       [--overlapping] [--no-cancel] [--speculative 1.5]
@@ -135,6 +141,31 @@ fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
     Ok(cfg)
 }
 
+/// RAII owner of the process-wide event sink behind `--events <path>`:
+/// installs the JSON-lines sink before the run and uninstalls it (final
+/// counters event + flush) on every exit path, including errors.
+struct EventsGuard(bool);
+
+impl EventsGuard {
+    fn install(path: Option<&str>) -> anyhow::Result<EventsGuard> {
+        match path {
+            Some(p) => {
+                batchrep::obs::install_file(std::path::Path::new(p))?;
+                Ok(EventsGuard(true))
+            }
+            None => Ok(EventsGuard(false)),
+        }
+    }
+}
+
+impl Drop for EventsGuard {
+    fn drop(&mut self) {
+        if self.0 {
+            batchrep::obs::uninstall();
+        }
+    }
+}
+
 fn run() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     match args.subcommand() {
@@ -152,6 +183,7 @@ fn run() -> anyhow::Result<()> {
         Some("conformance") => cmd_conformance(&args),
         Some("bench-mc") => cmd_bench_mc(&args),
         Some("bench-des") => cmd_bench_des(&args),
+        Some("obs") => cmd_obs(&args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -196,8 +228,10 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     let threads = args.get_or::<usize>("threads", MonteCarloEvaluator::auto_threads())?;
     let check = args.flag("cross-check");
     let include_live = args.flag("live") || which == "live";
+    let events = args.get::<String>("events")?;
     let cfg = load_config(args)?;
     args.finish()?;
+    let _events = EventsGuard::install(events.as_deref())?;
     // Validate the config the same way the direct scenario path would
     // (overlapping-vs-policy conflicts, k_of_b bounds, ...).
     let scn = cfg.scenario()?;
@@ -365,7 +399,9 @@ fn cmd_study(args: &Args) -> anyhow::Result<()> {
         spec = spec.fast();
     }
     let out = args.get_or::<String>("out", format!("STUDY_{}.json", spec.name))?;
+    let events = args.get::<String>("events")?;
     args.finish()?;
+    let _events = EventsGuard::install(events.as_deref())?;
 
     let plan = spec.compile()?;
     println!(
@@ -463,7 +499,9 @@ fn cmd_control(args: &Args) -> anyhow::Result<()> {
         format!("CONTROL_{}.json", spec.name)
     };
     let out = args.get_or::<String>("out", default_out)?;
+    let events = args.get::<String>("events")?;
     args.finish()?;
+    let _events = EventsGuard::install(events.as_deref())?;
 
     println!(
         "control '{}'{}: N={} objective={} fit={} prior={} phases={} epochs={} \
@@ -548,7 +586,9 @@ fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
         spec = spec.fast();
     }
     let out = args.get_or::<String>("out", format!("CHAOS_{}.json", spec.name))?;
+    let events = args.get::<String>("events")?;
     args.finish()?;
+    let _events = EventsGuard::install(events.as_deref())?;
 
     println!(
         "chaos '{}': N={} B={} service={} plan={} ({} events) rounds={} replicates={} seed={}",
@@ -625,7 +665,9 @@ fn cmd_integrity(args: &Args) -> anyhow::Result<()> {
         spec = spec.fast();
     }
     let out = args.get_or::<String>("out", format!("INTEGRITY_{}.json", spec.name))?;
+    let events = args.get::<String>("events")?;
     args.finish()?;
+    let _events = EventsGuard::install(events.as_deref())?;
 
     println!(
         "integrity '{}': N={} B={} service={} ms={:?} probs={:?} strikes={} \
@@ -679,6 +721,85 @@ fn cmd_integrity(args: &Args) -> anyhow::Result<()> {
         "integrity artifact written to {out} (schema v{})",
         batchrep::fault::integrity::SCHEMA_VERSION
     );
+    Ok(())
+}
+
+/// Summarize + schema-validate a structured event log (`batchrep obs
+/// summarize <events.jsonl>`): overview, per-`sub/kind` event counts,
+/// per-span time breakdown, the straggler/relaunch histogram, and the
+/// final counters snapshot. A malformed log is an error, not a warning
+/// — this is the same gate ci.sh runs on the smoke event artifact.
+fn cmd_obs(args: &Args) -> anyhow::Result<()> {
+    let verb = args.positionals.get(1).cloned();
+    anyhow::ensure!(
+        verb.as_deref() == Some("summarize"),
+        "usage: batchrep obs summarize <events.jsonl>"
+    );
+    let path = args
+        .positionals
+        .get(2)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: batchrep obs summarize <events.jsonl>"))?;
+    args.finish()?;
+    let s = batchrep::obs::validate_file(std::path::Path::new(&path))?;
+
+    let mut t = Table::new(&format!("event log {path} — overview"), &["metric", "value"]);
+    t.row(vec!["events".into(), s.lines.to_string()]);
+    t.row(vec![
+        "subsystems".into(),
+        s.subsystems.iter().cloned().collect::<Vec<_>>().join(", "),
+    ]);
+    t.row(vec!["duration (s)".into(), fmt_f(s.duration_s(), 3)]);
+    if s.live_rounds > 0 {
+        t.row(vec!["live rounds".into(), s.live_rounds.to_string()]);
+    }
+    t.print();
+
+    let mut t = Table::new("events by subsystem/kind", &["event", "count"]);
+    for (k, n) in &s.event_counts {
+        t.row(vec![k.clone(), n.to_string()]);
+    }
+    t.print();
+
+    if !s.spans.is_empty() {
+        let mut spans: Vec<_> = s.spans.iter().collect();
+        spans.sort_by(|a, b| b.1.total_s.total_cmp(&a.1.total_s));
+        let mut t = Table::new(
+            "span time breakdown (heaviest first)",
+            &["span", "count", "total (s)", "mean (s)", "max (s)"],
+        );
+        for (name, agg) in spans {
+            t.row(vec![
+                name.clone(),
+                agg.count.to_string(),
+                fmt_f(agg.total_s, 4),
+                fmt_f(agg.total_s / agg.count as f64, 6),
+                fmt_f(agg.max_s, 6),
+            ]);
+        }
+        t.print();
+    }
+
+    if !s.relaunch_hist.is_empty() {
+        let mut t = Table::new(
+            "straggler/relaunch histogram (relaunches per live round)",
+            &["relaunches", "rounds"],
+        );
+        for (k, n) in &s.relaunch_hist {
+            t.row(vec![k.to_string(), n.to_string()]);
+        }
+        t.print();
+    }
+
+    if !s.counters.is_empty() {
+        let mut t = Table::new("final counters", &["counter", "value"]);
+        for (k, n) in &s.counters {
+            t.row(vec![k.clone(), n.to_string()]);
+        }
+        t.print();
+    }
+
+    println!("event log OK: {} events, schema v{}", s.lines, batchrep::obs::SCHEMA_VERSION);
     Ok(())
 }
 
@@ -785,7 +906,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         backend
     );
     let mut coord = Coordinator::new(cfg, backend)?;
-    let report = coord.run_training(steps, lr)?;
+    let mut report = coord.run_training(steps, lr)?;
     for (i, loss) in report.loss_curve.iter().enumerate() {
         if i < 5 || i % (steps as usize / 10).max(1) == 0 || i + 1 == steps as usize {
             println!("step {i:>5}  loss {loss:.6}");

@@ -71,6 +71,10 @@ pub struct RunMetrics {
     records: Vec<JobRecord>,
     wall: Welford,
     injected: Welford,
+    // Incrementally maintained copy of the wall-clock samples: quantile
+    // queries sort lazily (and only re-sort after new pushes) instead of
+    // rebuilding + re-sorting a fresh Samples on every call.
+    wall_samples: Samples,
     hist: LogHistogram,
     faults: FaultTotals,
 }
@@ -88,6 +92,7 @@ impl RunMetrics {
             records: Vec::new(),
             wall: Welford::new(),
             injected: Welford::new(),
+            wall_samples: Samples::new(),
             hist: LogHistogram::for_latency(),
             faults: FaultTotals::default(),
         }
@@ -115,6 +120,7 @@ impl RunMetrics {
     pub fn push(&mut self, rec: JobRecord) {
         self.wall.push(rec.completion_s);
         self.injected.push(rec.injected_s);
+        self.wall_samples.push(rec.completion_s);
         self.hist.record(rec.completion_s);
         self.records.push(rec);
     }
@@ -144,21 +150,18 @@ impl RunMetrics {
         self.wall.variance()
     }
 
-    /// Wall-clock quantile.
-    pub fn quantile_wall(&self, q: f64) -> f64 {
-        let mut s = Samples::with_capacity(self.records.len());
-        for r in &self.records {
-            s.push(r.completion_s);
-        }
-        if s.is_empty() {
-            return 0.0;
-        }
-        s.quantile(q)
+    /// Exact wall-clock quantile over all recorded jobs; `None` when no
+    /// job has been recorded (the same empty-sample contract as
+    /// [`Samples::quantile`] / [`LogHistogram::quantile`] — an empty run
+    /// has no p99, and `0.0` used to masquerade as one). Sorts lazily:
+    /// repeated queries on unchanged records are O(1) after the first.
+    pub fn quantile_wall(&mut self, q: f64) -> Option<f64> {
+        self.wall_samples.quantile(q)
     }
 
     /// Approximate quantile from the streaming histogram (O(1) memory
-    /// path used when records are dropped).
-    pub fn quantile_hist(&self, q: f64) -> f64 {
+    /// path used when records are dropped); `None` when empty.
+    pub fn quantile_hist(&self, q: f64) -> Option<f64> {
         self.hist.quantile(q)
     }
 
@@ -180,15 +183,20 @@ impl RunMetrics {
         (d, r, c)
     }
 
-    /// Summary table for reports.
-    pub fn summary_table(&self, title: &str) -> Table {
+    /// Summary table for reports. `&mut` because quantiles sort the
+    /// sample cache lazily; on an empty run the quantile rows render as
+    /// `-` rather than a fabricated `0.0`.
+    pub fn summary_table(&mut self, title: &str) -> Table {
+        let p50 = self.quantile_wall(0.5);
+        let p99 = self.quantile_wall(0.99);
+        let fmt_q = |v: Option<f64>| v.map(|x| fmt_f(x, 6)).unwrap_or_else(|| "-".into());
         let mut t = Table::new(title, &["metric", "value"]);
         let (d, r, c) = self.totals();
         t.row(vec!["jobs".into(), self.len().to_string()]);
         t.row(vec!["mean wall completion (s)".into(), fmt_f(self.mean_wall(), 6)]);
         t.row(vec!["std wall completion (s)".into(), fmt_f(self.wall.stddev(), 6)]);
-        t.row(vec!["p50 wall (s)".into(), fmt_f(self.quantile_wall(0.5), 6)]);
-        t.row(vec!["p99 wall (s)".into(), fmt_f(self.quantile_wall(0.99), 6)]);
+        t.row(vec!["p50 wall (s)".into(), fmt_q(p50)]);
+        t.row(vec!["p99 wall (s)".into(), fmt_q(p99)]);
         t.row(vec!["mean injected completion (s)".into(), fmt_f(self.mean_injected(), 6)]);
         t.row(vec!["tasks dispatched".into(), d.to_string()]);
         t.row(vec!["redundant arrivals".into(), r.to_string()]);
@@ -253,7 +261,31 @@ mod tests {
         assert!((m.mean_wall() - 1.45).abs() < 1e-12);
         let (d, r, c) = m.totals();
         assert_eq!((d, r, c), (80, 10, 30));
-        assert!(m.quantile_wall(1.0) >= m.quantile_wall(0.5));
+        assert!(m.quantile_wall(1.0).unwrap() >= m.quantile_wall(0.5).unwrap());
+    }
+
+    #[test]
+    fn empty_metrics_have_no_quantiles() {
+        let mut m = RunMetrics::new();
+        assert_eq!(m.quantile_wall(0.5), None);
+        assert_eq!(m.quantile_wall(0.99), None);
+        assert_eq!(m.quantile_hist(0.5), None);
+        // The report renders "-" for the missing quantiles, not 0.0.
+        let md = m.summary_table("empty").to_markdown();
+        assert!(md.contains("p50 wall"));
+        assert!(md.contains("| -"), "empty quantiles render as '-': {md}");
+    }
+
+    #[test]
+    fn quantile_wall_tracks_records_pushed_after_a_query() {
+        // The lazily-sorted cache must absorb pushes that happen after
+        // a quantile call (the sort is invalidated, not frozen).
+        let mut m = RunMetrics::new();
+        m.push(rec(0, 1.0));
+        assert_eq!(m.quantile_wall(1.0), Some(1.0));
+        m.push(rec(1, 3.0));
+        assert_eq!(m.quantile_wall(1.0), Some(3.0));
+        assert_eq!(m.quantile_wall(0.0), Some(1.0));
     }
 
     #[test]
@@ -284,9 +316,22 @@ mod tests {
         };
         m.note_fault_events(&e);
         m.note_fault_events(&e);
+        // A third, differently-shaped round folds in on top.
+        let e2 = crate::coordinator::RoundEvents {
+            crashes: 0,
+            respawns: 0,
+            relaunches: 1,
+            degradations: 2,
+            dropped: 0,
+            corrupted: 0,
+            flagged: 3,
+            quarantined: 0,
+        };
+        m.note_fault_events(&e2);
         let f = m.fault_totals();
-        assert_eq!((f.crashes, f.respawns, f.relaunches, f.dropped), (2, 2, 4, 6));
-        assert_eq!((f.corrupted, f.flagged, f.quarantined), (4, 2, 2));
+        assert_eq!((f.crashes, f.respawns, f.relaunches, f.dropped), (2, 2, 5, 6));
+        assert_eq!((f.corrupted, f.flagged, f.quarantined), (4, 5, 2));
+        assert_eq!(f.degradations, 2);
         let md = m.summary_table("run").to_markdown();
         assert!(md.contains("deadline relaunches"));
         assert!(md.contains("workers quarantined"));
@@ -298,8 +343,27 @@ mod tests {
         for i in 1..=1000 {
             m.push(rec(i, i as f64 / 100.0));
         }
-        let exact = m.quantile_wall(0.9);
-        let approx = m.quantile_hist(0.9);
+        let exact = m.quantile_wall(0.9).unwrap();
+        let approx = m.quantile_hist(0.9).unwrap();
         assert!((approx - exact).abs() / exact < 0.1, "{approx} vs {exact}");
+    }
+
+    #[test]
+    fn hist_and_wall_quantiles_agree_on_large_samples() {
+        // Heavy-ish tail (shifted exponential, the paper's service law)
+        // across the histogram's full resolution band: every quantile
+        // must agree within the LogHistogram bucket-ratio error bound.
+        let mut m = RunMetrics::new();
+        let mut r = crate::util::rng::Rng::new(9);
+        for i in 0..5000 {
+            let x = 0.05 - r.f64_open0().ln();
+            m.push(rec(i, x));
+        }
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let exact = m.quantile_wall(q).unwrap();
+            let approx = m.quantile_hist(q).unwrap();
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.08, "q={q}: hist {approx} vs exact {exact} (rel {rel})");
+        }
     }
 }

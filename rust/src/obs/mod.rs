@@ -1,0 +1,624 @@
+//! Unified observability layer: one structured event log, wall-clock
+//! spans, and a typed counters registry shared by every runtime in the
+//! crate.
+//!
+//! After eight PRs the repo emitted its operational signal in fragments
+//! — [`crate::analysis::ct_cache_counters`], the coordinator's
+//! [`crate::coordinator::RoundEvents`], [`crate::metrics::FaultTotals`],
+//! study dedup counts, chaos/integrity report columns. This module is
+//! the unified, machine-readable layer over all of them:
+//!
+//! * **Event sink** — a process-wide but *explicitly installed* JSON
+//!   lines sink ([`install_file`] / [`install_memory`], torn down by
+//!   [`uninstall`]). No-op by default: every emit site is gated on one
+//!   relaxed atomic load ([`enabled`]), so hot paths stay zero-cost and
+//!   — because events never touch an RNG or a result — simulation
+//!   output is bit-identical with the sink on or off, for any thread
+//!   count (pinned by the `obs_layer` integration tests).
+//! * **Spans** — [`span("des.shard")`](span) returns a drop guard that
+//!   emits a `kind: "span"` event with the measured `dur_s` when it
+//!   falls out of scope; the subsystem label is the prefix before the
+//!   first `.`.
+//! * **Counters** — a typed, always-on registry of relaxed
+//!   [`AtomicU64`]s ([`Counter`], [`bump`], [`snapshot`]) absorbing the
+//!   crate's scattered ad-hoc counters behind one API. Counters are
+//!   bumped at shard/round granularity, so the always-on cost is a few
+//!   uncontended atomic adds per shard. [`uninstall`] writes the final
+//!   nonzero snapshot into the log as an `obs/counters` event.
+//!
+//! ## Event schema (version [`SCHEMA_VERSION`])
+//!
+//! One JSON object per line. Reserved keys, present on every event:
+//!
+//! | key    | type   | meaning                                         |
+//! |--------|--------|-------------------------------------------------|
+//! | `v`    | int    | schema version (currently 1)                    |
+//! | `ts`   | number | seconds since sink install, monotone per file   |
+//! | `sub`  | string | subsystem (`study`, `mc`, `des`, `analysis`, `coordinator`, `control`, `fault`, `obs`) |
+//! | `kind` | string | event kind within the subsystem                 |
+//!
+//! All other keys are event-specific payload. `kind: "span"` events
+//! additionally carry `name` (the span name) and `dur_s`. The `ts` is
+//! captured *under the writer lock*, so files are monotone by
+//! construction and [`validate_file`] rejects any log that is not.
+//!
+//! The CLI surface is `--events <path>` on `evaluate`/`study`/
+//! `control`/`chaos`/`integrity` plus `batchrep obs summarize
+//! <events.jsonl>`; see README ("Observability") and PERF.md (schema +
+//! measured sink overhead).
+
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+/// Schema version stamped into every event (`"v"`) and checked by
+/// [`validate_file`].
+pub const SCHEMA_VERSION: i64 = 1;
+
+// ---------------------------------------------------------------------
+// Typed counters registry
+// ---------------------------------------------------------------------
+
+macro_rules! define_counters {
+    ($($variant:ident => $field:ident : $name:literal),* $(,)?) => {
+        /// Typed handle into the process-wide counters registry. The
+        /// dotted [`Counter::name`] is the stable external identifier
+        /// (used in the `obs/counters` event and the summarize report).
+        #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+        pub enum Counter {
+            $(#[doc = $name] $variant,)*
+        }
+
+        impl Counter {
+            /// Every counter, in declaration order.
+            pub const ALL: &[Counter] = &[$(Counter::$variant,)*];
+
+            /// Stable dotted name (`subsystem.metric`).
+            pub fn name(self) -> &'static str {
+                match self { $(Counter::$variant => $name,)* }
+            }
+        }
+
+        struct Registry {
+            $($field: AtomicU64,)*
+        }
+
+        static REGISTRY: Registry = Registry {
+            $($field: AtomicU64::new(0),)*
+        };
+
+        /// Add `n` to one counter. Always on (no [`enabled`] gate):
+        /// call sites sit at shard/round granularity, so the cost is an
+        /// uncontended relaxed `fetch_add` — and the registry stays
+        /// meaningful for in-process consumers even without a sink.
+        #[inline]
+        pub fn bump(c: Counter, n: u64) {
+            match c {
+                $(Counter::$variant => { REGISTRY.$field.fetch_add(n, Ordering::Relaxed); })*
+            }
+        }
+
+        /// Point-in-time copy of every counter (relaxed loads; counters
+        /// bumped mid-snapshot land in one side or the other).
+        #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+        pub struct CounterSnapshot {
+            $(#[doc = $name] pub $field: u64,)*
+        }
+
+        /// Snapshot the process-wide registry.
+        pub fn snapshot() -> CounterSnapshot {
+            CounterSnapshot {
+                $($field: REGISTRY.$field.load(Ordering::Relaxed),)*
+            }
+        }
+
+        impl CounterSnapshot {
+            /// Value of one counter in this snapshot.
+            pub fn get(&self, c: Counter) -> u64 {
+                match c { $(Counter::$variant => self.$field,)* }
+            }
+
+            /// Accumulate another snapshot into this one (saturating),
+            /// e.g. folding per-phase deltas into a run total.
+            pub fn merge(&mut self, other: &CounterSnapshot) {
+                $(self.$field = self.$field.saturating_add(other.$field);)*
+            }
+
+            /// Per-counter difference vs an `earlier` snapshot
+            /// (saturating, so a registry reset cannot underflow).
+            pub fn delta(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
+                CounterSnapshot {
+                    $($field: self.$field.saturating_sub(earlier.$field),)*
+                }
+            }
+
+            /// `(name, value)` of every nonzero counter, in declaration
+            /// order — the payload of the `obs/counters` event.
+            pub fn nonzero(&self) -> Vec<(&'static str, u64)> {
+                let mut out = Vec::new();
+                $(if self.$field > 0 { out.push(($name, self.$field)); })*
+                out
+            }
+        }
+    };
+}
+
+define_counters! {
+    CtHit => ct_hit: "analysis.ct_cache.hit",
+    CtMiss => ct_miss: "analysis.ct_cache.miss",
+    McShards => mc_shards: "mc.shards",
+    McTrials => mc_trials: "mc.trials",
+    DesShards => des_shards: "des.shards",
+    DesTrials => des_trials: "des.trials",
+    StudyCells => study_cells: "study.cells",
+    StudyDeduped => study_deduped: "study.deduped_points",
+    StudyRefused => study_refused: "study.refused_cells",
+    LiveRounds => live_rounds: "coordinator.rounds",
+    LiveCrashes => live_crashes: "coordinator.crashes",
+    LiveRespawns => live_respawns: "coordinator.respawns",
+    LiveRelaunches => live_relaunches: "coordinator.relaunches",
+    LiveDegradations => live_degradations: "coordinator.degradations",
+    LiveDropped => live_dropped: "coordinator.dropped",
+    LiveCorrupted => live_corrupted: "coordinator.corrupted",
+    LiveFlagged => live_flagged: "coordinator.flagged",
+    LiveQuarantined => live_quarantined: "coordinator.quarantined",
+    ControlReplans => control_replans: "control.replans",
+    ControlDriftReplans => control_drift_replans: "control.drift_replans",
+    FaultChaosRuns => fault_chaos_runs: "fault.chaos_runs",
+    FaultIntegrityRuns => fault_integrity_runs: "fault.integrity_runs",
+}
+
+// ---------------------------------------------------------------------
+// The event sink
+// ---------------------------------------------------------------------
+
+struct Active {
+    start: Instant,
+    out: Box<dyn Write + Send>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Active>> = Mutex::new(None);
+
+fn lock_sink() -> MutexGuard<'static, Option<Active>> {
+    // A panic while holding the writer lock must not wedge every later
+    // emit (or the uninstall in a test harness) — the sink state itself
+    // is a plain Option and stays coherent.
+    SINK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Whether an event sink is installed. One relaxed atomic load — the
+/// gate every hot-path emit site checks before building any payload.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install a JSON-lines file sink at `path` (truncating). Fails if a
+/// sink is already installed — the sink is process-wide, so nesting
+/// would interleave two observers' expectations.
+pub fn install_file(path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("creating event log {}: {e}", path.display()))?;
+    install_writer(Box::new(std::io::BufWriter::new(f)))
+}
+
+/// Install an arbitrary writer as the sink (the file/memory installers
+/// both land here). Emits the `obs/installed` marker event.
+pub fn install_writer(out: Box<dyn Write + Send>) -> anyhow::Result<()> {
+    {
+        let mut g = lock_sink();
+        anyhow::ensure!(
+            g.is_none(),
+            "an event sink is already installed — uninstall it first"
+        );
+        *g = Some(Active { start: Instant::now(), out });
+    }
+    ENABLED.store(true, Ordering::Release);
+    emit("obs", "installed", &[("schema", SCHEMA_VERSION.into())]);
+    Ok(())
+}
+
+/// Shared in-memory sink buffer for tests ([`install_memory`]).
+#[derive(Clone, Default)]
+pub struct MemWriter(Arc<Mutex<Vec<u8>>>);
+
+impl MemWriter {
+    /// Everything written so far, as UTF-8 text.
+    pub fn contents(&self) -> String {
+        let buf = self.0.lock().unwrap_or_else(PoisonError::into_inner);
+        String::from_utf8_lossy(&buf).into_owned()
+    }
+}
+
+impl Write for MemWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Install an in-memory sink and return a handle to its buffer — the
+/// test path (determinism pins, validator round trips) with no
+/// filesystem involved.
+pub fn install_memory() -> anyhow::Result<MemWriter> {
+    let w = MemWriter::default();
+    install_writer(Box::new(w.clone()))?;
+    Ok(w)
+}
+
+/// Tear the sink down: emit the final `obs/counters` event (the nonzero
+/// registry snapshot), flush, and drop the writer. Idempotent — a
+/// second call with no sink installed is a no-op.
+pub fn uninstall() {
+    if enabled() {
+        let fields: Vec<(&'static str, Json)> = snapshot()
+            .nonzero()
+            .into_iter()
+            .map(|(name, v)| (name, Json::from(v)))
+            .collect();
+        emit("obs", "counters", &fields);
+    }
+    ENABLED.store(false, Ordering::Release);
+    let mut g = lock_sink();
+    if let Some(mut a) = g.take() {
+        let _ = a.out.flush();
+    }
+}
+
+/// Emit one structured event. Cheap no-op without a sink; with one, the
+/// payload is assembled outside the writer lock and the timestamp is
+/// read *under* it, so the log's `ts` sequence is monotone even with
+/// many threads emitting. The reserved keys (`v`/`ts`/`sub`/`kind`)
+/// always win over same-named payload fields.
+pub fn emit(sub: &str, kind: &str, fields: &[(&str, Json)]) {
+    if !enabled() {
+        return;
+    }
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    for (k, v) in fields {
+        obj.insert((*k).to_string(), v.clone());
+    }
+    obj.insert("v".to_string(), Json::from(SCHEMA_VERSION));
+    obj.insert("sub".to_string(), Json::from(sub));
+    obj.insert("kind".to_string(), Json::from(kind));
+    let mut g = lock_sink();
+    let Some(a) = g.as_mut() else { return };
+    obj.insert("ts".to_string(), Json::Num(a.start.elapsed().as_secs_f64()));
+    let _ = writeln!(a.out, "{}", Json::Object(obj));
+}
+
+// ---------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------
+
+/// Drop guard of one wall-clock span (see [`span`]).
+pub struct Span {
+    name: &'static str,
+    start: Option<Instant>,
+}
+
+/// Start a wall-clock span; the returned guard emits a `kind: "span"`
+/// event with the measured `dur_s` when dropped. The subsystem label is
+/// the prefix before the first `.` (`span("des.shard")` → `sub:
+/// "des"`). Without a sink the guard holds no clock read at all.
+#[must_use = "a span measures until the returned guard is dropped"]
+pub fn span(name: &'static str) -> Span {
+    Span { name, start: enabled().then(Instant::now) }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(start) = self.start.take() {
+            let sub = self.name.split('.').next().unwrap_or(self.name);
+            emit(
+                sub,
+                "span",
+                &[
+                    ("name", self.name.into()),
+                    ("dur_s", start.elapsed().as_secs_f64().into()),
+                ],
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Validation + summarization of an event log
+// ---------------------------------------------------------------------
+
+/// Aggregate of one span name across a log.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SpanAgg {
+    /// Spans recorded under this name.
+    pub count: u64,
+    /// Sum of their durations, seconds.
+    pub total_s: f64,
+    /// Longest single span, seconds.
+    pub max_s: f64,
+}
+
+/// Validated aggregate of one event log — what `batchrep obs summarize`
+/// renders and what [`validate_file`] returns.
+#[derive(Debug, Clone, Default)]
+pub struct ObsSummary {
+    /// Events in the log.
+    pub lines: u64,
+    /// Distinct `sub` labels seen.
+    pub subsystems: BTreeSet<String>,
+    /// Event count per `"sub/kind"`.
+    pub event_counts: BTreeMap<String, u64>,
+    /// Span aggregates per span name.
+    pub spans: BTreeMap<String, SpanAgg>,
+    /// Histogram of relaunches per live coordinator round (the
+    /// straggler/relaunch histogram; zero-relaunch rounds included).
+    pub relaunch_hist: BTreeMap<u64, u64>,
+    /// `coordinator/round` events seen.
+    pub live_rounds: u64,
+    /// Final registry snapshot from the last `counters` event.
+    pub counters: BTreeMap<String, u64>,
+    /// Timestamp of the first event.
+    pub first_ts: f64,
+    /// Timestamp of the last event.
+    pub last_ts: f64,
+}
+
+impl ObsSummary {
+    /// Wall-clock seconds the log spans.
+    pub fn duration_s(&self) -> f64 {
+        (self.last_ts - self.first_ts).max(0.0)
+    }
+}
+
+/// Validate and aggregate an event log given as text. Checks, per line:
+/// JSON object, schema version, finite monotone `ts`, non-empty
+/// `sub`/`kind`, and span payloads (`name` + finite `dur_s`). An empty
+/// log is an error — a run that produced no events at all is a wiring
+/// bug, not a quiet success.
+pub fn summarize_str(text: &str) -> anyhow::Result<ObsSummary> {
+    let mut s = ObsSummary::default();
+    let mut prev_ts = f64::NEG_INFINITY;
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+        anyhow::ensure!(
+            j.as_object().is_some(),
+            "line {lineno}: event is not a JSON object"
+        );
+        let v = j.get("v").and_then(Json::as_i64);
+        anyhow::ensure!(
+            v == Some(SCHEMA_VERSION),
+            "line {lineno}: missing or unsupported schema version {v:?} \
+             (this validator understands v{SCHEMA_VERSION})"
+        );
+        let ts = j
+            .get("ts")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing numeric 'ts'"))?;
+        anyhow::ensure!(ts.is_finite() && ts >= 0.0, "line {lineno}: nonsensical ts {ts}");
+        anyhow::ensure!(
+            ts >= prev_ts,
+            "line {lineno}: timestamps must be monotone ({ts} after {prev_ts})"
+        );
+        prev_ts = ts;
+        let sub = j
+            .get("sub")
+            .and_then(Json::as_str)
+            .filter(|x| !x.is_empty())
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing 'sub'"))?;
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .filter(|x| !x.is_empty())
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing 'kind'"))?;
+        if s.lines == 0 {
+            s.first_ts = ts;
+        }
+        s.last_ts = ts;
+        s.lines += 1;
+        s.subsystems.insert(sub.to_string());
+        *s.event_counts.entry(format!("{sub}/{kind}")).or_insert(0) += 1;
+        if kind == "span" {
+            let name = j
+                .get("name")
+                .and_then(Json::as_str)
+                .filter(|x| !x.is_empty())
+                .ok_or_else(|| anyhow::anyhow!("line {lineno}: span event missing 'name'"))?;
+            let dur = j.get("dur_s").and_then(Json::as_f64).ok_or_else(|| {
+                anyhow::anyhow!("line {lineno}: span event missing numeric 'dur_s'")
+            })?;
+            anyhow::ensure!(
+                dur.is_finite() && dur >= 0.0,
+                "line {lineno}: nonsensical span duration {dur}"
+            );
+            let agg = s.spans.entry(name.to_string()).or_default();
+            agg.count += 1;
+            agg.total_s += dur;
+            agg.max_s = agg.max_s.max(dur);
+        }
+        if sub == "coordinator" && kind == "round" {
+            s.live_rounds += 1;
+            let rl = j.get("relaunches").and_then(Json::as_i64).unwrap_or(0).max(0) as u64;
+            *s.relaunch_hist.entry(rl).or_insert(0) += 1;
+        }
+        if kind == "counters" {
+            if let Some(m) = j.as_object() {
+                for (k, val) in m {
+                    if matches!(k.as_str(), "v" | "ts" | "sub" | "kind") {
+                        continue;
+                    }
+                    if let Some(n) = val.as_i64() {
+                        if n >= 0 {
+                            s.counters.insert(k.clone(), n as u64);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    anyhow::ensure!(s.lines > 0, "event log contains no events");
+    Ok(s)
+}
+
+/// Read `path` and [`summarize_str`] it — the schema gate the
+/// `batchrep obs summarize` subcommand and ci.sh run on every event
+/// artifact.
+pub fn validate_file(path: &Path) -> anyhow::Result<ObsSummary> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading event log {}: {e}", path.display()))?;
+    summarize_str(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The sink is process-global; tests that install one must not
+    // overlap. (Separate test *binaries* are separate processes, so
+    // this only serializes within the lib-test binary.)
+    static TEST_SINK: Mutex<()> = Mutex::new(());
+
+    fn sink_guard() -> MutexGuard<'static, ()> {
+        TEST_SINK.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    #[test]
+    fn counters_snapshot_delta_and_merge() {
+        let before = snapshot();
+        bump(Counter::McShards, 3);
+        bump(Counter::McTrials, 1000);
+        // Other tests bump concurrently, so deltas are lower bounds.
+        let d = snapshot().delta(&before);
+        assert!(d.get(Counter::McShards) >= 3);
+        assert!(d.get(Counter::McTrials) >= 1000);
+        let mut merged = d;
+        merged.merge(&d);
+        assert_eq!(merged.get(Counter::McShards), 2 * d.get(Counter::McShards));
+        assert_eq!(merged.get(Counter::CtHit), 2 * d.get(Counter::CtHit));
+        let names: Vec<&str> = d.nonzero().iter().map(|(n, _)| *n).collect();
+        assert!(names.contains(&"mc.shards"));
+        assert!(names.contains(&"mc.trials"));
+        // Every nonzero entry really is nonzero, in declaration order.
+        for (_, v) in d.nonzero() {
+            assert!(v > 0);
+        }
+        // delta of identical snapshots is all-zero.
+        let z = d.delta(&d);
+        assert!(z.nonzero().is_empty());
+    }
+
+    #[test]
+    fn counter_names_are_stable_and_unique() {
+        assert_eq!(Counter::CtHit.name(), "analysis.ct_cache.hit");
+        assert_eq!(Counter::LiveRelaunches.name(), "coordinator.relaunches");
+        let mut names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "counter names must be unique");
+        assert!(n >= 20, "registry should absorb the crate's ad-hoc counters");
+    }
+
+    #[test]
+    fn emit_and_span_are_noops_without_a_sink() {
+        let _g = sink_guard();
+        assert!(!enabled());
+        emit("test", "noop", &[("x", 1i64.into())]);
+        let sp = span("test.noop");
+        assert!(sp.start.is_none(), "no clock read without a sink");
+        drop(sp);
+        uninstall(); // idempotent no-op
+    }
+
+    #[test]
+    fn sink_round_trips_through_the_validator() {
+        let _g = sink_guard();
+        let mem = install_memory().unwrap();
+        emit("study", "plan", &[("cells", 4usize.into())]);
+        {
+            let _sp = span("des.shard");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        bump(Counter::DesShards, 1);
+        emit(
+            "coordinator",
+            "round",
+            &[
+                ("round", 0usize.into()),
+                ("relaunches", 2usize.into()),
+                ("wall_s", 0.5.into()),
+            ],
+        );
+        uninstall();
+        let s = summarize_str(&mem.contents()).unwrap();
+        // Concurrent lib tests may emit too — assert lower bounds only.
+        assert!(s.subsystems.contains("obs"), "install/counters markers present");
+        assert!(s.subsystems.contains("study"));
+        assert!(s.subsystems.contains("des"));
+        assert!(s.subsystems.contains("coordinator"));
+        assert!(s.event_counts.get("study/plan").copied().unwrap_or(0) >= 1);
+        let sp = s.spans.get("des.shard").expect("span aggregated by name");
+        assert!(sp.count >= 1);
+        assert!(sp.total_s > 0.0, "the span slept ≥ 1ms");
+        assert!(sp.max_s <= sp.total_s + 1e-12);
+        assert!(s.relaunch_hist.get(&2).copied().unwrap_or(0) >= 1);
+        assert!(
+            s.counters.get("des.shards").copied().unwrap_or(0) >= 1,
+            "uninstall writes the final registry snapshot"
+        );
+        assert!(s.last_ts >= s.first_ts);
+        assert!(s.duration_s() >= 0.0);
+    }
+
+    #[test]
+    fn double_install_is_an_error_and_reinstall_works() {
+        let _g = sink_guard();
+        let _m = install_memory().unwrap();
+        assert!(install_memory().is_err(), "the sink is process-wide");
+        uninstall();
+        let m2 = install_memory().unwrap();
+        emit("test", "alive", &[]);
+        uninstall();
+        assert!(m2.contents().contains("\"kind\":\"alive\""));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_logs() {
+        assert!(summarize_str("").is_err(), "empty log");
+        assert!(summarize_str("not json\n").is_err());
+        assert!(
+            summarize_str("{\"v\":999,\"ts\":0,\"sub\":\"x\",\"kind\":\"y\"}\n").is_err(),
+            "wrong version"
+        );
+        assert!(
+            summarize_str("{\"v\":1,\"ts\":0,\"sub\":\"x\"}\n").is_err(),
+            "missing kind"
+        );
+        let non_monotone = "{\"v\":1,\"ts\":2,\"sub\":\"x\",\"kind\":\"y\"}\n\
+                            {\"v\":1,\"ts\":1,\"sub\":\"x\",\"kind\":\"y\"}\n";
+        assert!(summarize_str(non_monotone).is_err(), "non-monotone ts");
+        assert!(
+            summarize_str("{\"v\":1,\"ts\":0,\"sub\":\"x\",\"kind\":\"span\",\"name\":\"x.y\"}\n")
+                .is_err(),
+            "span without dur_s"
+        );
+        let ok = "{\"v\":1,\"ts\":0,\"sub\":\"x\",\"kind\":\"y\"}\n";
+        let s = summarize_str(ok).unwrap();
+        assert_eq!(s.lines, 1);
+        assert_eq!(s.event_counts.get("x/y"), Some(&1));
+    }
+}

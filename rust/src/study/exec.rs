@@ -85,6 +85,21 @@ pub fn execute(
     threads: usize,
     on_cell: &mut dyn FnMut(&PlannedCell, &CellResult, usize, usize),
 ) -> anyhow::Result<StudyReport> {
+    let _span = crate::obs::span("study.execute");
+    crate::obs::bump(crate::obs::Counter::StudyCells, plan.cells.len() as u64);
+    crate::obs::bump(crate::obs::Counter::StudyDeduped, plan.deduped_points() as u64);
+    if crate::obs::enabled() {
+        crate::obs::emit(
+            "study",
+            "plan",
+            &[
+                ("cells", plan.cells.len().into()),
+                ("axis_points", plan.points.len().into()),
+                ("deduped", plan.deduped_points().into()),
+                ("threads", threads.into()),
+            ],
+        );
+    }
     let total = plan.cells.len();
     let mut results: Vec<Option<CellResult>> = plan.cells.iter().map(|_| None).collect();
     let mut done = 0usize;
@@ -124,6 +139,7 @@ pub fn execute(
     for (i, c) in plan.cells.iter().enumerate() {
         if let Some(r) = &results[i] {
             done += 1;
+            note_cell(c, r);
             on_cell(c, r, done, total);
         }
     }
@@ -215,6 +231,7 @@ pub fn execute(
             let c = &plan.cells[ci];
             let res = from_eval(c, AnalyticEvaluator.evaluate(&c.scenario));
             done += 1;
+            note_cell(c, &res);
             on_cell(c, &res, done, total);
             results[ci] = Some(res);
         }
@@ -223,6 +240,7 @@ pub fn execute(
         // its sender.
         for (ci, res) in rx {
             done += 1;
+            note_cell(&plan.cells[ci], &res);
             on_cell(&plan.cells[ci], &res, done, total);
             results[ci] = Some(res);
         }
@@ -245,6 +263,7 @@ pub fn execute(
         };
         let res = from_eval(c, live.evaluate(&c.scenario));
         done += 1;
+        note_cell(c, &res);
         on_cell(c, &res, done, total);
         results[ci] = Some(res);
     }
@@ -267,6 +286,28 @@ pub fn execute(
         points: plan.points.clone(),
         cells,
     })
+}
+
+/// Observability hook at every cell-completion site (refusal, serial
+/// analytic, pooled drain, live): bump the refusal counter and, with a
+/// sink installed, emit one `study/cell` event per finished cell.
+fn note_cell(c: &PlannedCell, r: &CellResult) {
+    let refused = matches!(r.outcome, CellOutcome::Refused(_));
+    if refused {
+        crate::obs::bump(crate::obs::Counter::StudyRefused, 1);
+    }
+    if crate::obs::enabled() {
+        crate::obs::emit(
+            "study",
+            "cell",
+            &[
+                ("key", r.key.clone().into()),
+                ("backend", c.backend.name().into()),
+                ("trials", c.trials.into()),
+                ("outcome", if refused { "refused" } else { "stats" }.into()),
+            ],
+        );
+    }
 }
 
 fn refused(c: &PlannedCell, msg: String) -> CellResult {

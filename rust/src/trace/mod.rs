@@ -69,9 +69,12 @@ pub fn trace_spec(samples: Vec<f64>) -> ServiceSpec {
     ServiceSpec::Trace { samples: Arc::new(samples) }
 }
 
-/// Save a trace as one-value-per-line CSV.
+/// Save a trace as one-value-per-line CSV. Values are written with the
+/// shortest representation that parses back to the *exact* same f64
+/// (`{:?}`), so a saved trace replays bit-identically to the original —
+/// not merely within rounding error.
 pub fn save_trace(path: &std::path::Path, samples: &[f64]) -> std::io::Result<()> {
-    let body: String = samples.iter().map(|x| format!("{x}\n")).collect();
+    let body: String = samples.iter().map(|x| format!("{x:?}\n")).collect();
     std::fs::write(path, body)
 }
 
@@ -128,8 +131,10 @@ mod tests {
         save_trace(&path, &t).unwrap();
         let loaded = load_trace(&path).unwrap();
         assert_eq!(t.len(), loaded.len());
-        for (a, b) in t.iter().zip(&loaded) {
-            assert!((a - b).abs() < 1e-12);
+        for (i, (a, b)) in t.iter().zip(&loaded).enumerate() {
+            // Bit-exact: a replayed trace must be stream-identical to
+            // the one that was saved, not just close.
+            assert_eq!(a.to_bits(), b.to_bits(), "sample {i}: {a} != {b}");
         }
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -156,27 +156,32 @@ impl Samples {
     }
 
     /// q-quantile (linear interpolation between order statistics),
-    /// `q ∈ [0, 1]`. Panics on an empty set.
-    pub fn quantile(&mut self, q: f64) -> f64 {
-        assert!(!self.xs.is_empty(), "quantile of empty sample set");
+    /// `q ∈ [0, 1]`. `None` on an empty set — the one empty-sample
+    /// contract shared with [`LogHistogram::quantile`] and
+    /// `RunMetrics::quantile_wall`. Panics only on `q` out of range
+    /// (caller bug, not a data condition).
+    pub fn quantile(&mut self, q: f64) -> Option<f64> {
         assert!((0.0..=1.0).contains(&q));
+        if self.xs.is_empty() {
+            return None;
+        }
         if !self.sorted {
             self.xs.sort_unstable_by(f64::total_cmp);
             self.sorted = true;
         }
         let n = self.xs.len();
         if n == 1 {
-            return self.xs[0];
+            return Some(self.xs[0]);
         }
         let pos = q * (n - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
         let frac = pos - lo as f64;
-        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+        Some(self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac)
     }
 
-    /// Median (p50).
-    pub fn median(&mut self) -> f64 {
+    /// Median (p50); `None` on an empty set.
+    pub fn median(&mut self) -> Option<f64> {
         self.quantile(0.5)
     }
 
@@ -247,24 +252,26 @@ impl LogHistogram {
         self.total
     }
 
-    /// Approximate q-quantile from bucket upper bounds.
-    pub fn quantile(&self, q: f64) -> f64 {
+    /// Approximate q-quantile from bucket upper bounds; `None` when
+    /// nothing has been recorded (same empty contract as
+    /// [`Samples::quantile`]).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
         assert!((0.0..=1.0).contains(&q));
         if self.total == 0 {
-            return 0.0;
+            return None;
         }
         let target = (q * self.total as f64).ceil() as u64;
         let mut acc = self.underflow;
         if acc >= target {
-            return self.base;
+            return Some(self.base);
         }
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return self.base * ((i as f64 + 1.0) * self.log_r).exp();
+                return Some(self.base * ((i as f64 + 1.0) * self.log_r).exp());
             }
         }
-        self.base * (self.counts.len() as f64 * self.log_r).exp()
+        Some(self.base * (self.counts.len() as f64 * self.log_r).exp())
     }
 
     /// Merge another histogram with identical layout.
@@ -352,18 +359,21 @@ mod tests {
     #[test]
     fn samples_quantiles() {
         let mut s = Samples::new();
+        assert_eq!(s.quantile(0.5), None, "empty set has no quantiles");
+        assert_eq!(s.median(), None);
         for i in 1..=100 {
             s.push(i as f64);
         }
-        assert!((s.quantile(0.0) - 1.0).abs() < 1e-12);
-        assert!((s.quantile(1.0) - 100.0).abs() < 1e-12);
-        assert!((s.median() - 50.5).abs() < 1e-12);
-        assert!((s.quantile(0.25) - 25.75).abs() < 1e-12);
+        assert!((s.quantile(0.0).unwrap() - 1.0).abs() < 1e-12);
+        assert!((s.quantile(1.0).unwrap() - 100.0).abs() < 1e-12);
+        assert!((s.median().unwrap() - 50.5).abs() < 1e-12);
+        assert!((s.quantile(0.25).unwrap() - 25.75).abs() < 1e-12);
     }
 
     #[test]
     fn histogram_quantile_accuracy() {
         let mut h = LogHistogram::new(1e-3, 1.05, 400);
+        assert_eq!(h.quantile(0.5), None, "empty histogram has no quantiles");
         let mut r = Rng::new(2);
         let mut s = Samples::new();
         for _ in 0..100_000 {
@@ -373,8 +383,8 @@ mod tests {
             s.push(x);
         }
         for q in [0.5, 0.9, 0.99] {
-            let exact = s.quantile(q);
-            let approx = h.quantile(q);
+            let exact = s.quantile(q).unwrap();
+            let approx = h.quantile(q).unwrap();
             let rel = (approx - exact).abs() / exact;
             assert!(rel < 0.08, "q={q} exact={exact} approx={approx}");
         }

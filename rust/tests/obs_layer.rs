@@ -1,0 +1,150 @@
+//! Public-surface tests of the unified observability layer: installing
+//! the event sink around real runs (study pools, the live coordinator),
+//! validating the emitted JSON-lines log, and — the acceptance bar —
+//! proving the sink never perturbs results: stats with the sink
+//! installed are bit-identical to stats without it at any thread count.
+
+use std::sync::Mutex;
+
+use batchrep::dist::{BatchService, ServiceSpec};
+use batchrep::evaluator::{Evaluator, LiveEvaluator, ReplicationPolicy};
+use batchrep::study::{execute, BackendSel, BatchAxis, StudySpec};
+
+/// The sink is process-wide state, so every test that installs one must
+/// hold this lock for its whole body (install → run → uninstall).
+static SINK: Mutex<()> = Mutex::new(());
+
+fn sink_guard() -> std::sync::MutexGuard<'static, ()> {
+    SINK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn small_spec() -> StudySpec {
+    StudySpec {
+        n_workers: vec![12],
+        batches: BatchAxis::Explicit(vec![3, 4]),
+        services: vec![BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.2))],
+        backends: vec![BackendSel::Analytic, BackendSel::MonteCarlo, BackendSel::Des],
+        mc_trials: 6_000,
+        des_trials: 2_000,
+        seed: 11,
+        ..StudySpec::base("obs-test")
+    }
+}
+
+#[test]
+fn sink_does_not_perturb_study_results_at_any_thread_count() {
+    // The acceptance property: the full study artifact is bit-identical
+    // with and without an installed sink, for threads ∈ {1, 4}. The
+    // sink must observe, never participate.
+    let plan = small_spec().compile().unwrap();
+    for threads in [1usize, 4] {
+        let bare = execute(&plan, threads, &mut |_, _, _, _| {}).unwrap();
+        let bare_json = bare.to_json().to_string();
+
+        let guard = sink_guard();
+        let mem = batchrep::obs::install_memory().unwrap();
+        let observed = execute(&plan, threads, &mut |_, _, _, _| {}).unwrap();
+        batchrep::obs::uninstall();
+        drop(guard);
+
+        assert_eq!(
+            observed.to_json().to_string(),
+            bare_json,
+            "sink perturbed the study artifact at {threads} threads"
+        );
+        // And the run it watched actually produced events.
+        let summary = batchrep::obs::summarize_str(&mem.contents()).unwrap();
+        assert!(summary.lines > 0, "sink installed but nothing was recorded");
+    }
+}
+
+#[test]
+fn file_sink_captures_a_schema_valid_multi_subsystem_log() {
+    // `--events` in miniature: run a pooled study into a file sink,
+    // then push the file through the same validator `obs summarize`
+    // uses. The log must carry events from the study executor, both
+    // simulation pools, and the analysis cache, plus spans + counters.
+    let dir = std::env::temp_dir().join("batchrep_obs_layer_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("events.jsonl");
+
+    let guard = sink_guard();
+    batchrep::obs::install_file(&path).unwrap();
+    let plan = small_spec().compile().unwrap();
+    execute(&plan, 4, &mut |_, _, _, _| {}).unwrap();
+    batchrep::obs::uninstall();
+    drop(guard);
+
+    let s = batchrep::obs::validate_file(&path).unwrap();
+    for sub in ["study", "mc", "des", "analysis", "obs"] {
+        assert!(s.subsystems.contains(sub), "no '{sub}' events in {:?}", s.subsystems);
+    }
+    assert!(
+        s.event_counts.get("study/cell").copied().unwrap_or(0) >= plan.cells.len() as u64,
+        "missing per-cell events: {:?}",
+        s.event_counts
+    );
+    assert!(!s.spans.is_empty(), "no spans recorded");
+    assert!(s.spans.contains_key("study.execute"), "{:?}", s.spans.keys());
+    assert!(!s.counters.is_empty(), "uninstall did not flush a counters snapshot");
+    assert!(s.counters.contains_key("study.cells"), "{:?}", s.counters);
+    assert!(s.duration_s() >= 0.0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn live_coordinator_emits_round_events() {
+    // The live runtime is the richest event source: every round must
+    // land a coordinator/round record carrying the relaunch count the
+    // summarizer's straggler histogram is built from.
+    let scn = batchrep::des::Scenario::from_policy(
+        ReplicationPolicy::BalancedDisjoint,
+        6,
+        2,
+        BatchService::paper(ServiceSpec::shifted_exp(50.0, 0.02)),
+        7,
+    )
+    .unwrap();
+    let live = LiveEvaluator {
+        rounds: 3,
+        time_scale: 0.01,
+        n_samples: 64,
+        dim: 4,
+        ..LiveEvaluator::default()
+    };
+
+    let guard = sink_guard();
+    let mem = batchrep::obs::install_memory().unwrap();
+    let stats = live.evaluate(&scn).unwrap();
+    batchrep::obs::uninstall();
+    drop(guard);
+
+    assert!(stats.mean.is_finite());
+    let s = batchrep::obs::summarize_str(&mem.contents()).unwrap();
+    assert!(s.subsystems.contains("coordinator"), "{:?}", s.subsystems);
+    assert!(
+        s.event_counts.get("coordinator/round").copied().unwrap_or(0) >= 3,
+        "expected ≥3 round events: {:?}",
+        s.event_counts
+    );
+    assert!(s.live_rounds >= 3, "summary live_rounds = {}", s.live_rounds);
+    // Every round bins into the relaunch histogram (0 relaunches is a bin).
+    let binned: u64 = s.relaunch_hist.values().sum();
+    assert!(binned >= 3, "relaunch histogram covers {binned} rounds");
+}
+
+#[test]
+fn counters_accumulate_without_a_sink() {
+    // Counters are always-on (one relaxed atomic each) and must track
+    // work even when no sink is installed — and still never perturb it.
+    let before = batchrep::obs::snapshot();
+    let plan = small_spec().compile().unwrap();
+    execute(&plan, 2, &mut |_, _, _, _| {}).unwrap();
+    let delta = batchrep::obs::snapshot().delta(&before);
+    assert!(
+        delta.get(batchrep::obs::Counter::StudyCells) >= plan.cells.len() as u64,
+        "study cell counter did not advance"
+    );
+    assert!(delta.get(batchrep::obs::Counter::McTrials) >= 1);
+    assert!(delta.get(batchrep::obs::Counter::DesTrials) >= 1);
+}

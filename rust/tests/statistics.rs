@@ -162,18 +162,20 @@ fn completion_stats_quantile_edge_cases() {
     // The sample-set quantile under the same edge cases: a single
     // sample answers every q; q = 0 / q = 1 are the extreme order
     // statistics; ties and unsorted input are fine (total_cmp order).
+    let mut none = Samples::new();
+    assert_eq!(none.quantile(0.5), None, "empty sample set has no quantiles");
     let mut one = Samples::new();
     one.push(7.5);
     for q in [0.0, 0.3, 1.0] {
-        assert_eq!(one.quantile(q), 7.5);
+        assert_eq!(one.quantile(q), Some(7.5));
     }
     let mut s = Samples::new();
     for x in [3.0f64, 1.0, 2.0, 2.0, 0.0, -1.0] {
         s.push(x);
     }
-    assert_eq!(s.quantile(0.0), -1.0);
-    assert_eq!(s.quantile(1.0), 3.0);
-    let p50 = s.quantile(0.5);
+    assert_eq!(s.quantile(0.0), Some(-1.0));
+    assert_eq!(s.quantile(1.0), Some(3.0));
+    let p50 = s.quantile(0.5).unwrap();
     assert!((0.0..=3.0).contains(&p50), "median {p50} inside the sample range");
     // NaN-free ordering: zeros and negative zeros don't wedge the
     // total_cmp sort, and quantiles stay monotone in q.
@@ -183,7 +185,7 @@ fn completion_stats_quantile_edge_cases() {
     }
     let mut prev = f64::NEG_INFINITY;
     for q in [0.0, 0.25, 0.5, 0.75, 1.0] {
-        let v = z.quantile(q);
+        let v = z.quantile(q).unwrap();
         assert!(v >= prev, "quantiles must be monotone: q={q} v={v} prev={prev}");
         prev = v;
     }
