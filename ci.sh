@@ -21,6 +21,16 @@ else
   echo "clippy component unavailable in this toolchain; skipping lint gate"
 fi
 
+echo "== batchrep lint (determinism-invariant static analysis) =="
+# The in-crate source analyzer (rules D1–D6, README "Static analysis"):
+# total-order float comparisons, no wall-clock or entropy outside the
+# sanctioned modules, no unwrap/expect in library code, schema-registry
+# and counter/event-kind coverage. Exits nonzero on any finding not
+# absorbed by rust/lint/baseline.json or a reasoned inline
+# `// lint:allow(RULE): ...`; the JSON artifact is schema-validated by
+# the subcommand itself before it is written.
+cargo run --release -- lint --json target/LINT.json
+
 echo "== cargo build --release =="
 cargo build --release
 

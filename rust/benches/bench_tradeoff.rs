@@ -12,14 +12,13 @@ fn main() {
         black_box(analysis::spectrum(24, &spec).unwrap());
     });
     suite.bench("optimum_b N=240", 1, || {
-        black_box(analysis::optimum_b(240, &spec));
+        black_box(analysis::optimum_b(240, &spec).unwrap());
     });
     suite.bench("bstar_sweep 10 points", 10, || {
-        black_box(analysis::bstar_sweep(
-            24,
-            1.0,
-            &[0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0],
-        ));
+        black_box(
+            analysis::bstar_sweep(24, 1.0, &[0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0])
+                .unwrap(),
+        );
     });
     let a12 = skewed(12, 6).unwrap();
     suite.bench("assignment_stats inclusion-exclusion B=6", 1, || {

@@ -30,7 +30,7 @@ use crate::assignment::{feasible_batch_counts, Assignment};
 use crate::dist::ServiceSpec;
 use crate::util::harmonic::{harmonic, harmonic2};
 use std::cell::{Cell, RefCell};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Mean/variance of a completion time.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -63,7 +63,7 @@ fn exp_family(spec: &ServiceSpec) -> Option<(f64, f64)> {
 /// SplitMix64 fold), so dense heterogeneous sweeps recompute nothing
 /// and a silent same-key collision would need both 64-bit hashes to
 /// collide at once (~2⁻¹²⁸ per pair).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 struct CtKey {
     n: u64,
     /// Data units `U` — distinct from `n` in the heterogeneous entry
@@ -122,7 +122,7 @@ thread_local! {
     /// Per-thread memo of [`completion_time_stats`] results. Thread-local
     /// rather than global so sweeps never contend on a lock and tests
     /// observe exact hit/miss counts.
-    static CT_CACHE: RefCell<HashMap<CtKey, CtStats>> = RefCell::new(HashMap::new());
+    static CT_CACHE: RefCell<BTreeMap<CtKey, CtStats>> = RefCell::new(BTreeMap::new());
     static CT_HITS: Cell<u64> = Cell::new(0);
     static CT_MISSES: Cell<u64> = Cell::new(0);
 }
@@ -216,25 +216,24 @@ pub fn spectrum(n: u64, spec: &ServiceSpec) -> anyhow::Result<Vec<SpectrumPoint>
 }
 
 /// Theorem 3 optimizer: the `B ∈ F_B` minimizing expected completion
-/// time. For Exp this is always 1 (Theorem 2).
-pub fn optimum_b(n: u64, spec: &ServiceSpec) -> u64 {
-    spectrum(n, spec)
-        .expect("optimum_b needs exp/sexp")
+/// time. For Exp this is always 1 (Theorem 2). Errors (like
+/// [`spectrum`]) on service specs without a closed form.
+pub fn optimum_b(n: u64, spec: &ServiceSpec) -> anyhow::Result<u64> {
+    Ok(spectrum(n, spec)?
         .into_iter()
         .min_by(|a, b| a.stats.mean.total_cmp(&b.stats.mean))
         .map(|p| p.b)
-        .unwrap_or(1)
+        .unwrap_or(1))
 }
 
 /// The `B` minimizing the *variance* (Theorems 2 & 4 prove this is 1 for
 /// both distributions; computed rather than assumed so tests can check).
-pub fn optimum_b_variance(n: u64, spec: &ServiceSpec) -> u64 {
-    spectrum(n, spec)
-        .expect("optimum_b_variance needs exp/sexp")
+pub fn optimum_b_variance(n: u64, spec: &ServiceSpec) -> anyhow::Result<u64> {
+    Ok(spectrum(n, spec)?
         .into_iter()
         .min_by(|a, b| a.stats.var.total_cmp(&b.stats.var))
         .map(|p| p.b)
-        .unwrap_or(1)
+        .unwrap_or(1))
 }
 
 /// Partial-aggregation completion (extension, motivated by the paper's
@@ -277,9 +276,7 @@ pub fn sample_partial_completion(
     let s = n / b;
     let mut mins: Vec<f64> = (0..b)
         .map(|_| {
-            (0..g)
-                .map(|_| service.sample_batch(s, rng))
-                .fold(f64::INFINITY, f64::min)
+            crate::util::stats::fold_min_total((0..g).map(|_| service.sample_batch(s, rng)))
         })
         .collect();
     mins.sort_unstable_by(f64::total_cmp);
@@ -651,14 +648,14 @@ pub struct CrossoverPoint {
 }
 
 /// Sweep `∆µ` and record `B*(∆µ)` for fixed `n` and `µ`.
-pub fn bstar_sweep(n: u64, mu: f64, delta_mus: &[f64]) -> Vec<CrossoverPoint> {
+pub fn bstar_sweep(n: u64, mu: f64, delta_mus: &[f64]) -> anyhow::Result<Vec<CrossoverPoint>> {
     delta_mus
         .iter()
         .map(|&dm| {
             let spec = ServiceSpec::shifted_exp(mu, dm / mu);
-            let b_star = optimum_b(n, &spec);
-            let mean = completion_time_stats(n, b_star, &spec).unwrap().mean;
-            CrossoverPoint { delta_mu: dm, b_star, mean_at_star: mean }
+            let b_star = optimum_b(n, &spec)?;
+            let mean = completion_time_stats(n, b_star, &spec)?.mean;
+            Ok(CrossoverPoint { delta_mu: dm, b_star, mean_at_star: mean })
         })
         .collect()
 }
@@ -697,8 +694,8 @@ mod tests {
         // Both mean and variance minimized at B = 1 for Exponential.
         for n in [4u64, 12, 24, 60] {
             let spec = ServiceSpec::exp(1.0);
-            assert_eq!(optimum_b(n, &spec), 1, "n={n}");
-            assert_eq!(optimum_b_variance(n, &spec), 1, "n={n}");
+            assert_eq!(optimum_b(n, &spec).unwrap(), 1, "n={n}");
+            assert_eq!(optimum_b_variance(n, &spec).unwrap(), 1, "n={n}");
         }
     }
 
@@ -706,7 +703,7 @@ mod tests {
     fn theorem4_sexp_variance_full_diversity() {
         for delta in [0.01, 0.1, 1.0, 10.0] {
             let spec = ServiceSpec::shifted_exp(1.0, delta);
-            assert_eq!(optimum_b_variance(24, &spec), 1, "delta={delta}");
+            assert_eq!(optimum_b_variance(24, &spec).unwrap(), 1, "delta={delta}");
         }
     }
 
@@ -714,14 +711,14 @@ mod tests {
     fn theorem3_interior_optimum_moves_with_delta_mu() {
         let n = 24;
         // Very random (tiny ∆µ): diversity wins.
-        assert_eq!(optimum_b(n, &ServiceSpec::shifted_exp(1.0, 0.001)), 1);
+        assert_eq!(optimum_b(n, &ServiceSpec::shifted_exp(1.0, 0.001)).unwrap(), 1);
         // Very deterministic (huge ∆µ): parallelism wins.
-        assert_eq!(optimum_b(n, &ServiceSpec::shifted_exp(1.0, 50.0)), 24);
+        assert_eq!(optimum_b(n, &ServiceSpec::shifted_exp(1.0, 50.0)).unwrap(), 24);
         // Moderate ∆µ: interior optimum.
-        let b_mid = optimum_b(n, &ServiceSpec::shifted_exp(1.0, 0.2));
+        let b_mid = optimum_b(n, &ServiceSpec::shifted_exp(1.0, 0.2)).unwrap();
         assert!(b_mid > 1 && b_mid < 24, "b_mid={b_mid}");
         // Monotone: B* nondecreasing in ∆µ.
-        let sweep = bstar_sweep(n, 1.0, &[0.001, 0.01, 0.1, 0.3, 1.0, 3.0, 10.0, 50.0]);
+        let sweep = bstar_sweep(n, 1.0, &[0.001, 0.01, 0.1, 0.3, 1.0, 3.0, 10.0, 50.0]).unwrap();
         for w in sweep.windows(2) {
             assert!(w[1].b_star >= w[0].b_star, "{:?}", sweep);
         }
@@ -736,13 +733,13 @@ mod tests {
         let n = 48u64;
         let grid: Vec<f64> = (0..60).map(|i| 0.013 + i as f64 * 0.0471).collect();
         let (h0, m0) = ct_cache_counters();
-        let first = bstar_sweep(n, 1.0, &grid);
+        let first = bstar_sweep(n, 1.0, &grid).unwrap();
         let (h1, m1) = ct_cache_counters();
         let points = grid.len() as u64 * feasible_batch_counts(n as usize).len() as u64;
         assert_eq!(m1 - m0, points, "each (B, ∆µ) closed form computed exactly once");
         // Within one pass, re-reading the optimum point must hit.
         assert!(h1 - h0 >= grid.len() as u64, "B* re-lookups should hit the memo");
-        let second = bstar_sweep(n, 1.0, &grid);
+        let second = bstar_sweep(n, 1.0, &grid).unwrap();
         let (h2, m2) = ct_cache_counters();
         assert_eq!(m2, m1, "second sweep must not recompute any closed form");
         assert_eq!(h2 - h1, points + grid.len() as u64);

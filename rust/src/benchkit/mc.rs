@@ -30,6 +30,7 @@ pub fn reference_scenario() -> Scenario {
         BatchService::paper(ServiceSpec::shifted_exp(1.0, 0.2)),
         42,
     )
+    // lint:allow(D4): fixed in-source reference scenario, covered by benchkit tests
     .expect("reference scenario is valid by construction")
 }
 

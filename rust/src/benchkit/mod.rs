@@ -56,6 +56,7 @@ impl Default for BenchConfig {
 }
 
 /// A suite of benchmarks producing one results table.
+#[derive(Debug)]
 pub struct Suite {
     title: String,
     cfg: BenchConfig,
@@ -130,6 +131,7 @@ impl Suite {
     }
 }
 
+#[allow(clippy::disallowed_methods)] // benchmarking is inherently wall-clock
 fn run_bench<F: FnMut()>(
     name: &str,
     cfg: BenchConfig,
@@ -167,12 +169,14 @@ fn run_bench<F: FnMut()>(
         total_iters += batch;
     }
 
+    // lint:allow(D4): the warmup loop above guarantees at least one measured iteration
     let median = per_iter.median().expect("bench measured at least one iteration");
     let mean = per_iter.mean();
     let mut devs = Samples::new();
     for &x in per_iter.raw() {
         devs.push((x - median).abs());
     }
+    // lint:allow(D4): devs holds one deviation per (non-empty) measured sample
     let mad = devs.median().expect("deviations mirror the non-empty samples");
     Measurement {
         name: name.to_string(),

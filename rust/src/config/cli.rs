@@ -28,8 +28,7 @@ impl Args {
                 anyhow::ensure!(!name.is_empty(), "bare '--' not supported");
                 if let Some((k, v)) = name.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
                     args.options.insert(name.to_string(), v);
                 } else {
                     args.flags.push(name.to_string());

@@ -92,7 +92,7 @@ pub fn parse(text: &str) -> anyhow::Result<TomlDoc> {
         anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
         let value = parse_value(value.trim())
             .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
-        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+        doc.entry(section.clone()).or_default().insert(key.to_string(), value);
     }
     Ok(doc)
 }

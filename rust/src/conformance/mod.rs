@@ -295,6 +295,7 @@ pub fn gen_case(g: &mut Gen) -> GeneratedCase {
     };
     let seed = g.u64_in(0, 1 << 40);
     let mut scn = Scenario::from_policy(policy, n, b, BatchService::paper(spec), seed)
+        // lint:allow(D4): the generator draws B from the divisors of N, satisfying the constructor contract
         .expect("generated (policy, N, B | N) combinations are valid by construction");
     if g.coin(0.22) {
         scn = scn
@@ -306,10 +307,12 @@ pub fn gen_case(g: &mut Gen) -> GeneratedCase {
     let eff_b = scn.assignment.n_batches;
     if g.coin(0.35) {
         let k = g.usize_in(1, eff_b);
+        // lint:allow(D4): k is drawn from [1, eff_b], the exact with_k_of_b contract
         scn = scn.with_k_of_b(k).expect("1 <= k <= B by construction");
     }
     if g.coin(0.35) {
         let speeds: Vec<f64> = (0..n).map(|_| g.f64_in(0.5, 2.0)).collect();
+        // lint:allow(D4): the generator draws one positive speed per worker, the with_speeds contract
         scn = scn.with_speeds(speeds).expect("one positive speed per worker");
     }
     let fail_prob = if g.coin(0.2) { g.f64_in(0.05, 0.4) } else { 0.0 };
@@ -328,6 +331,7 @@ pub fn gen_case(g: &mut Gen) -> GeneratedCase {
         && min_degree >= 2
     {
         let m = g.usize_in(2, min_degree);
+        // lint:allow(D4): m is drawn from [2, min_degree], the with_verify_m contract
         scn = scn.with_verify_m(m).expect("2 <= m <= min replication degree by construction");
         verified = true;
     }
@@ -720,6 +724,7 @@ fn check_corrupt_cell(
         .scenario
         .clone()
         .with_verify_m(2)
+        // lint:allow(D4): corrupt_applies pre-filters for replication degree >= 3
         .expect("corrupt_applies guarantees replication degree >= 3");
     let ctx = describe(case);
     let rounds = opts.live_rounds.max(12);
@@ -919,7 +924,7 @@ fn check_cell(
     let scale = a.mean.abs().max(b.mean.abs()).max(1e-12);
     let tol = z * (a.sem * a.sem + b.sem * b.sem).sqrt() + rel_floor * scale;
     {
-        let mut r = report.lock().unwrap();
+        let mut r = report.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         r.cells += 1;
         match pair {
             Pair::AnalyticMc => r.analytic_mc += 1,
@@ -966,7 +971,7 @@ fn check_case(
 ) -> anyhow::Result<()> {
     let scn = &case.scenario;
     let ctx = describe(case);
-    report.lock().unwrap().scenarios += 1;
+    report.lock().unwrap_or_else(std::sync::PoisonError::into_inner).scenarios += 1;
 
     // --- DES (fast engine), the one backend every cell shares. ---
     let des_scn = scn.clone().with_seed(scn.seed ^ 0x00DE_5EED);
@@ -1022,10 +1027,12 @@ fn check_case(
             check_cell(Pair::AnalyticMc, &an, &mc_est, opts.z, opts.rel_floor, &ctx, report)?;
             check_cell(Pair::AnalyticDes, &an, &des_est, opts.z, opts.rel_floor, &ctx, report)?;
             if scn.worker_speeds.is_some() {
-                report.lock().unwrap().hetero_analytic_cells += 2;
+                let mut r = report.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                r.hetero_analytic_cells += 2;
             }
             if scn.verify_m.is_some() {
-                report.lock().unwrap().verify_m_analytic_cells += 2;
+                let mut r = report.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                r.verify_m_analytic_cells += 2;
             }
         }
 
@@ -1056,7 +1063,8 @@ fn check_case(
                 report,
             )?;
             if matches!(scn.k_of_b, Some(k) if k < scn.assignment.n_batches) {
-                report.lock().unwrap().live_k_of_b_cells += 1;
+                let mut r = report.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                r.live_k_of_b_cells += 1;
             }
         }
 
@@ -1101,6 +1109,7 @@ fn anchor_cases() -> Vec<GeneratedCase> {
     let paper =
         |mu: f64, delta: f64| BatchService::paper(ServiceSpec::shifted_exp(mu, delta));
     let grid = |spec: StudySpec| -> Vec<Scenario> {
+        // lint:allow(D4): the anchor grids are fixed in-source specs, compile-checked by the matrix tests
         spec.compile().expect("anchor grids are valid by construction").scenarios
     };
     let mut cases: Vec<GeneratedCase> = Vec::new();
@@ -1319,7 +1328,7 @@ pub fn run_matrix(opts: &MatrixOptions) -> anyhow::Result<MatrixReport> {
                     describe(&case)
                 )
             })?;
-            report.lock().unwrap().corpus_replayed += 1;
+            report.lock().unwrap_or_else(std::sync::PoisonError::into_inner).corpus_replayed += 1;
         }
     }
     for case in anchor_cases() {
@@ -1374,15 +1383,17 @@ pub fn run_matrix(opts: &MatrixOptions) -> anyhow::Result<MatrixReport> {
                     FAILED
                 };
                 state.store(mode, std::sync::atomic::Ordering::Relaxed);
-                *last_failed.lock().unwrap() = Some(case);
-                panic!("{text}");
+                *last_failed.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = Some(case);
+                panic!("{text}"); // lint:allow(D4): the testkit shrinker protocol propagates failures by panic
             }
         })
     }));
     if let Err(payload) = sweep {
         let mut note = String::new();
         if let Some(path) = &opts.corpus {
-            if let Some(case) = last_failed.lock().unwrap().take() {
+            let taken =
+                last_failed.lock().unwrap_or_else(std::sync::PoisonError::into_inner).take();
+            if let Some(case) = taken {
                 note = match append_to_corpus(path, &case) {
                     Ok(()) => format!(
                         "\n  shrunk case appended to {} — it will replay first on every \
@@ -1398,7 +1409,7 @@ pub fn run_matrix(opts: &MatrixOptions) -> anyhow::Result<MatrixReport> {
             testkit::payload_msg(&*payload)
         );
     }
-    Ok(report.into_inner().expect("no checker panicked while holding the report lock"))
+    Ok(report.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner))
 }
 
 #[cfg(test)]
@@ -1618,7 +1629,7 @@ mod tests {
         // at sem = 0.
         let bound = Estimate { mean: 1.1, sem: 0.0, lo: 0.9, hi: 1.3 };
         check_cell(Pair::AnalyticDes, &bound, &exact, 5.0, 0.0, "t", &report).unwrap();
-        let r = report.lock().unwrap();
+        let r = report.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         assert_eq!(r.cells, 3);
         assert_eq!(r.analytic_mc, 2);
         assert!(r.worst_gap_over_tol > 1.0, "the failing cell must dominate the ratio");

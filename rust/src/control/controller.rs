@@ -492,7 +492,7 @@ mod tests {
         ] {
             for n in [12usize, 24] {
                 let p = plan(n, &spec, &Objective::Mean).expect("plan");
-                assert_eq!(p.b as u64, optimum_b(n as u64, &spec), "spec={}", spec.name());
+                assert_eq!(p.b as u64, optimum_b(n as u64, &spec).unwrap(), "spec={}", spec.name());
             }
         }
         // Variance is minimized at full replication for both shapes.
@@ -559,7 +559,7 @@ mod tests {
             c.step(epoch).expect("step");
         }
         // Truth has ∆µ = 0.2 → oracle B = 3 for N = 12.
-        assert_eq!(c.current_b() as u64, optimum_b(12, &truth));
+        assert_eq!(c.current_b() as u64, optimum_b(12, &truth).unwrap());
         let replans =
             c.decisions().iter().filter(|d| d.action != Action::Hold).count();
         assert!(replans >= 1 && replans <= 3, "replans={replans}");
@@ -600,7 +600,7 @@ mod tests {
             feed_rounds(&mut c, &pre, 40, &mut rng);
             c.step(epoch).expect("step");
         }
-        assert_eq!(c.current_b() as u64, optimum_b(24, &pre));
+        assert_eq!(c.current_b() as u64, optimum_b(24, &pre).unwrap());
         let mut saw_drift = false;
         for epoch in 4..8 {
             feed_rounds(&mut c, &post, 40, &mut rng);
@@ -608,7 +608,7 @@ mod tests {
             saw_drift |= d.action == Action::DriftReplan;
         }
         assert!(saw_drift, "no drift replan after the injected shift");
-        assert_eq!(c.current_b() as u64, optimum_b(24, &post));
+        assert_eq!(c.current_b() as u64, optimum_b(24, &post).unwrap());
     }
 
     #[test]

@@ -282,7 +282,7 @@ mod tests {
         let spec = ControlSpec::smoke();
         let report = run_loop(&spec, 2).expect("run");
         let truth = spec.phases[0].spec.clone();
-        let oracle = optimum_b(spec.n_workers as u64, &truth) as usize;
+        let oracle = optimum_b(spec.n_workers as u64, &truth).unwrap() as usize;
         let last = report.epochs.last().expect("epochs");
         assert_eq!(last.oracle_b, oracle);
         assert!(

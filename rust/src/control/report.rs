@@ -218,7 +218,9 @@ pub fn validate_json(j: &Json) -> anyhow::Result<()> {
             anyhow::ensure!(v.is_finite(), "decision {i} has non-finite '{stat}'");
         }
     }
-    let last = epochs.last().expect("non-empty");
+    let last = epochs
+        .last()
+        .ok_or_else(|| anyhow::anyhow!("'epochs' is empty"))?;
     let consistent = |summary: &str, per_epoch: &str| -> anyhow::Result<()> {
         let a = j.get(summary).and_then(Json::as_f64);
         let b = last.get(per_epoch).and_then(Json::as_f64);

@@ -130,6 +130,7 @@ pub struct TrainingReport {
 /// generation-stamped coverage and winner maps. Allocated once at
 /// construction so the live round loop (dispatch → collect → post-hoc
 /// coverage validation) performs no heap allocation per round.
+#[derive(Debug)]
 struct RoundScratch {
     /// One cancellation token per batch, reset (not reallocated) each
     /// round.
@@ -257,6 +258,7 @@ fn vote_winner(votes: &[(usize, JobOut, f64)]) -> (usize, usize) {
 }
 
 /// The live coordinator.
+#[derive(Debug)]
 pub struct Coordinator {
     cfg: SystemConfig,
     assignment: Assignment,

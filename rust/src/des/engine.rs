@@ -324,6 +324,7 @@ pub fn simulate_one_with(
             * scn
                 .service
                 .batch_mean(s)
+                // lint:allow(D4): DesEvaluator refuses fail_prob > 0 with infinite-mean service before the engine runs
                 .expect("failure injection needs a finite mean batch service")
     } else {
         f64::INFINITY
@@ -347,6 +348,7 @@ pub fn simulate_one_with(
             let mean_batch = scn
                 .service
                 .batch_mean(s)
+                // lint:allow(D4): DesEvaluator refuses speculative redundancy with infinite-mean service
                 .expect("speculative redundancy needs a finite mean batch service");
             let deadline = deadline_factor * mean_batch;
             for (batch, replicas) in scn.assignment.workers_of_batch.iter().enumerate() {
@@ -763,6 +765,7 @@ fn simulate_one_reference_with(
             * scn
                 .service
                 .batch_mean(s)
+                // lint:allow(D4): DesEvaluator refuses fail_prob > 0 with infinite-mean service before the engine runs
                 .expect("failure injection needs a finite mean batch service")
     } else {
         f64::INFINITY
@@ -786,6 +789,7 @@ fn simulate_one_reference_with(
             let mean_batch = scn
                 .service
                 .batch_mean(s)
+                // lint:allow(D4): DesEvaluator refuses speculative redundancy with infinite-mean service
                 .expect("speculative redundancy needs a finite mean batch service");
             let deadline = deadline_factor * mean_batch;
             for (batch, replicas) in scn.assignment.workers_of_batch.iter().enumerate() {
@@ -1268,9 +1272,13 @@ pub fn simulate_fault_rounds(
                 }
                 // No accepting prefix: the batch exhausted its replicas
                 // (quorum short, or < 2 honest comparators). It resolves
-                // at the last arrival with the earliest value.
-                batch_time[bi] =
-                    accept.unwrap_or_else(|| votes.last().expect("nonempty").0);
+                // at the last arrival with the earliest value; with no
+                // arrivals at all it never resolves (∞), though scenario
+                // validation guarantees every batch has a replica.
+                batch_time[bi] = match accept {
+                    Some(t) => t,
+                    None => votes.last().map(|v| v.0).unwrap_or(f64::INFINITY),
+                };
                 if corrupt_n > 0 {
                     if honest >= 2 {
                         // Voting succeeded: every corrupt replica of

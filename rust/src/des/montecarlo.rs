@@ -185,7 +185,7 @@ impl TrialScratch {
                     self.batch_min.select_nth_unstable_by(k - 1, f64::total_cmp);
                 *kth
             }
-            None => self.batch_min.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            None => crate::util::stats::fold_max_total(self.batch_min.iter().copied()),
         }
     }
 }
@@ -504,7 +504,7 @@ where
         let mut state = make_state();
         return plan.into_iter().map(|(t, rng)| run(&mut state, t, rng)).collect();
     }
-    let mut slots: Vec<Option<T>> = plan.iter().map(|_| None).collect();
+    let mut tagged: Vec<(usize, T)> = Vec::with_capacity(plan.len());
     std::thread::scope(|scope| {
         let handles: Vec<_> = (0..workers)
             .map(|w| {
@@ -525,12 +525,18 @@ where
             })
             .collect();
         for h in handles {
-            for (i, s) in h.join().expect("shard worker panicked") {
-                slots[i] = Some(s);
+            match h.join() {
+                Ok(shard) => tagged.extend(shard),
+                // Re-raise a shard worker's panic on the caller thread
+                // with its original payload.
+                Err(payload) => std::panic::resume_unwind(payload),
             }
         }
     });
-    slots.into_iter().map(|s| s.expect("every shard is assigned a worker")).collect()
+    // Shard results are merged in shard-index order, never in thread
+    // completion order — the heart of the any-thread-count determinism.
+    tagged.sort_by_key(|(i, _)| *i);
+    tagged.into_iter().map(|(_, s)| s).collect()
 }
 
 /// Sharded trial runner: splits `trials` over the fixed
@@ -963,8 +969,8 @@ mod tests {
             .unwrap();
             let times: Vec<f64> = (0..n).map(|_| rng.f64_in(0.1, 10.0)).collect();
             let t = completion_from_times(&scn, &times);
-            let lo = times.iter().cloned().fold(f64::INFINITY, f64::min);
-            let hi = times.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lo = crate::util::stats::fold_min_total(times.iter().cloned());
+            let hi = crate::util::stats::fold_max_total(times.iter().cloned());
             assert!(t >= lo - 1e-12 && t <= hi + 1e-12, "t={t} not in [{lo},{hi}]");
         });
     }

@@ -47,8 +47,12 @@ use std::sync::Arc;
 
 /// The machine's available parallelism (1 when it cannot be
 /// determined) — the thread count the `Default` simulation backends
-/// pick.
+/// pick. This is the one sanctioned machine-shape probe: it only ever
+/// picks how many threads chew the fixed 64-shard plan, never what the
+/// shards compute, so results stay bit-identical across machines.
+#[allow(clippy::disallowed_methods)]
 pub fn auto_threads() -> usize {
+    // lint:allow(D2): thread-count selection affects speed only, never results (fixed shard plan)
     std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1)
 }
 
@@ -493,8 +497,8 @@ impl AnalyticEvaluator {
                  Scenario::k_of_b = Some({k}) < B = {b}; use the montecarlo or des \
                  backend",
                 speeds.len(),
-                speeds.iter().cloned().fold(f64::INFINITY, f64::min),
-                speeds.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                crate::util::stats::fold_min_total(speeds.iter().cloned()),
+                crate::util::stats::fold_max_total(speeds.iter().cloned())
             );
         }
         let bounds = crate::analysis::hetero_completion_bounds(

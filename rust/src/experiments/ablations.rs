@@ -73,7 +73,9 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     for &b in &feasible_batch_counts(N) {
         for (cancel, report) in [(true, &with_cancel), (false, &without_cancel)] {
             let st = report.stats_where(&|c| c.b == b)?;
-            let cost = st.cost.expect("des backend reports cost");
+            let cost = st
+                .cost
+                .ok_or_else(|| anyhow::anyhow!("des backend reports cost"))?;
             t2.row(vec![
                 b.to_string(),
                 cancel.to_string(),
@@ -109,11 +111,13 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
         .enumerate()
     {
         let st = t3_report.stats_where(&|c| c.redundancy_idx == ri)?;
-        let cost = st.cost.expect("des backend reports cost");
+        let cost = st
+                .cost
+                .ok_or_else(|| anyhow::anyhow!("des backend reports cost"))?;
         t3.row(vec![
             label,
             fmt_f(st.mean, 4),
-            fmt_f(st.quantile(0.99).unwrap(), 4),
+            st.quantile(0.99).map(|v| fmt_f(v, 4)).unwrap_or_else(|| "-".into()),
             fmt_f(cost.busy, 4),
             fmt_f(cost.wasted, 4),
         ]);

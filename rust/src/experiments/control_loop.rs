@@ -60,7 +60,10 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
         spec.name = format!("e12-{}", obj.name());
         let prior_b = plan(spec.n_workers, &spec.prior, obj)?.b;
         let report = spec.run(auto_threads())?;
-        let last = report.epochs.last().expect("epochs");
+        let last = report
+            .epochs
+            .last()
+            .ok_or_else(|| anyhow::anyhow!("control run produced no epochs"))?;
         let replans: u64 = report.epochs.iter().map(|e| e.replans).sum();
         let drifts: u64 = report.epochs.iter().map(|e| e.drift_replans).sum();
         t12a.row(vec![

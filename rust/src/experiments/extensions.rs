@@ -32,10 +32,11 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     let params = MarkovTraceParams::default();
     let trace = generate_markov_trace(&params, 200_000, ctx.seed ^ 0x7ACE);
     let spec = trace_spec(trace);
-    let sexp_match = ServiceSpec::shifted_exp(
-        1.0 / (spec.mean().unwrap() - params.base_delta),
-        params.base_delta,
-    );
+    let trace_mean = spec
+        .mean()
+        .ok_or_else(|| anyhow::anyhow!("trace spectrum has no finite mean"))?;
+    let sexp_match =
+        ServiceSpec::shifted_exp(1.0 / (trace_mean - params.base_delta), params.base_delta);
     let mut t9 = Table::new(
         "E9 — bursty straggler trace vs fitted SExp: E[T] across the spectrum (N=24)",
         &["B", "E[T] trace replay", "E[T] fitted SExp", "trace/SExp"],

@@ -80,7 +80,7 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
             ]);
         }
         let spec = ServiceSpec::shifted_exp(MU, dm / MU);
-        let b_star = analysis::optimum_b(N as u64, &spec);
+        let b_star = analysis::optimum_b(N as u64, &spec)?;
         let at_star = analysis::completion_time_stats(N as u64, b_star, &spec)?.mean;
         optima.row(vec![
             fmt_f(dm, 2),

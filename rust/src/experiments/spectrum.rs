@@ -52,7 +52,7 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
 
     // --- E4: B*(∆µ) crossovers (Theorem 3) ---
     let delta_mus = [0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0];
-    let sweep = bstar_sweep(N, 1.0, &delta_mus);
+    let sweep = bstar_sweep(N, 1.0, &delta_mus)?;
     let mut e4 = Table::new(
         "Theorem 3 — optimal B* vs delta*mu (N=24): diversity→parallelism crossover",
         &["delta_mu", "B*", "g*=N/B*", "E[T] at B*", "E[T] at B=1", "E[T] at B=N"],
@@ -79,8 +79,8 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
          (the mean–variance trade-off)",
         &["B", "E[T]", "Var[T]", "Std[T]", "mean-optimal", "var-optimal"],
     );
-    let b_star_mean = analysis::optimum_b(N, &sexp);
-    let b_star_var = analysis::optimum_b_variance(N, &sexp);
+    let b_star_mean = analysis::optimum_b(N, &sexp)?;
+    let b_star_var = analysis::optimum_b_variance(N, &sexp)?;
     let e5_report = ctx.study(crate::study::StudySpec {
         n_workers: vec![N as usize],
         services: vec![BatchService::paper(sexp)],
@@ -111,13 +111,16 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<Vec<Table>> {
     );
     for &b in &bs {
         let st = e5_report.stats_where(&|c| c.b == b)?;
-        let cost = st.cost.expect("analytic backend reports cost").busy;
+        let cost = st
+            .cost
+            .ok_or_else(|| anyhow::anyhow!("analytic backend reports cost"))?
+            .busy;
         e5x.row(vec![
             b.to_string(),
             fmt_f(st.mean, 4),
-            fmt_f(st.quantile(0.5).unwrap(), 4),
-            fmt_f(st.quantile(0.99).unwrap(), 4),
-            fmt_f(st.quantile(0.999).unwrap(), 4),
+            st.quantile(0.5).map(|v| fmt_f(v, 4)).unwrap_or_else(|| "-".into()),
+            st.quantile(0.99).map(|v| fmt_f(v, 4)).unwrap_or_else(|| "-".into()),
+            st.quantile(0.999).map(|v| fmt_f(v, 4)).unwrap_or_else(|| "-".into()),
             fmt_f(cost, 3),
             fmt_f(cost / st.mean, 3),
         ]);

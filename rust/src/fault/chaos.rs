@@ -95,7 +95,7 @@ impl ChaosSpec {
             n_workers: 24,
             n_batches: 6,
             service: ServiceSpec::shifted_exp(1.0, 0.2),
-            plan: FaultPlan::preset("respawn").expect("built-in preset"),
+            plan: FaultPlan::respawn_preset(),
             rounds: 48,
             replicates: 16,
             seed: 42,

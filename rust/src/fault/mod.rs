@@ -130,6 +130,22 @@ impl FaultPlan {
         &["crash", "respawn", "slowdown", "mixed", "corrupt"]
     }
 
+    /// The built-in `respawn` preset: two staggered transient crashes.
+    ///
+    /// Exposed as an infallible constructor so callers that hard-code
+    /// this preset (e.g. [`crate::fault::chaos::ChaosSpec::fig2`]) need
+    /// not unwrap the string-keyed [`FaultPlan::preset`] lookup.
+    pub fn respawn_preset() -> FaultPlan {
+        FaultPlan {
+            name: "respawn".into(),
+            seed: 42,
+            events: vec![
+                (0, FaultEvent::TransientCrash { round: 2, fraction: 0.5, respawn_after: 2 }),
+                (1, FaultEvent::TransientCrash { round: 6, fraction: 0.3, respawn_after: 3 }),
+            ],
+        }
+    }
+
     /// Look up a built-in preset.
     pub fn preset(name: &str) -> Option<FaultPlan> {
         match name {
@@ -138,14 +154,7 @@ impl FaultPlan {
                 seed: 42,
                 events: vec![(0, FaultEvent::PermanentCrash { round: 3, fraction: 0.5 })],
             }),
-            "respawn" => Some(FaultPlan {
-                name: "respawn".into(),
-                seed: 42,
-                events: vec![
-                    (0, FaultEvent::TransientCrash { round: 2, fraction: 0.5, respawn_after: 2 }),
-                    (1, FaultEvent::TransientCrash { round: 6, fraction: 0.3, respawn_after: 3 }),
-                ],
-            }),
+            "respawn" => Some(Self::respawn_preset()),
             "slowdown" => Some(FaultPlan {
                 name: "slowdown".into(),
                 seed: 42,

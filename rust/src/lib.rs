@@ -112,6 +112,19 @@
 //! // Or as a single validated call:
 //! cross_check(&AnalyticEvaluator, &mc, &scn).unwrap();
 //! ```
+//!
+//! Crate-wide hygiene is enforced mechanically: the [`lint`] module
+//! (`batchrep lint`, part of `./ci.sh`) checks the determinism
+//! invariants D1–D6 described in the README's "Static analysis" section.
+
+// The crate uses no unsafe; make that a compile-time guarantee.
+#![forbid(unsafe_code)]
+// Every public type prints something useful in test failures and logs.
+#![deny(missing_debug_implementations)]
+// clippy.toml backs the lint module's D2/D3 bans with disallowed-methods;
+// that lint is allow-by-default, so opt in here (plain rustc accepts and
+// ignores tool lints, so this is free for non-clippy builds).
+#![warn(clippy::disallowed_methods)]
 
 pub mod analysis;
 pub mod assignment;
@@ -126,6 +139,7 @@ pub mod dist;
 pub mod evaluator;
 pub mod experiments;
 pub mod fault;
+pub mod lint;
 pub mod metrics;
 pub mod obs;
 pub mod runtime;

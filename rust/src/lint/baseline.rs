@@ -1,0 +1,157 @@
+//! Grandfathered-findings baseline.
+//!
+//! The baseline is a checked-in JSON file (`rust/lint/baseline.json`)
+//! listing finding keys the gate tolerates. It exists so the lint gate can
+//! be zero-noise from day one even if a future rule lands before its last
+//! violation is fixed; the shipped tree keeps it empty. Keys are
+//! line-number-free (`rule|file|what`) so unrelated edits above a
+//! grandfathered site don't churn the file; duplicate keys carry a count so
+//! a *new* instance of an old violation still fails the gate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::Finding;
+use crate::util::json::Json;
+
+/// Baseline file schema version.
+pub const BASELINE_VERSION: i64 = 1;
+
+/// Line-insensitive identity of a finding.
+pub fn key(f: &Finding) -> String {
+    format!("{}|{}|{}", f.rule, f.file, f.what)
+}
+
+/// Parsed baseline: finding key -> tolerated count.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Baseline {
+    pub entries: BTreeMap<String, u64>,
+}
+
+impl Baseline {
+    /// Build a baseline that grandfathers exactly `findings`.
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        let mut entries = BTreeMap::new();
+        for f in findings {
+            *entries.entry(key(f)).or_insert(0u64) += 1;
+        }
+        Baseline { entries }
+    }
+
+    /// Parse the JSON document produced by [`Baseline::to_json`].
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let j = Json::parse(text).context("baseline is not valid JSON")?;
+        ensure!(
+            j.get("v").and_then(Json::as_i64) == Some(BASELINE_VERSION),
+            "baseline schema version mismatch (want v{BASELINE_VERSION})"
+        );
+        let items = j
+            .get("entries")
+            .and_then(Json::as_array)
+            .context("baseline has no entries array")?;
+        let mut entries = BTreeMap::new();
+        for it in items {
+            let k = it
+                .get("key")
+                .and_then(Json::as_str)
+                .context("baseline entry has no key")?;
+            let n = it.get("count").and_then(Json::as_i64).unwrap_or(1).max(0) as u64;
+            *entries.entry(k.to_string()).or_insert(0) += n;
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Load from disk; a missing file is an empty baseline.
+    pub fn load(path: &Path) -> Result<Baseline> {
+        if !path.exists() {
+            return Ok(Baseline::default());
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading baseline {}", path.display()))?;
+        Baseline::parse(&text)
+    }
+
+    /// Serialize (sorted, hence byte-stable for a given content).
+    pub fn to_json(&self) -> Json {
+        let items: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|(k, n)| {
+                Json::obj(vec![
+                    ("key", Json::from(k.as_str())),
+                    ("count", Json::from(*n as i64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("v", Json::from(BASELINE_VERSION)),
+            ("entries", Json::Array(items)),
+        ])
+    }
+
+    /// Split findings into (kept, grandfathered-count). Each baseline entry
+    /// absorbs at most `count` findings with its key.
+    pub fn apply(&self, findings: Vec<Finding>) -> (Vec<Finding>, usize) {
+        let mut budget = self.entries.clone();
+        let mut kept = Vec::new();
+        let mut absorbed = 0usize;
+        for f in findings {
+            match budget.get_mut(&key(&f)) {
+                Some(n) if *n > 0 => {
+                    *n -= 1;
+                    absorbed += 1;
+                }
+                _ => kept.push(f),
+            }
+        }
+        (kept, absorbed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(rule: &str, file: &str, line: u32, what: &str) -> Finding {
+        Finding {
+            rule: rule.into(),
+            file: file.into(),
+            line,
+            col: 1,
+            what: what.into(),
+            snippet: String::new(),
+            hint: String::new(),
+        }
+    }
+
+    #[test]
+    fn round_trip_and_apply() {
+        let found = vec![f("D4", "a.rs", 10, "unwrap"), f("D4", "a.rs", 20, "unwrap")];
+        let b = Baseline::from_findings(&found);
+        let text = b.to_json().to_string();
+        let b2 = Baseline::parse(&text).unwrap();
+        assert_eq!(b, b2);
+
+        // Same keys at drifted lines are absorbed…
+        let later = vec![f("D4", "a.rs", 11, "unwrap"), f("D4", "a.rs", 21, "unwrap")];
+        let (kept, absorbed) = b2.apply(later);
+        assert_eq!((kept.len(), absorbed), (0, 2));
+
+        // …but a third instance of the same violation is NOT.
+        let grown = vec![
+            f("D4", "a.rs", 11, "unwrap"),
+            f("D4", "a.rs", 21, "unwrap"),
+            f("D4", "a.rs", 31, "unwrap"),
+        ];
+        let (kept, absorbed) = b2.apply(grown);
+        assert_eq!((kept.len(), absorbed), (1, 2));
+    }
+
+    #[test]
+    fn missing_file_is_empty() {
+        let b = Baseline::load(Path::new("/nonexistent/baseline.json")).unwrap();
+        assert!(b.entries.is_empty());
+    }
+}

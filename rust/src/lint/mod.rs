@@ -1,0 +1,578 @@
+//! `batchrep lint` — a source-level static analyzer for the crate's
+//! determinism and hygiene invariants.
+//!
+//! Every theory-vs-simulation claim in this reproduction rests on
+//! invariants that used to be enforced only by convention. This module
+//! checks them mechanically on every gate:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | D1   | no `partial_cmp` / `f64::max|min` folds in ranking code — `total_cmp` only |
+//! | D2   | wall-clock (`Instant::now`, `SystemTime`) and machine-shape probes (`available_parallelism`) confined to `obs`/`coordinator`/`worker`/`benchkit` |
+//! | D3   | no OS entropy (`thread_rng`, `from_entropy`); no `HashMap`/`HashSet` in live code (hash-order iteration must never feed an artifact) |
+//! | D4   | no `unwrap`/`expect`/`panic!` in library code outside `main.rs`, `testkit`, `#[cfg(test)]` |
+//! | D5   | every schema site is registered in [`schemas::SCHEMAS`] and versions agree |
+//! | D6   | every counter variant is bumped; every literal event kind is in `obs::KNOWN_KINDS` |
+//!
+//! Intentional violations carry an inline suppression on (or directly
+//! above) the offending line: `// lint:allow(D2): <reason>` — the reason is
+//! mandatory and unused suppressions are themselves findings (rule `SUP`).
+//! A checked-in baseline (`rust/lint/baseline.json`) can grandfather
+//! findings by line-insensitive key; the shipped tree keeps it empty.
+
+pub mod baseline;
+pub mod rules;
+pub mod schemas;
+pub mod tokenizer;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+use tokenizer::{test_region_mask, tokenize, Comment, Tok};
+
+/// Schema version of the `LINT.json` artifact.
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// One rule violation (or suppression problem, rule `SUP`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule id: `D1`..`D6` or `SUP`.
+    pub rule: String,
+    /// Source file relative to the scanned root (`rust/src`).
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    /// What fired, e.g. `unwrap` or `f64::max`.
+    pub what: String,
+    /// The trimmed offending source line.
+    pub snippet: String,
+    /// How to fix it.
+    pub hint: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} src/{}:{}:{} {}\n    | {}\n    = help: {}",
+            self.rule, self.file, self.line, self.col, self.what, self.snippet, self.hint
+        )
+    }
+}
+
+/// A parsed `// lint:allow(RULE[,RULE]): reason` comment.
+///
+/// A standalone comment line covers the next source line; a trailing
+/// comment covers its own line. An empty reason never suppresses.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    pub comment_line: u32,
+    pub target_line: u32,
+    pub rules: Vec<String>,
+    pub reason: String,
+}
+
+/// One tokenized source file plus the derived rule inputs.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Path relative to the scanned root, `/`-separated.
+    pub rel: String,
+    pub lines: Vec<String>,
+    pub toks: Vec<Tok>,
+    test_mask: Vec<bool>,
+    pub sups: Vec<Suppression>,
+}
+
+impl SourceFile {
+    /// Tokenize `text` and precompute test regions and suppressions.
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let lines: Vec<String> = text.split('\n').map(str::to_string).collect();
+        let (toks, comments) = tokenize(text);
+        let test_mask = test_region_mask(&toks, lines.len());
+        let sups = parse_suppressions(&comments, &lines);
+        SourceFile { rel: rel.to_string(), lines, toks, test_mask, sups }
+    }
+
+    /// Is `line` (1-based) inside a `#[cfg(test)]` item?
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_mask.get(line as usize).copied().unwrap_or(false)
+    }
+
+    /// Trimmed source text of `line` (1-based), for finding snippets.
+    pub fn snippet(&self, line: u32) -> String {
+        self.lines
+            .get((line as usize).saturating_sub(1))
+            .map(|l| l.trim().to_string())
+            .unwrap_or_default()
+    }
+}
+
+fn parse_suppressions(comments: &[Comment], lines: &[String]) -> Vec<Suppression> {
+    let mut out = Vec::new();
+    for c in comments {
+        let body = c.text.trim_start_matches('/').trim();
+        let Some(rest) = body.strip_prefix("lint:allow(") else {
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            continue;
+        };
+        let rules: Vec<String> = rest[..close]
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        let reason = rest[close + 1..].trim_start_matches(':').trim().to_string();
+        let standalone = lines
+            .get((c.line as usize).saturating_sub(1))
+            .map(|l| l.trim_start().starts_with("//"))
+            .unwrap_or(false);
+        let target_line = if standalone { c.line + 1 } else { c.line };
+        out.push(Suppression { comment_line: c.line, target_line, rules, reason });
+    }
+    out
+}
+
+/// Analyzer configuration.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Directory to scan recursively for `*.rs` (normally `rust/src`).
+    pub root: PathBuf,
+    /// Baseline path; `None` disables baselining entirely.
+    pub baseline: Option<PathBuf>,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        LintConfig {
+            root: manifest.join("src"),
+            baseline: Some(manifest.join("lint").join("baseline.json")),
+        }
+    }
+}
+
+/// Result of a lint run.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    /// Non-baselined findings, sorted by (file, line, col, rule).
+    pub findings: Vec<Finding>,
+    /// Findings absorbed by the baseline.
+    pub baselined: usize,
+}
+
+/// Recursively load and tokenize every `*.rs` under `root`, sorted by path
+/// so the scan order (and therefore the report) is deterministic.
+pub fn load_sources(root: &Path) -> Result<Vec<SourceFile>> {
+    fn walk(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+        let rd = std::fs::read_dir(dir)
+            .with_context(|| format!("reading directory {}", dir.display()))?;
+        let mut entries: Vec<PathBuf> = Vec::new();
+        for e in rd {
+            entries.push(e.with_context(|| format!("listing {}", dir.display()))?.path());
+        }
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(&p, root, out)?;
+            } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+                let text = std::fs::read_to_string(&p)
+                    .with_context(|| format!("reading {}", p.display()))?;
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap_or(&p)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.push(SourceFile::parse(&rel, &text));
+            }
+        }
+        Ok(())
+    }
+    ensure!(root.is_dir(), "lint root {} is not a directory", root.display());
+    let mut out = Vec::new();
+    walk(root, root, &mut out)?;
+    Ok(out)
+}
+
+/// Run every rule over `files` and apply inline suppressions. Returns the
+/// surviving findings (including `SUP` findings for bad suppressions),
+/// sorted by position.
+pub fn analyze(files: &[SourceFile]) -> Vec<Finding> {
+    let mut all = Vec::new();
+    for f in files {
+        all.extend(rules::token_rules(f));
+    }
+    all.extend(rules::schema_discipline(files, schemas::SCHEMAS, schemas::REGISTRY_FILE));
+    let variants: Vec<String> =
+        crate::obs::Counter::ALL.iter().map(|c| format!("{c:?}")).collect();
+    all.extend(rules::counter_coverage(files, &variants, "obs/mod.rs"));
+    all.extend(rules::event_kinds(files, crate::obs::KNOWN_KINDS));
+    apply_suppressions(files, all)
+}
+
+/// Drop findings covered by a reasoned `lint:allow`; surface unused or
+/// reason-less suppressions as `SUP` findings.
+pub fn apply_suppressions(files: &[SourceFile], found: Vec<Finding>) -> Vec<Finding> {
+    let mut used: std::collections::BTreeSet<(String, u32)> = std::collections::BTreeSet::new();
+    let mut out = Vec::new();
+    for f in found {
+        let sup = files.iter().find(|sf| sf.rel == f.file).and_then(|sf| {
+            sf.sups.iter().find(|s| {
+                s.target_line == f.line
+                    && s.rules.iter().any(|r| r == &f.rule)
+                    && !s.reason.is_empty()
+            })
+        });
+        match sup {
+            Some(s) => {
+                used.insert((f.file.clone(), s.comment_line));
+            }
+            None => out.push(f),
+        }
+    }
+    for sf in files {
+        for s in &sf.sups {
+            if used.contains(&(sf.rel.clone(), s.comment_line)) {
+                continue;
+            }
+            let what = if s.reason.is_empty() {
+                format!("lint:allow({}) without a `: reason`", s.rules.join(","))
+            } else {
+                format!("unused lint:allow({})", s.rules.join(","))
+            };
+            out.push(Finding {
+                rule: "SUP".into(),
+                file: sf.rel.clone(),
+                line: s.comment_line,
+                col: 1,
+                what,
+                snippet: sf.snippet(s.comment_line),
+                hint: rules::hint("SUP").to_string(),
+            });
+        }
+    }
+    out.sort_by(|a, b| {
+        (&a.file, a.line, a.col, &a.rule).cmp(&(&b.file, b.line, b.col, &b.rule))
+    });
+    out
+}
+
+/// Full lint run: load, analyze, baseline-filter, and record in `obs`.
+pub fn run(cfg: &LintConfig) -> Result<LintReport> {
+    let files = load_sources(&cfg.root)?;
+    let raw = analyze(&files);
+    let bl = match &cfg.baseline {
+        Some(p) => baseline::Baseline::load(p)?,
+        None => baseline::Baseline::default(),
+    };
+    let (findings, baselined) = bl.apply(raw);
+    crate::obs::bump(crate::obs::Counter::LintRuns, 1);
+    if crate::obs::enabled() {
+        crate::obs::emit(
+            "lint",
+            "run",
+            &[
+                ("files", files.len().into()),
+                ("findings", findings.len().into()),
+                ("baselined", baselined.into()),
+            ],
+        );
+    }
+    Ok(LintReport { files_scanned: files.len(), findings, baselined })
+}
+
+/// Serialize a report as the `LINT.json` artifact (schema v1).
+pub fn report_json(r: &LintReport) -> Json {
+    let findings: Vec<Json> = r
+        .findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("rule", Json::from(f.rule.as_str())),
+                ("file", Json::from(f.file.as_str())),
+                ("line", Json::from(i64::from(f.line))),
+                ("col", Json::from(i64::from(f.col))),
+                ("what", Json::from(f.what.as_str())),
+                ("snippet", Json::from(f.snippet.as_str())),
+                ("hint", Json::from(f.hint.as_str())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("v", Json::from(SCHEMA_VERSION)),
+        ("files_scanned", Json::from(r.files_scanned)),
+        ("baselined", Json::from(r.baselined)),
+        ("findings", Json::Array(findings)),
+    ])
+}
+
+/// Validate a `LINT.json` document against schema v1.
+pub fn validate_json(j: &Json) -> Result<()> {
+    ensure!(
+        j.get("v").and_then(Json::as_i64) == Some(SCHEMA_VERSION),
+        "LINT.json schema version mismatch (this validator understands v{SCHEMA_VERSION})"
+    );
+    ensure!(
+        j.get("files_scanned").and_then(Json::as_i64).unwrap_or(-1) >= 0,
+        "LINT.json has no files_scanned count"
+    );
+    let findings = j
+        .get("findings")
+        .and_then(Json::as_array)
+        .context("LINT.json has no findings array")?;
+    for (i, f) in findings.iter().enumerate() {
+        for key in ["rule", "file", "what"] {
+            ensure!(
+                f.get(key).and_then(Json::as_str).is_some(),
+                "LINT.json finding #{i} lacks string field {key}"
+            );
+        }
+        ensure!(
+            f.get("line").and_then(Json::as_i64).is_some(),
+            "LINT.json finding #{i} lacks a line number"
+        );
+    }
+    Ok(())
+}
+
+/// Read and validate a `LINT.json` artifact from disk.
+pub fn validate_file(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    validate_json(&j)?;
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::schemas::SchemaEntry;
+
+    /// Run the token rules + suppression pass over one fixture snippet.
+    fn scan(src: &str) -> Vec<Finding> {
+        let f = SourceFile::parse("fixture.rs", src);
+        let found = rules::token_rules(&f);
+        apply_suppressions(std::slice::from_ref(&f), found)
+    }
+
+    fn rules_of(found: &[Finding]) -> Vec<&str> {
+        found.iter().map(|f| f.rule.as_str()).collect()
+    }
+
+    #[test]
+    fn d1_fires_suppresses_and_flags_unused() {
+        let fired = scan("let m = xs.iter().fold(f64::NEG_INFINITY, f64::max);\n");
+        assert_eq!(rules_of(&fired), ["D1"]);
+        assert_eq!(fired[0].what, "f64::max");
+        assert_eq!((fired[0].line, fired[0].col), (1, 43));
+
+        let sorted = scan("v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n");
+        assert!(rules_of(&sorted).contains(&"D1"));
+
+        // `fn partial_cmp` (trait impl) is the legitimate spelling.
+        assert!(scan("fn partial_cmp(&self, o: &Self) -> Option<Ordering> { todo() }\n")
+            .is_empty());
+
+        let ok = scan(
+            "let m = xs.fold(f64::NEG_INFINITY, f64::max); // lint:allow(D1): fixture\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+
+        let unused = scan("// lint:allow(D1): nothing here fires\nlet x = 1;\n");
+        assert_eq!(rules_of(&unused), ["SUP"]);
+    }
+
+    #[test]
+    fn d2_respects_module_allowlist_and_tests() {
+        let fired = scan("let t0 = std::time::Instant::now();\n");
+        assert_eq!(rules_of(&fired), ["D2"]);
+
+        let sys = scan("let t = SystemTime::now();\nlet p = available_parallelism();\n");
+        assert_eq!(rules_of(&sys), ["D2", "D2"]);
+
+        // Allowed module prefix: same source, no finding.
+        let f = SourceFile::parse("obs/mod.rs", "let t0 = std::time::Instant::now();\n");
+        assert!(rules::token_rules(&f).is_empty());
+
+        // #[cfg(test)] region: no finding.
+        let t = scan("#[cfg(test)]\nmod tests {\n  fn t() { let x = Instant::now(); }\n}\n");
+        assert!(t.is_empty(), "{t:?}");
+
+        let sup = scan("// lint:allow(D2): fixture reason\nlet t0 = Instant::now();\n");
+        assert!(sup.is_empty(), "{sup:?}");
+    }
+
+    #[test]
+    fn d3_flags_entropy_and_hash_containers() {
+        let fired = scan("let mut rng = rand::thread_rng();\n");
+        assert_eq!(rules_of(&fired), ["D3"]);
+
+        let hm = scan("use std::collections::HashMap;\n");
+        assert_eq!(rules_of(&hm), ["D3"]);
+
+        // BTreeMap is the sanctioned container.
+        assert!(scan("use std::collections::BTreeMap;\n").is_empty());
+
+        // HashMap in tests is fine; from_entropy is banned even there.
+        let t = scan("#[cfg(test)]\nmod tests {\n  fn t() { let m: HashMap<u8, u8> = x(); }\n}\n");
+        assert!(t.is_empty(), "{t:?}");
+        let e = scan("#[cfg(test)]\nmod tests {\n  fn t() { let r = Rng::from_entropy(); }\n}\n");
+        assert_eq!(rules_of(&e), ["D3"]);
+
+        let sup = scan("let m = HashMap::new(); // lint:allow(D3): fixture reason\n");
+        assert!(sup.is_empty(), "{sup:?}");
+    }
+
+    #[test]
+    fn d4_bans_panics_in_library_code_only() {
+        let fired = scan("let v = maybe().unwrap();\nlet w = maybe().expect(\"m\");\npanic!(\"boom\");\n");
+        assert_eq!(rules_of(&fired), ["D4", "D4", "D4"]);
+
+        // unwrap_or / unwrap_or_else are fine (different identifier).
+        assert!(scan("let v = maybe().unwrap_or(0).min(maybe2().unwrap_or_else(z));\n")
+            .is_empty());
+
+        // main.rs and testkit/ are exempt wholesale.
+        for rel in ["main.rs", "testkit/mod.rs"] {
+            let f = SourceFile::parse(rel, "let v = maybe().unwrap();\n");
+            assert!(rules::token_rules(&f).is_empty(), "{rel} should be D4-exempt");
+        }
+
+        // The word unwrap inside strings/comments never fires.
+        assert!(scan("// unwrap here\nlet s = \"call .unwrap() later\";\n").is_empty());
+
+        let t = scan("#[cfg(test)]\nmod tests {\n  fn t() { x.unwrap(); panic!(\"t\"); }\n}\n");
+        assert!(t.is_empty(), "{t:?}");
+
+        let sup = scan("let v = maybe().unwrap(); // lint:allow(D4): fixture reason\n");
+        assert!(sup.is_empty(), "{sup:?}");
+    }
+
+    #[test]
+    fn suppression_without_reason_is_a_finding() {
+        let found = scan("let v = maybe().unwrap(); // lint:allow(D4)\n");
+        // The violation still fires AND the bare allow is flagged.
+        assert_eq!(rules_of(&found), ["D4", "SUP"]);
+        assert!(found[1].what.contains("without a `: reason`"));
+    }
+
+    #[test]
+    fn suppression_for_wrong_rule_does_not_mask() {
+        let found = scan("let v = maybe().unwrap(); // lint:allow(D1): wrong rule\n");
+        assert_eq!(rules_of(&found), ["D4", "SUP"]);
+    }
+
+    #[test]
+    fn d5_schema_discipline_fixtures() {
+        let reg_src = SourceFile::parse(
+            "lint/schemas.rs",
+            "pub const SCHEMAS: X = [(\"X.json\", \"x.rs\"), (\"GONE.json\", \"gone.rs\")];\n",
+        );
+        let x = SourceFile::parse("x.rs", "pub const SCHEMA_VERSION: i64 = 3;\n");
+        let unreg =
+            SourceFile::parse("y.rs", "pub fn validate_json(j: &Json) -> Result<()> { o() }\n");
+        let files = vec![reg_src, x, unreg];
+
+        let registry = [
+            // Version literal (3) disagrees with the registered version (2),
+            // and the live constant (4) disagrees with both.
+            SchemaEntry { artifact: "X.json", file: "x.rs", version: 2, current: 4 },
+            // Stale entry: no such file in the corpus.
+            SchemaEntry { artifact: "GONE.json", file: "gone.rs", version: 1, current: 1 },
+        ];
+        let found = rules::schema_discipline(&files, &registry, "lint/schemas.rs");
+        let whats: Vec<&str> = found.iter().map(|f| f.what.as_str()).collect();
+        assert_eq!(found.len(), 4, "{found:?}");
+        assert!(whats.iter().any(|w| w.contains("not registered")));
+        assert!(whats.iter().any(|w| w.contains("registers v2")));
+        assert!(whats.iter().any(|w| w.contains("stale registry entry")));
+        assert!(whats.iter().any(|w| w.contains("crate emits v4")));
+
+        // A consistent corpus is clean.
+        let ok_reg = [SchemaEntry { artifact: "X.json", file: "x.rs", version: 3, current: 3 }];
+        let clean = rules::schema_discipline(&files[..2], &ok_reg, "lint/schemas.rs");
+        assert!(clean.is_empty(), "{clean:?}");
+    }
+
+    #[test]
+    fn d6_counter_coverage_fixtures() {
+        let defs = SourceFile::parse(
+            "obs/mod.rs",
+            "define_counters! { Hits => hits: \"x.hits\", Misses => misses: \"x.misses\" }\n",
+        );
+        let user = SourceFile::parse("a.rs", "bump(Counter::Hits, 1);\n");
+        let variants = vec!["Hits".to_string(), "Misses".to_string()];
+        let found = rules::counter_coverage(&[defs.clone(), user], &variants, "obs/mod.rs");
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert!(found[0].what.contains("Misses"));
+        assert_eq!(found[0].file, "obs/mod.rs");
+
+        // Test-only bumps do not count as coverage.
+        let test_user = SourceFile::parse(
+            "b.rs",
+            "#[cfg(test)]\nmod tests {\n fn t() { bump(Counter::Misses, 1); }\n}\n",
+        );
+        let found = rules::counter_coverage(&[defs, test_user], &variants, "obs/mod.rs");
+        assert_eq!(found.len(), 2, "{found:?}");
+    }
+
+    #[test]
+    fn d6_event_kind_fixtures() {
+        let known = [("mc", "shard")];
+        let ok = SourceFile::parse("a.rs", "emit(\"mc\", \"shard\", &[]);\n");
+        assert!(rules::event_kinds(&[ok], &known).is_empty());
+
+        let bad = SourceFile::parse("a.rs", "emit(\"mc\", \"bogus\", &[]);\n");
+        let found = rules::event_kinds(&[bad], &known);
+        assert_eq!(found.len(), 1);
+        assert!(found[0].what.contains("mc/bogus"));
+
+        // Non-literal kinds and the generic span kind are out of scope.
+        let dynkind = SourceFile::parse("a.rs", "emit(\"mc\", action.name(), &[]);\n");
+        assert!(rules::event_kinds(&[dynkind], &known).is_empty());
+        let span = SourceFile::parse("a.rs", "emit(sub, \"span\", &[]);\n");
+        assert!(rules::event_kinds(&[span], &known).is_empty());
+    }
+
+    #[test]
+    fn report_round_trips_through_schema_validation() {
+        let r = LintReport {
+            files_scanned: 2,
+            findings: vec![Finding {
+                rule: "D4".into(),
+                file: "a.rs".into(),
+                line: 10,
+                col: 5,
+                what: "unwrap".into(),
+                snippet: "x.unwrap();".into(),
+                hint: "return a named error".into(),
+            }],
+            baselined: 1,
+        };
+        let j = report_json(&r);
+        validate_json(&j).unwrap();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        validate_json(&parsed).unwrap();
+        assert_eq!(parsed.get("files_scanned").and_then(Json::as_i64), Some(2));
+
+        // A wrong version must be rejected.
+        let bad = Json::obj(vec![("v", Json::from(99i64)), ("findings", Json::Array(vec![]))]);
+        assert!(validate_json(&bad).is_err());
+    }
+
+    #[test]
+    fn baseline_filters_by_line_insensitive_key() {
+        let src = "let a = maybe().unwrap();\n";
+        let f = SourceFile::parse("fixture.rs", src);
+        let found = apply_suppressions(std::slice::from_ref(&f), rules::token_rules(&f));
+        assert_eq!(found.len(), 1);
+        let bl = baseline::Baseline::from_findings(&found);
+        let (kept, absorbed) = bl.apply(found);
+        assert_eq!((kept.len(), absorbed), (0, 1));
+    }
+}

@@ -1,0 +1,356 @@
+//! The six determinism/hygiene rules (D1-D6).
+//!
+//! Each rule is a pure function from tokenized sources to [`Finding`]s so
+//! the unit tests can run every rule against embedded fixture snippets.
+//! Banned names are spelled as string literals throughout this file, which
+//! keeps the analyzer from flagging its own source (string bodies are
+//! opaque to the tokenizer).
+
+use super::{Finding, SourceFile};
+use crate::lint::schemas::SchemaEntry;
+use crate::lint::tokenizer::{Tok, TokKind};
+
+/// Directory prefixes where wall-clock/thread-count probes are legitimate
+/// (live paths and measurement harnesses).
+pub const D2_ALLOWED: &[&str] = &["obs/", "coordinator/", "worker/", "benchkit/"];
+
+/// Files exempt from the D4 panic ban: the CLI binary may crash loudly and
+/// the property-test kit is test-only by construction.
+pub const D4_EXEMPT_FILES: &[&str] = &["main.rs"];
+pub const D4_EXEMPT_PREFIXES: &[&str] = &["testkit/"];
+
+pub(crate) fn hint(rule: &str) -> &'static str {
+    match rule {
+        "D1" => "rank with f64::total_cmp (NaN-total order); see README \u{00a7}Static analysis",
+        "D2" => "wall-clock/parallelism probes live in obs/coordinator/worker/benchkit; \
+                 thread values in as parameters",
+        "D3" => "use seeded substreams and BTreeMap (or sort explicitly before emitting)",
+        "D4" => "return a named error (anyhow) instead of panicking in library code",
+        "D5" => "register the schema in lint::schemas::SCHEMAS",
+        "D6" => "bump the counter in live code or add the event kind to obs::KNOWN_KINDS",
+        _ => "remove the stale lint:allow or add the missing `: reason`",
+    }
+}
+
+fn mk(rule: &str, f: &SourceFile, line: u32, col: u32, what: String) -> Finding {
+    Finding {
+        rule: rule.to_string(),
+        file: f.rel.clone(),
+        line,
+        col,
+        what,
+        snippet: f.snippet(line),
+        hint: hint(rule).to_string(),
+    }
+}
+
+fn tok_at<'a>(toks: &'a [Tok], ix: usize) -> Option<&'a Tok> {
+    toks.get(ix)
+}
+
+fn text_at<'a>(toks: &'a [Tok], ix: usize) -> &'a str {
+    toks.get(ix).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+/// D1-D4: the per-token rules. One pass over the token stream.
+pub fn token_rules(f: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let d2_applies = !D2_ALLOWED.iter().any(|p| f.rel.starts_with(p));
+    let d4_applies = !D4_EXEMPT_FILES.contains(&f.rel.as_str())
+        && !D4_EXEMPT_PREFIXES.iter().any(|p| f.rel.starts_with(p));
+    let toks = &f.toks;
+    for ix in 0..toks.len() {
+        let t = &toks[ix];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let in_test = f.in_test(t.line);
+        let prev = if ix > 0 { text_at(toks, ix - 1) } else { "" };
+        let next = text_at(toks, ix + 1);
+
+        // D1: partial float ordering in ranking/argmin code. `fn partial_cmp`
+        // (a trait impl definition) is the one legitimate spelling.
+        if t.text == "partial_cmp" && prev != "fn" {
+            out.push(mk("D1", f, t.line, t.col, "partial_cmp".into()));
+        }
+        if t.text == "f64" && next == ":" && text_at(toks, ix + 2) == ":" {
+            let m = text_at(toks, ix + 3);
+            if m == "max" || m == "min" {
+                out.push(mk("D1", f, t.line, t.col, format!("f64::{m}")));
+            }
+        }
+
+        // D2: wall-clock and machine-shape probes outside live modules.
+        if d2_applies && !in_test {
+            if t.text == "Instant"
+                && next == ":"
+                && text_at(toks, ix + 2) == ":"
+                && text_at(toks, ix + 3) == "now"
+            {
+                out.push(mk("D2", f, t.line, t.col, "Instant::now".into()));
+            }
+            if t.text == "SystemTime" {
+                out.push(mk("D2", f, t.line, t.col, "SystemTime".into()));
+            }
+            if t.text == "available_parallelism" {
+                out.push(mk("D2", f, t.line, t.col, "available_parallelism".into()));
+            }
+        }
+
+        // D3: OS entropy anywhere; hash-order containers outside tests
+        // (iteration order must never feed an artifact or canonical key).
+        if t.text == "thread_rng" || t.text == "from_entropy" {
+            out.push(mk("D3", f, t.line, t.col, t.text.clone()));
+        }
+        if (t.text == "HashMap" || t.text == "HashSet") && !in_test {
+            out.push(mk("D3", f, t.line, t.col, t.text.clone()));
+        }
+
+        // D4: named-error discipline in library code.
+        if d4_applies && !in_test {
+            if (t.text == "unwrap" || t.text == "expect") && prev == "." && next == "(" {
+                out.push(mk("D4", f, t.line, t.col, t.text.clone()));
+            }
+            if t.text == "panic" && next == "!" {
+                out.push(mk("D4", f, t.line, t.col, "panic!".into()));
+            }
+        }
+    }
+    out
+}
+
+/// Parse the integer literal of a `const SCHEMA_VERSION: … = <n>;` item, if
+/// the file declares one.
+fn schema_version_literal(f: &SourceFile) -> Option<(i64, u32, u32)> {
+    let toks = &f.toks;
+    for ix in 0..toks.len() {
+        if toks[ix].text != "const" || text_at(toks, ix + 1) != "SCHEMA_VERSION" {
+            continue;
+        }
+        // The numeric literal sits within the next few tokens (`: i64 = 1 ;`).
+        for j in ix + 2..(ix + 8).min(toks.len()) {
+            let t = &toks[j];
+            if t.kind == TokKind::Num {
+                let digits: String =
+                    t.text.chars().take_while(|c| c.is_ascii_digit()).collect();
+                if let Ok(v) = digits.parse::<i64>() {
+                    return Some((v, t.line, t.col));
+                }
+            }
+            if t.text == ";" {
+                break;
+            }
+        }
+    }
+    None
+}
+
+/// Does the file define a validator entry point (`fn validate_file` /
+/// `fn validate_json`)? Returns the definition site.
+fn validator_def(f: &SourceFile) -> Option<(u32, u32)> {
+    let toks = &f.toks;
+    for ix in 0..toks.len() {
+        if toks[ix].text == "fn" {
+            let nm = text_at(toks, ix + 1);
+            if nm == "validate_file" || nm == "validate_json" {
+                let t = &toks[ix];
+                return Some((t.line, t.col));
+            }
+        }
+    }
+    None
+}
+
+/// Locate a string literal token equal to `needle` in `f` (for anchoring
+/// registry findings at the offending entry).
+fn find_str_literal(f: &SourceFile, needle: &str) -> (u32, u32) {
+    f.toks
+        .iter()
+        .find(|t| t.kind == TokKind::Str && t.text == needle)
+        .map(|t| (t.line, t.col))
+        .unwrap_or((1, 1))
+}
+
+/// D5: schema discipline. Every file that declares a `SCHEMA_VERSION` or a
+/// validator must be registered; registered versions must match both the
+/// source literal and the live constant; stale registry entries are flagged.
+pub fn schema_discipline(
+    files: &[SourceFile],
+    registry: &[SchemaEntry],
+    registry_file: &str,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let reg_src = files.iter().find(|f| f.rel == registry_file);
+    for f in files {
+        if f.rel == registry_file {
+            continue;
+        }
+        let ver = schema_version_literal(f);
+        let val = validator_def(f);
+        let (line, col) = match (ver, val) {
+            (Some((_, l, c)), _) => (l, c),
+            (None, Some((l, c))) => (l, c),
+            (None, None) => continue,
+        };
+        match registry.iter().find(|e| e.file == f.rel) {
+            None => out.push(mk(
+                "D5",
+                f,
+                line,
+                col,
+                "schema site not registered".into(),
+            )),
+            Some(e) => {
+                if let Some((v, vl, vc)) = ver {
+                    if v != e.version {
+                        out.push(mk(
+                            "D5",
+                            f,
+                            vl,
+                            vc,
+                            format!(
+                                "SCHEMA_VERSION is {v} but lint::schemas registers v{}",
+                                e.version
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    for e in registry {
+        let target = files.iter().find(|f| f.rel == e.file);
+        let live = target
+            .map(|f| schema_version_literal(f).is_some() || validator_def(f).is_some())
+            .unwrap_or(false);
+        if !live {
+            if let Some(rf) = reg_src {
+                let (l, c) = find_str_literal(rf, e.file);
+                out.push(mk(
+                    "D5",
+                    rf,
+                    l,
+                    c,
+                    format!("stale registry entry: {} has no schema site", e.file),
+                ));
+            }
+        }
+        if e.version != e.current {
+            if let Some(rf) = reg_src {
+                let (l, c) = find_str_literal(rf, e.artifact);
+                out.push(mk(
+                    "D5",
+                    rf,
+                    l,
+                    c,
+                    format!(
+                        "{}: registered v{} but the crate emits v{}",
+                        e.artifact, e.version, e.current
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// D6 (part 1): every counter variant must be bumped by live (non-test)
+/// code somewhere outside the defining file.
+pub fn counter_coverage(
+    files: &[SourceFile],
+    variants: &[String],
+    counters_file: &str,
+) -> Vec<Finding> {
+    let mut used: Vec<bool> = vec![false; variants.len()];
+    for f in files {
+        if f.rel == counters_file {
+            continue;
+        }
+        let toks = &f.toks;
+        for ix in 0..toks.len() {
+            let t = &toks[ix];
+            if t.kind != TokKind::Ident
+                || t.text != "Counter"
+                || text_at(toks, ix + 1) != ":"
+                || text_at(toks, ix + 2) != ":"
+                || f.in_test(t.line)
+            {
+                continue;
+            }
+            let v = text_at(toks, ix + 3);
+            if let Some(k) = variants.iter().position(|x| x == v) {
+                used[k] = true;
+            }
+        }
+    }
+    let mut out = Vec::new();
+    let def = files.iter().find(|f| f.rel == counters_file);
+    for (k, v) in variants.iter().enumerate() {
+        if used[k] {
+            continue;
+        }
+        let (file, line, col, snippet) = match def {
+            Some(f) => {
+                let (l, c) = f
+                    .toks
+                    .iter()
+                    .find(|t| t.kind == TokKind::Ident && t.text == *v)
+                    .map(|t| (t.line, t.col))
+                    .unwrap_or((1, 1));
+                (f.rel.clone(), l, c, f.snippet(l))
+            }
+            None => (counters_file.to_string(), 1, 1, String::new()),
+        };
+        out.push(Finding {
+            rule: "D6".into(),
+            file,
+            line,
+            col,
+            what: format!("counter {v} is never bumped by live code"),
+            snippet,
+            hint: hint("D6").to_string(),
+        });
+    }
+    out
+}
+
+/// D6 (part 2): every `emit("<sub>", "<kind>", …)` call with two literal
+/// arguments must name a registered event kind. Non-literal kinds (e.g.
+/// `action.name()`) and the generic `"span"` kind are out of scope here —
+/// the summarizer handles spans structurally.
+pub fn event_kinds(files: &[SourceFile], known: &[(&str, &str)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        let toks = &f.toks;
+        for ix in 0..toks.len() {
+            let t = &toks[ix];
+            if t.kind != TokKind::Ident || t.text != "emit" || text_at(toks, ix + 1) != "(" {
+                continue;
+            }
+            let (sub, kind) = match (tok_at(toks, ix + 2), tok_at(toks, ix + 4)) {
+                (Some(s), Some(k))
+                    if s.kind == TokKind::Str
+                        && k.kind == TokKind::Str
+                        && text_at(toks, ix + 3) == "," =>
+                {
+                    (s, k)
+                }
+                _ => continue,
+            };
+            if f.in_test(t.line) || kind.text == "span" {
+                continue;
+            }
+            let pair = (sub.text.as_str(), kind.text.as_str());
+            if !known.iter().any(|k| *k == pair) {
+                out.push(mk(
+                    "D6",
+                    f,
+                    kind.line,
+                    kind.col,
+                    format!("event kind {}/{} not in obs::KNOWN_KINDS", pair.0, pair.1),
+                ));
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,108 @@
+//! The single registry of every versioned artifact schema in the crate.
+//!
+//! D5 cross-checks this table three ways:
+//! 1. every source file that declares a `SCHEMA_VERSION` or a
+//!    `validate_file`/`validate_json` entry point must appear here,
+//! 2. the registered `version` must equal the literal in that file,
+//! 3. the registered `version` must equal the live constant (`current`),
+//!    so a schema bump that forgets to update the registry — or a registry
+//!    edit that forgets the schema — fails the gate either way.
+//!
+//! Bumping a schema is therefore a two-file change by design: the emitting
+//! module and this table, which is the review surface for artifact
+//! compatibility.
+
+/// One versioned artifact schema.
+#[derive(Debug, Clone, Copy)]
+pub struct SchemaEntry {
+    /// Artifact file name as written by the CLI (documentation only).
+    pub artifact: &'static str,
+    /// Defining source file, relative to `rust/src`.
+    pub file: &'static str,
+    /// Registered schema version (the review-gated value).
+    pub version: i64,
+    /// The live constant the crate actually emits.
+    pub current: i64,
+}
+
+/// Source file holding this registry (excluded from the per-file D5 scan,
+/// used to anchor registry-level findings).
+pub const REGISTRY_FILE: &str = "lint/schemas.rs";
+
+/// Every versioned artifact the crate emits or validates.
+pub const SCHEMAS: &[SchemaEntry] = &[
+    SchemaEntry {
+        artifact: "BENCH_mc.json",
+        file: "benchkit/mc.rs",
+        version: 1,
+        current: crate::benchkit::mc::SCHEMA_VERSION,
+    },
+    SchemaEntry {
+        artifact: "BENCH_des.json",
+        file: "benchkit/des.rs",
+        version: 1,
+        current: crate::benchkit::des::SCHEMA_VERSION,
+    },
+    SchemaEntry {
+        artifact: "STUDY.json",
+        file: "study/report.rs",
+        version: 1,
+        current: crate::study::report::SCHEMA_VERSION,
+    },
+    SchemaEntry {
+        artifact: "CONTROL.json",
+        file: "control/report.rs",
+        version: 1,
+        current: crate::control::report::SCHEMA_VERSION,
+    },
+    SchemaEntry {
+        artifact: "CHAOS.json",
+        file: "fault/report.rs",
+        version: 2,
+        current: crate::fault::report::SCHEMA_VERSION,
+    },
+    SchemaEntry {
+        artifact: "INTEGRITY.json",
+        file: "fault/integrity.rs",
+        version: 1,
+        current: crate::fault::integrity::SCHEMA_VERSION,
+    },
+    SchemaEntry {
+        artifact: "events.jsonl",
+        file: "obs/mod.rs",
+        version: 1,
+        current: crate::obs::SCHEMA_VERSION,
+    },
+    SchemaEntry {
+        artifact: "LINT.json",
+        file: "lint/mod.rs",
+        version: 1,
+        current: crate::lint::SCHEMA_VERSION,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registered_versions_match_live_constants() {
+        for e in SCHEMAS {
+            assert_eq!(
+                e.version, e.current,
+                "{}: registry says v{} but the crate emits v{} — update lint::schemas \
+                 together with the schema bump",
+                e.artifact, e.version, e.current
+            );
+        }
+    }
+
+    #[test]
+    fn registry_files_are_unique() {
+        for (i, a) in SCHEMAS.iter().enumerate() {
+            for b in &SCHEMAS[i + 1..] {
+                assert_ne!(a.file, b.file, "duplicate registry entry for {}", a.file);
+            }
+        }
+    }
+}

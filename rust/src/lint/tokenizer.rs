@@ -1,0 +1,383 @@
+//! A minimal, line/column-aware Rust tokenizer for the `lint` analyzer.
+//!
+//! This is deliberately *not* a parser: the determinism rules (D1-D6) only
+//! need a token stream that is safe against comments, string literals, raw
+//! strings, char literals, and lifetimes, so that e.g. the word
+//! "partial_cmp" inside a doc comment or an error message never fires a
+//! rule. It handles:
+//!
+//! - line (`//`) and nested block (`/* .. /* .. */ .. */`) comments,
+//! - regular strings with escapes, raw strings `r"…"` / `r#"…"#` and the
+//!   byte variants `b"…"` / `br#"…"#`,
+//! - char literals vs lifetimes (`'x'` vs `'static`),
+//! - identifiers, numeric literals, and single-byte punctuation
+//!   (`::` is reported as two `:` tokens).
+//!
+//! The tokenizer never panics: it works on raw bytes and decodes token text
+//! lossily, and columns count bytes (the tree is ASCII in practice).
+
+/// Token classes the rules distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// String literal (text is the raw body, escapes untouched).
+    Str,
+    /// Numeric literal (suffix included, e.g. `1.5f64`).
+    Num,
+    /// Single punctuation byte.
+    Punct,
+    /// Lifetime such as `'a` (quote included in the text).
+    Lifetime,
+}
+
+/// One token with its 1-based source position.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A `//` comment captured for suppression parsing (text includes `//`).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor<'_> {
+    fn adv(&mut self, k: usize) {
+        for _ in 0..k {
+            if self.i >= self.b.len() {
+                break;
+            }
+            if self.b[self.i] == b'\n' {
+                self.line += 1;
+                self.col = 1;
+            } else {
+                self.col += 1;
+            }
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self, off: usize) -> u8 {
+        *self.b.get(self.i + off).unwrap_or(&0)
+    }
+
+    fn starts(&self, s: &[u8]) -> bool {
+        self.b.len() >= self.i + s.len() && &self.b[self.i..self.i + s.len()] == s
+    }
+}
+
+fn find_sub(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() || from > hay.len() - needle.len() {
+        return None;
+    }
+    (from..=hay.len() - needle.len()).find(|&k| &hay[k..k + needle.len()] == needle)
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn lossy(bytes: &[u8]) -> String {
+    String::from_utf8_lossy(bytes).into_owned()
+}
+
+/// Tokenize `text`, returning the token stream and every line comment.
+pub fn tokenize(text: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut cur = Cursor { b, i: 0, line: 1, col: 1 };
+
+    while cur.i < n {
+        let c = b[cur.i];
+        if c == b' ' || c == b'\t' || c == b'\r' || c == b'\n' {
+            cur.adv(1);
+            continue;
+        }
+        // Line comment.
+        if cur.starts(b"//") {
+            let j = find_sub(b, b"\n", cur.i).unwrap_or(n);
+            comments.push(Comment { line: cur.line, text: lossy(&b[cur.i..j]) });
+            cur.adv(j - cur.i);
+            continue;
+        }
+        // Block comment (nested).
+        if cur.starts(b"/*") {
+            let mut depth = 1usize;
+            let mut j = cur.i + 2;
+            while j < n && depth > 0 {
+                if b[j..].starts_with(b"/*") {
+                    depth += 1;
+                    j += 2;
+                } else if b[j..].starts_with(b"*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            cur.adv(j - cur.i);
+            continue;
+        }
+        // Raw string (r"…", r#"…"#) and byte variants; the prefix must lead
+        // straight into `#` or `"` or we fall through to the ident branch.
+        if c == b'r' || c == b'b' {
+            let mut k = cur.i;
+            while k < n && (b[k] == b'r' || b[k] == b'b') {
+                k += 1;
+            }
+            let pref = &b[cur.i..k];
+            if pref.len() <= 2
+                && pref.contains(&b'r')
+                && k < n
+                && (b[k] == b'#' || b[k] == b'"')
+            {
+                let mut hashes = 0usize;
+                while k < n && b[k] == b'#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && b[k] == b'"' {
+                    let mut close = vec![b'"'];
+                    close.resize(hashes + 1, b'#');
+                    let j = find_sub(b, &close, k + 1).unwrap_or(n);
+                    toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: lossy(&b[k + 1..j.min(n)]),
+                        line: cur.line,
+                        col: cur.col,
+                    });
+                    cur.adv((j + close.len()).min(n) - cur.i);
+                    continue;
+                }
+            }
+        }
+        // Regular (or byte) string.
+        if c == b'"' {
+            let (line, col) = (cur.line, cur.col);
+            let mut j = cur.i + 1;
+            let mut body = Vec::new();
+            while j < n {
+                if b[j] == b'\\' {
+                    body.extend_from_slice(&b[j..n.min(j + 2)]);
+                    j += 2;
+                } else if b[j] == b'"' {
+                    break;
+                } else {
+                    body.push(b[j]);
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Str, text: lossy(&body), line, col });
+            cur.adv((j + 1).min(n) - cur.i);
+            continue;
+        }
+        // Char literal or lifetime.
+        if c == b'\'' {
+            let c1 = cur.peek(1);
+            let c2 = cur.peek(2);
+            if is_ident_cont(c1) && c1 != b'\\' && c2 != b'\'' {
+                // Lifetime: 'a, 'static (no closing quote right after).
+                let mut j = cur.i + 1;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: lossy(&b[cur.i..j]),
+                    line: cur.line,
+                    col: cur.col,
+                });
+                cur.adv(j - cur.i);
+                continue;
+            }
+            // Char literal: 'x', '\n', '\'' — skipped entirely.
+            let mut j = cur.i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'\'' {
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            cur.adv((j + 1).min(n) - cur.i);
+            continue;
+        }
+        // Identifier.
+        if is_ident_start(c) {
+            let mut j = cur.i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: lossy(&b[cur.i..j]),
+                line: cur.line,
+                col: cur.col,
+            });
+            cur.adv(j - cur.i);
+            continue;
+        }
+        // Number (suffixes and `1..` over-consumption are fine for linting).
+        if c.is_ascii_digit() {
+            let mut j = cur.i;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'.' || b[j] == b'_') {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: lossy(&b[cur.i..j]),
+                line: cur.line,
+                col: cur.col,
+            });
+            cur.adv(j - cur.i);
+            continue;
+        }
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: lossy(&b[cur.i..cur.i + 1]),
+            line: cur.line,
+            col: cur.col,
+        });
+        cur.adv(1);
+    }
+    (toks, comments)
+}
+
+/// Mark every line covered by a `#[cfg(test)]`-attributed item.
+///
+/// The attribute token pattern `# [ cfg ( test ) ]` is matched, then the
+/// following item is delimited by brace matching (or the first `;` at
+/// depth 0 for `mod tests;`-style declarations). Returns a 1-based mask
+/// sized `nlines + 2` so rules can index by line directly.
+pub fn test_region_mask(toks: &[Tok], nlines: usize) -> Vec<bool> {
+    let mut mask = vec![false; nlines + 2];
+    let pat = ["#", "[", "cfg", "(", "test", ")", "]"];
+    let m = toks.len();
+    for ix in 0..m.saturating_sub(pat.len() - 1) {
+        let hit = pat
+            .iter()
+            .enumerate()
+            .all(|(k, p)| toks.get(ix + k).map(|t| t.text == *p).unwrap_or(false));
+        if !hit {
+            continue;
+        }
+        let start_line = toks[ix].line as usize;
+        let mut depth = 0i64;
+        let mut end_line = nlines;
+        let mut j = ix + pat.len();
+        while j < m {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    ";" if depth == 0 => {
+                        end_line = t.line as usize;
+                        break;
+                    }
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end_line = t.line as usize;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        for ln in start_line..=end_line.min(nlines) {
+            mask[ln] = true;
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .0
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_opaque() {
+        let src = r##"
+            // partial_cmp in a comment
+            /* nested /* unwrap */ block */
+            let a = "partial_cmp inside a string";
+            let b = r#"raw unwrap body"#;
+            let c = 'x';
+            let d: &'static str = "s";
+            real_ident(a.total_cmp(&b));
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"partial_cmp".to_string()));
+        assert!(!ids.contains(&"unwrap".to_string()));
+        assert!(ids.contains(&"total_cmp".to_string()));
+        assert!(ids.contains(&"real_ident".to_string()));
+    }
+
+    #[test]
+    fn positions_are_line_col() {
+        let (toks, comments) = tokenize("let x = 1;\n  foo();\n// tail\n");
+        let foo = toks.iter().find(|t| t.text == "foo").unwrap();
+        assert_eq!((foo.line, foo.col), (2, 3));
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].line, 3);
+        assert_eq!(comments[0].text, "// tail");
+    }
+
+    #[test]
+    fn raw_string_prefixes_do_not_eat_identifiers() {
+        let ids = idents("let broke = rb_x; for r in 0..2 { br(r); }");
+        assert!(ids.contains(&"rb_x".to_string()));
+        assert!(ids.contains(&"br".to_string()));
+        assert!(ids.contains(&"r".to_string()));
+    }
+
+    #[test]
+    fn escaped_quote_in_string() {
+        let (toks, _) = tokenize(r#"let s = "a\"b"; tail();"#);
+        assert!(toks.iter().any(|t| t.text == "tail"));
+        let s = toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, "a\\\"b");
+    }
+
+    #[test]
+    fn cfg_test_regions_are_masked() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n  fn t() { y.unwrap(); }\n}\n";
+        let (toks, _) = tokenize(src);
+        let nlines = src.lines().count();
+        let mask = test_region_mask(&toks, nlines);
+        assert!(!mask[1]);
+        assert!(mask[2] && mask[3] && mask[4] && mask[5]);
+    }
+}

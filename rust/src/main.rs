@@ -34,6 +34,8 @@
 //!               --long for the soak sweep)
 //!   bench-mc    Monte-Carlo throughput harness → BENCH_mc.json
 //!   bench-des   event-engine throughput harness → BENCH_des.json
+//!   lint        determinism-invariant static analysis over rust/src
+//!               (rules D1–D6) — the gate ci.sh runs after clippy
 //!   obs         summarize + schema-validate a structured event log
 //!               (the `--events <path>` JSONL that evaluate/study/
 //!               control/chaos/integrity write): per-span time
@@ -92,6 +94,8 @@ USAGE:
                       [--seed S] [--no-live] [--corpus f] [--no-corpus]
   batchrep bench-mc   [--trials N] [--threads K] [--out BENCH_mc.json] [--fast]
   batchrep bench-des  [--trials N] [--threads K] [--out BENCH_des.json] [--fast]
+  batchrep lint       [--root rust/] [--baseline lint/baseline.json]
+                      [--update-baseline] [--json LINT.json]
 
 Config keys (file or --key value): n_workers, n_batches, policy, service,
 batch_model, overlapping, cancellation, speculative, k_of_b, seed, trials,
@@ -184,6 +188,7 @@ fn run() -> anyhow::Result<()> {
         Some("bench-mc") => cmd_bench_mc(&args),
         Some("bench-des") => cmd_bench_des(&args),
         Some("obs") => cmd_obs(&args),
+        Some("lint") => cmd_lint(&args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -213,8 +218,8 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
     t.print();
     println!(
         "mean-optimal B* = {}   variance-optimal B = {}",
-        analysis::optimum_b(n, &spec),
-        analysis::optimum_b_variance(n, &spec)
+        analysis::optimum_b(n, &spec)?,
+        analysis::optimum_b_variance(n, &spec)?
     );
     Ok(())
 }
@@ -803,6 +808,70 @@ fn cmd_obs(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The determinism gate: scan `rust/src/**/*.rs` with the in-crate
+/// static analyzer (rules D1–D6, see README "Static analysis") and fail
+/// on any finding not absorbed by the baseline or an inline
+/// `// lint:allow(RULE): reason` suppression. `--update-baseline`
+/// rewrites the baseline to grandfather the current findings instead.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    use batchrep::lint;
+    let defaults = lint::LintConfig::default();
+    let root = args
+        .get::<String>("root")?
+        .map(std::path::PathBuf::from)
+        .unwrap_or(defaults.root);
+    let baseline = args
+        .get::<String>("baseline")?
+        .map(std::path::PathBuf::from)
+        .or(defaults.baseline);
+    let update = args.flag("update-baseline");
+    let json_out = args.get::<String>("json")?;
+    args.finish()?;
+
+    if update {
+        let path = baseline
+            .ok_or_else(|| anyhow::anyhow!("--update-baseline requires a baseline path"))?;
+        let cfg = lint::LintConfig { root, baseline: None };
+        let report = lint::run(&cfg)?;
+        let bl = lint::baseline::Baseline::from_findings(&report.findings);
+        std::fs::write(&path, format!("{}\n", bl.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        println!(
+            "baseline updated: {} absorbed finding(s) across {} file(s) -> {}",
+            report.findings.len(),
+            report.files_scanned,
+            path.display()
+        );
+        return Ok(());
+    }
+
+    let cfg = lint::LintConfig { root, baseline };
+    let report = lint::run(&cfg)?;
+    if let Some(out) = json_out {
+        let j = lint::report_json(&report);
+        lint::validate_json(&j)?;
+        std::fs::write(&out, format!("{j}\n"))
+            .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+        println!("wrote {out}");
+    }
+    for f in &report.findings {
+        println!("{f}");
+    }
+    anyhow::ensure!(
+        report.findings.is_empty(),
+        "lint: {} finding(s) in {} file(s) ({} baselined) — fix, suppress with a reasoned \
+         `// lint:allow(RULE): ...`, or run `batchrep lint --update-baseline`",
+        report.findings.len(),
+        report.files_scanned,
+        report.baselined
+    );
+    println!(
+        "lint OK: {} files scanned, 0 findings ({} baselined)",
+        report.files_scanned, report.baselined
+    );
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     // Back-compat: --speculative also works as the config key.
     let speculative = args.get::<f64>("speculative")?;
@@ -934,7 +1003,7 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     args.finish()?;
     let t = generate_markov_trace(&params, n, seed);
     let mean = t.iter().sum::<f64>() / t.len() as f64;
-    let max = t.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let max = batchrep::util::stats::fold_max_total(t.iter().cloned());
     save_trace(std::path::Path::new(&out), &t)?;
     println!(
         "wrote {n} per-unit service times to {out} (mean {mean:.4}, max {max:.4}); \

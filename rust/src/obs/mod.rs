@@ -170,7 +170,43 @@ define_counters! {
     ControlDriftReplans => control_drift_replans: "control.drift_replans",
     FaultChaosRuns => fault_chaos_runs: "fault.chaos_runs",
     FaultIntegrityRuns => fault_integrity_runs: "fault.integrity_runs",
+    LintRuns => lint_runs: "lint.runs",
 }
+
+/// Every `(subsystem, kind)` event pair the crate emits with literal
+/// arguments, i.e. the summarizer's vocabulary. The `lint` D6 rule checks
+/// literal `emit("sub", "kind", …)` call sites against this table, so an
+/// event added without registering it here fails the gate — which is the
+/// point: the summarizer and any downstream consumer of `events.jsonl`
+/// should never meet an unknown kind. Two families are intentionally
+/// absent: the generic `"span"` kind (any subsystem, produced by
+/// [`Span`]) and the `control` action kinds, which are derived from
+/// `Action::name()` (`hold` / `replan` / `drift_replan`) and listed here
+/// for documentation even though the call site is non-literal.
+pub const KNOWN_KINDS: &[(&str, &str)] = &[
+    ("obs", "installed"),
+    ("obs", "counters"),
+    ("analysis", "cache_miss"),
+    ("mc", "shard"),
+    ("des", "shard"),
+    ("study", "plan"),
+    ("study", "cell"),
+    ("coordinator", "round"),
+    ("coordinator", "crash"),
+    ("coordinator", "respawn"),
+    ("coordinator", "relaunch"),
+    ("coordinator", "degrade"),
+    ("coordinator", "timeout"),
+    ("coordinator", "quarantine"),
+    ("fault", "task_drop"),
+    ("fault", "slowdown"),
+    ("fault", "chaos_run"),
+    ("fault", "integrity_run"),
+    ("control", "hold"),
+    ("control", "replan"),
+    ("control", "drift_replan"),
+    ("lint", "run"),
+];
 
 // ---------------------------------------------------------------------
 // The event sink
@@ -216,7 +252,9 @@ pub fn install_writer(out: Box<dyn Write + Send>) -> anyhow::Result<()> {
             g.is_none(),
             "an event sink is already installed — uninstall it first"
         );
-        *g = Some(Active { start: Instant::now(), out });
+        #[allow(clippy::disallowed_methods)] // obs owns the event-log clock
+        let start = Instant::now();
+        *g = Some(Active { start, out });
     }
     ENABLED.store(true, Ordering::Release);
     emit("obs", "installed", &[("schema", SCHEMA_VERSION.into())]);
@@ -224,7 +262,7 @@ pub fn install_writer(out: Box<dyn Write + Send>) -> anyhow::Result<()> {
 }
 
 /// Shared in-memory sink buffer for tests ([`install_memory`]).
-#[derive(Clone, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct MemWriter(Arc<Mutex<Vec<u8>>>);
 
 impl MemWriter {
@@ -304,6 +342,7 @@ pub fn emit(sub: &str, kind: &str, fields: &[(&str, Json)]) {
 // ---------------------------------------------------------------------
 
 /// Drop guard of one wall-clock span (see [`span`]).
+#[derive(Debug)]
 pub struct Span {
     name: &'static str,
     start: Option<Instant>,
@@ -314,6 +353,7 @@ pub struct Span {
 /// the prefix before the first `.` (`span("des.shard")` → `sub:
 /// "des"`). Without a sink the guard holds no clock read at all.
 #[must_use = "a span measures until the returned guard is dropped"]
+#[allow(clippy::disallowed_methods)] // obs owns the span clock
 pub fn span(name: &'static str) -> Span {
     Span { name, start: enabled().then(Instant::now) }
 }

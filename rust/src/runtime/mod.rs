@@ -23,7 +23,7 @@
 
 use crate::util::json::Json;
 #[cfg(feature = "pjrt")]
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// One artifact entry from `manifest.json`.
@@ -144,7 +144,19 @@ pub struct GradOut {
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// The PJRT client/executable handles are opaque FFI types without
+// `Debug`; show the manifest and what has been compiled so far.
+#[cfg(feature = "pjrt")]
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("manifest", &self.manifest)
+            .field("cached", &self.cache.keys().collect::<Vec<_>>())
+            .finish_non_exhaustive()
+    }
 }
 
 #[cfg(feature = "pjrt")]
@@ -153,7 +165,7 @@ impl Engine {
     pub fn new(artifact_dir: &Path) -> anyhow::Result<Engine> {
         let manifest = Manifest::load(artifact_dir)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { client, manifest, cache: HashMap::new() })
+        Ok(Engine { client, manifest, cache: BTreeMap::new() })
     }
 
     /// The manifest in use.
@@ -189,7 +201,9 @@ impl Engine {
         if !self.cache.contains_key(&key) {
             self.prepare(kernel, rows, dim)?;
         }
-        Ok(self.cache.get(&key).unwrap())
+        self.cache
+            .get(&key)
+            .ok_or_else(|| anyhow::anyhow!("prepare() did not cache executable '{key}'"))
     }
 
     /// Execute the gradient job: `x` is `rows×dim` row-major, `y` has
@@ -244,6 +258,7 @@ impl Engine {
 /// Construction always fails with instructions; the mock compute
 /// backend and every analytic/simulation path remain fully functional.
 #[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
 pub struct Engine {
     manifest: Manifest,
 }

@@ -211,7 +211,8 @@ pub fn execute(
                             ))
                         }
                     };
-                    let mut acc = accs[it.acc].lock().expect("no shard panicked with the lock");
+                    let mut acc =
+                        accs[it.acc].lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                     acc.slots[it.shard] = Some(out);
                     acc.remaining -= 1;
                     if acc.remaining == 0 {
@@ -268,10 +269,13 @@ pub fn execute(
         results[ci] = Some(res);
     }
 
-    let cells: Vec<CellResult> = results
-        .into_iter()
-        .map(|r| r.expect("every planned cell produced a result"))
-        .collect();
+    let mut cells: Vec<CellResult> = Vec::with_capacity(results.len());
+    for (ci, r) in results.into_iter().enumerate() {
+        match r {
+            Some(cell) => cells.push(cell),
+            None => anyhow::bail!("planned cell {ci} produced no result"),
+        }
+    }
     let refused_cells =
         cells.iter().filter(|c| matches!(c.outcome, CellOutcome::Refused(_))).count() as u64;
     Ok(StudyReport {

@@ -24,6 +24,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 
 /// Case generator handed to properties. Records integer draws so that the
 /// shrinker can replay them with smaller values.
+#[derive(Debug)]
 pub struct Gen {
     rng: Rng,
     /// Recorded (value, lo) pairs for every bounded integer draw.

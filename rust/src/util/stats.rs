@@ -1,6 +1,23 @@
 //! Streaming and batch statistics used by the simulator, the live
 //! coordinator metrics, and the benchmark harness.
 
+/// NaN-total maximum fold: `max` under [`f64::total_cmp`]. Identical to a
+/// `fold(NEG_INFINITY, f64::max)` on finite inputs, but under the total
+/// order a positive NaN sorts above +∞ and therefore *surfaces* as the
+/// result instead of being silently swallowed the way `f64::max` does —
+/// which is why the D1 lint rule bans the partial-order folds.
+pub fn fold_max_total<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    xs.into_iter()
+        .fold(f64::NEG_INFINITY, |a, b| if b.total_cmp(&a).is_gt() { b } else { a })
+}
+
+/// NaN-total minimum fold: the [`fold_max_total`] dual (a negative NaN
+/// sorts below −∞ and surfaces).
+pub fn fold_min_total<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    xs.into_iter()
+        .fold(f64::INFINITY, |a, b| if b.total_cmp(&a).is_lt() { b } else { a })
+}
+
 /// Compensated (Kahan–Neumaier) running sum: adds f64 terms with an
 /// error-compensation carry so long accumulations (e.g. busy
 /// worker-seconds over thousands of events per trial) do not drift the
@@ -290,6 +307,20 @@ impl LogHistogram {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn total_folds_match_partial_on_finite_and_surface_nan() {
+        let xs = [3.0, -1.5, 7.25, 0.0];
+        assert_eq!(fold_max_total(xs.iter().cloned()), 7.25);
+        assert_eq!(fold_min_total(xs.iter().cloned()), -1.5);
+        // Empty inputs keep the fold identities.
+        assert_eq!(fold_max_total(std::iter::empty()), f64::NEG_INFINITY);
+        assert_eq!(fold_min_total(std::iter::empty()), f64::INFINITY);
+        // A NaN poisons the result instead of being swallowed — the
+        // whole point of banning the partial-order folds (rule D1).
+        assert!(fold_max_total([1.0, f64::NAN, 2.0].iter().cloned()).is_nan());
+        assert!(fold_min_total([1.0, -f64::NAN, 2.0].iter().cloned()).is_nan());
+    }
 
     #[test]
     fn kahan_recovers_cancelled_low_order_bits() {

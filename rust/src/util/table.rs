@@ -34,13 +34,14 @@ impl Table {
         self.rows.push(cells);
     }
 
-    /// Render as CSV.
+    /// Render as CSV. (`write!` into a `String` is infallible, hence the
+    /// discarded results.)
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
-        writeln!(out, "{}", self.headers.join(",")).unwrap();
+        let _ = writeln!(out, "{}", self.headers.join(","));
         for r in &self.rows {
             let escaped: Vec<String> = r.iter().map(|c| csv_escape(c)).collect();
-            writeln!(out, "{}", escaped.join(",")).unwrap();
+            let _ = writeln!(out, "{}", escaped.join(","));
         }
         out
     }
@@ -48,12 +49,12 @@ impl Table {
     /// Render as a GitHub-flavored Markdown table.
     pub fn to_markdown(&self) -> String {
         let mut out = String::new();
-        writeln!(out, "### {}\n", self.title).unwrap();
-        writeln!(out, "| {} |", self.headers.join(" | ")).unwrap();
-        writeln!(out, "|{}|", self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"))
-            .unwrap();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ =
+            writeln!(out, "|{}|", self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
         for r in &self.rows {
-            writeln!(out, "| {} |", r.join(" | ")).unwrap();
+            let _ = writeln!(out, "| {} |", r.join(" | "));
         }
         out
     }

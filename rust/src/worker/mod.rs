@@ -51,6 +51,7 @@ pub enum JobOut {
 }
 
 /// A task dispatched to a worker.
+#[derive(Debug)]
 pub struct TaskMsg {
     /// Job (round) id.
     pub job_id: u64,
@@ -159,10 +160,11 @@ impl Compute for MockCompute {
 /// PJRT backend: executes the AOT artifacts. The shard row count is
 /// padded with zero rows up to the nearest available artifact variant
 /// (exact for both jobs: zero rows contribute 0 to every output sum).
+#[derive(Debug)]
 pub struct PjrtCompute {
     engine: crate::runtime::Engine,
     /// Padded-variant cache: (kernel, shard rows) → artifact rows.
-    pad_to: std::collections::HashMap<(String, usize), usize>,
+    pad_to: std::collections::BTreeMap<(String, usize), usize>,
 }
 
 impl PjrtCompute {
@@ -223,6 +225,7 @@ impl Compute for PjrtCompute {
 }
 
 /// Handle to a spawned worker thread.
+#[derive(Debug)]
 pub struct WorkerHandle {
     /// Task channel into the worker.
     pub tx: Sender<TaskMsg>,
@@ -304,6 +307,7 @@ where
     Ok(WorkerHandle { tx, join })
 }
 
+#[allow(clippy::disallowed_methods)] // worker straggle injection is inherently wall-clock
 fn run_task(
     worker_id: usize,
     shard: &Shard,

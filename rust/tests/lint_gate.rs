@@ -1,0 +1,69 @@
+//! The lint gate as an integration test: the shipped tree must produce
+//! zero non-baselined findings, and the analyzer's own artifact and
+//! baseline plumbing must round-trip through the public surface exactly
+//! the way `ci.sh` drives it.
+
+use batchrep::lint::{self, baseline::Baseline, LintConfig};
+
+/// The acceptance bar from the issue: `batchrep lint` exits zero on the
+/// shipped tree. Runs the identical configuration the CLI defaults to
+/// (scan `src/`, absorb `lint/baseline.json`) and renders any findings
+/// so a regression names its exact file:line:col and fix hint.
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let report = lint::run(&LintConfig::default()).expect("lint scan runs");
+    assert!(report.files_scanned > 30, "scan saw {} files — wrong root?", report.files_scanned);
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        report.findings.is_empty(),
+        "lint found {} violation(s) in the shipped tree:\n{}",
+        report.findings.len(),
+        rendered.join("\n")
+    );
+}
+
+/// The checked-in baseline stays empty: new violations must be fixed or
+/// carry a reasoned inline suppression, not be grandfathered silently.
+#[test]
+fn checked_in_baseline_is_empty() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("lint/baseline.json");
+    let bl = Baseline::load(&path).expect("baseline parses");
+    assert!(bl.entries.is_empty(), "baseline has {} grandfathered entr(ies)", bl.entries.len());
+}
+
+/// The LINT.json artifact written by `--json` validates against its own
+/// schema — the same check ci.sh applies to the artifact it keeps.
+#[test]
+fn artifact_round_trips_schema_validation() {
+    let report = lint::run(&LintConfig::default()).expect("lint scan runs");
+    let j = lint::report_json(&report);
+    lint::validate_json(&j).expect("artifact validates");
+    let reparsed = batchrep::util::json::Json::parse(&j.to_string()).expect("reparses");
+    lint::validate_json(&reparsed).expect("serialized artifact validates");
+}
+
+/// Baseline round-trip over real findings: a seeded violation is
+/// absorbed by a baseline built from it, and the same baseline does NOT
+/// absorb a second instance of the same violation class.
+#[test]
+fn baseline_absorbs_exactly_the_recorded_count() {
+    let fixture =
+        "fn rank(xs: &[f64]) -> f64 {\n    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)\n}\n";
+    let files = vec![lint::SourceFile::parse("fix.rs", fixture)];
+    let found = lint::apply_suppressions(&files, lint::analyze(&files));
+    assert!(!found.is_empty(), "fixture should violate D1");
+    let bl = Baseline::from_findings(&found);
+    let (kept, absorbed) = bl.apply(found.clone());
+    assert!(kept.is_empty());
+    assert_eq!(absorbed, found.len());
+
+    // Two instances against a one-instance baseline: one leaks through.
+    let mut doubled = found.clone();
+    doubled.extend(found.iter().cloned().map(|mut f| {
+        f.line += 100;
+        f
+    }));
+    let (kept, absorbed) = bl.apply(doubled);
+    assert_eq!(absorbed, found.len());
+    assert_eq!(kept.len(), found.len(), "the extra instance must not be absorbed");
+}
